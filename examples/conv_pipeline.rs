@@ -1,0 +1,92 @@
+//! The §V-B convolution pipeline, across all three layers:
+//!
+//! 1. run the Figure 9 `sconv_kernel_8x27x16` as a simulated MMA
+//!    instruction stream and check it against the direct convolution;
+//! 2. time it on the POWER10 model;
+//! 3. run the *same computation* through the AOT-compiled Pallas conv
+//!    kernel (`artifacts/conv2d_k3.hlo.txt`) via PJRT and cross-check the
+//!    two implementations numerically.
+//!
+//! Run: `make artifacts && cargo run --release --example conv_pipeline`
+
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::kernels::sconv::{run_sconv_8x27x16, sconv_8x27x16_program, sconv_reference};
+use power_mma::runtime::Runtime;
+use power_mma::testkit::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(2024);
+    let width = 20usize;
+    let filters = rng.f32_vec(8 * 27);
+    let r = rng.f32_vec(3 * width);
+    let g = rng.f32_vec(3 * width);
+    let b = rng.f32_vec(3 * width);
+
+    // ---- 1. instruction-level SCONV -------------------------------------
+    let got = run_sconv_8x27x16(&filters, &r, &g, &b, width)?;
+    let expect = sconv_reference(&filters, &r, &g, &b, width, 16);
+    let mut maxerr = 0f32;
+    for f in 0..8 {
+        for x in 0..16 {
+            maxerr = maxerr.max((got[f][x] - expect[f][x]).abs());
+        }
+    }
+    println!("SCONV 8x27x16 kernel vs direct convolution: max |err| = {maxerr:.2e}");
+    assert!(maxerr < 1e-4);
+
+    // ---- 2. POWER10 timing ----------------------------------------------
+    let prog = sconv_8x27x16_program((width * 4) as i32);
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    // channel bases far apart so the cache model sees three streams
+    sim.gpr[3] = 0;
+    sim.gpr[6] = 4096;
+    sim.gpr[7] = 8192;
+    sim.gpr[8] = 12288;
+    sim.gpr[10] = 16384;
+    let rep = sim.run(&prog, 1 << 20);
+    println!(
+        "POWER10-MMA timing: {} insts in {} cycles -> {:.2} fp32 flops/cycle \
+         (fp32 MMA peak = 64)",
+        rep.instructions,
+        rep.cycles,
+        rep.flops_per_cycle()
+    );
+
+    // ---- 3. the Pallas conv artifact through PJRT ------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("conv2d_k3.meta").exists() {
+        println!("(skipping PJRT phase: run `make artifacts` first)");
+        return Ok(());
+    }
+    let mut rt = Runtime::cpu(&dir)?;
+    rt.load("conv2d_k3")?;
+    let meta = rt.meta("conv2d_k3").unwrap().clone();
+    let (rows, w) = (meta.input_shapes[1][1], meta.input_shapes[1][2]);
+    // build an image whose first rows/cols embed the same RGB data
+    let mut img = vec![0f32; 3 * rows * w];
+    for (c, chan) in [&r, &g, &b].iter().enumerate() {
+        for row in 0..3 {
+            for x in 0..width {
+                img[c * rows * w + row * w + x] = chan[row * width + x];
+            }
+        }
+    }
+    // H layout of the Pallas kernel: (8, 27) with taps 9c+3ky+kx — same
+    // as the rust kernel's filter layout
+    let out = rt.execute("conv2d_k3", &[&filters, &img])?;
+    let w_out = w - 2;
+    let mut maxerr2 = 0f32;
+    for f in 0..8 {
+        for x in 0..16 {
+            let pjrt = out[f * (rows - 2) * w_out + x];
+            maxerr2 = maxerr2.max((pjrt - expect[f][x]).abs());
+        }
+    }
+    println!(
+        "PJRT Pallas conv vs simulated MMA kernel: max |err| = {maxerr2:.2e} \
+         (two independent implementations of §V-B)"
+    );
+    assert!(maxerr2 < 1e-3);
+    println!("conv pipeline OK: ISA simulator == direct conv == AOT Pallas kernel");
+    Ok(())
+}

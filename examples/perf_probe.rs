@@ -1,0 +1,45 @@
+// §Perf probe: wall-clock of the functional interpreter per ger kind and
+// of the timing simulator. (temporary tool, not part of the release API)
+use power_mma::benchkit::bench;
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::isa::inst::{AccOp, Ger, GerKind, Inst};
+use power_mma::isa::Machine;
+use power_mma::kernels::dgemm::dgemm_8xnx8_program;
+
+fn ger_loop(kind: GerKind, iters: i32) -> Vec<Inst> {
+    let mut prog = vec![Inst::Addi { rt: 9, ra: 0, si: iters }, Inst::Mtctr { rs: 9 }];
+    for a in 0..8u8 {
+        let xa = if kind == GerKind::F64Ger { 32 + 2 * a } else { 32 + a };
+        prog.push(Inst::Ger(Ger::new(kind, AccOp::New, a, xa, 56 + (a % 8))));
+    }
+    prog.push(Inst::Bdnz { bd: -32 });
+    prog.push(Inst::Blr);
+    prog
+}
+
+fn main() {
+    for kind in GerKind::ALL {
+        let prog = ger_loop(kind, 4000);
+        let mut m = Machine::new(64);
+        let s = bench(&format!("{:?}", kind), 1, 9, || {
+            m.run(&prog, 1 << 22).unwrap();
+        });
+        let insts = 4000.0 * 9.0 + 3.0;
+        println!("{:<12} {:>8.1} Minst/s ({:>7.1} M-MACs/s)", kind.mnemonic(),
+            insts / s.median.as_secs_f64() / 1e6,
+            insts * (kind.flops()/2) as f64 / s.median.as_secs_f64() / 1e6);
+    }
+    // dgemm kernel functional
+    let prog = dgemm_8xnx8_program(128);
+    let mut m = Machine::new(1 << 16);
+    m.gpr[3] = 32768; m.gpr[4] = 0; m.gpr[5] = 8192;
+    let s = bench("dgemm_functional", 1, 20, || {
+        m.gpr[3] = 32768; m.gpr[4] = 0; m.gpr[5] = 8192;
+        m.run(&prog, 1 << 22).unwrap();
+    });
+    println!("dgemm kernel functional: {:>8.1} Minst/s", 2231.0 / s.median.as_secs_f64() / 1e6);
+    // CoreSim
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    let s = bench("coresim", 1, 20, || { sim.run(&prog, 1 << 22); });
+    println!("coresim timing:          {:>8.1} Minst/s", 2231.0 / s.median.as_secs_f64() / 1e6);
+}

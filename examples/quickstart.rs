@@ -1,0 +1,93 @@
+//! Quickstart: a five-minute tour of the `power-mma` stack.
+//!
+//! 1. write an MMA kernel with the builtins API (paper §IV);
+//! 2. run it bit-exactly on the functional ISA simulator (§II);
+//! 3. inspect its binary encoding (the Figure 7 object-code view);
+//! 4. time it on the POWER10 cycle model (§III);
+//! 5. compare with the POWER9 vector baseline (§VI).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use power_mma::builtins::{Gpr, KernelBuilder};
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::isa::asm::disassemble_program;
+use power_mma::isa::encode::encode_program;
+use power_mma::isa::inst::{AccOp, GerKind};
+use power_mma::isa::Machine;
+use power_mma::kernels::vsx::vsx_dgemm_8x4_program;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. a tiny kernel via builtins: C(4x4) = sum_k x_k y_k^T --------
+    let mut b = KernelBuilder::new();
+    let acc = b.alloc_acc()?;
+    let x = b.alloc_vec()?;
+    let y = b.alloc_vec()?;
+    let (px, py, pc, n) = (Gpr(4), Gpr(5), Gpr(3), Gpr(9));
+    b.li(n, 8);
+    b.mtctr(n);
+    b.xxsetaccz(acc); // __builtin_mma_xxsetaccz: prime the accumulator
+    let top = b.label();
+    b.lxv(x, px, 0); // stream one fp32x4 column of X
+    b.lxv(y, py, 0); // ... and one row of Y^T
+    b.ger(GerKind::F32Ger, AccOp::PP, acc, x, y)?; // __builtin_mma_xvf32gerpp
+    b.addi(px, px, 16);
+    b.addi(py, py, 16);
+    b.bdnz(top);
+    b.store_acc(acc, pc, 0)?; // __builtin_mma_disassemble_acc + stores
+    let prog = b.finish();
+
+    println!("== generated kernel ({} instructions) ==", prog.len());
+    print!("{}", disassemble_program(&prog));
+
+    // ---- 2. run it on the functional machine ---------------------------
+    let mut m = Machine::new(4096);
+    let xs: Vec<f32> = (0..32).map(|i| (i % 5) as f32).collect();
+    let ys: Vec<f32> = (0..32).map(|i| (i % 3) as f32 - 1.0).collect();
+    m.write_f32s(0, &xs);
+    m.write_f32s(512, &ys);
+    m.gpr[4] = 0;
+    m.gpr[5] = 512;
+    m.gpr[3] = 1024;
+    m.run(&prog, 10_000)?;
+    let c = m.read_f32s(1024, 16);
+    println!("\n== functional result (4x4 accumulator) ==");
+    for row in c.chunks(4) {
+        println!("  {row:?}");
+    }
+    // check one element against scalar math
+    let c00: f32 = (0..8).map(|k| xs[4 * k] * ys[4 * k]).sum();
+    assert_eq!(c[0], c00);
+
+    // ---- 3. binary encoding --------------------------------------------
+    let bytes = encode_program(&prog)?;
+    println!("\n== first 4 encoded words (Power ISA v3.1) ==");
+    for w in bytes.chunks_exact(4).take(4) {
+        println!("  {:08x}", u32::from_le_bytes(w.try_into().unwrap()));
+    }
+
+    // ---- 4. time it on the POWER10 model --------------------------------
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    sim.gpr[4] = 0;
+    sim.gpr[5] = 512;
+    sim.gpr[3] = 1024;
+    let r = sim.run(&prog, 10_000);
+    println!(
+        "\n== POWER10 timing == {} cycles for {} instructions ({:.2} flops/cycle)",
+        r.cycles,
+        r.instructions,
+        r.flops_per_cycle()
+    );
+
+    // ---- 5. the POWER9 vector baseline ----------------------------------
+    let mut p9 = CoreSim::new(MachineConfig::power9());
+    let rv = p9.run(&vsx_dgemm_8x4_program(128), 1 << 22);
+    let mut p10 = CoreSim::new(MachineConfig::power10());
+    let rm = p10.run(&power_mma::kernels::dgemm::dgemm_8xnx8_program(128), 1 << 22);
+    println!(
+        "\n== paper §VI headline == POWER9 vector {:.2} vs POWER10 MMA {:.2} flops/cycle ({:.1}x)",
+        rv.flops_per_cycle(),
+        rm.flops_per_cycle(),
+        rm.flops_per_cycle() / rv.flops_per_cycle()
+    );
+    Ok(())
+}

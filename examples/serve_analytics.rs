@@ -1,0 +1,100 @@
+//! **Serving end-to-end driver** — the §I "data-in-flight business
+//! analytics" scenario: many small independent model evaluations, one per
+//! transaction, with model agility (three model families served at once).
+//!
+//! Loads the AOT artifacts (Pallas kernels → JAX models → HLO text),
+//! starts the coordinator (router + dynamic batcher over PJRT), fires a
+//! mixed workload from concurrent client threads, and reports
+//! throughput + latency percentiles + batch occupancy.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_analytics`
+
+use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+use power_mma::runtime::{det_input, Runtime};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("no artifacts: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let cfg = CoordinatorConfig::default();
+    let weights = MlpWeights::deterministic(&cfg);
+    let dir2 = dir.clone();
+    let coord = Arc::new(Coordinator::start(cfg.clone(), weights, move || {
+        let mut rt = Runtime::cpu(&dir2)?;
+        let names = rt.load_all()?;
+        println!("engine: loaded {names:?} on platform {}", rt.platform());
+        Ok(rt)
+    }));
+
+    // mixed workload: 90% transactions (classify), 8% gemm tiles, 2% conv
+    let n_clients = 8;
+    let per_client = 500;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let coord = coord.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0u32;
+                let mut pending = Vec::new();
+                for i in 0..per_client {
+                    let payload = match (c + i) % 50 {
+                        0 => Payload::Conv {
+                            filters: det_input(8 * 27, i as u64),
+                            image: det_input(3 * 18 * 130, c as u64),
+                        },
+                        1..=4 => Payload::Gemm {
+                            model: if i % 2 == 0 { "gemm_f32" } else { "gemm_bf16" }.into(),
+                            x: det_input(128 * 128, i as u64),
+                            y: det_input(128 * 128, c as u64 + 1),
+                        },
+                        _ => Payload::Classify { features: det_input(cfg.features, (c * i) as u64) },
+                    };
+                    pending.push(coord.submit(payload).1);
+                    // keep a bounded number of in-flight requests per client
+                    if pending.len() >= 64 {
+                        for rx in pending.drain(..) {
+                            if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                                ok += 1;
+                            }
+                        }
+                    }
+                }
+                for rx in pending {
+                    if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let ok: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed();
+    let total = (n_clients * per_client) as u32;
+
+    let coord = Arc::try_unwrap(coord).ok().expect("all clients done");
+    let stats = coord.shutdown();
+    println!("\n== serving results ==");
+    println!("requests:   {ok}/{total} ok in {dt:.2?} -> {:.0} req/s", f64::from(total) / dt.as_secs_f64());
+    println!(
+        "latency:    p50 {} us | p95 {} us | p99 {} us | max {} us",
+        stats.latency.quantile_us(0.50),
+        stats.latency.quantile_us(0.95),
+        stats.latency.quantile_us(0.99),
+        stats.latency.max_us()
+    );
+    println!(
+        "batching:   {} batches, mean occupancy {:.1}/{}",
+        stats.batches.get(),
+        stats.mean_batch_occupancy(),
+        cfg.batch_size
+    );
+    println!("rejected:   {} (backpressure)", stats.rejected.get());
+    assert_eq!(ok, total, "all requests must succeed");
+    Ok(())
+}

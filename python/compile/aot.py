@@ -1,0 +1,108 @@
+"""AOT compile path: lower every Layer-2 model to **HLO text** artifacts
+the rust runtime loads via PJRT.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns
+ids. See /opt/xla-example/README.md.
+
+For every artifact this also writes
+  * ``<name>.meta``         — `name;in0shape,in1shape,…;outshape` (shapes as
+    `AxB` strings, f32 unless suffixed) — consumed by the rust runtime;
+  * ``<name>.expected.bin`` — f32 little-endian output bytes for the
+    deterministic test inputs of :func:`det_input`, giving the rust side an
+    end-to-end numeric ground truth it can check without python.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def det_input(shape, salt: int) -> np.ndarray:
+    """Deterministic pseudo-input, reproduced bit-identically by
+    `runtime::det_input` on the rust side: value(i) = ((i*31 + 7*salt) %
+    61) / 61 - 0.5, computed in f64, cast to f32."""
+    n = int(np.prod(shape))
+    idx = np.arange(n, dtype=np.float64)
+    vals = ((idx * 31.0 + 7.0 * salt) % 61.0) / 61.0 - 0.5
+    return vals.astype(np.float32).reshape(shape)
+
+
+def shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def build_artifact(name, fn, input_shapes, out_dir):
+    """Lower `fn` for the given input shapes, run it once on the
+    deterministic inputs, and write hlo/meta/expected files."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in input_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    inputs = [det_input(s, salt + 1) for salt, s in enumerate(input_shapes)]
+    (out,) = fn(*[jnp.asarray(v) for v in inputs])
+    out = np.asarray(out, dtype=np.float32)
+    with open(os.path.join(out_dir, f"{name}.expected.bin"), "wb") as f:
+        f.write(out.tobytes())
+    meta = f"{name};{','.join(shape_str(s) for s in input_shapes)};{shape_str(out.shape)}\n"
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        f.write(meta)
+    print(f"  {name}: {len(hlo)} chars, out {out.shape}")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    g = model.GEMM_DIM
+    manifest = []
+    print("lowering models to HLO text:")
+    manifest.append(build_artifact("gemm_f32", model.gemm_f32, [(g, g), (g, g)], args.out_dir))
+    manifest.append(build_artifact("gemm_bf16", model.gemm_bf16, [(g, g), (g, g)], args.out_dir))
+    manifest.append(
+        build_artifact("conv2d_k3", model.conv2d_k3, [(8, 27), model.CONV_IMG], args.out_dir)
+    )
+    for b in model.MLP_BATCHES:
+        manifest.append(
+            build_artifact(
+                f"mlp_b{b}",
+                model.mlp_classifier,
+                [
+                    (b, model.MLP_FEATURES),
+                    (model.MLP_FEATURES, model.MLP_HIDDEN),
+                    (model.MLP_HIDDEN,),
+                    (model.MLP_HIDDEN, model.MLP_CLASSES),
+                    (model.MLP_CLASSES,),
+                ],
+                args.out_dir,
+            )
+        )
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.writelines(manifest)
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

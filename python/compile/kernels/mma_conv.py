@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: the SCONV schedule (paper §V-B) on TPU.
+
+The paper's insight: with fine-grain outer-product instructions, a 3×3
+multi-channel convolution runs **directly on the image** — the `H̄` filter
+matrix (8×27) is the left operand and each image row is used three times at
+shifts 0/+1/+2 (equation 8) — no im2col materialization of the 9×(m−2)
+matrix.
+
+TPU mapping: one grid step owns one output row. The three input rows it
+needs arrive as three row-shifted views of the image (the `R`, `R+n`,
+`R+2n` pointers of Figure 9), each streamed HBM→VMEM by its `BlockSpec`;
+the kernel performs the 27 shifted rank-1 outer-product accumulations
+against a resident accumulator — exactly the Figure 9 step sequence.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_FILTERS = 8
+TAPS = 27  # 3 channels x 3x3 kernel
+
+
+def _conv_kernel(h_ref, r0_ref, r1_ref, r2_ref, o_ref, *, w_out):
+    """One output row: 27 shifted rank-1 updates (Figure 9's 27
+    `mma_xvf32_8x16` steps, generalized to a full row)."""
+    h = h_ref[...]  # (8, 27)
+    rows = (r0_ref[...], r1_ref[...], r2_ref[...])  # each (3, 1, w)
+    acc = jnp.zeros((NUM_FILTERS, w_out), jnp.float32)
+    for c in range(3):
+        for ky in range(3):
+            for kx in range(3):
+                tap = h[:, 9 * c + 3 * ky + kx][:, None]  # H̄ column (8x1)
+                row = rows[ky][c, 0, kx : kx + w_out][None, :]  # shifted row
+                acc = acc + tap * row  # rank-1 outer product, acc resident
+    o_ref[...] = acc[:, None, :]
+
+
+def mma_conv3x3(h: jax.Array, img: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """``h`` is ``(8, 27)`` (filter × channel-major taps); ``img`` is
+    ``(3, rows, width)``. Returns ``(8, rows-2, width-2)`` — valid
+    convolution, single stepping (the §V-B setting)."""
+    _, taps = h.shape
+    assert taps == TAPS
+    chans, rows, width = img.shape
+    assert chans == 3 and rows >= 3 and width >= 3
+    out_rows = rows - 2
+    w_out = width - 2
+    img = img.astype(jnp.float32)
+    # the three row-shifted views of eq. (8): ky = 0, 1, 2
+    shifted = [img[:, ky : ky + out_rows, :] for ky in range(3)]
+    row_spec = pl.BlockSpec((3, 1, width), lambda r: (0, r, 0))
+    return pl.pallas_call(
+        partial(_conv_kernel, w_out=w_out),
+        grid=(out_rows,),
+        in_specs=[
+            pl.BlockSpec((NUM_FILTERS, TAPS), lambda r: (0, 0)),
+            row_spec,
+            row_spec,
+            row_spec,
+        ],
+        out_specs=pl.BlockSpec((NUM_FILTERS, 1, w_out), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((NUM_FILTERS, out_rows, w_out), jnp.float32),
+        interpret=interpret,
+    )(h, *shifted)

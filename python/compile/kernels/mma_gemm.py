@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernel: tiled GEMM in the **MMA idiom** on the TPU
+abstraction (DESIGN.md §Hardware-Adaptation).
+
+The paper's Matrix Math Engine keeps the 512-bit accumulators *inside* the
+functional unit for the whole rank-k loop — "the accumulator data stays
+local to the matrix math engine. Only the X and Y inputs have to be brought
+from the register files" (§III). The TPU mapping:
+
+* the accumulator tile lives in **VMEM scratch** and is written back to HBM
+  exactly once, after the last K step (`@pl.when(k == nk-1)`) — the
+  `xxmfacc` analogue;
+* X/Y panels stream HBM→VMEM under `BlockSpec` control — the fetch buses;
+* each grid step performs a rank-`TK` update on the MXU
+  (`jnp.dot(..., preferred_element_type=f32)`) — the `xv…ger…pp`
+  instructions, including the fp32-accumulate-of-bf16 contract of
+  `xvbf16ger2pp`.
+
+Kernels must run with ``interpret=True`` on CPU: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes: multiples of the MXU systolic array (128×128 on real
+# TPUs); kept at 32/64 here so small models and tests stay exact multiples.
+DEFAULT_TM = 32
+DEFAULT_TN = 32
+DEFAULT_TK = 32
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk):
+    """One grid step: rank-TK update of the VMEM-resident accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _prime():  # the xxsetaccz analogue: prime the accumulator
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the rank-k update: A += X @ Yᵀ-tile on the MXU, f32 accumulation
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _deprime():  # the xxmfacc analogue: single write-back to HBM
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mma_gemm(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tm: int = DEFAULT_TM,
+    tn: int = DEFAULT_TN,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled ``x @ y`` with an accumulator-resident schedule.
+
+    ``x`` is ``(m, k)``, ``y`` is ``(k, n)``; f32 or bf16 inputs, f32
+    output. Dimensions must be multiples of the tile sizes (the residual
+    shapes of §II-C are handled architecturally by the rust ISA layer; at
+    this level callers pad, as production GEMMs do).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (
+        f"shape ({m},{n},{k}) not a multiple of tiles ({tm},{tn},{tk})"
+    )
+    nk = k // tk
+    return pl.pallas_call(
+        partial(_gemm_kernel, nk=nk),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+
+
+def mma_gemm_bf16(x: jax.Array, y: jax.Array, **kw) -> jax.Array:
+    """bf16 inputs, f32 accumulation — the `xvbf16ger2` contract."""
+    return mma_gemm(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16), **kw)
+
+
+def vmem_footprint_bytes(tm: int, tn: int, tk: int, in_dtype=jnp.float32) -> int:
+    """Estimated VMEM residency of one grid step: X tile + Y tile (double
+    buffered) + f32 accumulator. Used by the L1 perf notes in
+    EXPERIMENTS.md §Perf (interpret mode gives no real timings)."""
+    esz = jnp.dtype(in_dtype).itemsize
+    return 2 * (tm * tk + tk * tn) * esz + tm * tn * 4
+
+
+def mxu_utilization_estimate(tm: int, tn: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (tm, tn) output tile keeps busy — the
+    roofline proxy for real-TPU execution (interpret mode gives no
+    hardware timing)."""
+    return min(tm / mxu, 1.0) * min(tn / mxu, 1.0)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness contract
+checked by pytest at build time (and by hypothesis sweeps in
+``python/tests``)."""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(x, y):
+    """f32 GEMM reference."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def gemm_bf16_ref(x, y):
+    """bf16-inputs / f32-accumulate reference (the `xvbf16ger2` contract:
+    inputs rounded to bf16, products and sums in f32)."""
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    yb = y.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.dot(xb, yb)
+
+
+def conv3x3_ref(h, img):
+    """Direct valid 3×3 × 3-channel convolution; ``h`` is ``(8, 27)`` with
+    taps ordered ``9*c + 3*ky + kx``; ``img`` is ``(3, rows, width)``."""
+    img = img.astype(jnp.float32)
+    _, rows, width = img.shape
+    out = jnp.zeros((h.shape[0], rows - 2, width - 2), jnp.float32)
+    for c in range(3):
+        for ky in range(3):
+            for kx in range(3):
+                tap = h[:, 9 * c + 3 * ky + kx][:, None, None]
+                patch = img[c, ky : ky + rows - 2, kx : kx + width - 2][None, :, :]
+                out = out + tap * patch
+    return out
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP reference (f32 throughout)."""
+    hline = jnp.maximum(jnp.dot(x, w1) + b1, 0.0)
+    return jnp.dot(hline, w2) + b2

@@ -1,0 +1,60 @@
+"""Layer-2 JAX models: the compute graphs the rust coordinator serves,
+built on the Layer-1 Pallas kernels.
+
+* :func:`gemm_f32` / :func:`gemm_bf16` — the §V-A matrix-multiply service
+  (the kernels the paper contributes to OpenBLAS/Eigen).
+* :func:`conv2d_k3` — the §V-B multi-filter 3×3 convolution.
+* :func:`mlp_classifier` — the §I "data-in-flight business analytics"
+  model: a small tabular classifier whose matmuls run through the MMA-style
+  GEMM kernel; the coordinator batches transactions through it.
+
+These functions are *build-time only*: ``aot.py`` lowers them to HLO text
+once; the rust runtime loads and executes the artifacts. Python never sits
+on the request path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.mma_conv import mma_conv3x3
+from compile.kernels.mma_gemm import mma_gemm, mma_gemm_bf16
+
+# Model dimensions (fixed at AOT time; multiples of the kernel tiles).
+GEMM_DIM = 128
+MLP_FEATURES = 64
+MLP_HIDDEN = 128
+MLP_CLASSES = 32
+MLP_BATCHES = (32,)  # compiled batch size(s); the batcher pads to these
+CONV_IMG = (3, 18, 130)  # (channels, rows, width) -> (8, 16, 128) output
+
+
+def gemm_f32(x, y):
+    """`C = X·Y`, 128³, f32 — one paper DGEMM-kernel-sized tile."""
+    return (mma_gemm(x, y),)
+
+
+def gemm_bf16(x, y):
+    """bf16 inputs, f32 accumulation (the `xvbf16ger2` service)."""
+    return (mma_gemm_bf16(x, y),)
+
+
+def conv2d_k3(h, img):
+    """8-filter 3-channel 3×3 valid convolution (§V-B)."""
+    return (mma_conv3x3(h, img),)
+
+
+def mlp_classifier(x, w1, b1, w2, b2):
+    """relu(x·W1 + b1)·W2 + b2 — both matmuls through the Pallas kernel.
+
+    `x` is `(batch, 64)`; weights are padded to tile multiples at AOT time.
+    Returns logits `(batch, 32)`.
+    """
+    batch = x.shape[0]
+    # pad the batch to a tile multiple; the kernel tiles are 32-aligned
+    tile = 32
+    pad = (-batch) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    h = mma_gemm(x, w1, tm=tile, tn=32, tk=32) + b1
+    h = jnp.maximum(h, 0.0)
+    out = mma_gemm(h, w2, tm=tile, tn=32, tk=32) + b2
+    return (out[:batch],)

@@ -1,0 +1,57 @@
+"""The AOT artifact contract: manifest/meta format, expected-output
+fixtures, and the determinism the rust runtime relies on."""
+
+import os
+
+import numpy as np
+
+from compile import model
+from compile.aot import build_artifact, det_input, shape_str
+
+
+def test_shape_str():
+    assert shape_str((128, 128)) == "128x128"
+    assert shape_str((32,)) == "32"
+
+
+def test_det_input_is_deterministic_and_salt_sensitive():
+    a = det_input((8, 8), 1)
+    b = det_input((8, 8), 1)
+    np.testing.assert_array_equal(a, b)
+    c = det_input((8, 8), 2)
+    assert not np.array_equal(a, c)
+    # values live in [-0.5, 0.5)
+    assert a.min() >= -0.5 and a.max() < 0.5
+    assert a.dtype == np.float32
+
+
+def test_build_artifact_round_trip(tmp_path):
+    g = 128
+    meta = build_artifact("gemm_f32", model.gemm_f32, [(g, g), (g, g)], str(tmp_path))
+    assert meta == f"gemm_f32;{g}x{g},{g}x{g};{g}x{g}\n"
+    hlo = (tmp_path / "gemm_f32.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")
+    expected = np.frombuffer((tmp_path / "gemm_f32.expected.bin").read_bytes(), np.float32)
+    assert expected.shape == (g * g,)
+    # the fixture must equal a recomputation of the model on det inputs
+    x = det_input((g, g), 1)
+    y = det_input((g, g), 2)
+    (out,) = model.gemm_f32(x, y)
+    np.testing.assert_allclose(expected.reshape(g, g), np.asarray(out), rtol=1e-6, atol=1e-6)
+
+
+def test_artifacts_dir_is_consistent_if_built():
+    """If `make artifacts` has run, every manifest entry must have its
+    three files and self-consistent sizes."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        return  # not built yet; the Makefile orders this correctly
+    for line in open(manifest):
+        if not line.strip():
+            continue
+        name, ins, out = line.strip().split(";")
+        assert os.path.exists(os.path.join(art, f"{name}.hlo.txt")), name
+        out_elems = int(np.prod([int(d) for d in out.split("x")]))
+        exp = os.path.getsize(os.path.join(art, f"{name}.expected.bin"))
+        assert exp == 4 * out_elems, f"{name}: expected.bin size {exp} != 4*{out_elems}"

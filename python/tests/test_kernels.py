@@ -1,0 +1,127 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+``ref.py`` — the core correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mma_conv import mma_conv3x3
+from compile.kernels.mma_gemm import (
+    mma_gemm,
+    mma_gemm_bf16,
+    vmem_footprint_bytes,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernel
+# ---------------------------------------------------------------------------
+
+tiles = st.sampled_from([32, 64])
+dims = st.sampled_from([1, 2, 3, 4])
+
+
+@given(mi=dims, ni=dims, ki=dims, tile=tiles, seed=st.integers(0, 2**31))
+def test_gemm_matches_ref(mi, ni, ki, tile, seed):
+    m, n, k = mi * tile, ni * tile, ki * tile
+    x = rand((m, k), seed)
+    y = rand((k, n), seed + 1)
+    got = mma_gemm(x, y, tm=tile, tn=tile, tk=tile)
+    want = ref.gemm_ref(x, y)
+    # f32 accumulation-order differences grow with k; scale atol accordingly
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-6 * k)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_gemm_bf16_matches_bf16_ref(seed):
+    x = rand((64, 64), seed)
+    y = rand((64, 64), seed + 9)
+    got = mma_gemm_bf16(x, y)
+    want = ref.gemm_bf16_ref(x, y)
+    # identical bf16 rounding on both sides; small f32 summation-order noise
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_bf16_actually_rounds():
+    # bf16 path must differ from the f32 path for values needing >8
+    # mantissa bits (proves the kernel really computes in bf16)
+    x = np.full((32, 32), 1.001, np.float32)
+    y = np.eye(32, dtype=np.float32)
+    exact = mma_gemm(x, y)
+    rounded = mma_gemm_bf16(x, y)
+    assert not np.allclose(np.asarray(exact), np.asarray(rounded), rtol=0, atol=1e-6)
+
+
+def test_gemm_rejects_non_tile_multiple():
+    with pytest.raises(AssertionError):
+        mma_gemm(np.zeros((33, 32), np.float32), np.zeros((32, 32), np.float32))
+    with pytest.raises(AssertionError):
+        mma_gemm(np.zeros((32, 31), np.float32), np.zeros((32, 32), np.float32))
+
+
+def test_gemm_accumulator_resident_across_k():
+    # k == 4 tiles: the accumulator must carry partial sums across grid
+    # steps (catching a kernel that re-primes per step)
+    k = 128
+    x = np.ones((32, k), np.float32)
+    y = np.ones((k, 32), np.float32)
+    got = np.asarray(mma_gemm(x, y))
+    assert np.all(got == k), f"expected all {k}, got range [{got.min()}, {got.max()}]"
+
+
+def test_vmem_footprint_estimate():
+    # the §Perf block-shape table: footprint must scale as expected and
+    # stay within a 16 MiB VMEM budget for the default tiles
+    base = vmem_footprint_bytes(32, 32, 32)
+    assert base == 2 * (32 * 32 + 32 * 32) * 4 + 32 * 32 * 4
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Conv kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    rows=st.integers(3, 10),
+    width=st.sampled_from([8, 16, 33, 130]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv_matches_direct(rows, width, seed):
+    h = rand((8, 27), seed)
+    img = rand((3, rows, width), seed + 3)
+    got = mma_conv3x3(h, img)
+    want = ref.conv3x3_ref(h, img)
+    assert got.shape == (8, rows - 2, width - 2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv_identity_filter():
+    h = np.zeros((8, 27), np.float32)
+    h[0, 9 * 0 + 3 * 1 + 1] = 1.0  # filter 0 = center tap of channel 0
+    img = rand((3, 6, 12), 5)
+    out = np.asarray(mma_conv3x3(h, img))
+    np.testing.assert_allclose(out[0], img[0, 1:-1, 1:-1], rtol=1e-6)
+    assert np.all(out[1:] == 0)
+
+
+def test_conv_linearity():
+    # conv(a*h) == a*conv(h) — catches accumulator contamination
+    h = rand((8, 27), 11)
+    img = rand((3, 5, 9), 12)
+    out1 = np.asarray(mma_conv3x3(h, img))
+    out2 = np.asarray(mma_conv3x3(2.0 * h, img))
+    np.testing.assert_allclose(out2, 2.0 * out1, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,105 @@
+//! Bench: coordinator serving throughput/latency — the §I data-in-flight
+//! scenario. Uses a synthetic engine (fixed per-batch cost) to isolate
+//! router/batcher overhead, plus the real PJRT engine when artifacts
+//! exist.
+//!
+//! Also sweeps the dynamic-batching knob (batch size), the serving
+//! analogue of the paper's throughput-vs-latency trade.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use power_mma::coordinator::{Coordinator, CoordinatorConfig, InferenceEngine, MlpWeights, Payload};
+use power_mma::metrics::Table;
+use power_mma::runtime::{det_input, Runtime};
+use std::time::{Duration, Instant};
+
+/// Engine with a fixed per-invocation cost (models a constant-latency
+/// accelerator call).
+struct SyntheticEngine {
+    cost: Duration,
+    cfg: CoordinatorConfig,
+}
+
+impl InferenceEngine for SyntheticEngine {
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.cost);
+        if model.starts_with("mlp") {
+            Ok(vec![0.5; self.cfg.batch_size * self.cfg.classes])
+        } else {
+            Ok(inputs[0].to_vec())
+        }
+    }
+}
+
+fn drive(cfg: CoordinatorConfig, n: usize, engine_cost: Duration) -> (f64, u64, f64) {
+    let weights = MlpWeights::deterministic(&cfg);
+    let cfg2 = cfg.clone();
+    let coord = Coordinator::start(cfg.clone(), weights, move || {
+        Ok(SyntheticEngine { cost: engine_cost, cfg: cfg2 })
+    });
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        rxs.push(coord.submit(Payload::Classify { features: det_input(cfg.features, i as u64) }).1);
+    }
+    for rx in rxs {
+        rx.recv().unwrap().result.unwrap();
+    }
+    let dt = t0.elapsed();
+    let stats = coord.shutdown();
+    (n as f64 / dt.as_secs_f64(), stats.latency.quantile_us(0.5), stats.mean_batch_occupancy())
+}
+
+fn main() {
+    println!("batching ablation (synthetic engine, 200us per batch call):");
+    let mut table = Table::new(&["batch", "req/s", "p50 us", "occupancy"]);
+    for batch in [1usize, 4, 8, 16, 32] {
+        let cfg = CoordinatorConfig {
+            batch_size: batch,
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let (tput, p50, occ) = drive(cfg, 2000, Duration::from_micros(200));
+        table.row(&[batch.to_string(), format!("{tput:.0}"), p50.to_string(), format!("{occ:.1}")]);
+    }
+    println!("{}", table.render());
+    println!("batching amortizes the fixed per-call cost: throughput scales with batch size\n");
+
+    // the real PJRT engine over the AOT artifacts
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let cfg = CoordinatorConfig::default();
+        let weights = MlpWeights::deterministic(&cfg);
+        let dir2 = dir.clone();
+        let coord = Coordinator::start(cfg.clone(), weights, move || {
+            let mut rt = Runtime::cpu(&dir2)?;
+            rt.load_all()?;
+            Ok(rt)
+        });
+        // warm up (first call compiles/faults in)
+        let (_, rx) = coord.submit(Payload::Classify { features: det_input(cfg.features, 0) });
+        rx.recv().unwrap().result.unwrap();
+        let n = 5000;
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            rxs.push(
+                coord.submit(Payload::Classify { features: det_input(cfg.features, i as u64) }).1,
+            );
+        }
+        for rx in rxs {
+            rx.recv().unwrap().result.unwrap();
+        }
+        let dt = t0.elapsed();
+        let stats = coord.shutdown();
+        println!(
+            "real PJRT engine (mlp_b32 over the Pallas GEMM kernel): {n} requests in {dt:.2?} \
+             -> {:.0} req/s, p50 {} us, occupancy {:.1}",
+            n as f64 / dt.as_secs_f64(),
+            stats.latency.quantile_us(0.5),
+            stats.mean_batch_occupancy()
+        );
+    } else {
+        println!("(skipping PJRT phase: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate **Figure 10** — HPL (Linpack) performance in
+//! flops/cycle vs problem size, for POWER9 / POWER10-VSX / POWER10-MMA.
+//!
+//! Paper reference points (read off Figure 10 / §VI text): all curves rise
+//! with N; at large N POWER10-VSX ≈ 2× POWER9 and POWER10-MMA ≈ 2× the
+//! vector code ( = 4× POWER9 per core).
+//!
+//! Run: `cargo bench --bench fig10_hpl`
+
+use power_mma::benchkit::{bench, f2, report};
+use power_mma::hpl::{hpl_cycles, CycleCost, Setup};
+use power_mma::metrics::Table;
+
+fn main() {
+    let sizes = [256usize, 512, 1024, 2048, 4096, 8192, 16384];
+    let mut table = Table::new(&[
+        "N",
+        "POWER9",
+        "POWER10-VSX",
+        "POWER10-MMA",
+        "VSX/P9",
+        "MMA/VSX",
+        "MMA/P9",
+    ]);
+    let mut costs: Vec<CycleCost> = Setup::ALL.iter().map(|&s| CycleCost::new(s)).collect();
+    for &n in &sizes {
+        let mut v = Vec::new();
+        for (i, &setup) in Setup::ALL.iter().enumerate() {
+            v.push(hpl_cycles(setup, n, 128, &mut costs[i]).flops_per_cycle());
+        }
+        table.row(&[
+            n.to_string(),
+            f2(v[0]),
+            f2(v[1]),
+            f2(v[2]),
+            f2(v[1] / v[0]),
+            f2(v[2] / v[1]),
+            f2(v[2] / v[0]),
+        ]);
+    }
+    println!("Figure 10 — HPL performance (flops/cycle):\n{}", table.render());
+    println!(
+        "paper: POWER10-VSX ~2x POWER9; POWER10-MMA ~2x POWER10-VSX (4x POWER9) at large N\n"
+    );
+
+    // wall-clock cost of regenerating the figure (the harness itself)
+    let s = bench("fig10_full_sweep", 1, 5, || {
+        let mut cost = CycleCost::new(Setup::Power10Mma);
+        let t = hpl_cycles(Setup::Power10Mma, 4096, 128, &mut cost);
+        assert!(t.flops_per_cycle() > 1.0);
+    });
+    report(&s);
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate **Figure 11** — DGEMM performance, multiplying an
+//! N×128 matrix by a 128×N matrix, in flops/cycle.
+//!
+//! Paper reference points: POWER9 ≈ 4.5 (56% of its 8 peak), POWER10-VSX
+//! ≈ 10 (62% of 16), POWER10-MMA ≈ 26 (>80% of 32); MMA > 2.5× the P10
+//! vector code and > 5.5× POWER9.
+//!
+//! Run: `cargo bench --bench fig11_dgemm`
+
+use power_mma::benchkit::{bench, report};
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::hpl::{CycleCost, Setup};
+use power_mma::kernels::dgemm::dgemm_8xnx8_program;
+use power_mma::metrics::Table;
+
+fn main() {
+    let sizes = [128usize, 256, 512, 1024, 2048, 4096];
+    let mut table = Table::new(&[
+        "N",
+        "POWER9",
+        "%peak",
+        "POWER10-VSX",
+        "%peak",
+        "POWER10-MMA",
+        "%peak",
+        "MMA/VSX",
+        "MMA/P9",
+    ]);
+    let mut costs: Vec<CycleCost> = Setup::ALL.iter().map(|&s| CycleCost::new(s)).collect();
+    for &n in &sizes {
+        let mut v = Vec::new();
+        for (i, _) in Setup::ALL.iter().enumerate() {
+            let cycles = costs[i].dgemm_cycles(n, n, 128);
+            v.push(2.0 * (n * n * 128) as f64 / cycles as f64);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", v[0]),
+            format!("{:.0}%", 100.0 * v[0] / Setup::Power9Vsx.peak()),
+            format!("{:.2}", v[1]),
+            format!("{:.0}%", 100.0 * v[1] / Setup::Power10Vsx.peak()),
+            format!("{:.2}", v[2]),
+            format!("{:.0}%", 100.0 * v[2] / Setup::Power10Mma.peak()),
+            format!("{:.2}", v[2] / v[1]),
+            format!("{:.2}", v[2] / v[0]),
+        ]);
+    }
+    println!("Figure 11 — DGEMM Nx128 * 128xN (flops/cycle):\n{}", table.render());
+    println!("paper: P9 ~4.5 (56%), P10-VSX ~10 (62%), P10-MMA ~26 (>80%)\n");
+
+    // simulator wall-clock throughput on the hot kernel
+    let prog = dgemm_8xnx8_program(128);
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    let insts = 2231f64; // dynamic instructions of the 8x128x8 kernel
+    let s = bench("coresim_dgemm_8x128x8", 3, 50, || {
+        let r = sim.run(&prog, 1 << 22);
+        assert!(r.cycles > 0);
+    });
+    report(&s);
+    println!(
+        "timing-simulator speed: {:.1} M simulated instructions/s",
+        insts / s.median.as_secs_f64() / 1e6
+    );
+}

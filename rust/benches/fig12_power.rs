@@ -1,0 +1,61 @@
+//! Bench: regenerate **Figure 12** — average power draw of the 128×128
+//! DGEMM, per configuration, split CORE-without-MME / MME / TOTAL, using
+//! the §VII methodology (5000-instruction windows, averaged).
+//!
+//! Paper reference points (§VII): POWER10-MMA ≈ +8% total power vs
+//! POWER10-VSX (+12% with the MME power-gated during VSX runs) for 2.5×
+//! the performance; ≈ −24% power vs POWER9 at 5× the performance — almost
+//! 7× less energy per computation.
+//!
+//! Run: `cargo bench --bench fig12_power`
+
+use power_mma::benchkit::f2;
+use power_mma::hpl::{CycleCost, Setup};
+use power_mma::metrics::Table;
+
+fn main() {
+    for gate in [false, true] {
+        let mut table = Table::new(&[
+            "config",
+            "CORE w/o MME",
+            "MME",
+            "TOTAL",
+            "flops/cycle",
+            "energy/flop",
+            "windows",
+        ]);
+        let mut rows = Vec::new();
+        for setup in Setup::ALL {
+            let mut cost = CycleCost::new(setup);
+            cost.sim_mut().set_mme_gated(gate);
+            let r = cost.kernel_report(2048); // long run -> many windows
+            let e = r.energy.clone();
+            rows.push((setup, e.total_power, r.flops_per_cycle()));
+            table.row(&[
+                setup.label().to_string(),
+                f2(e.core_power),
+                f2(e.mme_power),
+                f2(e.total_power),
+                f2(r.flops_per_cycle()),
+                format!("{:.3}", e.total_power / r.flops_per_cycle()),
+                e.windows.to_string(),
+            ]);
+        }
+        println!(
+            "Figure 12 — average power of DGEMM (arbitrary units){}:\n{}",
+            if gate { ", MME power-gated when idle" } else { "" },
+            table.render()
+        );
+        let p9 = rows[0];
+        let vsx = rows[1];
+        let mma = rows[2];
+        println!(
+            "ratios: MMA/VSX power {:.3} (paper ~{}), MMA/P9 power {:.3} (paper ~0.76), \
+             energy/flop gain vs P9 {:.2}x (paper ~6.8x)\n",
+            mma.1 / vsx.1,
+            if gate { "1.12" } else { "1.08" },
+            mma.1 / p9.1,
+            (p9.1 / p9.2) / (mma.1 / mma.2),
+        );
+    }
+}

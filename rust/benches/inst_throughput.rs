@@ -1,0 +1,80 @@
+//! Bench: **Table I throughput** — sustained rank-k updates/cycle and
+//! MACs/cycle for every MMA instruction family on the POWER10 model, plus
+//! the functional simulator's wall-clock execution rate per kind.
+//!
+//! The paper's Table I implies a throughput hierarchy: at 2 gers/cycle the
+//! MME sustains 16 fp64, 32 fp32, 64 fp16/bf16, 64 int16, 128 int8, 256
+//! int4 MACs per cycle. This bench verifies the model reproduces it.
+//!
+//! Run: `cargo bench --bench inst_throughput`
+
+use power_mma::benchkit::{bench, report};
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::isa::inst::{AccOp, Ger, GerKind, Inst};
+use power_mma::isa::Machine;
+use power_mma::metrics::Table;
+
+/// A tight loop of independent gers over all 8 accumulators.
+fn ger_loop(kind: GerKind, iters: i32) -> Vec<Inst> {
+    let mut prog = vec![Inst::Addi { rt: 9, ra: 0, si: iters }, Inst::Mtctr { rs: 9 }];
+    for a in 0..8u8 {
+        let xa = if kind == GerKind::F64Ger { 32 + 2 * a } else { 32 + a };
+        prog.push(Inst::Ger(Ger::new(kind, AccOp::New, a, xa, 56 + (a % 8))));
+    }
+    prog.push(Inst::Bdnz { bd: -32 });
+    prog.push(Inst::Blr);
+    prog
+}
+
+fn main() {
+    let mut table = Table::new(&[
+        "instruction",
+        "rank",
+        "MACs/inst",
+        "gers/cycle",
+        "MACs/cycle",
+        "sim Minst/s",
+    ]);
+    for kind in GerKind::ALL {
+        let prog = ger_loop(kind, 2000);
+        // timing model
+        let mut sim = CoreSim::new(MachineConfig::power10());
+        let r = sim.run(&prog, 1 << 22);
+        let gers_per_cycle = r.units.mma_ops as f64 / r.cycles as f64;
+        let macs_per_cycle = r.flops as f64 / 2.0 / r.cycles as f64;
+        // functional simulator wall-clock
+        let mut m = Machine::new(64);
+        let s = bench(&format!("exec_{}", kind.mnemonic()), 1, 10, || {
+            m.run(&prog, 1 << 22).unwrap();
+        });
+        let minst = r.instructions as f64 / s.median.as_secs_f64() / 1e6;
+        table.row(&[
+            kind.mnemonic().to_string(),
+            kind.rank().to_string(),
+            (kind.flops() / 2).to_string(),
+            format!("{gers_per_cycle:.2}"),
+            format!("{macs_per_cycle:.1}"),
+            format!("{minst:.1}"),
+        ]);
+    }
+    println!("\nTable I — MMA instruction throughput on the POWER10 model:\n{}", table.render());
+    println!("paper: 2 MME pipes -> 2 gers/cycle; MACs scale 8/16/32/32/64/128 per ger");
+
+    // accumulator move instruction costs (§III bus transfers)
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    let mt = sim.run(&[Inst::XxMtAcc { acc: 0 }, Inst::Blr], 10);
+    let mf = sim.run(&[Inst::XxSetAccZ { acc: 0 }, Inst::XxMfAcc { acc: 0 }, Inst::Blr], 10);
+    println!(
+        "\naccumulator transfers: xxmtacc {} cycles (paper: 2), xxsetaccz+xxmfacc {} cycles (paper: 4+e)",
+        mt.cycles, mf.cycles
+    );
+
+    let s = bench("encode_decode_fig7_loop", 10, 1000, || {
+        let bytes =
+            power_mma::isa::encode::encode_program(&power_mma::kernels::dgemm::fig7_loop_body())
+                .unwrap();
+        let prog = power_mma::isa::encode::decode_program(&bytes).unwrap();
+        assert_eq!(prog.len(), 17);
+    });
+    report(&s);
+}

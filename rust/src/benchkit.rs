@@ -1,0 +1,122 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with median/mean/min reporting, a
+//! `black_box` to defeat dead-code elimination, and a tiny runner so each
+//! `cargo bench` target can register named benchmarks and also emit the
+//! paper-style figure tables.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-style name.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u32,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Sample {
+    /// ns per iteration (median).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Items/second given `items` of work per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark `f`, returning timing statistics.
+///
+/// Runs `warmup` untimed iterations, then `iters` timed ones; each timed
+/// iteration is measured individually so the median is robust to OS noise.
+pub fn bench(name: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> Sample {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<Duration>() / iters;
+    Sample { name: name.to_string(), iters, median, mean, min }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the whole
+/// benchmark takes roughly `budget`.
+pub fn bench_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> Sample {
+    // calibrate with one run
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 10_000.0) as u32;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Pretty-print a sample line (the `cargo bench`-style output).
+pub fn report(s: &Sample) {
+    println!(
+        "bench {:<48} {:>12.3} ms/iter (median; mean {:.3} ms, min {:.3} ms, n={})",
+        s.name,
+        s.median.as_secs_f64() * 1e3,
+        s.mean.as_secs_f64() * 1e3,
+        s.min.as_secs_f64() * 1e3,
+        s.iters
+    );
+}
+
+/// Format a flops/cycle-style float column.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let s = bench("count", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn bench_budget_terminates() {
+        let s = bench_budget("sleepless", Duration::from_millis(20), || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Sample {
+            name: "t".into(),
+            iters: 1,
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+        };
+        let tput = s.throughput(100.0);
+        assert!((tput - 10_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! BLAS level-1 vector operations (row-major, stride-1 slices with an
+//! optional element stride for matrix columns).
+
+/// `y += alpha * x` over strided views.
+pub fn daxpy(alpha: f64, x: &[f64], incx: usize, y: &mut [f64], incy: usize, n: usize) {
+    for i in 0..n {
+        y[i * incy] += alpha * x[i * incx];
+    }
+}
+
+/// Dot product over strided views.
+pub fn ddot(x: &[f64], incx: usize, y: &[f64], incy: usize, n: usize) -> f64 {
+    (0..n).map(|i| x[i * incx] * y[i * incy]).sum()
+}
+
+/// `x *= alpha`.
+pub fn dscal(alpha: f64, x: &mut [f64], incx: usize, n: usize) {
+    for i in 0..n {
+        x[i * incx] *= alpha;
+    }
+}
+
+/// Index of the element with maximum absolute value (the LU pivot search).
+pub fn idamax(x: &[f64], incx: usize, n: usize) -> usize {
+    let mut best = 0;
+    let mut bestv = 0.0f64;
+    for i in 0..n {
+        let v = x[i * incx].abs();
+        if v > bestv {
+            bestv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Swap two rows of a row-major matrix with row stride `lda`.
+pub fn dswap_rows(a: &mut [f64], lda: usize, r1: usize, r2: usize, cols: usize) {
+    if r1 == r2 {
+        return;
+    }
+    for j in 0..cols {
+        a.swap(r1 * lda + j, r2 * lda + j);
+    }
+}
+
+/// Infinity norm of a row-major `m×n` matrix.
+pub fn dlange_inf(a: &[f64], lda: usize, m: usize, n: usize) -> f64 {
+    (0..m)
+        .map(|i| (0..n).map(|j| a[i * lda + j].abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_scal() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        daxpy(2.0, &x, 1, &mut y, 1, 3);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        assert_eq!(ddot(&x, 1, &x, 1, 3), 14.0);
+        let mut z = [1.0, 2.0];
+        dscal(-3.0, &mut z, 1, 2);
+        assert_eq!(z, [-3.0, -6.0]);
+    }
+
+    #[test]
+    fn strided_column_access() {
+        // a 3x3 row-major matrix; column 1 has stride 3
+        let a = [1.0, 10.0, 2.0, 3.0, -40.0, 4.0, 5.0, 20.0, 6.0];
+        assert_eq!(ddot(&a[1..], 3, &a[1..], 3, 3), 100.0 + 1600.0 + 400.0);
+        assert_eq!(idamax(&a[1..], 3, 3), 1, "pivot finds -40");
+    }
+
+    #[test]
+    fn row_swap_and_norm() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        dswap_rows(&mut a, 3, 0, 1, 3);
+        assert_eq!(a, vec![4.0, 5.0, 6.0, 1.0, 2.0, 3.0]);
+        assert_eq!(dlange_inf(&a, 3, 2, 3), 15.0);
+        dswap_rows(&mut a, 3, 1, 1, 3); // no-op
+        assert_eq!(a[3], 1.0);
+    }
+
+    #[test]
+    fn idamax_first_max_wins() {
+        assert_eq!(idamax(&[3.0, -3.0, 3.0], 1, 3), 0);
+        assert_eq!(idamax(&[0.0; 4], 1, 4), 0);
+    }
+}

@@ -1,0 +1,57 @@
+//! BLAS level-2: matrix-vector operations (row-major).
+
+/// Rank-1 update `A += alpha * x yᵀ` on an `m×n` row-major matrix with row
+/// stride `lda` — the scalar cousin of the MMA `ger` instructions.
+pub fn dger(alpha: f64, x: &[f64], y: &[f64], a: &mut [f64], lda: usize, m: usize, n: usize) {
+    for i in 0..m {
+        let xi = alpha * x[i];
+        let row = &mut a[i * lda..i * lda + n];
+        for (aij, &yj) in row.iter_mut().zip(&y[..n]) {
+            *aij += xi * yj;
+        }
+    }
+}
+
+/// `y = alpha*A·x + beta*y` for a row-major `m×n` A.
+pub fn dgemv(alpha: f64, a: &[f64], lda: usize, x: &[f64], beta: f64, y: &mut [f64], m: usize, n: usize) {
+    for i in 0..m {
+        let dot: f64 = (0..n).map(|j| a[i * lda + j] * x[j]).sum();
+        y[i] = alpha * dot + beta * y[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_allclose, Rng};
+
+    #[test]
+    fn ger_small() {
+        let mut a = vec![0.0; 6];
+        dger(2.0, &[1.0, 2.0], &[10.0, 20.0, 30.0], &mut a, 3, 2, 3);
+        assert_eq!(a, vec![20.0, 40.0, 60.0, 40.0, 80.0, 120.0]);
+    }
+
+    #[test]
+    fn gemv_vs_manual() {
+        let mut rng = Rng::new(11);
+        let (m, n) = (5, 7);
+        let a = rng.f64_vec(m * n);
+        let x = rng.f64_vec(n);
+        let mut y = rng.f64_vec(m);
+        let y0 = y.clone();
+        dgemv(1.5, &a, n, &x, -0.5, &mut y, m, n);
+        let expect: Vec<f64> = (0..m)
+            .map(|i| 1.5 * (0..n).map(|j| a[i * n + j] * x[j]).sum::<f64>() - 0.5 * y0[i])
+            .collect();
+        assert_allclose(&y, &expect, 1e-12, 1e-14);
+    }
+
+    #[test]
+    fn ger_respects_lda() {
+        // 2x2 update inside a 2x4 matrix
+        let mut a = vec![0.0; 8];
+        dger(1.0, &[1.0, 1.0], &[5.0, 6.0], &mut a, 4, 2, 2);
+        assert_eq!(a, vec![5.0, 6.0, 0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+}

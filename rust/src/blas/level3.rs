@@ -1,0 +1,327 @@
+//! BLAS level-3: the full `dgemm` of the paper's equation (4) —
+//! `C ← α·op(A)·op(B) + β·C` with optional transposes — plus the
+//! triangular solve (`dtrsm`) and symmetric rank-k update (`dsyrk`)
+//! routines HPL-class workloads lean on. All routines accept a
+//! [`GemmBackend`] so their inner multiplications can run through the
+//! instruction-level MMA simulator.
+
+use crate::blas::gemm::{ref_gemm_plus, GemmBackend};
+use crate::isa::ExecError;
+
+/// Transpose selector for [`dgemm_full`] (the `A^[T]` of eq. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    N,
+    T,
+}
+
+/// Materialize `op(M)` as a contiguous row-major `rows×cols` matrix.
+fn materialize(m: &[f64], ld: usize, rows: usize, cols: usize, t: Trans) -> Vec<f64> {
+    let mut out = vec![0f64; rows * cols];
+    match t {
+        Trans::N => {
+            for i in 0..rows {
+                out[i * cols..(i + 1) * cols].copy_from_slice(&m[i * ld..i * ld + cols]);
+            }
+        }
+        Trans::T => {
+            for i in 0..rows {
+                for j in 0..cols {
+                    out[i * cols + j] = m[j * ld + i];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Equation (4): `C ← α·op(A)·op(B) + β·C` (row-major, contiguous C).
+///
+/// `m×k = op(A)`, `k×n = op(B)`. The multiply runs on `backend`; the α/β
+/// scaling is the thin host layer every BLAS wraps around its kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_full(
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    ta: Trans,
+    b: &[f64],
+    ldb: usize,
+    tb: Trans,
+    beta: f64,
+    c: &mut [f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    backend: &mut dyn GemmBackend,
+) -> Result<(), ExecError> {
+    let aop = materialize(a, lda, m, k, ta);
+    let bop = materialize(b, ldb, k, n, tb);
+    // C ← β·C − (−α)·A·B, expressed through the backend's `C -= A·B`
+    for v in c.iter_mut() {
+        *v *= beta;
+    }
+    if alpha == 0.0 || k == 0 {
+        return Ok(());
+    }
+    let scaled: Vec<f64> = aop.iter().map(|&v| -alpha * v).collect();
+    backend.gemm_minus(c, n, &scaled, k, &bop, n, m, n, k)
+}
+
+/// `dtrsm` (left, lower, non-unit or unit diagonal): solve
+/// `op(L)·X = α·B` in place over the row-major `m×n` B.
+#[allow(clippy::too_many_arguments)]
+pub fn dtrsm_left_lower(
+    alpha: f64,
+    l: &[f64],
+    ldl: usize,
+    unit_diag: bool,
+    b: &mut [f64],
+    ldb: usize,
+    m: usize,
+    n: usize,
+) {
+    for v in b.iter_mut().take((m - 1) * ldb + n) {
+        *v *= alpha;
+    }
+    for i in 0..m {
+        for kk in 0..i {
+            let lik = l[i * ldl + kk];
+            if lik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let bkj = b[kk * ldb + j];
+                b[i * ldb + j] -= lik * bkj;
+            }
+        }
+        if !unit_diag {
+            let d = l[i * ldl + i];
+            for j in 0..n {
+                b[i * ldb + j] /= d;
+            }
+        }
+    }
+}
+
+/// `dtrsm` (right, upper, non-unit diagonal): solve `X·op(U) = α·B` in
+/// place — the other panel solve HPL needs.
+#[allow(clippy::too_many_arguments)]
+pub fn dtrsm_right_upper(
+    alpha: f64,
+    u: &[f64],
+    ldu: usize,
+    b: &mut [f64],
+    ldb: usize,
+    m: usize,
+    n: usize,
+) {
+    for v in b.iter_mut().take((m - 1) * ldb + n) {
+        *v *= alpha;
+    }
+    for j in 0..n {
+        let d = u[j * ldu + j];
+        for i in 0..m {
+            let mut s = b[i * ldb + j];
+            for kk in 0..j {
+                s -= b[i * ldb + kk] * u[kk * ldu + j];
+            }
+            b[i * ldb + j] = s / d;
+        }
+    }
+}
+
+/// `dsyrk` (lower): `C ← α·A·Aᵀ + β·C`, updating only the lower triangle
+/// of the `n×n` C (A is `n×k` row-major).
+pub fn dsyrk_lower(
+    alpha: f64,
+    a: &[f64],
+    k: usize,
+    beta: f64,
+    c: &mut [f64],
+    n: usize,
+) {
+    for i in 0..n {
+        for j in 0..=i {
+            let dot: f64 = (0..k).map(|kk| a[i * k + kk] * a[j * k + kk]).sum();
+            c[i * n + j] = alpha * dot + beta * c[i * n + j];
+        }
+    }
+}
+
+/// Full `C = A·B` convenience on the reference path (used by oracles).
+pub fn matmul(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut c = vec![0f64; m * n];
+    ref_gemm_plus(&mut c, n, a, k, b, n, m, n, k);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::gemm::{RefGemm, SimMmaGemm};
+    use crate::testkit::{assert_allclose, check, Rng};
+
+    fn naive_opmul(
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        ta: Trans,
+        b: &[f64],
+        ldb: usize,
+        tb: Trans,
+        beta: f64,
+        c0: &[f64],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Vec<f64> {
+        let mut c = c0.to_vec();
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    let av = match ta {
+                        Trans::N => a[i * lda + kk],
+                        Trans::T => a[kk * lda + i],
+                    };
+                    let bv = match tb {
+                        Trans::N => b[kk * ldb + j],
+                        Trans::T => b[j * ldb + kk],
+                    };
+                    s += av * bv;
+                }
+                c[i * n + j] = alpha * s + beta * c0[i * n + j];
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn eq4_all_transpose_combinations() {
+        check("dgemm_full == eq.4", 16, |rng: &mut Rng| {
+            let (m, n, k) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+            let ta = if rng.bool() { Trans::N } else { Trans::T };
+            let tb = if rng.bool() { Trans::N } else { Trans::T };
+            let (alpha, beta) = (rng.f64_range(-2.0, 2.0), rng.f64_range(-2.0, 2.0));
+            let lda = if ta == Trans::N { k } else { m };
+            let ldb = if tb == Trans::N { n } else { k };
+            let a = rng.f64_vec(m.max(k) * lda);
+            let b = rng.f64_vec(k.max(n) * ldb);
+            let c0 = rng.f64_vec(m * n);
+            let mut c = c0.clone();
+            dgemm_full(alpha, &a, lda, ta, &b, ldb, tb, beta, &mut c, m, n, k, &mut RefGemm)
+                .unwrap();
+            let expect = naive_opmul(alpha, &a, lda, ta, &b, ldb, tb, beta, &c0, m, n, k);
+            assert_allclose(&c, &expect, 1e-12, 1e-12);
+        });
+    }
+
+    #[test]
+    fn eq4_on_simulated_mma() {
+        // alpha/beta/transpose GEMM with the multiply running as MMA
+        // instruction streams
+        let mut rng = Rng::new(4);
+        let (m, n, k) = (16, 8, 12);
+        let a = rng.f64_vec(m * k);
+        let b = rng.f64_vec(n * k); // will be transposed: op(B) = B^T (k x n)
+        let c0 = rng.f64_vec(m * n);
+        let mut c = c0.clone();
+        let mut sim = SimMmaGemm::default();
+        dgemm_full(1.5, &a, k, Trans::N, &b, k, Trans::T, -0.5, &mut c, m, n, k, &mut sim).unwrap();
+        let expect = naive_opmul(1.5, &a, k, Trans::N, &b, k, Trans::T, -0.5, &c0, m, n, k);
+        assert_allclose(&c, &expect, 1e-12, 1e-12);
+        assert!(sim.stats.mma_instructions > 0);
+    }
+
+    #[test]
+    fn trsm_left_lower_solves() {
+        check("dtrsm ll", 10, |rng: &mut Rng| {
+            let m = rng.range(1, 12);
+            let n = rng.range(1, 12);
+            // well-conditioned lower-triangular L
+            let mut l = vec![0f64; m * m];
+            for i in 0..m {
+                for j in 0..i {
+                    l[i * m + j] = rng.f64_range(-0.5, 0.5);
+                }
+                l[i * m + i] = rng.f64_range(1.0, 2.0);
+            }
+            let x_true = rng.f64_vec(m * n);
+            // B = L X
+            let b0 = matmul(&l, &x_true, m, n, m);
+            let mut b = b0.clone();
+            dtrsm_left_lower(1.0, &l, m, false, &mut b, n, m, n);
+            assert_allclose(&b, &x_true, 1e-9, 1e-10);
+        });
+    }
+
+    #[test]
+    fn trsm_right_upper_solves() {
+        check("dtrsm ru", 10, |rng: &mut Rng| {
+            let m = rng.range(1, 12);
+            let n = rng.range(1, 12);
+            let mut u = vec![0f64; n * n];
+            for i in 0..n {
+                u[i * n + i] = rng.f64_range(1.0, 2.0);
+                for j in (i + 1)..n {
+                    u[i * n + j] = rng.f64_range(-0.5, 0.5);
+                }
+            }
+            let x_true = rng.f64_vec(m * n);
+            let b0 = matmul(&x_true, &u, m, n, n);
+            let mut b = b0.clone();
+            dtrsm_right_upper(1.0, &u, n, &mut b, n, m, n);
+            assert_allclose(&b, &x_true, 1e-9, 1e-10);
+        });
+    }
+
+    #[test]
+    fn trsm_unit_diag_ignores_diagonal() {
+        let m = 4;
+        // unit-diag solve must not read the stored diagonal
+        let mut l = vec![0f64; m * m];
+        for i in 0..m {
+            l[i * m + i] = 999.0; // garbage diagonal
+            for j in 0..i {
+                l[i * m + j] = 0.25;
+            }
+        }
+        let x_true = vec![1.0, 2.0, 3.0, 4.0];
+        // B = unit-lower(L) * x
+        let mut b = vec![0.0; m];
+        for i in 0..m {
+            b[i] = x_true[i] + (0..i).map(|j| 0.25 * x_true[j]).sum::<f64>();
+        }
+        dtrsm_left_lower(1.0, &l, m, true, &mut b, 1, m, 1);
+        assert_allclose(&b, &x_true, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = Rng::new(8);
+        let (n, k) = (7, 5);
+        let a = rng.f64_vec(n * k);
+        let c0 = rng.f64_vec(n * n);
+        let mut c = c0.clone();
+        dsyrk_lower(2.0, &a, k, 0.5, &mut c, n);
+        // oracle: full gemm A * A^T
+        let mut at = vec![0f64; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                at[j * n + i] = a[i * k + j];
+            }
+        }
+        let full = matmul(&a, &at, n, n, k);
+        for i in 0..n {
+            for j in 0..n {
+                if j <= i {
+                    let expect = 2.0 * full[i * n + j] + 0.5 * c0[i * n + j];
+                    assert!((c[i * n + j] - expect).abs() < 1e-10);
+                } else {
+                    assert_eq!(c[i * n + j], c0[i * n + j], "upper triangle untouched");
+                }
+            }
+        }
+    }
+}

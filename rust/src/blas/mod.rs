@@ -1,0 +1,19 @@
+//! Numerical linear algebra substrate: the BLAS layers the paper's
+//! evaluation stands on ("we use the standard OpenBLAS in our distribution
+//! of Linux but we hand write the DGEMM kernel", §VI).
+//!
+//! * [`level1`] — vector ops (`daxpy`, `ddot`, `dscal`, `idamax`, swaps):
+//!   the BLAS1 class the POWER10 vector pipes already handle (§I).
+//! * [`level2`] — `dger`, `dgemv`: the BLAS2 class.
+//! * [`gemm`] — reference blocked DGEMM/SGEMM plus the [`gemm::GemmBackend`]
+//!   abstraction that lets LU run its trailing update either natively or
+//!   through the instruction-level MMA simulator.
+//! * [`lu`] — blocked right-looking LU with partial pivoting (`dgetrf`,
+//!   `dgetf2`, `dtrsm`, `dlaswp`) and triangular solves: the computational
+//!   core of HPL.
+
+pub mod gemm;
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod lu;

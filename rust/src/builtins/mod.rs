@@ -1,0 +1,520 @@
+//! The §IV programming model: MMA **compiler built-ins** (Table II) as a
+//! `KernelBuilder` API.
+//!
+//! The paper advocates built-ins as "a compromise in abstraction: the
+//! programmer has detailed control of the operations performed by the
+//! machine while … low-level optimizations such as instruction scheduling
+//! and register allocation are left to the compiler." This module plays the
+//! compiler's role: each method corresponds 1:1 to a `__builtin_mma_*`
+//! function and emits the matching instruction(s), while accumulator and
+//! vector-scalar register allocation is handled here.
+//!
+//! The §IV guidelines are enforced:
+//!
+//! * at most 8 live accumulators (guideline 3) — a 9th allocation returns
+//!   [`BuiltinError::AccumulatorPressure`] instead of silently spilling;
+//! * `assemble_acc`/`disassemble_acc` are preferred over raw
+//!   `xxmtacc`/`xxmfacc` (guideline 1) — both are provided, the former pair
+//!   handles the VSR-group copies;
+//! * accumulators must be primed before use (rule 4) — enforced at run time
+//!   by [`crate::isa::Machine`].
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+
+/// Handle to an allocated accumulator (`__vector_quad`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccReg(pub(crate) u8);
+
+/// Handle to an allocated 16-byte vector (`__vector unsigned char`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VecReg(pub(crate) u8);
+
+/// Handle to an even-odd VSR pair (`__vector_pair`, the fp64 X operand).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VecPair(pub(crate) u8);
+
+/// A general-purpose register used for addressing (caller-managed, like
+/// function arguments r3..r10 in the Power ABI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Gpr(pub u8);
+
+impl AccReg {
+    /// Architected accumulator index (0..8).
+    pub fn index(self) -> u8 {
+        self.0
+    }
+}
+
+impl VecReg {
+    /// Architected VSR index.
+    pub fn index(self) -> u8 {
+        self.0
+    }
+}
+
+impl VecPair {
+    /// Even VSR index of the pair.
+    pub fn index(self) -> u8 {
+        self.0
+    }
+}
+
+/// Register-allocation failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BuiltinError {
+    /// More than 8 live accumulators (§IV guideline 3: "the programmer must
+    /// be conscious of the actual number of accumulators supported by the
+    /// architecture (8)").
+    AccumulatorPressure,
+    /// The vs32..vs63 scratch pool is exhausted.
+    VsrPressure,
+    /// Unarchitected (kind, op) combination.
+    InvalidForm { mnemonic: String },
+}
+
+impl std::fmt::Display for BuiltinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuiltinError::AccumulatorPressure => write!(
+                f,
+                "too many live accumulators: the architecture has 8; the compiler would spill (§IV)"
+            ),
+            BuiltinError::VsrPressure => write!(f, "out of scratch vector-scalar registers (vs32..vs63)"),
+            BuiltinError::InvalidForm { mnemonic } => write!(f, "unarchitected builtin {mnemonic}"),
+        }
+    }
+}
+
+impl std::error::Error for BuiltinError {}
+
+/// Emits instruction streams from builtin-level code, allocating
+/// accumulators (ACC0..7) and scratch VSRs (vs32..vs63 — the registers that
+/// never alias an accumulator, Figure 1).
+#[derive(Default)]
+pub struct KernelBuilder {
+    insts: Vec<Inst>,
+    byte_off: u32,
+    acc_live: [bool; 8],
+    vsr_live: [bool; 32], // vs32 + i
+    /// High-water mark of simultaneously live accumulators.
+    pub max_live_accs: usize,
+}
+
+impl KernelBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- register allocation ----------------------------------------------
+
+    /// Allocate an accumulator (`__vector_quad` declaration).
+    pub fn alloc_acc(&mut self) -> Result<AccReg, BuiltinError> {
+        let Some(i) = self.acc_live.iter().position(|l| !l) else {
+            return Err(BuiltinError::AccumulatorPressure);
+        };
+        self.acc_live[i] = true;
+        let live = self.acc_live.iter().filter(|&&l| l).count();
+        self.max_live_accs = self.max_live_accs.max(live);
+        Ok(AccReg(i as u8))
+    }
+
+    /// Allocate all 8 accumulators at once (the Fig 4 virtual 8×8 pattern).
+    pub fn alloc_all_accs(&mut self) -> Result<[AccReg; 8], BuiltinError> {
+        let mut out = [AccReg(0); 8];
+        for slot in out.iter_mut() {
+            *slot = self.alloc_acc()?;
+        }
+        Ok(out)
+    }
+
+    /// Release an accumulator (end of its live range).
+    pub fn free_acc(&mut self, a: AccReg) {
+        self.acc_live[a.0 as usize] = false;
+    }
+
+    /// Allocate a scratch vector register from vs32..vs63.
+    pub fn alloc_vec(&mut self) -> Result<VecReg, BuiltinError> {
+        let Some(i) = self.vsr_live.iter().position(|l| !l) else {
+            return Err(BuiltinError::VsrPressure);
+        };
+        self.vsr_live[i] = true;
+        Ok(VecReg(32 + i as u8))
+    }
+
+    /// Allocate an even-aligned VSR pair (`__vector_pair`).
+    pub fn alloc_pair(&mut self) -> Result<VecPair, BuiltinError> {
+        let Some(i) = (0..31).step_by(2).find(|&i| !self.vsr_live[i] && !self.vsr_live[i + 1]) else {
+            return Err(BuiltinError::VsrPressure);
+        };
+        self.vsr_live[i] = true;
+        self.vsr_live[i + 1] = true;
+        Ok(VecPair(32 + i as u8))
+    }
+
+    pub fn free_vec(&mut self, v: VecReg) {
+        self.vsr_live[(v.0 - 32) as usize] = false;
+    }
+
+    pub fn free_pair(&mut self, p: VecPair) {
+        self.vsr_live[(p.0 - 32) as usize] = false;
+        self.vsr_live[(p.0 - 31) as usize] = false;
+    }
+
+    // ---- raw emission -------------------------------------------------------
+
+    /// Append a raw instruction (escape hatch; prefer the builtin methods).
+    pub fn emit(&mut self, inst: Inst) {
+        self.byte_off += inst.size();
+        self.insts.push(inst);
+    }
+
+    /// Current byte offset — use as a loop-top label for [`Self::bdnz`].
+    pub fn label(&self) -> u32 {
+        self.byte_off
+    }
+
+    // ---- Table II: accumulator manipulation ---------------------------------
+
+    /// `__builtin_mma_xxsetaccz(&A)`.
+    pub fn xxsetaccz(&mut self, a: AccReg) {
+        self.emit(Inst::XxSetAccZ { acc: a.0 });
+    }
+
+    /// `__builtin_mma_xxmtacc(&A)` (provided for completeness; §IV
+    /// recommends [`Self::assemble_acc`]).
+    pub fn xxmtacc(&mut self, a: AccReg) {
+        self.emit(Inst::XxMtAcc { acc: a.0 });
+    }
+
+    /// `__builtin_mma_xxmfacc(&A)` (see [`Self::disassemble_acc`]).
+    pub fn xxmfacc(&mut self, a: AccReg) {
+        self.emit(Inst::XxMfAcc { acc: a.0 });
+    }
+
+    /// `__builtin_mma_assemble_acc(&A, x, y, z, t)` — *gather* four
+    /// arbitrary vectors into an accumulator: copies them into the
+    /// accumulator's VSR group then primes with `xxmtacc` (exactly the code
+    /// a compiler emits).
+    pub fn assemble_acc(&mut self, a: AccReg, rows: [VecReg; 4]) {
+        for (r, v) in rows.iter().enumerate() {
+            let dst = a.0 * 4 + r as u8;
+            self.emit(Inst::Xxlor { xt: dst, xa: v.0, xb: v.0 });
+        }
+        self.emit(Inst::XxMtAcc { acc: a.0 });
+    }
+
+    /// `__builtin_mma_disassemble_acc(&x, &A)` — *scatter* the accumulator
+    /// into four freshly allocated vectors (deprimes the accumulator).
+    pub fn disassemble_acc(&mut self, a: AccReg) -> Result<[VecReg; 4], BuiltinError> {
+        self.emit(Inst::XxMfAcc { acc: a.0 });
+        let mut out = [VecReg(0); 4];
+        for (r, slot) in out.iter_mut().enumerate() {
+            let v = self.alloc_vec()?;
+            let src = a.0 * 4 + r as u8;
+            self.emit(Inst::Xxlor { xt: v.0, xa: src, xb: src });
+            *slot = v;
+        }
+        Ok(out)
+    }
+
+    // ---- Table II: rank-k updates -------------------------------------------
+
+    /// Generic `__builtin_mma_xv…ger…(&A, x, y)` — all conventional forms.
+    pub fn ger(&mut self, kind: GerKind, op: AccOp, a: AccReg, x: VecReg, y: VecReg) -> Result<(), BuiltinError> {
+        if !op.valid_for(kind) {
+            return Err(BuiltinError::InvalidForm {
+                mnemonic: Ger::new(kind, op, a.0, x.0, y.0).mnemonic(),
+            });
+        }
+        self.emit(Inst::Ger(Ger::new(kind, op, a.0, x.0, y.0)));
+        Ok(())
+    }
+
+    /// Generic prefixed `__builtin_mma_pmxv…ger…(&A, x, y, masks…)`.
+    /// Masks are LSB-first (bit i = row/col/product i).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pm_ger(
+        &mut self,
+        kind: GerKind,
+        op: AccOp,
+        a: AccReg,
+        x: VecReg,
+        y: VecReg,
+        xmsk: u8,
+        ymsk: u8,
+        pmsk: u8,
+    ) -> Result<(), BuiltinError> {
+        if !op.valid_for(kind) {
+            return Err(BuiltinError::InvalidForm {
+                mnemonic: Ger::prefixed(kind, op, a.0, x.0, y.0, xmsk, ymsk, pmsk).mnemonic(),
+            });
+        }
+        self.emit(Inst::Ger(Ger::prefixed(kind, op, a.0, x.0, y.0, xmsk, ymsk, pmsk)));
+        Ok(())
+    }
+
+    /// `__builtin_mma_xvf64ger…(&A, Q, y)` — fp64 forms take a vector pair.
+    pub fn xvf64(&mut self, op: AccOp, a: AccReg, q: VecPair, y: VecReg) -> Result<(), BuiltinError> {
+        if !op.valid_for(GerKind::F64Ger) {
+            return Err(BuiltinError::InvalidForm {
+                mnemonic: Ger::new(GerKind::F64Ger, op, a.0, q.0, y.0).mnemonic(),
+            });
+        }
+        self.emit(Inst::Ger(Ger::new(GerKind::F64Ger, op, a.0, q.0, y.0)));
+        Ok(())
+    }
+
+    /// Prefixed fp64 form (x mask 4 bits, y mask 2 bits, no product mask).
+    pub fn pm_xvf64(
+        &mut self,
+        op: AccOp,
+        a: AccReg,
+        q: VecPair,
+        y: VecReg,
+        xmsk: u8,
+        ymsk: u8,
+    ) -> Result<(), BuiltinError> {
+        if !op.valid_for(GerKind::F64Ger) {
+            return Err(BuiltinError::InvalidForm {
+                mnemonic: Ger::new(GerKind::F64Ger, op, a.0, q.0, y.0).mnemonic(),
+            });
+        }
+        self.emit(Inst::Ger(Ger::prefixed(GerKind::F64Ger, op, a.0, q.0, y.0, xmsk, ymsk, 0xff)));
+        Ok(())
+    }
+
+    // ---- memory & control (the surrounding C code of Figures 5-9) -----------
+
+    /// `*((fp64_2*)p + d)` vector load.
+    pub fn lxv(&mut self, v: VecReg, base: Gpr, disp: i32) {
+        self.emit(Inst::Lxv { xt: v.0, ra: base.0, dq: disp });
+    }
+
+    /// `__vector_pair` load (32 bytes).
+    pub fn lxvp(&mut self, p: VecPair, base: Gpr, disp: i32) {
+        self.emit(Inst::Lxvp { xtp: p.0, ra: base.0, dq: disp });
+    }
+
+    pub fn stxv(&mut self, v: VecReg, base: Gpr, disp: i32) {
+        self.emit(Inst::Stxv { xs: v.0, ra: base.0, dq: disp });
+    }
+
+    /// Store an accumulator to memory — the `mma_store_acc` macro of
+    /// Figure 5: `disassemble_acc` + four 16-byte stores at
+    /// `base + 16*(disp_vecs + r)`. The accumulator is deprimed.
+    pub fn store_acc(&mut self, a: AccReg, base: Gpr, disp_vecs: i32) -> Result<(), BuiltinError> {
+        let rows = self.disassemble_acc(a)?;
+        for (r, v) in rows.iter().enumerate() {
+            self.stxv(*v, base, (disp_vecs + r as i32) * 16);
+            self.free_vec(*v);
+        }
+        Ok(())
+    }
+
+    /// `p += bytes` pointer bump.
+    pub fn addi(&mut self, rt: Gpr, ra: Gpr, si: i32) {
+        self.emit(Inst::Addi { rt: rt.0, ra: ra.0, si });
+    }
+
+    /// Load an immediate loop count.
+    pub fn li(&mut self, rt: Gpr, si: i32) {
+        self.emit(Inst::Addi { rt: rt.0, ra: 0, si });
+    }
+
+    pub fn mtctr(&mut self, rs: Gpr) {
+        self.emit(Inst::Mtctr { rs: rs.0 });
+    }
+
+    /// Close a CTR loop whose top is at `label` (from [`Self::label`]).
+    pub fn bdnz(&mut self, label: u32) {
+        let bd = label as i64 - self.byte_off as i64;
+        self.emit(Inst::Bdnz { bd: bd as i32 });
+    }
+
+    /// Finish the kernel: appends `blr` and returns the instruction stream.
+    pub fn finish(mut self) -> Vec<Inst> {
+        self.emit(Inst::Blr);
+        self.insts
+    }
+
+    /// Instruction stream so far (for inspection in tests).
+    pub fn insts(&self) -> &[Inst] {
+        &self.insts
+    }
+}
+
+/// Names of all Table II rank-k builtins and the (kind, op, prefixed) they
+/// map to — used by the Table II coverage test and the docs.
+pub fn table2_builtins() -> Vec<(String, GerKind, AccOp, bool)> {
+    let ops = [AccOp::New, AccOp::NewS, AccOp::PP, AccOp::NP, AccOp::PN, AccOp::NN, AccOp::SPP];
+    let mut out = Vec::new();
+    for kind in GerKind::ALL {
+        for op in ops {
+            if !op.valid_for(kind) {
+                continue;
+            }
+            for prefixed in [false, true] {
+                let pm = if prefixed { "pm" } else { "" };
+                let name = format!("__builtin_mma_{pm}{}{}", kind.mnemonic(), op.suffix());
+                out.push((name, kind, op, prefixed));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::regs::Vsr;
+    use crate::isa::Machine;
+
+    #[test]
+    fn table2_coverage_every_builtin_emits_its_instruction() {
+        // 29 conventional + 29 prefixed rank-k builtins
+        let builtins = table2_builtins();
+        assert_eq!(builtins.len(), 58);
+        for (name, kind, op, prefixed) in builtins {
+            let mut b = KernelBuilder::new();
+            let a = b.alloc_acc().unwrap();
+            if kind == GerKind::F64Ger {
+                let q = b.alloc_pair().unwrap();
+                let y = b.alloc_vec().unwrap();
+                if prefixed {
+                    b.pm_xvf64(op, a, q, y, 0xf, 0x3).unwrap();
+                } else {
+                    b.xvf64(op, a, q, y).unwrap();
+                }
+            } else {
+                let x = b.alloc_vec().unwrap();
+                let y = b.alloc_vec().unwrap();
+                if prefixed {
+                    b.pm_ger(kind, op, a, x, y, 0xf, 0xf, 0xff).unwrap();
+                } else {
+                    b.ger(kind, op, a, x, y).unwrap();
+                }
+            }
+            let insts = b.insts();
+            assert_eq!(insts.len(), 1, "{name}");
+            let Inst::Ger(g) = insts[0] else { panic!("{name}") };
+            assert_eq!(g.kind, kind, "{name}");
+            assert_eq!(g.op, op, "{name}");
+            assert_eq!(g.prefixed, prefixed, "{name}");
+            // builtin name corresponds to the instruction mnemonic
+            assert_eq!(name, format!("__builtin_mma_{}", g.mnemonic()));
+        }
+    }
+
+    #[test]
+    fn accumulator_pressure_guideline3() {
+        let mut b = KernelBuilder::new();
+        let accs = b.alloc_all_accs().unwrap();
+        assert_eq!(b.max_live_accs, 8);
+        assert_eq!(b.alloc_acc(), Err(BuiltinError::AccumulatorPressure));
+        b.free_acc(accs[3]);
+        let again = b.alloc_acc().unwrap();
+        assert_eq!(again.index(), 3, "freed accumulator is reused");
+    }
+
+    #[test]
+    fn pair_allocation_is_even_aligned() {
+        let mut b = KernelBuilder::new();
+        let _v = b.alloc_vec().unwrap(); // takes vs32
+        let p = b.alloc_pair().unwrap();
+        assert_eq!(p.index() % 2, 0);
+        assert!(p.index() >= 34);
+    }
+
+    #[test]
+    fn assemble_disassemble_round_trip_on_machine() {
+        // assemble an accumulator from 4 arbitrary vectors, then
+        // disassemble and store: gather -> scatter must be the identity
+        let mut b = KernelBuilder::new();
+        let a = b.alloc_acc().unwrap();
+        let rows: Vec<VecReg> = (0..4).map(|_| b.alloc_vec().unwrap()).collect();
+        let base = Gpr(3);
+        for (r, v) in rows.iter().enumerate() {
+            b.lxv(*v, base, 16 * r as i32);
+        }
+        b.assemble_acc(a, [rows[0], rows[1], rows[2], rows[3]]);
+        b.store_acc(a, base, 8).unwrap();
+        let prog = b.finish();
+
+        let mut m = Machine::new(4096);
+        let src: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        m.write_f32s(0, &src);
+        m.gpr[3] = 0;
+        m.run(&prog, 1_000).unwrap();
+        assert_eq!(m.read_f32s(128, 16), src, "gather->scatter is the identity");
+        assert!(!m.regs.primed[0], "store_acc deprimes");
+    }
+
+    #[test]
+    fn assemble_acc_differs_from_xxmtacc() {
+        // assemble_acc works from arbitrary vectors (vs32+), xxmtacc only
+        // from the accumulator's own group — the paper's §IV distinction.
+        let mut b = KernelBuilder::new();
+        let a = b.alloc_acc().unwrap();
+        let v = b.alloc_vec().unwrap();
+        b.assemble_acc(a, [v, v, v, v]);
+        let prog = b.finish();
+        // the emitted stream copies into the group then primes
+        assert!(matches!(prog[0], Inst::Xxlor { xt: 0, xa: 32, xb: 32 }));
+        assert!(matches!(prog[4], Inst::XxMtAcc { acc: 0 }));
+
+        let mut m = Machine::new(64);
+        m.regs.vsr[32] = Vsr::from_f32x4([3.0; 4]);
+        m.run(&prog, 100).unwrap();
+        assert_eq!(m.regs.acc[0].to_f32_4x4(), [[3.0; 4]; 4]);
+    }
+
+    #[test]
+    fn invalid_builtin_rejected() {
+        let mut b = KernelBuilder::new();
+        let a = b.alloc_acc().unwrap();
+        let x = b.alloc_vec().unwrap();
+        let y = b.alloc_vec().unwrap();
+        assert!(matches!(
+            b.ger(GerKind::F32Ger, AccOp::SPP, a, x, y),
+            Err(BuiltinError::InvalidForm { .. })
+        ));
+        let q = b.alloc_pair().unwrap();
+        assert!(b.xvf64(AccOp::SPP, a, q, y).is_err());
+    }
+
+    #[test]
+    fn label_accounts_for_prefixed_sizes() {
+        let mut b = KernelBuilder::new();
+        let a = b.alloc_acc().unwrap();
+        let x = b.alloc_vec().unwrap();
+        let y = b.alloc_vec().unwrap();
+        b.pm_ger(GerKind::F32Ger, AccOp::New, a, x, y, 0xf, 0xf, 0xff).unwrap(); // 8 bytes
+        assert_eq!(b.label(), 8);
+        b.ger(GerKind::F32Ger, AccOp::PP, a, x, y).unwrap(); // 4 bytes
+        assert_eq!(b.label(), 12);
+    }
+
+    #[test]
+    fn ctr_loop_via_builder_runs() {
+        let mut b = KernelBuilder::new();
+        let a = b.alloc_acc().unwrap();
+        let x = b.alloc_vec().unwrap();
+        let y = b.alloc_vec().unwrap();
+        let (px, n) = (Gpr(4), Gpr(9));
+        b.lxv(x, px, 0);
+        b.lxv(y, px, 16);
+        b.li(n, 7);
+        b.mtctr(n);
+        b.xxsetaccz(a);
+        let top = b.label();
+        b.ger(GerKind::F32Ger, AccOp::PP, a, x, y).unwrap();
+        b.bdnz(top);
+        b.store_acc(a, px, 2).unwrap();
+        let prog = b.finish();
+
+        let mut m = Machine::new(256);
+        m.write_f32s(0, &[2.0; 8]);
+        m.run(&prog, 1000).unwrap();
+        assert_eq!(m.read_f32s(32, 4), vec![7.0 * 4.0; 4]);
+    }
+}

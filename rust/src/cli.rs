@@ -1,0 +1,252 @@
+//! Declarative command-line parsing substrate (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with typed accessors and defaults, positional arguments, and generated
+//! usage text. Used by `power-mma` (the main binary) and the examples.
+
+use std::collections::HashMap;
+
+/// Parse error with the usage text attached.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative command: options + positionals + usage rendering.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// `--key <value>` option with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(|s| s.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec { name: name.into(), help: help.into(), default: None, is_flag: true });
+        self
+    }
+
+    /// Required positional argument.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nusage: {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [options]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\narguments:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\noptions:\n");
+            for o in &self.opts {
+                let head = if o.is_flag { format!("--{}", o.name) } else { format!("--{} <v>", o.name) };
+                let dflt = o.default.as_ref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {head:<24} {}{}\n", o.help, dflt));
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: HashMap<String, String> = HashMap::new();
+        let mut flags: HashMap<String, bool> = HashMap::new();
+        let mut pos: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let Some(spec) = self.opts.iter().find(|o| o.name == key) else {
+                    return Err(CliError(format!("unknown option --{key}\n\n{}", self.usage())));
+                };
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("option --{key} requires a value")))?
+                            .clone(),
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(arg.clone());
+            }
+        }
+        if pos.len() != self.positionals.len() {
+            return Err(CliError(format!(
+                "expected {} positional argument(s), got {}\n\n{}",
+                self.positionals.len(),
+                pos.len(),
+                self.usage()
+            )));
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok(Matches { values, flags, positionals: pos })
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Matches {
+    values: HashMap<String, String>,
+    flags: HashMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name).parse().map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name).parse().map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name).parse().map_err(|_| CliError(format!("--{name} expects a number")))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positional(&self, i: usize) -> &str {
+        &self.positionals[i]
+    }
+
+    /// Comma-separated list of integers (`--sizes 128,256,512`).
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.get(name)
+            .split(',')
+            .map(|t| t.trim().parse().map_err(|_| CliError(format!("--{name}: bad integer '{t}'"))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("sim", "run a simulation")
+            .opt("size", Some("128"), "problem size")
+            .opt("machine", Some("p10-mma"), "machine config")
+            .opt("sizes", Some("1,2"), "sweep list")
+            .flag("verbose", "chatty output")
+            .positional("kernel", "kernel name")
+    }
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = cmd().parse(&v(&["dgemm"])).unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 128);
+        assert_eq!(m.get("machine"), "p10-mma");
+        assert!(!m.flag("verbose"));
+        assert_eq!(m.positional(0), "dgemm");
+
+        let m = cmd().parse(&v(&["--size", "512", "--verbose", "sconv"])).unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 512);
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional(0), "sconv");
+    }
+
+    #[test]
+    fn equals_syntax_and_lists() {
+        let m = cmd().parse(&v(&["--sizes=128,256,512", "k"])).unwrap();
+        assert_eq!(m.get_usize_list("sizes").unwrap(), vec![128, 256, 512]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&v(&["--bogus", "x", "k"])).is_err());
+        assert!(cmd().parse(&v(&["--size"])).is_err());
+        assert!(cmd().parse(&v(&[])).is_err()); // missing positional
+        assert!(cmd().parse(&v(&["--verbose=1", "k"])).is_err());
+        let err = cmd().parse(&v(&["--help"])).unwrap_err();
+        assert!(err.0.contains("usage:"));
+    }
+
+    #[test]
+    fn usage_lists_everything() {
+        let u = cmd().usage();
+        assert!(u.contains("--size"));
+        assert!(u.contains("--verbose"));
+        assert!(u.contains("<kernel>"));
+        assert!(u.contains("[default: 128]"));
+    }
+}

@@ -1,0 +1,556 @@
+//! The serving coordinator — the §I "data-in-flight" scenario: "a system
+//! processing data-in-flight is likely to be evaluating multiple distinct
+//! models at once … Agility and flexibility of switching models, while
+//! performing well, are important."
+//!
+//! Rust owns the event loop (and everything else on the request path —
+//! python ran once, at AOT time):
+//!
+//! * a **router** dispatches each request to its model family (tabular
+//!   classification / GEMM / convolution);
+//! * a **dynamic batcher** coalesces classification requests up to the
+//!   compiled batch size or a latency deadline, pads the tail, executes
+//!   one batched MLP inference, and scatters the rows back to callers;
+//! * **backpressure** comes from the bounded submission queue;
+//! * the PJRT executables run on a dedicated engine thread (they are
+//!   thread-confined FFI handles; the engine is constructed *inside* the
+//!   thread via a factory, so no `Send` requirement leaks).
+
+use crate::metrics::{Counter, Histogram};
+use crate::rt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Abstraction over the PJRT runtime so the coordinator is unit-testable
+/// without compiled artifacts.
+pub trait InferenceEngine {
+    /// Execute `model` on flat f32 inputs, returning the flat output.
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>>;
+}
+
+impl InferenceEngine for crate::runtime::Runtime {
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+        self.execute(model, inputs)
+    }
+}
+
+/// A request payload: one of the model families served.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Tabular features for the batched MLP classifier.
+    Classify { features: Vec<f32> },
+    /// A 128×128 GEMM tile (`model` = `gemm_f32` or `gemm_bf16`).
+    Gemm { model: String, x: Vec<f32>, y: Vec<f32> },
+    /// 8 filter banks over a 3-channel image (the SCONV service).
+    Conv { filters: Vec<f32>, image: Vec<f32> },
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// Submit → reply latency.
+    pub latency: Duration,
+}
+
+struct Request {
+    id: u64,
+    payload: Payload,
+    submitted: Instant,
+    reply: rt::Sender<Response>,
+}
+
+enum Msg {
+    Req(Box<Request>),
+    Shutdown,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Compiled MLP batch size (must match an artifact, e.g. `mlp_b32`).
+    pub batch_size: usize,
+    /// Maximum time the batcher holds a partial batch.
+    pub max_delay: Duration,
+    /// Bounded submission queue depth (backpressure).
+    pub queue_cap: usize,
+    /// MLP feature/class dims (must match `python/compile/model.py`).
+    pub features: usize,
+    pub classes: usize,
+    pub hidden: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batch_size: 32,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 1024,
+            features: 64,
+            classes: 32,
+            hidden: 128,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn mlp_model(&self) -> String {
+        format!("mlp_b{}", self.batch_size)
+    }
+}
+
+/// Shared serving statistics.
+#[derive(Default)]
+pub struct CoordStats {
+    pub received: Counter,
+    pub completed: Counter,
+    pub failed: Counter,
+    pub rejected: Counter,
+    pub batches: Counter,
+    /// Sum of batch occupancies (completed classify requests).
+    pub batched_requests: Counter,
+    pub latency: Histogram,
+}
+
+impl CoordStats {
+    /// Mean rows per executed MLP batch.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.get() as f64 / b as f64
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: rt::Sender<Msg>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    pub stats: Arc<CoordStats>,
+}
+
+/// The MLP weights the service hosts. Deterministic (same formula as the
+/// AOT expected-output fixtures) so end-to-end numerics are checkable.
+pub struct MlpWeights {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl MlpWeights {
+    /// The weights `aot.py` baked expectations for (salts 2..=5).
+    pub fn deterministic(cfg: &CoordinatorConfig) -> Self {
+        use crate::runtime::det_input;
+        MlpWeights {
+            w1: det_input(cfg.features * cfg.hidden, 2),
+            b1: det_input(cfg.hidden, 3),
+            w2: det_input(cfg.hidden * cfg.classes, 4),
+            b2: det_input(cfg.classes, 5),
+        }
+    }
+}
+
+impl Coordinator {
+    /// Start the coordinator. `engine_factory` runs *on the engine thread*
+    /// (PJRT handles never cross threads).
+    pub fn start<E, F>(cfg: CoordinatorConfig, weights: MlpWeights, engine_factory: F) -> Self
+    where
+        E: InferenceEngine,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let (tx, rx) = rt::bounded::<Msg>(cfg.queue_cap);
+        let stats = Arc::new(CoordStats::default());
+        let stats2 = stats.clone();
+        let engine_thread = std::thread::Builder::new()
+            .name("mma-engine".into())
+            .spawn(move || engine_loop(cfg, weights, engine_factory, rx, stats2))
+            .expect("spawn engine thread");
+        Coordinator {
+            tx,
+            engine_thread: Some(engine_thread),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            stats,
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response. Fails fast
+    /// (`Err(id)`) when the queue is full — the backpressure signal.
+    pub fn try_submit(&self, payload: Payload) -> Result<(u64, rt::Receiver<Response>), u64> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = rt::bounded(1);
+        let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
+        self.stats.received.inc();
+        match self.tx.try_send(Msg::Req(req)) {
+            Ok(()) => Ok((id, rrx)),
+            Err(_) => {
+                self.stats.rejected.inc();
+                Err(id)
+            }
+        }
+    }
+
+    /// Blocking submit (waits for queue space).
+    pub fn submit(&self, payload: Payload) -> (u64, rt::Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = rt::bounded(1);
+        let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
+        self.stats.received.inc();
+        self.tx.send(Msg::Req(req)).ok();
+        (id, rrx)
+    }
+
+    /// Drain and stop the engine thread.
+    pub fn shutdown(mut self) -> Arc<CoordStats> {
+        self.tx.send(Msg::Shutdown).ok();
+        if let Some(h) = self.engine_thread.take() {
+            h.join().expect("engine thread panicked");
+        }
+        self.stats.clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if self.engine_thread.is_some() {
+            self.tx.send(Msg::Shutdown).ok();
+            if let Some(h) = self.engine_thread.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn engine_loop<E, F>(
+    cfg: CoordinatorConfig,
+    weights: MlpWeights,
+    factory: F,
+    rx: rt::Receiver<Msg>,
+    stats: Arc<CoordStats>,
+) where
+    E: InferenceEngine,
+    F: FnOnce() -> anyhow::Result<E>,
+{
+    let mut engine = match factory() {
+        Ok(e) => e,
+        Err(e) => {
+            // fail every request with the construction error
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Req(req) => {
+                        stats.failed.inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!("engine init failed: {e}")),
+                            latency: req.submitted.elapsed(),
+                        });
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mlp_model = cfg.mlp_model();
+    let mut pending: Vec<Box<Request>> = Vec::with_capacity(cfg.batch_size);
+
+    let flush = |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats| {
+        if pending.is_empty() {
+            return;
+        }
+        let rows = pending.len();
+        // gather + pad to the compiled batch size
+        let mut xbatch = vec![0f32; cfg.batch_size * cfg.features];
+        for (r, req) in pending.iter().enumerate() {
+            if let Payload::Classify { features } = &req.payload {
+                xbatch[r * cfg.features..(r + 1) * cfg.features].copy_from_slice(features);
+            }
+        }
+        let result = engine.run(
+            &mlp_model,
+            &[&xbatch, &weights.w1, &weights.b1, &weights.w2, &weights.b2],
+        );
+        stats.batches.inc();
+        stats.batched_requests.add(rows as u64);
+        match result {
+            Ok(out) => {
+                for (r, req) in pending.drain(..).enumerate() {
+                    let row = out[r * cfg.classes..(r + 1) * cfg.classes].to_vec();
+                    let latency = req.submitted.elapsed();
+                    stats.completed.inc();
+                    stats.latency.record(latency);
+                    let _ = req.reply.send(Response { id: req.id, result: Ok(row), latency });
+                }
+            }
+            Err(e) => {
+                for req in pending.drain(..) {
+                    stats.failed.inc();
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        result: Err(format!("batch failed: {e}")),
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+        }
+    };
+
+    loop {
+        // deadline of the oldest pending classification, if any
+        let wait = if let Some(first) = pending.first() {
+            cfg.max_delay.saturating_sub(first.submitted.elapsed())
+        } else {
+            Duration::from_millis(50)
+        };
+        match rx.recv_timeout(wait) {
+            Some(Msg::Shutdown) => {
+                flush(&mut engine, &mut pending, &stats);
+                break;
+            }
+            Some(Msg::Req(req)) => match &req.payload {
+                Payload::Classify { features } => {
+                    if features.len() != cfg.features {
+                        stats.failed.inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!(
+                                "expected {} features, got {}",
+                                cfg.features,
+                                features.len()
+                            )),
+                            latency: req.submitted.elapsed(),
+                        });
+                        continue;
+                    }
+                    pending.push(req);
+                    if pending.len() >= cfg.batch_size {
+                        flush(&mut engine, &mut pending, &stats);
+                    }
+                }
+                Payload::Gemm { model, x, y } => {
+                    let result =
+                        engine.run(model, &[x, y]).map_err(|e| format!("{model}: {e}"));
+                    let latency = req.submitted.elapsed();
+                    match &result {
+                        Ok(_) => {
+                            stats.completed.inc();
+                            stats.latency.record(latency);
+                        }
+                        Err(_) => {
+                            stats.failed.inc();
+                        }
+                    }
+                    let _ = req.reply.send(Response { id: req.id, result, latency });
+                }
+                Payload::Conv { filters, image } => {
+                    let result = engine
+                        .run("conv2d_k3", &[filters, image])
+                        .map_err(|e| format!("conv2d_k3: {e}"));
+                    let latency = req.submitted.elapsed();
+                    match &result {
+                        Ok(_) => {
+                            stats.completed.inc();
+                            stats.latency.record(latency);
+                        }
+                        Err(_) => {
+                            stats.failed.inc();
+                        }
+                    }
+                    let _ = req.reply.send(Response { id: req.id, result, latency });
+                }
+            },
+            None => {
+                // deadline expired (or idle): flush partial batch
+                flush(&mut engine, &mut pending, &stats);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    /// Mock engine: records calls; MLP output row r = features[0] of row r
+    /// repeated over classes; gemm returns x unchanged; conv errors.
+    struct MockEngine {
+        calls: Arc<Mutex<Vec<(String, usize)>>>,
+        fail_on: Option<&'static str>,
+        cfg: CoordinatorConfig,
+    }
+
+    impl InferenceEngine for MockEngine {
+        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+            self.calls.lock().unwrap().push((model.to_string(), inputs.len()));
+            if Some(model) == self.fail_on.map(|s| s) || self.fail_on == Some("*") {
+                anyhow::bail!("mock failure");
+            }
+            if model.starts_with("mlp") {
+                let x = inputs[0];
+                let (b, f, c) = (self.cfg.batch_size, self.cfg.features, self.cfg.classes);
+                let mut out = vec![0f32; b * c];
+                for r in 0..b {
+                    for j in 0..c {
+                        out[r * c + j] = x[r * f] + j as f32;
+                    }
+                }
+                Ok(out)
+            } else {
+                Ok(inputs[0].to_vec())
+            }
+        }
+    }
+
+    fn start_mock(
+        cfg: CoordinatorConfig,
+        fail_on: Option<&'static str>,
+    ) -> (Coordinator, Arc<Mutex<Vec<(String, usize)>>>) {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let calls2 = calls.clone();
+        let weights = MlpWeights::deterministic(&cfg);
+        let cfg2 = cfg.clone();
+        let coord = Coordinator::start(cfg, weights, move || {
+            Ok(MockEngine { calls: calls2, fail_on, cfg: cfg2 })
+        });
+        (coord, calls)
+    }
+
+    #[test]
+    fn full_batch_executes_once() {
+        let cfg = CoordinatorConfig { batch_size: 4, max_delay: Duration::from_secs(5), ..Default::default() };
+        let (coord, calls) = start_mock(cfg.clone(), None);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let mut f = vec![0f32; cfg.features];
+                f[0] = i as f32 * 10.0;
+                coord.submit(Payload::Classify { features: f }).1
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            let row = resp.result.unwrap();
+            assert_eq!(row.len(), cfg.classes);
+            assert_eq!(row[0], i as f32 * 10.0, "row routed back to its requester");
+            assert_eq!(row[5], i as f32 * 10.0 + 5.0);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.batches.get(), 1, "one full batch");
+        assert_eq!(stats.completed.get(), 4);
+        assert_eq!(calls.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let cfg = CoordinatorConfig { batch_size: 8, max_delay: Duration::from_millis(10), ..Default::default() };
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let (_, rx) = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] });
+        let t0 = Instant::now();
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok());
+        let waited = t0.elapsed();
+        assert!(waited < Duration::from_millis(500), "deadline flush took {waited:?}");
+        let stats = coord.shutdown();
+        assert_eq!(stats.mean_batch_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        check("router loses nothing", 5, |rng: &mut Rng| {
+            let cfg = CoordinatorConfig {
+                batch_size: 4,
+                max_delay: Duration::from_millis(1),
+                ..Default::default()
+            };
+            let n = rng.range(1, 40);
+            let (coord, _) = start_mock(cfg.clone(), None);
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                let mut f = vec![0f32; cfg.features];
+                f[0] = i as f32;
+                rxs.push((i, coord.submit(Payload::Classify { features: f }).1));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for (i, rx) in rxs {
+                let resp = rx.recv().unwrap();
+                let row = resp.result.unwrap();
+                assert_eq!(row[0] as usize, i, "response routed to wrong requester");
+                assert!(seen.insert(i), "duplicate response for {i}");
+            }
+            let stats = coord.shutdown();
+            assert_eq!(stats.completed.get(), n as u64);
+            assert_eq!(stats.failed.get(), 0);
+        });
+    }
+
+    #[test]
+    fn gemm_and_conv_route_directly() {
+        let cfg = CoordinatorConfig::default();
+        let (coord, calls) = start_mock(cfg, None);
+        let (_, rx) = coord.submit(Payload::Gemm {
+            model: "gemm_f32".into(),
+            x: vec![1.0, 2.0],
+            y: vec![3.0],
+        });
+        assert_eq!(rx.recv().unwrap().result.unwrap(), vec![1.0, 2.0]);
+        let (_, rx) = coord.submit(Payload::Conv { filters: vec![7.0], image: vec![0.0] });
+        assert_eq!(rx.recv().unwrap().result.unwrap(), vec![7.0]);
+        coord.shutdown();
+        let calls = calls.lock().unwrap();
+        assert_eq!(calls[0].0, "gemm_f32");
+        assert_eq!(calls[1].0, "conv2d_k3");
+    }
+
+    #[test]
+    fn engine_failure_fails_whole_batch_gracefully() {
+        let cfg = CoordinatorConfig { batch_size: 2, max_delay: Duration::from_millis(1), ..Default::default() };
+        let (coord, _) = start_mock(cfg.clone(), Some("*"));
+        let rx1 = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] }).1;
+        let rx2 = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] }).1;
+        assert!(rx1.recv().unwrap().result.is_err());
+        assert!(rx2.recv().unwrap().result.is_err());
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed.get(), 2);
+        assert_eq!(stats.completed.get(), 0);
+    }
+
+    #[test]
+    fn malformed_request_rejected_without_poisoning_batch() {
+        let cfg = CoordinatorConfig { batch_size: 2, max_delay: Duration::from_millis(5), ..Default::default() };
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let bad = coord.submit(Payload::Classify { features: vec![1.0; 3] }).1;
+        let good = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] }).1;
+        assert!(bad.recv().unwrap().result.is_err());
+        assert!(good.recv().unwrap().result.is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn engine_init_failure_fails_requests() {
+        let cfg = CoordinatorConfig::default();
+        let weights = MlpWeights::deterministic(&cfg);
+        let coord = Coordinator::start::<MockEngine, _>(cfg.clone(), weights, || {
+            anyhow::bail!("no artifacts")
+        });
+        let (_, rx) = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] });
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.unwrap_err().contains("engine init failed"));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let cfg = CoordinatorConfig { batch_size: 100, max_delay: Duration::from_secs(60), ..Default::default() };
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let rx = coord.submit(Payload::Classify { features: vec![2.0; cfg.features] }).1;
+        let stats = coord.shutdown();
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], 2.0);
+        assert_eq!(stats.completed.get(), 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Machine configurations: structural parameters of the POWER9 and POWER10
+//! core backends as described in the paper (§I: "four vector pipelines per
+//! core" on POWER10 vs two on POWER9; §III: two MMA pipes fed from slices
+//! 2/3, ACC-resident accumulators, bus transfer costs) plus cache and
+//! energy parameters.
+//!
+//! Cycle parameters are frequency-independent (the paper reports
+//! flops/**cycle** and runs all machines "at constant frequency").
+
+/// Structural + timing + energy description of one core configuration.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    pub name: &'static str,
+    /// 128-bit vector execution pipes (VSU): POWER9 = 2, POWER10 = 4 (§I).
+    pub vsu_pipes: u32,
+    /// Matrix Math Engine pipes (MU2/MU3, Figure 2): POWER10 = 2, else 0.
+    pub mma_pipes: u32,
+    /// Load/store ports.
+    pub lsu_ports: u32,
+    /// Fixed-point units (addi etc.) — never binding for these kernels.
+    pub fxu_units: u32,
+    /// Front-end dispatch width (instructions/cycle).
+    pub dispatch_width: u32,
+    /// FP FMA result latency (cycles) — the vector pipeline depth.
+    pub fma_latency: u32,
+    /// Permute/splat/logical latency.
+    pub perm_latency: u32,
+    /// ger issue-to-accumulate latency on the *same* accumulator.
+    /// "The issue-to-issue latency for the matrix math facility
+    /// instructions is reduced ... since the accumulators are already in
+    /// the functional unit" (§III point 5).
+    pub ger_acc_latency: u32,
+    /// VSR-group → accumulator transfer (`xxmtacc`): 2 cycles (§III).
+    pub mtacc_cycles: u32,
+    /// Accumulator → VSR-group transfer (`xxmfacc`): 4 cycles (§III).
+    pub mfacc_cycles: u32,
+    /// Fixed-point result latency.
+    pub fx_latency: u32,
+    // ---- memory hierarchy ----
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+    pub line_bytes: usize,
+    pub l1_latency: u32,
+    pub l2_latency: u32,
+    pub mem_latency: u32,
+    // ---- energy model (arbitrary energy units; see power.rs) ----
+    /// Per-instruction front-end (fetch/decode/dispatch) energy.
+    pub e_frontend: f64,
+    /// Per-µop VSU energy (FMA-class; permutes cost half).
+    pub e_vsu_op: f64,
+    /// Per-ger MME energy — per 128 bits of datapath activity the MME grid
+    /// switches far less than an equivalent chain of vector ops (§III:
+    /// "the accumulator data stays local to the matrix math engine").
+    pub e_mma_op: f64,
+    /// Per-LSU-access energy.
+    pub e_lsu_op: f64,
+    /// Per-fixed-point-op energy.
+    pub e_fx_op: f64,
+    /// Static (leakage + clock-grid) power per cycle: core without MME.
+    pub p_static_core: f64,
+    /// Static power per cycle of the MME (0 when power-gated).
+    pub p_static_mme: f64,
+    /// Technology/global scale factor: POWER9's older silicon draws more
+    /// per switch (§VII: P10 delivers 5x perf "at 24% less power ...
+    /// almost 7x reduction on energy per computation").
+    pub tech_scale: f64,
+}
+
+impl MachineConfig {
+    /// The POWER9 core (SMT4 slice pair, 2×128-bit VSU pipes, no MME);
+    /// older 14 nm technology (`tech_scale` > 1).
+    pub fn power9() -> Self {
+        MachineConfig {
+            name: "POWER9",
+            vsu_pipes: 2,
+            mma_pipes: 0,
+            lsu_ports: 2,
+            fxu_units: 4,
+            dispatch_width: 6,
+            fma_latency: 7,
+            perm_latency: 3,
+            ger_acc_latency: 4,
+            mtacc_cycles: 2,
+            mfacc_cycles: 4,
+            fx_latency: 1,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 512 * 1024,
+            line_bytes: 128,
+            l1_latency: 4,
+            l2_latency: 13,
+            mem_latency: 140,
+            e_frontend: 0.22,
+            e_vsu_op: 1.0,
+            e_mma_op: 0.0,
+            e_lsu_op: 0.55,
+            e_fx_op: 0.12,
+            p_static_core: 7.0,
+            p_static_mme: 0.0,
+            tech_scale: 1.55,
+        }
+    }
+
+    /// The POWER10 core: 4 VSU pipes, the Matrix Math Engine (2 pipes,
+    /// Figure 2), 7 nm technology.
+    pub fn power10() -> Self {
+        MachineConfig {
+            name: "POWER10",
+            vsu_pipes: 4,
+            mma_pipes: 2,
+            lsu_ports: 4,
+            fxu_units: 4,
+            dispatch_width: 8,
+            fma_latency: 6,
+            perm_latency: 3,
+            ger_acc_latency: 4,
+            mtacc_cycles: 2,
+            mfacc_cycles: 4,
+            fx_latency: 1,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 2 * 1024 * 1024,
+            line_bytes: 128,
+            l1_latency: 4,
+            l2_latency: 13,
+            mem_latency: 120,
+            e_frontend: 0.20,
+            e_vsu_op: 0.80,
+            // one ger = up to 16 FMAs but switches one 2-D grid locally and
+            // moves no accumulator data over the result buses: per-flop
+            // energy far below the vector datapath (§III/§VII). Calibrated
+            // so the Figure 12 ratios hold: MMA ≈ +8% total power vs VSX
+            // on POWER10, ≈ −24% vs POWER9, ≈ 7x less energy/flop.
+            e_mma_op: 1.7,
+            e_lsu_op: 0.45,
+            e_fx_op: 0.10,
+            p_static_core: 6.2,
+            p_static_mme: 0.85,
+            tech_scale: 1.0,
+        }
+    }
+
+    /// Peak fp64 flops/cycle of the *vector* datapath (2 lanes × FMA).
+    pub fn vsx_peak_f64_flops_per_cycle(&self) -> f64 {
+        f64::from(self.vsu_pipes) * 2.0 * 2.0
+    }
+
+    /// Peak fp64 flops/cycle of the MME (2 pipes × 4×2 accumulator × FMA).
+    pub fn mma_peak_f64_flops_per_cycle(&self) -> f64 {
+        f64::from(self.mma_pipes) * 8.0 * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_rates() {
+        // §VI: POWER9 peak 8 flops/cycle, POWER10 vector peak 16,
+        // POWER10 MMA peak 32
+        assert_eq!(MachineConfig::power9().vsx_peak_f64_flops_per_cycle(), 8.0);
+        assert_eq!(MachineConfig::power10().vsx_peak_f64_flops_per_cycle(), 16.0);
+        assert_eq!(MachineConfig::power10().mma_peak_f64_flops_per_cycle(), 32.0);
+        assert_eq!(MachineConfig::power9().mma_peak_f64_flops_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn pipe_counts_match_paper() {
+        let p9 = MachineConfig::power9();
+        let p10 = MachineConfig::power10();
+        assert_eq!(p9.vsu_pipes, 2, "§VI: two vector pipes in POWER9");
+        assert_eq!(p10.vsu_pipes, 4, "§I: four vector pipelines per core");
+        assert_eq!(p10.mma_pipes, 2, "§III: two execution pipelines MU2/MU3");
+        // §III bus costs
+        assert_eq!(p10.mtacc_cycles, 2);
+        assert_eq!(p10.mfacc_cycles, 4);
+    }
+}

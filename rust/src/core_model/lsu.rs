@@ -1,0 +1,145 @@
+//! Load/store unit memory-latency model: a two-level cache with a
+//! stream prefetcher (POWER cores prefetch ascending streams aggressively,
+//! which is what lets the paper's kernels stream X/Y panels at L1 latency).
+
+use crate::core_model::config::MachineConfig;
+
+const NUM_STREAMS: usize = 8;
+
+/// Per-access latency model. Tags only (no data): direct-mapped L1 and
+/// 8-way-ish hashed L2, plus an ascending-stream detector that services
+/// detected streams at L1 latency.
+pub struct CacheModel {
+    line: usize,
+    l1_sets: usize,
+    l2_sets: usize,
+    l1_tags: Vec<u64>,
+    l2_tags: Vec<u64>,
+    l1_latency: u32,
+    l2_latency: u32,
+    mem_latency: u32,
+    streams: [u64; NUM_STREAMS], // next expected line address per stream
+    next_stream: usize,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub misses: u64,
+    pub prefetched: u64,
+}
+
+impl CacheModel {
+    pub fn new(cfg: &MachineConfig) -> Self {
+        let l1_sets = cfg.l1_bytes / cfg.line_bytes;
+        let l2_sets = cfg.l2_bytes / cfg.line_bytes;
+        CacheModel {
+            line: cfg.line_bytes,
+            l1_sets,
+            l2_sets,
+            l1_tags: vec![u64::MAX; l1_sets],
+            l2_tags: vec![u64::MAX; l2_sets],
+            l1_latency: cfg.l1_latency,
+            l2_latency: cfg.l2_latency,
+            mem_latency: cfg.mem_latency,
+            streams: [u64::MAX; NUM_STREAMS],
+            next_stream: 0,
+            l1_hits: 0,
+            l2_hits: 0,
+            misses: 0,
+            prefetched: 0,
+        }
+    }
+
+    /// Latency (cycles) of an access at byte address `addr`.
+    pub fn access(&mut self, addr: u64) -> u32 {
+        let line_addr = addr / self.line as u64;
+        let l1_idx = (line_addr as usize) % self.l1_sets;
+        let l2_idx = (line_addr as usize) % self.l2_sets;
+
+        // stream detection: an access to the expected next line of a
+        // tracked stream is treated as prefetched (L1 latency) and advances
+        // the stream
+        let mut streamed = false;
+        for s in self.streams.iter_mut() {
+            if *s == line_addr {
+                *s = line_addr + 1;
+                streamed = true;
+                break;
+            }
+        }
+
+        let lat = if self.l1_tags[l1_idx] == line_addr {
+            self.l1_hits += 1;
+            self.l1_latency
+        } else if streamed {
+            self.prefetched += 1;
+            self.l1_latency
+        } else if self.l2_tags[l2_idx] == line_addr {
+            self.l2_hits += 1;
+            self.l2_latency
+        } else {
+            self.misses += 1;
+            // allocate a new stream on a demand miss
+            self.streams[self.next_stream] = line_addr + 1;
+            self.next_stream = (self.next_stream + 1) % NUM_STREAMS;
+            self.mem_latency
+        };
+        self.l1_tags[l1_idx] = line_addr;
+        self.l2_tags[l2_idx] = line_addr;
+        lat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CacheModel {
+        CacheModel::new(&MachineConfig::power10())
+    }
+
+    #[test]
+    fn repeated_access_hits_l1() {
+        let mut c = model();
+        let cold = c.access(0x1000);
+        let warm = c.access(0x1000);
+        assert!(cold > warm);
+        assert_eq!(warm, 4);
+    }
+
+    #[test]
+    fn sequential_stream_prefetches() {
+        let mut c = model();
+        c.access(0); // cold miss allocates the stream
+        let mut slow = 0;
+        for i in 1..64u64 {
+            if c.access(i * 128) > 4 {
+                slow += 1;
+            }
+        }
+        assert_eq!(slow, 0, "ascending stream must run at L1 latency");
+        assert!(c.prefetched > 50);
+    }
+
+    #[test]
+    fn random_far_accesses_miss() {
+        let mut c = model();
+        let mut total = 0u64;
+        // strided by 1MB+line so neither cache nor streams help
+        for i in 0..16u64 {
+            total += u64::from(c.access(i * (1 << 20) + i * 128));
+        }
+        assert!(total >= 16 * 100, "far scattered accesses pay memory latency");
+    }
+
+    #[test]
+    fn l2_catches_l1_evictions() {
+        let mut c = model();
+        // two lines that conflict in L1 (32KB apart) but not in L2; defeat
+        // the stream detector by alternating
+        c.access(0);
+        c.access(32 * 1024);
+        c.access(64 * 1024);
+        c.access(0);
+        let lat = c.access(32 * 1024);
+        assert_eq!(lat, 13, "L1-conflicting line should hit in L2");
+    }
+}

@@ -1,0 +1,32 @@
+//! Cycle-approximate model of the POWER9 / POWER10 core backends (paper
+//! §III, Figures 2–3) and the event-based power model of §VII.
+//!
+//! The model is a dataflow-plus-resources timing simulator: it interprets
+//! the same instruction streams the functional machine executes (tracking
+//! only GPR/CTR values, which control flow and addressing need), and for
+//! each dynamic instruction computes the earliest cycle at which it can
+//! issue given
+//!
+//! * operand readiness (register ready times, incl. accumulator RAW),
+//! * execution resources (VSU pipes, the two MME pipes of Figure 2, LSU
+//!   ports, fixed-point units),
+//! * front-end dispatch bandwidth,
+//! * memory latency from a small cache + stream-prefetcher model
+//!   ([`lsu`]),
+//! * the accumulator transfer costs of §III ("two cycles to transfer four
+//!   vector-scalar registers to an accumulator and four cycles to transfer
+//!   one accumulator to 4 vector-scalar registers").
+//!
+//! Three machine configurations reproduce the paper's measurement setups
+//! ([`config::MachineConfig::power9`], [`config::MachineConfig::power10`]):
+//! POWER9 runs only VSX code; POWER10 runs either the VSX baseline
+//! (POWER10-VSX) or the MMA kernels (POWER10-MMA).
+
+pub mod config;
+pub mod lsu;
+pub mod power;
+pub mod sched;
+
+pub use config::MachineConfig;
+pub use power::{EnergyReport, PowerModel};
+pub use sched::{CoreSim, SimReport};

@@ -1,0 +1,500 @@
+//! The timing simulator: a dataflow + resource model of the POWER9/POWER10
+//! backend running real instruction streams.
+//!
+//! For every dynamic instruction the simulator computes the earliest issue
+//! cycle consistent with (1) front-end dispatch bandwidth (plus a taken-
+//! branch redirect bubble), (2) source-operand readiness, (3) a free
+//! execution resource (VSU pipe / MME pipe / LSU port / FXU), and (4)
+//! memory latency from the cache model. This "greedy list scheduling"
+//! approximates a balanced out-of-order core well for the loop-dominated
+//! kernels of the paper, at ~10⁷–10⁸ instructions/second of simulation.
+//!
+//! The simulator interprets GPR/CTR values (needed for addresses and the
+//! CTR loop) but does not touch vector data — numerics live in
+//! [`crate::isa::Machine`], which runs the *same* streams.
+
+use crate::core_model::config::MachineConfig;
+use crate::core_model::lsu::CacheModel;
+use crate::core_model::power::{EnergyReport, PowerModel};
+use crate::isa::inst::{GerKind, Inst};
+
+/// Per-unit-class busy counters and stall attribution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitStats {
+    pub vsu_ops: u64,
+    pub mma_ops: u64,
+    pub lsu_ops: u64,
+    pub fx_ops: u64,
+    pub branches: u64,
+}
+
+/// Result of one timing simulation.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub name: &'static str,
+    pub cycles: u64,
+    pub instructions: u64,
+    pub flops: u64,
+    pub units: UnitStats,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub mem_misses: u64,
+    /// Energy by component and average power (see [`PowerModel`]).
+    pub energy: EnergyReport,
+}
+
+impl SimReport {
+    pub fn flops_per_cycle(&self) -> f64 {
+        self.flops as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn ipc(&self) -> f64 {
+        self.instructions as f64 / self.cycles.max(1) as f64
+    }
+
+    /// Busy fraction of a unit class with `n` instances over the run
+    /// (each op occupies one instance-cycle).
+    fn util(ops: u64, n: u32, cycles: u64) -> f64 {
+        if n == 0 || cycles == 0 {
+            0.0
+        } else {
+            ops as f64 / (n as f64 * cycles as f64)
+        }
+    }
+
+    /// Per-unit utilization `(vsu, mme, lsu, fxu)` given the machine the
+    /// run used — the profile view of Figure 2's backend.
+    pub fn utilization(&self, cfg: &MachineConfig) -> (f64, f64, f64, f64) {
+        (
+            Self::util(self.units.vsu_ops, cfg.vsu_pipes, self.cycles),
+            Self::util(self.units.mma_ops, cfg.mma_pipes, self.cycles),
+            Self::util(self.units.lsu_ops, cfg.lsu_ports, self.cycles),
+            Self::util(self.units.fx_ops, cfg.fxu_units, self.cycles),
+        )
+    }
+
+    /// The unit class that bounds this run (highest utilization) — the
+    /// "top bottleneck" pointer of the §Perf process.
+    pub fn bottleneck(&self, cfg: &MachineConfig) -> (&'static str, f64) {
+        let (v, m, l, f) = self.utilization(cfg);
+        let mut best = ("vsu", v);
+        for cand in [("mme", m), ("lsu", l), ("fxu", f)] {
+            if cand.1 > best.1 {
+                best = cand;
+            }
+        }
+        best
+    }
+}
+
+/// The timing simulator. Reusable across programs: architectural timing
+/// state resets per [`CoreSim::run`], cache contents persist (matching a
+/// warm cache across kernel invocations, as in the paper's measurement
+/// loop).
+pub struct CoreSim {
+    pub cfg: MachineConfig,
+    cache: CacheModel,
+    power: PowerModel,
+    /// Taken-branch front-end redirect bubble (cycles).
+    redirect_penalty: u64,
+    /// Initial GPR values for the next run (addressing bases).
+    pub gpr: [u64; 32],
+}
+
+struct TimingState {
+    vsr_ready: [u64; 64],
+    acc_ready: [u64; 8],
+    gpr_ready: [u64; 32],
+    ctr_ready: u64,
+    vsu_free: Vec<u64>,
+    mma_free: Vec<u64>,
+    lsu_free: Vec<u64>,
+    fxu_free: Vec<u64>,
+    /// Next cycle the front end can dispatch from, and slots left in it.
+    dispatch_cycle: u64,
+    dispatch_slots: u32,
+    horizon: u64,
+}
+
+impl Default for TimingState {
+    fn default() -> Self {
+        TimingState {
+            vsr_ready: [0; 64],
+            acc_ready: [0; 8],
+            gpr_ready: [0; 32],
+            ctr_ready: 0,
+            vsu_free: Vec::new(),
+            mma_free: Vec::new(),
+            lsu_free: Vec::new(),
+            fxu_free: Vec::new(),
+            dispatch_cycle: 0,
+            dispatch_slots: 0,
+            horizon: 0,
+        }
+    }
+}
+
+fn alloc_unit(frees: &mut [u64], ready: u64) -> u64 {
+    // earliest-free instance; issue at max(ready, free); busy for 1 cycle
+    let (idx, &free) =
+        frees.iter().enumerate().min_by_key(|(_, &f)| f).expect("unit class with no instances");
+    let issue = ready.max(free);
+    frees[idx] = issue + 1;
+    issue
+}
+
+impl CoreSim {
+    pub fn new(cfg: MachineConfig) -> Self {
+        let cache = CacheModel::new(&cfg);
+        let power = PowerModel::new(&cfg);
+        let redirect_penalty = if cfg.mma_pipes > 0 { 1 } else { 2 };
+        CoreSim { cfg, cache, power, redirect_penalty, gpr: [0; 32] }
+    }
+
+    /// Enable/disable MME power gating for subsequent runs (§VII: "when the
+    /// MME unit is power gated ... when running the VSX code").
+    pub fn set_mme_gated(&mut self, gated: bool) {
+        self.power.mme_gated = gated;
+    }
+
+    /// Simulate one program to `blr` and return the timing/energy report.
+    /// `fuel` bounds dynamic instructions.
+    pub fn run(&mut self, prog: &[Inst], fuel: u64) -> SimReport {
+        // instruction byte offsets for bdnz targets; branch targets are
+        // resolved once up front (§Perf: no search on the hot path)
+        let mut offsets = Vec::with_capacity(prog.len() + 1);
+        let mut off = 0u64;
+        for i in prog {
+            offsets.push(off);
+            off += u64::from(i.size());
+        }
+        offsets.push(off);
+        let mut targets: Vec<usize> = vec![usize::MAX; prog.len()];
+        for (i, inst) in prog.iter().enumerate() {
+            if let Inst::Bdnz { bd } = inst {
+                let target = offsets[i].wrapping_add(*bd as i64 as u64);
+                targets[i] = offsets
+                    .binary_search(&target)
+                    .expect("bdnz target not an instruction boundary");
+            }
+        }
+
+        let cfg = &self.cfg;
+        let mut st = TimingState {
+            vsu_free: vec![0; cfg.vsu_pipes as usize],
+            mma_free: vec![0; cfg.mma_pipes.max(1) as usize],
+            lsu_free: vec![0; cfg.lsu_ports as usize],
+            fxu_free: vec![0; cfg.fxu_units as usize],
+            dispatch_slots: cfg.dispatch_width,
+            ..Default::default()
+        };
+        if cfg.mma_pipes == 0 {
+            // no MME: an MMA instruction in the stream is a config error
+            st.mma_free.clear();
+        }
+        let mut gpr = self.gpr;
+        let mut ctr = 0u64;
+        let mut units = UnitStats::default();
+        let mut instructions = 0u64;
+        let mut flops = 0u64;
+        self.power.begin_run();
+        let (l1_0, l2_0, mm_0) = (self.cache.l1_hits, self.cache.l2_hits, self.cache.misses);
+
+        let mut idx = 0usize;
+        while idx < prog.len() {
+            if instructions >= fuel {
+                panic!("CoreSim: fuel exhausted after {instructions} instructions (missing blr?)");
+            }
+            let inst = &prog[idx];
+            instructions += 1;
+
+            // ---- front-end dispatch ----
+            if st.dispatch_slots == 0 {
+                st.dispatch_cycle += 1;
+                st.dispatch_slots = cfg.dispatch_width;
+            }
+            st.dispatch_slots -= 1;
+            let disp = st.dispatch_cycle;
+            self.power.frontend(instructions);
+
+            let advance = |issue_end: u64, st: &mut TimingState| {
+                st.horizon = st.horizon.max(issue_end);
+            };
+
+            match *inst {
+                Inst::Blr => {
+                    advance(disp, &mut st);
+                    break;
+                }
+                Inst::Bdnz { .. } => {
+                    units.branches += 1;
+                    let issue = disp.max(st.ctr_ready);
+                    ctr = ctr.wrapping_sub(1);
+                    advance(issue, &mut st);
+                    if ctr != 0 {
+                        idx = targets[idx];
+                        // taken-branch redirect bubble
+                        st.dispatch_cycle = issue.max(st.dispatch_cycle) + self.redirect_penalty;
+                        st.dispatch_slots = cfg.dispatch_width;
+                        continue;
+                    }
+                }
+                Inst::Addi { rt, ra, si } => {
+                    units.fx_ops += 1;
+                    self.power.fx_op();
+                    let ready = disp.max(if ra == 0 { 0 } else { st.gpr_ready[ra as usize] });
+                    let issue = alloc_unit(&mut st.fxu_free, ready);
+                    let base = if ra == 0 { 0 } else { gpr[ra as usize] };
+                    gpr[rt as usize] = base.wrapping_add(si as i64 as u64);
+                    st.gpr_ready[rt as usize] = issue + u64::from(cfg.fx_latency);
+                    advance(issue + u64::from(cfg.fx_latency), &mut st);
+                }
+                Inst::Mtctr { rs } => {
+                    units.fx_ops += 1;
+                    self.power.fx_op();
+                    let ready = disp.max(st.gpr_ready[rs as usize]);
+                    let issue = alloc_unit(&mut st.fxu_free, ready);
+                    ctr = gpr[rs as usize];
+                    st.ctr_ready = issue + u64::from(cfg.fx_latency);
+                    advance(st.ctr_ready, &mut st);
+                }
+                Inst::Lxv { xt, ra, dq } | Inst::Lxvp { xtp: xt, ra, dq } => {
+                    units.lsu_ops += 1;
+                    self.power.lsu_op();
+                    let ready = disp.max(st.gpr_ready[ra as usize]);
+                    let issue = alloc_unit(&mut st.lsu_free, ready);
+                    let addr = gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                    let lat = u64::from(self.cache.access(addr));
+                    let done = issue + lat;
+                    st.vsr_ready[xt as usize] = done;
+                    if matches!(inst, Inst::Lxvp { .. }) {
+                        st.vsr_ready[xt as usize + 1] = done;
+                    }
+                    advance(done, &mut st);
+                }
+                Inst::Stxv { xs, ra, dq } | Inst::Stxvp { xsp: xs, ra, dq } => {
+                    units.lsu_ops += 1;
+                    self.power.lsu_op();
+                    let mut ready = disp.max(st.gpr_ready[ra as usize]).max(st.vsr_ready[xs as usize]);
+                    if matches!(inst, Inst::Stxvp { .. }) {
+                        ready = ready.max(st.vsr_ready[xs as usize + 1]);
+                    }
+                    let issue = alloc_unit(&mut st.lsu_free, ready);
+                    let addr = gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                    let _ = self.cache.access(addr);
+                    advance(issue + 1, &mut st);
+                }
+                Inst::XvMaddaDp { xt, xa, xb } | Inst::XvMaddaSp { xt, xa, xb } => {
+                    units.vsu_ops += 1;
+                    self.power.vsu_op(1.0);
+                    flops += inst.flops();
+                    let ready = disp
+                        .max(st.vsr_ready[xt as usize])
+                        .max(st.vsr_ready[xa as usize])
+                        .max(st.vsr_ready[xb as usize]);
+                    let issue = alloc_unit(&mut st.vsu_free, ready);
+                    st.vsr_ready[xt as usize] = issue + u64::from(cfg.fma_latency);
+                    advance(st.vsr_ready[xt as usize], &mut st);
+                }
+                Inst::XxSpltd { xt, xa, .. } | Inst::XxSpltw { xt, xa, .. } => {
+                    units.vsu_ops += 1;
+                    self.power.vsu_op(0.5);
+                    let ready = disp.max(st.vsr_ready[xa as usize]);
+                    let issue = alloc_unit(&mut st.vsu_free, ready);
+                    st.vsr_ready[xt as usize] = issue + u64::from(cfg.perm_latency);
+                    advance(st.vsr_ready[xt as usize], &mut st);
+                }
+                Inst::Xxlor { xt, xa, xb } | Inst::Xxlxor { xt, xa, xb } => {
+                    units.vsu_ops += 1;
+                    self.power.vsu_op(0.4);
+                    let ready = disp.max(st.vsr_ready[xa as usize]).max(st.vsr_ready[xb as usize]);
+                    let issue = alloc_unit(&mut st.vsu_free, ready);
+                    st.vsr_ready[xt as usize] = issue + u64::from(cfg.perm_latency);
+                    advance(st.vsr_ready[xt as usize], &mut st);
+                }
+                Inst::Ger(ref g) => {
+                    assert!(
+                        !st.mma_free.is_empty(),
+                        "MMA instruction on a machine without an MME ({})",
+                        cfg.name
+                    );
+                    units.mma_ops += 1;
+                    let f = inst.flops();
+                    flops += f;
+                    self.power.mma_op(f as f64 / g.kind.flops().max(1) as f64);
+                    let mut ready = disp.max(st.vsr_ready[g.xa as usize]).max(st.vsr_ready[g.yb as usize]);
+                    if g.kind == GerKind::F64Ger {
+                        ready = ready.max(st.vsr_ready[g.xa as usize + 1]);
+                    }
+                    if g.op.accumulates() {
+                        ready = ready.max(st.acc_ready[g.acc as usize]);
+                    }
+                    let issue = alloc_unit(&mut st.mma_free, ready);
+                    st.acc_ready[g.acc as usize] = issue + u64::from(cfg.ger_acc_latency);
+                    advance(st.acc_ready[g.acc as usize], &mut st);
+                }
+                Inst::XxSetAccZ { acc } => {
+                    assert!(!st.mma_free.is_empty(), "MMA instruction without an MME");
+                    units.mma_ops += 1;
+                    self.power.mma_op(0.1);
+                    let issue = alloc_unit(&mut st.mma_free, disp);
+                    st.acc_ready[acc as usize] = issue + 1;
+                    advance(issue + 1, &mut st);
+                }
+                Inst::XxMtAcc { acc } => {
+                    assert!(!st.mma_free.is_empty(), "MMA instruction without an MME");
+                    units.mma_ops += 1;
+                    self.power.mma_op(0.2);
+                    let mut ready = disp;
+                    for r in 0..4 {
+                        ready = ready.max(st.vsr_ready[acc as usize * 4 + r]);
+                    }
+                    // "two cycles to transfer four VSRs to an accumulator"
+                    let issue = alloc_unit(&mut st.mma_free, ready);
+                    let done = issue + u64::from(cfg.mtacc_cycles);
+                    st.acc_ready[acc as usize] = done;
+                    advance(done, &mut st);
+                }
+                Inst::XxMfAcc { acc } => {
+                    assert!(!st.mma_free.is_empty(), "MMA instruction without an MME");
+                    units.mma_ops += 1;
+                    self.power.mma_op(0.2);
+                    let ready = disp.max(st.acc_ready[acc as usize]);
+                    // "four cycles to transfer one accumulator to 4 VSRs"
+                    let issue = alloc_unit(&mut st.mma_free, ready);
+                    let done = issue + u64::from(cfg.mfacc_cycles);
+                    for r in 0..4 {
+                        st.vsr_ready[acc as usize * 4 + r] = done;
+                    }
+                    advance(done, &mut st);
+                }
+                Inst::Nop => {}
+            }
+            idx += 1;
+        }
+
+        let cycles = st.horizon.max(st.dispatch_cycle) + 1;
+        let energy = self.power.finish(cycles, instructions);
+        SimReport {
+            name: self.cfg.name,
+            cycles,
+            instructions,
+            flops,
+            units,
+            l1_hits: self.cache.l1_hits - l1_0,
+            l2_hits: self.cache.l2_hits - l2_0,
+            mem_misses: self.cache.misses - mm_0,
+            energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::{AccOp, Ger};
+    use crate::kernels::dgemm::dgemm_8xnx8_program;
+    use crate::kernels::vsx::vsx_dgemm_8x4_program;
+
+    fn p10() -> CoreSim {
+        CoreSim::new(MachineConfig::power10())
+    }
+
+    fn p9() -> CoreSim {
+        CoreSim::new(MachineConfig::power9())
+    }
+
+    #[test]
+    fn synthetic_peak_mma_throughput() {
+        // back-to-back independent gers on 8 accumulators reach ~2/cycle
+        // (the two MME pipes of §III)
+        let mut prog = Vec::new();
+        prog.push(Inst::Addi { rt: 9, ra: 0, si: 1000 });
+        prog.push(Inst::Mtctr { rs: 9 });
+        for a in 0..8u8 {
+            prog.push(Inst::Ger(Ger::new(GerKind::F64Ger, AccOp::New, a, 32, 40)));
+        }
+        prog.push(Inst::Bdnz { bd: -(8 * 4) }); // back to the first ger
+        prog.push(Inst::Blr);
+        let mut sim = p10();
+        let r = sim.run(&prog, 100_000);
+        let per_cycle = r.units.mma_ops as f64 / r.cycles as f64;
+        assert!(per_cycle > 1.6, "two MME pipes should sustain ~2 gers/cycle, got {per_cycle:.2}");
+        // flops/cycle close to the 32-peak
+        assert!(r.flops_per_cycle() > 26.0, "got {:.2}", r.flops_per_cycle());
+    }
+
+    #[test]
+    fn dgemm_kernel_lands_near_paper_efficiency() {
+        // Figure 11: POWER10-MMA ≈ 26 flops/cycle (>80% of 32-peak)
+        let mut sim = p10();
+        let r = sim.run(&dgemm_8xnx8_program(128), 1 << 20);
+        let fpc = r.flops_per_cycle();
+        assert!(fpc > 24.0 && fpc <= 32.0, "POWER10-MMA DGEMM kernel: {fpc:.2} flops/cycle");
+    }
+
+    #[test]
+    fn vsx_kernel_efficiency_p10_vs_p9() {
+        // Figure 11: vector code ≈ 10 flops/cycle on P10, ≈ 4.5 on P9
+        let prog = vsx_dgemm_8x4_program(128);
+        let r10 = p10().run(&prog, 1 << 20);
+        let r9 = p9().run(&prog, 1 << 20);
+        let (f10, f9) = (r10.flops_per_cycle(), r9.flops_per_cycle());
+        assert!(f10 > 7.5 && f10 < 12.5, "POWER10-VSX: {f10:.2}");
+        assert!(f9 > 3.5 && f9 < 6.0, "POWER9: {f9:.2}");
+        assert!(f10 / f9 > 1.5, "P10 vector should beat P9 vector ~2x, got {:.2}", f10 / f9);
+    }
+
+    #[test]
+    fn mma_beats_vsx_on_p10_by_papers_factor() {
+        let rm = p10().run(&dgemm_8xnx8_program(128), 1 << 20);
+        // VSX computes an 8x4 block per call; 2 calls = same flops as one
+        // MMA 8x128x8 call. flops/cycle is size-independent here.
+        let rv = p10().run(&vsx_dgemm_8x4_program(128), 1 << 20);
+        let ratio = rm.flops_per_cycle() / rv.flops_per_cycle();
+        assert!(ratio > 2.0 && ratio < 3.6, "§VI: MMA ≈ 2.5x the vector code on P10, got {ratio:.2}");
+    }
+
+    #[test]
+    fn p9_rejects_mma_instructions() {
+        let prog = vec![Inst::XxSetAccZ { acc: 0 }, Inst::Blr];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p9().run(&prog, 100)));
+        assert!(r.is_err(), "POWER9 has no MME");
+    }
+
+    #[test]
+    fn determinism() {
+        let prog = dgemm_8xnx8_program(32);
+        let a = p10().run(&prog, 1 << 20);
+        let b = p10().run(&prog, 1 << 20);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.instructions, b.instructions);
+    }
+
+    #[test]
+    fn utilization_identifies_the_bottleneck() {
+        // the MMA DGEMM kernel is MME-bound on POWER10 (§III: the two MME
+        // pipes are the throughput limit, everything else has slack)
+        let cfg = MachineConfig::power10();
+        let mut sim = CoreSim::new(cfg.clone());
+        let r = sim.run(&dgemm_8xnx8_program(128), 1 << 22);
+        let (unit, util) = r.bottleneck(&cfg);
+        assert_eq!(unit, "mme", "DGEMM must be MME-bound, got {unit} at {util:.2}");
+        assert!(util > 0.75, "MME is the saturating unit: {util:.2}");
+        let (vsu, _, lsu, fxu) = r.utilization(&cfg);
+        assert!(vsu < 0.2 && lsu < 0.8 && fxu < 0.5, "other units have slack");
+
+        // the VSX kernel is VSU-bound
+        let r = sim.run(&vsx_dgemm_8x4_program(128), 1 << 22);
+        assert_eq!(r.bottleneck(&cfg).0, "vsu");
+    }
+
+    #[test]
+    fn acc_transfer_costs_respected() {
+        // xxmtacc (2 cycles) then xxmfacc (4 cycles) on an empty machine:
+        // the two transfers must serialize through the accumulator
+        let prog = vec![Inst::XxMtAcc { acc: 0 }, Inst::XxMfAcc { acc: 0 }, Inst::Blr];
+        let r = p10().run(&prog, 100);
+        assert!(r.cycles >= 6, "2 + 4 transfer cycles, got {}", r.cycles);
+    }
+}

@@ -1,0 +1,387 @@
+//! Textual assembler / disassembler in the syntax of the paper's Figure 7
+//! listing (`xvf64gerpp a4, vs44, vs40`, `lxv vs40, 0(r5)`, `bdnz -64` …).
+//!
+//! Prefixed forms take three trailing immediates — the XMSK, YMSK and PMSK
+//! fields in the ISA's MSB-first order (`pmxvf16ger2pp a0, vs32, vs34, 13,
+//! 9, 2` means x-mask `1101`, y-mask `1001`, p-mask `10`), matching how an
+//! assembler programmer writes them in §II-C.
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+
+/// Assembly syntax error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn msk_to_field(m: u8, w: u32) -> u32 {
+    (0..w).filter(|i| (m >> i) & 1 == 1).fold(0, |f, i| f | 1 << (w - 1 - i))
+}
+
+fn field_to_msk(f: u32, w: u32) -> u8 {
+    (0..w).filter(|i| (f >> (w - 1 - i)) & 1 == 1).fold(0, |m, i| m | 1 << i)
+}
+
+fn pmsk_width(kind: GerKind) -> u32 {
+    match kind.rank() {
+        1 => 0,
+        r => r as u32,
+    }
+}
+
+fn ymsk_width(kind: GerKind) -> u32 {
+    if kind == GerKind::F64Ger {
+        2
+    } else {
+        4
+    }
+}
+
+/// Render one instruction to its assembly line.
+pub fn disassemble(inst: &Inst) -> String {
+    match *inst {
+        Inst::Ger(ref g) => {
+            let base = format!("{} a{}, vs{}, vs{}", g.mnemonic(), g.acc, g.xa, g.yb);
+            if !g.prefixed {
+                base
+            } else {
+                let xw = msk_to_field(g.xmsk, 4);
+                let yw = msk_to_field(g.ymsk, ymsk_width(g.kind));
+                let pw = pmsk_width(g.kind);
+                if pw == 0 {
+                    format!("{base}, {xw}, {yw}")
+                } else {
+                    format!("{base}, {xw}, {yw}, {}", msk_to_field(g.pmsk, pw))
+                }
+            }
+        }
+        Inst::XxSetAccZ { acc } => format!("xxsetaccz a{acc}"),
+        Inst::XxMfAcc { acc } => format!("xxmfacc a{acc}"),
+        Inst::XxMtAcc { acc } => format!("xxmtacc a{acc}"),
+        Inst::Lxv { xt, ra, dq } => format!("lxv vs{xt}, {dq}(r{ra})"),
+        Inst::Lxvp { xtp, ra, dq } => format!("lxvp vs{xtp}, {dq}(r{ra})"),
+        Inst::Stxv { xs, ra, dq } => format!("stxv vs{xs}, {dq}(r{ra})"),
+        Inst::Stxvp { xsp, ra, dq } => format!("stxvp vs{xsp}, {dq}(r{ra})"),
+        Inst::XvMaddaDp { xt, xa, xb } => format!("xvmaddadp vs{xt}, vs{xa}, vs{xb}"),
+        Inst::XvMaddaSp { xt, xa, xb } => format!("xvmaddasp vs{xt}, vs{xa}, vs{xb}"),
+        Inst::XxSpltd { xt, xa, h } => format!("xxspltd vs{xt}, vs{xa}, {h}"),
+        Inst::XxSpltw { xt, xa, w } => format!("xxspltw vs{xt}, vs{xa}, {w}"),
+        Inst::Xxlor { xt, xa, xb } => format!("xxlor vs{xt}, vs{xa}, vs{xb}"),
+        Inst::Xxlxor { xt, xa, xb } => format!("xxlxor vs{xt}, vs{xa}, vs{xb}"),
+        Inst::Addi { rt, ra: 0, si } => format!("li r{rt}, {si}"),
+        Inst::Addi { rt, ra, si } => format!("addi r{rt}, r{ra}, {si}"),
+        Inst::Mtctr { rs } => format!("mtctr r{rs}"),
+        Inst::Bdnz { bd } => format!("bdnz {bd}"),
+        Inst::Blr => "blr".to_string(),
+        Inst::Nop => "nop".to_string(),
+    }
+}
+
+/// Render a whole program.
+pub fn disassemble_program(prog: &[Inst]) -> String {
+    let mut s = String::new();
+    for i in prog {
+        s.push_str(&disassemble(i));
+        s.push('\n');
+    }
+    s
+}
+
+struct LineParser<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> LineParser<'a> {
+    fn new(s: &'a str, line: usize) -> Self {
+        let toks = s
+            .split(|c: char| c == ',' || c.is_whitespace() || c == '(' || c == ')')
+            .filter(|t| !t.is_empty())
+            .collect();
+        LineParser { toks, pos: 0, line }
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, AsmError> {
+        Err(AsmError { line: self.line, msg: msg.into() })
+    }
+
+    fn next(&mut self) -> Result<&'a str, AsmError> {
+        let t = self.toks.get(self.pos).copied();
+        self.pos += 1;
+        match t {
+            Some(t) => Ok(t),
+            None => self.err("unexpected end of line"),
+        }
+    }
+
+    fn reg(&mut self, prefix: &str) -> Result<u8, AsmError> {
+        let t = self.next()?;
+        let Some(num) = t.strip_prefix(prefix) else {
+            return self.err(format!("expected {prefix}N, got {t}"));
+        };
+        num.parse().or_else(|_| self.err(format!("bad register {t}")))
+    }
+
+    fn imm(&mut self) -> Result<i64, AsmError> {
+        let t = self.next()?;
+        let (neg, t) = match t.strip_prefix('-') {
+            Some(rest) => (true, rest),
+            None => (false, t),
+        };
+        let v: i64 = if let Some(hex) = t.strip_prefix("0x") {
+            i64::from_str_radix(hex, 16).or_else(|_| self.err(format!("bad immediate {t}")))?
+        } else {
+            t.parse().or_else(|_| self.err(format!("bad immediate {t}")))?
+        };
+        Ok(if neg { -v } else { v })
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.toks.len()
+    }
+}
+
+fn parse_ger_mnemonic(m: &str) -> Option<(GerKind, AccOp, bool)> {
+    let (prefixed, rest) = match m.strip_prefix("pm") {
+        Some(r) => (true, r),
+        None => (false, m),
+    };
+    for kind in GerKind::ALL {
+        if let Some(suffix) = rest.strip_prefix(kind.mnemonic()) {
+            let op = match suffix {
+                "" => AccOp::New,
+                "s" => AccOp::NewS,
+                "pp" => AccOp::PP,
+                "np" => AccOp::NP,
+                "pn" => AccOp::PN,
+                "nn" => AccOp::NN,
+                "spp" => AccOp::SPP,
+                _ => continue,
+            };
+            return Some((kind, op, prefixed));
+        }
+    }
+    None
+}
+
+/// Parse one assembly line (comments start with `#` or `;`).
+/// Returns `None` for blank/comment lines.
+pub fn parse_line(s: &str, line: usize) -> Result<Option<Inst>, AsmError> {
+    let s = match s.find(['#', ';']) {
+        Some(i) => &s[..i],
+        None => s,
+    };
+    if s.trim().is_empty() {
+        return Ok(None);
+    }
+    let mut p = LineParser::new(s, line);
+    let mnem = p.next()?;
+    let inst = match mnem {
+        "xxsetaccz" => Inst::XxSetAccZ { acc: p.reg("a")? },
+        "xxmfacc" => Inst::XxMfAcc { acc: p.reg("a")? },
+        "xxmtacc" => Inst::XxMtAcc { acc: p.reg("a")? },
+        "lxv" => {
+            let xt = p.reg("vs")?;
+            let dq = p.imm()? as i32;
+            Inst::Lxv { xt, ra: p.reg("r")?, dq }
+        }
+        "lxvp" => {
+            let xtp = p.reg("vs")?;
+            let dq = p.imm()? as i32;
+            Inst::Lxvp { xtp, ra: p.reg("r")?, dq }
+        }
+        "stxv" => {
+            let xs = p.reg("vs")?;
+            let dq = p.imm()? as i32;
+            Inst::Stxv { xs, ra: p.reg("r")?, dq }
+        }
+        "stxvp" => {
+            let xsp = p.reg("vs")?;
+            let dq = p.imm()? as i32;
+            Inst::Stxvp { xsp, ra: p.reg("r")?, dq }
+        }
+        "addi" => {
+            let rt = p.reg("r")?;
+            let ra = p.reg("r")?;
+            Inst::Addi { rt, ra, si: p.imm()? as i32 }
+        }
+        "li" => {
+            let rt = p.reg("r")?;
+            Inst::Addi { rt, ra: 0, si: p.imm()? as i32 }
+        }
+        "xxlor" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::Xxlor { xt, xa, xb: p.reg("vs")? }
+        }
+        "xxlxor" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::Xxlxor { xt, xa, xb: p.reg("vs")? }
+        }
+        "xvmaddadp" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::XvMaddaDp { xt, xa, xb: p.reg("vs")? }
+        }
+        "xvmaddasp" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::XvMaddaSp { xt, xa, xb: p.reg("vs")? }
+        }
+        "xxspltd" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::XxSpltd { xt, xa, h: p.imm()? as u8 }
+        }
+        "xxspltw" => {
+            let xt = p.reg("vs")?;
+            let xa = p.reg("vs")?;
+            Inst::XxSpltw { xt, xa, w: p.imm()? as u8 }
+        }
+        "mtctr" => Inst::Mtctr { rs: p.reg("r")? },
+        "bdnz" => Inst::Bdnz { bd: p.imm()? as i32 },
+        "blr" => Inst::Blr,
+        "nop" => Inst::Nop,
+        m => match parse_ger_mnemonic(m) {
+            Some((kind, op, prefixed)) => {
+                let acc = p.reg("a")?;
+                let xa = p.reg("vs")?;
+                let yb = p.reg("vs")?;
+                if !prefixed {
+                    Inst::Ger(Ger::new(kind, op, acc, xa, yb))
+                } else {
+                    let xf = p.imm()? as u32;
+                    let yf = p.imm()? as u32;
+                    let pw = pmsk_width(kind);
+                    let pmsk = if pw > 0 {
+                        field_to_msk(p.imm()? as u32, pw)
+                    } else {
+                        0xff
+                    };
+                    Inst::Ger(Ger::prefixed(
+                        kind,
+                        op,
+                        acc,
+                        xa,
+                        yb,
+                        field_to_msk(xf, 4),
+                        field_to_msk(yf, ymsk_width(kind)),
+                        pmsk,
+                    ))
+                }
+            }
+            None => return p.err(format!("unknown mnemonic {m}")),
+        },
+    };
+    if !p.done() {
+        return p.err("trailing tokens");
+    }
+    Ok(Some(inst))
+}
+
+/// Assemble a multi-line source into a program.
+pub fn assemble(src: &str) -> Result<Vec<Inst>, AsmError> {
+    let mut prog = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        if let Some(inst) = parse_line(line, i + 1)? {
+            prog.push(inst);
+        }
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_syntax_round_trip() {
+        let src = "\
+            lxvp vs44, 64(r4)\n\
+            lxvp vs32, 96(r4)\n\
+            addi r5, r5, 64\n\
+            addi r4, r4, 64\n\
+            lxv vs40, 0(r5)\n\
+            xvf64gerpp a4, vs44, vs40\n\
+            bdnz -64\n\
+            blr\n";
+        let prog = assemble(src).unwrap();
+        assert_eq!(prog.len(), 8);
+        let printed = disassemble_program(&prog);
+        let reparsed = assemble(&printed).unwrap();
+        assert_eq!(prog, reparsed);
+    }
+
+    #[test]
+    fn prefixed_masks_msb_first() {
+        // x-field 13 = 0b1101 -> rows {0,1,3}; y-field 9 = 0b1001 -> cols {0,3};
+        // p-field 2 = 0b10 -> product {0}
+        let inst = parse_line("pmxvf16ger2pp a0, vs32, vs34, 13, 9, 2", 1).unwrap().unwrap();
+        let Inst::Ger(g) = inst else { panic!() };
+        assert!(g.prefixed);
+        assert_eq!(g.xmsk, 0b1011);
+        assert_eq!(g.ymsk, 0b1001);
+        assert_eq!(g.pmsk, 0b01);
+        // round trip through the printer
+        let again = parse_line(&disassemble(&inst), 1).unwrap().unwrap();
+        assert_eq!(again, inst);
+    }
+
+    #[test]
+    fn rank1_prefixed_has_no_pmask() {
+        let inst = parse_line("pmxvf64gerpp a1, vs32, vs34, 15, 2", 1).unwrap().unwrap();
+        let Inst::Ger(g) = inst else { panic!() };
+        assert_eq!(g.xmsk, 0b1111);
+        assert_eq!(g.ymsk, 0b01); // field 2 = 0b10 -> col 0
+        assert_eq!(g.pmsk, 0xff);
+        assert_eq!(parse_line(&disassemble(&inst), 1).unwrap().unwrap(), inst);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let prog = assemble("# header\n\n  xxsetaccz a3  ; zero it\nblr\n").unwrap();
+        assert_eq!(prog, vec![Inst::XxSetAccZ { acc: 3 }, Inst::Blr]);
+    }
+
+    #[test]
+    fn li_alias() {
+        let inst = parse_line("li r9, 127", 1).unwrap().unwrap();
+        assert_eq!(inst, Inst::Addi { rt: 9, ra: 0, si: 127 });
+        assert_eq!(disassemble(&inst), "li r9, 127");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_line("xvf99ger a0, vs1, vs2", 1).is_err());
+        assert!(parse_line("lxv vs40, 0", 1).is_err());
+        assert!(parse_line("blr extra", 1).is_err());
+        assert!(parse_line("addi r1, 5, 3", 1).is_err());
+    }
+
+    #[test]
+    fn all_ger_mnemonics_parse() {
+        use crate::isa::inst::{AccOp, GerKind};
+        for kind in GerKind::ALL {
+            for op in [AccOp::New, AccOp::NewS, AccOp::PP, AccOp::NP, AccOp::PN, AccOp::NN, AccOp::SPP] {
+                if !op.valid_for(kind) {
+                    continue;
+                }
+                let g = Ger::new(kind, op, 2, 36, 38);
+                let line = disassemble(&Inst::Ger(g));
+                let back = parse_line(&line, 1).unwrap().unwrap();
+                assert_eq!(back, Inst::Ger(g), "{line}");
+            }
+        }
+    }
+}

@@ -1,0 +1,586 @@
+//! Binary encodings of the simulated instruction subset.
+//!
+//! The rank-k update instructions use the XX3 form in primary opcode space
+//! 59 with the XO assignments of Power ISA v3.1 (as shipped in binutils'
+//! `ppc-opc.c`); the accumulator moves use X-form opcode 31 / XO 177; the
+//! prefixed (`pm…`) forms carry an MMIRR prefix word (`0x0790_0000`-class)
+//! holding the PMSK/XMSK/YMSK immediates (§II-C).
+//!
+//! Ground truth: the encoder reproduces, byte for byte, the object-code
+//! listing of the paper's **Figure 7** (`lxvp`/`lxv`/`addi`/`xvf64gerpp`/
+//! `bdnz` loop) — see `fig7_object_code` in the tests and
+//! `rust/tests/fig7.rs`.
+//!
+//! Field-order note: mask immediates are MSB-first in the ISA (`x = x0…x3`,
+//! eq. 3) while [`crate::isa::inst::Ger`] stores masks LSB-first (bit i =
+//! element i); `msk_to_field`/`field_to_msk` convert.
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+
+/// Encoding/decoding failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The instruction has no defined encoding (e.g. unarchitected form).
+    Unencodable(String),
+    /// The word (pair) does not decode to a supported instruction.
+    Undecodable(u32),
+    /// A prefixed instruction straddled the end of the buffer.
+    Truncated,
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Unencodable(m) => write!(f, "no encoding for {m}"),
+            CodecError::Undecodable(w) => write!(f, "cannot decode word {w:#010x}"),
+            CodecError::Truncated => write!(f, "truncated prefixed instruction"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// XO (bits 21–28) for a (kind, accop) pair — Power ISA v3.1 assignments.
+pub fn ger_xo(kind: GerKind, op: AccOp) -> Option<u32> {
+    use AccOp::*;
+    use GerKind::*;
+    Some(match (kind, op) {
+        (I8Ger4, PP) => 2,
+        (I8Ger4, New) => 3,
+        (F16Ger2, PP) => 18,
+        (F16Ger2, New) => 19,
+        (F32Ger, PP) => 26,
+        (F32Ger, New) => 27,
+        (I4Ger8, PP) => 34,
+        (I4Ger8, New) => 35,
+        (I16Ger2, SPP) => 42,
+        (I16Ger2, NewS) => 43,
+        (Bf16Ger2, PP) => 50,
+        (Bf16Ger2, New) => 51,
+        (F64Ger, PP) => 58,
+        (F64Ger, New) => 59,
+        (I16Ger2, New) => 75,
+        (F16Ger2, NP) => 82,
+        (F32Ger, NP) => 90,
+        (I8Ger4, SPP) => 99,
+        (I16Ger2, PP) => 107,
+        (Bf16Ger2, NP) => 114,
+        (F64Ger, NP) => 122,
+        (F16Ger2, PN) => 146,
+        (F32Ger, PN) => 154,
+        (Bf16Ger2, PN) => 178,
+        (F64Ger, PN) => 186,
+        (F16Ger2, NN) => 210,
+        (F32Ger, NN) => 218,
+        (Bf16Ger2, NN) => 242,
+        (F64Ger, NN) => 250,
+        _ => return None,
+    })
+}
+
+fn xo_to_ger(xo: u32) -> Option<(GerKind, AccOp)> {
+    use AccOp::*;
+    use GerKind::*;
+    Some(match xo {
+        2 => (I8Ger4, PP),
+        3 => (I8Ger4, New),
+        18 => (F16Ger2, PP),
+        19 => (F16Ger2, New),
+        26 => (F32Ger, PP),
+        27 => (F32Ger, New),
+        34 => (I4Ger8, PP),
+        35 => (I4Ger8, New),
+        42 => (I16Ger2, SPP),
+        43 => (I16Ger2, NewS),
+        50 => (Bf16Ger2, PP),
+        51 => (Bf16Ger2, New),
+        58 => (F64Ger, PP),
+        59 => (F64Ger, New),
+        75 => (I16Ger2, New),
+        82 => (F16Ger2, NP),
+        90 => (F32Ger, NP),
+        99 => (I8Ger4, SPP),
+        107 => (I16Ger2, PP),
+        114 => (Bf16Ger2, NP),
+        122 => (F64Ger, NP),
+        146 => (F16Ger2, PN),
+        154 => (F32Ger, PN),
+        178 => (Bf16Ger2, PN),
+        186 => (F64Ger, PN),
+        210 => (F16Ger2, NN),
+        218 => (F32Ger, NN),
+        242 => (Bf16Ger2, NN),
+        250 => (F64Ger, NN),
+        _ => return None,
+    })
+}
+
+/// LSB-first mask (bit i = element i) → MSB-first immediate field of `w` bits.
+fn msk_to_field(m: u8, w: u32) -> u32 {
+    let mut f = 0u32;
+    for i in 0..w {
+        if (m >> i) & 1 == 1 {
+            f |= 1 << (w - 1 - i);
+        }
+    }
+    f
+}
+
+fn field_to_msk(f: u32, w: u32) -> u8 {
+    let mut m = 0u8;
+    for i in 0..w {
+        if (f >> (w - 1 - i)) & 1 == 1 {
+            m |= 1 << i;
+        }
+    }
+    m
+}
+
+/// Width of the PMSK field for a kind (0 = rank-1, no product mask).
+fn pmsk_width(kind: GerKind) -> u32 {
+    match kind.rank() {
+        1 => 0,
+        r => r as u32,
+    }
+}
+
+fn ymsk_width(kind: GerKind) -> u32 {
+    match kind {
+        GerKind::F64Ger => 2,
+        _ => 4,
+    }
+}
+
+/// Encode the 32-bit suffix word of a ger instruction (also the whole
+/// conventional form).
+fn encode_ger_word(g: &Ger) -> Result<u32, CodecError> {
+    let xo = ger_xo(g.kind, g.op).ok_or_else(|| CodecError::Unencodable(g.mnemonic()))?;
+    let at = u32::from(g.acc & 0x7);
+    let a = u32::from(g.xa);
+    let b = u32::from(g.yb);
+    let (a5, ax) = (a & 0x1f, a >> 5);
+    let (b5, bx) = (b & 0x1f, b >> 5);
+    Ok((59 << 26) | (at << 23) | (a5 << 16) | (b5 << 11) | (xo << 3) | (ax << 2) | (bx << 1))
+}
+
+/// Encode the MMIRR prefix word (masks MSB-first per eq. 3):
+/// `PMSK` left-aligned at bit 16, `XMSK` at bits 24–27, `YMSK` at bit 28.
+fn encode_ger_prefix(g: &Ger) -> u32 {
+    let pw = pmsk_width(g.kind);
+    let yw = ymsk_width(g.kind);
+    let mut p = 0x0790_0000u32;
+    if pw > 0 {
+        p |= msk_to_field(g.pmsk, pw) << (16 - pw); // field occupies bits 16..16+pw (MSB-first) => shift from bit 15 downwards
+    }
+    p |= msk_to_field(g.xmsk, 4) << 4;
+    p |= msk_to_field(g.ymsk, yw) << (4 - yw);
+    p
+}
+
+fn decode_ger_prefix(prefix: u32, kind: GerKind) -> (u8, u8, u8) {
+    let pw = pmsk_width(kind);
+    let yw = ymsk_width(kind);
+    let pmsk = if pw > 0 {
+        field_to_msk((prefix >> (16 - pw)) & ((1 << pw) - 1), pw)
+    } else {
+        0xff
+    };
+    let xmsk = field_to_msk((prefix >> 4) & 0xf, 4);
+    let ymsk = field_to_msk((prefix >> (4 - yw)) & ((1 << yw) - 1), yw);
+    (xmsk, ymsk, pmsk)
+}
+
+/// Encode one instruction, appending 4 or 8 bytes (little-endian words, the
+/// byte order of the paper's Figure 7 listing).
+pub fn encode(inst: &Inst, out: &mut Vec<u8>) -> Result<(), CodecError> {
+    let mut push = |w: u32| out.extend_from_slice(&w.to_le_bytes());
+    match *inst {
+        Inst::Ger(ref g) => {
+            if g.prefixed {
+                push(encode_ger_prefix(g));
+            }
+            push(encode_ger_word(g)?);
+        }
+        Inst::XxMfAcc { acc } => push((31 << 26) | (u32::from(acc) << 23) | (177 << 1)),
+        Inst::XxMtAcc { acc } => push((31 << 26) | (u32::from(acc) << 23) | (1 << 16) | (177 << 1)),
+        Inst::XxSetAccZ { acc } => push((31 << 26) | (u32::from(acc) << 23) | (3 << 16) | (177 << 1)),
+        Inst::Lxv { xt, ra, dq } => {
+            let t = u32::from(xt);
+            let dq16 = ((dq >> 4) as u32) & 0xfff;
+            push((61 << 26) | ((t & 0x1f) << 21) | (u32::from(ra) << 16) | (dq16 << 4) | ((t >> 5) << 3) | 0b001);
+        }
+        Inst::Stxv { xs, ra, dq } => {
+            let t = u32::from(xs);
+            let dq16 = ((dq >> 4) as u32) & 0xfff;
+            push((61 << 26) | ((t & 0x1f) << 21) | (u32::from(ra) << 16) | (dq16 << 4) | ((t >> 5) << 3) | 0b101);
+        }
+        Inst::Lxvp { xtp, ra, dq } => {
+            let tp = (u32::from(xtp) & 0x1f) / 2;
+            let tx = u32::from(xtp) >> 5;
+            let dq16 = ((dq >> 4) as u32) & 0xfff;
+            push((6 << 26) | (tp << 22) | (tx << 21) | (u32::from(ra) << 16) | (dq16 << 4));
+        }
+        Inst::Stxvp { xsp, ra, dq } => {
+            let tp = (u32::from(xsp) & 0x1f) / 2;
+            let tx = u32::from(xsp) >> 5;
+            let dq16 = ((dq >> 4) as u32) & 0xfff;
+            push((6 << 26) | (tp << 22) | (tx << 21) | (u32::from(ra) << 16) | (dq16 << 4) | 0b0001);
+        }
+        Inst::XvMaddaDp { xt, xa, xb }
+        | Inst::XvMaddaSp { xt, xa, xb }
+        | Inst::Xxlor { xt, xa, xb }
+        | Inst::Xxlxor { xt, xa, xb } => {
+            // XX3-form, opcode 60: xvmaddadp XO=97, xvmaddasp XO=65,
+            // xxlor XO=146, xxlxor XO=154
+            let xo = match inst {
+                Inst::XvMaddaDp { .. } => 97u32,
+                Inst::XvMaddaSp { .. } => 65,
+                Inst::Xxlor { .. } => 146,
+                _ => 154,
+            };
+            let (t5, tx) = (u32::from(xt) & 0x1f, u32::from(xt) >> 5);
+            let (a5, ax) = (u32::from(xa) & 0x1f, u32::from(xa) >> 5);
+            let (b5, bx) = (u32::from(xb) & 0x1f, u32::from(xb) >> 5);
+            push((60 << 26) | (t5 << 21) | (a5 << 16) | (b5 << 11) | (xo << 3) | (ax << 2) | (bx << 1) | tx);
+        }
+        Inst::XxSpltd { xt, xa, h } => {
+            // xxpermdi with DM = h ? 0b11 : 0b00 (both halves from lane h)
+            let dm = if h & 1 == 1 { 0b11u32 } else { 0b00 };
+            let (t5, tx) = (u32::from(xt) & 0x1f, u32::from(xt) >> 5);
+            let (a5, ax) = (u32::from(xa) & 0x1f, u32::from(xa) >> 5);
+            push((60 << 26) | (t5 << 21) | (a5 << 16) | (a5 << 11) | (dm << 8) | (10 << 3) | (ax << 2) | (ax << 1) | tx);
+        }
+        Inst::XxSpltw { xt, xa, w } => {
+            // XX2-form xxspltw: opcode 60, XO(bits 21-29) = 164, UIM at bits 14-15
+            let (t5, tx) = (u32::from(xt) & 0x1f, u32::from(xt) >> 5);
+            let (a5, ax) = (u32::from(xa) & 0x1f, u32::from(xa) >> 5);
+            push((60 << 26) | (t5 << 21) | (u32::from(w & 3) << 16) | (a5 << 11) | (164 << 2) | (ax << 1) | tx);
+        }
+        Inst::Addi { rt, ra, si } => {
+            push((14 << 26) | (u32::from(rt) << 21) | (u32::from(ra) << 16) | ((si as u32) & 0xffff));
+        }
+        Inst::Mtctr { rs } => {
+            // mtspr CTR: SPR=9, field halves swapped
+            let spr = ((9u32 & 0x1f) << 5) | (9 >> 5);
+            push((31 << 26) | (u32::from(rs) << 21) | (spr << 11) | (467 << 1));
+        }
+        Inst::Bdnz { bd } => {
+            push((16 << 26) | (16 << 21) | (((bd >> 2) as u32 & 0x3fff) << 2));
+        }
+        Inst::Blr => push(0x4E80_0020),
+        Inst::Nop => push(0x6000_0000),
+    }
+    Ok(())
+}
+
+/// Encode a whole program to bytes.
+pub fn encode_program(prog: &[Inst]) -> Result<Vec<u8>, CodecError> {
+    let mut out = Vec::with_capacity(prog.len() * 4);
+    for i in prog {
+        encode(i, &mut out)?;
+    }
+    Ok(out)
+}
+
+/// Decode one instruction from `bytes[off..]`; returns `(inst, size)`.
+pub fn decode(bytes: &[u8], off: usize) -> Result<(Inst, usize), CodecError> {
+    if off + 4 > bytes.len() {
+        return Err(CodecError::Truncated);
+    }
+    let w = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let opcd = w >> 26;
+    // prefixed instruction?
+    if opcd == 1 {
+        if off + 8 > bytes.len() {
+            return Err(CodecError::Truncated);
+        }
+        let suffix = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        let inst = decode_word(suffix, Some(w))?;
+        return Ok((inst, 8));
+    }
+    Ok((decode_word(w, None)?, 4))
+}
+
+fn decode_word(w: u32, prefix: Option<u32>) -> Result<Inst, CodecError> {
+    let opcd = w >> 26;
+    match opcd {
+        59 => {
+            let xo = (w >> 3) & 0xff;
+            let (kind, op) = xo_to_ger(xo).ok_or(CodecError::Undecodable(w))?;
+            let at = ((w >> 23) & 0x7) as u8;
+            let a = (((w >> 16) & 0x1f) | ((w >> 2) & 1) << 5) as u8;
+            let b = (((w >> 11) & 0x1f) | ((w >> 1) & 1) << 5) as u8;
+            let g = match prefix {
+                None => Ger::new(kind, op, at, a, b),
+                Some(p) => {
+                    let (xmsk, ymsk, pmsk) = decode_ger_prefix(p, kind);
+                    Ger::prefixed(kind, op, at, a, b, xmsk, ymsk, pmsk)
+                }
+            };
+            Ok(Inst::Ger(g))
+        }
+        31 => {
+            let xo10 = (w >> 1) & 0x3ff;
+            match xo10 {
+                177 => {
+                    let at = ((w >> 23) & 0x7) as u8;
+                    match (w >> 16) & 0x1f {
+                        0 => Ok(Inst::XxMfAcc { acc: at }),
+                        1 => Ok(Inst::XxMtAcc { acc: at }),
+                        3 => Ok(Inst::XxSetAccZ { acc: at }),
+                        _ => Err(CodecError::Undecodable(w)),
+                    }
+                }
+                467 => {
+                    let spr = (w >> 11) & 0x3ff;
+                    let spr = ((spr >> 5) & 0x1f) | ((spr & 0x1f) << 5);
+                    if spr == 9 {
+                        Ok(Inst::Mtctr { rs: ((w >> 21) & 0x1f) as u8 })
+                    } else {
+                        Err(CodecError::Undecodable(w))
+                    }
+                }
+                _ => Err(CodecError::Undecodable(w)),
+            }
+        }
+        61 => {
+            let t = (((w >> 21) & 0x1f) | ((w >> 3) & 1) << 5) as u8;
+            let ra = ((w >> 16) & 0x1f) as u8;
+            let dq16 = (w >> 4) & 0xfff;
+            // sign-extend the 12-bit DQ then scale by 16
+            let dq = (((dq16 as i32) << 20) >> 20) * 16;
+            match w & 0b111 {
+                0b001 => Ok(Inst::Lxv { xt: t, ra, dq }),
+                0b101 => Ok(Inst::Stxv { xs: t, ra, dq }),
+                _ => Err(CodecError::Undecodable(w)),
+            }
+        }
+        6 => {
+            let tp = (w >> 22) & 0xf;
+            let tx = (w >> 21) & 1;
+            let reg = (tx << 5 | tp * 2) as u8;
+            let ra = ((w >> 16) & 0x1f) as u8;
+            let dq16 = (w >> 4) & 0xfff;
+            let dq = (((dq16 as i32) << 20) >> 20) * 16;
+            match w & 0xf {
+                0b0000 => Ok(Inst::Lxvp { xtp: reg, ra, dq }),
+                0b0001 => Ok(Inst::Stxvp { xsp: reg, ra, dq }),
+                _ => Err(CodecError::Undecodable(w)),
+            }
+        }
+        60 => {
+            if (w >> 2) & 0x1ff == 164 {
+                // XX2 xxspltw
+                let xt = (((w >> 21) & 0x1f) | ((w & 1) << 5)) as u8;
+                let xa = (((w >> 11) & 0x1f) | ((w >> 1) & 1) << 5) as u8;
+                return Ok(Inst::XxSpltw { xt, xa, w: ((w >> 16) & 3) as u8 });
+            }
+            let xo8 = (w >> 3) & 0xff;
+            let xt = (((w >> 21) & 0x1f) | ((w & 1) << 5)) as u8;
+            let xa = (((w >> 16) & 0x1f) | ((w >> 2) & 1) << 5) as u8;
+            let xb = (((w >> 11) & 0x1f) | ((w >> 1) & 1) << 5) as u8;
+            match xo8 {
+                97 => Ok(Inst::XvMaddaDp { xt, xa, xb }),
+                65 => Ok(Inst::XvMaddaSp { xt, xa, xb }),
+                146 => Ok(Inst::Xxlor { xt, xa, xb }),
+                154 => Ok(Inst::Xxlxor { xt, xa, xb }),
+                10 => Ok(Inst::XxSpltd { xt, xa, h: 0 }),
+                106 => Ok(Inst::XxSpltd { xt, xa, h: 1 }),
+                _ => Err(CodecError::Undecodable(w)),
+            }
+        }
+        14 => Ok(Inst::Addi {
+            rt: ((w >> 21) & 0x1f) as u8,
+            ra: ((w >> 16) & 0x1f) as u8,
+            si: ((w & 0xffff) as i32) << 16 >> 16,
+        }),
+        16 => {
+            let bo = (w >> 21) & 0x1f;
+            if bo != 16 {
+                return Err(CodecError::Undecodable(w));
+            }
+            let bd14 = (w >> 2) & 0x3fff;
+            let bd = (((bd14 as i32) << 18) >> 18) * 4;
+            Ok(Inst::Bdnz { bd })
+        }
+        19 if w == 0x4E80_0020 => Ok(Inst::Blr),
+        24 if w == 0x6000_0000 => Ok(Inst::Nop),
+        _ => Err(CodecError::Undecodable(w)),
+    }
+}
+
+/// Decode a whole byte buffer into a program.
+pub fn decode_program(bytes: &[u8]) -> Result<Vec<Inst>, CodecError> {
+    let mut prog = Vec::new();
+    let mut off = 0;
+    while off < bytes.len() {
+        let (inst, sz) = decode(bytes, off)?;
+        prog.push(inst);
+        off += sz;
+    }
+    Ok(prog)
+}
+
+/// The paper's Figure 7: the DGEMM kernel computation loop, as compiled
+/// by g++ 11 (IBM Advance Toolchain 15). Words transcribed from the
+/// listing (byte columns are little-endian in the listing). Ground truth
+/// for the encoder and for the generated DGEMM kernel.
+pub const FIG7_WORDS: [u32; 17] = [
+    0x19A4_0040, // lxvp  vs44, 64(r4)
+    0x1824_0060, // lxvp  vs32, 96(r4)
+    0x38A5_0040, // addi  r5, r5, 64
+    0x3884_0040, // addi  r4, r4, 64
+    0xF505_0009, // lxv   vs40, 0(r5)
+    0xF525_0019, // lxv   vs41, 16(r5)
+    0xF545_0029, // lxv   vs42, 32(r5)
+    0xF565_0039, // lxv   vs43, 48(r5)
+    0xEE0C_41D6, // xvf64gerpp a4, vs44, vs40
+    0xED80_41D6, // xvf64gerpp a3, vs32, vs40
+    0xEE8C_49D6, // xvf64gerpp a5, vs44, vs41
+    0xEC80_49D6, // xvf64gerpp a1, vs32, vs41
+    0xEF0C_51D6, // xvf64gerpp a6, vs44, vs42
+    0xED00_51D6, // xvf64gerpp a2, vs32, vs42
+    0xEF8C_59D6, // xvf64gerpp a7, vs44, vs43
+    0xEC00_59D6, // xvf64gerpp a0, vs32, vs43
+    0x4200_FFC0, // bdnz  -64
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+
+    fn fig7_program() -> Vec<Inst> {
+        use crate::isa::inst::{AccOp::PP, GerKind::F64Ger};
+        let ger = |acc, xa, yb| Inst::Ger(Ger::new(F64Ger, PP, acc, xa, yb));
+        vec![
+            Inst::Lxvp { xtp: 44, ra: 4, dq: 64 },
+            Inst::Lxvp { xtp: 32, ra: 4, dq: 96 },
+            Inst::Addi { rt: 5, ra: 5, si: 64 },
+            Inst::Addi { rt: 4, ra: 4, si: 64 },
+            Inst::Lxv { xt: 40, ra: 5, dq: 0 },
+            Inst::Lxv { xt: 41, ra: 5, dq: 16 },
+            Inst::Lxv { xt: 42, ra: 5, dq: 32 },
+            Inst::Lxv { xt: 43, ra: 5, dq: 48 },
+            ger(4, 44, 40),
+            ger(3, 32, 40),
+            ger(5, 44, 41),
+            ger(1, 32, 41),
+            ger(6, 44, 42),
+            ger(2, 32, 42),
+            ger(7, 44, 43),
+            ger(0, 32, 43),
+            Inst::Bdnz { bd: -64 },
+        ]
+    }
+
+    #[test]
+    fn fig7_object_code() {
+        // our assembler must reproduce the paper's listing byte-for-byte
+        let prog = fig7_program();
+        let bytes = encode_program(&prog).unwrap();
+        let mut expect = Vec::new();
+        for w in super::FIG7_WORDS {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(bytes, expect);
+        // and the disassembler must round-trip it
+        assert_eq!(decode_program(&bytes).unwrap(), prog);
+    }
+
+    #[test]
+    fn xo_table_is_injective() {
+        use crate::isa::inst::{AccOp, GerKind};
+        let ops = [AccOp::New, AccOp::NewS, AccOp::PP, AccOp::NP, AccOp::PN, AccOp::NN, AccOp::SPP];
+        let mut seen = std::collections::HashMap::new();
+        for kind in GerKind::ALL {
+            for op in ops {
+                if let Some(xo) = ger_xo(kind, op) {
+                    assert!(op.valid_for(kind), "{kind:?} {op:?} encoded but not architected");
+                    if let Some(prev) = seen.insert(xo, (kind, op)) {
+                        panic!("XO {xo} assigned to both {prev:?} and {:?}", (kind, op));
+                    }
+                } else {
+                    assert!(!op.valid_for(kind), "{kind:?} {op:?} architected but unencodable");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 29, "Table I lists 29 ger forms");
+    }
+
+    #[test]
+    fn mask_field_order() {
+        // eq.3 order: x0 is the MSB of the immediate field
+        assert_eq!(msk_to_field(0b0001, 4), 0b1000);
+        assert_eq!(msk_to_field(0b1010, 4), 0b0101);
+        assert_eq!(field_to_msk(0b1000, 4), 0b0001);
+        for m in 0..16u8 {
+            assert_eq!(field_to_msk(msk_to_field(m, 4), 4), m);
+        }
+    }
+
+    #[test]
+    fn prefixed_round_trip_all_kinds() {
+        use crate::isa::inst::{AccOp, GerKind};
+        for kind in GerKind::ALL {
+            let yw = super::ymsk_width(kind);
+            let pw = super::pmsk_width(kind);
+            let g = Ger::prefixed(
+                kind,
+                AccOp::New,
+                3,
+                34,
+                35,
+                0b0101,
+                if yw == 2 { 0b01 } else { 0b1001 },
+                if pw == 0 { 0xff } else { (1 << (pw - 1)) | 1 },
+            );
+            let mut bytes = Vec::new();
+            encode(&Inst::Ger(g), &mut bytes).unwrap();
+            assert_eq!(bytes.len(), 8);
+            let (inst, sz) = decode(&bytes, 0).unwrap();
+            assert_eq!(sz, 8);
+            assert_eq!(inst, Inst::Ger(g), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn moves_round_trip() {
+        for acc in 0..8u8 {
+            for inst in [Inst::XxSetAccZ { acc }, Inst::XxMfAcc { acc }, Inst::XxMtAcc { acc }] {
+                let mut b = Vec::new();
+                encode(&inst, &mut b).unwrap();
+                assert_eq!(decode(&b, 0).unwrap(), (inst, 4));
+            }
+        }
+    }
+
+    #[test]
+    fn support_round_trip() {
+        let insts = [
+            Inst::Lxv { xt: 63, ra: 3, dq: -32 },
+            Inst::Stxv { xs: 0, ra: 31, dq: 2032 },
+            Inst::Lxvp { xtp: 62, ra: 1, dq: 480 },
+            Inst::Stxvp { xsp: 4, ra: 2, dq: -16 },
+            Inst::Addi { rt: 1, ra: 0, si: -1 },
+            Inst::Mtctr { rs: 9 },
+            Inst::Bdnz { bd: -128 },
+            Inst::Blr,
+            Inst::Nop,
+        ];
+        for inst in insts {
+            let mut b = Vec::new();
+            encode(&inst, &mut b).unwrap();
+            assert_eq!(decode(&b, 0).unwrap(), (inst, 4), "{inst:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_prefix_rejected() {
+        let g = Ger::prefixed(GerKind::F32Ger, AccOp::PP, 0, 32, 33, 0xf, 0xf, 0xff);
+        let mut b = Vec::new();
+        encode(&Inst::Ger(g), &mut b).unwrap();
+        assert_eq!(decode(&b[..4], 0), Err(CodecError::Truncated));
+    }
+}

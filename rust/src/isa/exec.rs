@@ -1,0 +1,987 @@
+//! The functional interpreter: executes instruction streams over the MMA
+//! register state, a GPR file, the count register and a flat memory,
+//! enforcing the architectural rules of paper §II:
+//!
+//! * rank-k update semantics, eq. (1) integer / eq. (2) float / eq. (3)
+//!   masked;
+//! * the priming state machine (accumulate forms require a primed
+//!   accumulator; `xxmfacc` deprimes; the VSR group of a primed accumulator
+//!   must not be touched);
+//! * operand constraints (X/Y VSRs must not overlap the target accumulator;
+//!   the `xvf64ger` X operand is an even-odd VSR pair).
+//!
+//! The interpreter is the single source of truth for MMA numerics: the
+//! kernel library runs on it, and the cycle model times the very same
+//! instruction streams.
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+use crate::isa::regs::{Acc, RegFile, Vsr, NUM_ACCS, NUM_VSRS};
+use crate::isa::types::{mod_add_i32, sat_add_i32};
+
+/// Architectural misuse detected by the interpreter (these are programming
+/// errors the paper's §II/§IV rules forbid; real hardware gives undefined
+/// results — we fail loudly instead).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// Accumulate-form instruction on an accumulator that is not primed,
+    /// or use of an accumulator after a depriming `xxmfacc`.
+    UnprimedAccumulator { acc: u8, inst: String },
+    /// A ger input VSR lies inside the target accumulator's VSR group
+    /// ("X and Y ... must not overlap the accumulator", §II-B).
+    OperandOverlapsAccumulator { acc: u8, vsr: u8 },
+    /// A VSR belonging to a *primed* accumulator's group was read or
+    /// written by a non-MMA instruction (§II-A).
+    VsrInUseByAccumulator { vsr: u8, acc: u8 },
+    /// `xvf64ger` X operand register is odd (must be an even-odd pair).
+    OddF64Pair { vsr: u8 },
+    /// (kind, accop) combination that Table I does not architect.
+    InvalidForm { mnemonic: String },
+    /// Register index out of range.
+    BadRegister { what: &'static str, index: u8 },
+    /// Memory access outside the machine's memory.
+    MemOutOfBounds { addr: u64, len: u32 },
+    /// Branch to a byte offset that is not an instruction boundary.
+    BadBranchTarget { pc: u64, target: u64 },
+    /// Executed `steps` instructions without reaching `blr`.
+    FuelExhausted { steps: u64 },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::UnprimedAccumulator { acc, inst } => {
+                write!(f, "use of unprimed accumulator acc{acc} by {inst}")
+            }
+            ExecError::OperandOverlapsAccumulator { acc, vsr } => {
+                write!(f, "ger input vs{vsr} overlaps target accumulator acc{acc}")
+            }
+            ExecError::VsrInUseByAccumulator { vsr, acc } => {
+                write!(f, "vs{vsr} touched while acc{acc} is primed")
+            }
+            ExecError::OddF64Pair { vsr } => write!(f, "xvf64ger X operand vs{vsr} is not an even pair"),
+            ExecError::InvalidForm { mnemonic } => write!(f, "unarchitected instruction form {mnemonic}"),
+            ExecError::BadRegister { what, index } => write!(f, "bad {what} register index {index}"),
+            ExecError::MemOutOfBounds { addr, len } => write!(f, "memory access [{addr}, +{len}) out of bounds"),
+            ExecError::BadBranchTarget { pc, target } => {
+                write!(f, "branch from byte pc {pc} to non-boundary byte {target}")
+            }
+            ExecError::FuelExhausted { steps } => write!(f, "no blr after {steps} instructions"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Dynamic execution statistics (consumed by the cycle and power models and
+/// by flops/cycle accounting).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    pub instructions: u64,
+    pub mma_instructions: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub mem_bytes: u64,
+    pub flops: u64,
+    pub branches: u64,
+}
+
+/// The functional machine: MMA registers + 32 GPRs + CTR + flat memory.
+///
+/// Addresses held in GPRs are plain offsets into [`Machine::mem`].
+pub struct Machine {
+    pub regs: RegFile,
+    pub gpr: [u64; 32],
+    pub ctr: u64,
+    pub mem: Vec<u8>,
+    /// When true (default), enforce the §II-A rule that the VSR group of a
+    /// primed accumulator must not be used by loads/stores or as ger inputs.
+    pub strict: bool,
+    pub stats: ExecStats,
+}
+
+impl Machine {
+    /// Machine with `mem_size` bytes of zeroed memory.
+    pub fn new(mem_size: usize) -> Self {
+        Machine {
+            regs: RegFile::new(),
+            gpr: [0u64; 32],
+            ctr: 0,
+            mem: vec![0u8; mem_size],
+            strict: true,
+            stats: ExecStats::default(),
+        }
+    }
+
+    // ---- memory helpers --------------------------------------------------
+
+    fn check_mem(&self, addr: u64, len: u32) -> Result<usize, ExecError> {
+        let end = addr.checked_add(u64::from(len)).ok_or(ExecError::MemOutOfBounds { addr, len })?;
+        if end as usize > self.mem.len() {
+            return Err(ExecError::MemOutOfBounds { addr, len });
+        }
+        Ok(addr as usize)
+    }
+
+    /// Write a `f64` slice into memory at `addr` (little-endian), a test and
+    /// driver convenience.
+    pub fn write_f64s(&mut self, addr: u64, data: &[f64]) {
+        for (i, v) in data.iter().enumerate() {
+            let o = addr as usize + 8 * i;
+            self.mem[o..o + 8].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_f64s(&self, addr: u64, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let o = addr as usize + 8 * i;
+                f64::from_le_bytes(self.mem[o..o + 8].try_into().unwrap())
+            })
+            .collect()
+    }
+
+    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
+        for (i, v) in data.iter().enumerate() {
+            let o = addr as usize + 4 * i;
+            self.mem[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let o = addr as usize + 4 * i;
+                f32::from_le_bytes(self.mem[o..o + 4].try_into().unwrap())
+            })
+            .collect()
+    }
+
+    pub fn write_u16s(&mut self, addr: u64, data: &[u16]) {
+        for (i, v) in data.iter().enumerate() {
+            let o = addr as usize + 2 * i;
+            self.mem[o..o + 2].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn write_i32s(&mut self, addr: u64, data: &[i32]) {
+        for (i, v) in data.iter().enumerate() {
+            let o = addr as usize + 4 * i;
+            self.mem[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_i32s(&self, addr: u64, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|i| {
+                let o = addr as usize + 4 * i;
+                i32::from_le_bytes(self.mem[o..o + 4].try_into().unwrap())
+            })
+            .collect()
+    }
+
+    // ---- VSR access with priming enforcement -----------------------------
+
+    fn vsr_check(&self, vsr: u8, as_ger_input_for: Option<u8>) -> Result<(), ExecError> {
+        if vsr as usize >= NUM_VSRS {
+            return Err(ExecError::BadRegister { what: "vsr", index: vsr });
+        }
+        if let Some(acc) = as_ger_input_for {
+            // X/Y may not overlap the target accumulator's group.
+            if RegFile::acc_of_vsr(vsr) == Some(acc) {
+                return Err(ExecError::OperandOverlapsAccumulator { acc, vsr });
+            }
+        }
+        if self.strict {
+            if let Some(acc) = RegFile::acc_of_vsr(vsr) {
+                if self.regs.primed[acc as usize] {
+                    return Err(ExecError::VsrInUseByAccumulator { vsr, acc });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn acc_check(&self, acc: u8) -> Result<(), ExecError> {
+        if acc as usize >= NUM_ACCS {
+            return Err(ExecError::BadRegister { what: "acc", index: acc });
+        }
+        Ok(())
+    }
+
+    // ---- the rank-k update core (eq. 1-3) --------------------------------
+
+    /// Execute a ger instruction against the register file.
+    pub fn exec_ger(&mut self, g: &Ger) -> Result<(), ExecError> {
+        if !g.op.valid_for(g.kind) {
+            return Err(ExecError::InvalidForm { mnemonic: g.mnemonic() });
+        }
+        self.acc_check(g.acc)?;
+        self.vsr_check(g.xa, Some(g.acc))?;
+        self.vsr_check(g.yb, Some(g.acc))?;
+        if g.kind == GerKind::F64Ger {
+            if g.xa % 2 != 0 {
+                return Err(ExecError::OddF64Pair { vsr: g.xa });
+            }
+            self.vsr_check(g.xa + 1, Some(g.acc))?;
+        }
+        let ai = g.acc as usize;
+        if g.op.accumulates() && !self.regs.primed[ai] {
+            return Err(ExecError::UnprimedAccumulator { acc: g.acc, inst: g.mnemonic() });
+        }
+
+        let x = self.regs.vsr[g.xa as usize];
+        let y = self.regs.vsr[g.yb as usize];
+        let acc_in = self.regs.acc[ai];
+        let acc_out = match g.kind {
+            GerKind::F64Ger => {
+                let x1 = self.regs.vsr[g.xa as usize + 1];
+                ger_f64(g, x, x1, y, &acc_in)
+            }
+            GerKind::F32Ger => ger_f32(g, x, y, &acc_in),
+            GerKind::F16Ger2 => ger_f16ish(g, x, y, &acc_in, Vsr::f16),
+            GerKind::Bf16Ger2 => ger_f16ish(g, x, y, &acc_in, Vsr::bf16),
+            GerKind::I16Ger2 | GerKind::I8Ger4 | GerKind::I4Ger8 => ger_integer(g, x, y, &acc_in),
+        };
+        self.regs.acc[ai] = acc_out;
+        self.regs.primed[ai] = true; // New/NewS prime; accumulate forms stay primed
+        Ok(())
+    }
+
+    // ---- program execution ------------------------------------------------
+
+    /// Execute one instruction. Branch semantics are handled by
+    /// [`Machine::run`]; here `Bdnz`/`Blr` only update CTR / report.
+    fn exec_straightline(&mut self, inst: &Inst) -> Result<(), ExecError> {
+        match *inst {
+            Inst::XxSetAccZ { acc } => {
+                self.acc_check(acc)?;
+                self.regs.acc[acc as usize] = Acc::zero();
+                self.regs.primed[acc as usize] = true;
+            }
+            Inst::XxMfAcc { acc } => {
+                self.acc_check(acc)?;
+                if !self.regs.primed[acc as usize] {
+                    return Err(ExecError::UnprimedAccumulator { acc, inst: "xxmfacc".into() });
+                }
+                let a = self.regs.acc[acc as usize];
+                for r in 0..4 {
+                    self.regs.vsr[acc as usize * 4 + r] = a.row(r);
+                }
+                self.regs.primed[acc as usize] = false; // depriming event (§II-B.1)
+            }
+            Inst::XxMtAcc { acc } => {
+                self.acc_check(acc)?;
+                let mut a = Acc::zero();
+                for r in 0..4 {
+                    a.set_row(r, self.regs.vsr[acc as usize * 4 + r]);
+                }
+                self.regs.acc[acc as usize] = a;
+                self.regs.primed[acc as usize] = true;
+            }
+            Inst::Ger(ref g) => self.exec_ger(g)?,
+            Inst::Lxv { xt, ra, dq } => {
+                self.vsr_check(xt, None)?;
+                let addr = self.gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                let o = self.check_mem(addr, 16)?;
+                let mut b = [0u8; 16];
+                b.copy_from_slice(&self.mem[o..o + 16]);
+                self.regs.vsr[xt as usize] = Vsr(b);
+            }
+            Inst::Lxvp { xtp, ra, dq } => {
+                self.vsr_check(xtp, None)?;
+                self.vsr_check(xtp + 1, None)?;
+                let addr = self.gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                let o = self.check_mem(addr, 32)?;
+                let mut b0 = [0u8; 16];
+                let mut b1 = [0u8; 16];
+                b0.copy_from_slice(&self.mem[o..o + 16]);
+                b1.copy_from_slice(&self.mem[o + 16..o + 32]);
+                self.regs.vsr[xtp as usize] = Vsr(b0);
+                self.regs.vsr[xtp as usize + 1] = Vsr(b1);
+            }
+            Inst::Stxv { xs, ra, dq } => {
+                self.vsr_check(xs, None)?;
+                let addr = self.gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                let o = self.check_mem(addr, 16)?;
+                let v = self.regs.vsr[xs as usize];
+                self.mem[o..o + 16].copy_from_slice(&v.0);
+            }
+            Inst::Stxvp { xsp, ra, dq } => {
+                self.vsr_check(xsp, None)?;
+                self.vsr_check(xsp + 1, None)?;
+                let addr = self.gpr[ra as usize].wrapping_add(dq as i64 as u64);
+                let o = self.check_mem(addr, 32)?;
+                let v0 = self.regs.vsr[xsp as usize];
+                let v1 = self.regs.vsr[xsp as usize + 1];
+                self.mem[o..o + 16].copy_from_slice(&v0.0);
+                self.mem[o + 16..o + 32].copy_from_slice(&v1.0);
+            }
+            Inst::XvMaddaDp { xt, xa, xb } => {
+                self.vsr_check(xt, None)?;
+                self.vsr_check(xa, None)?;
+                self.vsr_check(xb, None)?;
+                let (a, b, t) =
+                    (self.regs.vsr[xa as usize], self.regs.vsr[xb as usize], self.regs.vsr[xt as usize]);
+                self.regs.vsr[xt as usize] =
+                    Vsr::from_f64x2([t.f64(0) + a.f64(0) * b.f64(0), t.f64(1) + a.f64(1) * b.f64(1)]);
+            }
+            Inst::XvMaddaSp { xt, xa, xb } => {
+                self.vsr_check(xt, None)?;
+                self.vsr_check(xa, None)?;
+                self.vsr_check(xb, None)?;
+                let (a, b, t) =
+                    (self.regs.vsr[xa as usize], self.regs.vsr[xb as usize], self.regs.vsr[xt as usize]);
+                let mut lanes = [0f32; 4];
+                for (i, l) in lanes.iter_mut().enumerate() {
+                    *l = t.f32(i) + a.f32(i) * b.f32(i);
+                }
+                self.regs.vsr[xt as usize] = Vsr::from_f32x4(lanes);
+            }
+            Inst::XxSpltd { xt, xa, h } => {
+                self.vsr_check(xt, None)?;
+                self.vsr_check(xa, None)?;
+                let v = self.regs.vsr[xa as usize].f64(h as usize & 1);
+                self.regs.vsr[xt as usize] = Vsr::from_f64x2([v, v]);
+            }
+            Inst::Xxlor { xt, xa, xb } | Inst::Xxlxor { xt, xa, xb } => {
+                self.vsr_check(xt, None)?;
+                self.vsr_check(xa, None)?;
+                self.vsr_check(xb, None)?;
+                let (a, b) = (self.regs.vsr[xa as usize], self.regs.vsr[xb as usize]);
+                let is_or = matches!(inst, Inst::Xxlor { .. });
+                let mut out = [0u8; 16];
+                for i in 0..16 {
+                    out[i] = if is_or { a.0[i] | b.0[i] } else { a.0[i] ^ b.0[i] };
+                }
+                self.regs.vsr[xt as usize] = Vsr(out);
+            }
+            Inst::XxSpltw { xt, xa, w } => {
+                self.vsr_check(xt, None)?;
+                self.vsr_check(xa, None)?;
+                let v = self.regs.vsr[xa as usize].f32(w as usize & 3);
+                self.regs.vsr[xt as usize] = Vsr::from_f32x4([v; 4]);
+            }
+            Inst::Addi { rt, ra, si } => {
+                let base = if ra == 0 { 0 } else { self.gpr[ra as usize] };
+                self.gpr[rt as usize] = base.wrapping_add(si as i64 as u64);
+            }
+            Inst::Mtctr { rs } => self.ctr = self.gpr[rs as usize],
+            Inst::Bdnz { .. } | Inst::Blr | Inst::Nop => {}
+        }
+        Ok(())
+    }
+
+    /// Run a program (a straight slice of instructions with byte-offset
+    /// branch targets) from its first instruction until `blr`.
+    ///
+    /// `fuel` bounds the dynamic instruction count (guards against
+    /// non-terminating loops in generated kernels).
+    pub fn run(&mut self, prog: &[Inst], fuel: u64) -> Result<(), ExecError> {
+        // byte offset of each instruction, for bdnz displacement targets
+        let mut offsets = Vec::with_capacity(prog.len() + 1);
+        let mut off = 0u64;
+        for inst in prog {
+            offsets.push(off);
+            off += u64::from(inst.size());
+        }
+        offsets.push(off);
+        // §Perf: resolve every branch target once (the binary search per
+        // taken branch showed up in the interpreter profile)
+        let mut targets: Vec<Option<usize>> = vec![None; prog.len()];
+        for (idx, inst) in prog.iter().enumerate() {
+            if let Inst::Bdnz { bd } = inst {
+                let pc = offsets[idx];
+                let target = pc.wrapping_add(*bd as i64 as u64);
+                let tidx = offsets
+                    .binary_search(&target)
+                    .map_err(|_| ExecError::BadBranchTarget { pc, target })?;
+                if tidx >= prog.len() {
+                    return Err(ExecError::BadBranchTarget { pc, target });
+                }
+                targets[idx] = Some(tidx);
+            }
+        }
+
+        let mut idx = 0usize;
+        let mut steps = 0u64;
+        while idx < prog.len() {
+            if steps >= fuel {
+                return Err(ExecError::FuelExhausted { steps });
+            }
+            steps += 1;
+            let inst = &prog[idx];
+            self.account(inst);
+            match *inst {
+                Inst::Blr => return Ok(()),
+                Inst::Bdnz { .. } => {
+                    self.ctr = self.ctr.wrapping_sub(1);
+                    self.stats.branches += 1;
+                    if self.ctr != 0 {
+                        idx = targets[idx].expect("precomputed above");
+                        continue;
+                    }
+                }
+                _ => self.exec_straightline(inst)?,
+            }
+            idx += 1;
+        }
+        Ok(())
+    }
+
+    fn account(&mut self, inst: &Inst) {
+        self.stats.instructions += 1;
+        if inst.is_mma() {
+            self.stats.mma_instructions += 1;
+        }
+        match inst {
+            Inst::Lxv { .. } | Inst::Lxvp { .. } => self.stats.loads += 1,
+            Inst::Stxv { .. } | Inst::Stxvp { .. } => self.stats.stores += 1,
+            _ => {}
+        }
+        self.stats.mem_bytes += u64::from(inst.mem_bytes());
+        self.stats.flops += inst.flops();
+    }
+}
+
+// ---- rank-k update element math --------------------------------------------
+
+#[inline(always)]
+fn mask_bit(m: u8, i: usize) -> bool {
+    (m >> i) & 1 == 1
+}
+
+/// eq. (2) accumulation: `A' = (±P) (±A)` per the 2-letter float suffix.
+#[inline(always)]
+fn float_combine(op: AccOp, p: f64, a: f64) -> f64 {
+    match op {
+        AccOp::New | AccOp::NewS => p,
+        AccOp::PP => p + a,
+        AccOp::NP => -p + a,
+        AccOp::PN => p - a,
+        AccOp::NN => -p - a,
+        AccOp::SPP => unreachable!("spp is integer-only"),
+    }
+}
+
+#[inline(always)]
+fn float_combine_f32(op: AccOp, p: f32, a: f32) -> f32 {
+    match op {
+        AccOp::New | AccOp::NewS => p,
+        AccOp::PP => p + a,
+        AccOp::NP => -p + a,
+        AccOp::PN => p - a,
+        AccOp::NN => -p - a,
+        AccOp::SPP => unreachable!("spp is integer-only"),
+    }
+}
+
+fn ger_f64(g: &Ger, x0: Vsr, x1: Vsr, y: Vsr, acc: &Acc) -> Acc {
+    let xs = [x0.f64(0), x0.f64(1), x1.f64(0), x1.f64(1)];
+    let ys = [y.f64(0), y.f64(1)];
+    let mut out = *acc;
+    if !g.prefixed {
+        for i in 0..4 {
+            for j in 0..2 {
+                out.set_f64_at(i, j, float_combine(g.op, xs[i] * ys[j], acc.f64_at(i, j)));
+            }
+        }
+        return out;
+    }
+    for i in 0..4 {
+        for j in 0..2 {
+            if !(mask_bit(g.xmsk, i) && mask_bit(g.ymsk, j)) {
+                // disabled computations are not performed (§II-C); for the
+                // priming forms the element is still written, as zero product
+                if !g.op.accumulates() {
+                    out.set_f64_at(i, j, 0.0);
+                }
+                continue;
+            }
+            let p = xs[i] * ys[j];
+            out.set_f64_at(i, j, float_combine(g.op, p, acc.f64_at(i, j)));
+        }
+    }
+    out
+}
+
+fn ger_f32(g: &Ger, x: Vsr, y: Vsr, acc: &Acc) -> Acc {
+    let mut out = *acc;
+    if !g.prefixed {
+        let xs = [x.f32(0), x.f32(1), x.f32(2), x.f32(3)];
+        let ys = [y.f32(0), y.f32(1), y.f32(2), y.f32(3)];
+        for i in 0..4 {
+            for j in 0..4 {
+                out.set_f32_at(i, j, float_combine_f32(g.op, xs[i] * ys[j], acc.f32_at(i, j)));
+            }
+        }
+        return out;
+    }
+    for i in 0..4 {
+        for j in 0..4 {
+            if !(mask_bit(g.xmsk, i) && mask_bit(g.ymsk, j)) {
+                if !g.op.accumulates() {
+                    out.set_f32_at(i, j, 0.0);
+                }
+                continue;
+            }
+            let p = x.f32(i) * y.f32(j);
+            out.set_f32_at(i, j, float_combine_f32(g.op, p, acc.f32_at(i, j)));
+        }
+    }
+    out
+}
+
+/// Shared fp16/bf16 rank-2 path: inputs converted to f32 (once per lane —
+/// the conversion is the hot cost), the two partial products summed in f32
+/// (the MME accumulates rank-2 products in single precision), then
+/// combined per the suffix.
+fn ger_f16ish(g: &Ger, x: Vsr, y: Vsr, acc: &Acc, lane: impl Fn(&Vsr, usize) -> f32) -> Acc {
+    // pre-decode all 8 lanes of each operand exactly once
+    let mut xl = [0f32; 8];
+    let mut yl = [0f32; 8];
+    for k in 0..8 {
+        xl[k] = lane(&x, k);
+        yl[k] = lane(&y, k);
+    }
+    let mut out = *acc;
+    // fast path: conventional form (all masks enabled)
+    if !g.prefixed {
+        for i in 0..4 {
+            for j in 0..4 {
+                let p = xl[2 * i] * yl[2 * j] + xl[2 * i + 1] * yl[2 * j + 1];
+                out.set_f32_at(i, j, float_combine_f32(g.op, p, acc.f32_at(i, j)));
+            }
+        }
+        return out;
+    }
+    for i in 0..4 {
+        for j in 0..4 {
+            if !(mask_bit(g.xmsk, i) && mask_bit(g.ymsk, j)) {
+                if !g.op.accumulates() {
+                    out.set_f32_at(i, j, 0.0);
+                }
+                continue;
+            }
+            let mut p = 0f32;
+            for k in 0..2 {
+                if mask_bit(g.pmsk, k) {
+                    p += xl[2 * i + k] * yl[2 * j + k];
+                }
+            }
+            out.set_f32_at(i, j, float_combine_f32(g.op, p, acc.f32_at(i, j)));
+        }
+    }
+    out
+}
+
+/// eq. (1) for the three integer kinds. Partial products are computed
+/// exactly (i64), summed along k, then folded into the int32 accumulator
+/// with the modulo or saturating model.
+///
+/// Perf note (§Perf): every input lane is decoded into a flat `i64` array
+/// exactly once per instruction (the per-element nibble/byte extraction
+/// dominated the original profile), and the conventional unmasked form
+/// takes a branch-free inner loop.
+fn ger_integer(g: &Ger, x: Vsr, y: Vsr, acc: &Acc) -> Acc {
+    let rank = g.kind.rank();
+    // pre-decode all 4*rank lanes of each operand
+    let mut xl = [0i64; 32];
+    let mut yl = [0i64; 32];
+    match g.kind {
+        GerKind::I16Ger2 => {
+            for l in 0..8 {
+                xl[l] = i64::from(x.i16(l));
+                yl[l] = i64::from(y.i16(l));
+            }
+        }
+        // X signed, Y unsigned (§II-B.2)
+        GerKind::I8Ger4 => {
+            for l in 0..16 {
+                xl[l] = i64::from(x.i8(l));
+                yl[l] = i64::from(y.u8(l));
+            }
+        }
+        GerKind::I4Ger8 => {
+            // unpack two nibbles per byte in one pass
+            for b in 0..16 {
+                let (xb, yb) = (x.0[b], y.0[b]);
+                xl[2 * b] = i64::from(crate::isa::types::int4_sext(xb & 0xf));
+                xl[2 * b + 1] = i64::from(crate::isa::types::int4_sext(xb >> 4));
+                yl[2 * b] = i64::from(crate::isa::types::int4_sext(yb & 0xf));
+                yl[2 * b + 1] = i64::from(crate::isa::types::int4_sext(yb >> 4));
+            }
+        }
+        _ => unreachable!(),
+    }
+    let mut out = *acc;
+    let fold = |op: AccOp, prev: i32, sum: i64| match op {
+        AccOp::New => mod_add_i32(0, sum),
+        AccOp::NewS => sat_add_i32(0, sum),
+        AccOp::PP => mod_add_i32(prev, sum),
+        AccOp::SPP => sat_add_i32(prev, sum),
+        _ => unreachable!("validated in exec_ger"),
+    };
+    if !g.prefixed {
+        // fast path: no mask tests in the inner loop
+        for i in 0..4 {
+            let xrow = &xl[i * rank..(i + 1) * rank];
+            for j in 0..4 {
+                let yrow = &yl[j * rank..(j + 1) * rank];
+                let sum: i64 = xrow.iter().zip(yrow).map(|(&a, &b)| a * b).sum();
+                out.set_i32_at(i, j, fold(g.op, acc.i32_at(i, j), sum));
+            }
+        }
+        return out;
+    }
+    for i in 0..4 {
+        for j in 0..4 {
+            if !(mask_bit(g.xmsk, i) && mask_bit(g.ymsk, j)) {
+                if !g.op.accumulates() {
+                    out.set_i32_at(i, j, 0);
+                }
+                continue;
+            }
+            let mut sum = 0i64;
+            for k in 0..rank {
+                if mask_bit(g.pmsk, k) {
+                    sum += xl[i * rank + k] * yl[j * rank + k];
+                }
+            }
+            out.set_i32_at(i, j, fold(g.op, acc.i32_at(i, j), sum));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::types::{f32_to_bf16, f32_to_f16, int4_pack};
+
+    fn m() -> Machine {
+        Machine::new(4096)
+    }
+
+    /// naive oracle: 4xk times kx4 -> 4x4 (f32)
+    fn outer_f32(x: &[f32], y: &[f32], k: usize) -> [[f32; 4]; 4] {
+        let mut out = [[0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for p in 0..k {
+                    out[i][j] += x[i * k + p] * y[j * k + p];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn xvf32ger_outer_product() {
+        let mut mm = m();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [0.5f32, -1.0, 2.0, 0.0];
+        mm.regs.vsr[32] = Vsr::from_f32x4(x);
+        mm.regs.vsr[33] = Vsr::from_f32x4(y);
+        mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::New, 0, 32, 33)).unwrap();
+        assert_eq!(mm.regs.acc[0].to_f32_4x4(), outer_f32(&x, &y, 1));
+        assert!(mm.regs.primed[0], "non-accumulate form primes");
+    }
+
+    #[test]
+    fn xvf32ger_suffixes() {
+        // A = +-P +- A for the four suffixes
+        for (op, expect) in [
+            (AccOp::PP, 2.0f32 * 3.0 + 10.0),
+            (AccOp::NP, -2.0f32 * 3.0 + 10.0),
+            (AccOp::PN, 2.0f32 * 3.0 - 10.0),
+            (AccOp::NN, -2.0f32 * 3.0 - 10.0),
+        ] {
+            let mut mm = m();
+            mm.regs.vsr[32] = Vsr::from_f32x4([2.0; 4]);
+            mm.regs.vsr[33] = Vsr::from_f32x4([3.0; 4]);
+            mm.regs.acc[1] = Acc::from_f32_4x4([[10.0; 4]; 4]);
+            mm.regs.primed[1] = true;
+            mm.exec_ger(&Ger::new(GerKind::F32Ger, op, 1, 32, 33)).unwrap();
+            assert_eq!(mm.regs.acc[1].f32_at(2, 3), expect, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn xvf64ger_pair_and_shape() {
+        let mut mm = m();
+        let x = [1.5f64, -2.0, 0.25, 8.0];
+        let y = [3.0f64, -1.0];
+        mm.regs.vsr[40] = Vsr::from_f64x2([x[0], x[1]]);
+        mm.regs.vsr[41] = Vsr::from_f64x2([x[2], x[3]]);
+        mm.regs.vsr[42] = Vsr::from_f64x2(y);
+        mm.exec_ger(&Ger::new(GerKind::F64Ger, AccOp::New, 2, 40, 42)).unwrap();
+        let a = mm.regs.acc[2].to_f64_4x2();
+        for i in 0..4 {
+            for j in 0..2 {
+                assert_eq!(a[i][j], x[i] * y[j]);
+            }
+        }
+        // odd X register is architecturally invalid
+        let err = mm.exec_ger(&Ger::new(GerKind::F64Ger, AccOp::New, 2, 41, 42));
+        assert_eq!(err, Err(ExecError::OddF64Pair { vsr: 41 }));
+    }
+
+    #[test]
+    fn xvf16ger2_and_bf16_rank2() {
+        let mut mm = m();
+        // X 4x2 fp16, Y 4x2 fp16
+        let xs: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let ys: Vec<f32> = (0..8).map(|i| 1.0 - i as f32 * 0.25).collect();
+        let xh: Vec<u16> = xs.iter().map(|&v| f32_to_f16(v)).collect();
+        let yh: Vec<u16> = ys.iter().map(|&v| f32_to_f16(v)).collect();
+        mm.regs.vsr[34] = Vsr::from_u16x8(xh.clone().try_into().unwrap());
+        mm.regs.vsr[35] = Vsr::from_u16x8(yh.clone().try_into().unwrap());
+        mm.exec_ger(&Ger::new(GerKind::F16Ger2, AccOp::New, 3, 34, 35)).unwrap();
+        assert_eq!(mm.regs.acc[3].to_f32_4x4(), outer_f32(&xs, &ys, 2));
+
+        // bf16 path (values chosen exactly representable in bf16)
+        let xb: Vec<u16> = xs.iter().map(|&v| f32_to_bf16(v)).collect();
+        let yb: Vec<u16> = ys.iter().map(|&v| f32_to_bf16(v)).collect();
+        mm.regs.vsr[36] = Vsr::from_u16x8(xb.try_into().unwrap());
+        mm.regs.vsr[37] = Vsr::from_u16x8(yb.try_into().unwrap());
+        mm.exec_ger(&Ger::new(GerKind::Bf16Ger2, AccOp::New, 4, 36, 37)).unwrap();
+        assert_eq!(mm.regs.acc[4].to_f32_4x4(), outer_f32(&xs, &ys, 2));
+    }
+
+    #[test]
+    fn xvi16ger2_modulo_and_saturating() {
+        let mut mm = m();
+        // choose values whose rank-2 product overflows i32: 2 * 30000*30000 = 1.8e9 ok;
+        // accumulate twice to overflow
+        let x = [30000i16; 8].map(|v| v as u16);
+        mm.regs.vsr[38] = Vsr::from_u16x8(x);
+        mm.regs.vsr[39] = Vsr::from_u16x8(x);
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::New, 5, 38, 39)).unwrap();
+        let first = mm.regs.acc[5].i32_at(0, 0);
+        assert_eq!(first, 2 * 30000 * 30000);
+        // modulo accumulate wraps
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::PP, 5, 38, 39)).unwrap();
+        assert_eq!(mm.regs.acc[5].i32_at(0, 0), first.wrapping_add(first));
+        // saturating accumulate clamps
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::New, 5, 38, 39)).unwrap();
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::SPP, 5, 38, 39)).unwrap();
+        assert_eq!(mm.regs.acc[5].i32_at(0, 0), i32::MAX);
+        // xvi16ger2s: the non-accumulate saturating form clamps the product sum
+        let big = [i16::MIN as u16; 8];
+        mm.regs.vsr[38] = Vsr::from_u16x8(big);
+        mm.regs.vsr[39] = Vsr::from_u16x8(big);
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::NewS, 6, 38, 39)).unwrap();
+        // 2 * (-32768)^2 = 2^31 exactly -> saturates to i32::MAX
+        assert_eq!(mm.regs.acc[6].i32_at(0, 0), i32::MAX);
+        // while the modulo form wraps to i32::MIN
+        mm.exec_ger(&Ger::new(GerKind::I16Ger2, AccOp::New, 6, 38, 39)).unwrap();
+        assert_eq!(mm.regs.acc[6].i32_at(0, 0), i32::MIN);
+    }
+
+    #[test]
+    fn xvi8ger4_mixed_signedness() {
+        let mut mm = m();
+        // X signed int8 (incl. negatives), Y UNSIGNED uint8 (values > 127)
+        let mut xb = [0u8; 16];
+        let mut yb = [0u8; 16];
+        for i in 0..16 {
+            xb[i] = (i as i32 * 17 - 120) as i8 as u8;
+            yb[i] = (i * 16) as u8; // up to 240: exercises unsignedness
+        }
+        mm.regs.vsr[44] = Vsr::from_u8x16(xb);
+        mm.regs.vsr[45] = Vsr::from_u8x16(yb);
+        mm.exec_ger(&Ger::new(GerKind::I8Ger4, AccOp::New, 7, 44, 45)).unwrap();
+        let mut expect = [[0i32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    expect[i][j] += i32::from(xb[4 * i + k] as i8) * i32::from(yb[4 * j + k]);
+                }
+            }
+        }
+        assert_eq!(mm.regs.acc[7].to_i32_4x4(), expect);
+    }
+
+    #[test]
+    fn xvi4ger8_rank8() {
+        let mut mm = m();
+        let mut xb = [0u8; 16];
+        let mut yb = [0u8; 16];
+        // lanes -8..7 cycling
+        for b in 0..16 {
+            xb[b] = int4_pack((b as i32 % 16) - 8, ((b as i32 + 3) % 16) - 8);
+            yb[b] = int4_pack(7 - (b as i32 % 16), (b as i32 % 13) - 6);
+        }
+        mm.regs.vsr[46] = Vsr::from_u8x16(xb);
+        mm.regs.vsr[47] = Vsr::from_u8x16(yb);
+        mm.exec_ger(&Ger::new(GerKind::I4Ger8, AccOp::New, 0, 46, 47)).unwrap();
+        let x = mm.regs.vsr[46];
+        let y = mm.regs.vsr[47];
+        let mut expect = [[0i32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..8 {
+                    expect[i][j] += x.i4(8 * i + k) * y.i4(8 * j + k);
+                }
+            }
+        }
+        assert_eq!(mm.regs.acc[0].to_i32_4x4(), expect);
+    }
+
+    #[test]
+    fn eq3_masking() {
+        // pmxvf16ger2pp: x mask disables rows, y mask cols, p mask products
+        let mut mm = m();
+        let xs: Vec<f32> = (0..8).map(|i| (i + 1) as f32).collect();
+        let ys: Vec<f32> = (0..8).map(|i| (8 - i) as f32).collect();
+        let xh: Vec<u16> = xs.iter().map(|&v| f32_to_f16(v)).collect();
+        let yh: Vec<u16> = ys.iter().map(|&v| f32_to_f16(v)).collect();
+        mm.regs.vsr[34] = Vsr::from_u16x8(xh.try_into().unwrap());
+        mm.regs.vsr[35] = Vsr::from_u16x8(yh.try_into().unwrap());
+        mm.regs.acc[2] = Acc::from_f32_4x4([[100.0; 4]; 4]);
+        mm.regs.primed[2] = true;
+        let xmsk = 0b0101u8; // rows 0, 2
+        let ymsk = 0b0011u8; // cols 0, 1
+        let pmsk = 0b10u8; // product k=1 only
+        mm.exec_ger(&Ger::prefixed(GerKind::F16Ger2, AccOp::PP, 2, 34, 35, xmsk, ymsk, pmsk))
+            .unwrap();
+        let a = mm.regs.acc[2].to_f32_4x4();
+        for i in 0..4 {
+            for j in 0..4 {
+                let enabled = (xmsk >> i) & 1 == 1 && (ymsk >> j) & 1 == 1;
+                let expect = if enabled { 100.0 + xs[2 * i + 1] * ys[2 * j + 1] } else { 100.0 };
+                assert_eq!(a[i][j], expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn priming_state_machine() {
+        let mut mm = m();
+        mm.regs.vsr[32] = Vsr::from_f32x4([1.0; 4]);
+        mm.regs.vsr[33] = Vsr::from_f32x4([1.0; 4]);
+        // accumulate into unprimed accumulator -> error
+        let err = mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::PP, 0, 32, 33));
+        assert!(matches!(err, Err(ExecError::UnprimedAccumulator { acc: 0, .. })));
+        // xxsetaccz primes
+        mm.exec_straightline(&Inst::XxSetAccZ { acc: 0 }).unwrap();
+        mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::PP, 0, 32, 33)).unwrap();
+        // xxmfacc deprimes and deposits rows into VSR[0..4]
+        mm.exec_straightline(&Inst::XxMfAcc { acc: 0 }).unwrap();
+        assert!(!mm.regs.primed[0]);
+        assert_eq!(mm.regs.vsr[0].f32(0), 1.0);
+        // accumulate after depriming -> error again
+        let err = mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::PP, 0, 32, 33));
+        assert!(matches!(err, Err(ExecError::UnprimedAccumulator { .. })));
+        // xxmfacc on unprimed acc -> error
+        let err = mm.exec_straightline(&Inst::XxMfAcc { acc: 0 });
+        assert!(matches!(err, Err(ExecError::UnprimedAccumulator { .. })));
+    }
+
+    #[test]
+    fn vsr_group_protection() {
+        let mut mm = m();
+        mm.exec_straightline(&Inst::XxSetAccZ { acc: 1 }).unwrap();
+        // VSR[4..8] belong to primed acc1: loads must fail in strict mode
+        let err = mm.exec_straightline(&Inst::Lxv { xt: 5, ra: 1, dq: 0 });
+        assert_eq!(err, Err(ExecError::VsrInUseByAccumulator { vsr: 5, acc: 1 }));
+        // and using them as inputs of a ger targeting *another* accumulator
+        // must fail too (the group is owned by primed acc1)
+        mm.regs.vsr[32] = Vsr::from_f32x4([1.0; 4]);
+        let err = mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::New, 2, 32, 6));
+        assert!(matches!(err, Err(ExecError::VsrInUseByAccumulator { vsr: 6, acc: 1 })));
+        // operand overlapping the *target* accumulator is rejected even unprimed
+        let mut mm = m();
+        mm.regs.vsr[32] = Vsr::from_f32x4([1.0; 4]);
+        let err = mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::New, 1, 32, 4));
+        assert_eq!(err, Err(ExecError::OperandOverlapsAccumulator { acc: 1, vsr: 4 }));
+        // VSR[32:63] never conflict (Figure 1)
+        mm.exec_straightline(&Inst::XxSetAccZ { acc: 7 }).unwrap();
+        mm.exec_straightline(&Inst::Lxv { xt: 63, ra: 1, dq: 0 }).unwrap();
+    }
+
+    #[test]
+    fn ctr_loop_runs() {
+        // a tiny program: accumulate [1,1,1,1] outer [1,1,1,1] N times
+        let mut mm = m();
+        mm.write_f32s(0, &[1.0; 8]);
+        mm.gpr[4] = 0;
+        mm.gpr[9] = 5; // N
+        let prog = vec![
+            Inst::Mtctr { rs: 9 },
+            Inst::Lxv { xt: 32, ra: 4, dq: 0 },
+            Inst::Lxv { xt: 33, ra: 4, dq: 16 },
+            Inst::XxSetAccZ { acc: 0 },
+            // loop body: one rank-1 update, 4 bytes; bdnz jumps back 4
+            Inst::Ger(Ger::new(GerKind::F32Ger, AccOp::PP, 0, 32, 33)),
+            Inst::Bdnz { bd: -4 },
+            Inst::XxMfAcc { acc: 0 },
+            Inst::Stxv { xs: 0, ra: 4, dq: 64 },
+            Inst::Blr,
+        ];
+        mm.run(&prog, 1000).unwrap();
+        assert_eq!(mm.read_f32s(64, 4), vec![5.0; 4]);
+        assert_eq!(mm.stats.flops, 5 * 32);
+        assert_eq!(mm.stats.loads, 2);
+        assert_eq!(mm.stats.stores, 1);
+    }
+
+    #[test]
+    fn fuel_guard() {
+        let mut mm = m();
+        mm.gpr[9] = 0; // mtctr 0 -> 2^64 iterations
+        let prog = vec![Inst::Mtctr { rs: 9 }, Inst::Nop, Inst::Bdnz { bd: -4 }, Inst::Blr];
+        let err = mm.run(&prog, 100);
+        assert_eq!(err, Err(ExecError::FuelExhausted { steps: 100 }));
+    }
+
+    #[test]
+    fn bad_branch_target() {
+        let mut mm = m();
+        mm.gpr[9] = 2;
+        // bdnz -2 is not an instruction boundary
+        let prog = vec![Inst::Mtctr { rs: 9 }, Inst::Bdnz { bd: -2 }, Inst::Blr];
+        let err = mm.run(&prog, 100);
+        assert!(matches!(err, Err(ExecError::BadBranchTarget { .. })));
+    }
+
+    #[test]
+    fn mem_bounds() {
+        let mut mm = Machine::new(32);
+        let err = mm.exec_straightline(&Inst::Lxv { xt: 32, ra: 0, dq: 32 });
+        assert!(matches!(err, Err(ExecError::MemOutOfBounds { .. })));
+        let err = mm.exec_straightline(&Inst::Lxvp { xtp: 32, ra: 0, dq: 16 });
+        assert!(matches!(err, Err(ExecError::MemOutOfBounds { .. })));
+    }
+
+    #[test]
+    fn invalid_forms_rejected() {
+        let mut mm = m();
+        mm.regs.vsr[32] = Vsr::from_f32x4([1.0; 4]);
+        mm.regs.vsr[33] = Vsr::from_f32x4([1.0; 4]);
+        let err = mm.exec_ger(&Ger::new(GerKind::F32Ger, AccOp::SPP, 0, 32, 33));
+        assert!(matches!(err, Err(ExecError::InvalidForm { .. })));
+        let err = mm.exec_ger(&Ger::new(GerKind::I4Ger8, AccOp::NN, 0, 32, 33));
+        assert!(matches!(err, Err(ExecError::InvalidForm { .. })));
+    }
+
+    #[test]
+    fn masked_new_form_zeroes_disabled_elements() {
+        // priming form with masks: disabled elements are written as zero
+        let mut mm = m();
+        mm.regs.vsr[32] = Vsr::from_f32x4([2.0; 4]);
+        mm.regs.vsr[33] = Vsr::from_f32x4([3.0; 4]);
+        mm.regs.acc[0] = Acc::from_f32_4x4([[7.0; 4]; 4]); // stale garbage
+        mm.exec_ger(&Ger::prefixed(GerKind::F32Ger, AccOp::New, 0, 32, 33, 0b0001, 0b0001, 0xff))
+            .unwrap();
+        let a = mm.regs.acc[0].to_f32_4x4();
+        assert_eq!(a[0][0], 6.0);
+        for i in 0..4 {
+            for j in 0..4 {
+                if (i, j) != (0, 0) {
+                    assert_eq!(a[i][j], 0.0, "({i},{j}) must be zeroed by the priming form");
+                }
+            }
+        }
+    }
+}

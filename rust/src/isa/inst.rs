@@ -1,0 +1,370 @@
+//! The instruction set modeled by the simulator: every MMA instruction of
+//! the paper's Table I (accumulator moves, integer and floating-point rank-k
+//! updates, conventional and prefixed forms) plus the minimal Power ISA
+//! support subset that the paper's kernels use (Figure 7: `lxv`, `lxvp`,
+//! `stxv`, `addi`, `mtctr`, `bdnz`, `blr`).
+//!
+//! Mask convention: the prefixed (`pm…`) forms carry X/Y/P masks. In this
+//! crate a mask is a `u8` where **bit `i` (LSB-first) enables element `i`**
+//! (row `i` of X, column `j` of Y^T, or product `k`). The binary encoder
+//! converts to the MSB-first immediate field order used by the ISA
+//! (`x = x0x1x2x3` in eq. 3).
+
+/// Input element type / shape family of a rank-k update (Table I b, c).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum GerKind {
+    /// `xvi4ger8`: X, Y are 4×8 int4 matrices; A is 4×4 int32. k = 8.
+    I4Ger8,
+    /// `xvi8ger4`: X is 4×4 int8, Y is 4×4 **u**int8; A is 4×4 int32. k = 4.
+    I8Ger4,
+    /// `xvi16ger2`: X, Y are 4×2 int16 matrices; A is 4×4 int32. k = 2.
+    I16Ger2,
+    /// `xvbf16ger2`: X, Y are 4×2 bfloat16; A is 4×4 fp32. k = 2.
+    Bf16Ger2,
+    /// `xvf16ger2`: X, Y are 4×2 IEEE fp16; A is 4×4 fp32. k = 2.
+    F16Ger2,
+    /// `xvf32ger`: X, Y are 4-element fp32 vectors; A is 4×4 fp32. k = 1.
+    F32Ger,
+    /// `xvf64ger`: X is a 4-element fp64 vector (an even-odd VSR *pair*),
+    /// Y a 2-element fp64 vector; A is 4×2 fp64. k = 1.
+    F64Ger,
+}
+
+impl GerKind {
+    /// The rank `k` of the update (inner dimension).
+    pub fn rank(self) -> usize {
+        match self {
+            GerKind::I4Ger8 => 8,
+            GerKind::I8Ger4 => 4,
+            GerKind::I16Ger2 | GerKind::Bf16Ger2 | GerKind::F16Ger2 => 2,
+            GerKind::F32Ger | GerKind::F64Ger => 1,
+        }
+    }
+
+    /// Accumulator shape `(rows, cols)`.
+    pub fn acc_shape(self) -> (usize, usize) {
+        match self {
+            GerKind::F64Ger => (4, 2),
+            _ => (4, 4),
+        }
+    }
+
+    /// True for the integer kinds (int32 accumulation).
+    pub fn is_integer(self) -> bool {
+        matches!(self, GerKind::I4Ger8 | GerKind::I8Ger4 | GerKind::I16Ger2)
+    }
+
+    /// Floating-point multiply-add *flops* performed by one unmasked
+    /// instruction (2 flops per multiply-add). Integer kinds report their
+    /// equivalent int-op count.
+    pub fn flops(self) -> u64 {
+        let (r, c) = self.acc_shape();
+        (r * c * self.rank() * 2) as u64
+    }
+
+    /// Base mnemonic (without suffix), e.g. `xvf64ger`.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            GerKind::I4Ger8 => "xvi4ger8",
+            GerKind::I8Ger4 => "xvi8ger4",
+            GerKind::I16Ger2 => "xvi16ger2",
+            GerKind::Bf16Ger2 => "xvbf16ger2",
+            GerKind::F16Ger2 => "xvf16ger2",
+            GerKind::F32Ger => "xvf32ger",
+            GerKind::F64Ger => "xvf64ger",
+        }
+    }
+
+    pub const ALL: [GerKind; 7] = [
+        GerKind::I4Ger8,
+        GerKind::I8Ger4,
+        GerKind::I16Ger2,
+        GerKind::Bf16Ger2,
+        GerKind::F16Ger2,
+        GerKind::F32Ger,
+        GerKind::F64Ger,
+    ];
+}
+
+/// How the product `XYᵀ` combines with the target accumulator (§II-B):
+/// the 2-letter float suffixes (`pp`/`np`/`pn`/`nn`), the integer modulo
+/// (`pp`) and saturating (`s`, `spp`) models, and the suffix-less priming
+/// forms.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum AccOp {
+    /// No suffix: `A = XYᵀ`. Writes (and thereby *primes*) the accumulator.
+    New,
+    /// `s` (integer only, `xvi16ger2s`): `A = sat(XYᵀ)`. Primes.
+    NewS,
+    /// `pp`: `A = XYᵀ + A` (requires a primed accumulator).
+    PP,
+    /// `np` (float only): `A = -XYᵀ + A`.
+    NP,
+    /// `pn` (float only): `A = XYᵀ - A`.
+    PN,
+    /// `nn` (float only): `A = -XYᵀ - A`.
+    NN,
+    /// `spp` (integer only): `A = sat(XYᵀ + A)`.
+    SPP,
+}
+
+impl AccOp {
+    /// True for the forms that read the previous accumulator value.
+    pub fn accumulates(self) -> bool {
+        !matches!(self, AccOp::New | AccOp::NewS)
+    }
+
+    /// Mnemonic suffix, e.g. `"pp"`.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            AccOp::New => "",
+            AccOp::NewS => "s",
+            AccOp::PP => "pp",
+            AccOp::NP => "np",
+            AccOp::PN => "pn",
+            AccOp::NN => "nn",
+            AccOp::SPP => "spp",
+        }
+    }
+
+    /// Is this (kind, op) combination architected? (Table I.)
+    pub fn valid_for(self, kind: GerKind) -> bool {
+        use AccOp::*;
+        match kind {
+            // xvi4ger8[pp]
+            GerKind::I4Ger8 => matches!(self, New | PP),
+            // xvi8ger4[pp,spp]
+            GerKind::I8Ger4 => matches!(self, New | PP | SPP),
+            // xvi16ger2[s][pp] — i.e. base, s, pp, spp
+            GerKind::I16Ger2 => matches!(self, New | NewS | PP | SPP),
+            // float: base, pp, np, pn, nn
+            GerKind::Bf16Ger2 | GerKind::F16Ger2 | GerKind::F32Ger | GerKind::F64Ger => {
+                matches!(self, New | PP | NP | PN | NN)
+            }
+        }
+    }
+}
+
+/// A rank-k update instruction instance (conventional or prefixed form).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Ger {
+    pub kind: GerKind,
+    pub op: AccOp,
+    /// Target accumulator, 0..8.
+    pub acc: u8,
+    /// X source VSR (for `F64Ger` the *even* register of the even-odd pair).
+    pub xa: u8,
+    /// Y source VSR.
+    pub yb: u8,
+    /// True for the `pm…` prefixed form; masks below apply only then.
+    pub prefixed: bool,
+    /// Row mask for X: bit `i` enables row `i` (4 bits used).
+    pub xmsk: u8,
+    /// Column mask for Yᵀ: bit `j` enables column `j` (4 bits; 2 for f64).
+    pub ymsk: u8,
+    /// Product mask: bit `k` enables partial product `k` (rank bits used;
+    /// absent — always all-ones — for the rank-1 `xvf32ger`/`xvf64ger`).
+    pub pmsk: u8,
+}
+
+impl Ger {
+    /// Conventional (non-prefixed) form: all masks enabled.
+    pub fn new(kind: GerKind, op: AccOp, acc: u8, xa: u8, yb: u8) -> Self {
+        Ger { kind, op, acc, xa, yb, prefixed: false, xmsk: 0xf, ymsk: 0xf, pmsk: 0xff }
+    }
+
+    /// Prefixed (`pm…`) masked form.
+    pub fn prefixed(kind: GerKind, op: AccOp, acc: u8, xa: u8, yb: u8, xmsk: u8, ymsk: u8, pmsk: u8) -> Self {
+        Ger { kind, op, acc, xa, yb, prefixed: true, xmsk, ymsk, pmsk }
+    }
+
+    /// Full mnemonic including `pm` prefix and suffix.
+    pub fn mnemonic(&self) -> String {
+        let pm = if self.prefixed { "pm" } else { "" };
+        format!("{}{}{}", pm, self.kind.mnemonic(), self.op.suffix())
+    }
+}
+
+/// One instruction of the simulated machine.
+///
+/// MMA instructions implement paper §II; the rest is the support subset the
+/// paper's kernels rely on (Figure 7). Memory operands address the
+/// `Machine`'s flat memory through a GPR base plus displacement, exactly like
+/// the `DQ`-form loads in the paper's object code.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Inst {
+    // ---- MMA: accumulator moves (Table I a) ----
+    /// `xxsetaccz a` — zero + prime the accumulator.
+    XxSetAccZ { acc: u8 },
+    /// `xxmfacc a` — move accumulator to its VSR group (deprimes).
+    XxMfAcc { acc: u8 },
+    /// `xxmtacc a` — move the VSR group into the accumulator (primes).
+    XxMtAcc { acc: u8 },
+    // ---- MMA: rank-k updates (Table I b, c) ----
+    Ger(Ger),
+    // ---- VSX memory (DQ-form) ----
+    /// `lxv xt, dq(ra)` — load 16 bytes.
+    Lxv { xt: u8, ra: u8, dq: i32 },
+    /// `lxvp xtp, dq(ra)` — load 32 bytes into the even-odd pair `xtp, xtp+1`.
+    Lxvp { xtp: u8, ra: u8, dq: i32 },
+    /// `stxv xs, dq(ra)` — store 16 bytes.
+    Stxv { xs: u8, ra: u8, dq: i32 },
+    /// `stxvp xsp, dq(ra)` — store the pair `xsp, xsp+1` (32 bytes).
+    Stxvp { xsp: u8, ra: u8, dq: i32 },
+    // ---- VSX vector arithmetic (the POWER9-compliant baseline path, §VI) ----
+    /// `xvmaddadp xt, xa, xb` — two-lane f64 fused multiply-add:
+    /// `xt[i] += xa[i] * xb[i]`.
+    XvMaddaDp { xt: u8, xa: u8, xb: u8 },
+    /// `xvmaddasp xt, xa, xb` — four-lane f32 fused multiply-add.
+    XvMaddaSp { xt: u8, xa: u8, xb: u8 },
+    /// `xxspltd xt, xa, h` — splat f64 lane `h` of `xa` to both lanes
+    /// (the broadcast step vector code needs to build an outer product,
+    /// §III comparison point 4).
+    XxSpltd { xt: u8, xa: u8, h: u8 },
+    /// `xxspltw xt, xa, w` — splat f32 lane `w` of `xa` to all four lanes.
+    XxSpltw { xt: u8, xa: u8, w: u8 },
+    /// `xxlor xt, xa, xb` — bitwise OR; `xxlor t,a,a` is the canonical
+    /// vector-register copy (what compilers emit around
+    /// `__builtin_mma_assemble_acc` / `disassemble_acc`).
+    Xxlor { xt: u8, xa: u8, xb: u8 },
+    /// `xxlxor xt, xa, xb` — bitwise XOR; `xxlxor t,t,t` is the canonical
+    /// register-zeroing idiom used by vector kernels.
+    Xxlxor { xt: u8, xa: u8, xb: u8 },
+    // ---- fixed-point bookkeeping ----
+    /// `addi rt, ra, si` (`li rt, si` when `ra = 0`).
+    Addi { rt: u8, ra: u8, si: i32 },
+    /// `mtctr rs` — move GPR to the count register.
+    Mtctr { rs: u8 },
+    // ---- control ----
+    /// `bdnz target` — decrement CTR, branch to byte offset `bd` (relative
+    /// to this instruction) if CTR ≠ 0.
+    Bdnz { bd: i32 },
+    /// `blr` — end of kernel.
+    Blr,
+    /// `nop` (`ori 0,0,0`).
+    Nop,
+}
+
+impl Inst {
+    /// Byte size in the instruction stream: prefixed instructions are 64-bit
+    /// (§II-C), everything else 32-bit.
+    pub fn size(&self) -> u32 {
+        match self {
+            Inst::Ger(g) if g.prefixed => 8,
+            _ => 4,
+        }
+    }
+
+    /// True for instructions executed by the Matrix Math Engine.
+    pub fn is_mma(&self) -> bool {
+        matches!(
+            self,
+            Inst::Ger(_) | Inst::XxSetAccZ { .. } | Inst::XxMfAcc { .. } | Inst::XxMtAcc { .. }
+        )
+    }
+
+    /// Bytes moved to/from memory.
+    pub fn mem_bytes(&self) -> u32 {
+        match self {
+            Inst::Lxv { .. } | Inst::Stxv { .. } => 16,
+            Inst::Lxvp { .. } | Inst::Stxvp { .. } => 32,
+            _ => 0,
+        }
+    }
+
+    /// Floating-point (or integer-op) work of the instruction, for
+    /// flops/cycle accounting. Masked (prefixed) forms count only enabled
+    /// multiply-adds, mirroring "computations on disabled rows and columns
+    /// are not performed" (§II-C).
+    pub fn flops(&self) -> u64 {
+        match self {
+            Inst::XvMaddaDp { .. } => 4,  // 2 lanes x FMA
+            Inst::XvMaddaSp { .. } => 8,  // 4 lanes x FMA
+            Inst::Ger(g) => {
+                if !g.prefixed {
+                    g.kind.flops()
+                } else {
+                    let (rows, cols) = g.kind.acc_shape();
+                    let r = (g.xmsk & ((1 << rows) - 1)).count_ones() as u64;
+                    let c = (g.ymsk & ((1u16 << cols) - 1) as u8).count_ones() as u64;
+                    let p = (g.pmsk & ((1u16 << g.kind.rank()) - 1) as u8).count_ones() as u64;
+                    r * c * p * 2
+                }
+            }
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_validity_matrix() {
+        use AccOp::*;
+        // Float kinds accept exactly {New, PP, NP, PN, NN}
+        for kind in [GerKind::Bf16Ger2, GerKind::F16Ger2, GerKind::F32Ger, GerKind::F64Ger] {
+            for op in [New, PP, NP, PN, NN] {
+                assert!(op.valid_for(kind), "{kind:?} {op:?}");
+            }
+            for op in [NewS, SPP] {
+                assert!(!op.valid_for(kind), "{kind:?} {op:?}");
+            }
+        }
+        // xvi16ger2[s][pp]
+        assert!(New.valid_for(GerKind::I16Ger2));
+        assert!(NewS.valid_for(GerKind::I16Ger2));
+        assert!(PP.valid_for(GerKind::I16Ger2));
+        assert!(SPP.valid_for(GerKind::I16Ger2));
+        assert!(!NP.valid_for(GerKind::I16Ger2));
+        // xvi8ger4[pp,spp]: saturating only in accumulation form (§II-B.2)
+        assert!(!NewS.valid_for(GerKind::I8Ger4));
+        assert!(SPP.valid_for(GerKind::I8Ger4));
+        // xvi4ger8[pp]: modulo only
+        assert!(!NewS.valid_for(GerKind::I4Ger8));
+        assert!(!SPP.valid_for(GerKind::I4Ger8));
+    }
+
+    #[test]
+    fn shapes_and_flops() {
+        assert_eq!(GerKind::F64Ger.acc_shape(), (4, 2));
+        assert_eq!(GerKind::F32Ger.acc_shape(), (4, 4));
+        assert_eq!(GerKind::F64Ger.flops(), 16);
+        assert_eq!(GerKind::F32Ger.flops(), 32);
+        assert_eq!(GerKind::F16Ger2.flops(), 64);
+        assert_eq!(GerKind::I8Ger4.flops(), 128);
+        assert_eq!(GerKind::I4Ger8.flops(), 256);
+        assert_eq!(GerKind::I16Ger2.rank(), 2);
+    }
+
+    #[test]
+    fn masked_flops_eq3() {
+        // pmxvf16ger2 with 2 rows, 3 cols, 1 product enabled:
+        // 2*3*1 MACs = 12 flops
+        let g = Ger::prefixed(GerKind::F16Ger2, AccOp::PP, 0, 32, 33, 0b0011, 0b0111, 0b01);
+        assert_eq!(Inst::Ger(g).flops(), 12);
+        // unmasked conventional form counts the full tile
+        let g = Ger::new(GerKind::F16Ger2, AccOp::PP, 0, 32, 33);
+        assert_eq!(Inst::Ger(g).flops(), 64);
+    }
+
+    #[test]
+    fn sizes() {
+        let conv = Inst::Ger(Ger::new(GerKind::F32Ger, AccOp::New, 0, 32, 33));
+        let pfx = Inst::Ger(Ger::prefixed(GerKind::F32Ger, AccOp::New, 0, 32, 33, 0xf, 0xf, 0xff));
+        assert_eq!(conv.size(), 4);
+        assert_eq!(pfx.size(), 8);
+        assert_eq!(Inst::Blr.size(), 4);
+    }
+
+    #[test]
+    fn mnemonics() {
+        assert_eq!(Ger::new(GerKind::F64Ger, AccOp::PP, 0, 0, 0).mnemonic(), "xvf64gerpp");
+        assert_eq!(Ger::new(GerKind::I16Ger2, AccOp::NewS, 0, 0, 0).mnemonic(), "xvi16ger2s");
+        assert_eq!(
+            Ger::prefixed(GerKind::Bf16Ger2, AccOp::NN, 0, 0, 0, 0xf, 0xf, 0x3).mnemonic(),
+            "pmxvbf16ger2nn"
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Functional model of the Power ISA v3.1 **VSX Matrix-Multiply Assist**
+//! facility (paper §II) plus the minimal surrounding Power ISA subset needed
+//! to run the paper's kernels (VSX loads/stores, fixed-point bookkeeping and
+//! the CTR loop).
+//!
+//! Submodules:
+//!
+//! * [`types`]  — scalar formats: IEEE fp16, bfloat16, signed int4 packing,
+//!   saturating 32-bit accumulation.
+//! * [`regs`]   — the register state: 64×128-bit VSRs, 8×512-bit accumulators
+//!   with the VSR-group aliasing and priming rules of §II-A.
+//! * [`inst`]   — the instruction set: every Table I instruction (all suffix
+//!   forms) plus the support subset; shape/type metadata.
+//! * [`exec`]   — the functional interpreter (`Machine`): rank-k update
+//!   semantics (eq. 1–3), the priming state machine, memory, and the CTR
+//!   loop, with strict architectural checking.
+//! * [`encode`] — 32-bit word and 64-bit prefixed binary encodings;
+//!   validated against the paper's Figure 7 object code.
+//! * [`asm`]    — textual assembler / disassembler in the paper's syntax
+//!   (e.g. `xvf64gerpp a4, vs44, vs40`).
+
+pub mod asm;
+pub mod encode;
+pub mod exec;
+pub mod inst;
+pub mod regs;
+pub mod types;
+
+pub use exec::{ExecError, Machine};
+pub use inst::{AccOp, GerKind, Inst};
+pub use regs::{Acc, RegFile, Vsr, NUM_ACCS, NUM_VSRS};

@@ -1,0 +1,364 @@
+//! Register state of the MMA facility (paper §II-A, Figure 1):
+//!
+//! * 64 vector-scalar registers (`VSR[0:63]`), 128 bits each;
+//! * 8 accumulator registers (`ACC[0:7]`), 512 bits each, where `ACC[i]` is
+//!   architecturally associated with the VSR group `VSR[4i .. 4i+3]`;
+//! * the *priming* state machine: while an accumulator is primed its VSR
+//!   group must not be touched, and an unprimed accumulator must not be read
+//!   or accumulated into.
+//!
+//! Layout conventions (used consistently by `exec`, `builtins` and the
+//! kernels): an accumulator holds its 4×4 (or 4×2) matrix **row-major**, one
+//! row per associated VSR — `xxmfacc` moves row `r` of `ACC[i]` into
+//! `VSR[4i + r]`. A VSR holding a `4×k` input matrix stores element `(i, k)`
+//! at flat element index `i*k_dim + k` (row-major), matching the operand
+//! packing of the paper's Figures 5–9 kernels.
+
+use crate::isa::types::{bf16_to_f32, f16_to_f32, int4_sext};
+
+/// Number of architected vector-scalar registers.
+pub const NUM_VSRS: usize = 64;
+/// Number of architected accumulator registers.
+pub const NUM_ACCS: usize = 8;
+
+/// A 128-bit vector-scalar register.
+///
+/// Stored as 16 little-endian bytes; the typed views below interpret the
+/// register as a packed row-major matrix of the given element type.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+pub struct Vsr(pub [u8; 16]);
+
+impl std::fmt::Debug for Vsr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Vsr({:02x?})", self.0)
+    }
+}
+
+impl Vsr {
+    /// Build from two `f64` values (a 4×2 accumulator row or a 2-element Y).
+    pub fn from_f64x2(v: [f64; 2]) -> Self {
+        let mut b = [0u8; 16];
+        b[..8].copy_from_slice(&v[0].to_le_bytes());
+        b[8..].copy_from_slice(&v[1].to_le_bytes());
+        Vsr(b)
+    }
+
+    /// Build from four `f32` values.
+    pub fn from_f32x4(v: [f32; 4]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        Vsr(b)
+    }
+
+    /// Build from four `i32` values.
+    pub fn from_i32x4(v: [i32; 4]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        Vsr(b)
+    }
+
+    /// Build from eight 16-bit lanes (raw bits: i16 / fp16 / bf16).
+    pub fn from_u16x8(v: [u16; 8]) -> Self {
+        let mut b = [0u8; 16];
+        for (i, x) in v.iter().enumerate() {
+            b[2 * i..2 * i + 2].copy_from_slice(&x.to_le_bytes());
+        }
+        Vsr(b)
+    }
+
+    /// Build from sixteen bytes (int8 / uint8 lanes).
+    pub fn from_u8x16(v: [u8; 16]) -> Self {
+        Vsr(v)
+    }
+
+    #[inline(always)]
+    pub fn f64(&self, lane: usize) -> f64 {
+        f64::from_le_bytes(self.0[8 * lane..8 * lane + 8].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn f32(&self, lane: usize) -> f32 {
+        f32::from_le_bytes(self.0[4 * lane..4 * lane + 4].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn u16(&self, lane: usize) -> u16 {
+        u16::from_le_bytes(self.0[2 * lane..2 * lane + 2].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn i16(&self, lane: usize) -> i16 {
+        self.u16(lane) as i16
+    }
+
+    #[inline(always)]
+    pub fn f16(&self, lane: usize) -> f32 {
+        f16_to_f32(self.u16(lane))
+    }
+
+    #[inline(always)]
+    pub fn bf16(&self, lane: usize) -> f32 {
+        bf16_to_f32(self.u16(lane))
+    }
+
+    #[inline(always)]
+    pub fn i8(&self, lane: usize) -> i8 {
+        self.0[lane] as i8
+    }
+
+    #[inline(always)]
+    pub fn u8(&self, lane: usize) -> u8 {
+        self.0[lane]
+    }
+
+    /// Signed 4-bit lane `lane` in 0..32 (two lanes per byte, low nibble
+    /// first).
+    #[inline(always)]
+    pub fn i4(&self, lane: usize) -> i32 {
+        let byte = self.0[lane / 2];
+        let nib = if lane % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        int4_sext(nib)
+    }
+}
+
+/// A 512-bit accumulator value: a 4×4 matrix of 32-bit elements or a 4×2
+/// matrix of 64-bit elements (§II-A). Stored as 64 bytes, row-major, 16
+/// bytes (= one associated VSR) per row.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Acc(pub [u8; 64]);
+
+impl Default for Acc {
+    fn default() -> Self {
+        Acc([0u8; 64])
+    }
+}
+
+impl std::fmt::Debug for Acc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Acc(f32x4x4 {:?})", self.to_f32_4x4())
+    }
+}
+
+impl Acc {
+    /// Zero accumulator (the `xxsetaccz` value).
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    /// Row `r` as a [`Vsr`] (the value `xxmfacc` deposits in `VSR[4a+r]`).
+    pub fn row(&self, r: usize) -> Vsr {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&self.0[16 * r..16 * r + 16]);
+        Vsr(b)
+    }
+
+    /// Overwrite row `r` from a VSR (the `xxmtacc` direction).
+    pub fn set_row(&mut self, r: usize, v: Vsr) {
+        self.0[16 * r..16 * r + 16].copy_from_slice(&v.0);
+    }
+
+    #[inline(always)]
+    pub fn f32_at(&self, i: usize, j: usize) -> f32 {
+        let o = 16 * i + 4 * j;
+        f32::from_le_bytes(self.0[o..o + 4].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn set_f32_at(&mut self, i: usize, j: usize, v: f32) {
+        let o = 16 * i + 4 * j;
+        self.0[o..o + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline(always)]
+    pub fn i32_at(&self, i: usize, j: usize) -> i32 {
+        let o = 16 * i + 4 * j;
+        i32::from_le_bytes(self.0[o..o + 4].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn set_i32_at(&mut self, i: usize, j: usize, v: i32) {
+        let o = 16 * i + 4 * j;
+        self.0[o..o + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline(always)]
+    pub fn f64_at(&self, i: usize, j: usize) -> f64 {
+        let o = 16 * i + 8 * j;
+        f64::from_le_bytes(self.0[o..o + 8].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    pub fn set_f64_at(&mut self, i: usize, j: usize, v: f64) {
+        let o = 16 * i + 8 * j;
+        self.0[o..o + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn from_f32_4x4(m: [[f32; 4]; 4]) -> Self {
+        let mut a = Acc::zero();
+        for i in 0..4 {
+            for j in 0..4 {
+                a.set_f32_at(i, j, m[i][j]);
+            }
+        }
+        a
+    }
+
+    pub fn to_f32_4x4(&self) -> [[f32; 4]; 4] {
+        let mut m = [[0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = self.f32_at(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_i32_4x4(m: [[i32; 4]; 4]) -> Self {
+        let mut a = Acc::zero();
+        for i in 0..4 {
+            for j in 0..4 {
+                a.set_i32_at(i, j, m[i][j]);
+            }
+        }
+        a
+    }
+
+    pub fn to_i32_4x4(&self) -> [[i32; 4]; 4] {
+        let mut m = [[0i32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = self.i32_at(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_f64_4x2(m: [[f64; 2]; 4]) -> Self {
+        let mut a = Acc::zero();
+        for i in 0..4 {
+            for j in 0..2 {
+                a.set_f64_at(i, j, m[i][j]);
+            }
+        }
+        a
+    }
+
+    pub fn to_f64_4x2(&self) -> [[f64; 2]; 4] {
+        let mut m = [[0f64; 2]; 4];
+        for i in 0..4 {
+            for j in 0..2 {
+                m[i][j] = self.f64_at(i, j);
+            }
+        }
+        m
+    }
+}
+
+/// The full MMA-visible register state with priming bookkeeping.
+#[derive(Clone)]
+pub struct RegFile {
+    pub vsr: [Vsr; NUM_VSRS],
+    pub acc: [Acc; NUM_ACCS],
+    /// `primed[i]` ⇔ `ACC[i]` is currently primed: its value lives in the
+    /// MME and the associated `VSR[4i..4i+3]` must not be used (§II-A).
+    pub primed: [bool; NUM_ACCS],
+}
+
+impl Default for RegFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegFile {
+    pub fn new() -> Self {
+        RegFile {
+            vsr: [Vsr::default(); NUM_VSRS],
+            acc: [Acc::zero(); NUM_ACCS],
+            primed: [false; NUM_ACCS],
+        }
+    }
+
+    /// The accumulator (if any) whose VSR group contains `vsr`.
+    /// `VSR[32:63]` are not associated with any accumulator (Figure 1).
+    pub fn acc_of_vsr(vsr: u8) -> Option<u8> {
+        if vsr < 32 {
+            Some(vsr / 4)
+        } else {
+            None
+        }
+    }
+
+    /// True if touching `vsr` would conflict with a *primed* accumulator.
+    pub fn vsr_conflicts(&self, vsr: u8) -> bool {
+        Self::acc_of_vsr(vsr).is_some_and(|a| self.primed[a as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::types::{f32_to_bf16, f32_to_f16, int4_pack};
+
+    #[test]
+    fn vsr_lane_views() {
+        let v = Vsr::from_f32x4([1.0, -2.0, 3.5, 0.25]);
+        assert_eq!(v.f32(0), 1.0);
+        assert_eq!(v.f32(3), 0.25);
+
+        let v = Vsr::from_f64x2([std::f64::consts::PI, -1.0]);
+        assert_eq!(v.f64(0), std::f64::consts::PI);
+        assert_eq!(v.f64(1), -1.0);
+
+        let v = Vsr::from_u16x8([1, 2, 3, 4, 0xffff, 6, 7, 8]);
+        assert_eq!(v.i16(4), -1);
+        assert_eq!(v.u16(7), 8);
+
+        let v = Vsr::from_u16x8([f32_to_f16(1.5); 8]);
+        assert_eq!(v.f16(3), 1.5);
+        let v = Vsr::from_u16x8([f32_to_bf16(-2.0); 8]);
+        assert_eq!(v.bf16(5), -2.0);
+
+        let mut bytes = [0u8; 16];
+        bytes[0] = int4_pack(-8, 7);
+        let v = Vsr::from_u8x16(bytes);
+        assert_eq!(v.i4(0), -8);
+        assert_eq!(v.i4(1), 7);
+    }
+
+    #[test]
+    fn acc_rows_round_trip() {
+        let m = [[1.0f32, 2.0, 3.0, 4.0], [5.0, 6.0, 7.0, 8.0], [9.0, 10.0, 11.0, 12.0], [13.0, 14.0, 15.0, 16.0]];
+        let a = Acc::from_f32_4x4(m);
+        assert_eq!(a.to_f32_4x4(), m);
+        // row r of the accumulator is the VSR image of that row
+        let r2 = a.row(2);
+        assert_eq!([r2.f32(0), r2.f32(1), r2.f32(2), r2.f32(3)], m[2]);
+
+        let d = [[1.0f64, 2.0], [3.0, 4.0], [5.0, 6.0], [7.0, 8.0]];
+        let a = Acc::from_f64_4x2(d);
+        assert_eq!(a.to_f64_4x2(), d);
+        assert_eq!(a.row(1).f64(0), 3.0);
+    }
+
+    #[test]
+    fn vsr_acc_association() {
+        assert_eq!(RegFile::acc_of_vsr(0), Some(0));
+        assert_eq!(RegFile::acc_of_vsr(3), Some(0));
+        assert_eq!(RegFile::acc_of_vsr(4), Some(1));
+        assert_eq!(RegFile::acc_of_vsr(31), Some(7));
+        assert_eq!(RegFile::acc_of_vsr(32), None);
+        assert_eq!(RegFile::acc_of_vsr(63), None);
+
+        let mut rf = RegFile::new();
+        rf.primed[2] = true;
+        assert!(rf.vsr_conflicts(8));
+        assert!(rf.vsr_conflicts(11));
+        assert!(!rf.vsr_conflicts(12));
+        assert!(!rf.vsr_conflicts(40));
+    }
+}

@@ -1,0 +1,222 @@
+//! Scalar element formats used by the MMA facility (paper Table I):
+//! IEEE binary16 (`fp16`), bfloat16 (`bf16`), signed 4-bit integers packed
+//! two per byte (`int4`), and the modulo vs. saturating 32-bit accumulation
+//! models of the integer rank-k update instructions (§II-B.2).
+//!
+//! All conversions are implemented from first principles (no external
+//! softfloat dependency) with round-to-nearest-even, the rounding mode the
+//! POWER10 MME applies to rank-k update results.
+
+/// Convert an IEEE binary16 bit pattern to `f32`.
+///
+/// Handles subnormals, infinities and NaNs (NaN payloads are propagated into
+/// the top mantissa bits, quietly).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h >> 15) << 31;
+    let exp = (h >> 10) & 0x1f;
+    let man = u32::from(h & 0x3ff);
+    let bits = match (exp, man) {
+        (0, 0) => sign,                            // +-0
+        (0, m) => {
+            // subnormal: value = m * 2^-24; renormalize around the msb of m
+            let p = 31 - m.leading_zeros(); // msb position of the 10-bit mantissa
+            let exp32 = 127 + p - 24;
+            let man32 = (m << (23 - p)) & 0x7f_ffff; // drop implicit bit
+            sign | (exp32 << 23) | man32
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,           // inf
+        (0x1f, m) => sign | 0x7fc0_0000 | (m << 13), // NaN (quiet)
+        (e, m) => {
+            let exp32 = u32::from(e) + 127 - 15;
+            sign | (exp32 << 23) | (m << 13)
+        }
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert an `f32` to IEEE binary16 with round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / NaN
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 | ((man >> 13) as u16 & 0x3ff) | u16::from(man >> 13 == 0)
+        };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal range; round mantissa from 23 to 10 bits (RNE)
+        let man16 = man >> 13;
+        let rem = man & 0x1fff;
+        let mut h = sign | (((e + 15) as u16) << 10) | man16 as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent: that is correct RNE
+        }
+        return h;
+    }
+    if e < -25 {
+        return sign; // underflow to zero
+    }
+    // subnormal result
+    let man_full = man | 0x80_0000; // implicit bit
+    let shift = (-14 - e) as u32 + 13;
+    let man16 = man_full >> shift;
+    let rem_mask = (1u32 << shift) - 1;
+    let rem = man_full & rem_mask;
+    let half = 1u32 << (shift - 1);
+    let mut h = sign | man16 as u16;
+    if rem > half || (rem == half && (man16 & 1) == 1) {
+        h = h.wrapping_add(1);
+    }
+    h
+}
+
+/// Convert a bfloat16 bit pattern to `f32` (exact: bf16 is truncated f32).
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits(u32::from(b) << 16)
+}
+
+/// Convert an `f32` to bfloat16 with round-to-nearest-even.
+///
+/// NaNs are quieted (payload preserved in the top bits) so that a NaN never
+/// rounds to infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // force quiet bit
+    }
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rem = bits & 0xffff;
+    let mut b = (bits >> 16) as u16;
+    if rem > round_bit || (rem == round_bit && lsb == 1) {
+        b = b.wrapping_add(1);
+    }
+    b
+}
+
+/// Sign-extend a 4-bit value (stored in the low nibble) to `i32`.
+#[inline(always)]
+pub fn int4_sext(nibble: u8) -> i32 {
+    ((nibble as i32) << 28) >> 28
+}
+
+/// Pack two signed 4-bit values `(lo, hi)` into one byte.
+/// `lo` occupies bits 0..4, `hi` bits 4..8 (little-nibble order, matching
+/// the element order used by [`crate::isa::regs::Vsr::i4`]).
+#[inline(always)]
+pub fn int4_pack(lo: i32, hi: i32) -> u8 {
+    debug_assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi));
+    ((lo & 0xf) as u8) | (((hi & 0xf) as u8) << 4)
+}
+
+/// 32-bit signed saturating add (the `s`-suffix arithmetic model, §II-B.2):
+/// "adding positive values to the largest representable integer ... does not
+/// change the target value".
+#[inline(always)]
+pub fn sat_add_i32(a: i32, b: i64) -> i32 {
+    let r = i64::from(a) + b;
+    r.clamp(i64::from(i32::MIN), i64::from(i32::MAX)) as i32
+}
+
+/// 32-bit modulo (wrapping) add — the default integer accumulation model.
+#[inline(always)]
+pub fn mod_add_i32(a: i32, b: i64) -> i32 {
+    a.wrapping_add(b as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_exact_values() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            let h = f32_to_f16(v);
+            assert_eq!(f16_to_f32(h), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn f16_inf_nan() {
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(1e9), 0x7c00, "overflow saturates to inf");
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        // smallest positive subnormal: 2^-24
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        // largest subnormal
+        let largest_sub = 2.0f32.powi(-14) * (1023.0 / 1024.0);
+        assert_eq!(f16_to_f32(0x03ff), largest_sub);
+        assert_eq!(f32_to_f16(largest_sub), 0x03ff);
+        // underflow to zero
+        assert_eq!(f32_to_f16(1e-10), 0);
+    }
+
+    #[test]
+    fn f16_rne_ties() {
+        // 1 + 2^-11 is exactly half way between 1.0 and 1+2^-10 -> ties to even (1.0)
+        let tie = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie), f32_to_f16(1.0));
+        // 1 + 3*2^-11 ties upward to 1+2^-9's neighbour (even mantissa 2)
+        let tie_up = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie_up), 0x3c02);
+    }
+
+    #[test]
+    fn bf16_round_trip() {
+        for &v in &[0.0f32, 1.0, -2.5, 3.140625, 1e30, -1e-30] {
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            let rel = if v == 0.0 { 0.0 } else { ((back - v) / v).abs() };
+            assert!(rel <= 1.0 / 128.0, "value {v} -> {back}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_rne() {
+        // 1.0 + 2^-9 rounds to nearest-even bf16 of 1.0
+        assert_eq!(f32_to_bf16(1.0 + 2.0f32.powi(-9)), f32_to_bf16(1.0));
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 3.0 * 2.0f32.powi(-9))), 1.0 + 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn int4() {
+        assert_eq!(int4_sext(0x0), 0);
+        assert_eq!(int4_sext(0x7), 7);
+        assert_eq!(int4_sext(0x8), -8);
+        assert_eq!(int4_sext(0xf), -1);
+        let b = int4_pack(-3, 5);
+        assert_eq!(int4_sext(b & 0xf), -3);
+        assert_eq!(int4_sext(b >> 4), 5);
+    }
+
+    #[test]
+    fn saturating_vs_modulo() {
+        assert_eq!(sat_add_i32(i32::MAX, 1), i32::MAX);
+        assert_eq!(sat_add_i32(i32::MIN, -1), i32::MIN);
+        assert_eq!(sat_add_i32(5, -10), -5);
+        assert_eq!(mod_add_i32(i32::MAX, 1), i32::MIN);
+        assert_eq!(mod_add_i32(-1, 2), 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Discrete Fourier transform on the MMA facility — one of the two
+//! "other research work" directions the paper's conclusion names ("their
+//! use in stencil computations and discrete Fourier transform").
+//!
+//! A length-N DFT of a *batch* of real or complex signals is a matrix
+//! multiplication by the N×N Fourier matrix — exactly the fine-grain
+//! building-block use §III point 2 argues for ("the instructions of the
+//! matrix math facility can be used as building blocks of other
+//! computations, such as convolution, triangular solve and discrete
+//! Fourier transform").
+//!
+//! A complex product `(Fr + i·Fi)·(xr + i·xi)` decomposes into four real
+//! GEMMs, each executed here on the simulated `xvf64ger` datapath via
+//! [`crate::kernels::dgemm::dgemm_sim`]; the host layer does the ±
+//! combination (2 extra BLAS1 passes), just as an MMA-enabled FFT library
+//! would.
+
+use crate::isa::exec::ExecStats;
+use crate::isa::ExecError;
+use crate::kernels::dgemm::dgemm_sim;
+
+/// The real/imaginary parts of the N×N DFT matrix
+/// `F[j][k] = exp(-2πi·jk/N)`, row-major.
+pub fn fourier_matrix(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut re = vec![0f64; n * n];
+    let mut im = vec![0f64; n * n];
+    for j in 0..n {
+        for k in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+            re[j * n + k] = ang.cos();
+            im[j * n + k] = ang.sin();
+        }
+    }
+    (re, im)
+}
+
+/// Batched complex DFT over the simulated MMA datapath.
+///
+/// `xr`/`xi` hold `batch` signals of length `n` **column-wise**: sample
+/// `k` of signal `b` at `x[k*batch + b]` (so the GEMM is `F(n×n) ·
+/// X(n×batch)`). `n` must be a multiple of 8 and `batch` a multiple of 8
+/// (the Figure 6 kernel tile); returns `(yr, yi, stats)`.
+pub fn dft_mma(
+    xr: &[f64],
+    xi: &[f64],
+    n: usize,
+    batch: usize,
+) -> Result<(Vec<f64>, Vec<f64>, ExecStats), ExecError> {
+    assert!(n % 8 == 0 && batch % 8 == 0, "tile-multiple sizes (pad otherwise)");
+    assert_eq!(xr.len(), n * batch);
+    assert_eq!(xi.len(), n * batch);
+    let (fr, fi) = fourier_matrix(n);
+    // four real GEMMs on the MMA kernel
+    let (rr, s1) = dgemm_sim(&fr, xr, n, batch, n)?;
+    let (ii, s2) = dgemm_sim(&fi, xi, n, batch, n)?;
+    let (ri, s3) = dgemm_sim(&fr, xi, n, batch, n)?;
+    let (ir, s4) = dgemm_sim(&fi, xr, n, batch, n)?;
+    let mut yr = rr;
+    let mut yi = ri;
+    for (a, b) in yr.iter_mut().zip(&ii) {
+        *a -= b;
+    }
+    for (a, b) in yi.iter_mut().zip(&ir) {
+        *a += b;
+    }
+    let mut stats = s1;
+    for s in [s2, s3, s4] {
+        stats.instructions += s.instructions;
+        stats.mma_instructions += s.mma_instructions;
+        stats.flops += s.flops;
+        stats.loads += s.loads;
+        stats.stores += s.stores;
+        stats.mem_bytes += s.mem_bytes;
+    }
+    Ok((yr, yi, stats))
+}
+
+/// Scalar reference DFT (O(N²), exact summation order independent).
+pub fn dft_reference(xr: &[f64], xi: &[f64], n: usize, batch: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut yr = vec![0f64; n * batch];
+    let mut yi = vec![0f64; n * batch];
+    for b in 0..batch {
+        for j in 0..n {
+            let (mut sr, mut si) = (0f64, 0f64);
+            for k in 0..n {
+                let ang = -2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+                let (c, s) = (ang.cos(), ang.sin());
+                let (re, im) = (xr[k * batch + b], xi[k * batch + b]);
+                sr += c * re - s * im;
+                si += c * im + s * re;
+            }
+            yr[j * batch + b] = sr;
+            yi[j * batch + b] = si;
+        }
+    }
+    (yr, yi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_allclose, Rng};
+
+    #[test]
+    fn fourier_matrix_first_row_is_ones() {
+        let (re, im) = fourier_matrix(16);
+        for k in 0..16 {
+            assert!((re[k] - 1.0).abs() < 1e-12);
+            assert!(im[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        // x = delta at sample 0 -> X[j] = 1 for all j
+        let n = 16;
+        let batch = 8;
+        let mut xr = vec![0f64; n * batch];
+        for b in 0..batch {
+            xr[b] = 1.0; // sample 0 of each signal
+        }
+        let xi = vec![0f64; n * batch];
+        let (yr, yi, stats) = dft_mma(&xr, &xi, n, batch).unwrap();
+        for j in 0..n {
+            for b in 0..batch {
+                assert!((yr[j * batch + b] - 1.0).abs() < 1e-12);
+                assert!(yi[j * batch + b].abs() < 1e-12);
+            }
+        }
+        assert!(stats.mma_instructions > 0, "ran on the simulated MME");
+    }
+
+    #[test]
+    fn dft_of_pure_tone_is_a_spike() {
+        let n = 32;
+        let batch = 8;
+        let freq = 5;
+        let mut xr = vec![0f64; n * batch];
+        let mut xi = vec![0f64; n * batch];
+        for k in 0..n {
+            let ang = 2.0 * std::f64::consts::PI * (freq * k % n) as f64 / n as f64;
+            xr[k * batch] = ang.cos();
+            xi[k * batch] = ang.sin();
+        }
+        let (yr, yi, _) = dft_mma(&xr, &xi, n, batch).unwrap();
+        for j in 0..n {
+            let mag = (yr[j * batch].powi(2) + yi[j * batch].powi(2)).sqrt();
+            if j == freq {
+                assert!((mag - n as f64).abs() < 1e-9, "bin {j}: {mag}");
+            } else {
+                assert!(mag < 1e-9, "bin {j} leaked {mag}");
+            }
+        }
+    }
+
+    #[test]
+    fn dft_matches_reference_random() {
+        let mut rng = Rng::new(77);
+        let n = 24;
+        let batch = 8;
+        let xr = rng.f64_vec(n * batch);
+        let xi = rng.f64_vec(n * batch);
+        let (yr, yi, _) = dft_mma(&xr, &xi, n, batch).unwrap();
+        let (er, ei) = dft_reference(&xr, &xi, n, batch);
+        assert_allclose(&yr, &er, 1e-10, 1e-10);
+        assert_allclose(&yi, &ei, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn parseval_energy_conservation() {
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let batch = 8;
+        let xr = rng.f64_vec(n * batch);
+        let xi = rng.f64_vec(n * batch);
+        let (yr, yi, _) = dft_mma(&xr, &xi, n, batch).unwrap();
+        for b in 0..batch {
+            let ein: f64 = (0..n)
+                .map(|k| xr[k * batch + b].powi(2) + xi[k * batch + b].powi(2))
+                .sum();
+            let eout: f64 = (0..n)
+                .map(|j| yr[j * batch + b].powi(2) + yi[j * batch + b].powi(2))
+                .sum();
+            assert!((eout - n as f64 * ein).abs() < 1e-8 * eout.abs().max(1.0), "signal {b}");
+        }
+    }
+}

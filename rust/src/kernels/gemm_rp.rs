@@ -1,0 +1,396 @@
+//! Reduced-precision GEMM kernels — the "OpenBLAS MMA enablement" of §VIII
+//! ("supports double, single and half (bf16) precision") plus the int16 /
+//! int8 / int4 deep-learning paths of Table I.
+//!
+//! All kernels share one skeleton (the Figure 8 `8×16` virtual accumulator):
+//! per step, one `4×rank`-packed X column pair (2 `lxv`) and four Y quarters
+//! (4 `lxv`) feed 8 rank-k updates; a CTR loop walks the packed panels.
+//! A step consumes `rank` values of the inner dimension (`rank` = 1 for
+//! fp32, 2 for bf16/fp16/int16, 4 for int8, 8 for int4), so the reduced
+//! precision kernels do 2–8× the MACs per instruction — the Table I
+//! throughput scaling.
+//!
+//! The prefixed (masked) forms handle residual `k` (when `k % rank ≠ 0`)
+//! via the product mask — the §II-C "residual loop iterations" use case.
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+use crate::isa::types::{f32_to_bf16, f32_to_f16};
+use crate::isa::{ExecError, Machine};
+use crate::kernels::pack::{unpack_c8x16_f32, unpack_c8x16_i32};
+
+/// Generate the `8×(steps·rank)×16` kernel program for any non-fp64 kind.
+///
+/// Calling convention: `r3` = output C (512 B, Figure 4 layout), `r4` =
+/// packed X panel (32 B per step), `r5` = packed Y panel (64 B per step).
+/// `tail_pmsk`, if given, adds one final *prefixed* step whose product mask
+/// enables only the first `k % rank` products (residual handling, §II-C).
+pub fn rp_gemm_program(kind: GerKind, steps: usize, tail_pmsk: Option<u8>) -> Vec<Inst> {
+    assert_ne!(kind, GerKind::F64Ger, "fp64 uses the Figure 6 kernel");
+    assert!(steps >= 1 || tail_pmsk.is_some());
+    let mut p = Vec::new();
+    let emit_loads = |p: &mut Vec<Inst>| {
+        p.push(Inst::Lxv { xt: 32, ra: 4, dq: 0 });
+        p.push(Inst::Lxv { xt: 33, ra: 4, dq: 16 });
+        for j in 0..4u8 {
+            p.push(Inst::Lxv { xt: 36 + j, ra: 5, dq: 16 * i32::from(j) });
+        }
+    };
+    let emit_gers = |p: &mut Vec<Inst>, op: AccOp, pmsk: Option<u8>| {
+        for s in [0u8, 1, 4, 5, 2, 3, 6, 7] {
+            let x = if s < 4 { 32 } else { 33 };
+            let y = 36 + (s % 4);
+            let inst = match pmsk {
+                None => Ger::new(kind, op, s, x, y),
+                Some(pm) => Ger::prefixed(kind, op, s, x, y, 0xf, 0xf, pm),
+            };
+            p.push(Inst::Ger(inst));
+        }
+    };
+    let bump = |p: &mut Vec<Inst>| {
+        p.push(Inst::Addi { rt: 4, ra: 4, si: 32 });
+        p.push(Inst::Addi { rt: 5, ra: 5, si: 64 });
+    };
+
+    if steps >= 1 {
+        // prologue step primes the accumulators
+        emit_loads(&mut p);
+        emit_gers(&mut p, AccOp::New, None);
+        bump(&mut p);
+        if steps > 1 {
+            p.push(Inst::Addi { rt: 9, ra: 0, si: (steps - 1) as i32 });
+            p.push(Inst::Mtctr { rs: 9 });
+            let top_len = p.len();
+            emit_loads(&mut p);
+            emit_gers(&mut p, AccOp::PP, None);
+            bump(&mut p);
+            // all loop-body instructions are 4 bytes
+            let body_bytes = 4 * (p.len() - top_len) as i32;
+            p.push(Inst::Bdnz { bd: -body_bytes });
+        }
+    }
+    if let Some(pm) = tail_pmsk {
+        let op = if steps == 0 { AccOp::New } else { AccOp::PP };
+        emit_loads(&mut p);
+        emit_gers(&mut p, op, Some(pm));
+        bump(&mut p);
+    }
+    // epilogue: store the 8 accumulators
+    for s in 0..8u8 {
+        p.push(Inst::XxMfAcc { acc: s });
+        for r in 0..4u8 {
+            p.push(Inst::Stxv { xs: s * 4 + r, ra: 3, dq: 64 * i32::from(s) + 16 * i32::from(r) });
+        }
+    }
+    p.push(Inst::Blr);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Packing: X is 8×k row-major, Y is 16×k row-major (so both panels feed
+// X·Yᵀ). A step covers `rank` consecutive k values.
+// ---------------------------------------------------------------------------
+
+fn steps_of(k: usize, rank: usize) -> (usize, usize) {
+    (k / rank, k % rank)
+}
+
+/// Pack X (8×k, row-major `x[i*k + kk]`) for a rank-`rank` kernel: per step,
+/// two 16-byte vectors (rows 0–3, rows 4–7), element `(i, kl)` at packed
+/// index `i*rank + kl`, padding the tail step with zeros.
+fn pack_x<T: Copy + Default>(x: &[T], k: usize, rank: usize) -> Vec<T> {
+    let nsteps = k.div_ceil(rank);
+    let mut out = vec![T::default(); nsteps * 8 * rank];
+    for (kk, _) in (0..k).enumerate() {
+        let (step, kl) = (kk / rank, kk % rank);
+        for i in 0..8 {
+            let half = i / 4;
+            let row = i % 4;
+            out[step * 8 * rank + half * 4 * rank + row * rank + kl] = x[i * k + kk];
+        }
+    }
+    out
+}
+
+/// Pack Y (16×k, row-major `y[j*k + kk]`): per step, four 16-byte vectors
+/// (column quarters), element `(j, kl)` at `j*rank + kl` within its quarter.
+fn pack_y<T: Copy + Default>(y: &[T], k: usize, rank: usize) -> Vec<T> {
+    let nsteps = k.div_ceil(rank);
+    let mut out = vec![T::default(); nsteps * 16 * rank];
+    for kk in 0..k {
+        let (step, kl) = (kk / rank, kk % rank);
+        for j in 0..16 {
+            let quarter = j / 4;
+            let jj = j % 4;
+            out[step * 16 * rank + quarter * 4 * rank + jj * rank + kl] = y[j * k + kk];
+        }
+    }
+    out
+}
+
+fn tail_mask(rem: usize) -> Option<u8> {
+    if rem == 0 {
+        None
+    } else {
+        Some(((1u16 << rem) - 1) as u8)
+    }
+}
+
+/// Shared driver: write packed panels, run, read the raw C block.
+fn run_rp<TX: Copy, TY: Copy>(
+    kind: GerKind,
+    xpacked: &[TX],
+    ypacked: &[TY],
+    k: usize,
+    write_x: impl Fn(&mut Machine, u64, &[TX]),
+    write_y: impl Fn(&mut Machine, u64, &[TY]),
+    elem_x: usize,
+    elem_y: usize,
+) -> Result<Vec<u8>, ExecError> {
+    let rank = kind.rank();
+    let (steps, rem) = steps_of(k, rank);
+    let xb = 0u64;
+    let yb = xb + (xpacked.len() * elem_x).next_multiple_of(16) as u64;
+    let cb = yb + (ypacked.len() * elem_y).next_multiple_of(16) as u64;
+    let mut m = Machine::new((cb + 512) as usize);
+    write_x(&mut m, xb, xpacked);
+    write_y(&mut m, yb, ypacked);
+    m.gpr[3] = cb;
+    m.gpr[4] = xb;
+    m.gpr[5] = yb;
+    let prog = rp_gemm_program(kind, steps, tail_mask(rem));
+    m.run(&prog, 1024 + 32 * (steps as u64 + 2))?;
+    Ok(m.mem[cb as usize..cb as usize + 512].to_vec())
+}
+
+fn c_as_f32(raw: &[u8]) -> [[f32; 16]; 8] {
+    let vals: Vec<f32> =
+        raw.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect();
+    unpack_c8x16_f32(&vals)
+}
+
+fn c_as_i32(raw: &[u8]) -> [[i32; 16]; 8] {
+    let vals: Vec<i32> =
+        raw.chunks_exact(4).map(|b| i32::from_le_bytes(b.try_into().unwrap())).collect();
+    unpack_c8x16_i32(&vals)
+}
+
+/// fp32 `8×k×16` GEMM (the Figure 8 datapath): `C[i][j] = Σ x[i,k]·y[j,k]`.
+pub fn gemm_f32_8x16(x: &[f64], y: &[f64], k: usize) -> Result<[[f32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+    let xp = pack_x(&xf, k, 1);
+    let yp = pack_y(&yf, k, 1);
+    let raw = run_rp(GerKind::F32Ger, &xp, &yp, k, |m, a, d| m.write_f32s(a, d), |m, a, d| m.write_f32s(a, d), 4, 4)?;
+    Ok(c_as_f32(&raw))
+}
+
+/// bf16 inputs, fp32 accumulation (`xvbf16ger2`): inputs given as f32 and
+/// rounded to bf16 exactly as the packing layer of a bf16 GEMM would.
+pub fn gemm_bf16_8x16(x: &[f32], y: &[f32], k: usize) -> Result<[[f32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xh: Vec<u16> = x.iter().map(|&v| f32_to_bf16(v)).collect();
+    let yh: Vec<u16> = y.iter().map(|&v| f32_to_bf16(v)).collect();
+    let xp = pack_x(&xh, k, 2);
+    let yp = pack_y(&yh, k, 2);
+    let raw = run_rp(GerKind::Bf16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    Ok(c_as_f32(&raw))
+}
+
+/// IEEE fp16 inputs, fp32 accumulation (`xvf16ger2`).
+pub fn gemm_f16_8x16(x: &[f32], y: &[f32], k: usize) -> Result<[[f32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xh: Vec<u16> = x.iter().map(|&v| f32_to_f16(v)).collect();
+    let yh: Vec<u16> = y.iter().map(|&v| f32_to_f16(v)).collect();
+    let xp = pack_x(&xh, k, 2);
+    let yp = pack_y(&yh, k, 2);
+    let raw = run_rp(GerKind::F16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    Ok(c_as_f32(&raw))
+}
+
+/// int16 inputs, int32 modulo accumulation (`xvi16ger2`).
+pub fn gemm_i16_8x16(x: &[i16], y: &[i16], k: usize) -> Result<[[i32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xu: Vec<u16> = x.iter().map(|&v| v as u16).collect();
+    let yu: Vec<u16> = y.iter().map(|&v| v as u16).collect();
+    let xp = pack_x(&xu, k, 2);
+    let yp = pack_y(&yu, k, 2);
+    let raw = run_rp(GerKind::I16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    Ok(c_as_i32(&raw))
+}
+
+/// int8 (signed X) × uint8 (unsigned Y) with int32 accumulation
+/// (`xvi8ger4`, the §II-B.2 mixed-signedness deep-learning path).
+pub fn gemm_i8_8x16(x: &[i8], y: &[u8], k: usize) -> Result<[[i32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xb: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+    let xp = pack_x(&xb, k, 4);
+    let yp = pack_y(y, k, 4);
+    let w = |m: &mut Machine, a: u64, d: &[u8]| m.mem[a as usize..a as usize + d.len()].copy_from_slice(d);
+    let raw = run_rp(GerKind::I8Ger4, &xp, &yp, k, w, w, 1, 1)?;
+    Ok(c_as_i32(&raw))
+}
+
+/// int4 × int4 with int32 accumulation (`xvi4ger8`): values must be in
+/// [-8, 7]; packed two per byte.
+pub fn gemm_i4_8x16(x: &[i32], y: &[i32], k: usize) -> Result<[[i32; 16]; 8], ExecError> {
+    assert_eq!(x.len(), 8 * k);
+    assert_eq!(y.len(), 16 * k);
+    let xp = pack_x(x, k, 8);
+    let yp = pack_y(y, k, 8);
+    let to_nibbles = |vals: &[i32]| -> Vec<u8> {
+        vals.chunks(2)
+            .map(|p| crate::isa::types::int4_pack(p[0], *p.get(1).unwrap_or(&0)))
+            .collect()
+    };
+    let (xn, yn) = (to_nibbles(&xp), to_nibbles(&yp));
+    let w = |m: &mut Machine, a: u64, d: &[u8]| m.mem[a as usize..a as usize + d.len()].copy_from_slice(d);
+    let raw = run_rp(GerKind::I4Ger8, &xn, &yn, k, w, w, 1, 1)?;
+    Ok(c_as_i32(&raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::types::{bf16_to_f32, f16_to_f32};
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn f32_kernel_vs_naive() {
+        check("gemm f32 8x16", 15, |rng: &mut Rng| {
+            let k = rng.range(1, 30);
+            let x = rng.f64_vec(8 * k);
+            let y = rng.f64_vec(16 * k);
+            let c = gemm_f32_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    let e: f32 =
+                        (0..k).map(|kk| (x[i * k + kk] as f32) * (y[j * k + kk] as f32)).sum();
+                    assert!((c[i][j] - e).abs() <= 1e-4 * e.abs().max(1.0), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_kernel_vs_rounded_reference() {
+        check("gemm bf16 8x16", 10, |rng: &mut Rng| {
+            let k = rng.range(1, 24); // odd k exercises the masked tail
+            let x = rng.f32_vec(8 * k);
+            let y = rng.f32_vec(16 * k);
+            let c = gemm_bf16_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    // reference: same bf16 rounding, f32 accumulate
+                    let e: f32 = (0..k)
+                        .map(|kk| {
+                            bf16_to_f32(f32_to_bf16(x[i * k + kk]))
+                                * bf16_to_f32(f32_to_bf16(y[j * k + kk]))
+                        })
+                        .sum();
+                    assert!((c[i][j] - e).abs() <= 1e-3 * e.abs().max(1.0), "({i},{j}) {} {e}", c[i][j]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f16_kernel_vs_rounded_reference() {
+        check("gemm f16 8x16", 8, |rng: &mut Rng| {
+            let k = rng.range(1, 16);
+            let x = rng.f32_vec(8 * k);
+            let y = rng.f32_vec(16 * k);
+            let c = gemm_f16_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    let e: f32 = (0..k)
+                        .map(|kk| {
+                            f16_to_f32(f32_to_f16(x[i * k + kk])) * f16_to_f32(f32_to_f16(y[j * k + kk]))
+                        })
+                        .sum();
+                    assert!((c[i][j] - e).abs() <= 1e-3 * e.abs().max(1.0), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i16_kernel_exact() {
+        check("gemm i16 8x16", 10, |rng: &mut Rng| {
+            let k = rng.range(1, 20);
+            let x: Vec<i16> = (0..8 * k).map(|_| rng.irange(-3000, 3000) as i16).collect();
+            let y: Vec<i16> = (0..16 * k).map(|_| rng.irange(-3000, 3000) as i16).collect();
+            let c = gemm_i16_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    let e: i64 = (0..k)
+                        .map(|kk| i64::from(x[i * k + kk]) * i64::from(y[j * k + kk]))
+                        .sum();
+                    assert_eq!(i64::from(c[i][j]), e, "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i8_kernel_exact_mixed_sign() {
+        check("gemm i8xu8 8x16", 10, |rng: &mut Rng| {
+            let k = rng.range(1, 24); // k not multiple of 4 exercises pmask tail
+            let x: Vec<i8> = (0..8 * k).map(|_| rng.irange(-128, 127) as i8).collect();
+            let y: Vec<u8> = (0..16 * k).map(|_| rng.irange(0, 255) as u8).collect();
+            let c = gemm_i8_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    let e: i64 =
+                        (0..k).map(|kk| i64::from(x[i * k + kk]) * i64::from(y[j * k + kk])).sum();
+                    assert_eq!(i64::from(c[i][j]), e, "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i4_kernel_exact() {
+        check("gemm i4 8x16", 8, |rng: &mut Rng| {
+            let k = rng.range(1, 30); // tails of 1..7 exercise the 8-bit pmask
+            let x: Vec<i32> = (0..8 * k).map(|_| rng.irange(-8, 7) as i32).collect();
+            let y: Vec<i32> = (0..16 * k).map(|_| rng.irange(-8, 7) as i32).collect();
+            let c = gemm_i4_8x16(&x, &y, k).unwrap();
+            for i in 0..8 {
+                for j in 0..16 {
+                    let e: i64 =
+                        (0..k).map(|kk| i64::from(x[i * k + kk]) * i64::from(y[j * k + kk])).sum();
+                    assert_eq!(i64::from(c[i][j]), e, "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn residual_tail_uses_prefixed_form() {
+        // k=3 with rank-2 kind -> 1 full step + masked tail step
+        let prog = rp_gemm_program(GerKind::Bf16Ger2, 1, Some(0b01));
+        let prefixed: Vec<_> = prog
+            .iter()
+            .filter_map(|i| match i {
+                Inst::Ger(g) if g.prefixed => Some(*g),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(prefixed.len(), 8, "tail step is fully masked");
+        assert!(prefixed.iter().all(|g| g.pmsk == 0b01));
+    }
+
+    #[test]
+    fn throughput_scaling_macs_per_instruction() {
+        // Table I: one xvi4ger8 does 4x the MACs of xvf32ger etc.
+        assert_eq!(GerKind::I4Ger8.flops() / GerKind::F32Ger.flops(), 8);
+        assert_eq!(GerKind::I8Ger4.flops() / GerKind::F32Ger.flops(), 4);
+        assert_eq!(GerKind::Bf16Ger2.flops() / GerKind::F32Ger.flops(), 2);
+    }
+}

@@ -1,0 +1,25 @@
+//! The hand-written MMA kernel library (paper §V–§VI) plus the
+//! POWER9-compliant VSX baselines the evaluation compares against.
+//!
+//! Every kernel is generated as a real instruction stream through the
+//! [`crate::builtins`] layer (the paper's recommended programming model) and
+//! runs on the functional [`crate::isa::Machine`]; the cycle model times the
+//! very same streams.
+//!
+//! * [`dgemm`] — the §V-A DGEMM `8×N×8` kernel (Figures 5–7) and the
+//!   blocked `128×128×128` kernel of §VI, plus host-side packing.
+//! * [`sconv`] — the §V-B SCONV `8×27×16` 2-D convolution kernel
+//!   (Figures 8–9).
+//! * [`gemm_rp`] — reduced-precision GEMM kernels: fp32, bf16/fp16
+//!   (rank-2), int16, int8 — the "OpenBLAS enablement" of §VIII.
+//! * [`vsx`] — POWER9-compliant vector kernels (the baseline code of §VI's
+//!   measurements: splat + `xvmaddadp`).
+//! * [`pack`] — panel packing/unpacking shared by the host runners.
+
+pub mod dft;
+pub mod dgemm;
+pub mod gemm_rp;
+pub mod stencil;
+pub mod pack;
+pub mod sconv;
+pub mod vsx;

@@ -1,0 +1,137 @@
+//! Panel packing and unpacking for the kernel host runners.
+//!
+//! The paper's kernels consume *packed* operands (as any high-performance
+//! GEMM does — "that is handled in other layers of DGEMM", §V-A):
+//!
+//! * an `8×K` **X panel**: column `k` stored as 8 consecutive elements at
+//!   `base + k*8*sizeof(T)` (what `lxvp`+`lxvp` load per iteration);
+//! * an `8×K` **Y panel**: identical layout (4 `lxv` per iteration);
+//! * the `8×8` **accumulator image**: eight 4×2 accumulator blocks in the
+//!   Figure 4/6 order — block `s` covers rows `4*(s/4)..` and columns
+//!   `2*(s%4)..`, stored row-by-row, 16 bytes per row.
+
+/// Pack an `8×k` row-major matrix (`a[i*lda + j]`, 8 rows) into the
+/// column-panel layout (column-major 8-row panel).
+pub fn pack_panel_f64(a: &[f64], lda: usize, k: usize) -> Vec<f64> {
+    let mut out = vec![0f64; 8 * k];
+    for kk in 0..k {
+        for i in 0..8 {
+            out[kk * 8 + i] = a[i * lda + kk];
+        }
+    }
+    out
+}
+
+/// Unpack the DGEMM result written by the Figure 6 epilogue into a row-major
+/// `8×8` matrix.
+///
+/// Block `s` (`s = 0..8`) holds rows `4*(s/4) .. 4*(s/4)+4` × columns
+/// `2*(s%4) .. 2*(s%4)+2`; each block row is 2 f64 (16 bytes).
+pub fn unpack_c8x8_f64(raw: &[f64]) -> [[f64; 8]; 8] {
+    assert_eq!(raw.len(), 64);
+    let mut c = [[0f64; 8]; 8];
+    for s in 0..8 {
+        let row0 = 4 * (s / 4);
+        let col0 = 2 * (s % 4);
+        for r in 0..4 {
+            for jc in 0..2 {
+                c[row0 + r][col0 + jc] = raw[s * 8 + r * 2 + jc];
+            }
+        }
+    }
+    c
+}
+
+/// Unpack the fp32 `8×16` result of the Figure 8/9 epilogue (virtual 8×16
+/// accumulator): block `s` covers rows `4*(s/4)..`, columns `4*(s%4)..`,
+/// 4 f32 per block row.
+pub fn unpack_c8x16_f32(raw: &[f32]) -> [[f32; 16]; 8] {
+    assert_eq!(raw.len(), 128);
+    let mut c = [[0f32; 16]; 8];
+    for s in 0..8 {
+        let row0 = 4 * (s / 4);
+        let col0 = 4 * (s % 4);
+        for r in 0..4 {
+            for jc in 0..4 {
+                c[row0 + r][col0 + jc] = raw[s * 16 + r * 4 + jc];
+            }
+        }
+    }
+    c
+}
+
+/// Unpack an int32 `8×16` result with the same block layout.
+pub fn unpack_c8x16_i32(raw: &[i32]) -> [[i32; 16]; 8] {
+    assert_eq!(raw.len(), 128);
+    let mut c = [[0i32; 16]; 8];
+    for s in 0..8 {
+        let row0 = 4 * (s / 4);
+        let col0 = 4 * (s % 4);
+        for r in 0..4 {
+            for jc in 0..4 {
+                c[row0 + r][col0 + jc] = raw[s * 16 + r * 4 + jc];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_panel_transposes() {
+        // a: 8 x 3, a[i][k] = 10*i + k
+        let lda = 3;
+        let a: Vec<f64> = (0..8 * 3).map(|x| (10 * (x / 3) + x % 3) as f64).collect();
+        let p = pack_panel_f64(&a, lda, 3);
+        // column k: elements 10*0+k .. 10*7+k
+        for k in 0..3 {
+            for i in 0..8 {
+                assert_eq!(p[k * 8 + i], (10 * i + k) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_c8x8_block_layout() {
+        // raw[s*8 + r*2 + jc] encodes (row, col); fill with canonical value
+        let mut raw = vec![0f64; 64];
+        for s in 0..8 {
+            for r in 0..4 {
+                for jc in 0..2 {
+                    let row = 4 * (s / 4) + r;
+                    let col = 2 * (s % 4) + jc;
+                    raw[s * 8 + r * 2 + jc] = (100 * row + col) as f64;
+                }
+            }
+        }
+        let c = unpack_c8x8_f64(&raw);
+        for (i, row) in c.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v, (100 * i + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_c8x16_block_layout() {
+        let mut raw = vec![0f32; 128];
+        for s in 0..8 {
+            for r in 0..4 {
+                for jc in 0..4 {
+                    let row = 4 * (s / 4) + r;
+                    let col = 4 * (s % 4) + jc;
+                    raw[s * 16 + r * 4 + jc] = (100 * row + col) as f32;
+                }
+            }
+        }
+        let c = unpack_c8x16_f32(&raw);
+        for (i, row) in c.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v, (100 * i + j) as f32, "({i},{j})");
+            }
+        }
+    }
+}

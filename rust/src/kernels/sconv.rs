@@ -1,0 +1,258 @@
+//! The paper's §V-B SCONV kernel: a 3-channel 3×3 single-precision 2-D
+//! convolution computed **directly on the input image** with MMA outer
+//! products — no im2col materialization (the point of §V-B: "convolution
+//! can be done directly on the input matrix A").
+//!
+//! The structure follows Figure 9 exactly: the 8 accumulators form a
+//! virtual `8×16` fp32 accumulator (8 filters × 16 output pixels); there
+//! are 27 rank-1 `8×16` outer-product steps — filter matrix column
+//! `H[:,c]` (8 fp32, 2 VSRs) times a 16-pixel window of an image row
+//! (4 VSRs), where each channel row is used three times at byte shifts
+//! 0, +4, +8 (equation 8's three shifted copies).
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+use crate::isa::{ExecError, Machine};
+use crate::kernels::pack::unpack_c8x16_f32;
+
+/// One `mma_xvf32_8x16` macro expansion (Figure 8): load the H column
+/// (2 `lxv` at `h_off` bytes from r3) and the 16-pixel image window
+/// (4 `lxv` at `img_off` from register `img_reg`), then 8 `xvf32ger[pp]`.
+///
+/// The Figure 8 accumulator grid: `acc[s]` for `s = 4*(x-half) + y-quarter`
+/// covers filter rows `4*(s/4)..` and pixels `4*(s%4)..`.
+fn emit_step(p: &mut Vec<Inst>, h_off: i32, img_reg: u8, img_off: i32, first: bool) {
+    // x0 = vs32:33 (filters 0-3), x1 = vs34:35 (filters 4-7) — loaded as
+    // two lxv each to keep DQ alignment (H columns are 32-byte entities)
+    p.push(Inst::Lxv { xt: 32, ra: 3, dq: h_off });
+    p.push(Inst::Lxv { xt: 33, ra: 3, dq: h_off + 16 });
+    for j in 0..4u8 {
+        p.push(Inst::Lxv { xt: 36 + j, ra: img_reg, dq: img_off + 16 * i32::from(j) });
+    }
+    let op = if first { AccOp::New } else { AccOp::PP };
+    // Figure 8 issue order: acc 0,1,4,5,2,3,6,7
+    for s in [0u8, 1, 4, 5, 2, 3, 6, 7] {
+        let x = if s < 4 { 32 } else { 33 }; // filter half
+        let y = 36 + (s % 4);
+        p.push(Inst::Ger(Ger::new(GerKind::F32Ger, op, s, x, y)));
+    }
+}
+
+/// Generate the `sconv_kernel_8x27x16` program (Figure 9).
+///
+/// Calling convention:
+/// * `r3` — H, the 8×27 filter matrix, column-major (column `c` = 8 fp32 at
+///   `r3 + 32c`; 27 columns = kernel positions × channels);
+/// * `r6`, `r7`, `r8` — R, G, B channel base pointers; the kernel uses rows
+///   `0..3` of each channel, a row being `row_stride` **bytes** long;
+/// * `r10` — output C (the 8×16 block, Figure 4-style layout, 512 bytes).
+///
+/// Because `lxv` requires 16-byte-aligned displacements, the +4/+8 byte
+/// shifts of equation (8) are realized by shift base registers `r11 = base+4`
+/// and `r12 = base+8` (two `addi` per channel row — the indexed-load form
+/// real code uses costs the same).
+pub fn sconv_8x27x16_program(row_stride: i32) -> Vec<Inst> {
+    assert!(row_stride % 16 == 0, "channel rows must stay 16-byte aligned");
+    let mut p = Vec::with_capacity(27 * 14 + 60);
+    let mut h_off = 0i32;
+    let mut first = true;
+    for ch_reg in [6u8, 7, 8] {
+        for row in 0..3i32 {
+            let row_off = row * row_stride;
+            // shift registers for the +4 / +8 byte offsets of eq. (8)
+            p.push(Inst::Addi { rt: 11, ra: ch_reg, si: row_off + 4 });
+            p.push(Inst::Addi { rt: 12, ra: ch_reg, si: row_off + 8 });
+            // shift 0 (from the channel register directly), then +4, +8
+            emit_step(&mut p, h_off, ch_reg, row_off, first);
+            first = false;
+            h_off += 32;
+            emit_step(&mut p, h_off, 11, 0, false);
+            h_off += 32;
+            emit_step(&mut p, h_off, 12, 0, false);
+            h_off += 32;
+        }
+    }
+    // epilogue: mma_store_acc(acc[s], C, 4s) — Figure 9 lines 55-62
+    for s in 0..8u8 {
+        p.push(Inst::XxMfAcc { acc: s });
+        for r in 0..4u8 {
+            p.push(Inst::Stxv { xs: s * 4 + r, ra: 10, dq: 64 * i32::from(s) + 16 * i32::from(r) });
+        }
+    }
+    p.push(Inst::Blr);
+    p
+}
+
+/// Run the SCONV kernel: `filters` is `8×3×3×3` (filter, channel, ky, kx),
+/// `r`, `g`, `b` are channel images with `width ≥ 18` pixels per row and at
+/// least 3 rows. Returns the 8×16 output block: filter `f` applied at
+/// output pixels `0..16` of row 0.
+pub fn run_sconv_8x27x16(
+    filters: &[f32],
+    r: &[f32],
+    g: &[f32],
+    b: &[f32],
+    width: usize,
+) -> Result<[[f32; 16]; 8], ExecError> {
+    assert_eq!(filters.len(), 8 * 27);
+    assert!(width >= 18, "need 16 outputs + 2 halo pixels");
+    assert!(width % 4 == 0, "row stride must keep 16-byte alignment");
+    for img in [r, g, b] {
+        assert!(img.len() >= 3 * width);
+    }
+    let row_stride = (width * 4) as i32;
+
+    // H layout: column c = 8 filter weights for (channel, ky, kx) position c,
+    // where c = 9*channel + 3*ky + kx (the Figure 9 H+{0,8,16,...} walk).
+    let hb = 0u64;
+    let mut h = vec![0f32; 8 * 27];
+    for f in 0..8 {
+        for ch in 0..3 {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let c = 9 * ch + 3 * ky + kx;
+                    h[c * 8 + f] = filters[f * 27 + ch * 9 + ky * 3 + kx];
+                }
+            }
+        }
+    }
+    let rb = hb + (8 * 27 * 4) as u64;
+    let img_bytes = (3 * width * 4) as u64;
+    let gb = rb + img_bytes;
+    let bb = gb + img_bytes;
+    let cb = bb + img_bytes;
+    let mut m = Machine::new((cb + 512) as usize);
+    m.write_f32s(hb, &h);
+    m.write_f32s(rb, &r[..3 * width]);
+    m.write_f32s(gb, &g[..3 * width]);
+    m.write_f32s(bb, &b[..3 * width]);
+    m.gpr[3] = hb;
+    m.gpr[6] = rb;
+    m.gpr[7] = gb;
+    m.gpr[8] = bb;
+    m.gpr[10] = cb;
+    let prog = sconv_8x27x16_program(row_stride);
+    m.run(&prog, 4096)?;
+    let raw = m.read_f32s(cb, 128);
+    Ok(unpack_c8x16_f32(&raw))
+}
+
+/// Scalar reference: direct 3×3 convolution over 3 channels (oracle for
+/// the kernel tests and benches).
+pub fn sconv_reference(
+    filters: &[f32],
+    r: &[f32],
+    g: &[f32],
+    b: &[f32],
+    width: usize,
+    out_cols: usize,
+) -> Vec<Vec<f32>> {
+    let chans = [r, g, b];
+    let mut out = vec![vec![0f32; out_cols]; 8];
+    for f in 0..8 {
+        for x in 0..out_cols {
+            let mut acc = 0f32;
+            for (ch, img) in chans.iter().enumerate() {
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        acc += filters[f * 27 + ch * 9 + ky * 3 + kx] * img[ky * width + x + kx];
+                    }
+                }
+            }
+            out[f][x] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn instruction_mix_matches_fig9() {
+        // 27 outer-product steps x 8 xvf32ger each = 216 ger instructions
+        let prog = sconv_8x27x16_program(80);
+        let gers: Vec<_> = prog
+            .iter()
+            .filter_map(|i| match i {
+                Inst::Ger(g) => Some(*g),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(gers.len(), 27 * 8);
+        assert!(gers.iter().all(|g| g.kind == GerKind::F32Ger));
+        // exactly the first 8 prime, the rest accumulate (Figure 9 line 13)
+        assert!(gers[..8].iter().all(|g| g.op == AccOp::New));
+        assert!(gers[8..].iter().all(|g| g.op == AccOp::PP));
+        // 27 H-column loads x2 + 27 image loads x4 = 162 lxv
+        let lxv = prog.iter().filter(|i| matches!(i, Inst::Lxv { .. })).count();
+        assert_eq!(lxv, 27 * 6);
+    }
+
+    #[test]
+    fn identity_filter_picks_center_pixel() {
+        // filter 0: all zeros except center of channel R -> output = shifted R row 1
+        let mut filters = vec![0f32; 8 * 27];
+        filters[0 * 27 + 0 * 9 + 1 * 3 + 1] = 1.0; // f0, R, ky=1, kx=1
+        let width = 20;
+        let r: Vec<f32> = (0..3 * width).map(|i| i as f32).collect();
+        let g = vec![0f32; 3 * width];
+        let b = vec![0f32; 3 * width];
+        let c = run_sconv_8x27x16(&filters, &r, &g, &b, width).unwrap();
+        for x in 0..16 {
+            assert_eq!(c[0][x], r[width + x + 1], "x={x}");
+            for f in 1..8 {
+                assert_eq!(c[f][x], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_vs_reference_property() {
+        check("sconv == direct conv", 12, |rng: &mut Rng| {
+            let width = 4 * rng.range(5, 12);
+            let filters = rng.f32_vec(8 * 27);
+            let r = rng.f32_vec(3 * width);
+            let g = rng.f32_vec(3 * width);
+            let b = rng.f32_vec(3 * width);
+            let got = run_sconv_8x27x16(&filters, &r, &g, &b, width).unwrap();
+            let expect = sconv_reference(&filters, &r, &g, &b, width, 16);
+            for f in 0..8 {
+                for x in 0..16 {
+                    let (a, e) = (got[f][x], expect[f][x]);
+                    assert!(
+                        (a - e).abs() <= 1e-4 * e.abs().max(1.0),
+                        "filter {f} pixel {x}: {a} vs {e}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn multi_kernel_filters_independent() {
+        // each filter only sees its own weights
+        let width = 20;
+        let mut filters = vec![0f32; 8 * 27];
+        for f in 0..8 {
+            filters[f * 27 + f % 27] = (f + 1) as f32;
+        }
+        let r: Vec<f32> = (0..3 * width).map(|i| (i % 7) as f32 - 3.0).collect();
+        let g: Vec<f32> = (0..3 * width).map(|i| (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..3 * width).map(|i| (i % 3) as f32).collect();
+        let got = run_sconv_8x27x16(&filters, &r, &g, &b, width).unwrap();
+        let expect = sconv_reference(&filters, &r, &g, &b, width, 16);
+        for f in 0..8 {
+            for x in 0..16 {
+                assert!((got[f][x] - expect[f][x]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_row_stride_rejected() {
+        let r = std::panic::catch_unwind(|| sconv_8x27x16_program(72));
+        assert!(r.is_err(), "non-16-byte row stride must be rejected");
+    }
+}

@@ -1,0 +1,178 @@
+//! Stencil computation on the MMA facility — the second "future work"
+//! direction the paper's conclusion names.
+//!
+//! A 1-D k-point stencil over a batch of rows is the same shape as SCONV's
+//! inner step (§V-B): the coefficient vector plays the H̄ role and the
+//! shifted input rows are the right operand. We build an `8×taps×16`
+//! stencil kernel directly from the Figure 8/9 machinery: 8 independent
+//! stencil operators (e.g. different smoothing radii) applied to the same
+//! row in one pass — the multi-kernel trick of §V-B.
+
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+use crate::isa::{ExecError, Machine};
+use crate::kernels::pack::unpack_c8x16_f32;
+
+/// Generate the `8-operator × taps × 16-point` stencil kernel.
+///
+/// `r3` = coefficient matrix C (8×taps, column-major, 32 B per column —
+/// one fp32x8 column per tap), `r6` = input row base, `r10` = output.
+/// Like SCONV, byte shifts that break `lxv`'s 16-byte alignment use shift
+/// base registers prepared with `addi` (r11..).
+pub fn stencil_8xtapsx16_program(taps: usize) -> Vec<Inst> {
+    assert!(taps >= 1 && taps <= 16);
+    let mut p = Vec::new();
+    // prepare shift registers r11..: base + 4*shift for each misaligned tap
+    for t in 0..taps {
+        let shift_bytes = (4 * t % 16) as i32;
+        if shift_bytes != 0 {
+            // r11 + (t % 4 - 1): reuse 3 registers cyclically (shifts 4, 8, 12)
+            let reg = 11 + ((shift_bytes / 4 - 1) as u8 % 3);
+            p.push(Inst::Addi { rt: reg, ra: 6, si: shift_bytes });
+        }
+    }
+    for t in 0..taps {
+        // coefficient column t -> vs32/vs33
+        p.push(Inst::Lxv { xt: 32, ra: 3, dq: 32 * t as i32 });
+        p.push(Inst::Lxv { xt: 33, ra: 3, dq: 32 * t as i32 + 16 });
+        // input window starting at element t: 16 fp32 from the shifted base
+        let shift_bytes = (4 * t % 16) as i32;
+        let (reg, disp) = if shift_bytes == 0 {
+            (6u8, 4 * t as i32)
+        } else {
+            (11 + ((shift_bytes / 4 - 1) as u8 % 3), 4 * t as i32 - shift_bytes)
+        };
+        for j in 0..4u8 {
+            p.push(Inst::Lxv { xt: 36 + j, ra: reg, dq: disp + 16 * i32::from(j) });
+        }
+        let op = if t == 0 { AccOp::New } else { AccOp::PP };
+        for s in [0u8, 1, 4, 5, 2, 3, 6, 7] {
+            let x = if s < 4 { 32 } else { 33 };
+            p.push(Inst::Ger(Ger::new(GerKind::F32Ger, op, s, x, 36 + (s % 4))));
+        }
+    }
+    for s in 0..8u8 {
+        p.push(Inst::XxMfAcc { acc: s });
+        for r in 0..4u8 {
+            p.push(Inst::Stxv { xs: s * 4 + r, ra: 10, dq: 64 * i32::from(s) + 16 * i32::from(r) });
+        }
+    }
+    p.push(Inst::Blr);
+    p
+}
+
+/// Apply 8 stencil operators (`coeffs` is `8×taps`, row-major) to `row`
+/// (length ≥ 16 + taps − 1), producing 16 outputs per operator:
+/// `out[f][x] = Σ_t coeffs[f][t] · row[x + t]`.
+pub fn run_stencil_8x16(
+    coeffs: &[f32],
+    taps: usize,
+    row: &[f32],
+) -> Result<[[f32; 16]; 8], ExecError> {
+    assert_eq!(coeffs.len(), 8 * taps);
+    assert!(row.len() >= 16 + taps - 1);
+    // pack coefficients column-major (column t = 8 operator weights)
+    let mut cm = vec![0f32; 8 * taps];
+    for f in 0..8 {
+        for t in 0..taps {
+            cm[t * 8 + f] = coeffs[f * taps + t];
+        }
+    }
+    let cb = 0u64;
+    let rb = (8 * taps * 4).next_multiple_of(16) as u64;
+    let ob = rb + (row.len() * 4).next_multiple_of(16) as u64;
+    let mut m = Machine::new((ob + 512) as usize);
+    m.write_f32s(cb, &cm);
+    m.write_f32s(rb, row);
+    m.gpr[3] = cb;
+    m.gpr[6] = rb;
+    m.gpr[10] = ob;
+    let prog = stencil_8xtapsx16_program(taps);
+    m.run(&prog, 8192)?;
+    let raw = m.read_f32s(ob, 128);
+    Ok(unpack_c8x16_f32(&raw))
+}
+
+/// Scalar oracle.
+pub fn stencil_reference(coeffs: &[f32], taps: usize, row: &[f32], outs: usize) -> Vec<Vec<f32>> {
+    (0..8)
+        .map(|f| {
+            (0..outs)
+                .map(|x| (0..taps).map(|t| coeffs[f * taps + t] * row[x + t]).sum())
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn three_point_laplacian() {
+        // classic [1, -2, 1] second-difference stencil in operator 0
+        let taps = 3;
+        let mut coeffs = vec![0f32; 8 * taps];
+        coeffs[0] = 1.0;
+        coeffs[1] = -2.0;
+        coeffs[2] = 1.0;
+        // quadratic input -> constant second difference
+        let row: Vec<f32> = (0..24).map(|i| (i * i) as f32).collect();
+        let out = run_stencil_8x16(&coeffs, taps, &row).unwrap();
+        for x in 0..16 {
+            assert_eq!(out[0][x], 2.0, "second difference of x^2 is 2");
+        }
+        for f in 1..8 {
+            assert!(out[f].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn stencil_matches_reference_property() {
+        check("stencil 8x16 == scalar", 15, |rng: &mut Rng| {
+            let taps = rng.range(1, 10);
+            let coeffs = rng.f32_vec(8 * taps);
+            let row = rng.f32_vec(16 + taps + 8);
+            let got = run_stencil_8x16(&coeffs, taps, &row).unwrap();
+            let expect = stencil_reference(&coeffs, taps, &row, 16);
+            for f in 0..8 {
+                for x in 0..16 {
+                    assert!(
+                        (got[f][x] - expect[f][x]).abs() <= 1e-4 * expect[f][x].abs().max(1.0),
+                        "op {f} x {x}: {} vs {}",
+                        got[f][x],
+                        expect[f][x]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn eight_operators_in_one_pass() {
+        // 8 different box filters applied simultaneously (the multi-kernel
+        // trick of §V-B applied to stencils)
+        let taps = 5;
+        let mut coeffs = vec![0f32; 8 * taps];
+        for f in 0..8 {
+            for t in 0..=f.min(taps - 1) {
+                coeffs[f * taps + t] = 1.0 / (f.min(taps - 1) + 1) as f32;
+            }
+        }
+        let row: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        let got = run_stencil_8x16(&coeffs, taps, &row).unwrap();
+        let expect = stencil_reference(&coeffs, taps, &row, 16);
+        for f in 0..8 {
+            for x in 0..16 {
+                assert!((got[f][x] - expect[f][x]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn instruction_mix() {
+        let prog = stencil_8xtapsx16_program(7);
+        let gers = prog.iter().filter(|i| matches!(i, Inst::Ger(_))).count();
+        assert_eq!(gers, 7 * 8, "8 rank-1 updates per tap");
+    }
+}

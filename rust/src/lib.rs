@@ -1,0 +1,52 @@
+//! # power-mma
+//!
+//! A full-system reproduction of *"A matrix math facility for Power ISA™
+//! processors"* (Moreira et al., 2021) — the POWER10 **Matrix-Multiply Assist
+//! (MMA)** facility.
+//!
+//! The crate contains:
+//!
+//! * [`isa`] — a bit-exact functional simulator of the MMA instruction family
+//!   (Power ISA v3.1 §"VSX Matrix-Multiply Assist"), including the eight
+//!   512-bit accumulator registers, the priming state machine, every rank-k
+//!   update instruction of Table I (all suffix and saturating forms), the
+//!   64-bit *prefixed* masked variants, and binary encode/decode validated
+//!   against the object-code listing of the paper's Figure 7.
+//! * [`builtins`] — the §IV programming model: `__builtin_mma_*` equivalents
+//!   (Table II) as a `KernelBuilder` API that emits instruction streams and
+//!   performs accumulator/VSR allocation.
+//! * [`kernels`] — the paper's hand-written kernels: the DGEMM `8×N×8`
+//!   kernel of Figure 6, the SCONV `8×27×16` kernel of Figure 9, the blocked
+//!   `128×128×128` DGEMM kernel of §VI, reduced-precision GEMM kernels
+//!   (bf16 / fp16 / int16 / int8 / int4), and POWER9-compliant VSX baseline
+//!   kernels.
+//! * [`core_model`] — a cycle-approximate model of the POWER9 and POWER10
+//!   core backends (execution slices, VSU pipes, the Matrix Math Engine of
+//!   Figures 2–3, operand/result bus timing, LSU + cache hierarchy) plus the
+//!   event-based power model used for Figure 12.
+//! * [`blas`] / [`hpl`] — the numerical substrate: reference BLAS, blocked
+//!   GEMM over the simulated kernels, and an HPL (LU) driver for Figure 10.
+//! * [`runtime`] — PJRT client wrapper loading AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) produced by `python/compile/aot.py`.
+//! * [`coordinator`] — the "data-in-flight business analytics" serving layer
+//!   of §I: request router + dynamic batcher over the PJRT runtime.
+//! * [`rt`], [`cli`], [`testkit`], [`benchkit`], [`metrics`] — substrates
+//!   (thread pool, argument parser, property testing, benchmark harness,
+//!   metrics) built from `std` because the build environment is offline.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod benchkit;
+pub mod blas;
+pub mod builtins;
+pub mod cli;
+pub mod coordinator;
+pub mod core_model;
+pub mod hpl;
+pub mod isa;
+pub mod kernels;
+pub mod metrics;
+pub mod rt;
+pub mod runtime;
+pub mod testkit;

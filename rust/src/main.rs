@@ -1,0 +1,323 @@
+//! `power-mma` — command-line front end to the reproduction.
+//!
+//! Subcommands map to the paper's experiments and tools:
+//!
+//! * `fig10` / `fig11` / `fig12` — regenerate the evaluation figures;
+//! * `hpl` — functional HPL (with `--backend sim-mma` every trailing MAC
+//!   executes as simulated MMA instructions);
+//! * `simulate` — time a kernel on a machine configuration;
+//! * `asm` / `disasm` — the Power ISA MMA assembler/disassembler;
+//! * `serve` — start the analytics coordinator on the AOT artifacts and
+//!   run a self-test load.
+
+use power_mma::benchkit::f2;
+use power_mma::blas::gemm::{RefGemm, SimMmaGemm};
+use power_mma::cli::Command;
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::hpl::{hpl_cycles, hpl_run, CycleCost, Setup};
+use power_mma::isa::asm;
+use power_mma::isa::encode;
+use power_mma::kernels::dgemm::dgemm_8xnx8_program;
+use power_mma::kernels::vsx::vsx_dgemm_8x4_program;
+use power_mma::metrics::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("fig10") => cmd_fig10(&args[1..]),
+        Some("fig11") => cmd_fig11(&args[1..]),
+        Some("fig12") => cmd_fig12(&args[1..]),
+        Some("hpl") => cmd_hpl(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("asm") => cmd_asm(&args[1..]),
+        Some("disasm") => cmd_disasm(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        _ => {
+            eprintln!(
+                "power-mma — reproduction of 'A matrix math facility for Power ISA processors'\n\n\
+                 usage: power-mma <command> [options]\n\n\
+                 commands:\n\
+                 \x20 fig10     HPL flops/cycle vs problem size (paper Figure 10)\n\
+                 \x20 fig11     DGEMM flops/cycle vs N (paper Figure 11)\n\
+                 \x20 fig12     average power of 128x128 DGEMM (paper Figure 12)\n\
+                 \x20 hpl       functional HPL run with residual check\n\
+                 \x20 simulate  time a kernel on a machine model\n\
+                 \x20 asm       assemble MMA assembly to bytes\n\
+                 \x20 disasm    disassemble bytes to MMA assembly\n\
+                 \x20 serve     serve the AOT models and run a self-test load\n\n\
+                 run `power-mma <command> --help` for options"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_or_exit(cmd: Command, args: &[String]) -> power_mma::cli::Matches {
+    match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_fig10(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma fig10", "HPL flops/cycle vs N (Figure 10)")
+        .opt("sizes", Some("512,1024,2048,4096,8192"), "problem sizes to sweep")
+        .opt("nb", Some("128"), "LU panel width");
+    let m = parse_or_exit(cmd, args);
+    let sizes = m.get_usize_list("sizes").unwrap();
+    let nb = m.get_usize("nb").unwrap();
+    let mut table = Table::new(&["N", "POWER9", "POWER10-VSX", "POWER10-MMA", "MMA/P9"]);
+    let mut costs: Vec<CycleCost> = Setup::ALL.iter().map(|&s| CycleCost::new(s)).collect();
+    for &n in &sizes {
+        let mut row = vec![n.to_string()];
+        let mut vals = Vec::new();
+        for (i, &setup) in Setup::ALL.iter().enumerate() {
+            let t = hpl_cycles(setup, n, nb, &mut costs[i]);
+            vals.push(t.flops_per_cycle());
+            row.push(f2(t.flops_per_cycle()));
+        }
+        row.push(f2(vals[2] / vals[0]));
+        table.row(&row);
+    }
+    println!("HPL performance (flops/cycle), paper Figure 10:\n{}", table.render());
+    0
+}
+
+fn cmd_fig11(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma fig11", "DGEMM Nx128 * 128xN flops/cycle (Figure 11)")
+        .opt("sizes", Some("128,256,512,1024,2048,4096"), "N values");
+    let m = parse_or_exit(cmd, args);
+    let sizes = m.get_usize_list("sizes").unwrap();
+    let mut table =
+        Table::new(&["N", "POWER9", "POWER10-VSX", "POWER10-MMA", "MMA/VSX", "MMA/P9"]);
+    let mut costs: Vec<CycleCost> = Setup::ALL.iter().map(|&s| CycleCost::new(s)).collect();
+    for &n in &sizes {
+        let mut vals = Vec::new();
+        for (i, _) in Setup::ALL.iter().enumerate() {
+            let cycles = costs[i].dgemm_cycles(n, n, 128);
+            let flops = 2.0 * (n * n * 128) as f64;
+            vals.push(flops / cycles as f64);
+        }
+        table.row(&[
+            n.to_string(),
+            f2(vals[0]),
+            f2(vals[1]),
+            f2(vals[2]),
+            f2(vals[2] / vals[1]),
+            f2(vals[2] / vals[0]),
+        ]);
+    }
+    println!("DGEMM performance (flops/cycle), paper Figure 11:\n{}", table.render());
+    0
+}
+
+fn cmd_fig12(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma fig12", "average power of 128x128 DGEMM (Figure 12)")
+        .flag("gate-mme", "power-gate the MME during VSX runs");
+    let m = parse_or_exit(cmd, args);
+    let gate = m.flag("gate-mme");
+    let mut table =
+        Table::new(&["config", "CORE w/o MME", "MME", "TOTAL", "flops/cycle", "power/flop"]);
+    for setup in Setup::ALL {
+        let mut cost = CycleCost::new(setup);
+        if gate {
+            cost.sim_mut().set_mme_gated(true);
+        }
+        let r = cost.kernel_report(128);
+        let e = &r.energy;
+        table.row(&[
+            setup.label().to_string(),
+            f2(e.core_power),
+            f2(e.mme_power),
+            f2(e.total_power),
+            f2(r.flops_per_cycle()),
+            format!("{:.3}", e.total_power / r.flops_per_cycle()),
+        ]);
+    }
+    println!(
+        "Average power draw of 128x128 DGEMM (arbitrary units), paper Figure 12{}:\n{}",
+        if gate { " (MME power-gated)" } else { "" },
+        table.render()
+    );
+    0
+}
+
+fn cmd_hpl(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma hpl", "functional HPL with residual check")
+        .opt("n", Some("256"), "problem size")
+        .opt("nb", Some("64"), "panel width")
+        .opt("backend", Some("reference"), "trailing-update backend: reference | sim-mma")
+        .opt("seed", Some("42"), "matrix seed");
+    let m = parse_or_exit(cmd, args);
+    let n = m.get_usize("n").unwrap();
+    let nb = m.get_usize("nb").unwrap();
+    let seed = m.get_u64("seed").unwrap();
+    let r = match m.get("backend") {
+        "sim-mma" => {
+            let mut b = SimMmaGemm::default();
+            let r = hpl_run(n, nb, seed, &mut b).unwrap();
+            println!(
+                "trailing updates executed as MMA instruction streams: {} instructions, {} gers",
+                b.stats.instructions, b.stats.mma_instructions
+            );
+            r
+        }
+        _ => hpl_run(n, nb, seed, &mut RefGemm).unwrap(),
+    };
+    println!(
+        "HPL N={n} NB={nb}: residual {:.3e} -> {}",
+        r.residual,
+        if r.passed() { "PASSED" } else { "FAILED" }
+    );
+    println!(
+        "nominal {:.3} Gflop; gemm fraction {:.1}%",
+        r.nominal_flops() / 1e9,
+        100.0 * r.profile.gemm_flops as f64 / r.profile.total_flops() as f64
+    );
+    if r.passed() {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma simulate", "time a kernel on a machine model")
+        .opt("machine", Some("power10"), "power9 | power10")
+        .opt("k", Some("128"), "inner dimension of the kernel")
+        .positional("kernel", "dgemm-mma | dgemm-vsx");
+    let m = parse_or_exit(cmd, args);
+    let k = m.get_usize("k").unwrap();
+    let cfg = match m.get("machine") {
+        "power9" => MachineConfig::power9(),
+        _ => MachineConfig::power10(),
+    };
+    let prog = match m.positional(0) {
+        "dgemm-mma" => dgemm_8xnx8_program(k),
+        "dgemm-vsx" => vsx_dgemm_8x4_program(k),
+        other => {
+            eprintln!("unknown kernel {other}");
+            return 2;
+        }
+    };
+    let mut sim = CoreSim::new(cfg);
+    let r = sim.run(&prog, 1 << 26);
+    println!(
+        "{} on {}: {} insts, {} cycles, {:.2} flops/cycle (ipc {:.2})",
+        m.positional(0),
+        r.name,
+        r.instructions,
+        r.cycles,
+        r.flops_per_cycle(),
+        r.ipc()
+    );
+    println!(
+        "units: vsu={} mma={} lsu={} fx={} | cache: l1={} l2={} miss={}",
+        r.units.vsu_ops, r.units.mma_ops, r.units.lsu_ops, r.units.fx_ops, r.l1_hits, r.l2_hits, r.mem_misses
+    );
+    0
+}
+
+fn cmd_asm(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma asm", "assemble MMA assembly (stdin) to hex")
+        .flag("bytes", "print raw bytes instead of words");
+    let m = parse_or_exit(cmd, args);
+    let mut src = String::new();
+    use std::io::Read;
+    std::io::stdin().read_to_string(&mut src).expect("read stdin");
+    match asm::assemble(&src) {
+        Ok(prog) => {
+            let bytes = encode::encode_program(&prog).expect("encode");
+            if m.flag("bytes") {
+                for b in &bytes {
+                    print!("{b:02x} ");
+                }
+                println!();
+            } else {
+                for w in bytes.chunks_exact(4) {
+                    println!("{:08x}", u32::from_le_bytes(w.try_into().unwrap()));
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_disasm(args: &[String]) -> i32 {
+    let cmd = Command::new("power-mma disasm", "disassemble hex words (stdin, one per line)");
+    let _m = parse_or_exit(cmd, args);
+    let mut src = String::new();
+    use std::io::Read;
+    std::io::stdin().read_to_string(&mut src).expect("read stdin");
+    let mut bytes = Vec::new();
+    for tok in src.split_whitespace() {
+        let w = u32::from_str_radix(tok.trim_start_matches("0x"), 16).expect("hex word");
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    match encode::decode_program(&bytes) {
+        Ok(prog) => {
+            print!("{}", asm::disassemble_program(&prog));
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+    use power_mma::runtime::{det_input, Runtime};
+    let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("requests", Some("1000"), "self-test request count");
+    let m = parse_or_exit(cmd, args);
+    let dir = m.get("artifacts").to_string();
+    let n_req = m.get_usize("requests").unwrap();
+    let cfg = CoordinatorConfig::default();
+    let weights = MlpWeights::deterministic(&cfg);
+    let features = cfg.features;
+    let coord = Coordinator::start(cfg, weights, move || {
+        let mut rt = Runtime::cpu(&dir)?;
+        let names = rt.load_all()?;
+        eprintln!("loaded models: {names:?} on {}", rt.platform());
+        Ok(rt)
+    });
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let f = det_input(features, i as u64 % 13);
+        rxs.push(coord.submit(Payload::Classify { features: f }).1);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let stats = coord.shutdown();
+    println!(
+        "served {ok}/{n_req} requests in {:.2?} ({:.0} req/s); \
+         p50 {} us, p99 {} us, mean batch occupancy {:.1}",
+        dt,
+        n_req as f64 / dt.as_secs_f64(),
+        stats.latency.quantile_us(0.5),
+        stats.latency.quantile_us(0.99),
+        stats.mean_batch_occupancy()
+    );
+    if ok == n_req {
+        0
+    } else {
+        1
+    }
+}

@@ -1,0 +1,421 @@
+//! Execution substrate: a work-stealing-free but sharded thread pool, an
+//! unbounded MPMC channel, and a bounded channel with backpressure — the
+//! pieces the coordinator's event loop needs (tokio is unavailable offline;
+//! the request path is CPU-bound PJRT execution, so OS threads are the
+//! right tool anyway).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// MPMC channel
+// ---------------------------------------------------------------------------
+
+struct ChanInner<T> {
+    queue: Mutex<ChanState<T>>,
+    available: Condvar,
+    space: Condvar,
+    cap: Option<usize>,
+}
+
+struct ChanState<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    closed: bool,
+}
+
+/// Sending half of a channel. Cloneable.
+pub struct Sender<T>(Arc<ChanInner<T>>);
+
+/// Receiving half of a channel. Cloneable (MPMC).
+pub struct Receiver<T>(Arc<ChanInner<T>>);
+
+/// Error returned by [`Sender::send`] when all receivers are gone or the
+/// channel was closed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by [`Receiver::recv`] when the channel is empty and all
+/// senders are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            self.0.available.notify_all();
+        }
+    }
+}
+
+fn channel_inner<T>(cap: Option<usize>) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(ChanInner {
+        queue: Mutex::new(ChanState { items: VecDeque::new(), senders: 1, closed: false }),
+        available: Condvar::new(),
+        space: Condvar::new(),
+        cap,
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+/// Unbounded MPMC channel.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    channel_inner(None)
+}
+
+/// Bounded MPMC channel: `send` blocks when `cap` items are queued
+/// (backpressure).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap > 0);
+    channel_inner(Some(cap))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send (waits for space on bounded channels).
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.queue.lock().unwrap();
+        if let Some(cap) = self.0.cap {
+            while st.items.len() >= cap && !st.closed {
+                st = self.0.space.wait(st).unwrap();
+            }
+        }
+        if st.closed {
+            return Err(SendError(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.0.available.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send: fails with the item if the channel is full/closed.
+    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.queue.lock().unwrap();
+        if st.closed || self.0.cap.is_some_and(|c| st.items.len() >= c) {
+            return Err(SendError(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.0.available.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel: wakes all receivers; subsequent sends fail.
+    pub fn close(&self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.0.available.notify_all();
+        self.0.space.notify_all();
+    }
+
+    /// Queue depth (for backpressure decisions / metrics).
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err(RecvError)` once the channel is drained and
+    /// all senders are gone (or it was closed).
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.0.space.notify_one();
+                return Ok(item);
+            }
+            if st.senders == 0 || st.closed {
+                return Err(RecvError);
+            }
+            st = self.0.available.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.0.space.notify_one();
+        }
+        item
+    }
+
+    /// Receive with a deadline; `None` on timeout or closed-and-drained.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.0.space.notify_one();
+                return Some(item);
+            }
+            if st.senders == 0 || st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _tmo) = self.0.available.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with graceful shutdown.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    /// Pool with `n` worker threads named `{name}-{i}`.
+    pub fn new(name: &str, n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = channel::<Job>();
+        let active = Arc::new(AtomicUsize::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                let active = active.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            active.fetch_add(1, Ordering::SeqCst);
+                            job();
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, active, shutdown }
+    }
+
+    /// Submit a job. Panics if the pool is shut down.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        assert!(!self.shutdown.load(Ordering::SeqCst), "pool is shut down");
+        self.tx.as_ref().unwrap().send(Box::new(job)).ok();
+    }
+
+    /// Number of jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Queued (not yet started) jobs.
+    pub fn queued(&self) -> usize {
+        self.tx.as_ref().map_or(0, |t| t.len())
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.tx.take(); // drop sender -> workers exit after draining
+        for w in self.workers.drain(..) {
+            w.join().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if self.tx.is_some() {
+            self.shutdown_impl();
+        }
+    }
+}
+
+/// Run `f` on `n` values in parallel over a temporary scope of threads and
+/// collect the results in input order (a minimal `rayon`-like map).
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let work = Mutex::new(work);
+    let results = Mutex::new(&mut out);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                let Some((i, v)) = item else { break };
+                let r = f(v);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_fifo() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn channel_close_semantics() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn bounded_backpressure() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err(), "full channel rejects try_send");
+        let t = {
+            let tx = tx.clone();
+            std::thread::spawn(move || tx.send(3).unwrap()) // blocks until a recv
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        t.join().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn recv_timeout() {
+        let (tx, rx) = channel::<u32>();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), None);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Some(7));
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let (tx, rx) = channel::<u64>();
+        let n_senders = 4u8;
+        let per = 500u64;
+        let senders: Vec<_> = (0..n_senders)
+            .map(|s| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        tx.send(u64::from(s) * per + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let receivers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for s in senders {
+            s.join().unwrap();
+        }
+        let mut all: Vec<u64> = receivers.into_iter().flat_map(|r| r.join().unwrap()).collect();
+        all.sort();
+        let expect: Vec<u64> = (0..u64::from(n_senders) * per).collect();
+        assert_eq!(all, expect, "every message delivered exactly once");
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new("test", 4);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = c.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(c.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_order_preserved() {
+        let out = par_map((0..100).collect(), 8, |i: i32| i * i);
+        let expect: Vec<i32> = (0..100).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

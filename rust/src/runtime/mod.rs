@@ -1,0 +1,214 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see that file and /opt/xla-example/README.md for why text,
+//! not serialized protos) and executes them on the CPU PJRT client.
+//!
+//! This is the only place the crate touches the `xla` FFI. The coordinator
+//! runs a [`Runtime`] on a dedicated engine thread (the PJRT wrappers hold
+//! raw C++ pointers and are kept thread-confined).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `<name>.meta` line: `name;in0shape,in1shape,…;outshape`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+impl ModelMeta {
+    /// Parse one manifest line.
+    pub fn parse(line: &str) -> Result<ModelMeta> {
+        let mut parts = line.trim().split(';');
+        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
+        let ins = parts.next().ok_or_else(|| anyhow!("{name}: missing input shapes"))?;
+        let out = parts.next().ok_or_else(|| anyhow!("{name}: missing output shape"))?;
+        let parse_shape = |s: &str| -> Result<Vec<usize>> {
+            s.split('x').map(|d| d.parse::<usize>().context("bad dim")).collect()
+        };
+        Ok(ModelMeta {
+            name,
+            input_shapes: ins.split(',').map(parse_shape).collect::<Result<_>>()?,
+            output_shape: parse_shape(out)?,
+        })
+    }
+
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// One compiled model.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory (does not load
+    /// anything yet).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime { client, models: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (`<dir>/<name>.hlo.txt` +
+    /// `<name>.meta`). Idempotent.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            return Ok(());
+        }
+        let meta_path = self.dir.join(format!("{name}.meta"));
+        let meta_line = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let meta = ModelMeta::parse(&meta_line)?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.models.insert(name.to_string(), LoadedModel { meta, exe });
+        Ok(())
+    }
+
+    /// Load every artifact listed in `manifest.txt`.
+    pub fn load_all(&mut self) -> Result<Vec<String>> {
+        let manifest = std::fs::read_to_string(self.dir.join("manifest.txt"))
+            .context("reading manifest.txt (run `make artifacts`)")?;
+        let mut names = Vec::new();
+        for line in manifest.lines().filter(|l| !l.trim().is_empty()) {
+            let meta = ModelMeta::parse(line)?;
+            self.load(&meta.name)?;
+            names.push(meta.name);
+        }
+        Ok(names)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.get(name).map(|m| &m.meta)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a model on flat f32 inputs (row-major); returns the flat
+    /// f32 output. Input lengths are validated against the metadata.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let model =
+            self.models.get(name).ok_or_else(|| anyhow!("model {name} not loaded"))?;
+        if inputs.len() != model.meta.input_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                model.meta.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = model.meta.input_len(i);
+            if data.len() != want {
+                bail!("{name}: input {i} has {} elements, expected {want}", data.len());
+            }
+            let dims: Vec<i64> = model.meta.input_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = model
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if vals.len() != model.meta.output_len() {
+            bail!("{name}: output has {} elements, expected {}", vals.len(), model.meta.output_len());
+        }
+        Ok(vals)
+    }
+
+    /// Read the python-side expected output for the deterministic inputs.
+    pub fn expected(&self, name: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{name}.expected.bin"));
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+    }
+}
+
+/// The deterministic test input of `aot.py::det_input`, reproduced
+/// bit-identically: `value(i) = ((i*31 + 7*salt) % 61) / 61 − 0.5`,
+/// computed in f64 and cast to f32.
+pub fn det_input(len: usize, salt: u64) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let v = ((i as f64 * 31.0 + 7.0 * salt as f64) % 61.0) / 61.0 - 0.5;
+            v as f32
+        })
+        .collect()
+}
+
+/// Deterministic inputs for every argument of a model (salt = arg index+1),
+/// matching `aot.py::build_artifact`.
+pub fn det_inputs(meta: &ModelMeta) -> Vec<Vec<f32>> {
+    meta.input_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| det_input(s.iter().product(), i as u64 + 1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parsing() {
+        let m = ModelMeta::parse("gemm_f32;128x128,128x128;128x128\n").unwrap();
+        assert_eq!(m.name, "gemm_f32");
+        assert_eq!(m.input_shapes, vec![vec![128, 128], vec![128, 128]]);
+        assert_eq!(m.output_shape, vec![128, 128]);
+        assert_eq!(m.input_len(0), 128 * 128);
+        assert_eq!(m.output_len(), 128 * 128);
+
+        let m = ModelMeta::parse("mlp_b32;32x64,64x128,128,128x32,32;32x32").unwrap();
+        assert_eq!(m.input_shapes.len(), 5);
+        assert_eq!(m.input_shapes[2], vec![128]);
+
+        assert!(ModelMeta::parse("bad").is_err());
+        assert!(ModelMeta::parse("x;1xq;2").is_err());
+    }
+
+    #[test]
+    fn det_input_matches_python_formula() {
+        let v = det_input(4, 1);
+        for (i, &val) in v.iter().enumerate() {
+            let expect = (((i as f64) * 31.0 + 7.0) % 61.0) / 61.0 - 0.5;
+            assert_eq!(val, expect as f32);
+        }
+        // different salts differ
+        assert_ne!(det_input(8, 1), det_input(8, 2));
+    }
+}

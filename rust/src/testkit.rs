@@ -1,0 +1,221 @@
+//! Property-testing substrate.
+//!
+//! The offline build environment has no `proptest`/`quickcheck`, so this
+//! module provides the pieces the test suite needs: a fast deterministic
+//! PRNG (xoshiro256**), value generators, and a tiny property harness with
+//! case counting and failure reporting (including the failing seed so a
+//! case can be replayed).
+
+/// xoshiro256** PRNG — deterministic, seedable, good statistical quality.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded PRNG. Every test should pass a fixed seed for reproducibility.
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion of the seed
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // multiply-shift; bias negligible for test generation purposes
+        ((u128::from(self.next_u64()) * u128::from(n)) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn irange(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_range(f64::from(lo), f64::from(hi)) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Vector of uniform f64 in [-1, 1).
+    pub fn f64_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.f64_range(-1.0, 1.0)).collect()
+    }
+
+    /// Vector of uniform f32 in [-1, 1).
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_range(-1.0, 1.0)).collect()
+    }
+}
+
+/// Run `f` for `cases` generated cases. On panic, reports the case index and
+/// the per-case seed so the failure can be replayed with [`replay`].
+pub fn check(name: &str, cases: u32, mut f: impl FnMut(&mut Rng)) {
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base ^ (u64::from(i) << 32) ^ u64::from(i);
+        let mut rng = Rng::new(seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = r {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {i} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one failing case of [`check`] by seed.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Assert two float slices are close: `|a-b| <= atol + rtol*|b|` elementwise.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// `assert_allclose` for f32 slices.
+#[track_caller]
+pub fn assert_allclose_f32(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    let a64: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
+    let b64: Vec<f64> = b.iter().map(|&v| f64::from(v)).collect();
+    assert_allclose(&a64, &b64, f64::from(rtol), f64::from(atol));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn ranges_in_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let v = rng.range(3, 10);
+            assert!((3..10).contains(&v));
+            let f = rng.f64_range(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+            let i = rng.irange(-5, 5);
+            assert!((-5..=5).contains(&i));
+        }
+    }
+
+    #[test]
+    fn below_covers_small_domains() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[rng.below(4) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn check_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 5, |_| panic!("boom"));
+        });
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn allclose() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-9, 2.0], 1e-6, 0.0);
+        let r = std::panic::catch_unwind(|| assert_allclose(&[1.0], &[1.1], 1e-6, 0.0));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! Cross-cutting property tests: random instruction streams round-trip
+//! through the binary codec and the assembler; random masked rank-k updates
+//! match a scalar model of equations (1)–(3); the timing model is
+//! deterministic and mass-conserving.
+
+use power_mma::isa::asm::{assemble, disassemble_program};
+use power_mma::isa::encode::{decode_program, encode_program};
+use power_mma::isa::inst::{AccOp, Ger, GerKind, Inst};
+use power_mma::isa::regs::Vsr;
+use power_mma::isa::Machine;
+use power_mma::testkit::{check, Rng};
+
+/// Generate a random *encodable* instruction.
+fn arb_inst(rng: &mut Rng) -> Inst {
+    let ops = [AccOp::New, AccOp::NewS, AccOp::PP, AccOp::NP, AccOp::PN, AccOp::NN, AccOp::SPP];
+    loop {
+        match rng.below(12) {
+            0 => return Inst::XxSetAccZ { acc: rng.below(8) as u8 },
+            1 => return Inst::XxMfAcc { acc: rng.below(8) as u8 },
+            2 => return Inst::XxMtAcc { acc: rng.below(8) as u8 },
+            3 => {
+                return Inst::Lxv {
+                    xt: rng.below(64) as u8,
+                    ra: rng.below(32) as u8,
+                    dq: rng.irange(-128, 127) as i32 * 16,
+                }
+            }
+            4 => {
+                return Inst::Lxvp {
+                    xtp: (rng.below(32) * 2) as u8,
+                    ra: rng.below(32) as u8,
+                    dq: rng.irange(-128, 127) as i32 * 16,
+                }
+            }
+            5 => {
+                return Inst::Stxv {
+                    xs: rng.below(64) as u8,
+                    ra: rng.below(32) as u8,
+                    dq: rng.irange(-128, 127) as i32 * 16,
+                }
+            }
+            6 => {
+                return Inst::Addi {
+                    rt: rng.below(32) as u8,
+                    ra: rng.below(32) as u8,
+                    si: rng.irange(-32768, 32767) as i32,
+                }
+            }
+            7 => return Inst::Mtctr { rs: rng.below(32) as u8 },
+            8 => {
+                return Inst::XvMaddaDp {
+                    xt: rng.below(64) as u8,
+                    xa: rng.below(64) as u8,
+                    xb: rng.below(64) as u8,
+                }
+            }
+            9 => {
+                return Inst::XxSpltd { xt: rng.below(64) as u8, xa: rng.below(64) as u8, h: rng.below(2) as u8 }
+            }
+            10 => return Inst::Nop,
+            _ => {
+                let kind = *rng.pick(&GerKind::ALL);
+                let op = *rng.pick(&ops);
+                if !op.valid_for(kind) {
+                    continue;
+                }
+                let acc = rng.below(8) as u8;
+                let xa = if kind == GerKind::F64Ger { (rng.below(16) * 2 + 32) as u8 } else { rng.below(64) as u8 };
+                let yb = rng.below(64) as u8;
+                if rng.bool() {
+                    return Inst::Ger(Ger::new(kind, op, acc, xa, yb));
+                }
+                let yw = if kind == GerKind::F64Ger { 2 } else { 4 };
+                let pw = kind.rank();
+                let pmsk = if pw == 1 { 0xff } else { rng.below(1 << pw) as u8 };
+                return Inst::Ger(Ger::prefixed(
+                    kind,
+                    op,
+                    acc,
+                    xa,
+                    yb,
+                    rng.below(16) as u8,
+                    rng.below(1 << yw) as u8,
+                    pmsk,
+                ));
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_decode_round_trip() {
+    check("encode/decode round trip", 300, |rng| {
+        let prog: Vec<Inst> = (0..rng.range(1, 40)).map(|_| arb_inst(rng)).collect();
+        let bytes = encode_program(&prog).unwrap();
+        let back = decode_program(&bytes).unwrap();
+        assert_eq!(back, prog);
+    });
+}
+
+#[test]
+fn asm_round_trip() {
+    check("asm round trip", 300, |rng| {
+        let prog: Vec<Inst> = (0..rng.range(1, 30)).map(|_| arb_inst(rng)).collect();
+        let text = disassemble_program(&prog);
+        let back = assemble(&text).unwrap();
+        assert_eq!(back, prog, "\n{text}");
+    });
+}
+
+/// Scalar model of eq. (1)-(3) for the integer kinds.
+fn scalar_int_ger(g: &Ger, x: &Vsr, y: &Vsr, acc: [[i32; 4]; 4]) -> [[i32; 4]; 4] {
+    let rank = g.kind.rank();
+    let mut out = acc;
+    for i in 0..4 {
+        for j in 0..4 {
+            let enabled = (g.xmsk >> i) & 1 == 1 && (g.ymsk >> j) & 1 == 1;
+            if !enabled {
+                if !g.op.accumulates() {
+                    out[i][j] = 0;
+                }
+                continue;
+            }
+            let mut sum: i64 = 0;
+            for k in 0..rank {
+                if (g.pmsk >> k) & 1 == 0 {
+                    continue;
+                }
+                let (xe, ye): (i64, i64) = match g.kind {
+                    GerKind::I16Ger2 => (x.i16(2 * i + k).into(), y.i16(2 * j + k).into()),
+                    GerKind::I8Ger4 => ((x.i8(4 * i + k) as i64), y.u8(4 * j + k).into()),
+                    GerKind::I4Ger8 => (x.i4(8 * i + k).into(), y.i4(8 * j + k).into()),
+                    _ => unreachable!(),
+                };
+                sum += xe * ye;
+            }
+            let prev = if g.op.accumulates() { i64::from(acc[i][j]) } else { 0 };
+            let v = prev + sum;
+            out[i][j] = match g.op {
+                AccOp::NewS | AccOp::SPP => v.clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+                _ => v as i32, // wrapping
+            };
+        }
+    }
+    out
+}
+
+#[test]
+fn integer_ger_matches_scalar_model() {
+    check("integer ger == eq.(1)+(3) scalar model", 200, |rng| {
+        let kinds = [GerKind::I16Ger2, GerKind::I8Ger4, GerKind::I4Ger8];
+        let kind = *rng.pick(&kinds);
+        let ops: Vec<AccOp> = [AccOp::New, AccOp::NewS, AccOp::PP, AccOp::SPP]
+            .into_iter()
+            .filter(|o| o.valid_for(kind))
+            .collect();
+        let op = *rng.pick(&ops);
+        let mut xb = [0u8; 16];
+        let mut yb = [0u8; 16];
+        for b in 0..16 {
+            xb[b] = rng.below(256) as u8;
+            yb[b] = rng.below(256) as u8;
+        }
+        let (x, y) = (Vsr::from_u8x16(xb), Vsr::from_u8x16(yb));
+        let prefixed = rng.bool();
+        let g = if prefixed {
+            let pw = kind.rank();
+            Ger::prefixed(
+                kind,
+                op,
+                0,
+                40,
+                41,
+                rng.below(16) as u8,
+                rng.below(16) as u8,
+                rng.below(1 << pw) as u8,
+            )
+        } else {
+            Ger::new(kind, op, 0, 40, 41)
+        };
+        let mut m = Machine::new(64);
+        m.regs.vsr[40] = x;
+        m.regs.vsr[41] = y;
+        let acc0 = {
+            let mut a = [[0i32; 4]; 4];
+            for (i, row) in a.iter_mut().enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = rng.irange(i32::MIN as i64, i32::MAX as i64) as i32;
+                }
+                let _ = i;
+            }
+            a
+        };
+        m.regs.acc[0] = power_mma::isa::regs::Acc::from_i32_4x4(acc0);
+        m.regs.primed[0] = true;
+        m.exec_ger(&g).unwrap();
+        let expect = scalar_int_ger(&g, &x, &y, acc0);
+        assert_eq!(m.regs.acc[0].to_i32_4x4(), expect, "{g:?}");
+    });
+}
+
+#[test]
+fn float_masked_ger_matches_scalar_model() {
+    check("pmxvf32ger == eq.(3)", 200, |rng| {
+        let mut m = Machine::new(64);
+        let xs: Vec<f32> = (0..4).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        let ys: Vec<f32> = (0..4).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+        m.regs.vsr[50] = Vsr::from_f32x4(xs.clone().try_into().unwrap());
+        m.regs.vsr[51] = Vsr::from_f32x4(ys.clone().try_into().unwrap());
+        let acc0: Vec<f32> = (0..16).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+        let mut a0 = [[0f32; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                a0[i][j] = acc0[4 * i + j];
+            }
+        }
+        m.regs.acc[3] = power_mma::isa::regs::Acc::from_f32_4x4(a0);
+        m.regs.primed[3] = true;
+        let ops = [AccOp::PP, AccOp::NP, AccOp::PN, AccOp::NN];
+        let op = *rng.pick(&ops);
+        let (xm, ym) = (rng.below(16) as u8, rng.below(16) as u8);
+        let g = Ger::prefixed(GerKind::F32Ger, op, 3, 50, 51, xm, ym, 0xff);
+        m.exec_ger(&g).unwrap();
+        let got = m.regs.acc[3].to_f32_4x4();
+        for i in 0..4 {
+            for j in 0..4 {
+                let enabled = (xm >> i) & 1 == 1 && (ym >> j) & 1 == 1;
+                let expect = if !enabled {
+                    a0[i][j]
+                } else {
+                    let p = xs[i] * ys[j];
+                    match op {
+                        AccOp::PP => p + a0[i][j],
+                        AccOp::NP => -p + a0[i][j],
+                        AccOp::PN => p - a0[i][j],
+                        AccOp::NN => -p - a0[i][j],
+                        _ => unreachable!(),
+                    }
+                };
+                assert_eq!(got[i][j], expect, "({i},{j}) {op:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn functional_and_timing_models_agree_on_instruction_count() {
+    use power_mma::core_model::{CoreSim, MachineConfig};
+    use power_mma::kernels::dgemm::dgemm_8xnx8_program;
+    check("CoreSim executes the same dynamic stream", 10, |rng| {
+        let n = rng.range(1, 64);
+        let prog = dgemm_8xnx8_program(n);
+        // functional
+        let mut m = Machine::new(1 << 16);
+        m.gpr[3] = 32768;
+        m.gpr[4] = 0;
+        m.gpr[5] = 8192;
+        m.run(&prog, 1 << 20).unwrap();
+        // timing
+        let mut sim = CoreSim::new(MachineConfig::power10());
+        sim.gpr = [0; 32];
+        sim.gpr[3] = 32768;
+        sim.gpr[5] = 8192;
+        let r = sim.run(&prog, 1 << 20);
+        assert_eq!(r.instructions, m.stats.instructions);
+        assert_eq!(r.flops, m.stats.flops);
+    });
+}
+
+#[test]
+fn exhaustive_mask_sweep_f16ger2() {
+    // every (xmsk, ymsk, pmsk) combination of pmxvf16ger2pp: 16*16*4
+    // cases, each checked against the eq. (3) scalar model
+    use power_mma::isa::types::f32_to_f16;
+    let xs: Vec<f32> = (0..8).map(|i| (i as f32) * 0.5 - 1.75).collect();
+    let ys: Vec<f32> = (0..8).map(|i| 2.0 - (i as f32) * 0.25).collect();
+    let xh: Vec<u16> = xs.iter().map(|&v| f32_to_f16(v)).collect();
+    let yh: Vec<u16> = ys.iter().map(|&v| f32_to_f16(v)).collect();
+    let mut m = Machine::new(64);
+    m.regs.vsr[34] = Vsr::from_u16x8(xh.try_into().unwrap());
+    m.regs.vsr[35] = Vsr::from_u16x8(yh.try_into().unwrap());
+    let base = [[5.0f32; 4]; 4];
+    for xmsk in 0..16u8 {
+        for ymsk in 0..16u8 {
+            for pmsk in 0..4u8 {
+                m.regs.acc[0] = power_mma::isa::regs::Acc::from_f32_4x4(base);
+                m.regs.primed[0] = true;
+                let g = Ger::prefixed(GerKind::F16Ger2, AccOp::PP, 0, 34, 35, xmsk, ymsk, pmsk);
+                m.exec_ger(&g).unwrap();
+                let got = m.regs.acc[0].to_f32_4x4();
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let enabled = (xmsk >> i) & 1 == 1 && (ymsk >> j) & 1 == 1;
+                        let expect = if !enabled {
+                            base[i][j]
+                        } else {
+                            let mut p = 0f32;
+                            for k in 0..2 {
+                                if (pmsk >> k) & 1 == 1 {
+                                    p += xs[2 * i + k] * ys[2 * j + k];
+                                }
+                            }
+                            p + base[i][j]
+                        };
+                        assert_eq!(
+                            got[i][j], expect,
+                            "x={xmsk:04b} y={ymsk:04b} p={pmsk:02b} ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn vsx_and_mma_kernels_agree_numerically() {
+    // differential test: the two §VI code paths must compute identical
+    // products (modulo f64 association, which is identical here since both
+    // sum in k order)
+    use power_mma::kernels::dgemm::run_dgemm_8xnx8;
+    use power_mma::kernels::vsx::run_vsx_dgemm_8x4;
+    check("vsx == mma dgemm", 10, |rng| {
+        let k = rng.range(1, 30);
+        let x = rng.f64_vec(8 * k);
+        let y8 = rng.f64_vec(8 * k);
+        let mma = run_dgemm_8xnx8(&x, &y8, k).unwrap();
+        // VSX computes 8x4 blocks: columns 0..4 use y rows 0..4 of each column
+        let mut y4 = vec![0f64; 4 * k];
+        for kk in 0..k {
+            y4[kk * 4..kk * 4 + 4].copy_from_slice(&y8[kk * 8..kk * 8 + 4]);
+        }
+        let vsx = run_vsx_dgemm_8x4(&x, &y4, k).unwrap();
+        for i in 0..8 {
+            for j in 0..4 {
+                assert!(
+                    (mma[i][j] - vsx[i][j]).abs() < 1e-12 * mma[i][j].abs().max(1.0),
+                    "({i},{j})"
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,173 @@
+//! Integration tests over the real AOT artifacts: rust loads the HLO text
+//! produced by `python/compile/aot.py`, compiles it on the PJRT CPU client,
+//! executes with the shared deterministic inputs, and checks the numbers
+//! against the python-side expected outputs — the proof that L1 (Pallas)
+//! → L2 (JAX) → AOT → L3 (rust) compose.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifact directory is missing so `cargo test` works standalone.
+
+use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+use power_mma::runtime::{det_input, det_inputs, Runtime};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol + rtol * y.abs(),
+            "element {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn artifacts_match_python_expectations() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let names = rt.load_all().unwrap();
+    assert!(names.len() >= 4, "expected gemm_f32/gemm_bf16/conv2d_k3/mlp artifacts");
+    for name in &names {
+        let meta = rt.meta(name).unwrap().clone();
+        let inputs = det_inputs(&meta);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute(name, &refs).unwrap();
+        let expect = rt.expected(name).unwrap();
+        // identical compiled graph on both sides -> tight tolerance
+        allclose(&out, &expect, 1e-5, 1e-5);
+        println!("{name}: {} outputs match python", out.len());
+    }
+}
+
+#[test]
+fn gemm_artifact_is_a_real_matmul() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load("gemm_f32").unwrap();
+    let meta = rt.meta("gemm_f32").unwrap().clone();
+    let n = meta.input_shapes[0][0];
+    // x = diag(2), y = pattern -> out = 2*y
+    let mut x = vec![0f32; n * n];
+    for i in 0..n {
+        x[i * n + i] = 2.0;
+    }
+    let y = det_input(n * n, 9);
+    let out = rt.execute("gemm_f32", &[&x, &y]).unwrap();
+    let expect: Vec<f32> = y.iter().map(|v| 2.0 * v).collect();
+    allclose(&out, &expect, 1e-6, 1e-6);
+}
+
+#[test]
+fn runtime_validates_inputs() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load("gemm_f32").unwrap();
+    let short = vec![0f32; 7];
+    assert!(rt.execute("gemm_f32", &[&short, &short]).is_err());
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn coordinator_serves_real_models_end_to_end() {
+    let Some(dir) = artifact_dir() else { return };
+    let cfg = CoordinatorConfig { max_delay: std::time::Duration::from_millis(5), ..Default::default() };
+    let weights = MlpWeights::deterministic(&cfg);
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(cfg.clone(), weights, move || {
+        let mut rt = Runtime::cpu(&dir2)?;
+        rt.load_all()?;
+        Ok(rt)
+    });
+
+    // 1) classification requests with the deterministic features must give
+    // the python-computed logits (the aot expected fixture for mlp_b32)
+    let mlp_name = cfg.mlp_model();
+    let rt_check = Runtime::cpu(&dir).unwrap();
+    let expect = rt_check.expected(&mlp_name).unwrap();
+    let features_all = det_input(cfg.batch_size * cfg.features, 1);
+    let mut rxs = Vec::new();
+    for r in 0..cfg.batch_size {
+        let f = features_all[r * cfg.features..(r + 1) * cfg.features].to_vec();
+        rxs.push((r, coord.submit(Payload::Classify { features: f }).1));
+    }
+    for (r, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        let row = resp.result.unwrap();
+        allclose(&row, &expect[r * cfg.classes..(r + 1) * cfg.classes], 1e-5, 1e-5);
+    }
+
+    // 2) a GEMM request
+    let g = 128;
+    let (_, rx) = coord.submit(Payload::Gemm {
+        model: "gemm_f32".into(),
+        x: det_input(g * g, 1),
+        y: det_input(g * g, 2),
+    });
+    let gemm_expect = rt_check.expected("gemm_f32").unwrap();
+    allclose(&rx.recv().unwrap().result.unwrap(), &gemm_expect, 1e-5, 1e-5);
+
+    // 3) a conv request
+    let (_, rx) = coord.submit(Payload::Conv {
+        filters: det_input(8 * 27, 1),
+        image: det_input(3 * 18 * 130, 2),
+    });
+    let conv_expect = rt_check.expected("conv2d_k3").unwrap();
+    allclose(&rx.recv().unwrap().result.unwrap(), &conv_expect, 1e-4, 1e-5);
+
+    let stats = coord.shutdown();
+    assert_eq!(stats.failed.get(), 0);
+    assert!(stats.completed.get() >= cfg.batch_size as u64 + 2);
+}
+
+#[test]
+fn failure_injection_corrupt_artifacts() {
+    // a runtime over a directory with malformed artifacts must fail
+    // loudly at load time, not at serve time
+    let tmp = std::env::temp_dir().join(format!("mma-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    // case 1: meta exists, HLO text is garbage
+    std::fs::write(tmp.join("broken.meta"), "broken;4x4;4x4\n").unwrap();
+    std::fs::write(tmp.join("broken.hlo.txt"), "this is not HLO").unwrap();
+    let mut rt = Runtime::cpu(&tmp).unwrap();
+    assert!(rt.load("broken").is_err(), "garbage HLO must not load");
+    // case 2: malformed meta line
+    std::fs::write(tmp.join("badmeta.meta"), "badmeta;;;;\n").unwrap();
+    std::fs::write(tmp.join("badmeta.hlo.txt"), "x").unwrap();
+    assert!(rt.load("badmeta").is_err());
+    // case 3: missing files
+    assert!(rt.load("absent").is_err());
+    // case 4: manifest referencing a missing artifact
+    std::fs::write(tmp.join("manifest.txt"), "ghost;1x1;1x1\n").unwrap();
+    assert!(rt.load_all().is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn coordinator_survives_engine_init_failure_with_real_runtime() {
+    // pointing the real Runtime at an empty dir: every request must get an
+    // error response (not a hang)
+    let tmp = std::env::temp_dir().join(format!("mma-empty-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let cfg = CoordinatorConfig::default();
+    let weights = MlpWeights::deterministic(&cfg);
+    let tmp2 = tmp.clone();
+    let coord = Coordinator::start(cfg.clone(), weights, move || {
+        let mut rt = Runtime::cpu(&tmp2)?;
+        rt.load_all()?; // fails: no manifest
+        Ok(rt)
+    });
+    let (_, rx) = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] });
+    let resp = rx.recv().unwrap();
+    assert!(resp.result.is_err());
+    coord.shutdown();
+    std::fs::remove_dir_all(&tmp).ok();
+}
