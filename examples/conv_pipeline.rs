@@ -3,18 +3,19 @@
 //! 1. run the Figure 9 `sconv_kernel_8x27x16` as a simulated MMA
 //!    instruction stream and check it against the direct convolution;
 //! 2. time it on the POWER10 model;
-//! 3. run the *same computation* through the AOT-compiled Pallas conv
-//!    kernel (`artifacts/conv2d_k3.hlo.txt`) via PJRT and cross-check the
-//!    two implementations numerically.
+//! 3. run the *same computation* through the AOT-compiled conv artifact
+//!    (`artifacts/conv2d_k3.hlo.txt`) on the native HLO interpreter and
+//!    cross-check the two implementations numerically.
 //!
-//! Run: `make artifacts && cargo run --release --example conv_pipeline`
+//! Run: `cargo run --release --example conv_pipeline`
+//! (the embedded artifact set is materialized automatically)
 
 use power_mma::core_model::{CoreSim, MachineConfig};
 use power_mma::kernels::sconv::{run_sconv_8x27x16, sconv_8x27x16_program, sconv_reference};
 use power_mma::runtime::Runtime;
 use power_mma::testkit::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> power_mma::error::Result<()> {
     let mut rng = Rng::new(2024);
     let width = 20usize;
     let filters = rng.f32_vec(8 * 27);
@@ -52,11 +53,10 @@ fn main() -> anyhow::Result<()> {
         rep.flops_per_cycle()
     );
 
-    // ---- 3. the Pallas conv artifact through PJRT ------------------------
+    // ---- 3. the AOT conv artifact through the native HLO interpreter ----
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("conv2d_k3.meta").exists() {
-        println!("(skipping PJRT phase: run `make artifacts` first)");
-        return Ok(());
+    if power_mma::runtime::artifacts::ensure_artifacts(&dir)? {
+        println!("(materialized embedded AOT artifacts into {})", dir.display());
     }
     let mut rt = Runtime::cpu(&dir)?;
     rt.load("conv2d_k3")?;
@@ -78,15 +78,15 @@ fn main() -> anyhow::Result<()> {
     let mut maxerr2 = 0f32;
     for f in 0..8 {
         for x in 0..16 {
-            let pjrt = out[f * (rows - 2) * w_out + x];
-            maxerr2 = maxerr2.max((pjrt - expect[f][x]).abs());
+            let aot = out[f * (rows - 2) * w_out + x];
+            maxerr2 = maxerr2.max((aot - expect[f][x]).abs());
         }
     }
     println!(
-        "PJRT Pallas conv vs simulated MMA kernel: max |err| = {maxerr2:.2e} \
-         (two independent implementations of §V-B)"
+        "AOT conv artifact (native HLO interpreter) vs simulated MMA kernel: \
+         max |err| = {maxerr2:.2e} (two independent implementations of §V-B)"
     );
     assert!(maxerr2 < 1e-3);
-    println!("conv pipeline OK: ISA simulator == direct conv == AOT Pallas kernel");
+    println!("conv pipeline OK: ISA simulator == direct conv == AOT conv artifact");
     Ok(())
 }

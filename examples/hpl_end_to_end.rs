@@ -18,7 +18,7 @@ use power_mma::blas::gemm::SimMmaGemm;
 use power_mma::hpl::{hpl_cycles, hpl_run, CycleCost, Setup};
 use power_mma::metrics::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> power_mma::error::Result<()> {
     // ---- phase 1: functional HPL over the instruction-level simulator ---
     let n = 192;
     let nb = 64;

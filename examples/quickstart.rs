@@ -16,7 +16,7 @@ use power_mma::isa::inst::{AccOp, GerKind};
 use power_mma::isa::Machine;
 use power_mma::kernels::vsx::vsx_dgemm_8x4_program;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> power_mma::error::Result<()> {
     // ---- 1. a tiny kernel via builtins: C(4x4) = sum_k x_k y_k^T --------
     let mut b = KernelBuilder::new();
     let acc = b.alloc_acc()?;

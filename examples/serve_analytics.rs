@@ -2,23 +2,23 @@
 //! analytics" scenario: many small independent model evaluations, one per
 //! transaction, with model agility (three model families served at once).
 //!
-//! Loads the AOT artifacts (Pallas kernels → JAX models → HLO text),
-//! starts the coordinator (router + dynamic batcher over PJRT), fires a
-//! mixed workload from concurrent client threads, and reports
-//! throughput + latency percentiles + batch occupancy.
+//! Loads the AOT artifacts (JAX serving graphs → HLO text), starts the
+//! coordinator (router + dynamic batcher over the native HLO-interpreter
+//! runtime), fires a mixed workload from concurrent client threads, and
+//! reports throughput + latency percentiles + batch occupancy.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_analytics`
+//! Run: `cargo run --release --example serve_analytics`
+//! (the embedded artifact set is materialized automatically)
 
 use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
 use power_mma::runtime::{det_input, Runtime};
 use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> power_mma::error::Result<()> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("no artifacts: run `make artifacts` first");
-        std::process::exit(1);
+    if power_mma::runtime::artifacts::ensure_artifacts(&dir)? {
+        println!("(materialized embedded AOT artifacts into {})", dir.display());
     }
     let cfg = CoordinatorConfig::default();
     let weights = MlpWeights::deterministic(&cfg);

@@ -1,10 +1,15 @@
 """AOT compile path: lower every Layer-2 model to **HLO text** artifacts
-the rust runtime loads via PJRT.
+the rust runtime loads and executes with its native HLO interpreter
+(`rust/src/runtime/hlo.rs`).
 
-HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
-emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
-version behind the `xla` rust crate) rejects; the text parser reassigns
-ids. See /opt/xla-example/README.md.
+HLO *text* (not ``.serialize()``) is the interchange format: it is a
+stable, human-auditable grammar the rust side parses directly, with no
+FFI and no proto toolchain.  The lowered graphs are the jnp-only serving
+twins from ``model.py`` — the Pallas kernels are the accelerator-target
+path (and lower, in interpret mode, to the whole grid-interpreter loop),
+while the serving twins lower to the closed op set the rust interpreter
+executes: dot / add / multiply / maximum / broadcast / reshape / slice /
+convert / constant / tuple.
 
 For every artifact this also writes
   * ``<name>.meta``         — `name;in0shape,in1shape,…;outshape` (shapes as
@@ -13,7 +18,10 @@ For every artifact this also writes
     deterministic test inputs of :func:`det_input`, giving the rust side an
     end-to-end numeric ground truth it can check without python.
 
-Run once via ``make artifacts``; never on the request path.
+Run once via ``python3 -m compile.aot`` (the checked-in fixture set under
+``rust/fixtures`` is regenerated with ``--out-dir ../rust/fixtures``);
+never on the request path.  Without a python stack, the rust side
+materializes the embedded copies via ``power-mma gen-artifacts``.
 """
 
 import argparse
@@ -78,17 +86,23 @@ def main() -> None:
 
     g = model.GEMM_DIM
     manifest = []
-    print("lowering models to HLO text:")
-    manifest.append(build_artifact("gemm_f32", model.gemm_f32, [(g, g), (g, g)], args.out_dir))
-    manifest.append(build_artifact("gemm_bf16", model.gemm_bf16, [(g, g), (g, g)], args.out_dir))
+    print("lowering serving graphs to HLO text:")
     manifest.append(
-        build_artifact("conv2d_k3", model.conv2d_k3, [(8, 27), model.CONV_IMG], args.out_dir)
+        build_artifact("gemm_f32", model.gemm_f32_serving, [(g, g), (g, g)], args.out_dir)
+    )
+    manifest.append(
+        build_artifact("gemm_bf16", model.gemm_bf16_serving, [(g, g), (g, g)], args.out_dir)
+    )
+    manifest.append(
+        build_artifact(
+            "conv2d_k3", model.conv2d_k3_serving, [(8, 27), model.CONV_IMG], args.out_dir
+        )
     )
     for b in model.MLP_BATCHES:
         manifest.append(
             build_artifact(
                 f"mlp_b{b}",
-                model.mlp_classifier,
+                model.mlp_classifier_serving,
                 [
                     (b, model.MLP_FEATURES),
                     (model.MLP_FEATURES, model.MLP_HIDDEN),

@@ -15,6 +15,7 @@ on the request path.
 
 import jax.numpy as jnp
 
+from compile.kernels import ref
 from compile.kernels.mma_conv import mma_conv3x3
 from compile.kernels.mma_gemm import mma_gemm, mma_gemm_bf16
 
@@ -58,3 +59,38 @@ def mlp_classifier(x, w1, b1, w2, b2):
     h = jnp.maximum(h, 0.0)
     out = mma_gemm(h, w2, tm=tile, tn=32, tk=32) + b2
     return (out[:batch],)
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs — what `aot.py` actually lowers to the HLO artifacts.
+#
+# The Pallas kernels above are the accelerator-target path; on CPU they run
+# in interpret mode, and interpret mode *lowers* to the whole Pallas grid
+# interpreter (HLO while-loops, dynamic slices, selects).  The rust runtime
+# executes artifacts with a native HLO interpreter over a closed op set
+# (dot / add / multiply / maximum / broadcast / reshape / slice / convert /
+# constant / tuple), so the artifacts are lowered from the pure-jnp twins
+# below instead.  They are numerically the same graphs: pytest asserts the
+# Pallas kernels match `ref.py`, and `ref.py` is exactly what these twins
+# compute.
+# ---------------------------------------------------------------------------
+
+
+def gemm_f32_serving(x, y):
+    """jnp-only twin of :func:`gemm_f32` for the AOT serving artifact."""
+    return (ref.gemm_ref(x, y),)
+
+
+def gemm_bf16_serving(x, y):
+    """jnp-only twin of :func:`gemm_bf16` (bf16 rounding via `convert`)."""
+    return (ref.gemm_bf16_ref(x, y),)
+
+
+def conv2d_k3_serving(h, img):
+    """jnp-only twin of :func:`conv2d_k3` (27 shifted rank-1 updates)."""
+    return (ref.conv3x3_ref(h, img),)
+
+
+def mlp_classifier_serving(x, w1, b1, w2, b2):
+    """jnp-only twin of :func:`mlp_classifier` (batch already padded)."""
+    return (ref.mlp_ref(x, w1, b1, w2, b2),)

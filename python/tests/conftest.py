@@ -1,0 +1,7 @@
+"""Test bootstrap: make the ``compile`` package importable no matter where
+pytest is invoked from (repo root in CI, ``python/`` locally)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

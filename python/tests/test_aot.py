@@ -3,6 +3,11 @@ fixtures, and the determinism the rust runtime relies on."""
 
 import os
 
+import pytest
+
+pytest.importorskip("numpy", reason="numpy not installed")
+pytest.importorskip("jax", reason="jax/pallas not installed; AOT tests skip")
+
 import numpy as np
 
 from compile import model
@@ -41,12 +46,13 @@ def test_build_artifact_round_trip(tmp_path):
 
 
 def test_artifacts_dir_is_consistent_if_built():
-    """If `make artifacts` has run, every manifest entry must have its
-    three files and self-consistent sizes."""
+    """If the artifact dir was built (`python3 -m compile.aot` or
+    `power-mma gen-artifacts`), every manifest entry must have its three
+    files and self-consistent sizes."""
     art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
     manifest = os.path.join(art, "manifest.txt")
     if not os.path.exists(manifest):
-        return  # not built yet; the Makefile orders this correctly
+        return  # not built yet; artifacts/ is generated on demand
     for line in open(manifest):
         if not line.strip():
             continue

@@ -4,9 +4,14 @@ Hypothesis sweeps shapes and dtypes; every case asserts allclose against
 ``ref.py`` — the core correctness signal of the compile path.
 """
 
+import pytest
+
+pytest.importorskip("numpy", reason="numpy not installed")
+pytest.importorskip("jax", reason="jax/pallas not installed; kernel tests skip")
+pytest.importorskip("hypothesis", reason="hypothesis not installed; kernel tests skip")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

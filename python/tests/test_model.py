@@ -1,5 +1,11 @@
 """Layer-2 model shape/numeric checks plus the AOT artifact contract."""
 
+import pytest
+
+pytest.importorskip("numpy", reason="numpy not installed")
+pytest.importorskip("jax", reason="jax/pallas not installed; model tests skip")
+pytest.importorskip("hypothesis", reason="hypothesis not installed; model tests skip")
+
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,7 +1,7 @@
 //! Bench: coordinator serving throughput/latency — the §I data-in-flight
 //! scenario. Uses a synthetic engine (fixed per-batch cost) to isolate
-//! router/batcher overhead, plus the real PJRT engine when artifacts
-//! exist.
+//! router/batcher overhead, plus the real native HLO-interpreter engine
+//! over the embedded artifacts.
 //!
 //! Also sweeps the dynamic-batching knob (batch size), the serving
 //! analogue of the paper's throughput-vs-latency trade.
@@ -21,7 +21,7 @@ struct SyntheticEngine {
 }
 
 impl InferenceEngine for SyntheticEngine {
-    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> power_mma::error::Result<Vec<f32>> {
         std::thread::sleep(self.cost);
         if model.starts_with("mlp") {
             Ok(vec![0.5; self.cfg.batch_size * self.cfg.classes])
@@ -65,9 +65,9 @@ fn main() {
     println!("{}", table.render());
     println!("batching amortizes the fixed per-call cost: throughput scales with batch size\n");
 
-    // the real PJRT engine over the AOT artifacts
+    // the real native-HLO engine over the AOT artifacts
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.txt").exists() {
+    if power_mma::runtime::artifacts::ensure_artifacts(&dir).is_ok() {
         let cfg = CoordinatorConfig::default();
         let weights = MlpWeights::deterministic(&cfg);
         let dir2 = dir.clone();
@@ -93,13 +93,13 @@ fn main() {
         let dt = t0.elapsed();
         let stats = coord.shutdown();
         println!(
-            "real PJRT engine (mlp_b32 over the Pallas GEMM kernel): {n} requests in {dt:.2?} \
+            "real native-HLO engine (mlp_b32 serving graph): {n} requests in {dt:.2?} \
              -> {:.0} req/s, p50 {} us, occupancy {:.1}",
             n as f64 / dt.as_secs_f64(),
             stats.latency.quantile_us(0.5),
             stats.mean_batch_occupancy()
         );
     } else {
-        println!("(skipping PJRT phase: run `make artifacts`)");
+        println!("(skipping native-engine phase: artifact directory unavailable)");
     }
 }

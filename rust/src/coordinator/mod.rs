@@ -12,24 +12,25 @@
 //!   compiled batch size or a latency deadline, pads the tail, executes
 //!   one batched MLP inference, and scatters the rows back to callers;
 //! * **backpressure** comes from the bounded submission queue;
-//! * the PJRT executables run on a dedicated engine thread (they are
-//!   thread-confined FFI handles; the engine is constructed *inside* the
-//!   thread via a factory, so no `Send` requirement leaks).
+//! * the executables run on a dedicated engine thread (backends may be
+//!   thread-confined — the engine is constructed *inside* the thread via
+//!   a factory, so no `Send` requirement leaks).
 
+use crate::error::Result;
 use crate::metrics::{Counter, Histogram};
 use crate::rt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Abstraction over the PJRT runtime so the coordinator is unit-testable
+/// Abstraction over the model runtime so the coordinator is unit-testable
 /// without compiled artifacts.
 pub trait InferenceEngine {
     /// Execute `model` on flat f32 inputs, returning the flat output.
-    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>>;
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>>;
 }
 
 impl InferenceEngine for crate::runtime::Runtime {
-    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+    fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         self.execute(model, inputs)
     }
 }
@@ -157,11 +158,11 @@ impl MlpWeights {
 
 impl Coordinator {
     /// Start the coordinator. `engine_factory` runs *on the engine thread*
-    /// (PJRT handles never cross threads).
+    /// (thread-confined backends never cross threads).
     pub fn start<E, F>(cfg: CoordinatorConfig, weights: MlpWeights, engine_factory: F) -> Self
     where
         E: InferenceEngine,
-        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+        F: FnOnce() -> Result<E> + Send + 'static,
     {
         let (tx, rx) = rt::bounded::<Msg>(cfg.queue_cap);
         let stats = Arc::new(CoordStats::default());
@@ -233,7 +234,7 @@ fn engine_loop<E, F>(
     stats: Arc<CoordStats>,
 ) where
     E: InferenceEngine,
-    F: FnOnce() -> anyhow::Result<E>,
+    F: FnOnce() -> Result<E>,
 {
     let mut engine = match factory() {
         Ok(e) => e,
@@ -387,10 +388,10 @@ mod tests {
     }
 
     impl InferenceEngine for MockEngine {
-        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<f32>> {
+        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
             self.calls.lock().unwrap().push((model.to_string(), inputs.len()));
             if Some(model) == self.fail_on.map(|s| s) || self.fail_on == Some("*") {
-                anyhow::bail!("mock failure");
+                crate::bail!("mock failure");
             }
             if model.starts_with("mlp") {
                 let x = inputs[0];
@@ -536,7 +537,7 @@ mod tests {
         let cfg = CoordinatorConfig::default();
         let weights = MlpWeights::deterministic(&cfg);
         let coord = Coordinator::start::<MockEngine, _>(cfg.clone(), weights, || {
-            anyhow::bail!("no artifacts")
+            crate::bail!("no artifacts")
         });
         let (_, rx) = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] });
         let resp = rx.recv().unwrap();

@@ -1,0 +1,179 @@
+//! In-crate error substrate (`anyhow` is unavailable offline): a single
+//! message-carrying [`Error`] with an outermost-first context chain, a
+//! crate-wide [`Result`] alias, the [`err!`](crate::err)/[`bail!`](crate::bail)
+//! macros, and a [`Context`] extension trait for `Result`/`Option`.
+//!
+//! The idiom mirrors `anyhow` deliberately so call sites read the same:
+//!
+//! ```
+//! use power_mma::error::{Context, Result};
+//!
+//! fn parse_port(s: &str) -> Result<u16> {
+//!     if s.is_empty() {
+//!         power_mma::bail!("empty port string");
+//!     }
+//!     s.parse::<u16>().with_context(|| format!("bad port {s:?}"))
+//! }
+//!
+//! assert!(parse_port("8080").is_ok());
+//! assert!(parse_port("x").unwrap_err().to_string().contains("bad port"));
+//! ```
+
+use std::fmt;
+
+/// A human-readable error: one message string, built outermost-context
+/// first (`"loading gemm_f32: parsing HLO: bad dim 'q'"`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Wrap with outer context: `"{ctx}: {self}"`.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias (defaults the error type to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::isa::ExecError> for Error {
+    fn from(e: crate::isa::ExecError) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::builtins::BuiltinError> for Error {
+    fn from(e: crate::builtins::BuiltinError) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::isa::encode::CodecError> for Error {
+    fn from(e: crate::isa::encode::CodecError) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::cli::CliError> for Error {
+    fn from(e: crate::cli::CliError) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// `anyhow::Context`-style extension: attach context to any fallible value.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("model {name} not loaded")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("expected {n} inputs")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(err!("inner {}", 42))
+    }
+
+    #[test]
+    fn message_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        let e = e.context("outermost");
+        assert_eq!(e.to_string(), "outermost: outer: inner 42");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::num::ParseIntError> = "7".parse();
+        let got = ok.with_context(|| -> String { unreachable!("not evaluated on Ok") });
+        assert_eq!(got.unwrap(), 7);
+
+        let bad: Result<u32, _> = "x".parse::<u32>().with_context(|| format!("parsing {}", "x"));
+        assert!(bad.unwrap_err().to_string().starts_with("parsing x:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing value").unwrap_err().to_string(), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_macro_returns() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Ok(0)
+        }
+        assert_eq!(f(false).unwrap(), 0);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 1");
+    }
+
+    #[test]
+    fn from_impls_carry_messages() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

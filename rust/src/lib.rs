@@ -26,13 +26,18 @@
 //!   event-based power model used for Figure 12.
 //! * [`blas`] / [`hpl`] — the numerical substrate: reference BLAS, blocked
 //!   GEMM over the simulated kernels, and an HPL (LU) driver for Figure 10.
-//! * [`runtime`] — PJRT client wrapper loading AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) produced by `python/compile/aot.py`.
+//! * [`runtime`] — the native serving runtime: loads the AOT-compiled
+//!   JAX artifacts (`artifacts/*.hlo.txt`) produced by
+//!   `python/compile/aot.py` and executes them with the in-crate HLO-text
+//!   interpreter ([`runtime::hlo`]) over the `blas` substrate, behind the
+//!   pluggable [`runtime::EngineBackend`] trait. The former PJRT/XLA FFI
+//!   is gone — the whole request path is self-hosted rust.
 //! * [`coordinator`] — the "data-in-flight business analytics" serving layer
-//!   of §I: request router + dynamic batcher over the PJRT runtime.
-//! * [`rt`], [`cli`], [`testkit`], [`benchkit`], [`metrics`] — substrates
-//!   (thread pool, argument parser, property testing, benchmark harness,
-//!   metrics) built from `std` because the build environment is offline.
+//!   of §I: request router + dynamic batcher over the native runtime.
+//! * [`rt`], [`cli`], [`error`], [`testkit`], [`benchkit`], [`metrics`] —
+//!   substrates (thread pool, argument parser, error chain, property
+//!   testing, benchmark harness, metrics) built from `std` because the
+//!   build environment is offline and the crate has zero dependencies.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -43,6 +48,7 @@ pub mod builtins;
 pub mod cli;
 pub mod coordinator;
 pub mod core_model;
+pub mod error;
 pub mod hpl;
 pub mod isa;
 pub mod kernels;

@@ -7,8 +7,10 @@
 //!   executes as simulated MMA instructions);
 //! * `simulate` — time a kernel on a machine configuration;
 //! * `asm` / `disasm` — the Power ISA MMA assembler/disassembler;
-//! * `serve` — start the analytics coordinator on the AOT artifacts and
-//!   run a self-test load.
+//! * `serve` — start the analytics coordinator on the AOT artifacts
+//!   (materializing the embedded set when the directory is empty) and run
+//!   a self-test load on the native HLO-interpreter backend;
+//! * `gen-artifacts` — write the embedded AOT artifact set to disk.
 
 use power_mma::benchkit::f2;
 use power_mma::blas::gemm::{RefGemm, SimMmaGemm};
@@ -32,6 +34,7 @@ fn main() {
         Some("asm") => cmd_asm(&args[1..]),
         Some("disasm") => cmd_disasm(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("gen-artifacts") => cmd_gen_artifacts(&args[1..]),
         _ => {
             eprintln!(
                 "power-mma — reproduction of 'A matrix math facility for Power ISA processors'\n\n\
@@ -44,7 +47,8 @@ fn main() {
                  \x20 simulate  time a kernel on a machine model\n\
                  \x20 asm       assemble MMA assembly to bytes\n\
                  \x20 disasm    disassemble bytes to MMA assembly\n\
-                 \x20 serve     serve the AOT models and run a self-test load\n\n\
+                 \x20 serve     serve the AOT models and run a self-test load\n\
+                 \x20 gen-artifacts  write the embedded AOT artifact set to disk\n\n\
                  run `power-mma <command> --help` for options"
             );
             2
@@ -276,13 +280,21 @@ fn cmd_disasm(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
-    use power_mma::runtime::{det_input, Runtime};
+    use power_mma::runtime::{artifacts, det_input, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
         .opt("requests", Some("1000"), "self-test request count");
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
     let n_req = m.get_usize("requests").unwrap();
+    match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
+        Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
+        Ok(false) => {}
+        Err(e) => {
+            eprintln!("cannot prepare artifact directory {dir}: {e}");
+            return 1;
+        }
+    }
     let cfg = CoordinatorConfig::default();
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
@@ -319,5 +331,29 @@ fn cmd_serve(args: &[String]) -> i32 {
         0
     } else {
         1
+    }
+}
+
+fn cmd_gen_artifacts(args: &[String]) -> i32 {
+    use power_mma::runtime::artifacts;
+    let cmd = Command::new(
+        "power-mma gen-artifacts",
+        "write the embedded AOT artifact set (HLO text + meta + expected outputs) to disk",
+    )
+    .opt("out", Some("artifacts"), "output directory");
+    let m = parse_or_exit(cmd, args);
+    let dir = std::path::PathBuf::from(m.get("out"));
+    match artifacts::write_artifacts(&dir) {
+        Ok(()) => {
+            for a in artifacts::EMBEDDED {
+                println!("  {}: {} chars of HLO text", a.name, a.hlo_text.len());
+            }
+            println!("wrote {} artifacts + manifest to {}", artifacts::EMBEDDED.len(), dir.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
     }
 }

@@ -1,0 +1,782 @@
+//! Native HLO-text parser and interpreter — the engine behind the serving
+//! runtime since the external PJRT/XLA FFI was excised.
+//!
+//! `python/compile/aot.py` lowers the jnp serving graphs of
+//! `python/compile/model.py` to HLO **text**, a stable, human-auditable
+//! grammar.  The graphs use a closed op set —
+//!
+//! > `parameter`, `constant`, `convert` (f32↔bf16), `dot`, `add`,
+//! > `multiply`, `maximum`, `broadcast`, `reshape`, `slice`, `tuple`
+//!
+//! — which this module parses into an [`HloModule`] and evaluates with
+//! [`HloModule::evaluate`].  `dot` executes over the crate's own BLAS
+//! substrate ([`crate::blas::gemm::ref_gemm`]), so the whole request path
+//! is self-hosted: Pallas → JAX → HLO text → this interpreter → `blas`.
+//! The bf16 `convert` reproduces the `xvbf16ger2` input contract
+//! (round-to-nearest-even to bf16, accumulate wide) via [`bf16_round`].
+//!
+//! The parser is strict where numerics depend on it (shapes, operand
+//! resolution, attribute values) and tolerant elsewhere (layout
+//! annotations `{1,0}` are ignored: literals are logical row-major on
+//! both the python and rust side; non-entry computations are skipped —
+//! executing one would need `call`, which is outside the op set and
+//! rejected at evaluation).
+
+use crate::blas::gemm::ref_gemm;
+use crate::error::Result;
+use crate::{bail, err};
+use std::collections::HashMap;
+
+/// Element type of an HLO value. Tensors are stored as `f32` regardless
+/// (`Bf16` values are f32 already rounded onto the bf16 grid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    Bf16,
+    /// A tuple-shaped value (only the ROOT tuple in practice).
+    Tuple,
+    /// Anything else (`pred`, `s32`, …): parseable, rejected at evaluate.
+    Other,
+}
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// One parsed HLO instruction of the entry computation.
+#[derive(Clone, Debug)]
+struct Instr {
+    name: String,
+    opcode: String,
+    dtype: DType,
+    dims: Vec<usize>,
+    /// Operand indices into the instruction list (resolved after parse).
+    operands: Vec<usize>,
+    /// `parameter(N)` index.
+    param: usize,
+    /// `dimensions={…}` attribute (broadcast).
+    dims_attr: Option<Vec<usize>>,
+    /// `lhs_contracting_dims={…}` / `rhs_contracting_dims={…}` (dot).
+    lhs_contracting: Option<usize>,
+    rhs_contracting: Option<usize>,
+    /// `slice={[start:stop(:stride)], …}` attribute.
+    slice_bounds: Option<Vec<(usize, usize, usize)>>,
+    /// Literal payload of `constant(…)`.
+    const_vals: Vec<f32>,
+    is_root: bool,
+}
+
+/// A parsed HLO module: the entry computation as a topologically-ordered
+/// instruction list (HLO text is SSA and defines before use).
+pub struct HloModule {
+    /// Module name from the `HloModule` header line.
+    pub name: String,
+    instrs: Vec<Instr>,
+    /// Number of distinct `parameter(N)` instructions.
+    num_params: usize,
+}
+
+/// Round an f32 to the nearest bf16 value (round-to-nearest-even), kept
+/// in f32 — the `xvbf16ger2` input contract and XLA's `convert` to bf16.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // canonical quiet NaN with the sign preserved
+        return f32::from_bits((bits & 0x8000_0000) | 0x7fc0_0000);
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb) & 0xffff_0000;
+    f32::from_bits(rounded)
+}
+
+/// Parse `f32[128,128]{1,0}` / `bf16[8]{0}` / `f32[]` into dtype + dims.
+/// The layout annotation is ignored (values are logical row-major).
+fn parse_plain_shape(s: &str) -> Result<(DType, Vec<usize>)> {
+    let lb = s.find('[').ok_or_else(|| err!("shape without dimensions: '{s}'"))?;
+    let dtype = match &s[..lb] {
+        "f32" => DType::F32,
+        "bf16" => DType::Bf16,
+        _ => DType::Other,
+    };
+    let rb = s[lb..]
+        .find(']')
+        .map(|i| i + lb)
+        .ok_or_else(|| err!("unterminated shape: '{s}'"))?;
+    let inner = &s[lb + 1..rb];
+    let mut dims = Vec::new();
+    if !inner.trim().is_empty() {
+        for d in inner.split(',') {
+            let d = d.trim();
+            dims.push(d.parse::<usize>().map_err(|_| err!("bad dimension '{d}' in '{s}'"))?);
+        }
+    }
+    Ok((dtype, dims))
+}
+
+/// Extract the ints of a `key={a,b,…}` attribute (`Some(vec![])` for
+/// `key={}`); `None` when the key is absent.
+fn braced_list(attrs: &str, key: &str) -> Result<Option<Vec<usize>>> {
+    let tag = format!("{key}={{");
+    let Some(i) = attrs.find(tag.as_str()) else {
+        return Ok(None);
+    };
+    let rest = &attrs[i + tag.len()..];
+    let j = rest.find('}').ok_or_else(|| err!("unterminated {key} attribute"))?;
+    let mut out = Vec::new();
+    for t in rest[..j].split(',') {
+        let t = t.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse::<usize>().map_err(|_| err!("bad {key} entry '{t}'"))?);
+    }
+    Ok(Some(out))
+}
+
+/// Parse the `slice={[0:8], [1:2]}` attribute (optional `[a:b:stride]`).
+fn parse_slice_attr(attrs: &str) -> Result<Option<Vec<(usize, usize, usize)>>> {
+    let tag = "slice={";
+    let Some(i) = attrs.find(tag) else {
+        return Ok(None);
+    };
+    let rest = &attrs[i + tag.len()..];
+    let j = rest.find('}').ok_or_else(|| err!("unterminated slice attribute"))?;
+    let mut inner = &rest[..j];
+    let mut out = Vec::new();
+    while let Some(a) = inner.find('[') {
+        let b = inner[a..]
+            .find(']')
+            .map(|k| k + a)
+            .ok_or_else(|| err!("unterminated slice bound"))?;
+        let parts: Vec<&str> = inner[a + 1..b].split(':').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            bail!("bad slice bound '[{}]'", &inner[a + 1..b]);
+        }
+        let parse = |t: &str| {
+            t.trim().parse::<usize>().map_err(|_| err!("bad slice number '{}'", t.trim()))
+        };
+        let start = parse(parts[0])?;
+        let stop = parse(parts[1])?;
+        let stride = if parts.len() == 3 { parse(parts[2])? } else { 1 };
+        if stride == 0 {
+            bail!("zero slice stride");
+        }
+        out.push((start, stop, stride));
+        inner = &inner[b + 1..];
+    }
+    Ok(Some(out))
+}
+
+/// Parse the payload of `constant(…)`: a scalar (`0`, `-1.5e-3`, `inf`)
+/// or a braced list (`{1, 2, 3}`, nested braces for higher rank).
+fn parse_constant(args: &str) -> Result<Vec<f32>> {
+    let cleaned: String =
+        args.chars().map(|c| if c == '{' || c == '}' || c == ',' { ' ' } else { c }).collect();
+    let mut out = Vec::new();
+    for tok in cleaned.split_whitespace() {
+        let v = match tok {
+            "inf" => f32::INFINITY,
+            "-inf" => f32::NEG_INFINITY,
+            "nan" | "-nan" => f32::NAN,
+            "true" => 1.0,
+            "false" => 0.0,
+            _ => tok.parse::<f32>().map_err(|_| err!("bad constant literal '{tok}'"))?,
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+impl HloModule {
+    /// Parse HLO text into the entry computation.
+    pub fn parse(text: &str) -> Result<HloModule> {
+        let mut module_name = String::new();
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut names: Vec<String> = Vec::new(); // operand names, pre-resolution
+        let mut operand_names: Vec<Vec<String>> = Vec::new();
+        let mut in_entry = false;
+        let mut saw_entry = false;
+
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("HloModule ") {
+                module_name =
+                    rest.split(|c: char| c == ',' || c == ' ').next().unwrap_or("").to_string();
+                continue;
+            }
+            if line.ends_with('{') && !line.contains(" = ") {
+                // computation header: `ENTRY main.5 {` or `region_0.49 {`
+                in_entry = line.starts_with("ENTRY");
+                saw_entry = saw_entry || in_entry;
+                continue;
+            }
+            if line == "}" {
+                in_entry = false;
+                continue;
+            }
+            if !in_entry {
+                continue;
+            }
+
+            // instruction: `[ROOT ]name = shape opcode(args)[, attrs]`
+            let (is_root, line) = match line.strip_prefix("ROOT ") {
+                Some(rest) => (true, rest),
+                None => (false, line),
+            };
+            let eq = line.find(" = ").ok_or_else(|| err!("bad HLO line: '{line}'"))?;
+            let name = line[..eq].to_string();
+            let rest = &line[eq + 3..];
+
+            // result shape: `(tuple, of, shapes)` or a plain token
+            let (dtype, dims, rest) = if let Some(stripped) = rest.strip_prefix('(') {
+                let close =
+                    stripped.find(')').ok_or_else(|| err!("unterminated tuple shape: '{rest}'"))?;
+                (DType::Tuple, Vec::new(), stripped[close + 1..].trim_start())
+            } else {
+                let sp = rest.find(' ').ok_or_else(|| err!("missing opcode: '{rest}'"))?;
+                let (dt, dims) = parse_plain_shape(&rest[..sp])?;
+                (dt, dims, &rest[sp + 1..])
+            };
+
+            // `opcode(args)` — constant payloads never contain parentheses
+            let lp = rest.find('(').ok_or_else(|| err!("missing operand list: '{rest}'"))?;
+            let opcode = rest[..lp].trim().to_string();
+            let rp = rest[lp..]
+                .find(')')
+                .map(|i| i + lp)
+                .ok_or_else(|| err!("unterminated operand list: '{rest}'"))?;
+            let args = &rest[lp + 1..rp];
+            let attrs = &rest[rp + 1..];
+
+            let mut param = 0usize;
+            let mut const_vals = Vec::new();
+            let mut ops = Vec::new();
+            match opcode.as_str() {
+                "parameter" => {
+                    param = args
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| err!("bad parameter index '{args}'"))?;
+                }
+                "constant" => {
+                    const_vals = parse_constant(args)?;
+                }
+                _ => {
+                    ops = args
+                        .split(',')
+                        .map(|a| a.trim().to_string())
+                        .filter(|a| !a.is_empty())
+                        .collect();
+                }
+            }
+
+            let lhs_c = braced_list(attrs, "lhs_contracting_dims")?.map(|v| v.first().copied());
+            let rhs_c = braced_list(attrs, "rhs_contracting_dims")?.map(|v| v.first().copied());
+            instrs.push(Instr {
+                name: name.clone(),
+                opcode,
+                dtype,
+                dims,
+                operands: Vec::new(),
+                param,
+                dims_attr: braced_list(attrs, "dimensions")?,
+                lhs_contracting: lhs_c.flatten(),
+                rhs_contracting: rhs_c.flatten(),
+                slice_bounds: parse_slice_attr(attrs)?,
+                const_vals,
+                is_root,
+            });
+            names.push(name);
+            operand_names.push(ops);
+        }
+
+        if !saw_entry {
+            bail!("no ENTRY computation found (not HLO text?)");
+        }
+        if instrs.is_empty() {
+            bail!("empty ENTRY computation");
+        }
+
+        // resolve operand names -> indices (defs precede uses in HLO text)
+        let index: HashMap<&str, usize> =
+            names.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        let mut num_params = 0usize;
+        for (i, ops) in operand_names.iter().enumerate() {
+            for op in ops {
+                let Some(&j) = index.get(op.as_str()) else {
+                    bail!("instruction {} references unknown operand '{op}'", instrs[i].name);
+                };
+                if j >= i {
+                    bail!("instruction {} uses '{op}' before its definition", instrs[i].name);
+                }
+                instrs[i].operands.push(j);
+            }
+            if instrs[i].opcode == "parameter" {
+                num_params = num_params.max(instrs[i].param + 1);
+            }
+        }
+        if !instrs.iter().any(|i| i.is_root) {
+            bail!("entry computation has no ROOT instruction");
+        }
+
+        Ok(HloModule { name: module_name, instrs, num_params })
+    }
+
+    /// Number of entry parameters (`parameter(N)` max index + 1).
+    pub fn num_parameters(&self) -> usize {
+        self.num_params
+    }
+
+    /// Instruction count of the entry computation.
+    pub fn num_instructions(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Logical dims of parameter `i`, if that parameter exists.
+    pub fn parameter_dims(&self, i: usize) -> Option<&[usize]> {
+        self.instrs
+            .iter()
+            .find(|ins| ins.opcode == "parameter" && ins.param == i)
+            .map(|ins| ins.dims.as_slice())
+    }
+
+    /// Evaluate the entry computation on flat row-major f32 inputs.
+    /// Returns the ROOT tuple elements (a 1-element vec for scalar roots).
+    pub fn evaluate(&self, inputs: &[&[f32]]) -> Result<Vec<Tensor>> {
+        let mut vals: Vec<Option<Tensor>> = vec![None; self.instrs.len()];
+        let mut root: Option<Vec<usize>> = None;
+
+        fn get<'a>(vals: &'a [Option<Tensor>], idx: usize, user: &str) -> Result<&'a Tensor> {
+            vals[idx]
+                .as_ref()
+                .ok_or_else(|| err!("{user}: operand not evaluated (tuple operand?)"))
+        }
+
+        for (i, ins) in self.instrs.iter().enumerate() {
+            if ins.dtype == DType::Other {
+                bail!("{}: unsupported element type", ins.name);
+            }
+            let need = match ins.opcode.as_str() {
+                "dot" | "add" | "multiply" | "maximum" => 2,
+                "convert" | "reshape" | "broadcast" | "slice" => 1,
+                _ => 0,
+            };
+            if ins.operands.len() < need {
+                bail!(
+                    "{}: {} needs {need} operand(s), got {}",
+                    ins.name,
+                    ins.opcode,
+                    ins.operands.len()
+                );
+            }
+            let want: usize = ins.dims.iter().product();
+
+            let out = match ins.opcode.as_str() {
+                "parameter" => {
+                    let data = *inputs
+                        .get(ins.param)
+                        .ok_or_else(|| err!("{}: missing input {}", ins.name, ins.param))?;
+                    if data.len() != want {
+                        bail!(
+                            "{}: input {} has {} elements, shape wants {want}",
+                            ins.name,
+                            ins.param,
+                            data.len()
+                        );
+                    }
+                    Tensor { dims: ins.dims.clone(), data: data.to_vec() }
+                }
+                "constant" => {
+                    if ins.const_vals.len() != want {
+                        bail!(
+                            "{}: constant has {} literals, shape wants {want}",
+                            ins.name,
+                            ins.const_vals.len()
+                        );
+                    }
+                    Tensor { dims: ins.dims.clone(), data: ins.const_vals.clone() }
+                }
+                "convert" => {
+                    let src = get(&vals, ins.operands[0], &ins.name)?;
+                    if src.data.len() != want {
+                        bail!(
+                            "{}: convert operand has {} elements, shape wants {want}",
+                            ins.name,
+                            src.data.len()
+                        );
+                    }
+                    let data = match ins.dtype {
+                        DType::Bf16 => src.data.iter().map(|&v| bf16_round(v)).collect(),
+                        _ => src.data.clone(),
+                    };
+                    Tensor { dims: ins.dims.clone(), data }
+                }
+                "dot" => {
+                    let a = get(&vals, ins.operands[0], &ins.name)?;
+                    let b = get(&vals, ins.operands[1], &ins.name)?;
+                    self.eval_dot(ins, a, b)?
+                }
+                "add" | "multiply" | "maximum" => {
+                    let a = get(&vals, ins.operands[0], &ins.name)?;
+                    let b = get(&vals, ins.operands[1], &ins.name)?;
+                    if a.dims != b.dims || a.dims != ins.dims {
+                        bail!(
+                            "{}: elementwise shape mismatch {:?} vs {:?} -> {:?}",
+                            ins.name,
+                            a.dims,
+                            b.dims,
+                            ins.dims
+                        );
+                    }
+                    let f: fn(f32, f32) -> f32 = match ins.opcode.as_str() {
+                        "add" => |x, y| x + y,
+                        "multiply" => |x, y| x * y,
+                        _ => f32::max,
+                    };
+                    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+                    Tensor { dims: ins.dims.clone(), data }
+                }
+                "broadcast" => {
+                    let src = get(&vals, ins.operands[0], &ins.name)?;
+                    self.eval_broadcast(ins, src)?
+                }
+                "reshape" => {
+                    let src = get(&vals, ins.operands[0], &ins.name)?;
+                    if src.data.len() != want {
+                        bail!(
+                            "{}: reshape {:?} -> {:?} changes element count",
+                            ins.name,
+                            src.dims,
+                            ins.dims
+                        );
+                    }
+                    Tensor { dims: ins.dims.clone(), data: src.data.clone() }
+                }
+                "slice" => {
+                    let src = get(&vals, ins.operands[0], &ins.name)?;
+                    self.eval_slice(ins, src)?
+                }
+                "tuple" => {
+                    if ins.is_root {
+                        root = Some(ins.operands.clone());
+                    }
+                    // placeholder value: tuples are only consumed as ROOT
+                    Tensor { dims: Vec::new(), data: Vec::new() }
+                }
+                other => bail!(
+                    "{}: unsupported HLO opcode '{other}' (the serving op set is \
+                     parameter/constant/convert/dot/add/multiply/maximum/broadcast/\
+                     reshape/slice/tuple)",
+                    ins.name
+                ),
+            };
+
+            if ins.is_root && ins.opcode != "tuple" {
+                root = Some(vec![i]);
+            }
+            vals[i] = Some(out);
+        }
+
+        let root = root.ok_or_else(|| err!("no ROOT value produced"))?;
+        let mut out = Vec::with_capacity(root.len());
+        for idx in root {
+            // clone, not take: a ROOT tuple may reference one value twice
+            out.push(
+                vals[idx]
+                    .clone()
+                    .ok_or_else(|| err!("ROOT references unevaluated instruction"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// `dot` over the BLAS substrate: `[m,k] × [k,n]` with contracting
+    /// dims `{1}`/`{0}` (what jnp.dot lowers to), f64 accumulation via
+    /// [`ref_gemm`] — wider than XLA's f32 path, within every artifact
+    /// tolerance.
+    fn eval_dot(&self, ins: &Instr, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        if a.dims.len() != 2 || b.dims.len() != 2 {
+            bail!("{}: only rank-2 dot supported, got {:?} x {:?}", ins.name, a.dims, b.dims);
+        }
+        if ins.lhs_contracting != Some(1) || ins.rhs_contracting != Some(0) {
+            bail!(
+                "{}: only lhs_contracting_dims={{1}} rhs_contracting_dims={{0}} supported",
+                ins.name
+            );
+        }
+        let (m, k) = (a.dims[0], a.dims[1]);
+        let (k2, n) = (b.dims[0], b.dims[1]);
+        if k != k2 {
+            bail!("{}: contraction mismatch {k} vs {k2}", ins.name);
+        }
+        if ins.dims != [m, n] {
+            bail!("{}: dot result shape {:?} != [{m},{n}]", ins.name, ins.dims);
+        }
+        let af: Vec<f64> = a.data.iter().map(|&v| f64::from(v)).collect();
+        let bf: Vec<f64> = b.data.iter().map(|&v| f64::from(v)).collect();
+        let c = ref_gemm(&af, &bf, m, n, k);
+        Ok(Tensor { dims: vec![m, n], data: c.iter().map(|&v| v as f32).collect() })
+    }
+
+    /// `broadcast(src), dimensions={…}`: `dimensions[ax]` names the output
+    /// dim that source axis `ax` maps to; all other output dims replicate.
+    fn eval_broadcast(&self, ins: &Instr, src: &Tensor) -> Result<Tensor> {
+        let dims_attr = ins.dims_attr.clone().unwrap_or_default();
+        if dims_attr.len() != src.dims.len() {
+            bail!(
+                "{}: broadcast dimensions {:?} do not match source rank {}",
+                ins.name,
+                dims_attr,
+                src.dims.len()
+            );
+        }
+        let nd = ins.dims.len();
+        let mut ostrides = vec![1usize; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            ostrides[d] = ostrides[d + 1] * ins.dims[d + 1];
+        }
+        let snd = src.dims.len();
+        let mut sstrides = vec![1usize; snd];
+        for d in (0..snd.saturating_sub(1)).rev() {
+            sstrides[d] = sstrides[d + 1] * src.dims[d + 1];
+        }
+        // contribution of each output dim to the source flat index
+        let mut contrib = vec![0usize; nd];
+        for (ax, &d) in dims_attr.iter().enumerate() {
+            if d >= nd {
+                bail!("{}: broadcast dimension {d} out of range", ins.name);
+            }
+            if src.dims[ax] != ins.dims[d] {
+                bail!(
+                    "{}: broadcast source dim {ax} ({}) != output dim {d} ({})",
+                    ins.name,
+                    src.dims[ax],
+                    ins.dims[d]
+                );
+            }
+            contrib[d] = sstrides[ax];
+        }
+        let total: usize = ins.dims.iter().product();
+        let mut data = vec![0f32; total];
+        for (flat, slot) in data.iter_mut().enumerate() {
+            let mut src_flat = 0usize;
+            for d in 0..nd {
+                src_flat += (flat / ostrides[d]) % ins.dims[d] * contrib[d];
+            }
+            *slot = src.data[src_flat];
+        }
+        Ok(Tensor { dims: ins.dims.clone(), data })
+    }
+
+    /// `slice(src), slice={[a:b(:s)], …}` — one bound per source dim.
+    fn eval_slice(&self, ins: &Instr, src: &Tensor) -> Result<Tensor> {
+        let bounds = ins
+            .slice_bounds
+            .as_ref()
+            .ok_or_else(|| err!("{}: slice without slice attribute", ins.name))?;
+        if bounds.len() != src.dims.len() {
+            bail!(
+                "{}: {} slice bounds for rank-{} source",
+                ins.name,
+                bounds.len(),
+                src.dims.len()
+            );
+        }
+        let nd = src.dims.len();
+        let mut out_dims = Vec::with_capacity(nd);
+        for (d, &(start, stop, stride)) in bounds.iter().enumerate() {
+            if start > stop || stop > src.dims[d] {
+                bail!(
+                    "{}: slice bound [{start}:{stop}] out of range for dim {d} ({})",
+                    ins.name,
+                    src.dims[d]
+                );
+            }
+            out_dims.push((stop - start).div_ceil(stride));
+        }
+        if out_dims != ins.dims {
+            bail!("{}: slice result {:?} != declared {:?}", ins.name, out_dims, ins.dims);
+        }
+        let mut sstrides = vec![1usize; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            sstrides[d] = sstrides[d + 1] * src.dims[d + 1];
+        }
+        let mut ostrides = vec![1usize; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            ostrides[d] = ostrides[d + 1] * out_dims[d + 1];
+        }
+        let total: usize = out_dims.iter().product();
+        let mut data = vec![0f32; total];
+        for (flat, slot) in data.iter_mut().enumerate() {
+            let mut src_flat = 0usize;
+            for d in 0..nd {
+                let idx = (flat / ostrides[d]) % out_dims[d];
+                src_flat += (bounds[d].0 + idx * bounds[d].2) * sstrides[d];
+            }
+            *slot = src.data[src_flat];
+        }
+        Ok(Tensor { dims: out_dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_allclose_f32;
+
+    const TINY: &str = r#"
+HloModule jit_tiny, entry_computation_layout={(f32[2,3]{1,0}, f32[3,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.4 = (f32[2,2]{1,0}) tuple(dot.3)
+}
+"#;
+
+    #[test]
+    fn parses_and_runs_a_dot_module() {
+        let m = HloModule::parse(TINY).unwrap();
+        assert_eq!(m.name, "jit_tiny");
+        assert_eq!(m.num_parameters(), 2);
+        assert_eq!(m.num_instructions(), 4);
+        assert_eq!(m.parameter_dims(0), Some(&[2usize, 3][..]));
+        let a = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = [1f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3x2
+        let out = m.evaluate(&[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![2, 2]);
+        // [[1+3, 2+3], [4+6, 5+6]]
+        assert_eq!(out[0].data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn relu_bias_graph_with_broadcast_and_constant() {
+        let text = r#"
+HloModule jit_relu
+
+ENTRY main.9 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2]{0} parameter(1)
+  broadcast.3 = f32[2,2]{1,0} broadcast(Arg_1.2), dimensions={1}
+  add.4 = f32[2,2]{1,0} add(Arg_0.1, broadcast.3)
+  constant.5 = f32[] constant(0)
+  broadcast.6 = f32[2,2]{1,0} broadcast(constant.5), dimensions={}
+  ROOT maximum.7 = f32[2,2]{1,0} maximum(add.4, broadcast.6)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let x = [1f32, -5.0, -1.0, 2.0];
+        let bias = [0.5f32, 1.0];
+        let out = m.evaluate(&[&x, &bias]).unwrap();
+        assert_eq!(out.len(), 1, "non-tuple ROOT yields one output");
+        assert_eq!(out[0].data, vec![1.5, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn slice_and_reshape_and_multiply() {
+        let text = r#"
+HloModule jit_slices
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,4]{1,0} parameter(0)
+  slice.2 = f32[2,2]{1,0} slice(Arg_0.1), slice={[0:2], [1:3]}
+  reshape.3 = f32[4]{0} reshape(slice.2)
+  slice.4 = f32[2,2]{1,0} slice(Arg_0.1), slice={[0:2], [0:4:2]}
+  reshape.5 = f32[4]{0} reshape(slice.4)
+  ROOT multiply.6 = f32[4]{0} multiply(reshape.3, reshape.5)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let x = [0f32, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let out = m.evaluate(&[&x]).unwrap();
+        // slice a = [[1,2],[5,6]]; strided slice b = [[0,2],[4,6]]
+        assert_eq!(out[0].data, vec![0.0, 4.0, 20.0, 36.0]);
+    }
+
+    #[test]
+    fn bf16_round_matches_known_values() {
+        // 1.0 and short dyadics are exact in bf16
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-2.5), -2.5);
+        // bf16 spacing at 1.0 is 2^-7 (7 stored significand bits)
+        let step = f32::powi(2.0, -7);
+        assert_eq!(bf16_round(1.0 + 0.5 * step), 1.0, "halfway rounds to even (down)");
+        assert_eq!(bf16_round(1.0 + 1.5 * step), 1.0 + 2.0 * step, "halfway rounds to even (up)");
+        assert_eq!(bf16_round(1.0 + 0.6 * step), 1.0 + step, "above halfway rounds up");
+        // monotone and idempotent over a sweep
+        let mut prev = f32::NEG_INFINITY;
+        for i in -1000..1000 {
+            let x = i as f32 * 0.013;
+            let r = bf16_round(x);
+            assert_eq!(bf16_round(r), r, "idempotent at {x}");
+            assert!(r >= prev, "monotone at {x}");
+            prev = r;
+        }
+        // relative error bound: 2^-8
+        for i in 1..500 {
+            let x = i as f32 * 0.37;
+            assert!((bf16_round(x) - x).abs() <= x.abs() * f32::powi(2.0, -8));
+        }
+    }
+
+    #[test]
+    fn convert_roundtrip_applies_bf16_grid() {
+        let text = r#"
+HloModule jit_bf16
+
+ENTRY main.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  convert.2 = bf16[4]{0} convert(Arg_0.1)
+  ROOT convert.3 = f32[4]{0} convert(convert.2)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let x = [1.0f32, 1.001, 3.14159, -0.4997];
+        let out = m.evaluate(&[&x]).unwrap();
+        for (i, &v) in out[0].data.iter().enumerate() {
+            assert_eq!(v, bf16_round(x[i]));
+        }
+        assert_allclose_f32(&out[0].data, &x, 1e-2, 1e-3);
+    }
+
+    #[test]
+    fn malformed_text_is_rejected() {
+        assert!(HloModule::parse("this is not HLO").is_err());
+        assert!(HloModule::parse("").is_err());
+        // entry with an undefined operand
+        let bad = "ENTRY main {\n  ROOT add.1 = f32[2]{0} add(ghost.7, ghost.8)\n}\n";
+        let e = HloModule::parse(bad).unwrap_err().to_string();
+        assert!(e.contains("unknown operand"), "{e}");
+        // supported parse, unsupported opcode fails at evaluate
+        let unsup = "ENTRY main {\n  Arg_0.1 = f32[2]{0} parameter(0)\n  ROOT neg.2 = f32[2]{0} negate(Arg_0.1)\n}\n";
+        let m = HloModule::parse(unsup).unwrap();
+        let e = m.evaluate(&[&[1.0, 2.0]]).unwrap_err().to_string();
+        assert!(e.contains("unsupported HLO opcode"), "{e}");
+    }
+
+    #[test]
+    fn input_validation() {
+        let m = HloModule::parse(TINY).unwrap();
+        let short = [0f32; 3];
+        assert!(m.evaluate(&[&short, &short]).is_err(), "wrong input length");
+        assert!(m.evaluate(&[&[0f32; 6]]).is_err(), "missing input");
+    }
+}

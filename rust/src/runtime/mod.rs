@@ -1,12 +1,25 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! (HLO **text** — see that file and /opt/xla-example/README.md for why text,
-//! not serialized protos) and executes them on the CPU PJRT client.
+//! Native model runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** + `.meta` shape lines + expected
+//! outputs) and executes them entirely in-crate.
 //!
-//! This is the only place the crate touches the `xla` FFI. The coordinator
-//! runs a [`Runtime`] on a dedicated engine thread (the PJRT wrappers hold
-//! raw C++ pointers and are kept thread-confined).
+//! The former `xla::PjRt*` FFI is gone.  Execution goes through the
+//! [`EngineBackend`] trait; the default backend is the native
+//! [`hlo::HloModule`] interpreter running over the `blas` substrate, so
+//! `coordinator`, `serve`, and the integration tests have **zero external
+//! dependencies** and the whole request path is observable, testable
+//! rust.  A future accelerated backend (e.g. one lowering `dot` onto the
+//! simulated MMA kernels, or a real PJRT client) plugs in behind the same
+//! trait via [`Runtime::with_backend`].
+//!
+//! The coordinator still runs a [`Runtime`] on a dedicated engine thread;
+//! backends are constructed *inside* that thread via a factory, so
+//! thread-confined backends remain possible.
 
-use anyhow::{anyhow, bail, Context, Result};
+pub mod artifacts;
+pub mod hlo;
+
+use crate::error::{Context, Result};
+use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -22,9 +35,12 @@ impl ModelMeta {
     /// Parse one manifest line.
     pub fn parse(line: &str) -> Result<ModelMeta> {
         let mut parts = line.trim().split(';');
-        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
-        let ins = parts.next().ok_or_else(|| anyhow!("{name}: missing input shapes"))?;
-        let out = parts.next().ok_or_else(|| anyhow!("{name}: missing output shape"))?;
+        let name = parts.next().ok_or_else(|| err!("empty manifest line"))?.to_string();
+        if name.is_empty() {
+            bail!("empty model name in manifest line");
+        }
+        let ins = parts.next().ok_or_else(|| err!("{name}: missing input shapes"))?;
+        let out = parts.next().ok_or_else(|| err!("{name}: missing output shape"))?;
         let parse_shape = |s: &str| -> Result<Vec<usize>> {
             s.split('x').map(|d| d.parse::<usize>().context("bad dim")).collect()
         };
@@ -44,29 +60,109 @@ impl ModelMeta {
     }
 }
 
-/// One compiled model.
-pub struct LoadedModel {
-    pub meta: ModelMeta,
-    exe: xla::PjRtLoadedExecutable,
+/// A model compiled by an [`EngineBackend`], ready to execute.
+pub trait CompiledModel {
+    /// Execute on flat row-major f32 inputs; returns the flat f32 output.
+    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>>;
 }
 
-/// The PJRT CPU runtime with a compiled-executable cache.
+/// Pluggable execution backend: turns HLO text into executable models.
+pub trait EngineBackend {
+    /// Backend identifier (reported by [`Runtime::platform`]).
+    fn name(&self) -> &'static str;
+
+    /// Compile one artifact's HLO text, validating it against the meta.
+    fn compile(
+        &self,
+        name: &str,
+        hlo_text: &str,
+        meta: &ModelMeta,
+    ) -> Result<Box<dyn CompiledModel>>;
+}
+
+/// The native backend: parses HLO text and interprets it over `blas`.
+pub struct HloInterpreterBackend;
+
+impl EngineBackend for HloInterpreterBackend {
+    fn name(&self) -> &'static str {
+        "native-hlo-interpreter"
+    }
+
+    fn compile(
+        &self,
+        name: &str,
+        hlo_text: &str,
+        meta: &ModelMeta,
+    ) -> Result<Box<dyn CompiledModel>> {
+        let module = hlo::HloModule::parse(hlo_text)
+            .map_err(|e| e.context(format!("parsing HLO for {name}")))?;
+        if module.num_parameters() != meta.input_shapes.len() {
+            bail!(
+                "{name}: HLO has {} parameters, meta declares {} inputs",
+                module.num_parameters(),
+                meta.input_shapes.len()
+            );
+        }
+        for (i, shape) in meta.input_shapes.iter().enumerate() {
+            let hlo_len: usize = module
+                .parameter_dims(i)
+                .ok_or_else(|| err!("{name}: HLO is missing parameter {i}"))?
+                .iter()
+                .product();
+            let meta_len: usize = shape.iter().product();
+            if hlo_len != meta_len {
+                bail!("{name}: parameter {i} has {hlo_len} elements in HLO, {meta_len} in meta");
+            }
+        }
+        Ok(Box::new(InterpretedModel { module }))
+    }
+}
+
+struct InterpretedModel {
+    module: hlo::HloModule,
+}
+
+impl CompiledModel for InterpretedModel {
+    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let outputs = self.module.evaluate(inputs)?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let first = outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?;
+        Ok(first.data)
+    }
+}
+
+/// One compiled model with its metadata.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    exe: Box<dyn CompiledModel>,
+}
+
+/// The artifact-directory runtime with a compiled-model cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn EngineBackend>,
     models: HashMap<String, LoadedModel>,
     dir: PathBuf,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client over an artifact directory (does not load
-    /// anything yet).
+    /// Runtime over an artifact directory with the native HLO-interpreter
+    /// backend (the name is historical: this was the PJRT *CPU* client).
+    /// Does not load anything yet.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Runtime { client, models: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() })
+        Ok(Runtime::with_backend(Box::new(HloInterpreterBackend), artifact_dir))
     }
 
+    /// Runtime over an artifact directory with an explicit backend.
+    pub fn with_backend(
+        backend: Box<dyn EngineBackend>,
+        artifact_dir: impl AsRef<Path>,
+    ) -> Runtime {
+        Runtime { backend, models: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() }
+    }
+
+    /// Name of the execution backend.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
     /// Load + compile one artifact by name (`<dir>/<name>.hlo.txt` +
@@ -76,16 +172,14 @@ impl Runtime {
             return Ok(());
         }
         let meta_path = self.dir.join(format!("{name}.meta"));
-        let meta_line = std::fs::read_to_string(&meta_path)
-            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let meta_line = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!("reading {} (run `power-mma gen-artifacts`?)", meta_path.display())
+        })?;
         let meta = ModelMeta::parse(&meta_line)?;
         let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {hlo_path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let hlo_text = std::fs::read_to_string(&hlo_path)
+            .with_context(|| format!("reading {}", hlo_path.display()))?;
+        let exe = self.backend.compile(name, &hlo_text, &meta)?;
         self.models.insert(name.to_string(), LoadedModel { meta, exe });
         Ok(())
     }
@@ -93,7 +187,7 @@ impl Runtime {
     /// Load every artifact listed in `manifest.txt`.
     pub fn load_all(&mut self) -> Result<Vec<String>> {
         let manifest = std::fs::read_to_string(self.dir.join("manifest.txt"))
-            .context("reading manifest.txt (run `make artifacts`)")?;
+            .context("reading manifest.txt (run `power-mma gen-artifacts`)")?;
         let mut names = Vec::new();
         for line in manifest.lines().filter(|l| !l.trim().is_empty()) {
             let meta = ModelMeta::parse(line)?;
@@ -114,8 +208,7 @@ impl Runtime {
     /// Execute a model on flat f32 inputs (row-major); returns the flat
     /// f32 output. Input lengths are validated against the metadata.
     pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        let model =
-            self.models.get(name).ok_or_else(|| anyhow!("model {name} not loaded"))?;
+        let model = self.models.get(name).ok_or_else(|| err!("model {name} not loaded"))?;
         if inputs.len() != model.meta.input_shapes.len() {
             bail!(
                 "{name}: expected {} inputs, got {}",
@@ -123,37 +216,24 @@ impl Runtime {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, data) in inputs.iter().enumerate() {
             let want = model.meta.input_len(i);
             if data.len() != want {
                 bail!("{name}: input {i} has {} elements, expected {want}", data.len());
             }
-            let dims: Vec<i64> = model.meta.input_shapes[i].iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
-            literals.push(lit);
         }
-        let result = model
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True -> 1-tuple
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        if vals.len() != model.meta.output_len() {
-            bail!("{name}: output has {} elements, expected {}", vals.len(), model.meta.output_len());
+        let out = model.exe.execute(inputs).map_err(|e| e.context(format!("execute {name}")))?;
+        if out.len() != model.meta.output_len() {
+            bail!("{name}: output has {} elements, expected {}", out.len(), model.meta.output_len());
         }
-        Ok(vals)
+        Ok(out)
     }
 
     /// Read the python-side expected output for the deterministic inputs.
     pub fn expected(&self, name: &str) -> Result<Vec<f32>> {
         let path = self.dir.join(format!("{name}.expected.bin"));
-        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
         Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
     }
 }
@@ -210,5 +290,26 @@ mod tests {
         }
         // different salts differ
         assert_ne!(det_input(8, 1), det_input(8, 2));
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_embedded_artifacts() {
+        let dir = std::env::temp_dir().join(format!("mma-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        assert_eq!(rt.platform(), "native-hlo-interpreter");
+        let names = rt.load_all().unwrap();
+        assert!(names.contains(&"gemm_f32".to_string()));
+        assert!(rt.loaded().contains(&"gemm_f32"));
+        let meta = rt.meta("gemm_f32").unwrap().clone();
+        let ins = det_inputs(&meta);
+        let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute("gemm_f32", &refs).unwrap();
+        assert_eq!(out.len(), meta.output_len());
+        // input validation
+        assert!(rt.execute("gemm_f32", &[]).is_err());
+        assert!(rt.execute("nonexistent", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

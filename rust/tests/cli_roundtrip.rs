@@ -1,0 +1,95 @@
+//! Smoke tests for the `power-mma` binary's subcommand paths, driven
+//! through the real executable (`CARGO_BIN_EXE_*`): the `asm`/`disasm`
+//! round trip over the paper's Figure 7 object-code listing, the
+//! `gen-artifacts` writer, and a small `serve` self-test load on the
+//! native HLO-interpreter backend.
+
+use power_mma::isa::encode::FIG7_WORDS;
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_power-mma"))
+}
+
+/// Run the binary with `args`, feeding `stdin`, returning (status, stdout).
+fn run(args: &[&str], stdin: &str) -> (bool, String) {
+    let mut child = bin()
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn power-mma");
+    child
+        .stdin
+        .as_mut()
+        .expect("stdin piped")
+        .write_all(stdin.as_bytes())
+        .expect("write stdin");
+    let out = child.wait_with_output().expect("wait for power-mma");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    if !out.status.success() {
+        eprintln!("stderr: {}", String::from_utf8_lossy(&out.stderr));
+    }
+    (out.status.success(), stdout)
+}
+
+/// The Figure 7 listing as the hex-word text the CLI consumes/emits.
+fn fig7_hex() -> String {
+    FIG7_WORDS.iter().map(|w| format!("{w:08x}\n")).collect()
+}
+
+#[test]
+fn disasm_then_asm_round_trips_figure7() {
+    // bytes -> mnemonics
+    let (ok, asm_text) = run(&["disasm"], &fig7_hex());
+    assert!(ok, "disasm must succeed on the Figure 7 words");
+    assert!(
+        asm_text.contains("xvf64gerpp"),
+        "Figure 7 contains rank-2 fp64 updates, got:\n{asm_text}"
+    );
+    assert!(asm_text.contains("lxvp"), "Figure 7 starts with paired loads");
+
+    // mnemonics -> bytes: must reproduce the paper listing word for word
+    let (ok, hex_text) = run(&["asm"], &asm_text);
+    assert!(ok, "asm must accept its own disassembly");
+    let words: Vec<&str> = hex_text.split_whitespace().collect();
+    let expect: Vec<String> = FIG7_WORDS.iter().map(|w| format!("{w:08x}")).collect();
+    assert_eq!(words, expect, "asm(disasm(fig7)) != fig7");
+}
+
+#[test]
+fn asm_rejects_garbage_with_nonzero_exit() {
+    let (ok, _) = run(&["asm"], "xvnonsense a0, vs32, vs33\n");
+    assert!(!ok, "an unknown mnemonic must fail the assembler");
+}
+
+#[test]
+fn gen_artifacts_writes_a_loadable_set() {
+    let dir = std::env::temp_dir().join(format!("mma-cli-gen-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, stdout) = run(&["gen-artifacts", "--out", dir.to_str().unwrap()], "");
+    assert!(ok, "gen-artifacts must succeed");
+    assert!(stdout.contains("wrote 4 artifacts"), "{stdout}");
+    for name in ["gemm_f32", "gemm_bf16", "conv2d_k3", "mlp_b32"] {
+        assert!(dir.join(format!("{name}.hlo.txt")).exists(), "{name} hlo");
+        assert!(dir.join(format!("{name}.meta")).exists(), "{name} meta");
+        assert!(dir.join(format!("{name}.expected.bin")).exists(), "{name} expected");
+    }
+    assert!(dir.join("manifest.txt").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_self_test_runs_on_the_native_backend() {
+    let dir = std::env::temp_dir().join(format!("mma-cli-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, stdout) = run(
+        &["serve", "--artifacts", dir.to_str().unwrap(), "--requests", "40"],
+        "",
+    );
+    assert!(ok, "serve self-test must complete green: {stdout}");
+    assert!(stdout.contains("served 40/40"), "all requests must succeed: {stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,190 @@
+//! Golden tests for the native HLO interpreter.
+//!
+//! 1. **Parse goldens** — every embedded artifact (the HLO text emitted by
+//!    `python/compile/aot.py` for each `python/compile` kernel's serving
+//!    graph) must parse, with parameters/shapes agreeing with its meta.
+//! 2. **Numerics goldens** — the interpreter's output on the deterministic
+//!    inputs must match *two* independent oracles: the python-computed
+//!    `.expected.bin` fixtures (JAX), and a rust reimplementation of
+//!    `python/compile/kernels/ref.py` built on `blas::gemm::RefGemm`'s
+//!    kernel (`ref_gemm`).
+
+use power_mma::blas::gemm::ref_gemm;
+use power_mma::runtime::artifacts::EMBEDDED;
+use power_mma::runtime::hlo::{bf16_round, HloModule};
+use power_mma::runtime::{det_inputs, ModelMeta};
+use power_mma::testkit::assert_allclose_f32;
+
+fn expected_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect()
+}
+
+/// f32 GEMM oracle (ref.py::gemm_ref): f64 accumulation via `ref_gemm`,
+/// rounded to f32 — the same BLAS kernel the interpreter's `dot` uses.
+fn gemm_oracle(x: &[f32], y: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let xf: Vec<f64> = x.iter().map(|&v| f64::from(v)).collect();
+    let yf: Vec<f64> = y.iter().map(|&v| f64::from(v)).collect();
+    ref_gemm(&xf, &yf, m, n, k).iter().map(|&v| v as f32).collect()
+}
+
+/// bf16 GEMM oracle (ref.py::gemm_bf16_ref): inputs rounded to the bf16
+/// grid, products and sums wide.
+fn gemm_bf16_oracle(x: &[f32], y: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let xb: Vec<f32> = x.iter().map(|&v| bf16_round(v)).collect();
+    let yb: Vec<f32> = y.iter().map(|&v| bf16_round(v)).collect();
+    gemm_oracle(&xb, &yb, m, n, k)
+}
+
+/// Direct 3×3 multi-channel valid convolution (ref.py::conv3x3_ref):
+/// taps ordered `9c + 3ky + kx`, f32 accumulation in the same tap order
+/// as the lowered serving graph.
+fn conv_oracle(h: &[f32], img: &[f32], rows: usize, width: usize) -> Vec<f32> {
+    let (out_rows, out_w) = (rows - 2, width - 2);
+    let mut out = vec![0f32; 8 * out_rows * out_w];
+    for c in 0..3 {
+        for ky in 0..3 {
+            for kx in 0..3 {
+                for f in 0..8 {
+                    let tap = h[f * 27 + 9 * c + 3 * ky + kx];
+                    for r in 0..out_rows {
+                        for x in 0..out_w {
+                            out[f * out_rows * out_w + r * out_w + x] +=
+                                tap * img[c * rows * width + (r + ky) * width + (x + kx)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Two-layer MLP oracle (ref.py::mlp_ref): relu(x·W1 + b1)·W2 + b2, both
+/// matmuls through `ref_gemm`, bias/relu in f32 like the lowered graph.
+fn mlp_oracle(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    batch: usize,
+    features: usize,
+    hidden: usize,
+    classes: usize,
+) -> Vec<f32> {
+    let mut h = gemm_oracle(x, w1, batch, hidden, features);
+    for r in 0..batch {
+        for j in 0..hidden {
+            h[r * hidden + j] = (h[r * hidden + j] + b1[j]).max(0.0);
+        }
+    }
+    let mut out = gemm_oracle(&h, w2, batch, classes, hidden);
+    for r in 0..batch {
+        for j in 0..classes {
+            out[r * classes + j] += b2[j];
+        }
+    }
+    out
+}
+
+#[test]
+fn every_compile_kernel_artifact_parses() {
+    assert_eq!(EMBEDDED.len(), 4, "gemm_f32, gemm_bf16, conv2d_k3, mlp_b32");
+    for a in EMBEDDED {
+        let meta = ModelMeta::parse(a.meta).unwrap();
+        let module = HloModule::parse(a.hlo_text)
+            .unwrap_or_else(|e| panic!("{}: HLO text must parse: {e}", a.name));
+        assert!(
+            module.num_instructions() >= 4,
+            "{}: implausibly small entry computation",
+            a.name
+        );
+        assert_eq!(
+            module.num_parameters(),
+            meta.input_shapes.len(),
+            "{}: parameter count",
+            a.name
+        );
+        for (i, shape) in meta.input_shapes.iter().enumerate() {
+            let dims = module
+                .parameter_dims(i)
+                .unwrap_or_else(|| panic!("{}: missing parameter {i}", a.name));
+            assert_eq!(dims, shape.as_slice(), "{}: parameter {i} shape", a.name);
+        }
+        assert!(module.name.contains("jit_"), "{}: jax-lowered module name", a.name);
+    }
+}
+
+#[test]
+fn interpreter_matches_python_expected_fixtures() {
+    for a in EMBEDDED {
+        let meta = ModelMeta::parse(a.meta).unwrap();
+        let module = HloModule::parse(a.hlo_text).unwrap();
+        let inputs = det_inputs(&meta);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = module.evaluate(&refs).unwrap();
+        assert_eq!(out.len(), 1, "{}: aot.py lowers to a 1-tuple", a.name);
+        assert_eq!(out[0].dims, meta.output_shape, "{}: output shape", a.name);
+        let expect = expected_f32(a.expected);
+        assert_allclose_f32(&out[0].data, &expect, 1e-5, 1e-5);
+    }
+}
+
+#[test]
+fn gemm_f32_matches_refgemm_oracle() {
+    let a = EMBEDDED.iter().find(|a| a.name == "gemm_f32").unwrap();
+    let meta = ModelMeta::parse(a.meta).unwrap();
+    let module = HloModule::parse(a.hlo_text).unwrap();
+    let inputs = det_inputs(&meta);
+    let g = meta.input_shapes[0][0];
+    let out = module.evaluate(&[&inputs[0], &inputs[1]]).unwrap();
+    let oracle = gemm_oracle(&inputs[0], &inputs[1], g, g, g);
+    // same ref_gemm kernel underneath -> bit-identical
+    assert_eq!(out[0].data, oracle, "interpreter dot must be the blas ref_gemm kernel");
+}
+
+#[test]
+fn gemm_bf16_matches_bf16_oracle_and_differs_from_f32() {
+    let a = EMBEDDED.iter().find(|a| a.name == "gemm_bf16").unwrap();
+    let meta = ModelMeta::parse(a.meta).unwrap();
+    let module = HloModule::parse(a.hlo_text).unwrap();
+    let inputs = det_inputs(&meta);
+    let g = meta.input_shapes[0][0];
+    let out = module.evaluate(&[&inputs[0], &inputs[1]]).unwrap();
+    let oracle = gemm_bf16_oracle(&inputs[0], &inputs[1], g, g, g);
+    assert_eq!(out[0].data, oracle, "bf16 convert + dot must equal the rounded oracle");
+    // the bf16 rounding must actually bite (different numbers than f32)
+    let f32_result = gemm_oracle(&inputs[0], &inputs[1], g, g, g);
+    assert_ne!(out[0].data, f32_result, "bf16 path must round inputs");
+}
+
+#[test]
+fn conv2d_matches_direct_convolution_oracle() {
+    let a = EMBEDDED.iter().find(|a| a.name == "conv2d_k3").unwrap();
+    let meta = ModelMeta::parse(a.meta).unwrap();
+    let module = HloModule::parse(a.hlo_text).unwrap();
+    let inputs = det_inputs(&meta);
+    let (rows, width) = (meta.input_shapes[1][1], meta.input_shapes[1][2]);
+    let out = module.evaluate(&[&inputs[0], &inputs[1]]).unwrap();
+    let oracle = conv_oracle(&inputs[0], &inputs[1], rows, width);
+    // identical f32 accumulation order -> very tight
+    assert_allclose_f32(&out[0].data, &oracle, 1e-6, 1e-6);
+}
+
+#[test]
+fn mlp_matches_refgemm_oracle() {
+    let a = EMBEDDED.iter().find(|a| a.name == "mlp_b32").unwrap();
+    let meta = ModelMeta::parse(a.meta).unwrap();
+    let module = HloModule::parse(a.hlo_text).unwrap();
+    let inputs = det_inputs(&meta);
+    let (batch, features) = (meta.input_shapes[0][0], meta.input_shapes[0][1]);
+    let hidden = meta.input_shapes[1][1];
+    let classes = meta.input_shapes[3][1];
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = module.evaluate(&refs).unwrap();
+    let oracle = mlp_oracle(
+        &inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4],
+        batch, features, hidden, classes,
+    );
+    assert_allclose_f32(&out[0].data, &oracle, 1e-6, 1e-6);
+}

@@ -1,23 +1,25 @@
 //! Integration tests over the real AOT artifacts: rust loads the HLO text
-//! produced by `python/compile/aot.py`, compiles it on the PJRT CPU client,
-//! executes with the shared deterministic inputs, and checks the numbers
-//! against the python-side expected outputs — the proof that L1 (Pallas)
-//! → L2 (JAX) → AOT → L3 (rust) compose.
+//! produced by `python/compile/aot.py`, compiles it on the native
+//! HLO-interpreter backend, executes with the shared deterministic inputs,
+//! and checks the numbers against the python-side expected outputs — the
+//! proof that L2 (JAX serving graphs) → AOT → L3 (rust) compose.
 //!
-//! Requires `make artifacts`; tests skip (with a loud message) when the
-//! artifact directory is missing so `cargo test` works standalone.
+//! The artifact set ships embedded in the crate (`runtime::artifacts`),
+//! so these tests always run — no python, no network, no `make artifacts`.
 
 use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
-use power_mma::runtime::{det_input, det_inputs, Runtime};
+use power_mma::runtime::{artifacts, det_input, det_inputs, Runtime};
 
-fn artifact_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.txt").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
-        None
-    }
+/// Materialize the embedded artifact set once per test process.
+fn artifact_dir() -> std::path::PathBuf {
+    static DIR: std::sync::OnceLock<std::path::PathBuf> = std::sync::OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("power-mma-integration-artifacts-{}", std::process::id()));
+        artifacts::write_artifacts(&dir).expect("materialize embedded artifacts");
+        dir
+    })
+    .clone()
 }
 
 fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
@@ -32,7 +34,7 @@ fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
 
 #[test]
 fn artifacts_match_python_expectations() {
-    let Some(dir) = artifact_dir() else { return };
+    let dir = artifact_dir();
     let mut rt = Runtime::cpu(&dir).unwrap();
     let names = rt.load_all().unwrap();
     assert!(names.len() >= 4, "expected gemm_f32/gemm_bf16/conv2d_k3/mlp artifacts");
@@ -42,7 +44,7 @@ fn artifacts_match_python_expectations() {
         let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
         let out = rt.execute(name, &refs).unwrap();
         let expect = rt.expected(name).unwrap();
-        // identical compiled graph on both sides -> tight tolerance
+        // same graph on both sides (f64 vs f32 dot accumulation) -> tight tolerance
         allclose(&out, &expect, 1e-5, 1e-5);
         println!("{name}: {} outputs match python", out.len());
     }
@@ -50,7 +52,7 @@ fn artifacts_match_python_expectations() {
 
 #[test]
 fn gemm_artifact_is_a_real_matmul() {
-    let Some(dir) = artifact_dir() else { return };
+    let dir = artifact_dir();
     let mut rt = Runtime::cpu(&dir).unwrap();
     rt.load("gemm_f32").unwrap();
     let meta = rt.meta("gemm_f32").unwrap().clone();
@@ -68,7 +70,7 @@ fn gemm_artifact_is_a_real_matmul() {
 
 #[test]
 fn runtime_validates_inputs() {
-    let Some(dir) = artifact_dir() else { return };
+    let dir = artifact_dir();
     let mut rt = Runtime::cpu(&dir).unwrap();
     rt.load("gemm_f32").unwrap();
     let short = vec![0f32; 7];
@@ -78,7 +80,7 @@ fn runtime_validates_inputs() {
 
 #[test]
 fn coordinator_serves_real_models_end_to_end() {
-    let Some(dir) = artifact_dir() else { return };
+    let dir = artifact_dir();
     let cfg = CoordinatorConfig { max_delay: std::time::Duration::from_millis(5), ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let dir2 = dir.clone();
