@@ -4,7 +4,7 @@
 //!    instruction stream and check it against the direct convolution;
 //! 2. time it on the POWER10 model;
 //! 3. run the *same computation* through the AOT-compiled conv artifact
-//!    (`artifacts/conv2d_k3.hlo.txt`) on the native HLO interpreter and
+//!    (`artifacts/conv2d_k3.hlo.txt`) on the native plan backend and
 //!    cross-check the two implementations numerically.
 //!
 //! Run: `cargo run --release --example conv_pipeline`
@@ -53,7 +53,7 @@ fn main() -> power_mma::error::Result<()> {
         rep.flops_per_cycle()
     );
 
-    // ---- 3. the AOT conv artifact through the native HLO interpreter ----
+    // ---- 3. the AOT conv artifact through the native plan backend ----
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if power_mma::runtime::artifacts::ensure_artifacts(&dir)? {
         println!("(materialized embedded AOT artifacts into {})", dir.display());
@@ -83,7 +83,7 @@ fn main() -> power_mma::error::Result<()> {
         }
     }
     println!(
-        "AOT conv artifact (native HLO interpreter) vs simulated MMA kernel: \
+        "AOT conv artifact (native plan backend) vs simulated MMA kernel: \
          max |err| = {maxerr2:.2e} (two independent implementations of §V-B)"
     );
     assert!(maxerr2 < 1e-3);

@@ -3,7 +3,7 @@
 //! transaction, with model agility (three model families served at once).
 //!
 //! Loads the AOT artifacts (JAX serving graphs → HLO text), starts the
-//! coordinator (router + dynamic batcher over the native HLO-interpreter
+//! coordinator (router + dynamic batcher over the native compiled-plan
 //! runtime), fires a mixed workload from concurrent client threads, and
 //! reports throughput + latency percentiles + batch occupancy.
 //!

@@ -1,0 +1,363 @@
+//! Blocked, panel-packed, multithreaded f32 GEMM — the serving-runtime
+//! counterpart of the paper's register-blocked outer-product pipeline
+//! (Figures 3–5): pack → block → microkernel.
+//!
+//! Structure (BLIS-style cache tiling):
+//!
+//! * **NC / KC / MC loops** walk `C = A·B` in cache-sized blocks;
+//! * the **B block** (`KC × NC`) is packed once per (jc, kc) iteration
+//!   into `NR`-wide row panels and shared (read-only) by all workers;
+//! * each worker packs its **A micropanels** (`MR × KC`, column-major)
+//!   with [`crate::kernels::pack::pack_a_panel_f32`] — the same layout
+//!   machinery the MMA kernel hosts use — and runs the
+//!   **`MR×NR` microkernel**: per `k` step, one packed A column and one
+//!   packed B row feed a rank-1 update of an `MR×NR` accumulator block,
+//!   exactly the `xvf32ger` shape of the paper scaled up to registers;
+//! * the **M-panel loop is parallelized** over a scoped `std::thread`
+//!   worker pool sized from `available_parallelism()`. Workers own
+//!   disjoint row ranges of `C`, join before the call returns, and no
+//!   `Send` requirement leaks to the caller — the threading model is
+//!   compatible with the coordinator's thread-confined engine.
+//!
+//! **Numerics contract:** products and accumulation are carried in `f64`
+//! and every `C` element accumulates its `k` products in strictly
+//! ascending order (the microkernel loads the running `f64` sum before a
+//! `k` block and stores it after), so the result is **bit-identical** to
+//! the `f64`-widened reference path used by the legacy HLO-interpreter
+//! `dot` ([`crate::blas::gemm::ref_gemm`] over converted inputs) on all
+//! finite inputs — tiling, packing, and thread count never change a ULP.
+
+use crate::kernels::pack::{pack_a_panel_f32, pack_b_panel_f32};
+
+/// Microkernel register-block rows (the 8 of the paper's `8×8` DGEMM and
+/// `8×16` SGEMM virtual accumulators).
+pub const MR: usize = 8;
+/// Microkernel register-block columns.
+pub const NR: usize = 8;
+/// Cache-block rows of A per worker pass (L2 residency).
+pub const MC: usize = 128;
+/// Cache-block depth of the packed panels (L1/L2 residency).
+pub const KC: usize = 256;
+/// Cache-block columns of the packed B block (L2/L3 residency).
+pub const NC: usize = 512;
+
+/// Approximate flop count (`2·m·n·k`) below which the M-panel loop runs
+/// inline instead of spawning workers — batched-MLP-sized dots stay on
+/// the latency path, 128³-and-up GEMM tiles fan out.
+pub const PAR_FLOP_THRESHOLD: usize = 2_000_000;
+
+/// Reusable scratch for [`gemm_f32_into`]: the `f64` accumulation image
+/// of `C`, the packed B block, and one packed-A-panel buffer per worker.
+/// Holding one per compiled plan means a serving request performs **no
+/// GEMM-sized allocation** — buffers are grown once
+/// ([`GemmScratch::reserve`], or lazily on first use) and reused for
+/// every request.
+#[derive(Default)]
+pub struct GemmScratch {
+    c64: Vec<f64>,
+    bp: Vec<f32>,
+    ap: Vec<Vec<f32>>,
+}
+
+impl GemmScratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+
+    /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
+    /// workers allocates nothing.
+    pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
+        let c_need = m * n;
+        if self.c64.len() < c_need {
+            self.c64.resize(c_need, 0.0);
+        }
+        let bp_need = KC.min(k.max(1)) * n.min(NC).div_ceil(NR) * NR;
+        if self.bp.len() < bp_need {
+            self.bp.resize(bp_need, 0.0);
+        }
+        let workers = threads.clamp(1, m.max(1).div_ceil(MR));
+        if self.ap.len() < workers {
+            self.ap.resize_with(workers, Vec::new);
+        }
+        let ap_need = KC.min(k.max(1)) * MR;
+        for apb in &mut self.ap[..workers] {
+            if apb.len() < ap_need {
+                apb.resize(ap_need, 0.0);
+            }
+        }
+    }
+}
+
+/// Pick the worker count for an `m×n×k` GEMM: at most `max_threads`, at
+/// most one worker per `MR`-row panel, and 1 when the problem is below
+/// [`PAR_FLOP_THRESHOLD`].
+pub fn threads_for(m: usize, n: usize, k: usize, max_threads: usize) -> usize {
+    let work = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if work < PAR_FLOP_THRESHOLD {
+        return 1;
+    }
+    max_threads.clamp(1, m.div_ceil(MR))
+}
+
+/// `C = A·B` into a caller-provided `c` (`m×n`, row-major, fully
+/// overwritten). `a` is `m×k`, `b` is `k×n`, both row-major and
+/// contiguous. Exactly `threads` scoped workers are used (clamped to the
+/// number of `MR`-row panels; 1 runs inline without spawning) and joined
+/// before the call returns — callers pick the policy, typically via
+/// [`threads_for`]. See the module docs for the numerics contract.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(a.len(), m * k, "A must be m*k");
+    assert_eq!(b.len(), k * n, "B must be k*n");
+    assert_eq!(c.len(), m * n, "C must be m*n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    scratch.reserve(m, n, k, threads);
+    let c64 = &mut scratch.c64[..m * n];
+    c64.fill(0.0);
+    if k > 0 {
+        let nthreads = threads.clamp(1, m.div_ceil(MR));
+        // rows per worker, rounded up to whole MR panels
+        let rows_per = m.div_ceil(MR).div_ceil(nthreads) * MR;
+        let ap_slots = &mut scratch.ap[..nthreads];
+        for jc in (0..n).step_by(NC) {
+            let ncl = NC.min(n - jc);
+            for kc0 in (0..k).step_by(KC) {
+                let kcl = KC.min(k - kc0);
+                // pack the KC×NC block of B into NR-wide row panels:
+                // panel jp at bp[jp*kcl*NR ..], element (p, j) at p*NR + j
+                let n_panels = ncl.div_ceil(NR);
+                let bp = &mut scratch.bp[..n_panels * kcl * NR];
+                for jp in 0..n_panels {
+                    let j0 = jc + jp * NR;
+                    let cols = NR.min(n - j0);
+                    pack_b_panel_f32(
+                        b,
+                        n,
+                        kc0,
+                        kcl,
+                        j0,
+                        cols,
+                        NR,
+                        &mut bp[jp * kcl * NR..(jp + 1) * kcl * NR],
+                    );
+                }
+                let bp = &*bp;
+                if nthreads == 1 {
+                    worker(c64, a, bp, &mut ap_slots[0], 0, m, m, k, n, kc0, kcl, jc, ncl);
+                } else {
+                    std::thread::scope(|s| {
+                        let chunks = c64.chunks_mut(rows_per * n);
+                        for ((w, chunk), apb) in chunks.enumerate().zip(ap_slots.iter_mut()) {
+                            let i0 = w * rows_per;
+                            let rows = chunk.len() / n;
+                            s.spawn(move || {
+                                worker(chunk, a, bp, apb, i0, rows, m, k, n, kc0, kcl, jc, ncl);
+                            });
+                        }
+                    });
+                }
+            }
+        }
+    }
+    for (dst, &src) in c.iter_mut().zip(c64.iter()) {
+        *dst = src as f32;
+    }
+}
+
+/// Convenience wrapper over [`gemm_f32_into`] that owns its result and
+/// scratch.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, threads: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    let mut scratch = GemmScratch::new();
+    gemm_f32_into(&mut c, a, b, m, n, k, threads, &mut scratch);
+    c
+}
+
+/// One worker's share: rows `i0 .. i0+rows` of `C` (passed as the
+/// worker-owned slice `c64` whose row 0 is global row `i0`), one (jc, kc)
+/// block. Walks MC row blocks, packs each `MR×kcl` A micropanel once, and
+/// sweeps it across all `NR` panels of the packed B block.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    c64: &mut [f64],
+    a: &[f32],
+    bp: &[f32],
+    ap: &mut [f32],
+    i0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    kc0: usize,
+    kcl: usize,
+    jc: usize,
+    ncl: usize,
+) {
+    let ap = &mut ap[..kcl * MR];
+    for ic in (0..rows).step_by(MC) {
+        let mcl = MC.min(rows - ic);
+        for ir in (0..mcl).step_by(MR) {
+            let gi = i0 + ic + ir; // global row of this micropanel
+            let mrl = MR.min(m - gi);
+            pack_a_panel_f32(a, k, gi, mrl, kc0, kcl, MR, ap);
+            for jp in 0..ncl.div_ceil(NR) {
+                let j0 = jc + jp * NR;
+                let nrl = NR.min(jc + ncl - j0);
+                let bpp = &bp[jp * kcl * NR..(jp + 1) * kcl * NR];
+                microkernel(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl);
+            }
+        }
+    }
+}
+
+/// The `MR×NR` microkernel: loads the running `f64` sums of one `C`
+/// register block, applies `kcl` rank-1 updates from the packed panels in
+/// ascending `k` order, and stores the sums back. Only the `mrl×nrl`
+/// valid corner is loaded/stored (tail handling); the zero-padded panel
+/// lanes are computed and discarded.
+#[allow(clippy::too_many_arguments)]
+fn microkernel(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    n: usize,
+    ap: &[f32],
+    bp: &[f32],
+    kcl: usize,
+    mrl: usize,
+    nrl: usize,
+) {
+    let mut acc = [0f64; MR * NR];
+    for i in 0..mrl {
+        let crow = &c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
+    }
+    for p in 0..kcl {
+        let ac = &ap[p * MR..(p + 1) * MR];
+        let br = &bp[p * NR..(p + 1) * NR];
+        for i in 0..MR {
+            let av = f64::from(ac[i]);
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            for (slot, &bv) in row.iter_mut().zip(br) {
+                *slot += av * f64::from(bv);
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::gemm::ref_gemm;
+    use crate::testkit::{assert_allclose_f32, check, Rng};
+
+    /// The legacy interpreter dot path: widen to f64, ref_gemm, narrow.
+    fn ref_path(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let af: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
+        let bf: Vec<f64> = b.iter().map(|&v| f64::from(v)).collect();
+        ref_gemm(&af, &bf, m, n, k).iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn exhaustive_small_shape_sweep_with_tails() {
+        // every combination straddling the MR/NR/KC boundaries, incl.
+        // m/n/k not multiples of the block sizes
+        let ms = [1, 2, 3, 7, 8, 9, 15, 16, 17];
+        let ns = [1, 2, 5, 7, 8, 9, 16, 17];
+        let ks = [1, 2, 3, 8, 9, 31, 33];
+        let mut rng = Rng::new(0xb10c);
+        for &m in &ms {
+            for &n in &ns {
+                for &k in &ks {
+                    let a = rng.f32_vec(m * k);
+                    let b = rng.f32_vec(k * n);
+                    let expect = ref_path(&a, &b, m, n, k);
+                    for threads in [1, 4] {
+                        let got = gemm_f32(&a, &b, m, n, k, threads);
+                        assert_eq!(
+                            got, expect,
+                            "bit-identity broken at m={m} n={n} k={k} threads={threads}"
+                        );
+                        assert_allclose_f32(&got, &expect, 1e-5, 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crosses_kc_and_nc_boundaries() {
+        // k > KC forces multiple packed B blocks; n > NR*several panels
+        let (m, n, k) = (33, 70, KC + 37);
+        let mut rng = Rng::new(7);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let expect = ref_path(&a, &b, m, n, k);
+        for threads in [1, 2, 3, 8] {
+            assert_eq!(gemm_f32(&a, &b, m, n, k, threads), expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_bits() {
+        check("blocked gemm thread invariance", 6, |rng: &mut Rng| {
+            let (m, n, k) = (rng.range(1, 80), rng.range(1, 80), rng.range(1, 80));
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let t1 = gemm_f32(&a, &b, m, n, k, 1);
+            assert_eq!(t1, ref_path(&a, &b, m, n, k));
+            for threads in [2, 5] {
+                assert_eq!(t1, gemm_f32(&a, &b, m, n, k, threads));
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // a big GEMM followed by a small one through the same scratch must
+        // not leak stale accumulation state
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(11);
+        let (a1, b1) = (rng.f32_vec(40 * 24), rng.f32_vec(24 * 36));
+        let mut c1 = vec![0f32; 40 * 36];
+        gemm_f32_into(&mut c1, &a1, &b1, 40, 36, 24, 2, &mut scratch);
+        let (a2, b2) = (rng.f32_vec(3 * 5), rng.f32_vec(5 * 4));
+        let mut c2 = vec![0f32; 3 * 4];
+        gemm_f32_into(&mut c2, &a2, &b2, 3, 4, 5, 1, &mut scratch);
+        assert_eq!(c2, ref_path(&a2, &b2, 3, 4, 5));
+        assert_eq!(c1, ref_path(&a1, &b1, 40, 36, 24));
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // k = 0 -> all zeros; 1×1×1 -> plain product
+        let mut c = vec![9f32; 6];
+        gemm_f32_into(&mut c, &[], &[], 2, 3, 0, 4, &mut GemmScratch::new());
+        assert_eq!(c, vec![0.0; 6]);
+        assert_eq!(gemm_f32(&[2.0], &[3.5], 1, 1, 1, 1), vec![7.0]);
+    }
+
+    #[test]
+    fn threads_for_policy() {
+        assert_eq!(threads_for(32, 64, 128, 8), 1, "MLP-sized dot stays inline");
+        assert!(threads_for(512, 512, 512, 8) == 8, "512-class GEMM fans out");
+        assert!(threads_for(512, 512, 512, 64) <= 512usize.div_ceil(MR));
+        assert_eq!(threads_for(8, 4096, 4096, 16), 1, "one row panel -> one worker");
+    }
+}

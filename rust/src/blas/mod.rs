@@ -8,10 +8,15 @@
 //! * [`gemm`] — reference blocked DGEMM/SGEMM plus the [`gemm::GemmBackend`]
 //!   abstraction that lets LU run its trailing update either natively or
 //!   through the instruction-level MMA simulator.
+//! * [`block_gemm`] — the serving fast path: panel-packed, cache-tiled
+//!   (MC/KC/NC), register-blocked (`MR×NR` microkernel) f32 GEMM with
+//!   scoped-thread M-panel parallelism, bit-identical to the widened
+//!   reference path (see its module docs for the numerics contract).
 //! * [`lu`] — blocked right-looking LU with partial pivoting (`dgetrf`,
 //!   `dgetf2`, `dtrsm`, `dlaswp`) and triangular solves: the computational
 //!   core of HPL.
 
+pub mod block_gemm;
 pub mod gemm;
 pub mod level1;
 pub mod level2;

@@ -15,6 +15,29 @@
 //! * the executables run on a dedicated engine thread (backends may be
 //!   thread-confined — the engine is constructed *inside* the thread via
 //!   a factory, so no `Send` requirement leaks).
+//!
+//! ## Threading and ownership contract
+//!
+//! The request lifecycle is: caller thread → [`Coordinator::submit`]
+//! (bounded channel) → **engine thread** (router + batcher) → compiled
+//! model → per-request reply channel. Three rules keep this sound:
+//!
+//! 1. **The engine is thread-confined.** The `engine_factory` runs on the
+//!    engine thread and the resulting [`InferenceEngine`] never crosses a
+//!    thread boundary afterwards; only the factory itself must be `Send`.
+//!    Models may therefore use interior mutability freely (the plan
+//!    backend's preallocated [`plan::ExecBuffers`](crate::runtime::plan::ExecBuffers)
+//!    lock is uncontended by construction).
+//! 2. **Data-parallel workers are scoped.** The blocked GEMM behind the
+//!    plan backend ([`crate::blas::block_gemm`]) fans its M-panel loop
+//!    out over `std::thread::scope` workers *inside* a `dot`; they join
+//!    before the call returns, so from the coordinator's point of view
+//!    `run()` is still a synchronous, single-threaded call and shutdown
+//!    ordering (`Msg::Shutdown` → flush → join) is unchanged.
+//! 3. **Responses are owned, requests are moved.** A request's payload
+//!    moves into the engine thread; the reply channel is the only route
+//!    back. Nothing on the hot path is shared mutable state except the
+//!    atomic [`CoordStats`] counters.
 
 use crate::error::Result;
 use crate::metrics::{Counter, Histogram};

@@ -22,6 +22,59 @@ pub fn pack_panel_f64(a: &[f64], lda: usize, k: usize) -> Vec<f64> {
     out
 }
 
+/// Pack an A micropanel for the blocked f32 GEMM (`blas::block_gemm`):
+/// rows `i0 .. i0+rows` × columns `k0 .. k0+kc` of a row-major `a` with
+/// row stride `lda`, transposed into the column-panel layout the paper's
+/// kernels consume — column `p` stored as `mr` consecutive elements at
+/// `out[p*mr ..]` (`out[p*mr + i] = a[(i0+i)*lda + k0+p]`). Rows past
+/// `rows` (the m-tail of a partial panel) are zero-filled so the
+/// microkernel never branches; `out` must hold `kc*mr` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panel_f32(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(rows <= mr && out.len() >= kc * mr);
+    for p in 0..kc {
+        let col = &mut out[p * mr..(p + 1) * mr];
+        for (i, slot) in col.iter_mut().enumerate() {
+            *slot = if i < rows { a[(i0 + i) * lda + k0 + p] } else { 0.0 };
+        }
+    }
+}
+
+/// Pack a B micropanel for the blocked f32 GEMM: rows `k0 .. k0+kc` ×
+/// columns `j0 .. j0+cols` of a row-major `b` with row stride `ldb`, kept
+/// row-major per step — row `p` stored as `nr` consecutive elements at
+/// `out[p*nr ..]` (`out[p*nr + j] = b[(k0+p)*ldb + j0+j]`). Columns past
+/// `cols` (the n-tail) are zero-filled; `out` must hold `kc*nr` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panel_f32(
+    b: &[f32],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(cols <= nr && out.len() >= kc * nr);
+    for p in 0..kc {
+        let row = &mut out[p * nr..(p + 1) * nr];
+        let src = &b[(k0 + p) * ldb + j0..];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = if j < cols { src[j] } else { 0.0 };
+        }
+    }
+}
+
 /// Unpack the DGEMM result written by the Figure 6 epilogue into a row-major
 /// `8×8` matrix.
 ///
@@ -111,6 +164,36 @@ mod tests {
         for (i, row) in c.iter().enumerate() {
             for (j, &v) in row.iter().enumerate() {
                 assert_eq!(v, (100 * i + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_panel_transposes_and_pads() {
+        // a: 4 x 6 row-major, a[i][k] = 10*i + k; pack rows 1..4 (3 rows,
+        // mr=4 -> one zero row), columns 2..5 (kc=3)
+        let a: Vec<f32> = (0..4 * 6).map(|x| (10 * (x / 6) + x % 6) as f32).collect();
+        let mut out = vec![f32::NAN; 3 * 4];
+        pack_a_panel_f32(&a, 6, 1, 3, 2, 3, 4, &mut out);
+        for p in 0..3 {
+            for i in 0..4 {
+                let expect = if i < 3 { (10 * (1 + i) + 2 + p) as f32 } else { 0.0 };
+                assert_eq!(out[p * 4 + i], expect, "(p={p}, i={i})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_panel_copies_and_pads() {
+        // b: 5 x 7 row-major, b[k][j] = 10*k + j; pack rows 1..4 (kc=3),
+        // columns 4..7 (3 cols, nr=4 -> one zero column)
+        let b: Vec<f32> = (0..5 * 7).map(|x| (10 * (x / 7) + x % 7) as f32).collect();
+        let mut out = vec![f32::NAN; 3 * 4];
+        pack_b_panel_f32(&b, 7, 1, 3, 4, 3, 4, &mut out);
+        for p in 0..3 {
+            for j in 0..4 {
+                let expect = if j < 3 { (10 * (1 + p) + 4 + j) as f32 } else { 0.0 };
+                assert_eq!(out[p * 4 + j], expect, "(p={p}, j={j})");
             }
         }
     }

@@ -25,13 +25,18 @@
 //!   Figures 2–3, operand/result bus timing, LSU + cache hierarchy) plus the
 //!   event-based power model used for Figure 12.
 //! * [`blas`] / [`hpl`] — the numerical substrate: reference BLAS, blocked
-//!   GEMM over the simulated kernels, and an HPL (LU) driver for Figure 10.
+//!   GEMM over the simulated kernels, the panel-packed multithreaded
+//!   serving GEMM ([`blas::block_gemm`]), and an HPL (LU) driver for
+//!   Figure 10.
 //! * [`runtime`] — the native serving runtime: loads the AOT-compiled
 //!   JAX artifacts (`artifacts/*.hlo.txt`) produced by
-//!   `python/compile/aot.py` and executes them with the in-crate HLO-text
-//!   interpreter ([`runtime::hlo`]) over the `blas` substrate, behind the
-//!   pluggable [`runtime::EngineBackend`] trait. The former PJRT/XLA FFI
-//!   is gone — the whole request path is self-hosted rust.
+//!   `python/compile/aot.py`, parses the HLO text ([`runtime::hlo`]), and
+//!   by default **compiles** it into an execution plan
+//!   ([`runtime::plan`]: preallocated buffer arena + blocked parallel
+//!   GEMM) behind the pluggable [`runtime::EngineBackend`] trait; the
+//!   legacy per-request interpreter remains as the numerics oracle. The
+//!   former PJRT/XLA FFI is gone — the whole request path is self-hosted
+//!   rust.
 //! * [`coordinator`] — the "data-in-flight business analytics" serving layer
 //!   of §I: request router + dynamic batcher over the native runtime.
 //! * [`rt`], [`cli`], [`error`], [`testkit`], [`benchkit`], [`metrics`] —

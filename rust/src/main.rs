@@ -9,7 +9,10 @@
 //! * `asm` / `disasm` — the Power ISA MMA assembler/disassembler;
 //! * `serve` — start the analytics coordinator on the AOT artifacts
 //!   (materializing the embedded set when the directory is empty) and run
-//!   a self-test load on the native HLO-interpreter backend;
+//!   a self-test load on the native plan backend;
+//! * `bench serve` — measure compiled-plan execution vs the legacy
+//!   interpreter walk and blocked vs reference GEMM across worker counts,
+//!   emitting a machine-readable `BENCH_runtime.json`;
 //! * `gen-artifacts` — write the embedded AOT artifact set to disk.
 
 use power_mma::benchkit::f2;
@@ -34,6 +37,7 @@ fn main() {
         Some("asm") => cmd_asm(&args[1..]),
         Some("disasm") => cmd_disasm(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("gen-artifacts") => cmd_gen_artifacts(&args[1..]),
         _ => {
             eprintln!(
@@ -48,6 +52,7 @@ fn main() {
                  \x20 asm       assemble MMA assembly to bytes\n\
                  \x20 disasm    disassemble bytes to MMA assembly\n\
                  \x20 serve     serve the AOT models and run a self-test load\n\
+                 \x20 bench     runtime benchmarks (bench serve -> BENCH_runtime.json)\n\
                  \x20 gen-artifacts  write the embedded AOT artifact set to disk\n\n\
                  run `power-mma <command> --help` for options"
             );
@@ -280,13 +285,15 @@ fn cmd_disasm(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
-    use power_mma::runtime::{artifacts, det_input, Runtime};
+    use power_mma::runtime::{artifacts, det_input, HloPlanBackend, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
-        .opt("requests", Some("1000"), "self-test request count");
+        .opt("requests", Some("1000"), "self-test request count")
+        .opt("threads", Some("0"), "GEMM worker cap for the plan backend (0 = auto)");
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
     let n_req = m.get_usize("requests").unwrap();
+    let threads = m.get_usize("threads").unwrap();
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -299,7 +306,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     let coord = Coordinator::start(cfg, weights, move || {
-        let mut rt = Runtime::cpu(&dir)?;
+        let backend = if threads == 0 {
+            HloPlanBackend::new()
+        } else {
+            HloPlanBackend::with_threads(threads)
+        };
+        let mut rt = Runtime::with_backend(Box::new(backend), &dir);
         let names = rt.load_all()?;
         eprintln!("loaded models: {names:?} on {}", rt.platform());
         Ok(rt)
@@ -328,6 +340,225 @@ fn cmd_serve(args: &[String]) -> i32 {
         stats.mean_batch_occupancy()
     );
     if ok == n_req {
+        0
+    } else {
+        1
+    }
+}
+
+/// HLO text of a single `n×n×n` f32 dot — the synthetic artifact used to
+/// benchmark plan-vs-interpreter execution at paper-evaluation sizes.
+fn gemm_hlo_text(n: usize) -> String {
+    format!(
+        "HloModule bench_gemm_{n}\n\n\
+         ENTRY main.5 {{\n\
+         \x20 Arg_0.1 = f32[{n},{n}]{{1,0}} parameter(0)\n\
+         \x20 Arg_1.2 = f32[{n},{n}]{{1,0}} parameter(1)\n\
+         \x20 dot.3 = f32[{n},{n}]{{1,0}} dot(Arg_0.1, Arg_1.2), \
+         lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 ROOT tuple.4 = (f32[{n},{n}]{{1,0}}) tuple(dot.3)\n\
+         }}\n"
+    )
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    use power_mma::benchkit::{bench_budget, black_box};
+    use power_mma::blas::block_gemm::{gemm_f32_into, GemmScratch};
+    use power_mma::blas::gemm::ref_gemm;
+    use power_mma::runtime::{
+        artifacts, det_input, det_inputs, CompiledModel, EngineBackend, HloInterpreterBackend,
+        HloPlanBackend, ModelMeta,
+    };
+    use std::time::Duration;
+
+    let cmd = Command::new(
+        "power-mma bench",
+        "runtime benchmarks; emits a machine-readable JSON report",
+    )
+    .opt("out", Some("BENCH_runtime.json"), "output JSON path")
+    .opt("size", Some("512"), "GEMM problem size N (NxNxN)")
+    .opt("threads", Some(""), "worker counts to sweep (default 1,2,...,available)")
+    .opt("budget-ms", Some("400"), "time budget per measurement")
+    .flag("quick", "CI smoke mode (N=128, short budget)")
+    .positional("target", "what to benchmark: serve");
+    let m = parse_or_exit(cmd, args);
+    if m.positional(0) != "serve" {
+        eprintln!("unknown bench target '{}' (only: serve)", m.positional(0));
+        return 2;
+    }
+    let quick = m.flag("quick");
+    let size = if quick { 128 } else { m.get_usize("size").unwrap() };
+    let budget = Duration::from_millis(if quick { 60 } else { m.get_u64("budget-ms").unwrap() });
+    let avail = HloPlanBackend::default_threads();
+    let threads: Vec<usize> = if m.get("threads").is_empty() {
+        let mut t = vec![1usize];
+        while *t.last().unwrap() * 2 <= avail {
+            t.push(t.last().unwrap() * 2);
+        }
+        if *t.last().unwrap() != avail {
+            t.push(avail);
+        }
+        t
+    } else {
+        match m.get_usize_list("threads") {
+            Ok(t) if !t.is_empty() && t.iter().all(|&x| x > 0) => t,
+            _ => {
+                eprintln!("--threads expects a non-empty list of positive integers");
+                return 2;
+            }
+        }
+    };
+
+    // -- 1. raw GEMM: legacy interpreter dot path vs blocked kernel ------
+    let a = det_input(size * size, 1);
+    let b = det_input(size * size, 2);
+    let flops = 2.0 * (size * size * size) as f64;
+    let s_ref = bench_budget("ref_gemm(f64 widen)", budget, || {
+        let af: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
+        let bf: Vec<f64> = b.iter().map(|&v| f64::from(v)).collect();
+        let c = ref_gemm(&af, &bf, size, size, size);
+        black_box(c.len());
+    });
+    let ref_ms = s_ref.median.as_secs_f64() * 1e3;
+    println!(
+        "gemm {size}^3  ref_gemm          {ref_ms:9.2} ms  {:7.2} GFLOP/s",
+        flops / s_ref.median.as_secs_f64() / 1e9
+    );
+    let mut gemm_rows = vec![format!(
+        "{{\"impl\": \"ref_gemm\", \"threads\": 1, \"ms\": {ref_ms:.3}, \"gflops\": {:.3}}}",
+        flops / s_ref.median.as_secs_f64() / 1e9
+    )];
+    let mut c = vec![0f32; size * size];
+    let mut scratch = GemmScratch::new();
+    for &t in &threads {
+        let s = bench_budget(&format!("blocked t={t}"), budget, || {
+            gemm_f32_into(&mut c, &a, &b, size, size, size, t, &mut scratch);
+            black_box(c[0]);
+        });
+        let ms = s.median.as_secs_f64() * 1e3;
+        println!(
+            "gemm {size}^3  blocked {t:2} thread  {ms:9.2} ms  {:7.2} GFLOP/s",
+            flops / s.median.as_secs_f64() / 1e9
+        );
+        gemm_rows.push(format!(
+            "{{\"impl\": \"blocked\", \"threads\": {t}, \"ms\": {ms:.3}, \"gflops\": {:.3}}}",
+            flops / s.median.as_secs_f64() / 1e9
+        ));
+    }
+
+    // -- 2. end-to-end: compiled plan vs legacy interpreter walk ---------
+    let hlo = gemm_hlo_text(size);
+    let meta = ModelMeta {
+        name: format!("bench_gemm_{size}"),
+        input_shapes: vec![vec![size, size], vec![size, size]],
+        output_shape: vec![size, size],
+    };
+    let interp = match HloInterpreterBackend.compile(&meta.name, &hlo, &meta) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("compile (interpreter) failed: {e}");
+            return 1;
+        }
+    };
+    let ins: Vec<&[f32]> = vec![&a, &b];
+    let s_interp = bench_budget("interpreter walk", budget, || {
+        black_box(interp.execute(&ins).expect("interpreter exec").len());
+    });
+    let interp_ms = s_interp.median.as_secs_f64() * 1e3;
+    println!("e2e  {size}^3  interpreter walk  {interp_ms:9.2} ms");
+    let mut plan_rows = Vec::new();
+    let mut best_plan_ms = f64::INFINITY;
+    for &t in &threads {
+        let plan = match HloPlanBackend::with_threads(t).compile(&meta.name, &hlo, &meta) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("compile (plan) failed: {e}");
+                return 1;
+            }
+        };
+        let s = bench_budget(&format!("plan t={t}"), budget, || {
+            black_box(plan.execute(&ins).expect("plan exec").len());
+        });
+        let ms = s.median.as_secs_f64() * 1e3;
+        best_plan_ms = best_plan_ms.min(ms);
+        println!(
+            "e2e  {size}^3  plan {t:2} thread     {ms:9.2} ms  ({:.2}x vs interpreter)",
+            interp_ms / ms
+        );
+        plan_rows.push(format!("{{\"threads\": {t}, \"ms\": {ms:.3}}}"));
+    }
+    let speedup = interp_ms / best_plan_ms;
+
+    // -- 3. embedded fixtures: plan numerics + latency vs interpreter ----
+    let mut fixture_rows = Vec::new();
+    let mut all_identical = true;
+    for art in artifacts::EMBEDDED {
+        let meta = match ModelMeta::parse(art.meta) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{}: bad meta: {e}", art.name);
+                return 1;
+            }
+        };
+        let interp = HloInterpreterBackend.compile(art.name, art.hlo_text, &meta);
+        let plan = HloPlanBackend::new().compile(art.name, art.hlo_text, &meta);
+        let (interp, plan) = match (interp, plan) {
+            (Ok(i), Ok(p)) => (i, p),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("{}: compile failed: {e}", art.name);
+                return 1;
+            }
+        };
+        let inputs = det_inputs(&meta);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let iout = interp.execute(&refs).expect("interpreter exec");
+        let pout = plan.execute(&refs).expect("plan exec");
+        let identical = iout.len() == pout.len()
+            && iout.iter().zip(&pout).all(|(x, y)| x.to_bits() == y.to_bits());
+        all_identical &= identical;
+        let fb = budget.min(Duration::from_millis(100));
+        let si = bench_budget(&format!("{} interp", art.name), fb, || {
+            black_box(interp.execute(&refs).expect("exec").len());
+        });
+        let sp = bench_budget(&format!("{} plan", art.name), fb, || {
+            black_box(plan.execute(&refs).expect("exec").len());
+        });
+        let (ims, pms) = (si.median.as_secs_f64() * 1e3, sp.median.as_secs_f64() * 1e3);
+        println!(
+            "fixture {:<10} interpreter {ims:8.3} ms | plan {pms:8.3} ms | numerics {}",
+            art.name,
+            if identical { "identical" } else { "DIFFER" }
+        );
+        fixture_rows.push(format!(
+            "{{\"name\": \"{}\", \"identical\": {identical}, \"interpreter_ms\": {ims:.4}, \"plan_ms\": {pms:.4}}}",
+            art.name
+        ));
+    }
+
+    // -- 4. machine-readable report --------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"runtime\",\n  \"quick\": {quick},\n  \"size\": {size},\n  \
+         \"threads_available\": {avail},\n  \"threads_swept\": {threads:?},\n  \
+         \"gemm\": [\n    {}\n  ],\n  \
+         \"plan_vs_interpreter\": {{\"size\": {size}, \"interpreter_ms\": {interp_ms:.3}, \
+         \"plan\": [\n    {}\n  ], \"speedup_best\": {speedup:.3}}},\n  \
+         \"fixtures\": [\n    {}\n  ],\n  \
+         \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
+         \"pass\": {}, \"numerics_identical\": {all_identical}}}\n}}\n",
+        gemm_rows.join(",\n    "),
+        plan_rows.join(",\n    "),
+        fixture_rows.join(",\n    "),
+        speedup >= 3.0
+    );
+    let out_path = m.get("out");
+    if let Err(e) = std::fs::write(out_path, &json) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    }
+    println!(
+        "\nplan-vs-interpreter best speedup: {speedup:.2}x (numerics identical: {all_identical})\nwrote {out_path}"
+    );
+    if all_identical {
         0
     } else {
         1

@@ -56,27 +56,29 @@ impl Tensor {
     }
 }
 
-/// One parsed HLO instruction of the entry computation.
+/// One parsed HLO instruction of the entry computation. Shared with the
+/// plan compiler ([`super::plan`]), which lowers the same instruction
+/// list into a preallocated execution plan.
 #[derive(Clone, Debug)]
-struct Instr {
-    name: String,
-    opcode: String,
-    dtype: DType,
-    dims: Vec<usize>,
+pub(crate) struct Instr {
+    pub(crate) name: String,
+    pub(crate) opcode: String,
+    pub(crate) dtype: DType,
+    pub(crate) dims: Vec<usize>,
     /// Operand indices into the instruction list (resolved after parse).
-    operands: Vec<usize>,
+    pub(crate) operands: Vec<usize>,
     /// `parameter(N)` index.
-    param: usize,
+    pub(crate) param: usize,
     /// `dimensions={…}` attribute (broadcast).
-    dims_attr: Option<Vec<usize>>,
+    pub(crate) dims_attr: Option<Vec<usize>>,
     /// `lhs_contracting_dims={…}` / `rhs_contracting_dims={…}` (dot).
-    lhs_contracting: Option<usize>,
-    rhs_contracting: Option<usize>,
+    pub(crate) lhs_contracting: Option<usize>,
+    pub(crate) rhs_contracting: Option<usize>,
     /// `slice={[start:stop(:stride)], …}` attribute.
-    slice_bounds: Option<Vec<(usize, usize, usize)>>,
+    pub(crate) slice_bounds: Option<Vec<(usize, usize, usize)>>,
     /// Literal payload of `constant(…)`.
-    const_vals: Vec<f32>,
-    is_root: bool,
+    pub(crate) const_vals: Vec<f32>,
+    pub(crate) is_root: bool,
 }
 
 /// A parsed HLO module: the entry computation as a topologically-ordered
@@ -84,7 +86,7 @@ struct Instr {
 pub struct HloModule {
     /// Module name from the `HloModule` header line.
     pub name: String,
-    instrs: Vec<Instr>,
+    pub(crate) instrs: Vec<Instr>,
     /// Number of distinct `parameter(N)` instructions.
     num_params: usize,
 }

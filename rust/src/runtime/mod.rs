@@ -3,20 +3,29 @@
 //! outputs) and executes them entirely in-crate.
 //!
 //! The former `xla::PjRt*` FFI is gone.  Execution goes through the
-//! [`EngineBackend`] trait; the default backend is the native
-//! [`hlo::HloModule`] interpreter running over the `blas` substrate, so
-//! `coordinator`, `serve`, and the integration tests have **zero external
-//! dependencies** and the whole request path is observable, testable
-//! rust.  A future accelerated backend (e.g. one lowering `dot` onto the
-//! simulated MMA kernels, or a real PJRT client) plugs in behind the same
-//! trait via [`Runtime::with_backend`].
+//! [`EngineBackend`] trait. The default backend ([`HloPlanBackend`],
+//! behind [`Runtime::cpu`]) **compiles** each artifact once at `load()`
+//! into a [`plan::Plan`] — a topologically-ordered step list over a
+//! preallocated, liveness-reusing buffer arena — and executes requests
+//! against the plan, with `dot` on the blocked parallel GEMM of
+//! [`crate::blas::block_gemm`].  The legacy [`HloInterpreterBackend`]
+//! (per-request walk of [`hlo::HloModule::evaluate`] over `ref_gemm`) is
+//! kept as the numerics oracle and for `power-mma bench serve`
+//! comparisons; both produce bit-identical results on the artifact set.
+//! Either way the whole request path is zero-external-dependency,
+//! observable, testable rust, and other backends (e.g. one lowering onto
+//! the simulated MMA kernels, or a real PJRT client) plug in behind the
+//! same trait via [`Runtime::with_backend`].
 //!
 //! The coordinator still runs a [`Runtime`] on a dedicated engine thread;
 //! backends are constructed *inside* that thread via a factory, so
-//! thread-confined backends remain possible.
+//! thread-confined backends remain possible. The plan backend's GEMM
+//! workers are *scoped* threads that join within each `dot`, so nothing
+//! escapes the engine thread.
 
 pub mod artifacts;
 pub mod hlo;
+pub mod plan;
 
 use crate::error::{Context, Result};
 use crate::{bail, err};
@@ -80,7 +89,35 @@ pub trait EngineBackend {
     ) -> Result<Box<dyn CompiledModel>>;
 }
 
-/// The native backend: parses HLO text and interprets it over `blas`.
+/// Parse an artifact's HLO text and cross-check it against the meta line
+/// (parameter count and element counts) — shared by every backend.
+fn parse_and_validate(name: &str, hlo_text: &str, meta: &ModelMeta) -> Result<hlo::HloModule> {
+    let module = hlo::HloModule::parse(hlo_text)
+        .map_err(|e| e.context(format!("parsing HLO for {name}")))?;
+    if module.num_parameters() != meta.input_shapes.len() {
+        bail!(
+            "{name}: HLO has {} parameters, meta declares {} inputs",
+            module.num_parameters(),
+            meta.input_shapes.len()
+        );
+    }
+    for (i, shape) in meta.input_shapes.iter().enumerate() {
+        let hlo_len: usize = module
+            .parameter_dims(i)
+            .ok_or_else(|| err!("{name}: HLO is missing parameter {i}"))?
+            .iter()
+            .product();
+        let meta_len: usize = shape.iter().product();
+        if hlo_len != meta_len {
+            bail!("{name}: parameter {i} has {hlo_len} elements in HLO, {meta_len} in meta");
+        }
+    }
+    Ok(module)
+}
+
+/// The legacy native backend: parses HLO text and re-interprets it per
+/// request over `blas` (`ref_gemm`). Kept as the numerics oracle and the
+/// baseline side of `power-mma bench serve`.
 pub struct HloInterpreterBackend;
 
 impl EngineBackend for HloInterpreterBackend {
@@ -94,26 +131,7 @@ impl EngineBackend for HloInterpreterBackend {
         hlo_text: &str,
         meta: &ModelMeta,
     ) -> Result<Box<dyn CompiledModel>> {
-        let module = hlo::HloModule::parse(hlo_text)
-            .map_err(|e| e.context(format!("parsing HLO for {name}")))?;
-        if module.num_parameters() != meta.input_shapes.len() {
-            bail!(
-                "{name}: HLO has {} parameters, meta declares {} inputs",
-                module.num_parameters(),
-                meta.input_shapes.len()
-            );
-        }
-        for (i, shape) in meta.input_shapes.iter().enumerate() {
-            let hlo_len: usize = module
-                .parameter_dims(i)
-                .ok_or_else(|| err!("{name}: HLO is missing parameter {i}"))?
-                .iter()
-                .product();
-            let meta_len: usize = shape.iter().product();
-            if hlo_len != meta_len {
-                bail!("{name}: parameter {i} has {hlo_len} elements in HLO, {meta_len} in meta");
-            }
-        }
+        let module = parse_and_validate(name, hlo_text, meta)?;
         Ok(Box::new(InterpretedModel { module }))
     }
 }
@@ -126,6 +144,82 @@ impl CompiledModel for InterpretedModel {
     fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let outputs = self.module.evaluate(inputs)?;
         // aot.py lowers with return_tuple=True -> 1-tuple
+        let first = outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?;
+        Ok(first.data)
+    }
+}
+
+/// The default serving backend: lowers each artifact once at `load()`
+/// into a compiled [`plan::Plan`] (preallocated buffer arena, blocked
+/// parallel GEMM) and executes requests against the plan. Bit-identical
+/// to [`HloInterpreterBackend`] on finite inputs, several times faster
+/// on GEMM-heavy artifacts (measure with `power-mma bench serve`).
+pub struct HloPlanBackend {
+    threads: usize,
+}
+
+impl HloPlanBackend {
+    /// The default GEMM worker cap: `std::thread::available_parallelism()`
+    /// clamped to 16 — the single source of the policy, shared with
+    /// `power-mma bench serve`'s thread sweep.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).min(16)
+    }
+
+    /// Plan backend with the worker cap of [`HloPlanBackend::default_threads`].
+    pub fn new() -> HloPlanBackend {
+        HloPlanBackend { threads: HloPlanBackend::default_threads() }
+    }
+
+    /// Plan backend with an explicit GEMM worker cap (1 = fully serial).
+    pub fn with_threads(threads: usize) -> HloPlanBackend {
+        HloPlanBackend { threads: threads.max(1) }
+    }
+
+    /// The configured GEMM worker cap.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for HloPlanBackend {
+    fn default() -> Self {
+        HloPlanBackend::new()
+    }
+}
+
+impl EngineBackend for HloPlanBackend {
+    fn name(&self) -> &'static str {
+        "native-hlo-plan"
+    }
+
+    fn compile(
+        &self,
+        name: &str,
+        hlo_text: &str,
+        meta: &ModelMeta,
+    ) -> Result<Box<dyn CompiledModel>> {
+        let module = parse_and_validate(name, hlo_text, meta)?;
+        let plan = plan::Plan::compile(&module)
+            .map_err(|e| e.context(format!("compiling plan for {name}")))?;
+        let bufs = std::sync::Mutex::new(plan.new_buffers());
+        Ok(Box::new(PlanModel { plan, bufs, threads: self.threads }))
+    }
+}
+
+/// A plan plus its preallocated buffers. The buffers sit behind a
+/// `Mutex` only to satisfy the `&self` execute contract; on the
+/// coordinator's thread-confined engine the lock is always uncontended.
+struct PlanModel {
+    plan: plan::Plan,
+    bufs: std::sync::Mutex<plan::ExecBuffers>,
+    threads: usize,
+}
+
+impl CompiledModel for PlanModel {
+    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let mut bufs = self.bufs.lock().unwrap_or_else(|p| p.into_inner());
+        let outputs = self.plan.execute_into(&mut bufs, inputs, self.threads)?;
         let first = outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?;
         Ok(first.data)
     }
@@ -145,11 +239,11 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Runtime over an artifact directory with the native HLO-interpreter
+    /// Runtime over an artifact directory with the default native plan
     /// backend (the name is historical: this was the PJRT *CPU* client).
     /// Does not load anything yet.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        Ok(Runtime::with_backend(Box::new(HloInterpreterBackend), artifact_dir))
+        Ok(Runtime::with_backend(Box::new(HloPlanBackend::new()), artifact_dir))
     }
 
     /// Runtime over an artifact directory with an explicit backend.
@@ -298,7 +392,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         artifacts::write_artifacts(&dir).unwrap();
         let mut rt = Runtime::cpu(&dir).unwrap();
-        assert_eq!(rt.platform(), "native-hlo-interpreter");
+        assert_eq!(rt.platform(), "native-hlo-plan");
         let names = rt.load_all().unwrap();
         assert!(names.contains(&"gemm_f32".to_string()));
         assert!(rt.loaded().contains(&"gemm_f32"));

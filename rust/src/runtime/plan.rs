@@ -1,0 +1,723 @@
+//! Compiled execution plans: **compile once at `load()`, don't interpret
+//! per request.**
+//!
+//! The legacy path ([`HloModule::evaluate`](super::hlo::HloModule::evaluate))
+//! re-walks the instruction list on every request, re-deriving shapes,
+//! strides, and operand checks, and allocating a fresh tensor per
+//! instruction. This module lowers a parsed [`HloModule`] **once** into a
+//! [`Plan`]:
+//!
+//! * every shape/attribute/operand check happens at compile time, so a
+//!   malformed artifact fails at `load()` and the request path is
+//!   branch-light;
+//! * `broadcast`/`slice` are lowered to precomputed affine **gather**
+//!   specs (base + per-axis stride coefficients), `reshape`/`convert`
+//!   to flat copies, `dot` to the blocked parallel GEMM of
+//!   [`crate::blas::block_gemm`];
+//! * intermediate values live in a **preallocated buffer arena** with
+//!   liveness-based slot reuse: a slot is recycled as soon as its value's
+//!   last consumer has executed, and an instruction's output slot is
+//!   never a slot of a still-live value (no aliasing, see
+//!   [`Plan::assignments`]). Executing a request performs **no
+//!   per-request allocation** beyond the returned output tensors — the
+//!   arena, the GEMM `f64` accumulation image, and the packed-panel
+//!   buffers are all owned by [`ExecBuffers`] and reused.
+//!
+//! Numerics are **bit-identical** to the interpreter walk on finite
+//! inputs: elementwise ops use the same scalar functions, gathers compute
+//! the same index arithmetic, and the blocked GEMM carries the same
+//! ascending-`k` `f64` accumulation as the interpreter's
+//! [`ref_gemm`](crate::blas::gemm::ref_gemm) path (the contract is tested
+//! per fixture).
+//!
+//! Threading: [`Plan::execute_into`] takes a worker cap; each `dot`
+//! decides via [`threads_for`] whether to fan its M-panel loop out over
+//! scoped threads. Workers never outlive the call, so a plan is safe to
+//! drive from the coordinator's thread-confined engine thread.
+
+use super::hlo::{bf16_round, DType, HloModule, Tensor};
+use crate::blas::block_gemm::{gemm_f32_into, threads_for, GemmScratch};
+use crate::error::Result;
+use crate::{bail, err};
+
+/// Elementwise operator of a [`Plan`] step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BinOp {
+    Add,
+    Multiply,
+    Maximum,
+}
+
+/// Precomputed affine gather: `out[flat] = src[base + Σ_d ((flat /
+/// ostrides[d]) % odims[d]) · coefs[d]]` — the compile-time form of both
+/// `broadcast` (base 0, coefficients from the `dimensions` attribute) and
+/// `slice` (base/coefficients from the slice bounds).
+#[derive(Clone, Debug)]
+struct GatherSpec {
+    base: usize,
+    odims: Vec<usize>,
+    ostrides: Vec<usize>,
+    coefs: Vec<usize>,
+    len: usize,
+}
+
+/// One compiled step of a [`Plan`]. Slot indices refer to the arena of
+/// [`ExecBuffers`].
+#[derive(Clone, Debug)]
+enum Step {
+    /// Copy entry input `index` (validated to `len` elements) into `out`.
+    Param { index: usize, len: usize, out: usize },
+    /// Flat copy (`reshape`, f32 `convert`).
+    Copy { src: usize, len: usize, out: usize },
+    /// bf16 round-to-nearest-even of every element (`convert` to bf16).
+    Bf16 { src: usize, len: usize, out: usize },
+    /// Elementwise binary op over equal-shaped operands.
+    Binary { op: BinOp, a: usize, b: usize, len: usize, out: usize },
+    /// `[m,k] × [k,n]` matmul on the blocked parallel GEMM.
+    Dot { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize },
+    /// Affine gather (`broadcast` / `slice`).
+    Gather { src: usize, out: usize, spec: GatherSpec },
+}
+
+/// One instruction's arena assignment — exposed so tests and tools can
+/// audit the allocator (see the no-aliasing invariant on
+/// [`Plan::assignments`]).
+#[derive(Clone, Debug)]
+pub struct SlotAssign {
+    /// Index of the instruction in the entry computation.
+    pub instr: usize,
+    /// HLO instruction name (for diagnostics).
+    pub name: String,
+    /// Arena slot the value was assigned.
+    pub slot: usize,
+    /// Value size in elements.
+    pub elems: usize,
+    /// Instruction index at which the value is defined.
+    pub def: usize,
+    /// Instruction index of the last consumer (`usize::MAX` when the
+    /// value is a request output and stays live to the end).
+    pub last_use: usize,
+}
+
+/// A compiled execution plan: topologically-ordered steps over a
+/// preallocated buffer arena. Build with [`Plan::compile`], execute with
+/// [`Plan::execute_into`] against reusable [`ExecBuffers`].
+pub struct Plan {
+    steps: Vec<Step>,
+    /// Constant payloads baked into their slots at buffer creation;
+    /// their slots are pinned (never recycled, never rewritten).
+    consts: Vec<(usize, Vec<f32>)>,
+    slot_caps: Vec<usize>,
+    /// Output values: `(slot, dims)` per ROOT (tuple) element.
+    root: Vec<(usize, Vec<usize>)>,
+    num_params: usize,
+    assigns: Vec<SlotAssign>,
+    /// Largest `m`/`n`/`k` over all dot steps (sizes the GEMM scratch).
+    max_dot: (usize, usize, usize),
+}
+
+/// Reusable per-model execution state: the arena slots plus the GEMM
+/// scratch. One `ExecBuffers` serves any number of sequential requests
+/// with no allocation; create with [`Plan::new_buffers`].
+pub struct ExecBuffers {
+    slots: Vec<Vec<f32>>,
+    scratch: GemmScratch,
+}
+
+fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for d in (0..dims.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * dims[d + 1];
+    }
+    s
+}
+
+/// Pick an arena slot of at least `want` elements: best-fit from the free
+/// list, else grow the largest free slot, else open a new slot.
+fn alloc_slot(want: usize, caps: &mut Vec<usize>, free: &mut Vec<usize>) -> usize {
+    let best = free
+        .iter()
+        .enumerate()
+        .filter(|&(_, &s)| caps[s] >= want)
+        .min_by_key(|&(_, &s)| caps[s])
+        .map(|(p, _)| p);
+    if let Some(p) = best {
+        return free.swap_remove(p);
+    }
+    let largest = free.iter().enumerate().max_by_key(|&(_, &s)| caps[s]).map(|(p, _)| p);
+    if let Some(p) = largest {
+        let s = free.swap_remove(p);
+        caps[s] = want;
+        return s;
+    }
+    caps.push(want);
+    caps.len() - 1
+}
+
+impl Plan {
+    /// Lower a parsed module into an execution plan, performing every
+    /// shape/attribute/operand validation the interpreter would do per
+    /// request. Fails on anything outside the serving op set.
+    pub fn compile(module: &HloModule) -> Result<Plan> {
+        let instrs = &module.instrs;
+        let n = instrs.len();
+
+        // -- liveness: last consumer of every value ----------------------
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (i, ins) in instrs.iter().enumerate() {
+            for &op in &ins.operands {
+                last_use[op] = last_use[op].max(i);
+            }
+        }
+        let mut root_ids: Vec<usize> = Vec::new();
+        for (i, ins) in instrs.iter().enumerate() {
+            if ins.is_root {
+                root_ids = if ins.opcode == "tuple" { ins.operands.clone() } else { vec![i] };
+            }
+        }
+        if root_ids.is_empty() {
+            bail!("entry computation has no ROOT instruction");
+        }
+        for &r in &root_ids {
+            last_use[r] = usize::MAX;
+        }
+
+        // -- lower instructions, assigning arena slots -------------------
+        let mut slot_caps: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut slot_of: Vec<Option<usize>> = vec![None; n];
+        let mut pinned: Vec<bool> = vec![false; n];
+        let mut steps: Vec<Step> = Vec::new();
+        let mut consts: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut assigns: Vec<SlotAssign> = Vec::new();
+        let mut max_dot = (0usize, 0usize, 0usize);
+
+        for (i, ins) in instrs.iter().enumerate() {
+            if ins.dtype == DType::Other {
+                bail!("{}: unsupported element type", ins.name);
+            }
+            if ins.opcode == "tuple" {
+                if !ins.is_root {
+                    bail!("{}: tuple is only supported as ROOT", ins.name);
+                }
+                continue;
+            }
+            let want: usize = ins.dims.iter().product();
+            let need = match ins.opcode.as_str() {
+                "dot" | "add" | "multiply" | "maximum" => 2,
+                "convert" | "reshape" | "broadcast" | "slice" => 1,
+                _ => 0,
+            };
+            if ins.operands.len() < need {
+                bail!(
+                    "{}: {} needs {need} operand(s), got {}",
+                    ins.name,
+                    ins.opcode,
+                    ins.operands.len()
+                );
+            }
+            for j in 0..need {
+                if slot_of[ins.operands[j]].is_none() {
+                    bail!("{}: operand has no value (tuple operand?)", ins.name);
+                }
+            }
+            // Constants are baked into their slot when buffers are
+            // created, so they are live from step 0 of *every* request:
+            // they get a dedicated slot outside the recycling pool (a
+            // recycled slot would be clobbered by whichever earlier step
+            // previously owned it).
+            let is_const = ins.opcode == "constant";
+            let out = if is_const {
+                slot_caps.push(want);
+                slot_caps.len() - 1
+            } else {
+                alloc_slot(want, &mut slot_caps, &mut free)
+            };
+            slot_of[i] = Some(out);
+            assigns.push(SlotAssign {
+                instr: i,
+                name: ins.name.clone(),
+                slot: out,
+                elems: want,
+                def: if is_const { 0 } else { i },
+                last_use: if is_const { usize::MAX } else { last_use[i] },
+            });
+
+            match ins.opcode.as_str() {
+                "parameter" => {
+                    steps.push(Step::Param { index: ins.param, len: want, out });
+                }
+                "constant" => {
+                    if ins.const_vals.len() != want {
+                        bail!(
+                            "{}: constant has {} literals, shape wants {want}",
+                            ins.name,
+                            ins.const_vals.len()
+                        );
+                    }
+                    pinned[i] = true;
+                    consts.push((out, ins.const_vals.clone()));
+                }
+                "convert" => {
+                    let srclen: usize = instrs[ins.operands[0]].dims.iter().product();
+                    if srclen != want {
+                        bail!(
+                            "{}: convert operand has {srclen} elements, shape wants {want}",
+                            ins.name
+                        );
+                    }
+                    let src = slot_of[ins.operands[0]].unwrap();
+                    steps.push(match ins.dtype {
+                        DType::Bf16 => Step::Bf16 { src, len: want, out },
+                        _ => Step::Copy { src, len: want, out },
+                    });
+                }
+                "reshape" => {
+                    let sdims = &instrs[ins.operands[0]].dims;
+                    if sdims.iter().product::<usize>() != want {
+                        bail!(
+                            "{}: reshape {sdims:?} -> {:?} changes element count",
+                            ins.name,
+                            ins.dims
+                        );
+                    }
+                    let src = slot_of[ins.operands[0]].unwrap();
+                    steps.push(Step::Copy { src, len: want, out });
+                }
+                "add" | "multiply" | "maximum" => {
+                    let (a, b) = (&instrs[ins.operands[0]], &instrs[ins.operands[1]]);
+                    if a.dims != b.dims || a.dims != ins.dims {
+                        bail!(
+                            "{}: elementwise shape mismatch {:?} vs {:?} -> {:?}",
+                            ins.name,
+                            a.dims,
+                            b.dims,
+                            ins.dims
+                        );
+                    }
+                    let op = match ins.opcode.as_str() {
+                        "add" => BinOp::Add,
+                        "multiply" => BinOp::Multiply,
+                        _ => BinOp::Maximum,
+                    };
+                    steps.push(Step::Binary {
+                        op,
+                        a: slot_of[ins.operands[0]].unwrap(),
+                        b: slot_of[ins.operands[1]].unwrap(),
+                        len: want,
+                        out,
+                    });
+                }
+                "dot" => {
+                    let (a, b) = (&instrs[ins.operands[0]], &instrs[ins.operands[1]]);
+                    if a.dims.len() != 2 || b.dims.len() != 2 {
+                        bail!(
+                            "{}: only rank-2 dot supported, got {:?} x {:?}",
+                            ins.name,
+                            a.dims,
+                            b.dims
+                        );
+                    }
+                    if ins.lhs_contracting != Some(1) || ins.rhs_contracting != Some(0) {
+                        bail!(
+                            "{}: only lhs_contracting_dims={{1}} rhs_contracting_dims={{0}} supported",
+                            ins.name
+                        );
+                    }
+                    let (m, k) = (a.dims[0], a.dims[1]);
+                    let (k2, nn) = (b.dims[0], b.dims[1]);
+                    if k != k2 {
+                        bail!("{}: contraction mismatch {k} vs {k2}", ins.name);
+                    }
+                    if ins.dims != [m, nn] {
+                        bail!("{}: dot result shape {:?} != [{m},{nn}]", ins.name, ins.dims);
+                    }
+                    max_dot = (max_dot.0.max(m), max_dot.1.max(nn), max_dot.2.max(k));
+                    steps.push(Step::Dot {
+                        a: slot_of[ins.operands[0]].unwrap(),
+                        b: slot_of[ins.operands[1]].unwrap(),
+                        out,
+                        m,
+                        n: nn,
+                        k,
+                    });
+                }
+                "broadcast" => {
+                    let src = &instrs[ins.operands[0]];
+                    let dims_attr = ins.dims_attr.clone().unwrap_or_default();
+                    if dims_attr.len() != src.dims.len() {
+                        bail!(
+                            "{}: broadcast dimensions {:?} do not match source rank {}",
+                            ins.name,
+                            dims_attr,
+                            src.dims.len()
+                        );
+                    }
+                    let nd = ins.dims.len();
+                    let sstrides = row_major_strides(&src.dims);
+                    let mut coefs = vec![0usize; nd];
+                    for (ax, &d) in dims_attr.iter().enumerate() {
+                        if d >= nd {
+                            bail!("{}: broadcast dimension {d} out of range", ins.name);
+                        }
+                        if src.dims[ax] != ins.dims[d] {
+                            bail!(
+                                "{}: broadcast source dim {ax} ({}) != output dim {d} ({})",
+                                ins.name,
+                                src.dims[ax],
+                                ins.dims[d]
+                            );
+                        }
+                        coefs[d] = sstrides[ax];
+                    }
+                    steps.push(Step::Gather {
+                        src: slot_of[ins.operands[0]].unwrap(),
+                        out,
+                        spec: GatherSpec {
+                            base: 0,
+                            odims: ins.dims.clone(),
+                            ostrides: row_major_strides(&ins.dims),
+                            coefs,
+                            len: want,
+                        },
+                    });
+                }
+                "slice" => {
+                    let src = &instrs[ins.operands[0]];
+                    let bounds = ins
+                        .slice_bounds
+                        .as_ref()
+                        .ok_or_else(|| err!("{}: slice without slice attribute", ins.name))?;
+                    if bounds.len() != src.dims.len() {
+                        bail!(
+                            "{}: {} slice bounds for rank-{} source",
+                            ins.name,
+                            bounds.len(),
+                            src.dims.len()
+                        );
+                    }
+                    let nd = src.dims.len();
+                    let sstrides = row_major_strides(&src.dims);
+                    let mut out_dims = Vec::with_capacity(nd);
+                    let mut base = 0usize;
+                    let mut coefs = Vec::with_capacity(nd);
+                    for (d, &(start, stop, stride)) in bounds.iter().enumerate() {
+                        if start > stop || stop > src.dims[d] {
+                            bail!(
+                                "{}: slice bound [{start}:{stop}] out of range for dim {d} ({})",
+                                ins.name,
+                                src.dims[d]
+                            );
+                        }
+                        out_dims.push((stop - start).div_ceil(stride));
+                        base += start * sstrides[d];
+                        coefs.push(stride * sstrides[d]);
+                    }
+                    if out_dims != ins.dims {
+                        bail!(
+                            "{}: slice result {:?} != declared {:?}",
+                            ins.name,
+                            out_dims,
+                            ins.dims
+                        );
+                    }
+                    steps.push(Step::Gather {
+                        src: slot_of[ins.operands[0]].unwrap(),
+                        out,
+                        spec: GatherSpec {
+                            base,
+                            ostrides: row_major_strides(&out_dims),
+                            odims: out_dims,
+                            coefs,
+                            len: want,
+                        },
+                    });
+                }
+                other => bail!(
+                    "{}: unsupported HLO opcode '{other}' (the serving op set is \
+                     parameter/constant/convert/dot/add/multiply/maximum/broadcast/\
+                     reshape/slice/tuple)",
+                    ins.name
+                ),
+            }
+
+            // recycle slots whose values die here (operands last used by
+            // this instruction, or an output nobody consumes). Freed only
+            // *after* the output slot was taken, so an output never
+            // aliases a live operand; pinned (constant) slots never free.
+            for &op in &ins.operands {
+                if last_use[op] == i && !pinned[op] {
+                    if let Some(s) = slot_of[op].take() {
+                        free.push(s);
+                    }
+                }
+            }
+            if last_use[i] == i && !pinned[i] {
+                if let Some(s) = slot_of[i].take() {
+                    free.push(s);
+                }
+            }
+        }
+
+        let mut root = Vec::with_capacity(root_ids.len());
+        for &r in &root_ids {
+            let slot = slot_of[r]
+                .ok_or_else(|| err!("ROOT references a value without storage (nested tuple?)"))?;
+            root.push((slot, instrs[r].dims.clone()));
+        }
+
+        Ok(Plan {
+            steps,
+            consts,
+            slot_caps,
+            root,
+            num_params: module.num_parameters(),
+            assigns,
+            max_dot,
+        })
+    }
+
+    /// Number of compiled steps (≤ instruction count: constants and the
+    /// ROOT tuple are folded away).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Number of arena slots (≤ live values at the widest point, not the
+    /// instruction count — the liveness win).
+    pub fn num_slots(&self) -> usize {
+        self.slot_caps.len()
+    }
+
+    /// Total arena capacity in f32 elements.
+    pub fn arena_elems(&self) -> usize {
+        self.slot_caps.iter().sum()
+    }
+
+    /// Per-slot capacities in f32 elements (slot id is the index).
+    pub fn slot_caps(&self) -> &[usize] {
+        &self.slot_caps
+    }
+
+    /// Entry parameter count the plan expects.
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    /// Per-instruction slot assignments, in program order. Invariants the
+    /// allocator guarantees (and `rust/tests/plan_exec.rs` audits): two
+    /// assignments sharing a slot have disjoint live ranges (the earlier
+    /// value's `last_use` precedes the later value's `def`), and every
+    /// slot's capacity covers every value assigned to it.
+    pub fn assignments(&self) -> &[SlotAssign] {
+        &self.assigns
+    }
+
+    /// Preallocate execution buffers for this plan: all arena slots at
+    /// full capacity, constants baked in, GEMM scratch sized for the
+    /// largest dot. Request execution then allocates nothing.
+    pub fn new_buffers(&self) -> ExecBuffers {
+        let mut slots: Vec<Vec<f32>> = self.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
+        for (slot, data) in &self.consts {
+            slots[*slot][..data.len()].copy_from_slice(data);
+        }
+        let mut scratch = GemmScratch::new();
+        let (m, n, k) = self.max_dot;
+        if m > 0 {
+            // reserve for the default worker cap; a larger explicit cap
+            // grows the per-worker A-panel buffers lazily, once
+            let cap = super::HloPlanBackend::default_threads();
+            scratch.reserve(m, n, k, threads_for(m, n, k, cap));
+        }
+        ExecBuffers { slots, scratch }
+    }
+
+    /// Execute the plan on flat row-major f32 inputs, reusing `bufs`.
+    /// Returns the ROOT tuple elements (the only per-request allocation).
+    /// `threads` caps the worker count of each dot step (see
+    /// [`threads_for`]).
+    pub fn execute_into(
+        &self,
+        bufs: &mut ExecBuffers,
+        inputs: &[&[f32]],
+        threads: usize,
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.num_params {
+            bail!("plan expects {} inputs, got {}", self.num_params, inputs.len());
+        }
+        for step in &self.steps {
+            match step {
+                Step::Param { index, len, out } => {
+                    let data = *inputs
+                        .get(*index)
+                        .ok_or_else(|| err!("missing input {index}"))?;
+                    if data.len() != *len {
+                        bail!("input {index} has {} elements, plan wants {len}", data.len());
+                    }
+                    bufs.slots[*out][..*len].copy_from_slice(data);
+                }
+                Step::Copy { src, len, out } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    o[..*len].copy_from_slice(&bufs.slots[*src][..*len]);
+                    bufs.slots[*out] = o;
+                }
+                Step::Bf16 { src, len, out } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    for (dst, &v) in o[..*len].iter_mut().zip(&bufs.slots[*src][..*len]) {
+                        *dst = bf16_round(v);
+                    }
+                    bufs.slots[*out] = o;
+                }
+                Step::Binary { op, a, b, len, out } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let f: fn(f32, f32) -> f32 = match op {
+                        BinOp::Add => |x, y| x + y,
+                        BinOp::Multiply => |x, y| x * y,
+                        BinOp::Maximum => f32::max,
+                    };
+                    let av = &bufs.slots[*a][..*len];
+                    let bv = &bufs.slots[*b][..*len];
+                    for (dst, (&x, &y)) in o[..*len].iter_mut().zip(av.iter().zip(bv)) {
+                        *dst = f(x, y);
+                    }
+                    bufs.slots[*out] = o;
+                }
+                Step::Dot { a, b, out, m, n, k } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let nthreads = threads_for(*m, *n, *k, threads);
+                    gemm_f32_into(
+                        &mut o[..m * n],
+                        &bufs.slots[*a][..m * k],
+                        &bufs.slots[*b][..k * n],
+                        *m,
+                        *n,
+                        *k,
+                        nthreads,
+                        &mut bufs.scratch,
+                    );
+                    bufs.slots[*out] = o;
+                }
+                Step::Gather { src, out, spec } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let sv = &bufs.slots[*src][..];
+                    let nd = spec.odims.len();
+                    for (flat, slot) in o[..spec.len].iter_mut().enumerate() {
+                        let mut s = spec.base;
+                        for d in 0..nd {
+                            s += (flat / spec.ostrides[d]) % spec.odims[d] * spec.coefs[d];
+                        }
+                        *slot = sv[s];
+                    }
+                    bufs.slots[*out] = o;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.root.len());
+        for (slot, dims) in &self.root {
+            let len: usize = dims.iter().product();
+            out.push(Tensor { dims: dims.clone(), data: bufs.slots[*slot][..len].to_vec() });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: execute with fresh buffers (tests, one-shot tools).
+    pub fn execute(&self, inputs: &[&[f32]], threads: usize) -> Result<Vec<Tensor>> {
+        let mut bufs = self.new_buffers();
+        self.execute_into(&mut bufs, inputs, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"
+HloModule jit_tiny
+
+ENTRY main.5 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.4 = (f32[2,2]{1,0}) tuple(dot.3)
+}
+"#;
+
+    #[test]
+    fn compiles_and_runs_a_dot_module() {
+        let m = HloModule::parse(TINY).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert_eq!(plan.num_params(), 2);
+        assert_eq!(plan.num_steps(), 3, "two params + one dot; ROOT tuple folds away");
+        let a = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let out = plan.execute(&[&a, &b], 1).unwrap();
+        assert_eq!(out[0].dims, vec![2, 2]);
+        assert_eq!(out[0].data, vec![4.0, 5.0, 10.0, 11.0]);
+        // identical to the interpreter walk
+        assert_eq!(out[0].data, m.evaluate(&[&a, &b]).unwrap()[0].data);
+    }
+
+    #[test]
+    fn slot_reuse_shrinks_the_arena() {
+        // a chain of elementwise ops: values die immediately, so the
+        // arena needs far fewer slots than there are instructions
+        let text = r#"
+HloModule jit_chain
+
+ENTRY main {
+  Arg_0.1 = f32[8]{0} parameter(0)
+  add.2 = f32[8]{0} add(Arg_0.1, Arg_0.1)
+  add.3 = f32[8]{0} add(add.2, add.2)
+  add.4 = f32[8]{0} add(add.3, add.3)
+  add.5 = f32[8]{0} add(add.4, add.4)
+  ROOT add.6 = f32[8]{0} add(add.5, add.5)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert!(plan.num_slots() <= 3, "6 values, {} slots", plan.num_slots());
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let out = plan.execute(&[&x], 1).unwrap();
+        let expect: Vec<f32> = x.iter().map(|v| v * 32.0).collect();
+        assert_eq!(out[0].data, expect);
+    }
+
+    #[test]
+    fn constants_survive_slot_recycling_across_requests() {
+        let text = r#"
+HloModule jit_const
+
+ENTRY main {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = f32[2]{0} constant({10, 20})
+  add.3 = f32[2]{0} add(Arg_0.1, constant.2)
+  ROOT multiply.4 = f32[2]{0} multiply(add.3, constant.2)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let mut bufs = plan.new_buffers();
+        for round in 0..3 {
+            let x = [round as f32, -1.0];
+            let out = plan.execute_into(&mut bufs, &[&x], 1).unwrap();
+            let expect = vec![(round as f32 + 10.0) * 10.0, 19.0 * 20.0];
+            assert_eq!(out[0].data, expect, "round {round}");
+        }
+    }
+
+    #[test]
+    fn validates_inputs_at_execute() {
+        let m = HloModule::parse(TINY).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert!(plan.execute(&[&[0.0; 6][..]], 1).is_err(), "missing input");
+        assert!(plan.execute(&[&[0.0; 5][..], &[0.0; 6][..]], 1).is_err(), "wrong length");
+    }
+
+    #[test]
+    fn rejects_unsupported_opcodes_at_compile() {
+        let text = "ENTRY main {\n  Arg_0.1 = f32[2]{0} parameter(0)\n  ROOT neg.2 = f32[2]{0} negate(Arg_0.1)\n}\n";
+        let m = HloModule::parse(text).unwrap();
+        let e = Plan::compile(&m).unwrap_err().to_string();
+        assert!(e.contains("unsupported HLO opcode"), "{e}");
+    }
+}

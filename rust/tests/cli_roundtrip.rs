@@ -2,7 +2,7 @@
 //! through the real executable (`CARGO_BIN_EXE_*`): the `asm`/`disasm`
 //! round trip over the paper's Figure 7 object-code listing, the
 //! `gen-artifacts` writer, and a small `serve` self-test load on the
-//! native HLO-interpreter backend.
+//! native plan backend.
 
 use power_mma::isa::encode::FIG7_WORDS;
 use std::io::Write;

@@ -1,0 +1,177 @@
+//! Plan-compiler coverage over the real embedded artifacts: compiled
+//! [`Plan`] execution must be **bit-identical** to the legacy interpreter
+//! walk on every fixture (the acceptance bar for the compiled serving
+//! path), the buffer arena must never alias two live values, and buffer
+//! reuse across requests must be stateless.
+
+use power_mma::runtime::hlo::HloModule;
+use power_mma::runtime::plan::Plan;
+use power_mma::runtime::{artifacts, det_inputs, ModelMeta};
+use power_mma::testkit::Rng;
+
+fn fixture_plans() -> Vec<(&'static str, HloModule, Plan, ModelMeta)> {
+    artifacts::EMBEDDED
+        .iter()
+        .map(|a| {
+            let module = HloModule::parse(a.hlo_text).expect(a.name);
+            let plan = Plan::compile(&module).expect(a.name);
+            let meta = ModelMeta::parse(a.meta).expect(a.name);
+            (a.name, module, plan, meta)
+        })
+        .collect()
+}
+
+fn assert_bitwise_eq(name: &str, what: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{name}: {what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{name}: {what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Property: on every embedded fixture, for deterministic and randomized
+/// inputs and any thread count, plan execution equals the interpreter
+/// walk bit for bit.
+#[test]
+fn plan_matches_interpreter_on_every_fixture() {
+    let mut rng = Rng::new(0x9a7);
+    for (name, module, plan, meta) in fixture_plans() {
+        let mut bufs = plan.new_buffers();
+        for round in 0..4 {
+            let inputs: Vec<Vec<f32>> = if round == 0 {
+                det_inputs(&meta)
+            } else {
+                meta.input_shapes
+                    .iter()
+                    .map(|s| rng.f32_vec(s.iter().product()))
+                    .collect()
+            };
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let want = module.evaluate(&refs).unwrap();
+            for threads in [1usize, 4] {
+                let got = plan.execute_into(&mut bufs, &refs, threads).unwrap();
+                assert_eq!(got.len(), want.len(), "{name}: output arity");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.dims, w.dims, "{name}: output dims");
+                    let what = format!("round {round} threads {threads}");
+                    assert_bitwise_eq(name, &what, &g.data, &w.data);
+                }
+            }
+        }
+    }
+}
+
+/// The compiled plan must still match the python-side ground truth.
+#[test]
+fn plan_matches_python_expected_outputs() {
+    for (name, _, plan, meta) in fixture_plans() {
+        let art = artifacts::EMBEDDED.iter().find(|a| a.name == name).unwrap();
+        let expect: Vec<f32> = art
+            .expected
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let inputs = det_inputs(&meta);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = &plan.execute(&refs, 2).unwrap()[0];
+        assert_eq!(out.data.len(), expect.len(), "{name}");
+        for (i, (&x, &y)) in out.data.iter().zip(&expect).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-5 + 1e-5 * y.abs(),
+                "{name}: element {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// Allocator invariant: two values assigned the same arena slot have
+/// disjoint live ranges — the earlier value's last use strictly precedes
+/// the later value's definition — and every slot is big enough for every
+/// value it hosts.
+#[test]
+fn arena_never_aliases_two_live_values() {
+    for (name, module, plan, _) in fixture_plans() {
+        let assigns = plan.assignments();
+        assert!(!assigns.is_empty(), "{name}: no assignments");
+        for (ai, a) in assigns.iter().enumerate() {
+            for b in &assigns[ai + 1..] {
+                if a.slot != b.slot {
+                    continue;
+                }
+                let (first, second) = if a.def <= b.def { (a, b) } else { (b, a) };
+                assert!(
+                    first.last_use < second.def,
+                    "{name}: slot {} hosts '{}' (live {}..{}) and '{}' (live {}..{}) concurrently",
+                    a.slot,
+                    first.name,
+                    first.def,
+                    first.last_use,
+                    second.name,
+                    second.def,
+                    second.last_use
+                );
+            }
+        }
+        // capacity covers every hosted value; the arena is genuinely
+        // smaller than one-slot-per-instruction on the big graphs
+        for a in assigns {
+            assert!(
+                plan.slot_caps()[a.slot] >= a.elems,
+                "{name}: slot {} cap {} < value '{}' ({} elems)",
+                a.slot,
+                plan.slot_caps()[a.slot],
+                a.name,
+                a.elems
+            );
+        }
+        assert!(plan.num_slots() <= module.num_instructions(), "{name}");
+        if module.num_instructions() > 50 {
+            assert!(
+                plan.num_slots() * 4 < module.num_instructions(),
+                "{name}: {} slots for {} instructions — liveness reuse broken?",
+                plan.num_slots(),
+                module.num_instructions()
+            );
+        }
+    }
+}
+
+/// Executing through the same buffers must be stateless: interleaving
+/// other requests never changes a request's answer, and results equal a
+/// fresh-buffer run bit for bit.
+#[test]
+fn buffer_reuse_is_stateless_across_requests() {
+    let mut rng = Rng::new(0xeb5);
+    for (name, _, plan, meta) in fixture_plans() {
+        let mk = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            meta.input_shapes.iter().map(|s| rng.f32_vec(s.iter().product())).collect()
+        };
+        let in1 = mk(&mut rng);
+        let in2 = mk(&mut rng);
+        let refs1: Vec<&[f32]> = in1.iter().map(|v| v.as_slice()).collect();
+        let refs2: Vec<&[f32]> = in2.iter().map(|v| v.as_slice()).collect();
+        let fresh1 = plan.execute(&refs1, 1).unwrap();
+        let mut bufs = plan.new_buffers();
+        let first = plan.execute_into(&mut bufs, &refs1, 1).unwrap();
+        let _other = plan.execute_into(&mut bufs, &refs2, 1).unwrap();
+        let again = plan.execute_into(&mut bufs, &refs1, 1).unwrap();
+        for ((f, a), fr) in first.iter().zip(&again).zip(&fresh1) {
+            assert_bitwise_eq(name, "reused-vs-reused", &a.data, &f.data);
+            assert_bitwise_eq(name, "reused-vs-fresh", &f.data, &fr.data);
+        }
+    }
+}
+
+/// Shape validation stays as strict as the interpreter's: wrong input
+/// count and wrong input length are rejected.
+#[test]
+fn plan_validates_request_inputs() {
+    let (_, _, plan, meta) = fixture_plans().remove(0);
+    assert!(plan.execute(&[], 1).is_err(), "missing inputs");
+    let bad = vec![0f32; meta.input_len(0) + 1];
+    let good = vec![0f32; meta.input_len(1)];
+    assert!(plan.execute(&[&bad, &good], 1).is_err(), "wrong length");
+}

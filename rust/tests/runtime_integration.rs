@@ -1,7 +1,7 @@
 //! Integration tests over the real AOT artifacts: rust loads the HLO text
-//! produced by `python/compile/aot.py`, compiles it on the native
-//! HLO-interpreter backend, executes with the shared deterministic inputs,
-//! and checks the numbers against the python-side expected outputs — the
+//! produced by `python/compile/aot.py`, compiles it on the default native
+//! plan backend, executes with the shared deterministic inputs, and
+//! checks the numbers against the python-side expected outputs — the
 //! proof that L2 (JAX serving graphs) → AOT → L3 (rust) compose.
 //!
 //! The artifact set ships embedded in the crate (`runtime::artifacts`),
