@@ -1,7 +1,10 @@
 //! Bench: coordinator serving throughput/latency — the §I data-in-flight
 //! scenario. Uses a synthetic engine (fixed per-batch cost) to isolate
-//! router/batcher overhead, plus the real native HLO-interpreter engine
-//! over the embedded artifacts.
+//! router/batcher overhead, plus the real native **plan** backend
+//! (`Runtime::cpu`: compiled plans + fused blocked GEMM) over the
+//! embedded artifacts. The same end-to-end number is tracked across PRs
+//! by `power-mma bench serve` (the `coordinator` block of
+//! `BENCH_runtime.json`).
 //!
 //! Also sweeps the dynamic-batching knob (batch size), the serving
 //! analogue of the paper's throughput-vs-latency trade.
@@ -65,7 +68,7 @@ fn main() {
     println!("{}", table.render());
     println!("batching amortizes the fixed per-call cost: throughput scales with batch size\n");
 
-    // the real native-HLO engine over the AOT artifacts
+    // the real native engine (plan backend) over the AOT artifacts
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if power_mma::runtime::artifacts::ensure_artifacts(&dir).is_ok() {
         let cfg = CoordinatorConfig::default();
@@ -93,8 +96,8 @@ fn main() {
         let dt = t0.elapsed();
         let stats = coord.shutdown();
         println!(
-            "real native-HLO engine (mlp_b32 serving graph): {n} requests in {dt:.2?} \
-             -> {:.0} req/s, p50 {} us, occupancy {:.1}",
+            "real plan-backend engine (mlp_b32 serving graph, fused epilogues): \
+             {n} requests in {dt:.2?} -> {:.0} req/s, p50 {} us, occupancy {:.1}",
             n as f64 / dt.as_secs_f64(),
             stats.latency.quantile_us(0.5),
             stats.mean_batch_occupancy()

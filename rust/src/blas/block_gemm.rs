@@ -19,15 +19,53 @@
 //!   `Send` requirement leaks to the caller — the threading model is
 //!   compatible with the coordinator's thread-confined engine.
 //!
-//! **Numerics contract:** products and accumulation are carried in `f64`
-//! and every `C` element accumulates its `k` products in strictly
-//! ascending order (the microkernel loads the running `f64` sum before a
-//! `k` block and stores it after), so the result is **bit-identical** to
-//! the `f64`-widened reference path used by the legacy HLO-interpreter
-//! `dot` ([`crate::blas::gemm::ref_gemm`] over converted inputs) on all
-//! finite inputs — tiling, packing, and thread count never change a ULP.
+//! **Numerics contract:** every `C` element accumulates its `k` products
+//! in strictly ascending order (the microkernel loads the running sum
+//! before a `k` block and stores it after), in one of two accumulation
+//! modes that each replicate one interpreter path bit for bit — tiling,
+//! packing, and thread count never change a ULP:
+//!
+//! * [`Accum::F64`] (the `dot` mode): products and sums carried in `f64`,
+//!   one final narrowing store — bit-identical to the `f64`-widened
+//!   reference path of the legacy HLO-interpreter `dot`
+//!   ([`crate::blas::gemm::ref_gemm`] over converted inputs);
+//! * [`Accum::F32`] (the fused-convolution mode): each product rounded to
+//!   `f32` and chained with `f32` adds, the first product *assigned* (so
+//!   even the sign of a zero matches) — bit-identical to the
+//!   interpreter's elementwise `multiply`/`add` sweep over the same tap
+//!   order, which is what the conv rewrite pass of
+//!   [`crate::runtime::plan`] replaces.
+//!
+//! The optional [`Epilogue`] (bias add / bias+relu) runs at the final `C`
+//! writeback, **after** the accumulator is narrowed to `f32` and in `f32`
+//! arithmetic — the same double-rounding the interpreter performs when it
+//! executes the trailing `add`/`maximum` as separate instructions, so
+//! fused and unfused graphs stay bit-identical.
+//!
+//! The B operand is abstracted behind [`PanelB`]: a plain row-major
+//! matrix, or a *virtual* im2col view of a padded image
+//! ([`crate::kernels::pack::Im2colSpec`]) whose shifted windows are
+//! gathered directly into the packed panels — the im2col matrix is never
+//! materialized.
+//!
+//! ```
+//! use power_mma::blas::block_gemm::{gemm_f32_fused_into, Accum, Epilogue, GemmScratch, PanelB};
+//!
+//! // C = relu(A·B + bias) in one pass: the bias add and the relu happen
+//! // at the C-tile writeback, not as extra output-sized sweeps.
+//! let a = [1.0f32, -2.0, 3.0, 4.0]; // 2×2
+//! let b = [1.0f32, 0.0, 0.0, 1.0]; // identity
+//! let bias = [0.5f32, -10.0];
+//! let mut c = [0.0f32; 4];
+//! let mut scratch = GemmScratch::new();
+//! gemm_f32_fused_into(
+//!     &mut c, &a, PanelB::Matrix(&b), 2, 2, 2,
+//!     Accum::F64, Epilogue::BiasRelu(&bias), 1, &mut scratch,
+//! );
+//! assert_eq!(c, [1.5, 0.0, 3.5, 0.0]);
+//! ```
 
-use crate::kernels::pack::{pack_a_panel_f32, pack_b_panel_f32};
+use crate::kernels::pack::{pack_a_panel_f32, pack_b_im2col_f32, pack_b_panel_f32, Im2colSpec};
 
 /// Microkernel register-block rows (the 8 of the paper's `8×8` DGEMM and
 /// `8×16` SGEMM virtual accumulators).
@@ -89,6 +127,86 @@ impl GemmScratch {
     }
 }
 
+/// Accumulation mode of the microkernel — each mode is bit-identical to
+/// one interpreter path (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Accum {
+    /// `f64` products and sums, one final narrowing store (the `dot`
+    /// contract of [`crate::blas::gemm::ref_gemm`]).
+    F64,
+    /// `f32`-rounded products chained with `f32` adds, first product
+    /// assigned (the elementwise multiply/add-sweep contract the conv
+    /// rewrite replaces).
+    F32,
+}
+
+/// Fused post-GEMM epilogue, applied per element at the final `C`
+/// writeback in `f32` (after the accumulator narrows): the compiled form
+/// of the trailing `broadcast+add` / `maximum(0)` instructions the plan
+/// rewrite pass removes. The slices are indexed by output column and
+/// must hold at least `n` elements.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Store `c = (f32)acc` unchanged.
+    None,
+    /// `c = (f32)acc + bias[j]`.
+    Bias(&'a [f32]),
+    /// `c = max((f32)acc + bias[j], 0.0)` — bias add then relu, the
+    /// MLP's fused `dot → add → maximum` tail.
+    BiasRelu(&'a [f32]),
+}
+
+impl Epilogue<'_> {
+    /// Apply the epilogue to one already-narrowed element of column `j`.
+    #[inline]
+    fn apply(&self, v: f32, j: usize) -> f32 {
+        match self {
+            Epilogue::None => v,
+            Epilogue::Bias(bias) => v + bias[j],
+            Epilogue::BiasRelu(bias) => (v + bias[j]).max(0.0),
+        }
+    }
+}
+
+/// Where the packed B panels come from.
+pub enum PanelB<'a> {
+    /// A plain `k×n` row-major matrix (the `dot` path).
+    Matrix(&'a [f32]),
+    /// A virtual `k×n` im2col view over a padded image: row `k` is the
+    /// shifted window `spec.bases[k]` (see
+    /// [`Im2colSpec`](crate::kernels::pack::Im2colSpec)); panels are
+    /// gathered straight from `img`, the matrix is never materialized.
+    Im2col {
+        /// Flat padded image (`Cin·IH·IW` elements).
+        img: &'a [f32],
+        /// The precompiled gather (one base offset per `k` row).
+        spec: &'a Im2colSpec,
+    },
+}
+
+impl PanelB<'_> {
+    /// Pack rows `k0..k0+kc` × columns `j0..j0+cols` into an `nr`-wide
+    /// panel (zero-padded n-tail), whatever the source.
+    #[allow(clippy::too_many_arguments)]
+    fn pack(
+        &self,
+        ldb: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        cols: usize,
+        nr: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            PanelB::Matrix(b) => pack_b_panel_f32(b, ldb, k0, kc, j0, cols, nr, out),
+            PanelB::Im2col { img, spec } => {
+                pack_b_im2col_f32(img, spec, k0, kc, j0, cols, nr, out)
+            }
+        }
+    }
+}
+
 /// Pick the worker count for an `m×n×k` GEMM: at most `max_threads`, at
 /// most one worker per `MR`-row panel, and 1 when the problem is below
 /// [`PAR_FLOP_THRESHOLD`].
@@ -105,7 +223,9 @@ pub fn threads_for(m: usize, n: usize, k: usize, max_threads: usize) -> usize {
 /// contiguous. Exactly `threads` scoped workers are used (clamped to the
 /// number of `MR`-row panels; 1 runs inline without spawning) and joined
 /// before the call returns — callers pick the policy, typically via
-/// [`threads_for`]. See the module docs for the numerics contract.
+/// [`threads_for`]. Shorthand for [`gemm_f32_fused_into`] with a plain
+/// matrix B, `f64` accumulation, and no epilogue; see the module docs for
+/// the numerics contract.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32_into(
     c: &mut [f32],
@@ -117,9 +237,53 @@ pub fn gemm_f32_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    gemm_f32_fused_into(
+        c,
+        a,
+        PanelB::Matrix(b),
+        m,
+        n,
+        k,
+        Accum::F64,
+        Epilogue::None,
+        threads,
+        scratch,
+    );
+}
+
+/// The full fused GEMM: `C = epilogue(A·B)` with a pluggable B-panel
+/// source ([`PanelB`]), accumulation mode ([`Accum`]), and writeback
+/// epilogue ([`Epilogue`]). `c` is `m×n` row-major (fully overwritten),
+/// `a` is `m×k` row-major contiguous. Threading as in
+/// [`gemm_f32_into`]; the epilogue runs on the final single-threaded
+/// narrowing pass, so workers never see it.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_fused_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: PanelB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: Accum,
+    epilogue: Epilogue<'_>,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
     assert_eq!(a.len(), m * k, "A must be m*k");
-    assert_eq!(b.len(), k * n, "B must be k*n");
     assert_eq!(c.len(), m * n, "C must be m*n");
+    match &b {
+        PanelB::Matrix(bm) => assert_eq!(bm.len(), k * n, "B must be k*n"),
+        PanelB::Im2col { spec, .. } => {
+            assert!(spec.bases.len() >= k, "im2col spec must cover all k rows");
+        }
+    }
+    match epilogue {
+        Epilogue::Bias(bias) | Epilogue::BiasRelu(bias) => {
+            assert!(bias.len() >= n, "bias must cover all n columns");
+        }
+        Epilogue::None => {}
+    }
     if m == 0 || n == 0 {
         return;
     }
@@ -135,6 +299,10 @@ pub fn gemm_f32_into(
             let ncl = NC.min(n - jc);
             for kc0 in (0..k).step_by(KC) {
                 let kcl = KC.min(k - kc0);
+                // the F32 chain *assigns* its first product (kc0 == 0)
+                // instead of accumulating into the zeroed image, so even
+                // the sign of a zero product matches the interpreter
+                let first = accum == Accum::F32 && kc0 == 0;
                 // pack the KC×NC block of B into NR-wide row panels:
                 // panel jp at bp[jp*kcl*NR ..], element (p, j) at p*NR + j
                 let n_panels = ncl.div_ceil(NR);
@@ -142,20 +310,13 @@ pub fn gemm_f32_into(
                 for jp in 0..n_panels {
                     let j0 = jc + jp * NR;
                     let cols = NR.min(n - j0);
-                    pack_b_panel_f32(
-                        b,
-                        n,
-                        kc0,
-                        kcl,
-                        j0,
-                        cols,
-                        NR,
-                        &mut bp[jp * kcl * NR..(jp + 1) * kcl * NR],
-                    );
+                    let panel = &mut bp[jp * kcl * NR..(jp + 1) * kcl * NR];
+                    b.pack(n, kc0, kcl, j0, cols, NR, panel);
                 }
                 let bp = &*bp;
                 if nthreads == 1 {
-                    worker(c64, a, bp, &mut ap_slots[0], 0, m, m, k, n, kc0, kcl, jc, ncl);
+                    let ap0 = &mut ap_slots[0];
+                    worker(c64, a, bp, ap0, 0, m, m, k, n, kc0, kcl, jc, ncl, accum, first);
                 } else {
                     std::thread::scope(|s| {
                         let chunks = c64.chunks_mut(rows_per * n);
@@ -163,7 +324,10 @@ pub fn gemm_f32_into(
                             let i0 = w * rows_per;
                             let rows = chunk.len() / n;
                             s.spawn(move || {
-                                worker(chunk, a, bp, apb, i0, rows, m, k, n, kc0, kcl, jc, ncl);
+                                worker(
+                                    chunk, a, bp, apb, i0, rows, m, k, n, kc0, kcl, jc, ncl,
+                                    accum, first,
+                                );
                             });
                         }
                     });
@@ -171,8 +335,13 @@ pub fn gemm_f32_into(
             }
         }
     }
-    for (dst, &src) in c.iter_mut().zip(c64.iter()) {
-        *dst = src as f32;
+    // the C-tile writeback: narrow, then apply the fused epilogue in f32
+    // (bit-identical to the interpreter running the trailing add/maximum
+    // as separate instructions)
+    for (row, crow) in c.chunks_mut(n).zip(c64.chunks(n)) {
+        for (j, (dst, &src)) in row.iter_mut().zip(crow.iter()).enumerate() {
+            *dst = epilogue.apply(src as f32, j);
+        }
     }
 }
 
@@ -204,6 +373,8 @@ fn worker(
     kcl: usize,
     jc: usize,
     ncl: usize,
+    accum: Accum,
+    first: bool,
 ) {
     let ap = &mut ap[..kcl * MR];
     for ic in (0..rows).step_by(MC) {
@@ -216,13 +387,18 @@ fn worker(
                 let j0 = jc + jp * NR;
                 let nrl = NR.min(jc + ncl - j0);
                 let bpp = &bp[jp * kcl * NR..(jp + 1) * kcl * NR];
-                microkernel(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl);
+                match accum {
+                    Accum::F64 => microkernel(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl),
+                    Accum::F32 => {
+                        microkernel_f32(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl, first)
+                    }
+                }
             }
         }
     }
 }
 
-/// The `MR×NR` microkernel: loads the running `f64` sums of one `C`
+/// The `MR×NR` f64 microkernel: loads the running `f64` sums of one `C`
 /// register block, applies `kcl` rank-1 updates from the packed panels in
 /// ascending `k` order, and stores the sums back. Only the `mrl×nrl`
 /// valid corner is loaded/stored (tail handling); the zero-padded panel
@@ -258,6 +434,61 @@ fn microkernel(
     for i in 0..mrl {
         let crow = &mut c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
         crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    }
+}
+
+/// The `MR×NR` f32-chain microkernel ([`Accum::F32`]): the running sums
+/// are exact `f32` values stored widened in the `c64` image (load and
+/// store round-trip losslessly), each product is rounded to `f32`, and
+/// the chain advances with `f32` adds in ascending `k` order. When
+/// `first` is set (the `k = 0` block), the first product is *assigned*
+/// rather than added to the zero image — `fl32(0 + x)` would turn a
+/// `-0.0` product into `+0.0` and break bit-identity with the
+/// interpreter's elementwise sweep.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_f32(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    n: usize,
+    ap: &[f32],
+    bp: &[f32],
+    kcl: usize,
+    mrl: usize,
+    nrl: usize,
+    first: bool,
+) {
+    let mut acc = [0f32; MR * NR];
+    if !first {
+        for i in 0..mrl {
+            let crow = &c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+            for (slot, &v) in acc[i * NR..i * NR + nrl].iter_mut().zip(crow) {
+                *slot = v as f32; // exact: the image holds f32 values
+            }
+        }
+    }
+    for p in 0..kcl {
+        let ac = &ap[p * MR..(p + 1) * MR];
+        let br = &bp[p * NR..(p + 1) * NR];
+        for i in 0..MR {
+            let av = ac[i];
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            if first && p == 0 {
+                for (slot, &bv) in row.iter_mut().zip(br) {
+                    *slot = av * bv;
+                }
+            } else {
+                for (slot, &bv) in row.iter_mut().zip(br) {
+                    *slot += av * bv;
+                }
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        for (slot, &v) in crow.iter_mut().zip(&acc[i * NR..i * NR + nrl]) {
+            *slot = f64::from(v);
+        }
     }
 }
 
@@ -351,6 +582,174 @@ mod tests {
         gemm_f32_into(&mut c, &[], &[], 2, 3, 0, 4, &mut GemmScratch::new());
         assert_eq!(c, vec![0.0; 6]);
         assert_eq!(gemm_f32(&[2.0], &[3.5], 1, 1, 1, 1), vec![7.0]);
+    }
+
+    /// The interpreter's elementwise conv sweep: f32 products, f32 chain
+    /// adds in ascending k, first product assigned.
+    fn ref_f32_chain(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = a[i * k] * b[j];
+                for p in 1..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn f32_chain_matches_elementwise_sweep_bitwise() {
+        let mut rng = Rng::new(0xc0a);
+        for &(m, n, k) in &[(1, 1, 2), (3, 5, 9), (8, 16, 27), (9, 17, KC + 3), (8, 2048, 27)] {
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let expect = ref_f32_chain(&a, &b, m, n, k);
+            let mut scratch = GemmScratch::new();
+            for threads in [1usize, 3] {
+                let mut c = vec![0f32; m * n];
+                gemm_f32_fused_into(
+                    &mut c,
+                    &a,
+                    PanelB::Matrix(&b),
+                    m,
+                    n,
+                    k,
+                    Accum::F32,
+                    Epilogue::None,
+                    threads,
+                    &mut scratch,
+                );
+                assert_eq!(c, expect, "m={m} n={n} k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_chain_preserves_negative_zero_first_product() {
+        // (-1) * 0 = -0.0; a naive 0 + (-0.0) start would give +0.0
+        let a = [-1.0f32, 0.0];
+        let b = [0.0f32, 0.0];
+        let mut c = [9f32; 1];
+        gemm_f32_fused_into(
+            &mut c,
+            &a,
+            PanelB::Matrix(&b),
+            1,
+            1,
+            2,
+            Accum::F32,
+            Epilogue::None,
+            1,
+            &mut GemmScratch::new(),
+        );
+        assert_eq!(c[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn epilogue_matches_separate_sweeps_bitwise() {
+        // fused bias / bias+relu must equal "gemm, then add, then max"
+        // done as separate f32 passes (the interpreter instruction order)
+        let mut rng = Rng::new(0xe91);
+        let (m, n, k) = (13, 21, 40);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let bias = rng.f32_vec(n);
+        let plain = gemm_f32(&a, &b, m, n, k, 1);
+        let biased: Vec<f32> =
+            plain.iter().enumerate().map(|(f, &v)| v + bias[f % n]).collect();
+        let relued: Vec<f32> = biased.iter().map(|&v| v.max(0.0)).collect();
+        let mut scratch = GemmScratch::new();
+        for threads in [1usize, 4] {
+            let mut c = vec![0f32; m * n];
+            gemm_f32_fused_into(
+                &mut c,
+                &a,
+                PanelB::Matrix(&b),
+                m,
+                n,
+                k,
+                Accum::F64,
+                Epilogue::Bias(&bias),
+                threads,
+                &mut scratch,
+            );
+            assert_eq!(c, biased, "bias threads={threads}");
+            gemm_f32_fused_into(
+                &mut c,
+                &a,
+                PanelB::Matrix(&b),
+                m,
+                n,
+                k,
+                Accum::F64,
+                Epilogue::BiasRelu(&bias),
+                threads,
+                &mut scratch,
+            );
+            assert_eq!(c, relued, "bias_relu threads={threads}");
+        }
+    }
+
+    #[test]
+    fn im2col_panels_equal_materialized_matrix() {
+        use crate::kernels::pack::Im2colSpec;
+        // padded 2-channel 6x7 image, 3x3 taps, 4x5 output (n = 20)
+        let (cin, ih, iw, h, w) = (2usize, 6usize, 7usize, 4usize, 5usize);
+        let mut rng = Rng::new(0x132c);
+        let img = rng.f32_vec(cin * ih * iw);
+        let mut bases = Vec::new();
+        for c in 0..cin {
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    bases.push(c * ih * iw + dy * iw + dx);
+                }
+            }
+        }
+        let k = bases.len();
+        let n = h * w;
+        let spec = Im2colSpec { bases: bases.clone(), img_w: iw, out_w: w };
+        // materialize the im2col matrix and compare both paths bitwise
+        let mut bmat = vec![0f32; k * n];
+        for (p, &base) in bases.iter().enumerate() {
+            for col in 0..n {
+                bmat[p * n + col] = img[base + (col / w) * iw + (col % w)];
+            }
+        }
+        let m = 8;
+        let a = rng.f32_vec(m * k);
+        let mut scratch = GemmScratch::new();
+        let mut c1 = vec![0f32; m * n];
+        let mut c2 = vec![0f32; m * n];
+        for accum in [Accum::F64, Accum::F32] {
+            gemm_f32_fused_into(
+                &mut c1,
+                &a,
+                PanelB::Im2col { img: &img, spec: &spec },
+                m,
+                n,
+                k,
+                accum,
+                Epilogue::None,
+                1,
+                &mut scratch,
+            );
+            gemm_f32_fused_into(
+                &mut c2,
+                &a,
+                PanelB::Matrix(&bmat),
+                m,
+                n,
+                k,
+                accum,
+                Epilogue::None,
+                1,
+                &mut scratch,
+            );
+            assert_eq!(c1, c2, "{accum:?}");
+        }
     }
 
     #[test]

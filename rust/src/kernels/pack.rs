@@ -49,6 +49,71 @@ pub fn pack_a_panel_f32(
     }
 }
 
+/// Precompiled im2col gather: a `K×N` *virtual* B matrix over a padded
+/// `[Cin, IH, IW]` image, never materialized. Row `k` of the virtual
+/// matrix is one shifted image window — tap `k` of a 3×3 convolution
+/// recast as a matrix multiply (the paper's Figure 9 SCONV shape):
+///
+/// ```text
+/// B[k, col] = img[bases[k] + (col / out_w) * img_w + (col % out_w)]
+/// ```
+///
+/// where `bases[k] = c·IH·IW + dy·IW + dx` encodes the tap's channel and
+/// spatial offset, `img_w` is the padded image row stride (`IW`), and
+/// `out_w` is the output width (`col` enumerates output pixels row-major
+/// over `H×W`, so `N = H·W`). Built once at plan-compile time by the
+/// conv rewrite pass ([`crate::runtime::plan`]); consumed per request by
+/// [`pack_b_im2col_f32`], which packs the windows **directly** into the
+/// [`pack_b_panel_f32`] panel layout the blocked GEMM microkernel reads —
+/// the im2col matrix itself never touches memory.
+#[derive(Clone, Debug)]
+pub struct Im2colSpec {
+    /// Per-`k` flat base offset into the image (`c·IH·IW + dy·IW + dx`).
+    pub bases: Vec<usize>,
+    /// Row stride of the padded image (`IW`).
+    pub img_w: usize,
+    /// Output width (`W`): columns per output row of the gather.
+    pub out_w: usize,
+}
+
+/// Pack a B micropanel of the *virtual* im2col matrix described by
+/// `spec` (see [`Im2colSpec`]): rows `k0 .. k0+kc` × columns
+/// `j0 .. j0+cols`, gathered straight from the padded image into the
+/// same layout as [`pack_b_panel_f32`] — row `p` stored as `nr`
+/// consecutive elements at `out[p*nr ..]`, columns past `cols` (the
+/// n-tail) zero-filled. `out` must hold `kc*nr` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_im2col_f32(
+    img: &[f32],
+    spec: &Im2colSpec,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(cols <= nr && out.len() >= kc * nr);
+    // (y, x) of the first packed column, advanced incrementally per
+    // column (consecutive cols walk the output row-major) — the inner
+    // loop then performs no div/mod
+    let (y0, x0) = (j0 / spec.out_w, j0 % spec.out_w);
+    for p in 0..kc {
+        let base = spec.bases[k0 + p];
+        let row = &mut out[p * nr..(p + 1) * nr];
+        let (mut y, mut x) = (y0, x0);
+        for slot in row[..cols].iter_mut() {
+            *slot = img[base + y * spec.img_w + x];
+            x += 1;
+            if x == spec.out_w {
+                x = 0;
+                y += 1;
+            }
+        }
+        row[cols..].fill(0.0);
+    }
+}
+
 /// Pack a B micropanel for the blocked f32 GEMM: rows `k0 .. k0+kc` ×
 /// columns `j0 .. j0+cols` of a row-major `b` with row stride `ldb`, kept
 /// row-major per step — row `p` stored as `nr` consecutive elements at
@@ -196,6 +261,41 @@ mod tests {
                 assert_eq!(out[p * 4 + j], expect, "(p={p}, j={j})");
             }
         }
+    }
+
+    #[test]
+    fn pack_b_im2col_gathers_shifted_windows() {
+        // padded image: 2 channels of 4x5, img[c][y][x] = 100*c + 10*y + x;
+        // output 2x3 (H=2, W=3, so N=6), taps (c, dy, dx)
+        let (ih, iw) = (4usize, 5usize);
+        let img: Vec<f32> = (0..2 * ih * iw)
+            .map(|f| (100 * (f / (ih * iw)) + 10 * (f / iw % ih) + f % iw) as f32)
+            .collect();
+        let taps = [(0usize, 0usize, 0usize), (0, 1, 2), (1, 2, 1)];
+        let spec = Im2colSpec {
+            bases: taps.iter().map(|&(c, dy, dx)| c * ih * iw + dy * iw + dx).collect(),
+            img_w: iw,
+            out_w: 3,
+        };
+        // pack all 3 k rows, columns 2..6 (cols=4, nr=8 -> 4 zero lanes)
+        let mut out = vec![f32::NAN; 3 * 8];
+        pack_b_im2col_f32(&img, &spec, 0, 3, 2, 4, 8, &mut out);
+        for (p, &(c, dy, dx)) in taps.iter().enumerate() {
+            for j in 0..8 {
+                let expect = if j < 4 {
+                    let col = 2 + j;
+                    (100 * c + 10 * (dy + col / 3) + dx + col % 3) as f32
+                } else {
+                    0.0
+                };
+                assert_eq!(out[p * 8 + j], expect, "(p={p}, j={j})");
+            }
+        }
+        // a k-window (k0=1, kc=2) must address bases[1..]
+        let mut out = vec![f32::NAN; 2 * 4];
+        pack_b_im2col_f32(&img, &spec, 1, 2, 0, 3, 4, &mut out);
+        assert_eq!(out[0], 12.0, "tap (0,1,2) at output pixel (0,0)");
+        assert_eq!(out[4], 121.0, "tap (1,2,1) at output pixel (0,0)");
     }
 
     #[test]

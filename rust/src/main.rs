@@ -361,6 +361,79 @@ fn gemm_hlo_text(n: usize) -> String {
     )
 }
 
+/// Drive the serving coordinator end-to-end over the **plan backend**
+/// (router → dynamic batcher → compiled plan → blocked GEMM) on the
+/// embedded artifacts and return a JSON fragment with req/s and latency
+/// quantiles — the cross-PR end-to-end number `BENCH_runtime.json`
+/// previously lacked (the coordinator bench used to measure only a mock
+/// engine).
+fn bench_coordinator(n_req: usize) -> power_mma::error::Result<String> {
+    let dir = std::env::temp_dir().join(format!("mma-bench-coord-{}", std::process::id()));
+    let result = bench_coordinator_in(n_req, &dir);
+    std::fs::remove_dir_all(&dir).ok(); // clean up on every path
+    result
+}
+
+fn bench_coordinator_in(n_req: usize, dir: &std::path::Path) -> power_mma::error::Result<String> {
+    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+    use power_mma::runtime::{artifacts, det_input, Runtime};
+    use std::time::Instant;
+
+    artifacts::ensure_artifacts(dir)?;
+    let cfg = CoordinatorConfig::default();
+    let weights = MlpWeights::deterministic(&cfg);
+    let features = cfg.features;
+    let dir2 = dir.to_path_buf(); // owned: the factory closure must be 'static
+    let coord = Coordinator::start(cfg, weights, move || {
+        let mut rt = Runtime::cpu(&dir2)?;
+        rt.load_all()?;
+        Ok(rt)
+    });
+    // warm up: first call faults the plans in
+    let (_, rx) = coord.submit(Payload::Classify { features: det_input(features, 0) });
+    rx.recv()
+        .map_err(|_| power_mma::err!("coordinator warmup request dropped"))?
+        .result
+        .map_err(|e| power_mma::err!("coordinator warmup failed: {e}"))?;
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let f = det_input(features, i as u64 % 13);
+        rxs.push(coord.submit(Payload::Classify { features: f }).1);
+    }
+    // per-request latencies of the *timed* requests only — the
+    // coordinator's own histogram also holds the cold warmup request,
+    // which would otherwise dominate p99 in --quick runs
+    let mut lat_us: Vec<u64> = Vec::with_capacity(n_req);
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if r.result.is_ok() {
+                lat_us.push(r.latency.as_micros() as u64);
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    let stats = coord.shutdown();
+    if lat_us.len() != n_req {
+        power_mma::bail!("coordinator completed {}/{n_req} requests", lat_us.len());
+    }
+    lat_us.sort_unstable();
+    let q = |f: f64| lat_us[((lat_us.len() - 1) as f64 * f) as usize];
+    let (p50, p99) = (q(0.5), q(0.99));
+    let req_s = n_req as f64 / dt.as_secs_f64();
+    println!(
+        "coordinator e2e (plan backend): {n_req} requests -> {req_s:.0} req/s, \
+         p50 {p50} us, p99 {p99} us, occupancy {:.1}",
+        stats.mean_batch_occupancy()
+    );
+    Ok(format!(
+        "{{\"backend\": \"native-hlo-plan\", \"requests\": {n_req}, \
+         \"req_per_s\": {req_s:.1}, \"p50_us\": {p50}, \"p99_us\": {p99}, \
+         \"mean_batch_occupancy\": {:.2}}}",
+        stats.mean_batch_occupancy()
+    ))
+}
+
 fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::benchkit::{bench_budget, black_box};
     use power_mma::blas::block_gemm::{gemm_f32_into, GemmScratch};
@@ -535,7 +608,54 @@ fn cmd_bench(args: &[String]) -> i32 {
         ));
     }
 
-    // -- 4. machine-readable report --------------------------------------
+    // -- 4. plan shape: the rewrite pass must compile the conv fixture to
+    //       a single fused im2col GEMM (≤ 10 steps with the I/O copies) --
+    let Some(conv) = artifacts::EMBEDDED.iter().find(|a| a.name == "conv2d_k3") else {
+        eprintln!("conv2d_k3 fixture missing from the embedded artifact set");
+        return 1;
+    };
+    let conv_module = match power_mma::runtime::hlo::HloModule::parse(conv.hlo_text) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("conv2d_k3: parse failed: {e}");
+            return 1;
+        }
+    };
+    let conv_plan = match power_mma::runtime::plan::Plan::compile(&conv_module) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("conv2d_k3: plan compile failed: {e}");
+            return 1;
+        }
+    };
+    let conv_steps = conv_plan.num_steps();
+    let conv_gemms =
+        conv_plan.step_names().iter().filter(|&&s| s == "im2col_gemm").count();
+    println!(
+        "conv2d_k3 plan: {} instructions -> {conv_steps} steps ({conv_gemms} im2col GEMM), \
+         {} arena slots",
+        conv_module.num_instructions(),
+        conv_plan.num_slots()
+    );
+    if conv_steps > 10 || conv_gemms != 1 {
+        eprintln!(
+            "conv2d_k3 must compile to a single im2col GEMM in <= 10 steps \
+             (got {conv_steps} steps, {conv_gemms} fused GEMMs)"
+        );
+        return 1;
+    }
+
+    // -- 5. coordinator end-to-end over the plan backend -----------------
+    let n_coord = if quick { 400 } else { 4000 };
+    let coord_json = match bench_coordinator(n_coord) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("coordinator bench failed: {e}");
+            return 1;
+        }
+    };
+
+    // -- 6. machine-readable report --------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"runtime\",\n  \"quick\": {quick},\n  \"size\": {size},\n  \
          \"threads_available\": {avail},\n  \"threads_swept\": {threads:?},\n  \
@@ -543,6 +663,9 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"plan_vs_interpreter\": {{\"size\": {size}, \"interpreter_ms\": {interp_ms:.3}, \
          \"plan\": [\n    {}\n  ], \"speedup_best\": {speedup:.3}}},\n  \
          \"fixtures\": [\n    {}\n  ],\n  \
+         \"conv\": {{\"plan_steps\": {conv_steps}, \"im2col_gemm_steps\": {conv_gemms}, \
+         \"max_steps\": 10}},\n  \
+         \"coordinator\": {coord_json},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
          \"pass\": {}, \"numerics_identical\": {all_identical}}}\n}}\n",
         gemm_rows.join(",\n    "),

@@ -83,6 +83,7 @@ pub(crate) struct Instr {
 
 /// A parsed HLO module: the entry computation as a topologically-ordered
 /// instruction list (HLO text is SSA and defines before use).
+#[derive(Debug)]
 pub struct HloModule {
     /// Module name from the `HloModule` header line.
     pub name: String,

@@ -6,8 +6,10 @@
 //! [`EngineBackend`] trait. The default backend ([`HloPlanBackend`],
 //! behind [`Runtime::cpu`]) **compiles** each artifact once at `load()`
 //! into a [`plan::Plan`] — a topologically-ordered step list over a
-//! preallocated, liveness-reusing buffer arena — and executes requests
-//! against the plan, with `dot` on the blocked parallel GEMM of
+//! preallocated, liveness-reusing buffer arena, with a rewrite pass
+//! that collapses conv graphs into single im2col GEMM steps and fuses
+//! post-`dot` bias/relu tails into the GEMM writeback — and executes
+//! requests against the plan on the blocked parallel GEMM of
 //! [`crate::blas::block_gemm`].  The legacy [`HloInterpreterBackend`]
 //! (per-request walk of [`hlo::HloModule::evaluate`] over `ref_gemm`) is
 //! kept as the numerics oracle and for `power-mma bench serve`

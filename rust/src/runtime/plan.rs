@@ -23,21 +23,73 @@
 //!   arena, the GEMM `f64` accumulation image, and the packed-panel
 //!   buffers are all owned by [`ExecBuffers`] and reused.
 //!
+//! Between validation and arena assignment, a **pattern-rewrite pass**
+//! collapses the two subgraph shapes the AOT graphs spend their time in
+//! (the layered-reorganization strategy of the paper's Figure 9 SCONV,
+//! applied at the plan level):
+//!
+//! * the shifted multiply-add chain a 3×3 convolution lowers to
+//!   (`9·Cin` taps of `slice`/`broadcast`/`multiply` folded by `add`s —
+//!   299 instructions in the `conv2d_k3` fixture) becomes **one**
+//!   `Im2colGemm` step: a precompiled im2col gather spec
+//!   ([`crate::kernels::pack::Im2colSpec`]) feeding the blocked GEMM,
+//!   packing the shifted image windows straight into B panels;
+//! * trailing `broadcast`+`add` (bias) and `maximum(0)` (relu) chains
+//!   after a `dot` fuse into the GEMM's writeback
+//!   [`Epilogue`](crate::blas::block_gemm::Epilogue), eliminating the
+//!   output-sized memory sweeps of the MLP's post-dot instructions.
+//!
+//! Fused interior values are never materialized: they get no steps and
+//! no arena slots, so the rewrite also shrinks the arena (the conv
+//! fixture compiles to 3 steps — two parameter loads and the fused
+//! GEMM — over 3 slots).
+//!
 //! Numerics are **bit-identical** to the interpreter walk on finite
 //! inputs: elementwise ops use the same scalar functions, gathers compute
-//! the same index arithmetic, and the blocked GEMM carries the same
-//! ascending-`k` `f64` accumulation as the interpreter's
-//! [`ref_gemm`](crate::blas::gemm::ref_gemm) path (the contract is tested
-//! per fixture).
+//! the same index arithmetic, and the blocked GEMM replays each
+//! interpreter path's exact rounding — `dot` as ascending-`k` `f64`
+//! accumulation ([`ref_gemm`](crate::blas::gemm::ref_gemm)'s order),
+//! fused conv chains as ascending-tap `f32` chains, and fused epilogues
+//! in `f32` after the accumulator narrows (see
+//! [`crate::blas::block_gemm`]'s numerics contract; tested per fixture).
 //!
-//! Threading: [`Plan::execute_into`] takes a worker cap; each `dot`
+//! Threading: [`Plan::execute_into`] takes a worker cap; each GEMM step
 //! decides via [`threads_for`] whether to fan its M-panel loop out over
 //! scoped threads. Workers never outlive the call, so a plan is safe to
 //! drive from the coordinator's thread-confined engine thread.
+//!
+//! ```
+//! use power_mma::runtime::hlo::HloModule;
+//! use power_mma::runtime::plan::Plan;
+//!
+//! // dot → bias add → relu: three output-sized sweeps in the
+//! // interpreter, one epilogued GEMM step in the plan
+//! let text = "\
+//! ENTRY main {
+//!   x = f32[2,2]{1,0} parameter(0)
+//!   w = f32[2,2]{1,0} parameter(1)
+//!   bias = f32[2]{0} parameter(2)
+//!   dot.1 = f32[2,2]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+//!   bb.2 = f32[2,2]{1,0} broadcast(bias), dimensions={1}
+//!   add.3 = f32[2,2]{1,0} add(dot.1, bb.2)
+//!   zero.4 = f32[] constant(0)
+//!   zb.5 = f32[2,2]{1,0} broadcast(zero.4), dimensions={}
+//!   ROOT max.6 = f32[2,2]{1,0} maximum(add.3, zb.5)
+//! }";
+//! let plan = Plan::compile(&HloModule::parse(text).unwrap()).unwrap();
+//! assert_eq!(plan.step_names(), ["param", "param", "param", "dot_bias_relu"]);
+//! let out = plan
+//!     .execute(&[&[1.0, 0.0, 0.0, 1.0], &[2.0, -3.0, 4.0, 5.0], &[0.5, 0.5]], 1)
+//!     .unwrap();
+//! assert_eq!(out[0].data, [2.5, 0.0, 4.5, 5.5]);
+//! ```
 
-use super::hlo::{bf16_round, DType, HloModule, Tensor};
-use crate::blas::block_gemm::{gemm_f32_into, threads_for, GemmScratch};
+use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
+use crate::blas::block_gemm::{
+    gemm_f32_fused_into, threads_for, Accum, Epilogue, GemmScratch, PanelB,
+};
 use crate::error::Result;
+use crate::kernels::pack::Im2colSpec;
 use crate::{bail, err};
 
 /// Elementwise operator of a [`Plan`] step.
@@ -61,6 +113,15 @@ struct GatherSpec {
     len: usize,
 }
 
+/// Fused writeback epilogue of a GEMM step; the slot holds the bias
+/// vector (`n` elements), applied per output column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StepEpi {
+    None,
+    Bias(usize),
+    BiasRelu(usize),
+}
+
 /// One compiled step of a [`Plan`]. Slot indices refer to the arena of
 /// [`ExecBuffers`].
 #[derive(Clone, Debug)]
@@ -73,8 +134,16 @@ enum Step {
     Bf16 { src: usize, len: usize, out: usize },
     /// Elementwise binary op over equal-shaped operands.
     Binary { op: BinOp, a: usize, b: usize, len: usize, out: usize },
-    /// `[m,k] × [k,n]` matmul on the blocked parallel GEMM.
-    Dot { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize },
+    /// `[m,k] × [k,n]` matmul on the blocked parallel GEMM, with an
+    /// optional fused bias/relu epilogue (the rewrite pass's compiled
+    /// form of trailing `broadcast+add` / `maximum(0)` instructions).
+    Dot { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize, epi: StepEpi },
+    /// A whole conv-as-shifted-multiply-add chain collapsed to one
+    /// im2col-gathered GEMM: weights `[m,k]` × the virtual `[k,n]`
+    /// im2col view of the padded image in slot `img` (`f32`-chain
+    /// accumulation — bit-identical to the elementwise sweep it
+    /// replaces).
+    Im2colGemm { w: usize, img: usize, out: usize, m: usize, n: usize, k: usize, spec: Im2colSpec },
     /// Affine gather (`broadcast` / `slice`).
     Gather { src: usize, out: usize, spec: GatherSpec },
 }
@@ -97,11 +166,15 @@ pub struct SlotAssign {
     /// Instruction index of the last consumer (`usize::MAX` when the
     /// value is a request output and stays live to the end).
     pub last_use: usize,
+    /// Whether the slot is pinned (constants): baked at buffer creation,
+    /// never recycled — the compile-time recycler asserts this.
+    pub pinned: bool,
 }
 
 /// A compiled execution plan: topologically-ordered steps over a
 /// preallocated buffer arena. Build with [`Plan::compile`], execute with
 /// [`Plan::execute_into`] against reusable [`ExecBuffers`].
+#[derive(Debug)]
 pub struct Plan {
     steps: Vec<Step>,
     /// Constant payloads baked into their slots at buffer creation;
@@ -154,21 +227,439 @@ fn alloc_slot(want: usize, caps: &mut Vec<usize>, free: &mut Vec<usize>) -> usiz
     caps.len() - 1
 }
 
+// ---------------------------------------------------------------------
+// The pattern-rewrite pass: recognize conv-as-shifted-multiply-add
+// chains and dot bias/relu tails on the *instruction graph* (before
+// arena assignment) and replace each with one fused GEMM step. Interior
+// nodes of a match are consumed — they must be single-use, `f32`, and
+// not request outputs, so skipping them cannot change any observable
+// value. Anything that does not match falls back to the elementwise
+// lowering unchanged (and keeps its full compile-time validation).
+// ---------------------------------------------------------------------
+
+/// A fusion decision for one root instruction.
+enum Fuse {
+    /// A shifted multiply-add conv chain: `out[m,h,w] = Σ_k W[:,k] ⊗
+    /// window_k(img)` becomes one im2col GEMM over inputs `(w, img)`.
+    Conv { w: usize, img: usize, m: usize, n: usize, k: usize, spec: Im2colSpec },
+    /// `dot` + broadcast-bias `add` (+ `maximum(0)`): one epilogued dot
+    /// over inputs `(a, b, bias)`.
+    DotEpi { a: usize, b: usize, bias: usize, relu: bool, m: usize, n: usize, k: usize },
+}
+
+impl Fuse {
+    /// The instructions whose values the fused step reads.
+    fn inputs(&self) -> Vec<usize> {
+        match self {
+            Fuse::Conv { w, img, .. } => vec![*w, *img],
+            Fuse::DotEpi { a, b, bias, .. } => vec![*a, *b, *bias],
+        }
+    }
+}
+
+/// One matched conv tap: column `t` of the weight matrix times the
+/// image window at offset `off = (c, dy, dx)`.
+struct Tap {
+    w: usize,
+    t: usize,
+    img: usize,
+    off: (usize, usize, usize),
+    consumed: Vec<usize>,
+}
+
+fn build_users(instrs: &[Instr]) -> Vec<Vec<usize>> {
+    let mut users: Vec<Vec<usize>> = vec![Vec::new(); instrs.len()];
+    for (i, ins) in instrs.iter().enumerate() {
+        for &op in &ins.operands {
+            users[op].push(i);
+        }
+    }
+    users
+}
+
+/// A shape-preserving no-op on flat data: `reshape` (element count kept)
+/// or a broadcast whose axis map is the identity.
+fn is_identity(instrs: &[Instr], idx: usize) -> bool {
+    let ins = &instrs[idx];
+    let Some(&src) = ins.operands.first() else {
+        return false;
+    };
+    match ins.opcode.as_str() {
+        "reshape" => {
+            instrs[src].dims.iter().product::<usize>() == ins.dims.iter().product::<usize>()
+        }
+        "broadcast" => {
+            instrs[src].dims == ins.dims
+                && matches!(&ins.dims_attr, Some(d) if d.len() == ins.dims.len()
+                    && d.iter().enumerate().all(|(ax, &v)| v == ax))
+        }
+        _ => false,
+    }
+}
+
+/// Walk through single-use identity nodes; returns the base value and
+/// the peeled (consumable) nodes, or `None` if a chain node is shared.
+fn peel(instrs: &[Instr], users: &[Vec<usize>], mut idx: usize) -> Option<(usize, Vec<usize>)> {
+    let mut consumed = Vec::new();
+    while is_identity(instrs, idx) {
+        if users[idx].len() != 1 {
+            return None;
+        }
+        consumed.push(idx);
+        idx = instrs[idx].operands[0];
+    }
+    Some((idx, consumed))
+}
+
+fn unit_bound(b: &(usize, usize, usize)) -> bool {
+    b.2 == 1 && b.0.checked_add(1) == Some(b.1)
+}
+
+/// The weight side of a tap: `broadcast(vec[m] → [m,h,w], dims={0})`
+/// over an identity chain down to `slice(W)[0:m, t:t+1]`.
+fn match_w_side(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+    out_dims: &[usize],
+) -> Option<(usize, usize, Vec<usize>)> {
+    let ins = &instrs[idx];
+    if ins.opcode != "broadcast" || users[idx].len() != 1 || ins.dims != out_dims {
+        return None;
+    }
+    if ins.dims_attr.as_deref() != Some(&[0usize][..]) {
+        return None;
+    }
+    let src = *ins.operands.first()?;
+    if instrs[src].dims != [out_dims[0]] {
+        return None;
+    }
+    let (base, mut consumed) = peel(instrs, users, src)?;
+    let sl = &instrs[base];
+    if sl.opcode != "slice" || users[base].len() != 1 {
+        return None;
+    }
+    let wsrc = *sl.operands.first()?;
+    let wdims = &instrs[wsrc].dims;
+    let b = sl.slice_bounds.as_ref()?;
+    if wdims.len() != 2 || b.len() != 2 || wdims[0] != out_dims[0] {
+        return None;
+    }
+    if b[0] != (0, wdims[0], 1) || !unit_bound(&b[1]) {
+        return None;
+    }
+    consumed.push(idx);
+    consumed.push(base);
+    Some((wsrc, b[1].0, consumed))
+}
+
+/// The image side of a tap: `broadcast([h,w] → [m,h,w], dims={1,2})`
+/// over an identity chain down to the shifted window
+/// `slice(img)[c:c+1, dy:dy+h, dx:dx+w]`.
+fn match_i_side(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+    out_dims: &[usize],
+) -> Option<(usize, (usize, usize, usize), Vec<usize>)> {
+    let ins = &instrs[idx];
+    if ins.opcode != "broadcast" || users[idx].len() != 1 || ins.dims != out_dims {
+        return None;
+    }
+    if ins.dims_attr.as_deref() != Some(&[1usize, 2][..]) {
+        return None;
+    }
+    let src = *ins.operands.first()?;
+    if instrs[src].dims != out_dims[1..] {
+        return None;
+    }
+    let (base, mut consumed) = peel(instrs, users, src)?;
+    let sl = &instrs[base];
+    if sl.opcode != "slice" || users[base].len() != 1 {
+        return None;
+    }
+    let isrc = *sl.operands.first()?;
+    if instrs[isrc].dims.len() != 3 {
+        return None;
+    }
+    let b = sl.slice_bounds.as_ref()?;
+    if b.len() != 3 || !unit_bound(&b[0]) || b[1].2 != 1 || b[2].2 != 1 {
+        return None;
+    }
+    // window extents must equal the output spatial dims (checked without
+    // subtraction: a malformed stop < start must not underflow)
+    if b[1].0.checked_add(out_dims[1]) != Some(b[1].1)
+        || b[2].0.checked_add(out_dims[2]) != Some(b[2].1)
+    {
+        return None;
+    }
+    consumed.push(idx);
+    consumed.push(base);
+    Some((isrc, (b[0].0, b[1].0, b[2].0), consumed))
+}
+
+/// One conv tap: a single-use `multiply` of a weight side and an image
+/// side (either operand order — `f32` multiplication commutes bitwise).
+fn match_tap(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+    out_dims: &[usize],
+) -> Option<Tap> {
+    let ins = &instrs[idx];
+    if ins.opcode != "multiply" || users[idx].len() != 1 || ins.dims != out_dims {
+        return None;
+    }
+    let (x, y) = (*ins.operands.first()?, *ins.operands.get(1)?);
+    for (ws, is) in [(x, y), (y, x)] {
+        if let (Some((w, t, wc)), Some((img, off, ic))) = (
+            match_w_side(instrs, users, ws, out_dims),
+            match_i_side(instrs, users, is, out_dims),
+        ) {
+            let mut consumed = vec![idx];
+            consumed.extend(wc);
+            consumed.extend(ic);
+            return Some(Tap { w, t, img, off, consumed });
+        }
+    }
+    None
+}
+
+/// Match a whole shifted multiply-add conv chain rooted at `add` `i`:
+/// flatten the chain of single-use `add`s, match every term as a [`Tap`],
+/// and require the taps to walk the weight columns `0..k` in chain order
+/// over one shared weight matrix and one shared padded image — exactly
+/// the graph `conv2d_k3` lowers to.
+fn match_conv(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(Fuse, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode != "add" || ins.dims.len() != 3 {
+        return None;
+    }
+    let out_dims = ins.dims.clone();
+    let mut taps_rev: Vec<Tap> = Vec::new();
+    let mut consumed: Vec<usize> = Vec::new();
+    let mut cur = i;
+    loop {
+        let (l, r) = (*instrs[cur].operands.first()?, *instrs[cur].operands.get(1)?);
+        // interior chain adds must carry the output shape too, so a
+        // shape-mismatched (malformed) chain falls back to the strict
+        // elementwise lowering instead of being silently consumed
+        let is_chain = |x: usize| {
+            instrs[x].opcode == "add" && users[x].len() == 1 && instrs[x].dims == out_dims
+        };
+        let (cont, tap_op) = if is_chain(l) {
+            (Some(l), r)
+        } else if is_chain(r) {
+            (Some(r), l)
+        } else {
+            (None, r)
+        };
+        match cont {
+            Some(c) => {
+                taps_rev.push(match_tap(instrs, users, tap_op, &out_dims)?);
+                consumed.push(c);
+                cur = c;
+            }
+            None => {
+                // chain start: both operands are taps (first two products
+                // commute bitwise under f32 addition, so either order
+                // yields the interpreter's exact chain)
+                taps_rev.push(match_tap(instrs, users, r, &out_dims)?);
+                taps_rev.push(match_tap(instrs, users, l, &out_dims)?);
+                break;
+            }
+        }
+    }
+    taps_rev.reverse();
+    let taps = taps_rev;
+    let (w, img) = (taps[0].w, taps[0].img);
+    if taps.iter().any(|t| t.w != w || t.img != img) {
+        return None;
+    }
+    // tap j must read weight column j: the GEMM consumes W as-is
+    if taps.iter().enumerate().any(|(j, t)| t.t != j) {
+        return None;
+    }
+    let k = taps.len();
+    let (wdims, idims) = (&instrs[w].dims, &instrs[img].dims);
+    if *wdims != [out_dims[0], k] || idims.len() != 3 {
+        return None;
+    }
+    let (cin, ih, iw) = (idims[0], idims[1], idims[2]);
+    let (h, wout) = (out_dims[1], out_dims[2]);
+    for t in &taps {
+        let (c, dy, dx) = t.off;
+        if c >= cin || dy + h > ih || dx + wout > iw {
+            return None;
+        }
+    }
+    let bases = taps.iter().map(|t| t.off.0 * ih * iw + t.off.1 * iw + t.off.2).collect();
+    for t in taps {
+        consumed.extend(t.consumed);
+    }
+    let fuse = Fuse::Conv {
+        w,
+        img,
+        m: out_dims[0],
+        n: h * wout,
+        k,
+        spec: Im2colSpec { bases, img_w: iw, out_w: wout },
+    };
+    Some((fuse, consumed))
+}
+
+/// A fusable `dot`: single-use, rank-2, the `{1}×{0}` contraction the
+/// plan supports.
+fn match_fusable_dot(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+) -> Option<(usize, usize, usize, usize, usize)> {
+    let d = &instrs[idx];
+    if d.opcode != "dot" || users[idx].len() != 1 {
+        return None;
+    }
+    if d.lhs_contracting != Some(1) || d.rhs_contracting != Some(0) {
+        return None;
+    }
+    let (a, b) = (*d.operands.first()?, *d.operands.get(1)?);
+    let (ad, bd) = (&instrs[a].dims, &instrs[b].dims);
+    if ad.len() != 2 || bd.len() != 2 || ad[1] != bd[0] || d.dims != [ad[0], bd[1]] {
+        return None;
+    }
+    Some((a, b, ad[0], bd[1], ad[1]))
+}
+
+/// `add(dot, broadcast(bias[n], dims={1}))` in either operand order
+/// (f32 addition commutes bitwise). Returns the dot's operands/shape,
+/// the bias source, and the consumed interior nodes.
+#[allow(clippy::type_complexity)]
+fn match_bias_add(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    i: usize,
+) -> Option<(usize, usize, usize, usize, usize, usize, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode != "add" || ins.dims.len() != 2 {
+        return None;
+    }
+    let (p0, p1) = (*ins.operands.first()?, *ins.operands.get(1)?);
+    for (p, q) in [(p0, p1), (p1, p0)] {
+        let Some((a, b, m, n, k)) = match_fusable_dot(instrs, users, p) else {
+            continue;
+        };
+        // the add must produce exactly the dot's shape — fusing a
+        // shape-mismatched add would skip the elementwise validation the
+        // unfused lowering performs (and mis-size the output slot)
+        if ins.dims != [m, n] {
+            continue;
+        }
+        let bb = &instrs[q];
+        if bb.opcode != "broadcast" || users[q].len() != 1 || bb.dims != ins.dims {
+            continue;
+        }
+        if bb.dims_attr.as_deref() != Some(&[1usize][..]) {
+            continue;
+        }
+        let Some(&src) = bb.operands.first() else {
+            continue;
+        };
+        if instrs[src].dims != [n] {
+            continue;
+        }
+        let Some((bias, chain)) = peel(instrs, users, src) else {
+            continue;
+        };
+        let mut consumed = vec![p, q];
+        consumed.extend(chain);
+        return Some((a, b, m, n, k, bias, consumed));
+    }
+    None
+}
+
+/// `broadcast(constant(+0.0), dimensions={})` — the relu threshold.
+fn is_zero_broadcast(instrs: &[Instr], users: &[Vec<usize>], idx: usize) -> bool {
+    let ins = &instrs[idx];
+    ins.opcode == "broadcast"
+        && users[idx].len() == 1
+        && matches!(ins.dims_attr.as_deref(), Some(d) if d.is_empty())
+        && ins.operands.first().is_some_and(|&c| {
+            let cst = &instrs[c];
+            cst.opcode == "constant"
+                && cst.dims.is_empty()
+                && cst.const_vals.len() == 1
+                && cst.const_vals[0].to_bits() == 0.0f32.to_bits()
+        })
+}
+
+/// Match a dot-epilogue tail rooted at `i`: `add(dot, bias)` →
+/// [`Fuse::DotEpi`] with `relu: false`, or `maximum(add(dot, bias),
+/// broadcast(0))` → `relu: true`. The `maximum`'s operand order is
+/// required (value first): `max(-0.0, 0.0)` and `max(0.0, -0.0)` differ
+/// bitwise, and the epilogue computes `v.max(0.0)`.
+fn match_dot_epi(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(Fuse, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode == "maximum" && ins.dims.len() == 2 {
+        let (x, z) = (*ins.operands.first()?, *ins.operands.get(1)?);
+        if instrs[z].dims != ins.dims || !is_zero_broadcast(instrs, users, z) {
+            return None;
+        }
+        if instrs[x].opcode != "add" || users[x].len() != 1 || instrs[x].dims != ins.dims {
+            return None;
+        }
+        let (a, b, m, n, k, bias, mut consumed) = match_bias_add(instrs, users, x)?;
+        consumed.push(x);
+        consumed.push(z);
+        return Some((Fuse::DotEpi { a, b, bias, relu: true, m, n, k }, consumed));
+    }
+    if ins.opcode == "add" {
+        let (a, b, m, n, k, bias, consumed) = match_bias_add(instrs, users, i)?;
+        return Some((Fuse::DotEpi { a, b, bias, relu: false, m, n, k }, consumed));
+    }
+    None
+}
+
+/// Run the rewrite over the whole entry computation (outermost roots
+/// first, so a sub-chain never steals a match from the chain containing
+/// it). Returns the per-instruction fusion decisions and the consumed
+/// set; a match is dropped whenever consuming it would hide a request
+/// output, a non-`f32` value, or a node another match already claimed.
+fn rewrite(instrs: &[Instr], is_out: &[bool]) -> (Vec<Option<Fuse>>, Vec<bool>) {
+    let users = build_users(instrs);
+    let n = instrs.len();
+    let mut fused: Vec<Option<Fuse>> = (0..n).map(|_| None).collect();
+    let mut consumed = vec![false; n];
+    for i in (0..n).rev() {
+        if consumed[i] || instrs[i].dtype != DType::F32 {
+            continue;
+        }
+        let m = match_dot_epi(instrs, &users, i).or_else(|| match_conv(instrs, &users, i));
+        let Some((f, cons)) = m else {
+            continue;
+        };
+        if cons
+            .iter()
+            .any(|&c| consumed[c] || is_out[c] || instrs[c].dtype != DType::F32)
+        {
+            continue;
+        }
+        for &c in &cons {
+            consumed[c] = true;
+        }
+        fused[i] = Some(f);
+    }
+    (fused, consumed)
+}
+
 impl Plan {
     /// Lower a parsed module into an execution plan, performing every
     /// shape/attribute/operand validation the interpreter would do per
-    /// request. Fails on anything outside the serving op set.
+    /// request, then running the fusion rewrite (see the module docs).
+    /// Fails on anything outside the serving op set.
     pub fn compile(module: &HloModule) -> Result<Plan> {
         let instrs = &module.instrs;
         let n = instrs.len();
 
-        // -- liveness: last consumer of every value ----------------------
-        let mut last_use: Vec<usize> = (0..n).collect();
-        for (i, ins) in instrs.iter().enumerate() {
-            for &op in &ins.operands {
-                last_use[op] = last_use[op].max(i);
-            }
-        }
         let mut root_ids: Vec<usize> = Vec::new();
         for (i, ins) in instrs.iter().enumerate() {
             if ins.is_root {
@@ -178,12 +669,70 @@ impl Plan {
         if root_ids.is_empty() {
             bail!("entry computation has no ROOT instruction");
         }
+        let mut is_out = vec![false; n];
+        for &r in &root_ids {
+            is_out[r] = true;
+        }
+
+        // -- rewrite: fuse conv chains and dot epilogue tails ------------
+        let (fused, mut consumed) = rewrite(instrs, &is_out);
+
+        // effective operands after fusion: what the emitted step actually
+        // reads (fused roots read the fusion inputs; consumed interior
+        // nodes read nothing — they never execute)
+        let mut eff: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for i in 0..n {
+            eff.push(if consumed[i] {
+                Vec::new()
+            } else if let Some(f) = &fused[i] {
+                f.inputs()
+            } else {
+                instrs[i].operands.clone()
+            });
+        }
+
+        // dead-code elimination for fusion orphans: the only values a
+        // match leaves dangling are constants (the relu zero — its
+        // broadcast is consumed structurally by the matcher). Only a
+        // *well-formed* constant is dropped, so compile-time strictness
+        // is untouched: anything else dead still lowers and validates
+        // (or bails) below.
+        let mut use_cnt = vec![0usize; n];
+        for ops in &eff {
+            for &op in ops {
+                use_cnt[op] += 1;
+            }
+        }
+        for i in 0..n {
+            let ins = &instrs[i];
+            if consumed[i] || is_out[i] || use_cnt[i] > 0 {
+                continue;
+            }
+            if ins.opcode == "constant"
+                && ins.dtype == DType::F32
+                && ins.const_vals.len() == ins.dims.iter().product::<usize>()
+            {
+                consumed[i] = true;
+                eff[i].clear();
+            }
+        }
+
+        // -- liveness: last consumer of every value ----------------------
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (i, ops) in eff.iter().enumerate() {
+            for &op in ops {
+                last_use[op] = last_use[op].max(i);
+            }
+        }
         for &r in &root_ids {
             last_use[r] = usize::MAX;
         }
 
         // -- lower instructions, assigning arena slots -------------------
         let mut slot_caps: Vec<usize> = Vec::new();
+        // per-slot pin flags: a pinned (constant) slot must never reach
+        // the recycler's free list — asserted at every free-list push
+        let mut pinned_slot: Vec<bool> = Vec::new();
         let mut free: Vec<usize> = Vec::new();
         let mut slot_of: Vec<Option<usize>> = vec![None; n];
         let mut pinned: Vec<bool> = vec![false; n];
@@ -192,7 +741,37 @@ impl Plan {
         let mut assigns: Vec<SlotAssign> = Vec::new();
         let mut max_dot = (0usize, 0usize, 0usize);
 
+        // Recycle the slots of values whose last consumer is step `i`
+        // (its operands, or an output nobody consumes). Runs only *after*
+        // the output slot was taken, so an output never aliases a live
+        // operand; pinned (constant) slots never free — the assert
+        // enforces at compile what `Plan::assignments` lets tests audit.
+        fn recycle(
+            i: usize,
+            eff_i: &[usize],
+            last_use: &[usize],
+            pinned: &[bool],
+            pinned_slot: &[bool],
+            slot_of: &mut [Option<usize>],
+            free: &mut Vec<usize>,
+        ) {
+            for &op in eff_i.iter().chain(std::iter::once(&i)) {
+                if last_use[op] == i && !pinned[op] {
+                    if let Some(s) = slot_of[op].take() {
+                        assert!(
+                            !pinned_slot[s],
+                            "arena recycler was handed pinned constant slot {s}"
+                        );
+                        free.push(s);
+                    }
+                }
+            }
+        }
+
         for (i, ins) in instrs.iter().enumerate() {
+            if consumed[i] {
+                continue; // interior of a fused subgraph: never executes
+            }
             if ins.dtype == DType::Other {
                 bail!("{}: unsupported element type", ins.name);
             }
@@ -203,6 +782,61 @@ impl Plan {
                 continue;
             }
             let want: usize = ins.dims.iter().product();
+
+            // a fused root lowers to one GEMM step over the fusion inputs
+            if let Some(f) = &fused[i] {
+                for &inp in &eff[i] {
+                    if slot_of[inp].is_none() {
+                        bail!("{}: fused input has no value", ins.name);
+                    }
+                }
+                let out = alloc_slot(want, &mut slot_caps, &mut free);
+                pinned_slot.resize(slot_caps.len(), false);
+                slot_of[i] = Some(out);
+                assigns.push(SlotAssign {
+                    instr: i,
+                    name: ins.name.clone(),
+                    slot: out,
+                    elems: want,
+                    def: i,
+                    last_use: last_use[i],
+                    pinned: false,
+                });
+                match f {
+                    Fuse::Conv { w, img, m, n: nn, k, spec } => {
+                        max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
+                        steps.push(Step::Im2colGemm {
+                            w: slot_of[*w].unwrap(),
+                            img: slot_of[*img].unwrap(),
+                            out,
+                            m: *m,
+                            n: *nn,
+                            k: *k,
+                            spec: spec.clone(),
+                        });
+                    }
+                    Fuse::DotEpi { a, b, bias, relu, m, n: nn, k } => {
+                        max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
+                        let bias_slot = slot_of[*bias].unwrap();
+                        steps.push(Step::Dot {
+                            a: slot_of[*a].unwrap(),
+                            b: slot_of[*b].unwrap(),
+                            out,
+                            m: *m,
+                            n: *nn,
+                            k: *k,
+                            epi: if *relu {
+                                StepEpi::BiasRelu(bias_slot)
+                            } else {
+                                StepEpi::Bias(bias_slot)
+                            },
+                        });
+                    }
+                }
+                recycle(i, &eff[i], &last_use, &pinned, &pinned_slot, &mut slot_of, &mut free);
+                continue;
+            }
+
             let need = match ins.opcode.as_str() {
                 "dot" | "add" | "multiply" | "maximum" => 2,
                 "convert" | "reshape" | "broadcast" | "slice" => 1,
@@ -229,9 +863,12 @@ impl Plan {
             let is_const = ins.opcode == "constant";
             let out = if is_const {
                 slot_caps.push(want);
+                pinned_slot.push(true);
                 slot_caps.len() - 1
             } else {
-                alloc_slot(want, &mut slot_caps, &mut free)
+                let s = alloc_slot(want, &mut slot_caps, &mut free);
+                pinned_slot.resize(slot_caps.len(), false);
+                s
             };
             slot_of[i] = Some(out);
             assigns.push(SlotAssign {
@@ -241,6 +878,7 @@ impl Plan {
                 elems: want,
                 def: if is_const { 0 } else { i },
                 last_use: if is_const { usize::MAX } else { last_use[i] },
+                pinned: is_const,
             });
 
             match ins.opcode.as_str() {
@@ -340,6 +978,7 @@ impl Plan {
                         m,
                         n: nn,
                         k,
+                        epi: StepEpi::None,
                     });
                 }
                 "broadcast" => {
@@ -441,22 +1080,7 @@ impl Plan {
                 ),
             }
 
-            // recycle slots whose values die here (operands last used by
-            // this instruction, or an output nobody consumes). Freed only
-            // *after* the output slot was taken, so an output never
-            // aliases a live operand; pinned (constant) slots never free.
-            for &op in &ins.operands {
-                if last_use[op] == i && !pinned[op] {
-                    if let Some(s) = slot_of[op].take() {
-                        free.push(s);
-                    }
-                }
-            }
-            if last_use[i] == i && !pinned[i] {
-                if let Some(s) = slot_of[i].take() {
-                    free.push(s);
-                }
-            }
+            recycle(i, &eff[i], &last_use, &pinned, &pinned_slot, &mut slot_of, &mut free);
         }
 
         let mut root = Vec::with_capacity(root_ids.len());
@@ -478,9 +1102,31 @@ impl Plan {
     }
 
     /// Number of compiled steps (≤ instruction count: constants and the
-    /// ROOT tuple are folded away).
+    /// ROOT tuple fold away, and the rewrite pass collapses whole fused
+    /// subgraphs into single steps).
     pub fn num_steps(&self) -> usize {
         self.steps.len()
+    }
+
+    /// Step kinds in program order — the observable shape of the
+    /// compiled plan, for tests and the bench smoke: `"param"`,
+    /// `"copy"`, `"bf16"`, `"binary"`, `"dot"`, `"dot_bias"`,
+    /// `"dot_bias_relu"`, `"im2col_gemm"`, `"gather"`.
+    pub fn step_names(&self) -> Vec<&'static str> {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Param { .. } => "param",
+                Step::Copy { .. } => "copy",
+                Step::Bf16 { .. } => "bf16",
+                Step::Binary { .. } => "binary",
+                Step::Dot { epi: StepEpi::None, .. } => "dot",
+                Step::Dot { epi: StepEpi::Bias(_), .. } => "dot_bias",
+                Step::Dot { epi: StepEpi::BiasRelu(_), .. } => "dot_bias_relu",
+                Step::Im2colGemm { .. } => "im2col_gemm",
+                Step::Gather { .. } => "gather",
+            })
+            .collect()
     }
 
     /// Number of arena slots (≤ live values at the widest point, not the
@@ -582,16 +1228,42 @@ impl Plan {
                     }
                     bufs.slots[*out] = o;
                 }
-                Step::Dot { a, b, out, m, n, k } => {
+                Step::Dot { a, b, out, m, n, k, epi } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let nthreads = threads_for(*m, *n, *k, threads);
-                    gemm_f32_into(
+                    let slots = &bufs.slots;
+                    let epilogue = match epi {
+                        StepEpi::None => Epilogue::None,
+                        StepEpi::Bias(s) => Epilogue::Bias(&slots[*s][..*n]),
+                        StepEpi::BiasRelu(s) => Epilogue::BiasRelu(&slots[*s][..*n]),
+                    };
+                    gemm_f32_fused_into(
                         &mut o[..m * n],
-                        &bufs.slots[*a][..m * k],
-                        &bufs.slots[*b][..k * n],
+                        &slots[*a][..m * k],
+                        PanelB::Matrix(&slots[*b][..k * n]),
                         *m,
                         *n,
                         *k,
+                        Accum::F64,
+                        epilogue,
+                        nthreads,
+                        &mut bufs.scratch,
+                    );
+                    bufs.slots[*out] = o;
+                }
+                Step::Im2colGemm { w, img, out, m, n, k, spec } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let nthreads = threads_for(*m, *n, *k, threads);
+                    let slots = &bufs.slots;
+                    gemm_f32_fused_into(
+                        &mut o[..m * n],
+                        &slots[*w][..m * k],
+                        PanelB::Im2col { img: &slots[*img], spec },
+                        *m,
+                        *n,
+                        *k,
+                        Accum::F32,
+                        Epilogue::None,
                         nthreads,
                         &mut bufs.scratch,
                     );
@@ -711,6 +1383,162 @@ ENTRY main {
         let plan = Plan::compile(&m).unwrap();
         assert!(plan.execute(&[&[0.0; 6][..]], 1).is_err(), "missing input");
         assert!(plan.execute(&[&[0.0; 5][..], &[0.0; 6][..]], 1).is_err(), "wrong length");
+    }
+
+    const MLP_TAIL: &str = r#"
+ENTRY main {
+  x = f32[2,3]{1,0} parameter(0)
+  w = f32[3,4]{1,0} parameter(1)
+  bias = f32[4]{0} parameter(2)
+  dot.1 = f32[2,4]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  rb.2 = f32[1,4]{1,0} reshape(bias)
+  ib.3 = f32[1,4]{1,0} broadcast(rb.2), dimensions={0,1}
+  rb2.4 = f32[4]{0} reshape(ib.3)
+  bb.5 = f32[2,4]{1,0} broadcast(rb2.4), dimensions={1}
+  add.6 = f32[2,4]{1,0} add(dot.1, bb.5)
+  zero.7 = f32[] constant(0)
+  zb.8 = f32[2,4]{1,0} broadcast(zero.7), dimensions={}
+  ROOT max.9 = f32[2,4]{1,0} maximum(add.6, zb.8)
+}
+"#;
+
+    #[test]
+    fn fuses_dot_bias_relu_and_dce_drops_the_zero_constant() {
+        let m = HloModule::parse(MLP_TAIL).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert_eq!(
+            plan.step_names(),
+            ["param", "param", "param", "dot_bias_relu"],
+            "identity-chain bias broadcast, the zero constant, and its \
+             broadcast must all fold into the epilogue"
+        );
+        // bit-identical to the interpreter on relu-active data
+        let x = [1f32, -2.0, 3.0, -4.0, 5.0, -6.0];
+        let w = [0.5f32; 12];
+        let bias = [-1.0f32, 0.25, 0.0, 2.0];
+        let got = plan.execute(&[&x, &w, &bias], 1).unwrap();
+        let want = m.evaluate(&[&x, &w, &bias]).unwrap();
+        assert_eq!(got[0].data, want[0].data);
+        assert!(got[0].data.iter().any(|&v| v == 0.0), "relu clamped something");
+    }
+
+    /// A 2-tap shifted multiply-add chain (the conv pattern at its
+    /// smallest): weights [2,2] × shifted windows of a [1,2,3] image.
+    const CONV_2TAP: &str = r#"
+ENTRY main {
+  w = f32[2,2]{1,0} parameter(0)
+  img = f32[1,2,3]{2,1,0} parameter(1)
+  s0 = f32[2,1]{1,0} slice(w), slice={[0:2], [0:1]}
+  r0 = f32[2]{0} reshape(s0)
+  bw0 = f32[2,1,2]{2,1,0} broadcast(r0), dimensions={0}
+  si0 = f32[1,1,2]{2,1,0} slice(img), slice={[0:1], [0:1], [0:2]}
+  ri0 = f32[1,2]{1,0} reshape(si0)
+  bi0 = f32[2,1,2]{2,1,0} broadcast(ri0), dimensions={1,2}
+  m0 = f32[2,1,2]{2,1,0} multiply(bw0, bi0)
+  s1 = f32[2,1]{1,0} slice(w), slice={[0:2], [1:2]}
+  r1 = f32[2]{0} reshape(s1)
+  bw1 = f32[2,1,2]{2,1,0} broadcast(r1), dimensions={0}
+  si1 = f32[1,1,2]{2,1,0} slice(img), slice={[0:1], [1:2], [1:3]}
+  ri1 = f32[1,2]{1,0} reshape(si1)
+  bi1 = f32[2,1,2]{2,1,0} broadcast(ri1), dimensions={1,2}
+  m1 = f32[2,1,2]{2,1,0} multiply(bw1, bi1)
+  ROOT acc = f32[2,1,2]{2,1,0} add(m0, m1)
+}
+"#;
+
+    #[test]
+    fn fuses_conv_chain_to_one_im2col_gemm() {
+        let m = HloModule::parse(CONV_2TAP).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert_eq!(plan.step_names(), ["param", "param", "im2col_gemm"]);
+        assert_eq!(plan.num_slots(), 3, "fused interiors take no arena slots");
+        let w = [2f32, 10.0, -3.0, 100.0];
+        let img = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let got = plan.execute(&[&w, &img], 1).unwrap();
+        // out[co, 0, x] = w[co,0]*img[0,0,x] + w[co,1]*img[0,1,1+x]
+        assert_eq!(got[0].dims, vec![2, 1, 2]);
+        assert_eq!(got[0].data, vec![52.0, 64.0, 497.0, 594.0]);
+        assert_eq!(got[0].data, m.evaluate(&[&w, &img]).unwrap()[0].data);
+    }
+
+    #[test]
+    fn shared_intermediates_block_fusion_but_stay_correct() {
+        // the dot feeds both the bias add AND the root tuple: fusing
+        // would hide a request output, so the rewrite must decline
+        let text = r#"
+ENTRY main {
+  x = f32[2,2]{1,0} parameter(0)
+  w = f32[2,2]{1,0} parameter(1)
+  bias = f32[2]{0} parameter(2)
+  dot.1 = f32[2,2]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  bb.2 = f32[2,2]{1,0} broadcast(bias), dimensions={1}
+  add.3 = f32[2,2]{1,0} add(dot.1, bb.2)
+  ROOT t = (f32[2,2]{1,0}, f32[2,2]{1,0}) tuple(add.3, dot.1)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert!(
+            plan.step_names().iter().all(|&s| s != "dot_bias"),
+            "multi-use dot must not fuse: {:?}",
+            plan.step_names()
+        );
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let w = [1f32, 0.0, 0.0, 1.0];
+        let bias = [10f32, 20.0];
+        let got = plan.execute(&[&x, &w, &bias], 1).unwrap();
+        let want = m.evaluate(&[&x, &w, &bias]).unwrap();
+        assert_eq!(got[0].data, want[0].data);
+        assert_eq!(got[1].data, want[1].data);
+    }
+
+    #[test]
+    fn swapped_maximum_operands_do_not_fuse_as_relu() {
+        // maximum(broadcast(0), value) is NOT fused (zero-sign exactness);
+        // the bias add below it still fuses and the result stays correct
+        let text = r#"
+ENTRY main {
+  x = f32[2,2]{1,0} parameter(0)
+  w = f32[2,2]{1,0} parameter(1)
+  bias = f32[2]{0} parameter(2)
+  dot.1 = f32[2,2]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  bb.2 = f32[2,2]{1,0} broadcast(bias), dimensions={1}
+  add.3 = f32[2,2]{1,0} add(dot.1, bb.2)
+  zero.4 = f32[] constant(0)
+  zb.5 = f32[2,2]{1,0} broadcast(zero.4), dimensions={}
+  ROOT max.6 = f32[2,2]{1,0} maximum(zb.5, add.3)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|&s| s != "dot_bias_relu"), "{names:?}");
+        assert!(names.iter().any(|&s| s == "dot_bias"), "{names:?}");
+        let x = [-1f32, 0.0, 0.0, -1.0];
+        let w = [5f32, -7.0, 2.0, 9.0];
+        let bias = [0.5f32, -0.5];
+        let got = plan.execute(&[&x, &w, &bias], 1).unwrap();
+        assert_eq!(got[0].data, m.evaluate(&[&x, &w, &bias]).unwrap()[0].data);
+    }
+
+    #[test]
+    fn mismatched_bias_add_is_rejected_not_fused() {
+        // add.3 declares [3,2] over a [2,2] dot: the matcher must decline
+        // (its dims differ from the dot's [m,n]) so the strict elementwise
+        // lowering still reports the shape mismatch at compile time
+        let text = r#"
+ENTRY main {
+  x = f32[2,2]{1,0} parameter(0)
+  w = f32[2,2]{1,0} parameter(1)
+  bias = f32[2]{0} parameter(2)
+  dot.1 = f32[2,2]{1,0} dot(x, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  bb.2 = f32[3,2]{1,0} broadcast(bias), dimensions={1}
+  ROOT add.3 = f32[3,2]{1,0} add(dot.1, bb.2)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let e = Plan::compile(&m).unwrap_err().to_string();
+        assert!(e.contains("shape mismatch"), "{e}");
     }
 
     #[test]

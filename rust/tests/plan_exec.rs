@@ -127,6 +127,24 @@ fn arena_never_aliases_two_live_values() {
                 a.elems
             );
         }
+        // pinned (constant) slots are dedicated and immortal: live to the
+        // end and never shared with another value — the compile-time
+        // recycler also asserts they never reach the free list
+        for a in assigns {
+            if !a.pinned {
+                continue;
+            }
+            assert_eq!(a.last_use, usize::MAX, "{name}: pinned '{}' must stay live", a.name);
+            for b in assigns {
+                assert!(
+                    a.instr == b.instr || a.slot != b.slot,
+                    "{name}: pinned slot {} shared by '{}' and '{}'",
+                    a.slot,
+                    a.name,
+                    b.name
+                );
+            }
+        }
         assert!(plan.num_slots() <= module.num_instructions(), "{name}");
         if module.num_instructions() > 50 {
             assert!(
@@ -161,6 +179,206 @@ fn buffer_reuse_is_stateless_across_requests() {
         for ((f, a), fr) in first.iter().zip(&again).zip(&fresh1) {
             assert_bitwise_eq(name, "reused-vs-reused", &a.data, &f.data);
             assert_bitwise_eq(name, "reused-vs-fresh", &f.data, &fr.data);
+        }
+    }
+}
+
+/// The rewrite-pass acceptance bar: the 299-instruction conv fixture
+/// must compile to a single fused im2col GEMM (plus the parameter
+/// copies), and the MLP must fuse both post-dot tails into epilogues.
+#[test]
+fn conv_fixture_compiles_to_a_single_im2col_gemm() {
+    for (name, _, plan, _) in fixture_plans() {
+        let names = plan.step_names();
+        match name {
+            "conv2d_k3" => {
+                assert_eq!(
+                    names,
+                    ["param", "param", "im2col_gemm"],
+                    "conv must collapse to one fused GEMM"
+                );
+                assert!(plan.num_steps() <= 10, "{} steps", plan.num_steps());
+            }
+            "mlp_b32" => {
+                let fused: Vec<&str> = names
+                    .iter()
+                    .copied()
+                    .filter(|s| s.starts_with("dot"))
+                    .collect();
+                assert_eq!(
+                    fused,
+                    ["dot_bias_relu", "dot_bias"],
+                    "both MLP layers must fuse their epilogues: {names:?}"
+                );
+                assert!(
+                    names.iter().all(|&s| s != "binary" && s != "gather"),
+                    "no post-dot sweeps may remain: {names:?}"
+                );
+            }
+            // pure GEMM graphs have nothing to fuse (bf16 keeps its
+            // convert round-trip: a "bf16" and a "copy" step per input)
+            _ => assert!(
+                names.iter().all(|&s| matches!(s, "param" | "dot" | "bf16" | "copy")),
+                "{name}: {names:?}"
+            ),
+        }
+    }
+}
+
+/// Generate the HLO text of a `k3` convolution the way
+/// `python/compile/aot.py` lowers it (9·Cin shifted multiply-add taps),
+/// for boundary-shape coverage beyond the committed fixture.
+fn gen_conv_hlo(cout: usize, cin: usize, h: usize, w: usize) -> String {
+    let (ih, iw) = (h + 2, w + 2);
+    let kk = 9 * cin;
+    let od = format!("f32[{cout},{h},{w}]{{2,1,0}}");
+    let mut s = String::from("HloModule jit_conv_gen\n\nENTRY main {\n");
+    s.push_str(&format!("  Arg_0.1 = f32[{cout},{kk}]{{1,0}} parameter(0)\n"));
+    s.push_str(&format!("  Arg_1.2 = f32[{cin},{ih},{iw}]{{2,1,0}} parameter(1)\n"));
+    let mut prev: Option<String> = None;
+    let mut first_mul = String::new();
+    let mut id = 3usize;
+    for c in 0..cin {
+        for dy in 0..3 {
+            for dx in 0..3 {
+                let t = c * 9 + dy * 3 + dx;
+                s.push_str(&format!(
+                    "  s{id} = f32[{cout},1]{{1,0}} slice(Arg_0.1), slice={{[0:{cout}], [{t}:{}]}}\n",
+                    t + 1
+                ));
+                s.push_str(&format!("  r{id} = f32[{cout}]{{0}} reshape(s{id})\n"));
+                s.push_str(&format!("  bw{id} = {od} broadcast(r{id}), dimensions={{0}}\n"));
+                s.push_str(&format!(
+                    "  si{id} = f32[1,{h},{w}]{{2,1,0}} slice(Arg_1.2), \
+                     slice={{[{c}:{}], [{dy}:{}], [{dx}:{}]}}\n",
+                    c + 1,
+                    dy + h,
+                    dx + w
+                ));
+                s.push_str(&format!("  ri{id} = f32[{h},{w}]{{1,0}} reshape(si{id})\n"));
+                s.push_str(&format!("  bi{id} = {od} broadcast(ri{id}), dimensions={{1,2}}\n"));
+                s.push_str(&format!("  m{id} = {od} multiply(bw{id}, bi{id})\n"));
+                if t == 0 {
+                    first_mul = format!("m{id}");
+                } else {
+                    let lhs = if t == 1 {
+                        first_mul.clone()
+                    } else {
+                        prev.clone().expect("chain in progress")
+                    };
+                    s.push_str(&format!("  a{id} = {od} add({lhs}, m{id})\n"));
+                    prev = Some(format!("a{id}"));
+                }
+                id += 1;
+            }
+        }
+    }
+    s.push_str(&format!(
+        "  ROOT tup = ({od}) tuple({})\n}}\n",
+        prev.expect("at least two taps")
+    ));
+    s
+}
+
+/// Boundary shapes for the im2col gather: 1×1 spatial output, Cin=1,
+/// Cout and H·W far off the 8-wide microkernel tiles. Every shape must
+/// fuse to a single im2col GEMM and stay bit-identical to the
+/// interpreter.
+#[test]
+fn conv_boundary_shapes_fuse_and_match_interpreter_bitwise() {
+    let mut rng = Rng::new(0x51de);
+    for &(cout, cin, h, w) in
+        &[(8usize, 1usize, 1usize, 1usize), (5, 1, 3, 5), (3, 2, 4, 7), (16, 2, 2, 9), (1, 1, 1, 2)]
+    {
+        let text = gen_conv_hlo(cout, cin, h, w);
+        let module = HloModule::parse(&text).expect("generated conv parses");
+        let plan = Plan::compile(&module).expect("generated conv compiles");
+        assert_eq!(
+            plan.step_names(),
+            ["param", "param", "im2col_gemm"],
+            "cout={cout} cin={cin} {h}x{w}"
+        );
+        for round in 0..3usize {
+            let wts = rng.f32_vec(cout * 9 * cin);
+            let img = rng.f32_vec(cin * (h + 2) * (w + 2));
+            let want = module.evaluate(&[&wts, &img]).unwrap();
+            let got = plan.execute(&[&wts, &img], 1 + round % 2).unwrap();
+            assert_eq!(got[0].dims, vec![cout, h, w]);
+            assert_bitwise_eq(
+                "conv_boundary",
+                &format!("cout={cout} cin={cin} {h}x{w} round {round}"),
+                &got[0].data,
+                &want[0].data,
+            );
+        }
+    }
+}
+
+/// Every `Epilogue` variant against the interpreter: a dot with no
+/// tail, a bias tail, and a bias+relu tail, at shapes straddling the
+/// microkernel tiles, must all be bitwise identical to the unfused
+/// instruction-by-instruction walk.
+#[test]
+fn epilogue_variants_match_interpreter_bitwise() {
+    fn gen_dot_hlo(m: usize, n: usize, k: usize, tail: &str) -> String {
+        let mut s = String::from("HloModule jit_dot_epi\n\nENTRY main {\n");
+        s.push_str(&format!("  x = f32[{m},{k}]{{1,0}} parameter(0)\n"));
+        s.push_str(&format!("  w = f32[{k},{n}]{{1,0}} parameter(1)\n"));
+        s.push_str(&format!("  bias = f32[{n}]{{0}} parameter(2)\n"));
+        s.push_str(&format!(
+            "  dot.1 = f32[{m},{n}]{{1,0}} dot(x, w), \
+             lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n"
+        ));
+        let root = match tail {
+            "none" => {
+                // bias still consumed so the parameter count is uniform
+                s.push_str(&format!("  bb.2 = f32[{m},{n}]{{1,0}} broadcast(bias), dimensions={{1}}\n"));
+                s.push_str(&format!("  mul.3 = f32[{m},{n}]{{1,0}} multiply(bb.2, bb.2)\n"));
+                s.push_str(&format!("  sub.4 = f32[{m},{n}]{{1,0}} multiply(dot.1, mul.3)\n"));
+                "sub.4"
+            }
+            "bias" => {
+                s.push_str(&format!("  bb.2 = f32[{m},{n}]{{1,0}} broadcast(bias), dimensions={{1}}\n"));
+                s.push_str(&format!("  add.3 = f32[{m},{n}]{{1,0}} add(dot.1, bb.2)\n"));
+                "add.3"
+            }
+            _ => {
+                s.push_str(&format!("  bb.2 = f32[{m},{n}]{{1,0}} broadcast(bias), dimensions={{1}}\n"));
+                s.push_str(&format!("  add.3 = f32[{m},{n}]{{1,0}} add(dot.1, bb.2)\n"));
+                s.push_str("  zero.4 = f32[] constant(0)\n");
+                s.push_str(&format!("  zb.5 = f32[{m},{n}]{{1,0}} broadcast(zero.4), dimensions={{}}\n"));
+                s.push_str(&format!("  max.6 = f32[{m},{n}]{{1,0}} maximum(add.3, zb.5)\n"));
+                "max.6"
+            }
+        };
+        s.push_str(&format!("  ROOT tup = (f32[{m},{n}]{{1,0}}) tuple({root})\n}}\n"));
+        s
+    }
+    let mut rng = Rng::new(0xe9109);
+    for &(m, n, k) in &[(32usize, 128usize, 64usize), (5, 7, 300), (9, 17, 3), (1, 1, 1)] {
+        for tail in ["none", "bias", "bias_relu"] {
+            let text = gen_dot_hlo(m, n, k, tail);
+            let module = HloModule::parse(&text).expect("generated dot parses");
+            let plan = Plan::compile(&module).expect("generated dot compiles");
+            let names = plan.step_names();
+            match tail {
+                "bias" => assert!(names.contains(&"dot_bias"), "{names:?}"),
+                "bias_relu" => assert!(names.contains(&"dot_bias_relu"), "{names:?}"),
+                _ => assert!(names.contains(&"dot"), "{names:?}"),
+            }
+            for round in 0..2usize {
+                let x = rng.f32_vec(m * k);
+                let w = rng.f32_vec(k * n);
+                let bias = rng.f32_vec(n);
+                let want = module.evaluate(&[&x, &w, &bias]).unwrap();
+                let got = plan.execute(&[&x, &w, &bias], 1 + round).unwrap();
+                assert_bitwise_eq(
+                    "dot_epilogue",
+                    &format!("m={m} n={n} k={k} tail={tail} round {round}"),
+                    &got[0].data,
+                    &want[0].data,
+                );
+            }
         }
     }
 }
