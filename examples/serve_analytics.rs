@@ -3,9 +3,11 @@
 //! transaction, with model agility (three model families served at once).
 //!
 //! Loads the AOT artifacts (JAX serving graphs → HLO text), starts the
-//! coordinator (router + dynamic batcher over the native compiled-plan
-//! runtime), fires a mixed workload from concurrent client threads, and
-//! reports throughput + latency percentiles + batch occupancy.
+//! coordinator with **two engine shards** (router + dynamic batcher over
+//! the native compiled-plan runtime, both shards drawing GEMM workers
+//! from the one process-wide device pool), fires a mixed workload from
+//! concurrent client threads, and reports throughput + latency
+//! percentiles + batch occupancy.
 //!
 //! Run: `cargo run --release --example serve_analytics`
 //! (the embedded artifact set is materialized automatically)
@@ -20,13 +22,19 @@ fn main() -> power_mma::error::Result<()> {
     if power_mma::runtime::artifacts::ensure_artifacts(&dir)? {
         println!("(materialized embedded AOT artifacts into {})", dir.display());
     }
-    let cfg = CoordinatorConfig::default();
+    // two engine shards behind one process-wide device pool: requests
+    // route round-robin, GEMM workers stay within the shared budget
+    let cfg = CoordinatorConfig { shards: 2, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let dir2 = dir.clone();
-    let coord = Arc::new(Coordinator::start(cfg.clone(), weights, move || {
+    let coord = Arc::new(Coordinator::start(cfg.clone(), weights, move |shard| {
         let mut rt = Runtime::cpu(&dir2)?;
         let names = rt.load_all()?;
-        println!("engine: loaded {names:?} on platform {}", rt.platform());
+        println!(
+            "engine shard {shard}: loaded {names:?} on platform {} ({} pool workers)",
+            rt.platform(),
+            rt.device().threads()
+        );
         Ok(rt)
     }));
 

@@ -37,8 +37,8 @@ impl InferenceEngine for SyntheticEngine {
 fn drive(cfg: CoordinatorConfig, n: usize, engine_cost: Duration) -> (f64, u64, f64) {
     let weights = MlpWeights::deterministic(&cfg);
     let cfg2 = cfg.clone();
-    let coord = Coordinator::start(cfg.clone(), weights, move || {
-        Ok(SyntheticEngine { cost: engine_cost, cfg: cfg2 })
+    let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
+        Ok(SyntheticEngine { cost: engine_cost, cfg: cfg2.clone() })
     });
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(n);
@@ -68,40 +68,50 @@ fn main() {
     println!("{}", table.render());
     println!("batching amortizes the fixed per-call cost: throughput scales with batch size\n");
 
-    // the real native engine (plan backend) over the AOT artifacts
+    // the real native engine (plan backend) over the AOT artifacts,
+    // swept across coordinator shard counts — every shard's runtime
+    // shares the process-wide device pool, so this measures engine
+    // concurrency at a fixed GEMM worker budget
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if power_mma::runtime::artifacts::ensure_artifacts(&dir).is_ok() {
-        let cfg = CoordinatorConfig::default();
-        let weights = MlpWeights::deterministic(&cfg);
-        let dir2 = dir.clone();
-        let coord = Coordinator::start(cfg.clone(), weights, move || {
-            let mut rt = Runtime::cpu(&dir2)?;
-            rt.load_all()?;
-            Ok(rt)
-        });
-        // warm up (first call compiles/faults in)
-        let (_, rx) = coord.submit(Payload::Classify { features: det_input(cfg.features, 0) });
-        rx.recv().unwrap().result.unwrap();
-        let n = 5000;
-        let t0 = Instant::now();
-        let mut rxs = Vec::with_capacity(n);
-        for i in 0..n {
-            rxs.push(
-                coord.submit(Payload::Classify { features: det_input(cfg.features, i as u64) }).1,
+        for shards in [1usize, 2] {
+            let cfg = CoordinatorConfig { shards, ..Default::default() };
+            let weights = MlpWeights::deterministic(&cfg);
+            let dir2 = dir.clone();
+            let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
+                let mut rt = Runtime::cpu(&dir2)?;
+                rt.load_all()?;
+                Ok(rt)
+            });
+            // warm up every shard (first call compiles/faults in)
+            for _ in 0..shards * 2 {
+                let (_, rx) =
+                    coord.submit(Payload::Classify { features: det_input(cfg.features, 0) });
+                rx.recv().unwrap().result.unwrap();
+            }
+            let n = 5000;
+            let t0 = Instant::now();
+            let mut rxs = Vec::with_capacity(n);
+            for i in 0..n {
+                rxs.push(
+                    coord
+                        .submit(Payload::Classify { features: det_input(cfg.features, i as u64) })
+                        .1,
+                );
+            }
+            for rx in rxs {
+                rx.recv().unwrap().result.unwrap();
+            }
+            let dt = t0.elapsed();
+            let stats = coord.shutdown();
+            println!(
+                "real plan-backend engine, {shards} shard(s) (mlp_b32, fused epilogues): \
+                 {n} requests in {dt:.2?} -> {:.0} req/s, p50 {} us, occupancy {:.1}",
+                n as f64 / dt.as_secs_f64(),
+                stats.latency.quantile_us(0.5),
+                stats.mean_batch_occupancy()
             );
         }
-        for rx in rxs {
-            rx.recv().unwrap().result.unwrap();
-        }
-        let dt = t0.elapsed();
-        let stats = coord.shutdown();
-        println!(
-            "real plan-backend engine (mlp_b32 serving graph, fused epilogues): \
-             {n} requests in {dt:.2?} -> {:.0} req/s, p50 {} us, occupancy {:.1}",
-            n as f64 / dt.as_secs_f64(),
-            stats.latency.quantile_us(0.5),
-            stats.mean_batch_occupancy()
-        );
     } else {
         println!("(skipping native-engine phase: artifact directory unavailable)");
     }

@@ -4,26 +4,34 @@
 //!
 //! Structure (BLIS-style cache tiling):
 //!
-//! * **NC / KC / MC loops** walk `C = A·B` in cache-sized blocks;
-//! * the **B block** (`KC × NC`) is packed once per (jc, kc) iteration
-//!   into `NR`-wide row panels and shared (read-only) by all workers;
-//! * each worker packs its **A micropanels** (`MR × KC`, column-major)
-//!   with [`crate::kernels::pack::pack_a_panel_f32`] — the same layout
-//!   machinery the MMA kernel hosts use — and runs the
+//! * the **column (jc) loop is the parallel axis**: the `n` output
+//!   columns are split into per-worker chunks of whole `NR` panels, and
+//!   each worker owns everything for its chunk — packing the `KC ×
+//!   chunk` B panels (including the im2col gather of a fused
+//!   convolution, so small-`Cout` conv shapes parallelize even when `m`
+//!   is a single `MR` panel), packing `MR × KC` A micropanels with
+//!   [`crate::kernels::pack::pack_a_panel_f32`], and running the
 //!   **`MR×NR` microkernel**: per `k` step, one packed A column and one
 //!   packed B row feed a rank-1 update of an `MR×NR` accumulator block,
 //!   exactly the `xvf32ger` shape of the paper scaled up to registers;
-//! * the **M-panel loop is parallelized** over a scoped `std::thread`
-//!   worker pool sized from `available_parallelism()`. Workers own
-//!   disjoint row ranges of `C`, join before the call returns, and no
-//!   `Send` requirement leaks to the caller — the threading model is
-//!   compatible with the coordinator's thread-confined engine.
+//! * **NC / KC / MC loops** walk each chunk in cache-sized blocks, `kc`
+//!   ascending inside the chunk so every `C` element still accumulates
+//!   in strictly ascending `k` order;
+//! * **how workers run is a policy**, [`Par`]: inline ([`Par::Seq`]),
+//!   legacy per-call scoped threads ([`Par::Scoped`], kept for the
+//!   `bench serve` comparison), or — the serving default — the
+//!   **persistent worker pool** of a
+//!   [`Device`](crate::runtime::device::Device) via the blocking
+//!   [`par_for`](crate::rt::ThreadPool::par_for) primitive
+//!   ([`Par::Pool`]): no thread is spawned or joined on the hot path.
 //!
 //! **Numerics contract:** every `C` element accumulates its `k` products
 //! in strictly ascending order (the microkernel loads the running sum
 //! before a `k` block and stores it after), in one of two accumulation
 //! modes that each replicate one interpreter path bit for bit — tiling,
-//! packing, and thread count never change a ULP:
+//! packing, worker count, *and worker mode* never change a ULP (each
+//! element is computed by exactly one worker, in the same order, from
+//! the same packed values):
 //!
 //! * [`Accum::F64`] (the `dot` mode): products and sums carried in `f64`,
 //!   one final narrowing store — bit-identical to the `f64`-widened
@@ -49,7 +57,9 @@
 //! materialized.
 //!
 //! ```
-//! use power_mma::blas::block_gemm::{gemm_f32_fused_into, Accum, Epilogue, GemmScratch, PanelB};
+//! use power_mma::blas::block_gemm::{
+//!     gemm_f32_fused_into, Accum, Epilogue, GemmScratch, PanelB, Par,
+//! };
 //!
 //! // C = relu(A·B + bias) in one pass: the bias add and the relu happen
 //! // at the C-tile writeback, not as extra output-sized sweeps.
@@ -60,12 +70,14 @@
 //! let mut scratch = GemmScratch::new();
 //! gemm_f32_fused_into(
 //!     &mut c, &a, PanelB::Matrix(&b), 2, 2, 2,
-//!     Accum::F64, Epilogue::BiasRelu(&bias), 1, &mut scratch,
+//!     Accum::F64, Epilogue::BiasRelu(&bias), Par::Seq, &mut scratch,
 //! );
 //! assert_eq!(c, [1.5, 0.0, 3.5, 0.0]);
 //! ```
 
 use crate::kernels::pack::{pack_a_panel_f32, pack_b_im2col_f32, pack_b_panel_f32, Im2colSpec};
+use crate::rt::ThreadPool;
+use std::sync::Mutex;
 
 /// Microkernel register-block rows (the 8 of the paper's `8×8` DGEMM and
 /// `8×16` SGEMM virtual accumulators).
@@ -79,21 +91,98 @@ pub const KC: usize = 256;
 /// Cache-block columns of the packed B block (L2/L3 residency).
 pub const NC: usize = 512;
 
-/// Approximate flop count (`2·m·n·k`) below which the M-panel loop runs
-/// inline instead of spawning workers — batched-MLP-sized dots stay on
-/// the latency path, 128³-and-up GEMM tiles fan out.
+/// Approximate flop count (`2·m·n·k`) below which a **scoped-spawn** GEMM
+/// runs inline instead of spawning workers — spawning and joining OS
+/// threads only pays for 128³-and-up tiles.
 pub const PAR_FLOP_THRESHOLD: usize = 2_000_000;
 
-/// Reusable scratch for [`gemm_f32_into`]: the `f64` accumulation image
-/// of `C`, the packed B block, and one packed-A-panel buffer per worker.
-/// Holding one per compiled plan means a serving request performs **no
-/// GEMM-sized allocation** — buffers are grown once
-/// ([`GemmScratch::reserve`], or lazily on first use) and reused for
-/// every request.
+/// The lower fan-out bar for the **persistent pool** ([`Par::Pool`]):
+/// dispatch is a queue push, not a thread spawn, so conv-shaped im2col
+/// GEMMs (`m=8, n=H·W, k=9·Cin` ≈ 0.9 Mflop) fan out while batched-MLP
+/// dots (≈ 0.5 Mflop) stay on the serial latency path.
+pub const POOL_PAR_FLOP_THRESHOLD: usize = 600_000;
+
+/// How a GEMM call runs its column-chunk workers — the execution policy
+/// the caller (normally [`crate::runtime::plan::Plan`] via a
+/// [`Device`](crate::runtime::device::Device)) picks per step.
+#[derive(Clone, Copy)]
+pub enum Par<'a> {
+    /// Serial on the calling thread.
+    Seq,
+    /// Spawn scoped threads for this call and join them before returning
+    /// (the legacy pre-device behavior, kept for pool-less callers and
+    /// for `bench serve`'s scoped-vs-persistent comparison).
+    Scoped(usize),
+    /// Fan out over a persistent worker pool (the device pool), capped
+    /// at the given worker count. The calling thread participates, so
+    /// several engines sharing one pool all make progress.
+    Pool(&'a ThreadPool, usize),
+}
+
+impl<'a> Par<'a> {
+    /// The worker cap of this policy (1 for [`Par::Seq`]).
+    pub fn cap(&self) -> usize {
+        match *self {
+            Par::Seq => 1,
+            Par::Scoped(t) | Par::Pool(_, t) => t.max(1),
+        }
+    }
+
+    /// Apply the per-GEMM fan-out policy for an `m×n×k` problem: below
+    /// the mode's flop threshold the step runs serial ([`Par::Seq`]),
+    /// otherwise the cap is clamped to the column-panel count (the
+    /// parallel axis — see [`threads_for`] / [`threads_for_pooled`]).
+    pub fn for_gemm(&self, m: usize, n: usize, k: usize) -> Par<'a> {
+        match *self {
+            Par::Seq => Par::Seq,
+            Par::Scoped(t) => match threads_for(m, n, k, t) {
+                1 => Par::Seq,
+                w => Par::Scoped(w),
+            },
+            Par::Pool(p, t) => match threads_for_pooled(m, n, k, t) {
+                1 => Par::Seq,
+                w => Par::Pool(p, w),
+            },
+        }
+    }
+
+    /// Run `f(0..tasks)` to completion under this policy.
+    fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        match *self {
+            Par::Seq => {
+                for i in 0..tasks {
+                    f(i);
+                }
+            }
+            Par::Scoped(_) => std::thread::scope(|s| {
+                for i in 1..tasks {
+                    s.spawn(move || f(i));
+                }
+                f(0);
+            }),
+            Par::Pool(pool, _) => pool.par_for(tasks, f),
+        }
+    }
+}
+
+/// Reusable scratch for [`gemm_f32_fused_into`]: the `f64` accumulation
+/// image of `C` (column-chunk-blocked during the parallel phase) and one
+/// packed-B-block plus packed-A-panel buffer **per column-chunk worker**
+/// (each worker packs its own columns — including im2col gathers — so
+/// there is no shared packing phase to serialize on). Holding one per
+/// compiled plan means a serving request performs **no GEMM-sized
+/// allocation** — buffers are grown once ([`GemmScratch::reserve`], or
+/// lazily on first use) and reused for every request.
 #[derive(Default)]
 pub struct GemmScratch {
     c64: Vec<f64>,
-    bp: Vec<f32>,
+    bp: Vec<Vec<f32>>,
     ap: Vec<Vec<f32>>,
 }
 
@@ -106,25 +195,45 @@ impl GemmScratch {
     /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
     /// workers allocates nothing.
     pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
+        let (nchunks, cols_per) = chunk_plan(n, threads.max(1));
+        self.reserve_chunks(m, n, k, nchunks, cols_per);
+    }
+
+    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
         let c_need = m * n;
         if self.c64.len() < c_need {
             self.c64.resize(c_need, 0.0);
         }
-        let bp_need = KC.min(k.max(1)) * n.min(NC).div_ceil(NR) * NR;
-        if self.bp.len() < bp_need {
-            self.bp.resize(bp_need, 0.0);
+        let bp_need = KC.min(k.max(1)) * NC.min(cols_per.max(NR));
+        if self.bp.len() < nchunks {
+            self.bp.resize_with(nchunks, Vec::new);
         }
-        let workers = threads.clamp(1, m.max(1).div_ceil(MR));
-        if self.ap.len() < workers {
-            self.ap.resize_with(workers, Vec::new);
+        for b in &mut self.bp[..nchunks] {
+            if b.len() < bp_need {
+                b.resize(bp_need, 0.0);
+            }
         }
         let ap_need = KC.min(k.max(1)) * MR;
-        for apb in &mut self.ap[..workers] {
-            if apb.len() < ap_need {
-                apb.resize(ap_need, 0.0);
+        if self.ap.len() < nchunks {
+            self.ap.resize_with(nchunks, Vec::new);
+        }
+        for a in &mut self.ap[..nchunks] {
+            if a.len() < ap_need {
+                a.resize(ap_need, 0.0);
             }
         }
     }
+}
+
+/// The column-chunk decomposition of an `n`-column GEMM over up to `cap`
+/// workers: each chunk is a whole number of `NR` panels, and
+/// `(nchunks, cols_per)` satisfies `nchunks <= cap` and
+/// `nchunks * cols_per >= n`.
+fn chunk_plan(n: usize, cap: usize) -> (usize, usize) {
+    let col_panels = n.max(1).div_ceil(NR);
+    let cap = cap.clamp(1, col_panels);
+    let cols_per = col_panels.div_ceil(cap) * NR;
+    (n.max(1).div_ceil(cols_per), cols_per)
 }
 
 /// Accumulation mode of the microkernel — each mode is bit-identical to
@@ -207,25 +316,41 @@ impl PanelB<'_> {
     }
 }
 
-/// Pick the worker count for an `m×n×k` GEMM: at most `max_threads`, at
-/// most one worker per `MR`-row panel, and 1 when the problem is below
-/// [`PAR_FLOP_THRESHOLD`].
-pub fn threads_for(m: usize, n: usize, k: usize, max_threads: usize) -> usize {
+/// The shared fan-out rule: 1 worker below `threshold` flops
+/// (`2·m·n·k`), otherwise `max_threads` clamped to the `NR`-column
+/// panel count (the parallel axis).
+fn threads_for_with(m: usize, n: usize, k: usize, max_threads: usize, threshold: usize) -> usize {
     let work = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
-    if work < PAR_FLOP_THRESHOLD {
+    if work < threshold {
         return 1;
     }
-    max_threads.clamp(1, m.div_ceil(MR))
+    max_threads.clamp(1, n.div_ceil(NR).max(1))
+}
+
+/// Pick the **scoped-spawn** worker count for an `m×n×k` GEMM: at most
+/// `max_threads`, at most one worker per `NR`-column panel (the parallel
+/// axis), and 1 when the problem is below [`PAR_FLOP_THRESHOLD`].
+pub fn threads_for(m: usize, n: usize, k: usize, max_threads: usize) -> usize {
+    threads_for_with(m, n, k, max_threads, PAR_FLOP_THRESHOLD)
+}
+
+/// Pick the **persistent-pool** worker count for an `m×n×k` GEMM: same
+/// clamps as [`threads_for`] but with the lower
+/// [`POOL_PAR_FLOP_THRESHOLD`] bar — pool dispatch is cheap enough that
+/// conv-shaped im2col GEMMs fan out.
+pub fn threads_for_pooled(m: usize, n: usize, k: usize, max_threads: usize) -> usize {
+    threads_for_with(m, n, k, max_threads, POOL_PAR_FLOP_THRESHOLD)
 }
 
 /// `C = A·B` into a caller-provided `c` (`m×n`, row-major, fully
 /// overwritten). `a` is `m×k`, `b` is `k×n`, both row-major and
-/// contiguous. Exactly `threads` scoped workers are used (clamped to the
-/// number of `MR`-row panels; 1 runs inline without spawning) and joined
-/// before the call returns — callers pick the policy, typically via
-/// [`threads_for`]. Shorthand for [`gemm_f32_fused_into`] with a plain
-/// matrix B, `f64` accumulation, and no epilogue; see the module docs for
-/// the numerics contract.
+/// contiguous. Legacy scoped-thread entry point: `threads` workers are
+/// spawned per call (1 runs inline) and joined before the call returns —
+/// callers pick the policy, typically via [`threads_for`]. Shorthand for
+/// [`gemm_f32_fused_into`] with a plain matrix B, `f64` accumulation, no
+/// epilogue, and [`Par::Scoped`]; the serving path passes [`Par::Pool`]
+/// instead. See the module docs for the numerics contract (both modes
+/// produce identical bits).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32_into(
     c: &mut [f32],
@@ -237,26 +362,17 @@ pub fn gemm_f32_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
-    gemm_f32_fused_into(
-        c,
-        a,
-        PanelB::Matrix(b),
-        m,
-        n,
-        k,
-        Accum::F64,
-        Epilogue::None,
-        threads,
-        scratch,
-    );
+    let par = if threads <= 1 { Par::Seq } else { Par::Scoped(threads) };
+    gemm_f32_fused_into(c, a, PanelB::Matrix(b), m, n, k, Accum::F64, Epilogue::None, par, scratch);
 }
 
 /// The full fused GEMM: `C = epilogue(A·B)` with a pluggable B-panel
-/// source ([`PanelB`]), accumulation mode ([`Accum`]), and writeback
-/// epilogue ([`Epilogue`]). `c` is `m×n` row-major (fully overwritten),
-/// `a` is `m×k` row-major contiguous. Threading as in
-/// [`gemm_f32_into`]; the epilogue runs on the final single-threaded
-/// narrowing pass, so workers never see it.
+/// source ([`PanelB`]), accumulation mode ([`Accum`]), writeback
+/// epilogue ([`Epilogue`]), and worker policy ([`Par`]). `c` is `m×n`
+/// row-major (fully overwritten), `a` is `m×k` row-major contiguous.
+/// The column chunks are distributed per `par` and joined (or drained)
+/// before the call returns; the epilogue runs on the final
+/// single-threaded narrowing pass, so workers never see it.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32_fused_into(
     c: &mut [f32],
@@ -267,7 +383,7 @@ pub fn gemm_f32_fused_into(
     k: usize,
     accum: Accum,
     epilogue: Epilogue<'_>,
-    threads: usize,
+    par: Par<'_>,
     scratch: &mut GemmScratch,
 ) {
     assert_eq!(a.len(), m * k, "A must be m*k");
@@ -287,60 +403,58 @@ pub fn gemm_f32_fused_into(
     if m == 0 || n == 0 {
         return;
     }
-    scratch.reserve(m, n, k, threads);
+    let (nchunks, cols_per) = chunk_plan(n, par.cap());
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
     let c64 = &mut scratch.c64[..m * n];
     c64.fill(0.0);
     if k > 0 {
-        let nthreads = threads.clamp(1, m.div_ceil(MR));
-        // rows per worker, rounded up to whole MR panels
-        let rows_per = m.div_ceil(MR).div_ceil(nthreads) * MR;
-        let ap_slots = &mut scratch.ap[..nthreads];
-        for jc in (0..n).step_by(NC) {
-            let ncl = NC.min(n - jc);
-            for kc0 in (0..k).step_by(KC) {
-                let kcl = KC.min(k - kc0);
-                // the F32 chain *assigns* its first product (kc0 == 0)
-                // instead of accumulating into the zeroed image, so even
-                // the sign of a zero product matches the interpreter
-                let first = accum == Accum::F32 && kc0 == 0;
-                // pack the KC×NC block of B into NR-wide row panels:
-                // panel jp at bp[jp*kcl*NR ..], element (p, j) at p*NR + j
-                let n_panels = ncl.div_ceil(NR);
-                let bp = &mut scratch.bp[..n_panels * kcl * NR];
-                for jp in 0..n_panels {
-                    let j0 = jc + jp * NR;
-                    let cols = NR.min(n - j0);
-                    let panel = &mut bp[jp * kcl * NR..(jp + 1) * kcl * NR];
-                    b.pack(n, kc0, kcl, j0, cols, NR, panel);
-                }
-                let bp = &*bp;
-                if nthreads == 1 {
-                    let ap0 = &mut ap_slots[0];
-                    worker(c64, a, bp, ap0, 0, m, m, k, n, kc0, kcl, jc, ncl, accum, first);
-                } else {
-                    std::thread::scope(|s| {
-                        let chunks = c64.chunks_mut(rows_per * n);
-                        for ((w, chunk), apb) in chunks.enumerate().zip(ap_slots.iter_mut()) {
-                            let i0 = w * rows_per;
-                            let rows = chunk.len() / n;
-                            s.spawn(move || {
-                                worker(
-                                    chunk, a, bp, apb, i0, rows, m, k, n, kc0, kcl, jc, ncl,
-                                    accum, first,
-                                );
-                            });
-                        }
-                    });
-                }
-            }
+        // Per-chunk mutable state, handed to the shared dispatch closure
+        // through per-index mutexes (worker w locks only entry w, so the
+        // locks are uncontended — they exist to keep the closure `Fn`).
+        // During the parallel phase the f64 image is *column-chunk
+        // blocked*: chunk w owns the contiguous region
+        // c64[m*cols_per*w ..][..m*wcols], an m×wcols row-major block of
+        // the columns [w*cols_per, w*cols_per + wcols).
+        struct Chunk<'s> {
+            c64: &'s mut [f64],
+            bp: &'s mut [f32],
+            ap: &'s mut [f32],
         }
+        let mut chunks: Vec<Mutex<Chunk<'_>>> = Vec::with_capacity(nchunks);
+        let mut rest: &mut [f64] = c64;
+        for (w, (bpb, apb)) in
+            scratch.bp.iter_mut().zip(scratch.ap.iter_mut()).take(nchunks).enumerate()
+        {
+            let wcols = cols_per.min(n - w * cols_per);
+            let (cw, r) = rest.split_at_mut(m * wcols);
+            rest = r;
+            chunks.push(Mutex::new(Chunk { c64: cw, bp: bpb, ap: apb }));
+        }
+        let chunks = &chunks;
+        let b = &b;
+        par.run(nchunks, &|w| {
+            let mut guard = chunks[w].lock().unwrap_or_else(|p| p.into_inner());
+            let ch = &mut *guard;
+            let j0 = w * cols_per;
+            let wcols = cols_per.min(n - j0);
+            col_worker(ch.c64, a, b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+        });
     }
     // the C-tile writeback: narrow, then apply the fused epilogue in f32
     // (bit-identical to the interpreter running the trailing add/maximum
-    // as separate instructions)
-    for (row, crow) in c.chunks_mut(n).zip(c64.chunks(n)) {
-        for (j, (dst, &src)) in row.iter_mut().zip(crow.iter()).enumerate() {
-            *dst = epilogue.apply(src as f32, j);
+    // as separate instructions), de-blocking the column chunks back into
+    // the row-major output
+    let c64 = &scratch.c64;
+    for w in 0..nchunks {
+        let j0 = w * cols_per;
+        let wcols = cols_per.min(n - j0);
+        let cw = &c64[m * cols_per * w..m * cols_per * w + m * wcols];
+        for i in 0..m {
+            let crow = &mut c[i * n + j0..i * n + j0 + wcols];
+            let srow = &cw[i * wcols..(i + 1) * wcols];
+            for (jl, (dst, &src)) in crow.iter_mut().zip(srow).enumerate() {
+                *dst = epilogue.apply(src as f32, j0 + jl);
+            }
         }
     }
 }
@@ -354,43 +468,64 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, threads: usi
     c
 }
 
-/// One worker's share: rows `i0 .. i0+rows` of `C` (passed as the
-/// worker-owned slice `c64` whose row 0 is global row `i0`), one (jc, kc)
-/// block. Walks MC row blocks, packs each `MR×kcl` A micropanel once, and
-/// sweeps it across all `NR` panels of the packed B block.
+/// One worker's share: the full `m` rows of columns `j0 .. j0+wcols`
+/// (passed as the chunk-owned `m×wcols` block `c64`), the whole `k`
+/// depth. Walks its columns in NC cache blocks, `kc` ascending inside
+/// (the bit-identity order), packs its own B panels per (NC, kc) block —
+/// including the im2col gather — and sweeps each packed `MR×kcl` A
+/// micropanel across the chunk's `NR` panels.
 #[allow(clippy::too_many_arguments)]
-fn worker(
+fn col_worker(
     c64: &mut [f64],
     a: &[f32],
-    bp: &[f32],
+    b: &PanelB<'_>,
+    bp: &mut [f32],
     ap: &mut [f32],
-    i0: usize,
-    rows: usize,
     m: usize,
-    k: usize,
     n: usize,
-    kc0: usize,
-    kcl: usize,
-    jc: usize,
-    ncl: usize,
+    k: usize,
+    j0: usize,
+    wcols: usize,
     accum: Accum,
-    first: bool,
 ) {
-    let ap = &mut ap[..kcl * MR];
-    for ic in (0..rows).step_by(MC) {
-        let mcl = MC.min(rows - ic);
-        for ir in (0..mcl).step_by(MR) {
-            let gi = i0 + ic + ir; // global row of this micropanel
-            let mrl = MR.min(m - gi);
-            pack_a_panel_f32(a, k, gi, mrl, kc0, kcl, MR, ap);
-            for jp in 0..ncl.div_ceil(NR) {
-                let j0 = jc + jp * NR;
-                let nrl = NR.min(jc + ncl - j0);
-                let bpp = &bp[jp * kcl * NR..(jp + 1) * kcl * NR];
-                match accum {
-                    Accum::F64 => microkernel(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl),
-                    Accum::F32 => {
-                        microkernel_f32(c64, ic + ir, j0, n, ap, bpp, kcl, mrl, nrl, first)
+    for jc in (0..wcols).step_by(NC) {
+        let ncl = NC.min(wcols - jc);
+        let n_panels = ncl.div_ceil(NR);
+        for kc0 in (0..k).step_by(KC) {
+            let kcl = KC.min(k - kc0);
+            // the F32 chain *assigns* its first product (kc0 == 0)
+            // instead of accumulating into the zeroed image, so even
+            // the sign of a zero product matches the interpreter
+            let first = accum == Accum::F32 && kc0 == 0;
+            // pack the KC×ncl sub-block of B into NR-wide row panels:
+            // panel jp at bp[jp*kcl*NR ..], element (p, j) at p*NR + j
+            let bpl = &mut bp[..n_panels * kcl * NR];
+            for jp in 0..n_panels {
+                let jabs = j0 + jc + jp * NR;
+                let cols = NR.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * kcl * NR..(jp + 1) * kcl * NR];
+                b.pack(n, kc0, kcl, jabs, cols, NR, panel);
+            }
+            let bpl = &*bpl;
+            let apl = &mut ap[..kcl * MR];
+            for ic in (0..m).step_by(MC) {
+                let mcl = MC.min(m - ic);
+                for ir in (0..mcl).step_by(MR) {
+                    let gi = ic + ir;
+                    let mrl = MR.min(m - gi);
+                    pack_a_panel_f32(a, k, gi, mrl, kc0, kcl, MR, apl);
+                    for jp in 0..n_panels {
+                        let jloc = jc + jp * NR;
+                        let nrl = NR.min(wcols - jloc);
+                        let bpp = &bpl[jp * kcl * NR..(jp + 1) * kcl * NR];
+                        match accum {
+                            Accum::F64 => {
+                                microkernel(c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl)
+                            }
+                            Accum::F32 => microkernel_f32(
+                                c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl, first,
+                            ),
+                        }
                     }
                 }
             }
@@ -399,16 +534,16 @@ fn worker(
 }
 
 /// The `MR×NR` f64 microkernel: loads the running `f64` sums of one `C`
-/// register block, applies `kcl` rank-1 updates from the packed panels in
-/// ascending `k` order, and stores the sums back. Only the `mrl×nrl`
-/// valid corner is loaded/stored (tail handling); the zero-padded panel
-/// lanes are computed and discarded.
+/// register block (row stride `ld`), applies `kcl` rank-1 updates from
+/// the packed panels in ascending `k` order, and stores the sums back.
+/// Only the `mrl×nrl` valid corner is loaded/stored (tail handling); the
+/// zero-padded panel lanes are computed and discarded.
 #[allow(clippy::too_many_arguments)]
 fn microkernel(
     c64: &mut [f64],
     ci: usize,
     j0: usize,
-    n: usize,
+    ld: usize,
     ap: &[f32],
     bp: &[f32],
     kcl: usize,
@@ -417,7 +552,7 @@ fn microkernel(
 ) {
     let mut acc = [0f64; MR * NR];
     for i in 0..mrl {
-        let crow = &c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
         acc[i * NR..i * NR + nrl].copy_from_slice(crow);
     }
     for p in 0..kcl {
@@ -432,7 +567,7 @@ fn microkernel(
         }
     }
     for i in 0..mrl {
-        let crow = &mut c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
         crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
     }
 }
@@ -450,7 +585,7 @@ fn microkernel_f32(
     c64: &mut [f64],
     ci: usize,
     j0: usize,
-    n: usize,
+    ld: usize,
     ap: &[f32],
     bp: &[f32],
     kcl: usize,
@@ -461,7 +596,7 @@ fn microkernel_f32(
     let mut acc = [0f32; MR * NR];
     if !first {
         for i in 0..mrl {
-            let crow = &c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+            let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
             for (slot, &v) in acc[i * NR..i * NR + nrl].iter_mut().zip(crow) {
                 *slot = v as f32; // exact: the image holds f32 values
             }
@@ -485,7 +620,7 @@ fn microkernel_f32(
         }
     }
     for i in 0..mrl {
-        let crow = &mut c64[(ci + i) * n + j0..(ci + i) * n + j0 + nrl];
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
         for (slot, &v) in crow.iter_mut().zip(&acc[i * NR..i * NR + nrl]) {
             *slot = f64::from(v);
         }
@@ -503,6 +638,24 @@ mod tests {
         let af: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
         let bf: Vec<f64> = b.iter().map(|&v| f64::from(v)).collect();
         ref_gemm(&af, &bf, m, n, k).iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn chunk_plan_partitions_whole_panels() {
+        for (n, cap, want_chunks, want_cols) in [
+            (2048usize, 8usize, 8usize, 256usize),
+            (70, 8, 5, 16),
+            (1, 8, 1, 8),
+            (8, 4, 1, 8),
+            (512, 1, 1, 512),
+            (17, 3, 3, 8),
+        ] {
+            let (nchunks, cols_per) = chunk_plan(n, cap);
+            assert_eq!((nchunks, cols_per), (want_chunks, want_cols), "n={n} cap={cap}");
+            assert!(nchunks * cols_per >= n);
+            assert!(cols_per % NR == 0);
+            assert!(nchunks <= cap.max(1));
+        }
     }
 
     #[test]
@@ -534,8 +687,9 @@ mod tests {
 
     #[test]
     fn crosses_kc_and_nc_boundaries() {
-        // k > KC forces multiple packed B blocks; n > NR*several panels
-        let (m, n, k) = (33, 70, KC + 37);
+        // k > KC forces multiple packed B blocks; n > NC forces several
+        // cache blocks inside one worker chunk
+        let (m, n, k) = (33, NC + 70, KC + 37);
         let mut rng = Rng::new(7);
         let a = rng.f32_vec(m * k);
         let b = rng.f32_vec(k * n);
@@ -557,6 +711,73 @@ mod tests {
                 assert_eq!(t1, gemm_f32(&a, &b, m, n, k, threads));
             }
         });
+    }
+
+    #[test]
+    fn pool_scoped_and_seq_are_bit_identical() {
+        // the three worker policies must agree bit for bit, in both
+        // accumulation modes, across shapes straddling the chunk grid
+        let pool = ThreadPool::new("bg-test", 4);
+        let mut rng = Rng::new(0x9001);
+        for &(m, n, k) in &[(1usize, 1usize, 3usize), (8, 20, 27), (33, 70, 40), (16, 300, 9)] {
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            for accum in [Accum::F64, Accum::F32] {
+                let mut outs: Vec<Vec<f32>> = Vec::new();
+                for par in [Par::Seq, Par::Scoped(3), Par::Pool(&pool, 3), Par::Pool(&pool, 4)] {
+                    let mut c = vec![0f32; m * n];
+                    let mut scratch = GemmScratch::new();
+                    gemm_f32_fused_into(
+                        &mut c,
+                        &a,
+                        PanelB::Matrix(&b),
+                        m,
+                        n,
+                        k,
+                        accum,
+                        Epilogue::None,
+                        par,
+                        &mut scratch,
+                    );
+                    outs.push(c);
+                }
+                for o in &outs[1..] {
+                    assert_eq!(o, &outs[0], "m={m} n={n} k={k} {accum:?}");
+                }
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_reuse_across_sequential_gemms_is_bit_identical() {
+        // satellite acceptance: one pool + one scratch reused across a
+        // sequence of GEMMs must reproduce the scoped-spawn results
+        let pool = ThreadPool::new("bg-seq", 3);
+        let mut rng = Rng::new(0x5e9);
+        let mut scratch = GemmScratch::new();
+        for round in 0..6 {
+            let (m, n, k) = (rng.range(1, 60), rng.range(1, 90), rng.range(1, 70));
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let mut c_pool = vec![0f32; m * n];
+            gemm_f32_fused_into(
+                &mut c_pool,
+                &a,
+                PanelB::Matrix(&b),
+                m,
+                n,
+                k,
+                Accum::F64,
+                Epilogue::None,
+                Par::Pool(&pool, 3),
+                &mut scratch,
+            );
+            let c_scoped = gemm_f32(&a, &b, m, n, k, 3);
+            assert_eq!(c_pool, c_scoped, "round {round} m={m} n={n} k={k}");
+            assert_eq!(c_pool, ref_path(&a, &b, m, n, k), "round {round}");
+        }
+        pool.shutdown();
     }
 
     #[test]
@@ -602,13 +823,14 @@ mod tests {
 
     #[test]
     fn f32_chain_matches_elementwise_sweep_bitwise() {
+        let pool = ThreadPool::new("bg-f32", 3);
         let mut rng = Rng::new(0xc0a);
         for &(m, n, k) in &[(1, 1, 2), (3, 5, 9), (8, 16, 27), (9, 17, KC + 3), (8, 2048, 27)] {
             let a = rng.f32_vec(m * k);
             let b = rng.f32_vec(k * n);
             let expect = ref_f32_chain(&a, &b, m, n, k);
             let mut scratch = GemmScratch::new();
-            for threads in [1usize, 3] {
+            for par in [Par::Seq, Par::Scoped(3), Par::Pool(&pool, 3)] {
                 let mut c = vec![0f32; m * n];
                 gemm_f32_fused_into(
                     &mut c,
@@ -619,18 +841,24 @@ mod tests {
                     k,
                     Accum::F32,
                     Epilogue::None,
-                    threads,
+                    par,
                     &mut scratch,
                 );
-                assert_eq!(c, expect, "m={m} n={n} k={k} threads={threads}");
+                assert_eq!(c, expect, "m={m} n={n} k={k}");
             }
         }
+        pool.shutdown();
     }
 
     #[test]
     fn f32_chain_preserves_negative_zero_first_product() {
-        // (-1) * 0 = -0.0; a naive 0 + (-0.0) start would give +0.0
-        let a = [-1.0f32, 0.0];
+        // both products are -0.0: the assigned start keeps the sign
+        // through the chain (-0.0 + -0.0 = -0.0) while a naive
+        // zero-initialized accumulator would give 0 + (-0.0) = +0.0.
+        // (The previous vector used a = [-1, 0], whose *second* product
+        // is +0.0 — and IEEE says -0.0 + +0.0 = +0.0, so that test could
+        // never pass; it predates a rust toolchain being available.)
+        let a = [-1.0f32, -1.0];
         let b = [0.0f32, 0.0];
         let mut c = [9f32; 1];
         gemm_f32_fused_into(
@@ -642,7 +870,7 @@ mod tests {
             2,
             Accum::F32,
             Epilogue::None,
-            1,
+            Par::Seq,
             &mut GemmScratch::new(),
         );
         assert_eq!(c[0].to_bits(), (-0.0f32).to_bits());
@@ -652,6 +880,7 @@ mod tests {
     fn epilogue_matches_separate_sweeps_bitwise() {
         // fused bias / bias+relu must equal "gemm, then add, then max"
         // done as separate f32 passes (the interpreter instruction order)
+        let pool = ThreadPool::new("bg-epi", 4);
         let mut rng = Rng::new(0xe91);
         let (m, n, k) = (13, 21, 40);
         let a = rng.f32_vec(m * k);
@@ -662,7 +891,7 @@ mod tests {
             plain.iter().enumerate().map(|(f, &v)| v + bias[f % n]).collect();
         let relued: Vec<f32> = biased.iter().map(|&v| v.max(0.0)).collect();
         let mut scratch = GemmScratch::new();
-        for threads in [1usize, 4] {
+        for par in [Par::Seq, Par::Scoped(4), Par::Pool(&pool, 4)] {
             let mut c = vec![0f32; m * n];
             gemm_f32_fused_into(
                 &mut c,
@@ -673,10 +902,10 @@ mod tests {
                 k,
                 Accum::F64,
                 Epilogue::Bias(&bias),
-                threads,
+                par,
                 &mut scratch,
             );
-            assert_eq!(c, biased, "bias threads={threads}");
+            assert_eq!(c, biased, "bias");
             gemm_f32_fused_into(
                 &mut c,
                 &a,
@@ -686,17 +915,22 @@ mod tests {
                 k,
                 Accum::F64,
                 Epilogue::BiasRelu(&bias),
-                threads,
+                par,
                 &mut scratch,
             );
-            assert_eq!(c, relued, "bias_relu threads={threads}");
+            assert_eq!(c, relued, "bias_relu");
         }
+        pool.shutdown();
     }
 
     #[test]
     fn im2col_panels_equal_materialized_matrix() {
         use crate::kernels::pack::Im2colSpec;
-        // padded 2-channel 6x7 image, 3x3 taps, 4x5 output (n = 20)
+        // padded 2-channel 6x7 image, 3x3 taps, 4x5 output (n = 20):
+        // the im2col gather must match the materialized matrix bit for
+        // bit under every worker policy (each pool worker packs its own
+        // columns — the parallel-packing satellite)
+        let pool = ThreadPool::new("bg-im2col", 3);
         let (cin, ih, iw, h, w) = (2usize, 6usize, 7usize, 4usize, 5usize);
         let mut rng = Rng::new(0x132c);
         let img = rng.f32_vec(cin * ih * iw);
@@ -724,39 +958,47 @@ mod tests {
         let mut c1 = vec![0f32; m * n];
         let mut c2 = vec![0f32; m * n];
         for accum in [Accum::F64, Accum::F32] {
-            gemm_f32_fused_into(
-                &mut c1,
-                &a,
-                PanelB::Im2col { img: &img, spec: &spec },
-                m,
-                n,
-                k,
-                accum,
-                Epilogue::None,
-                1,
-                &mut scratch,
-            );
-            gemm_f32_fused_into(
-                &mut c2,
-                &a,
-                PanelB::Matrix(&bmat),
-                m,
-                n,
-                k,
-                accum,
-                Epilogue::None,
-                1,
-                &mut scratch,
-            );
-            assert_eq!(c1, c2, "{accum:?}");
+            for par in [Par::Seq, Par::Pool(&pool, 3)] {
+                gemm_f32_fused_into(
+                    &mut c1,
+                    &a,
+                    PanelB::Im2col { img: &img, spec: &spec },
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Epilogue::None,
+                    par,
+                    &mut scratch,
+                );
+                gemm_f32_fused_into(
+                    &mut c2,
+                    &a,
+                    PanelB::Matrix(&bmat),
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Epilogue::None,
+                    par,
+                    &mut scratch,
+                );
+                assert_eq!(c1, c2, "{accum:?}");
+            }
         }
+        pool.shutdown();
     }
 
     #[test]
     fn threads_for_policy() {
-        assert_eq!(threads_for(32, 64, 128, 8), 1, "MLP-sized dot stays inline");
-        assert!(threads_for(512, 512, 512, 8) == 8, "512-class GEMM fans out");
-        assert!(threads_for(512, 512, 512, 64) <= 512usize.div_ceil(MR));
-        assert_eq!(threads_for(8, 4096, 4096, 16), 1, "one row panel -> one worker");
+        assert_eq!(threads_for(32, 64, 128, 8), 1, "MLP-sized dot stays inline (scoped)");
+        assert_eq!(threads_for(512, 512, 512, 8), 8, "512-class GEMM fans out");
+        assert!(threads_for(512, 512, 512, 64) <= 512usize.div_ceil(NR));
+        // the column split unlocks short-wide shapes (one MR row panel)
+        assert_eq!(threads_for(8, 4096, 4096, 16), 16, "N-split parallelizes m=8");
+        // pool policy: conv-shaped im2col GEMMs fan out, MLP dots do not
+        assert_eq!(threads_for_pooled(8, 2048, 27, 8), 8, "conv shape uses the pool");
+        assert_eq!(threads_for_pooled(32, 128, 64, 8), 1, "mlp layer stays serial");
+        assert_eq!(threads_for_pooled(8, 16, 27, 8), 1, "tiny conv stays serial");
     }
 }

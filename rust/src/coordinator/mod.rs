@@ -11,33 +11,43 @@
 //! * a **dynamic batcher** coalesces classification requests up to the
 //!   compiled batch size or a latency deadline, pads the tail, executes
 //!   one batched MLP inference, and scatters the rows back to callers;
-//! * **backpressure** comes from the bounded submission queue;
-//! * the executables run on a dedicated engine thread (backends may be
-//!   thread-confined — the engine is constructed *inside* the thread via
-//!   a factory, so no `Send` requirement leaks).
+//! * **backpressure** comes from the bounded per-shard submission queues;
+//! * the executables run on **`shards` engine threads**
+//!   ([`CoordinatorConfig::shards`]), each with its own bounded queue
+//!   and its own engine instance; requests are routed round-robin across
+//!    shards (backends may be thread-confined — each engine is
+//!   constructed *inside* its thread via the factory, so no `Send`
+//!   requirement leaks).
 //!
 //! ## Threading and ownership contract
 //!
 //! The request lifecycle is: caller thread → [`Coordinator::submit`]
-//! (bounded channel) → **engine thread** (router + batcher) → compiled
-//! model → per-request reply channel. Three rules keep this sound:
+//! (bounded per-shard channel) → **engine thread** (router + batcher) →
+//! compiled model → per-request reply channel. Three rules keep this
+//! sound:
 //!
-//! 1. **The engine is thread-confined.** The `engine_factory` runs on the
-//!    engine thread and the resulting [`InferenceEngine`] never crosses a
-//!    thread boundary afterwards; only the factory itself must be `Send`.
-//!    Models may therefore use interior mutability freely (the plan
-//!    backend's preallocated [`plan::ExecBuffers`](crate::runtime::plan::ExecBuffers)
+//! 1. **Engines are thread-confined.** The `engine_factory` runs once on
+//!    each shard's engine thread and the resulting [`InferenceEngine`]
+//!    never crosses a thread boundary afterwards; only the factory
+//!    itself must be `Send + Sync`. Models may therefore use interior
+//!    mutability freely (the plan backend's preallocated
+//!    [`plan::ExecBuffers`](crate::runtime::plan::ExecBuffers)
 //!    lock is uncontended by construction).
-//! 2. **Data-parallel workers are scoped.** The blocked GEMM behind the
-//!    plan backend ([`crate::blas::block_gemm`]) fans its M-panel loop
-//!    out over `std::thread::scope` workers *inside* a `dot`; they join
-//!    before the call returns, so from the coordinator's point of view
-//!    `run()` is still a synchronous, single-threaded call and shutdown
-//!    ordering (`Msg::Shutdown` → flush → join) is unchanged.
+//! 2. **Data-parallel workers come from one shared pool.** The blocked
+//!    GEMM behind the plan backend ([`crate::blas::block_gemm`]) fans
+//!    its column-chunk loop out over the **persistent worker pool** of a
+//!    [`Device`](crate::runtime::device::Device); the dispatch drains
+//!    *inside* each `dot` (the engine thread participates and blocks
+//!    until its chunks finish), so from the coordinator's point of view
+//!    `run()` is still a synchronous call and shutdown ordering
+//!    (`Msg::Shutdown` → flush → join) is unchanged. Because every shard
+//!    draws from the same device pool, adding shards multiplies
+//!    throughput without multiplying GEMM worker threads — shards cannot
+//!    oversubscribe the core budget.
 //! 3. **Responses are owned, requests are moved.** A request's payload
-//!    moves into the engine thread; the reply channel is the only route
-//!    back. Nothing on the hot path is shared mutable state except the
-//!    atomic [`CoordStats`] counters.
+//!    moves into its shard's engine thread; the reply channel is the
+//!    only route back. Nothing on the hot path is shared mutable state
+//!    except the atomic [`CoordStats`] counters (shared by all shards).
 
 use crate::error::Result;
 use crate::metrics::{Counter, Histogram};
@@ -97,8 +107,15 @@ pub struct CoordinatorConfig {
     pub batch_size: usize,
     /// Maximum time the batcher holds a partial batch.
     pub max_delay: Duration,
-    /// Bounded submission queue depth (backpressure).
+    /// Bounded submission queue depth **per shard** (backpressure).
     pub queue_cap: usize,
+    /// Number of engine threads (shards). Each shard runs its own engine
+    /// behind its own bounded queue; requests are routed round-robin.
+    /// Engines built over [`Runtime`](crate::runtime::Runtime)s that
+    /// share a [`Device`](crate::runtime::device::Device) draw their
+    /// GEMM workers from the one shared pool, so shards scale request
+    /// concurrency without oversubscribing cores. `0` is treated as `1`.
+    pub shards: usize,
     /// MLP feature/class dims (must match `python/compile/model.py`).
     pub features: usize,
     pub classes: usize,
@@ -111,6 +128,7 @@ impl Default for CoordinatorConfig {
             batch_size: 32,
             max_delay: Duration::from_millis(2),
             queue_cap: 1024,
+            shards: 1,
             features: 64,
             classes: 32,
             hidden: 128,
@@ -149,16 +167,18 @@ impl CoordStats {
     }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running coordinator (one submission queue + engine
+/// thread per shard; requests route round-robin by request id).
 pub struct Coordinator {
-    tx: rt::Sender<Msg>,
-    engine_thread: Option<std::thread::JoinHandle<()>>,
+    txs: Vec<rt::Sender<Msg>>,
+    engine_threads: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     pub stats: Arc<CoordStats>,
 }
 
 /// The MLP weights the service hosts. Deterministic (same formula as the
 /// AOT expected-output fixtures) so end-to-end numerics are checkable.
+#[derive(Clone)]
 pub struct MlpWeights {
     pub w1: Vec<f32>,
     pub b1: Vec<f32>,
@@ -180,36 +200,62 @@ impl MlpWeights {
 }
 
 impl Coordinator {
-    /// Start the coordinator. `engine_factory` runs *on the engine thread*
-    /// (thread-confined backends never cross threads).
+    /// Start the coordinator with [`CoordinatorConfig::shards`] engine
+    /// threads. `engine_factory` runs once *on each shard's engine
+    /// thread* (thread-confined backends never cross threads) and
+    /// receives the shard index; it must be `Sync` because all shards
+    /// share it. For a single-shard coordinator the factory is called
+    /// exactly once, preserving the legacy behavior.
     pub fn start<E, F>(cfg: CoordinatorConfig, weights: MlpWeights, engine_factory: F) -> Self
     where
-        E: InferenceEngine,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        E: InferenceEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let (tx, rx) = rt::bounded::<Msg>(cfg.queue_cap);
+        let shards = cfg.shards.max(1);
         let stats = Arc::new(CoordStats::default());
-        let stats2 = stats.clone();
-        let engine_thread = std::thread::Builder::new()
-            .name("mma-engine".into())
-            .spawn(move || engine_loop(cfg, weights, engine_factory, rx, stats2))
-            .expect("spawn engine thread");
+        let factory = Arc::new(engine_factory);
+        let mut txs = Vec::with_capacity(shards);
+        let mut engine_threads = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = rt::bounded::<Msg>(cfg.queue_cap);
+            let fac = factory.clone();
+            let cfg2 = cfg.clone();
+            let weights2 = weights.clone();
+            let stats2 = stats.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("mma-engine-{shard}"))
+                .spawn(move || engine_loop(cfg2, weights2, move || (*fac)(shard), rx, stats2))
+                .expect("spawn engine thread");
+            txs.push(tx);
+            engine_threads.push(handle);
+        }
         Coordinator {
-            tx,
-            engine_thread: Some(engine_thread),
+            txs,
+            engine_threads,
             next_id: std::sync::atomic::AtomicU64::new(1),
             stats,
         }
     }
 
+    /// Number of engine shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shard a request id routes to (round-robin).
+    fn shard_of(&self, id: u64) -> &rt::Sender<Msg> {
+        &self.txs[(id as usize) % self.txs.len()]
+    }
+
     /// Submit a request; returns a receiver for the response. Fails fast
-    /// (`Err(id)`) when the queue is full — the backpressure signal.
+    /// (`Err(id)`) when the target shard's queue is full — the
+    /// backpressure signal.
     pub fn try_submit(&self, payload: Payload) -> Result<(u64, rt::Receiver<Response>), u64> {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = rt::bounded(1);
         let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
-        match self.tx.try_send(Msg::Req(req)) {
+        match self.shard_of(id).try_send(Msg::Req(req)) {
             Ok(()) => Ok((id, rrx)),
             Err(_) => {
                 self.stats.rejected.inc();
@@ -218,20 +264,22 @@ impl Coordinator {
         }
     }
 
-    /// Blocking submit (waits for queue space).
+    /// Blocking submit (waits for queue space on the target shard).
     pub fn submit(&self, payload: Payload) -> (u64, rt::Receiver<Response>) {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = rt::bounded(1);
         let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
-        self.tx.send(Msg::Req(req)).ok();
+        self.shard_of(id).send(Msg::Req(req)).ok();
         (id, rrx)
     }
 
-    /// Drain and stop the engine thread.
+    /// Drain and stop every engine shard.
     pub fn shutdown(mut self) -> Arc<CoordStats> {
-        self.tx.send(Msg::Shutdown).ok();
-        if let Some(h) = self.engine_thread.take() {
+        for tx in &self.txs {
+            tx.send(Msg::Shutdown).ok();
+        }
+        for h in self.engine_threads.drain(..) {
             h.join().expect("engine thread panicked");
         }
         self.stats.clone()
@@ -240,9 +288,11 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        if self.engine_thread.is_some() {
-            self.tx.send(Msg::Shutdown).ok();
-            if let Some(h) = self.engine_thread.take() {
+        if !self.engine_threads.is_empty() {
+            for tx in &self.txs {
+                tx.send(Msg::Shutdown).ok();
+            }
+            for h in self.engine_threads.drain(..) {
                 let _ = h.join();
             }
         }
@@ -440,8 +490,8 @@ mod tests {
         let calls2 = calls.clone();
         let weights = MlpWeights::deterministic(&cfg);
         let cfg2 = cfg.clone();
-        let coord = Coordinator::start(cfg, weights, move || {
-            Ok(MockEngine { calls: calls2, fail_on, cfg: cfg2 })
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            Ok(MockEngine { calls: calls2.clone(), fail_on, cfg: cfg2.clone() })
         });
         (coord, calls)
     }
@@ -559,7 +609,7 @@ mod tests {
     fn engine_init_failure_fails_requests() {
         let cfg = CoordinatorConfig::default();
         let weights = MlpWeights::deterministic(&cfg);
-        let coord = Coordinator::start::<MockEngine, _>(cfg.clone(), weights, || {
+        let coord = Coordinator::start::<MockEngine, _>(cfg.clone(), weights, |_shard| {
             crate::bail!("no artifacts")
         });
         let (_, rx) = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] });
@@ -576,5 +626,86 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(rx.recv().unwrap().result.unwrap()[0], 2.0);
         assert_eq!(stats.completed.get(), 1);
+    }
+
+    /// Mock engine that records which shard served each request, so the
+    /// sharded test can assert the work was genuinely split.
+    struct ShardTagEngine {
+        shard: usize,
+        served: Arc<Mutex<std::collections::HashSet<usize>>>,
+        inner: MockEngine,
+    }
+
+    impl InferenceEngine for ShardTagEngine {
+        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            self.served.lock().unwrap().insert(self.shard);
+            self.inner.run(model, inputs)
+        }
+    }
+
+    #[test]
+    fn sharded_coordinator_serves_all_requests() {
+        // two shards, round-robin routing: every request answered once,
+        // responses routed to the right requester, nothing lost
+        let cfg = CoordinatorConfig {
+            batch_size: 4,
+            max_delay: Duration::from_millis(1),
+            shards: 2,
+            ..Default::default()
+        };
+        let served = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let served2 = served.clone();
+        let cfg2 = cfg.clone();
+        let weights = MlpWeights::deterministic(&cfg);
+        let coord = Coordinator::start(cfg.clone(), weights, move |shard| {
+            Ok(ShardTagEngine {
+                shard,
+                served: served2.clone(),
+                inner: MockEngine {
+                    calls: Arc::new(Mutex::new(Vec::new())),
+                    fail_on: None,
+                    cfg: cfg2.clone(),
+                },
+            })
+        });
+        assert_eq!(coord.shards(), 2);
+        let n = 37usize;
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let mut f = vec![0f32; cfg.features];
+            f[0] = i as f32;
+            rxs.push((i, coord.submit(Payload::Classify { features: f }).1));
+        }
+        for (i, rx) in rxs {
+            let row = rx.recv().unwrap().result.unwrap();
+            assert_eq!(row[0] as usize, i, "response routed to wrong requester");
+        }
+        // direct-dispatch families route through shards too
+        let (_, rx) = coord.submit(Payload::Gemm {
+            model: "gemm_f32".into(),
+            x: vec![1.0],
+            y: vec![2.0],
+        });
+        assert_eq!(rx.recv().unwrap().result.unwrap(), vec![1.0]);
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed.get(), n as u64 + 1);
+        assert_eq!(stats.failed.get(), 0);
+        // round-robin really split the work: BOTH engine shards ran
+        // requests (37 ids alternate across 2 shards, so each gets ~18)
+        assert_eq!(
+            served.lock().unwrap().len(),
+            2,
+            "both shards must serve traffic, not one funnel"
+        );
+    }
+
+    #[test]
+    fn shard_zero_is_treated_as_one() {
+        let cfg = CoordinatorConfig { shards: 0, ..Default::default() };
+        let (coord, _) = start_mock(cfg.clone(), None);
+        assert_eq!(coord.shards(), 1);
+        let (_, rx) = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] });
+        assert!(rx.recv().unwrap().result.is_ok());
+        coord.shutdown();
     }
 }

@@ -34,15 +34,22 @@
 //!   by default **compiles** it into an execution plan
 //!   ([`runtime::plan`]: preallocated buffer arena + blocked parallel
 //!   GEMM) behind the pluggable [`runtime::EngineBackend`] trait; the
-//!   legacy per-request interpreter remains as the numerics oracle. The
-//!   former PJRT/XLA FFI is gone — the whole request path is self-hosted
-//!   rust.
+//!   legacy per-request interpreter remains as the numerics oracle.
+//!   Execution is organized around the device/session layer of
+//!   [`runtime::device`]: a [`Device`](runtime::Device) owning the
+//!   process-wide persistent GEMM worker pool + thread budget, typed
+//!   [`TensorRef`](runtime::TensorRef)/[`TensorMut`](runtime::TensorMut)
+//!   buffers (f32 or raw-bits bf16), and per-request
+//!   [`ExecCtx`](runtime::ExecCtx)s. The former PJRT/XLA FFI is gone —
+//!   the whole request path is self-hosted rust.
 //! * [`coordinator`] — the "data-in-flight business analytics" serving layer
-//!   of §I: request router + dynamic batcher over the native runtime.
+//!   of §I: request router + dynamic batcher over the native runtime,
+//!   sharded across engine threads that share one device pool.
 //! * [`rt`], [`cli`], [`error`], [`testkit`], [`benchkit`], [`metrics`] —
-//!   substrates (thread pool, argument parser, error chain, property
-//!   testing, benchmark harness, metrics) built from `std` because the
-//!   build environment is offline and the crate has zero dependencies.
+//!   substrates (thread pool with blocking `par_for`, argument parser,
+//!   error chain, property testing, benchmark harness, metrics) built
+//!   from `std` because the build environment is offline and the crate
+//!   has zero dependencies.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

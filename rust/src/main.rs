@@ -285,15 +285,17 @@ fn cmd_disasm(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
-    use power_mma::runtime::{artifacts, det_input, HloPlanBackend, Runtime};
+    use power_mma::runtime::{artifacts, det_input, Device, HloPlanBackend, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
         .opt("requests", Some("1000"), "self-test request count")
-        .opt("threads", Some("0"), "GEMM worker cap for the plan backend (0 = auto)");
+        .opt("threads", Some("0"), "device GEMM worker budget (0 = auto)")
+        .opt("shards", Some("1"), "coordinator engine shards (share one device pool)");
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
     let n_req = m.get_usize("requests").unwrap();
     let threads = m.get_usize("threads").unwrap();
+    let shards = m.get_usize("shards").unwrap().max(1);
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -302,18 +304,21 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     }
-    let cfg = CoordinatorConfig::default();
+    let cfg = CoordinatorConfig { shards, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
-    let coord = Coordinator::start(cfg, weights, move || {
-        let backend = if threads == 0 {
-            HloPlanBackend::new()
-        } else {
-            HloPlanBackend::with_threads(threads)
-        };
-        let mut rt = Runtime::with_backend(Box::new(backend), &dir);
+    // one device = one persistent GEMM pool + budget, shared by every
+    // shard (shards add engines, not worker threads)
+    let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
+    let coord = Coordinator::start(cfg, weights, move |shard| {
+        let mut rt =
+            Runtime::with_device(device.clone(), Box::new(HloPlanBackend::new()), &dir);
         let names = rt.load_all()?;
-        eprintln!("loaded models: {names:?} on {}", rt.platform());
+        eprintln!(
+            "shard {shard}: loaded models {names:?} on {} ({} pool workers)",
+            rt.platform(),
+            rt.device().threads()
+        );
         Ok(rt)
     });
     let t0 = std::time::Instant::now();
@@ -361,40 +366,65 @@ fn gemm_hlo_text(n: usize) -> String {
     )
 }
 
+/// One coordinator end-to-end measurement: the JSON fragment plus a
+/// deterministic **numerics probe** (the classify response for a fixed
+/// feature vector — each output row depends only on its own features, so
+/// the probe must be bitwise identical across shard counts).
+struct CoordBench {
+    json: String,
+    req_per_s: f64,
+    probe: Vec<f32>,
+}
+
 /// Drive the serving coordinator end-to-end over the **plan backend**
-/// (router → dynamic batcher → compiled plan → blocked GEMM) on the
-/// embedded artifacts and return a JSON fragment with req/s and latency
-/// quantiles — the cross-PR end-to-end number `BENCH_runtime.json`
-/// previously lacked (the coordinator bench used to measure only a mock
-/// engine).
-fn bench_coordinator(n_req: usize) -> power_mma::error::Result<String> {
-    let dir = std::env::temp_dir().join(format!("mma-bench-coord-{}", std::process::id()));
-    let result = bench_coordinator_in(n_req, &dir);
+/// (router → dynamic batcher → compiled plan → pool-backed blocked GEMM)
+/// on the embedded artifacts with `shards` engine threads sharing the
+/// process device pool — the cross-PR end-to-end number of
+/// `BENCH_runtime.json`, now also the shards=1-vs-2 comparison of the
+/// `pool` block.
+fn bench_coordinator(n_req: usize, shards: usize) -> power_mma::error::Result<CoordBench> {
+    let dir =
+        std::env::temp_dir().join(format!("mma-bench-coord-{}-{shards}", std::process::id()));
+    let result = bench_coordinator_in(n_req, shards, &dir);
     std::fs::remove_dir_all(&dir).ok(); // clean up on every path
     result
 }
 
-fn bench_coordinator_in(n_req: usize, dir: &std::path::Path) -> power_mma::error::Result<String> {
+fn bench_coordinator_in(
+    n_req: usize,
+    shards: usize,
+    dir: &std::path::Path,
+) -> power_mma::error::Result<CoordBench> {
     use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
     use power_mma::runtime::{artifacts, det_input, Runtime};
     use std::time::Instant;
 
     artifacts::ensure_artifacts(dir)?;
-    let cfg = CoordinatorConfig::default();
+    let cfg = CoordinatorConfig { shards, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     let dir2 = dir.to_path_buf(); // owned: the factory closure must be 'static
-    let coord = Coordinator::start(cfg, weights, move || {
+    let coord = Coordinator::start(cfg, weights, move |_shard| {
         let mut rt = Runtime::cpu(&dir2)?;
         rt.load_all()?;
         Ok(rt)
     });
-    // warm up: first call faults the plans in
-    let (_, rx) = coord.submit(Payload::Classify { features: det_input(features, 0) });
-    rx.recv()
-        .map_err(|_| power_mma::err!("coordinator warmup request dropped"))?
+    // warm up every shard: the first call per engine faults the plans in
+    for _ in 0..shards.max(1) * 2 {
+        let (_, rx) = coord.submit(Payload::Classify { features: det_input(features, 0) });
+        rx.recv()
+            .map_err(|_| power_mma::err!("coordinator warmup request dropped"))?
+            .result
+            .map_err(|e| power_mma::err!("coordinator warmup failed: {e}"))?;
+    }
+    // the numerics probe: a fixed feature vector whose response row must
+    // not depend on shard count or batch-mates
+    let (_, rx) = coord.submit(Payload::Classify { features: det_input(features, 1) });
+    let probe = rx
+        .recv()
+        .map_err(|_| power_mma::err!("probe request dropped"))?
         .result
-        .map_err(|e| power_mma::err!("coordinator warmup failed: {e}"))?;
+        .map_err(|e| power_mma::err!("probe request failed: {e}"))?;
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(n_req);
     for i in 0..n_req {
@@ -402,7 +432,7 @@ fn bench_coordinator_in(n_req: usize, dir: &std::path::Path) -> power_mma::error
         rxs.push(coord.submit(Payload::Classify { features: f }).1);
     }
     // per-request latencies of the *timed* requests only — the
-    // coordinator's own histogram also holds the cold warmup request,
+    // coordinator's own histogram also holds the cold warmup requests,
     // which would otherwise dominate p99 in --quick runs
     let mut lat_us: Vec<u64> = Vec::with_capacity(n_req);
     for rx in rxs {
@@ -422,24 +452,48 @@ fn bench_coordinator_in(n_req: usize, dir: &std::path::Path) -> power_mma::error
     let (p50, p99) = (q(0.5), q(0.99));
     let req_s = n_req as f64 / dt.as_secs_f64();
     println!(
-        "coordinator e2e (plan backend): {n_req} requests -> {req_s:.0} req/s, \
-         p50 {p50} us, p99 {p99} us, occupancy {:.1}",
+        "coordinator e2e (plan backend, {shards} shard(s)): {n_req} requests -> \
+         {req_s:.0} req/s, p50 {p50} us, p99 {p99} us, occupancy {:.1}",
         stats.mean_batch_occupancy()
     );
-    Ok(format!(
-        "{{\"backend\": \"native-hlo-plan\", \"requests\": {n_req}, \
+    let json = format!(
+        "{{\"backend\": \"native-hlo-plan\", \"shards\": {shards}, \"requests\": {n_req}, \
          \"req_per_s\": {req_s:.1}, \"p50_us\": {p50}, \"p99_us\": {p99}, \
          \"mean_batch_occupancy\": {:.2}}}",
         stats.mean_batch_occupancy()
-    ))
+    );
+    Ok(CoordBench { json, req_per_s: req_s, probe })
+}
+
+/// Execute a compiled model on f32 inputs through the typed API (the
+/// bench-side bridge: wraps the inputs as [`TensorRef`]s with the meta
+/// shapes and collects the f32 output).
+fn run_model(
+    model: &dyn power_mma::runtime::CompiledModel,
+    ctx: &mut power_mma::runtime::ExecCtx<'_>,
+    meta: &power_mma::runtime::ModelMeta,
+    inputs: &[Vec<f32>],
+) -> Vec<f32> {
+    use power_mma::runtime::{TensorMut, TensorRef};
+    let trefs: Vec<TensorRef<'_>> = inputs
+        .iter()
+        .zip(&meta.input_shapes)
+        .map(|(d, s)| TensorRef::f32(d, s))
+        .collect();
+    let mut out = vec![0f32; meta.output_len()];
+    let mut tm = TensorMut::f32(&mut out, &meta.output_shape);
+    model.execute(ctx, &trefs, &mut tm).expect("model exec");
+    out
 }
 
 fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::benchkit::{bench_budget, black_box};
-    use power_mma::blas::block_gemm::{gemm_f32_into, GemmScratch};
+    use power_mma::blas::block_gemm::{
+        gemm_f32_fused_into, gemm_f32_into, Accum, Epilogue, GemmScratch, PanelB, Par,
+    };
     use power_mma::blas::gemm::ref_gemm;
     use power_mma::runtime::{
-        artifacts, det_input, det_inputs, CompiledModel, EngineBackend, HloInterpreterBackend,
+        artifacts, det_input, det_inputs, Device, EngineBackend, HloInterpreterBackend,
         HloPlanBackend, ModelMeta,
     };
     use std::time::Duration;
@@ -462,7 +516,7 @@ fn cmd_bench(args: &[String]) -> i32 {
     let quick = m.flag("quick");
     let size = if quick { 128 } else { m.get_usize("size").unwrap() };
     let budget = Duration::from_millis(if quick { 60 } else { m.get_u64("budget-ms").unwrap() });
-    let avail = HloPlanBackend::default_threads();
+    let avail = Device::default_threads();
     let threads: Vec<usize> = if m.get("threads").is_empty() {
         let mut t = vec![1usize];
         while *t.last().unwrap() * 2 <= avail {
@@ -520,37 +574,43 @@ fn cmd_bench(args: &[String]) -> i32 {
     }
 
     // -- 2. end-to-end: compiled plan vs legacy interpreter walk ---------
+    let shared_dev = Device::shared();
     let hlo = gemm_hlo_text(size);
     let meta = ModelMeta {
         name: format!("bench_gemm_{size}"),
         input_shapes: vec![vec![size, size], vec![size, size]],
         output_shape: vec![size, size],
     };
-    let interp = match HloInterpreterBackend.compile(&meta.name, &hlo, &meta) {
+    let interp = match HloInterpreterBackend.compile(&shared_dev, &meta.name, &hlo, &meta) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("compile (interpreter) failed: {e}");
             return 1;
         }
     };
-    let ins: Vec<&[f32]> = vec![&a, &b];
+    let ins: Vec<Vec<f32>> = vec![a.clone(), b.clone()];
+    let mut ctx = shared_dev.ctx();
     let s_interp = bench_budget("interpreter walk", budget, || {
-        black_box(interp.execute(&ins).expect("interpreter exec").len());
+        black_box(run_model(interp.as_ref(), &mut ctx, &meta, &ins).len());
     });
     let interp_ms = s_interp.median.as_secs_f64() * 1e3;
     println!("e2e  {size}^3  interpreter walk  {interp_ms:9.2} ms");
     let mut plan_rows = Vec::new();
     let mut best_plan_ms = f64::INFINITY;
     for &t in &threads {
-        let plan = match HloPlanBackend::with_threads(t).compile(&meta.name, &hlo, &meta) {
+        // one device per worker budget: the plan draws its GEMM workers
+        // from the device pool of the executing context
+        let dev = Device::new(t);
+        let plan = match HloPlanBackend::new().compile(&dev, &meta.name, &hlo, &meta) {
             Ok(m) => m,
             Err(e) => {
                 eprintln!("compile (plan) failed: {e}");
                 return 1;
             }
         };
+        let mut ctx = dev.ctx();
         let s = bench_budget(&format!("plan t={t}"), budget, || {
-            black_box(plan.execute(&ins).expect("plan exec").len());
+            black_box(run_model(plan.as_ref(), &mut ctx, &meta, &ins).len());
         });
         let ms = s.median.as_secs_f64() * 1e3;
         best_plan_ms = best_plan_ms.min(ms);
@@ -573,8 +633,8 @@ fn cmd_bench(args: &[String]) -> i32 {
                 return 1;
             }
         };
-        let interp = HloInterpreterBackend.compile(art.name, art.hlo_text, &meta);
-        let plan = HloPlanBackend::new().compile(art.name, art.hlo_text, &meta);
+        let interp = HloInterpreterBackend.compile(&shared_dev, art.name, art.hlo_text, &meta);
+        let plan = HloPlanBackend::new().compile(&shared_dev, art.name, art.hlo_text, &meta);
         let (interp, plan) = match (interp, plan) {
             (Ok(i), Ok(p)) => (i, p),
             (Err(e), _) | (_, Err(e)) => {
@@ -583,18 +643,18 @@ fn cmd_bench(args: &[String]) -> i32 {
             }
         };
         let inputs = det_inputs(&meta);
-        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let iout = interp.execute(&refs).expect("interpreter exec");
-        let pout = plan.execute(&refs).expect("plan exec");
+        let mut ctx = shared_dev.ctx();
+        let iout = run_model(interp.as_ref(), &mut ctx, &meta, &inputs);
+        let pout = run_model(plan.as_ref(), &mut ctx, &meta, &inputs);
         let identical = iout.len() == pout.len()
             && iout.iter().zip(&pout).all(|(x, y)| x.to_bits() == y.to_bits());
         all_identical &= identical;
         let fb = budget.min(Duration::from_millis(100));
         let si = bench_budget(&format!("{} interp", art.name), fb, || {
-            black_box(interp.execute(&refs).expect("exec").len());
+            black_box(run_model(interp.as_ref(), &mut ctx, &meta, &inputs).len());
         });
         let sp = bench_budget(&format!("{} plan", art.name), fb, || {
-            black_box(plan.execute(&refs).expect("exec").len());
+            black_box(run_model(plan.as_ref(), &mut ctx, &meta, &inputs).len());
         });
         let (ims, pms) = (si.median.as_secs_f64() * 1e3, sp.median.as_secs_f64() * 1e3);
         println!(
@@ -645,17 +705,75 @@ fn cmd_bench(args: &[String]) -> i32 {
         return 1;
     }
 
-    // -- 5. coordinator end-to-end over the plan backend -----------------
+    // -- 5. pool: scoped-spawn vs persistent-pool GEMM, bit-identical ----
+    let mut c_scoped = vec![0f32; size * size];
+    let mut c_pool = vec![0f32; size * size];
+    let mut pool_scratch = GemmScratch::new();
+    let s_scoped = bench_budget("gemm scoped-spawn", budget, || {
+        gemm_f32_fused_into(
+            &mut c_scoped,
+            &a,
+            PanelB::Matrix(&b),
+            size,
+            size,
+            size,
+            Accum::F64,
+            Epilogue::None,
+            Par::Scoped(avail),
+            &mut pool_scratch,
+        );
+        black_box(c_scoped[0]);
+    });
+    let s_pool = bench_budget("gemm persistent-pool", budget, || {
+        gemm_f32_fused_into(
+            &mut c_pool,
+            &a,
+            PanelB::Matrix(&b),
+            size,
+            size,
+            size,
+            Accum::F64,
+            Epilogue::None,
+            Par::Pool(shared_dev.pool(), avail),
+            &mut pool_scratch,
+        );
+        black_box(c_pool[0]);
+    });
+    let (scoped_ms, pool_ms) =
+        (s_scoped.median.as_secs_f64() * 1e3, s_pool.median.as_secs_f64() * 1e3);
+    let pool_gemm_identical =
+        c_scoped.iter().zip(&c_pool).all(|(x, y)| x.to_bits() == y.to_bits());
+    println!(
+        "gemm {size}^3  scoped-spawn {scoped_ms:9.2} ms | persistent-pool {pool_ms:9.2} ms \
+         ({:.2}x) | numerics {}",
+        scoped_ms / pool_ms,
+        if pool_gemm_identical { "identical" } else { "DIFFER" }
+    );
+
+    // -- 6. coordinator end-to-end over the plan backend, shards 1 vs 2 --
     let n_coord = if quick { 400 } else { 4000 };
-    let coord_json = match bench_coordinator(n_coord) {
-        Ok(j) => j,
-        Err(e) => {
+    let (coord1, coord2) = match (bench_coordinator(n_coord, 1), bench_coordinator(n_coord, 2)) {
+        (Ok(c1), Ok(c2)) => (c1, c2),
+        (Err(e), _) | (_, Err(e)) => {
             eprintln!("coordinator bench failed: {e}");
             return 1;
         }
     };
+    let shard_identical = coord1.probe.len() == coord2.probe.len()
+        && coord1
+            .probe
+            .iter()
+            .zip(&coord2.probe)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+    println!(
+        "coordinator shards: 1 -> {:.0} req/s | 2 -> {:.0} req/s | probe numerics {}",
+        coord1.req_per_s,
+        coord2.req_per_s,
+        if shard_identical { "identical" } else { "DIFFER" }
+    );
+    let numerics_ok = all_identical && pool_gemm_identical && shard_identical;
 
-    // -- 6. machine-readable report --------------------------------------
+    // -- 7. machine-readable report --------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"runtime\",\n  \"quick\": {quick},\n  \"size\": {size},\n  \
          \"threads_available\": {avail},\n  \"threads_swept\": {threads:?},\n  \
@@ -665,12 +783,21 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"fixtures\": [\n    {}\n  ],\n  \
          \"conv\": {{\"plan_steps\": {conv_steps}, \"im2col_gemm_steps\": {conv_gemms}, \
          \"max_steps\": 10}},\n  \
-         \"coordinator\": {coord_json},\n  \
+         \"pool\": {{\"gemm_scoped_ms\": {scoped_ms:.3}, \"gemm_pool_ms\": {pool_ms:.3}, \
+         \"gemm_identical\": {pool_gemm_identical}, \
+         \"shards1_req_per_s\": {:.1}, \"shards2_req_per_s\": {:.1}, \
+         \"shard_numerics_identical\": {shard_identical}}},\n  \
+         \"coordinator\": {},\n  \
+         \"coordinator_sharded\": {},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
-         \"pass\": {}, \"numerics_identical\": {all_identical}}}\n}}\n",
+         \"pass\": {}, \"numerics_identical\": {numerics_ok}}}\n}}\n",
         gemm_rows.join(",\n    "),
         plan_rows.join(",\n    "),
         fixture_rows.join(",\n    "),
+        coord1.req_per_s,
+        coord2.req_per_s,
+        coord1.json,
+        coord2.json,
         speedup >= 3.0
     );
     let out_path = m.get("out");
@@ -679,9 +806,9 @@ fn cmd_bench(args: &[String]) -> i32 {
         return 1;
     }
     println!(
-        "\nplan-vs-interpreter best speedup: {speedup:.2}x (numerics identical: {all_identical})\nwrote {out_path}"
+        "\nplan-vs-interpreter best speedup: {speedup:.2}x (numerics identical: {numerics_ok})\nwrote {out_path}"
     );
-    if all_identical {
+    if numerics_ok {
         0
     } else {
         1

@@ -3,6 +3,15 @@
 //! pieces the coordinator's event loop needs (tokio is unavailable offline;
 //! the request path is CPU-bound PJRT execution, so OS threads are the
 //! right tool anyway).
+//!
+//! Beyond fire-and-forget [`ThreadPool::spawn`], the pool offers a
+//! **blocking data-parallel primitive**, [`ThreadPool::par_for`]: run a
+//! borrowed closure over `0..tasks` across the workers *and the calling
+//! thread*, returning only when every index has completed. This is what
+//! lets the blocked GEMM of [`crate::blas::block_gemm`] fan its
+//! column-chunk panel work out over one long-lived, process-wide pool
+//! (owned by [`crate::runtime::device::Device`]) instead of spawning and
+//! joining scoped threads on every call.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -203,7 +212,13 @@ impl<T> Receiver<T> {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-size thread pool with graceful shutdown.
+/// Fixed-size thread pool with graceful shutdown and a blocking
+/// data-parallel dispatch ([`ThreadPool::par_for`]).
+///
+/// A job that panics is contained (`catch_unwind`): the worker thread
+/// survives and keeps draining the queue, so a long-lived pool (the
+/// process-wide GEMM pool of [`crate::runtime::device::Device`]) cannot
+/// be silently bled dry by one bad task.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
@@ -227,7 +242,17 @@ impl ThreadPool {
                     .spawn(move || {
                         while let Ok(job) = rx.recv() {
                             active.fetch_add(1, Ordering::SeqCst);
-                            job();
+                            // contain panics: the pool must outlive any one
+                            // job. The default panic hook has already printed
+                            // the payload/location; this line keeps the
+                            // containment itself loud (par_for additionally
+                            // re-raises on its caller).
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            if r.is_err() {
+                                eprintln!(
+                                    "thread-pool job panicked (contained; pool keeps serving)"
+                                );
+                            }
                             active.fetch_sub(1, Ordering::SeqCst);
                         }
                     })
@@ -237,10 +262,75 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers, active, shutdown }
     }
 
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a job. Panics if the pool is shut down.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
         assert!(!self.shutdown.load(Ordering::SeqCst), "pool is shut down");
         self.tx.as_ref().unwrap().send(Box::new(job)).ok();
+    }
+
+    /// Run `f(i)` for every `i in 0..tasks` across the pool workers **and
+    /// the calling thread**, returning once every index has completed —
+    /// the blocking primitive behind the persistent-pool GEMM (each index
+    /// is one column-chunk panel job of [`crate::blas::block_gemm`]).
+    ///
+    /// The closure is *borrowed*: it may capture non-`'static` state
+    /// (packed panels, the output image) exactly like a
+    /// `std::thread::scope` body. The calling thread claims indices too,
+    /// so progress is guaranteed even when every worker is busy with
+    /// other callers' tasks (several coordinator shards share one pool),
+    /// and a call with `tasks <= 1` runs inline without touching the
+    /// queue. If any task panics, the panic is re-raised on the calling
+    /// thread after all tasks finish.
+    pub fn par_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if tasks == 1 {
+            f(0);
+            return;
+        }
+        assert!(!self.shutdown.load(Ordering::SeqCst), "pool is shut down");
+        // SAFETY (lifetime erasure): the closure reference is smuggled to
+        // the workers as a raw pointer. It is dereferenced only for a
+        // claimed index `i < tasks` (see `ParFor::run`), and every claimed
+        // index decrements `remaining` exactly once — on the normal path
+        // and on unwind (the `Done` drop guard). `wait()` blocks this
+        // frame until `remaining == 0`, i.e. until every dereference has
+        // completed, so the pointee outlives all uses. Late-waking helper
+        // jobs only touch the (Arc-owned) atomics, never the pointer.
+        #[allow(clippy::useless_transmute)]
+        let erased: *const (dyn Fn(usize) + Sync + 'static) = unsafe { std::mem::transmute(f) };
+        let task = Arc::new(ParFor {
+            f: erased,
+            tasks,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(tasks),
+            done: Mutex::new(()),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        // one helper job per worker (capped at tasks - 1: the caller is a
+        // worker too); helpers that wake late simply find nothing to claim
+        let helpers = self.workers.len().min(tasks - 1);
+        for _ in 0..helpers {
+            let t = task.clone();
+            self.tx.as_ref().unwrap().send(Box::new(move || t.run())).ok();
+        }
+        // the caller's own share must not unwind past `wait`: helpers may
+        // still be inside `f`, and this frame owns what `f` borrows
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task.run()));
+        task.wait();
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if task.panicked.load(Ordering::SeqCst) {
+            panic!("par_for task panicked");
+        }
     }
 
     /// Number of jobs currently executing.
@@ -271,6 +361,70 @@ impl Drop for ThreadPool {
     fn drop(&mut self) {
         if self.tx.is_some() {
             self.shutdown_impl();
+        }
+    }
+}
+
+/// Shared state of one [`ThreadPool::par_for`] call: a claim counter
+/// (`next`), a completion latch (`remaining` + condvar), and the erased
+/// closure pointer. Helpers and the caller all run [`ParFor::run`].
+struct ParFor {
+    /// Erased pointer to the caller's borrowed closure; only dereferenced
+    /// for claimed indices (see the safety comment in `par_for`).
+    f: *const (dyn Fn(usize) + Sync + 'static),
+    tasks: usize,
+    next: AtomicUsize,
+    remaining: AtomicUsize,
+    done: Mutex<()>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `ParFor` is shared across threads only through `Arc` inside
+// `par_for`. The raw pointer is read-only, points at a `Sync` closure,
+// and the completion latch guarantees it is never dereferenced after the
+// owning stack frame returns (argued at the transmute site).
+unsafe impl Send for ParFor {}
+unsafe impl Sync for ParFor {}
+
+impl ParFor {
+    /// Claim and execute indices until none are left.
+    fn run(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.tasks {
+                return;
+            }
+            // the latch must tick even if `f` panics, or `wait` deadlocks
+            struct Done<'a>(&'a ParFor);
+            impl Drop for Done<'_> {
+                fn drop(&mut self) {
+                    if std::thread::panicking() {
+                        self.0.panicked.store(true, Ordering::SeqCst);
+                    }
+                    if self.0.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        // lock-then-notify pairs with the wait loop, so
+                        // the final decrement cannot race past a caller
+                        // that is just about to sleep
+                        drop(self.0.done.lock().unwrap());
+                        self.0.cv.notify_all();
+                    }
+                }
+            }
+            let _done = Done(self);
+            // SAFETY: `i < tasks` was claimed, so this index's `remaining`
+            // decrement has not happened yet and `par_for` is still
+            // blocked in `wait` — the closure behind the pointer is alive.
+            let f = unsafe { &*self.f };
+            f(i);
+        }
+    }
+
+    /// Block until every claimed index has completed.
+    fn wait(&self) {
+        let mut g = self.done.lock().unwrap();
+        while self.remaining.load(Ordering::SeqCst) != 0 {
+            g = self.cv.wait(g).unwrap();
         }
     }
 }
@@ -404,6 +558,134 @@ mod tests {
         }
         pool.shutdown();
         assert_eq!(c.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_for_covers_every_index_exactly_once() {
+        let pool = ThreadPool::new("pf", 4);
+        for tasks in [0usize, 1, 2, 3, 4, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.par_for(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} of {tasks}");
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn par_for_borrows_and_mutates_caller_state() {
+        // the scoped-threads replacement: disjoint &mut chunks handed to
+        // workers through per-index mutexes, exactly like the GEMM does
+        let pool = ThreadPool::new("pfm", 3);
+        let mut data = vec![0u64; 64];
+        {
+            let chunks: Vec<Mutex<&mut [u64]>> =
+                data.chunks_mut(16).map(Mutex::new).collect();
+            pool.par_for(chunks.len(), &|w| {
+                let mut g = chunks[w].lock().unwrap();
+                for (j, slot) in g.iter_mut().enumerate() {
+                    *slot = (w * 16 + j) as u64;
+                }
+            });
+        }
+        let expect: Vec<u64> = (0..64).collect();
+        assert_eq!(data, expect);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn par_for_is_reentrant_across_callers() {
+        // several threads sharing one pool must all make progress (the
+        // caller participates, so a saturated queue cannot deadlock)
+        let pool = Arc::new(ThreadPool::new("pfc", 2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    let sum = AtomicUsize::new(0);
+                    pool.par_for(100, &|i| {
+                        sum.fetch_add(i, Ordering::SeqCst);
+                    });
+                    sum.load(Ordering::SeqCst)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 4950);
+        }
+    }
+
+    #[test]
+    fn par_for_propagates_task_panics() {
+        let pool = ThreadPool::new("pfp", 2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.par_for(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must surface on the caller");
+        // the pool survives a panicking task and keeps serving
+        let c = AtomicUsize::new(0);
+        pool.par_for(16, &|_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 16);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let pool = ThreadPool::new("drain", 2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = c.clone();
+            pool.spawn(move || {
+                std::thread::sleep(Duration::from_micros(200));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown(); // must run everything already queued
+        assert_eq!(c.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn active_and_queued_accounting() {
+        let pool = ThreadPool::new("acct", 2);
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (ready_tx, ready_rx) = channel::<()>();
+        // occupy both workers, then queue three more jobs behind them
+        for _ in 0..2 {
+            let gate = gate_rx.clone();
+            let ready = ready_tx.clone();
+            pool.spawn(move || {
+                ready.send(()).unwrap();
+                gate.recv().unwrap();
+            });
+        }
+        ready_rx.recv().unwrap();
+        ready_rx.recv().unwrap();
+        for _ in 0..3 {
+            pool.spawn(|| {});
+        }
+        assert_eq!(pool.active(), 2, "both workers busy");
+        assert_eq!(pool.queued(), 3, "three jobs waiting");
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        // released: the pool must quiesce (counters back to zero)
+        let t0 = std::time::Instant::now();
+        while (pool.active() != 0 || pool.queued() != 0)
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.active(), 0);
+        assert_eq!(pool.queued(), 0);
+        pool.shutdown();
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! The device/session layer of the execution API: one [`Device`] per
+//! process (or per explicit budget) owning the **persistent GEMM worker
+//! pool** and the global thread budget, **typed tensor buffers**
+//! ([`TensorRef`] / [`TensorMut`] over [`DTypeSlice`]), and the
+//! per-request [`ExecCtx`] that carries both to a compiled model.
+//!
+//! This is the layered-context interface of the compiler-built-ins
+//! papers (Moreira et al. 2021; Kuzma et al. 2023): typed buffers plus a
+//! long-lived layered engine, instead of untyped flat `&[&[f32]]` slices
+//! and per-call scoped thread spawns. Concretely:
+//!
+//! * the [`Device`] wraps one [`crate::rt::ThreadPool`] that every GEMM
+//!   in the process fans out over via the blocking
+//!   [`par_for`](crate::rt::ThreadPool::par_for) primitive — coordinator
+//!   shards all draw from this one pool, so adding shards cannot
+//!   oversubscribe cores;
+//! * [`DTypeSlice`] makes the element type part of the API: `F32` slices
+//!   execute directly, `Bf16` slices (stored as raw `u16` bits, the
+//!   `xvbf16ger2` operand width) are widened exactly at the boundary
+//!   today and are the hook for a future natively-packed bf16 panel path
+//!   (ROADMAP "bf16 packed fast path");
+//! * the [`ExecCtx`] bundles the device handle with reusable per-request
+//!   staging, so dtype conversion allocates once per context, not once
+//!   per request.
+//!
+//! ```
+//! use power_mma::runtime::{Device, TensorRef, TensorMut, DTypeSlice};
+//!
+//! let device = Device::new(2); // explicit 2-worker budget
+//! assert_eq!(device.threads(), 2);
+//! let x = [1.0f32, 2.0, 3.0, 4.0];
+//! let t = TensorRef::f32(&x, &[2, 2]);
+//! assert_eq!(t.elems(), 4);
+//! assert!(matches!(t.data, DTypeSlice::F32(_)));
+//! let mut out = [0u16; 4];
+//! let mut tm = TensorMut::bf16(&mut out, &[2, 2]);
+//! tm.store(&x).unwrap(); // bf16 round-to-nearest-even at the boundary
+//! assert_eq!(out[0], 0x3f80); // 1.0 in bf16 bits
+//! ```
+
+use crate::bail;
+use crate::error::Result;
+use crate::rt::ThreadPool;
+use std::sync::{Arc, OnceLock};
+
+/// The process-level execution context: the persistent GEMM worker pool
+/// plus the global worker budget. Create one with [`Device::new`] for an
+/// explicit budget, or share the process-wide instance via
+/// [`Device::shared`]. Every [`Runtime`](super::Runtime) holds a
+/// `Arc<Device>`; coordinator shards that share a device share its pool,
+/// which is what keeps the total GEMM worker count bounded no matter how
+/// many engines are serving.
+pub struct Device {
+    pool: ThreadPool,
+    threads: usize,
+}
+
+impl Device {
+    /// The default worker budget: `std::thread::available_parallelism()`
+    /// clamped to 16 — the single source of the process-wide policy
+    /// (previously duplicated per backend).
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).min(16)
+    }
+
+    /// A device with an explicit worker budget (the pool is spawned
+    /// eagerly and lives as long as the device).
+    pub fn new(threads: usize) -> Arc<Device> {
+        let threads = threads.max(1);
+        Arc::new(Device { pool: ThreadPool::new("mma-gemm", threads), threads })
+    }
+
+    /// The process-wide shared device (budget =
+    /// [`Device::default_threads`]), created on first use and alive for
+    /// the rest of the process — the "persistent GEMM worker pool" of the
+    /// serving path. Idle workers cost nothing but a parked thread.
+    pub fn shared() -> Arc<Device> {
+        static SHARED: OnceLock<Arc<Device>> = OnceLock::new();
+        SHARED.get_or_init(|| Device::new(Device::default_threads())).clone()
+    }
+
+    /// The worker budget (also the pool size).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The persistent worker pool (fan GEMM panel work out with
+    /// [`ThreadPool::par_for`]).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// A fresh per-request execution context on this device.
+    pub fn ctx(&self) -> ExecCtx<'_> {
+        ExecCtx::new(self)
+    }
+}
+
+/// Widen one bf16 value (raw bits, high half of the f32 layout) to f32 —
+/// exact, every bf16 value is representable.
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits(u32::from(bits) << 16)
+}
+
+/// Narrow an f32 to bf16 bits with round-to-nearest-even (the
+/// `xvbf16ger2` input contract, shared with
+/// [`bf16_round`](super::hlo::bf16_round)).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    (super::hlo::bf16_round(x).to_bits() >> 16) as u16
+}
+
+/// A typed, borrowed, read-only tensor buffer: the element storage of
+/// one model input. `F32` is the native execution dtype; `Bf16` carries
+/// raw bf16 bits (`u16`, the high half of the f32 layout) and is widened
+/// exactly at the API boundary.
+#[derive(Clone, Copy, Debug)]
+pub enum DTypeSlice<'a> {
+    /// Native f32 storage.
+    F32(&'a [f32]),
+    /// bf16 storage as raw bits (widened exactly on entry).
+    Bf16(&'a [u16]),
+}
+
+impl DTypeSlice<'_> {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            DTypeSlice::F32(s) => s.len(),
+            DTypeSlice::Bf16(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human-readable dtype name (diagnostics).
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            DTypeSlice::F32(_) => "f32",
+            DTypeSlice::Bf16(_) => "bf16",
+        }
+    }
+}
+
+/// A typed, borrowed input tensor: storage plus logical row-major dims.
+/// The dims are validated against the model metadata at execute time —
+/// the shape checking the untyped `&[&[f32]]` API could not do.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorRef<'a> {
+    /// Element storage.
+    pub data: DTypeSlice<'a>,
+    /// Logical row-major shape.
+    pub dims: &'a [usize],
+}
+
+impl<'a> TensorRef<'a> {
+    /// An f32 tensor view.
+    pub fn f32(data: &'a [f32], dims: &'a [usize]) -> TensorRef<'a> {
+        TensorRef { data: DTypeSlice::F32(data), dims }
+    }
+
+    /// A bf16 tensor view over raw bf16 bits.
+    pub fn bf16(data: &'a [u16], dims: &'a [usize]) -> TensorRef<'a> {
+        TensorRef { data: DTypeSlice::Bf16(data), dims }
+    }
+
+    /// Element count of the storage.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Element count the dims claim (must equal [`TensorRef::len`]).
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Mutable element storage of one output tensor.
+#[derive(Debug)]
+pub enum DTypeSliceMut<'a> {
+    /// Native f32 storage.
+    F32(&'a mut [f32]),
+    /// bf16 storage as raw bits (results are rounded to nearest even on
+    /// the final store).
+    Bf16(&'a mut [u16]),
+}
+
+impl DTypeSliceMut<'_> {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            DTypeSliceMut::F32(s) => s.len(),
+            DTypeSliceMut::Bf16(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A typed, borrowed output buffer: where a compiled model writes its
+/// result. An `F32` buffer receives the result verbatim; a `Bf16` buffer
+/// receives it rounded to nearest even per element.
+#[derive(Debug)]
+pub struct TensorMut<'a> {
+    /// Element storage (written by [`TensorMut::store`]).
+    pub data: DTypeSliceMut<'a>,
+    /// Logical row-major shape.
+    pub dims: &'a [usize],
+}
+
+impl<'a> TensorMut<'a> {
+    /// An f32 output buffer.
+    pub fn f32(data: &'a mut [f32], dims: &'a [usize]) -> TensorMut<'a> {
+        TensorMut { data: DTypeSliceMut::F32(data), dims }
+    }
+
+    /// A bf16 output buffer (results rounded on store).
+    pub fn bf16(data: &'a mut [u16], dims: &'a [usize]) -> TensorMut<'a> {
+        TensorMut { data: DTypeSliceMut::Bf16(data), dims }
+    }
+
+    /// Element count of the storage.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Write a finished f32 result into the buffer, converting per the
+    /// buffer's dtype. Fails on length mismatch.
+    pub fn store(&mut self, result: &[f32]) -> Result<()> {
+        match &mut self.data {
+            DTypeSliceMut::F32(dst) => {
+                if dst.len() != result.len() {
+                    bail!("output buffer has {} elements, result has {}", dst.len(), result.len());
+                }
+                dst.copy_from_slice(result);
+            }
+            DTypeSliceMut::Bf16(dst) => {
+                if dst.len() != result.len() {
+                    bail!("output buffer has {} elements, result has {}", dst.len(), result.len());
+                }
+                for (d, &v) in dst.iter_mut().zip(result) {
+                    *d = f32_to_bf16(v);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-request execution context: the device handle (worker pool +
+/// budget) plus reusable staging buffers for dtype conversion at the API
+/// boundary. Create with [`Device::ctx`] (or [`ExecCtx::new`]) and reuse
+/// across requests — staging capacity is retained, so steady-state
+/// requests with bf16 inputs allocate nothing.
+pub struct ExecCtx<'d> {
+    device: &'d Device,
+    /// One staging slot per input position; filled only for non-f32
+    /// inputs (exact widening), reused across requests.
+    staging: Vec<Vec<f32>>,
+}
+
+impl<'d> ExecCtx<'d> {
+    /// A fresh context on `device` (no allocation until a non-f32 input
+    /// is staged).
+    pub fn new(device: &'d Device) -> ExecCtx<'d> {
+        ExecCtx { device, staging: Vec::new() }
+    }
+
+    /// The device this context executes on.
+    pub fn device(&self) -> &'d Device {
+        self.device
+    }
+
+    /// Widen every non-f32 input into this context's staging slots;
+    /// afterwards [`ExecCtx::f32_view`] yields a plain `&[f32]` for any
+    /// input index.
+    pub(crate) fn stage(&mut self, inputs: &[TensorRef<'_>]) {
+        if self.staging.len() < inputs.len() {
+            self.staging.resize_with(inputs.len(), Vec::new);
+        }
+        for (slot, t) in self.staging.iter_mut().zip(inputs) {
+            if let DTypeSlice::Bf16(bits) = t.data {
+                slot.clear();
+                slot.extend(bits.iter().map(|&b| bf16_to_f32(b)));
+            }
+        }
+    }
+
+    /// The f32 view of input `i`: the input's own storage for `F32`
+    /// tensors, the staged widening for `Bf16` tensors. Call
+    /// [`ExecCtx::stage`] first.
+    pub(crate) fn f32_view<'s>(&'s self, i: usize, inputs: &'s [TensorRef<'s>]) -> &'s [f32] {
+        match inputs[i].data {
+            DTypeSlice::F32(s) => s,
+            DTypeSlice::Bf16(_) => &self.staging[i],
+        }
+    }
+
+    /// Stage and collect the f32 views of all inputs (the bridge every
+    /// backend uses between the typed API and the f32 execution core).
+    pub(crate) fn f32_inputs<'s>(&'s mut self, inputs: &'s [TensorRef<'s>]) -> Vec<&'s [f32]> {
+        self.stage(inputs);
+        (0..inputs.len()).map(|i| self.f32_view(i, inputs)).collect()
+    }
+}
+
+/// Validate a typed input set against parsed model metadata: input
+/// count, exact dims, and storage length per input.
+pub(crate) fn validate_inputs(
+    name: &str,
+    meta: &super::ModelMeta,
+    inputs: &[TensorRef<'_>],
+) -> Result<()> {
+    if inputs.len() != meta.input_shapes.len() {
+        bail!("{name}: expected {} inputs, got {}", meta.input_shapes.len(), inputs.len());
+    }
+    for (i, t) in inputs.iter().enumerate() {
+        if t.dims != meta.input_shapes[i].as_slice() {
+            bail!(
+                "{name}: input {i} has dims {:?}, meta declares {:?}",
+                t.dims,
+                meta.input_shapes[i]
+            );
+        }
+        if t.len() != t.elems() {
+            bail!(
+                "{name}: input {i} has {} elements, dims {:?} want {}",
+                t.len(),
+                t.dims,
+                t.elems()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Validate a typed output buffer against parsed model metadata.
+pub(crate) fn validate_output(
+    name: &str,
+    meta: &super::ModelMeta,
+    out: &TensorMut<'_>,
+) -> Result<()> {
+    if out.dims != meta.output_shape.as_slice() {
+        bail!(
+            "{name}: output buffer has dims {:?}, meta declares {:?}",
+            out.dims,
+            meta.output_shape
+        );
+    }
+    let want: usize = meta.output_shape.iter().product();
+    if out.len() != want {
+        bail!("{name}: output buffer has {} elements, expected {want}", out.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_trip_is_exact() {
+        for bits in [0u16, 0x3f80, 0xbf80, 0x4049, 0x7f80, 0xff80, 0x0001] {
+            assert_eq!(f32_to_bf16(bf16_to_f32(bits)), bits, "bits {bits:#06x}");
+        }
+        // narrowing rounds to nearest even: 1.0 + 2^-9 is exactly halfway
+        // between bf16(1.0) and the next value up -> rounds to even (1.0)
+        let halfway = f32::from_bits(0x3f80_8000);
+        assert_eq!(f32_to_bf16(halfway), 0x3f80);
+        // ...but 1.0 + 3*2^-9 rounds up to the (even) next-next value
+        let above = f32::from_bits(0x3f81_8000);
+        assert_eq!(f32_to_bf16(above), 0x3f82);
+    }
+
+    #[test]
+    fn tensor_views_report_shapes() {
+        let d = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let t = TensorRef::f32(&d, &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.data.dtype(), "f32");
+        let h = [0u16; 4];
+        let t = TensorRef::bf16(&h, &[4]);
+        assert_eq!(t.data.dtype(), "bf16");
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn store_converts_per_dtype() {
+        let src = [1.0f32, -2.5, 0.15625];
+        let mut f = [0f32; 3];
+        TensorMut::f32(&mut f, &[3]).store(&src).unwrap();
+        assert_eq!(f, src);
+        let mut h = [0u16; 3];
+        TensorMut::bf16(&mut h, &[3]).store(&src).unwrap();
+        for (i, (&bits, &v)) in h.iter().zip(&src).enumerate() {
+            assert_eq!(bf16_to_f32(bits), crate::runtime::hlo::bf16_round(v), "elem {i}");
+        }
+        // length mismatch rejected
+        let mut short = [0f32; 2];
+        assert!(TensorMut::f32(&mut short, &[2]).store(&src).is_err());
+    }
+
+    #[test]
+    fn ctx_stages_bf16_inputs_exactly() {
+        let device = Device::new(1);
+        let mut ctx = device.ctx();
+        let f = [0.5f32, -1.0];
+        let h: Vec<u16> = [3.0f32, -0.125].iter().map(|&v| f32_to_bf16(v)).collect();
+        let dims = [2usize];
+        let inputs = [TensorRef::f32(&f, &dims), TensorRef::bf16(&h, &dims)];
+        let views = ctx.f32_inputs(&inputs);
+        assert_eq!(views[0], &f[..]);
+        assert_eq!(views[1], &[3.0f32, -0.125][..]);
+    }
+
+    #[test]
+    fn shared_device_is_a_singleton() {
+        let a = Device::shared();
+        let b = Device::shared();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.threads(), Device::default_threads());
+        assert_eq!(a.pool().size(), a.threads());
+    }
+}

@@ -2,37 +2,56 @@
 //! `python/compile/aot.py` (HLO **text** + `.meta` shape lines + expected
 //! outputs) and executes them entirely in-crate.
 //!
-//! The former `xla::PjRt*` FFI is gone.  Execution goes through the
-//! [`EngineBackend`] trait. The default backend ([`HloPlanBackend`],
-//! behind [`Runtime::cpu`]) **compiles** each artifact once at `load()`
-//! into a [`plan::Plan`] — a topologically-ordered step list over a
-//! preallocated, liveness-reusing buffer arena, with a rewrite pass
-//! that collapses conv graphs into single im2col GEMM steps and fuses
-//! post-`dot` bias/relu tails into the GEMM writeback — and executes
-//! requests against the plan on the blocked parallel GEMM of
-//! [`crate::blas::block_gemm`].  The legacy [`HloInterpreterBackend`]
-//! (per-request walk of [`hlo::HloModule::evaluate`] over `ref_gemm`) is
-//! kept as the numerics oracle and for `power-mma bench serve`
-//! comparisons; both produce bit-identical results on the artifact set.
-//! Either way the whole request path is zero-external-dependency,
-//! observable, testable rust, and other backends (e.g. one lowering onto
-//! the simulated MMA kernels, or a real PJRT client) plug in behind the
-//! same trait via [`Runtime::with_backend`].
+//! The former `xla::PjRt*` FFI is gone.  Execution is organized around
+//! the **device/session API** of [`device`]:
 //!
-//! The coordinator still runs a [`Runtime`] on a dedicated engine thread;
-//! backends are constructed *inside* that thread via a factory, so
-//! thread-confined backends remain possible. The plan backend's GEMM
-//! workers are *scoped* threads that join within each `dot`, so nothing
-//! escapes the engine thread.
+//! * a [`Device`] owns the process-wide **persistent GEMM worker pool**
+//!   and the global thread budget (one pool, shared by every engine and
+//!   coordinator shard — see [`Device::shared`]);
+//! * models execute on **typed tensors**: [`TensorRef`] /
+//!   [`TensorMut`] buffers over [`DTypeSlice`] (`F32` or raw-bits
+//!   `Bf16`), validated against the model metadata;
+//! * an [`ExecCtx`] carries the device handle plus per-request staging
+//!   into [`CompiledModel::execute`].
+//!
+//! Backends plug in behind the [`EngineBackend`] trait. The default
+//! ([`HloPlanBackend`], behind [`Runtime::cpu`]) **compiles** each
+//! artifact once at `load()` into a [`plan::Plan`] — a
+//! topologically-ordered step list over a preallocated, liveness-reusing
+//! buffer arena, with a rewrite pass that collapses conv graphs into
+//! single im2col GEMM steps and fuses post-`dot` bias/relu tails into
+//! the GEMM writeback — and executes requests against the plan on the
+//! blocked parallel GEMM of [`crate::blas::block_gemm`], fanning panel
+//! work out over the device pool (no scoped thread spawns on the hot
+//! path). The legacy [`HloInterpreterBackend`] (per-request walk of
+//! [`hlo::HloModule::evaluate`] over `ref_gemm`) is kept as the numerics
+//! oracle and for `power-mma bench serve` comparisons; both produce
+//! bit-identical results on the artifact set.
+//!
+//! The untyped [`Runtime::execute`]`(&str, &[&[f32]])` entry point stays
+//! as a thin compat shim over the typed path ([`Runtime::execute_typed`])
+//! so existing callers migrate incrementally.
+//!
+//! The coordinator still runs a [`Runtime`] on a dedicated engine thread
+//! (one per shard); backends are constructed *inside* that thread via a
+//! factory, so thread-confined backends remain possible. GEMM fan-out
+//! drains inside each step, so nothing escapes the engine thread.
 
 pub mod artifacts;
+pub mod device;
 pub mod hlo;
 pub mod plan;
 
+pub use device::{
+    bf16_to_f32, f32_to_bf16, DTypeSlice, DTypeSliceMut, Device, ExecCtx, TensorMut, TensorRef,
+};
+
+use crate::blas::block_gemm::Par;
 use crate::error::{Context, Result};
 use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Parsed `<name>.meta` line: `name;in0shape,in1shape,…;outshape`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -43,7 +62,9 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
-    /// Parse one manifest line.
+    /// Parse one manifest line. Exactly three `;`-separated fields are
+    /// accepted — a line with trailing fields (`name;ins;out;junk`) is
+    /// malformed and rejected, not silently truncated.
     pub fn parse(line: &str) -> Result<ModelMeta> {
         let mut parts = line.trim().split(';');
         let name = parts.next().ok_or_else(|| err!("empty manifest line"))?.to_string();
@@ -52,6 +73,9 @@ impl ModelMeta {
         }
         let ins = parts.next().ok_or_else(|| err!("{name}: missing input shapes"))?;
         let out = parts.next().ok_or_else(|| err!("{name}: missing output shape"))?;
+        if let Some(extra) = parts.next() {
+            bail!("{name}: trailing field '{extra}' in manifest line");
+        }
         let parse_shape = |s: &str| -> Result<Vec<usize>> {
             s.split('x').map(|d| d.parse::<usize>().context("bad dim")).collect()
         };
@@ -73,8 +97,17 @@ impl ModelMeta {
 
 /// A model compiled by an [`EngineBackend`], ready to execute.
 pub trait CompiledModel {
-    /// Execute on flat row-major f32 inputs; returns the flat f32 output.
-    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>>;
+    /// Execute on typed input tensors, writing the result into the typed
+    /// output buffer (rounded to the buffer's dtype). The [`ExecCtx`]
+    /// supplies the device (worker pool + budget) and per-request
+    /// staging; inputs are assumed validated against the model metadata
+    /// (see [`Runtime::execute_typed`]).
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        inputs: &[TensorRef<'_>],
+        out: &mut TensorMut<'_>,
+    ) -> Result<()>;
 }
 
 /// Pluggable execution backend: turns HLO text into executable models.
@@ -83,8 +116,12 @@ pub trait EngineBackend {
     fn name(&self) -> &'static str;
 
     /// Compile one artifact's HLO text, validating it against the meta.
+    /// The device provides the worker budget compiled models size their
+    /// scratch for (their `execute` draws workers from the device of the
+    /// [`ExecCtx`] they are called with).
     fn compile(
         &self,
+        device: &Device,
         name: &str,
         hlo_text: &str,
         meta: &ModelMeta,
@@ -129,6 +166,7 @@ impl EngineBackend for HloInterpreterBackend {
 
     fn compile(
         &self,
+        _device: &Device,
         name: &str,
         hlo_text: &str,
         meta: &ModelMeta,
@@ -143,44 +181,35 @@ struct InterpretedModel {
 }
 
 impl CompiledModel for InterpretedModel {
-    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        let outputs = self.module.evaluate(inputs)?;
-        // aot.py lowers with return_tuple=True -> 1-tuple
-        let first = outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?;
-        Ok(first.data)
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        inputs: &[TensorRef<'_>],
+        out: &mut TensorMut<'_>,
+    ) -> Result<()> {
+        let result = {
+            let refs = ctx.f32_inputs(inputs);
+            let outputs = self.module.evaluate(&refs)?;
+            // aot.py lowers with return_tuple=True -> 1-tuple
+            outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?
+        };
+        out.store(&result.data)
     }
 }
 
 /// The default serving backend: lowers each artifact once at `load()`
 /// into a compiled [`plan::Plan`] (preallocated buffer arena, blocked
-/// parallel GEMM) and executes requests against the plan. Bit-identical
-/// to [`HloInterpreterBackend`] on finite inputs, several times faster
-/// on GEMM-heavy artifacts (measure with `power-mma bench serve`).
-pub struct HloPlanBackend {
-    threads: usize,
-}
+/// parallel GEMM over the device pool) and executes requests against the
+/// plan. Bit-identical to [`HloInterpreterBackend`] on finite inputs,
+/// several times faster on GEMM-heavy artifacts (measure with `power-mma
+/// bench serve`). The worker budget comes from the [`Device`] of the
+/// executing [`ExecCtx`].
+pub struct HloPlanBackend;
 
 impl HloPlanBackend {
-    /// The default GEMM worker cap: `std::thread::available_parallelism()`
-    /// clamped to 16 — the single source of the policy, shared with
-    /// `power-mma bench serve`'s thread sweep.
-    pub fn default_threads() -> usize {
-        std::thread::available_parallelism().map_or(1, |n| n.get()).min(16)
-    }
-
-    /// Plan backend with the worker cap of [`HloPlanBackend::default_threads`].
+    /// The plan backend (stateless: thread policy lives on the device).
     pub fn new() -> HloPlanBackend {
-        HloPlanBackend { threads: HloPlanBackend::default_threads() }
-    }
-
-    /// Plan backend with an explicit GEMM worker cap (1 = fully serial).
-    pub fn with_threads(threads: usize) -> HloPlanBackend {
-        HloPlanBackend { threads: threads.max(1) }
-    }
-
-    /// The configured GEMM worker cap.
-    pub fn threads(&self) -> usize {
-        self.threads
+        HloPlanBackend
     }
 }
 
@@ -197,6 +226,7 @@ impl EngineBackend for HloPlanBackend {
 
     fn compile(
         &self,
+        _device: &Device,
         name: &str,
         hlo_text: &str,
         meta: &ModelMeta,
@@ -205,7 +235,7 @@ impl EngineBackend for HloPlanBackend {
         let plan = plan::Plan::compile(&module)
             .map_err(|e| e.context(format!("compiling plan for {name}")))?;
         let bufs = std::sync::Mutex::new(plan.new_buffers());
-        Ok(Box::new(PlanModel { plan, bufs, threads: self.threads }))
+        Ok(Box::new(PlanModel { plan, bufs }))
     }
 }
 
@@ -215,15 +245,27 @@ impl EngineBackend for HloPlanBackend {
 struct PlanModel {
     plan: plan::Plan,
     bufs: std::sync::Mutex<plan::ExecBuffers>,
-    threads: usize,
 }
 
 impl CompiledModel for PlanModel {
-    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        inputs: &[TensorRef<'_>],
+        out: &mut TensorMut<'_>,
+    ) -> Result<()> {
+        let device = ctx.device();
+        let refs = ctx.f32_inputs(inputs);
         let mut bufs = self.bufs.lock().unwrap_or_else(|p| p.into_inner());
-        let outputs = self.plan.execute_into(&mut bufs, inputs, self.threads)?;
-        let first = outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?;
-        Ok(first.data)
+        let par = Par::Pool(device.pool(), device.threads());
+        // zero-copy: run the steps, then store the root arena slot
+        // straight into the caller's typed buffer — no intermediate
+        // output tensor is materialized on the serving hot path
+        self.plan.run_steps(&mut bufs, &refs, par)?;
+        let roots = self.plan.root_slices(&bufs);
+        let (data, _dims) =
+            *roots.first().ok_or_else(|| err!("model produced no output"))?;
+        out.store(data)
     }
 }
 
@@ -233,32 +275,58 @@ pub struct LoadedModel {
     exe: Box<dyn CompiledModel>,
 }
 
-/// The artifact-directory runtime with a compiled-model cache.
+/// The artifact-directory runtime with a compiled-model cache. Holds a
+/// [`Device`] handle: all its models execute on that device's persistent
+/// worker pool (runtimes sharing a device — e.g. coordinator shards —
+/// share the pool and therefore cannot oversubscribe the budget).
 pub struct Runtime {
     backend: Box<dyn EngineBackend>,
     models: HashMap<String, LoadedModel>,
     dir: PathBuf,
+    device: Arc<Device>,
 }
 
 impl Runtime {
     /// Runtime over an artifact directory with the default native plan
-    /// backend (the name is historical: this was the PJRT *CPU* client).
-    /// Does not load anything yet.
+    /// backend and the process-wide shared device (the name is
+    /// historical: this was the PJRT *CPU* client). Does not load
+    /// anything yet.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         Ok(Runtime::with_backend(Box::new(HloPlanBackend::new()), artifact_dir))
     }
 
-    /// Runtime over an artifact directory with an explicit backend.
+    /// Runtime over an artifact directory with an explicit backend, on
+    /// the process-wide shared device.
     pub fn with_backend(
         backend: Box<dyn EngineBackend>,
         artifact_dir: impl AsRef<Path>,
     ) -> Runtime {
-        Runtime { backend, models: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() }
+        Runtime::with_device(Device::shared(), backend, artifact_dir)
+    }
+
+    /// Runtime over an artifact directory with an explicit backend *and*
+    /// device (worker pool + thread budget).
+    pub fn with_device(
+        device: Arc<Device>,
+        backend: Box<dyn EngineBackend>,
+        artifact_dir: impl AsRef<Path>,
+    ) -> Runtime {
+        Runtime {
+            backend,
+            models: HashMap::new(),
+            dir: artifact_dir.as_ref().to_path_buf(),
+            device,
+        }
     }
 
     /// Name of the execution backend.
     pub fn platform(&self) -> String {
         self.backend.name().to_string()
+    }
+
+    /// The device this runtime executes on.
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
     }
 
     /// Load + compile one artifact by name (`<dir>/<name>.hlo.txt` +
@@ -272,23 +340,39 @@ impl Runtime {
             format!("reading {} (run `power-mma gen-artifacts`?)", meta_path.display())
         })?;
         let meta = ModelMeta::parse(&meta_line)?;
-        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        if meta.name != name {
+            bail!("{}: meta file declares model '{}'", name, meta.name);
+        }
+        self.load_with_meta(meta)
+    }
+
+    /// Compile one artifact from an already-parsed meta line — the
+    /// single-parse path `load_all` uses: the manifest line *is* the
+    /// meta, so it is parsed once and passed through instead of being
+    /// re-read and re-parsed from the `.meta` file per model.
+    pub fn load_with_meta(&mut self, meta: ModelMeta) -> Result<()> {
+        if self.models.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let hlo_path = self.dir.join(format!("{}.hlo.txt", meta.name));
         let hlo_text = std::fs::read_to_string(&hlo_path)
             .with_context(|| format!("reading {}", hlo_path.display()))?;
-        let exe = self.backend.compile(name, &hlo_text, &meta)?;
-        self.models.insert(name.to_string(), LoadedModel { meta, exe });
+        let exe = self.backend.compile(&self.device, &meta.name, &hlo_text, &meta)?;
+        self.models.insert(meta.name.clone(), LoadedModel { meta, exe });
         Ok(())
     }
 
-    /// Load every artifact listed in `manifest.txt`.
+    /// Load every artifact listed in `manifest.txt` (each line is a full
+    /// meta line, parsed exactly once).
     pub fn load_all(&mut self) -> Result<Vec<String>> {
         let manifest = std::fs::read_to_string(self.dir.join("manifest.txt"))
             .context("reading manifest.txt (run `power-mma gen-artifacts`)")?;
         let mut names = Vec::new();
         for line in manifest.lines().filter(|l| !l.trim().is_empty()) {
             let meta = ModelMeta::parse(line)?;
-            self.load(&meta.name)?;
-            names.push(meta.name);
+            let name = meta.name.clone();
+            self.load_with_meta(meta)?;
+            names.push(name);
         }
         Ok(names)
     }
@@ -301,8 +385,31 @@ impl Runtime {
         self.models.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Execute a model on typed tensors: inputs are validated against
+    /// the metadata (count, exact dims, storage length), the result is
+    /// written into `out` (rounded to its dtype). `Bf16` inputs are
+    /// widened exactly through the context's staging buffers, so a bf16
+    /// serving client never round-trips through caller-side conversion.
+    pub fn execute_typed(
+        &self,
+        name: &str,
+        ctx: &mut ExecCtx<'_>,
+        inputs: &[TensorRef<'_>],
+        out: &mut TensorMut<'_>,
+    ) -> Result<()> {
+        let model = self.models.get(name).ok_or_else(|| err!("model {name} not loaded"))?;
+        device::validate_inputs(name, &model.meta, inputs)?;
+        device::validate_output(name, &model.meta, out)?;
+        model
+            .exe
+            .execute(ctx, inputs, out)
+            .map_err(|e| e.context(format!("execute {name}")))
+    }
+
     /// Execute a model on flat f32 inputs (row-major); returns the flat
-    /// f32 output. Input lengths are validated against the metadata.
+    /// f32 output. **Compat shim** over [`Runtime::execute_typed`]: the
+    /// inputs are wrapped as f32 [`TensorRef`]s with the metadata's
+    /// shapes and a fresh per-call [`ExecCtx`] on this runtime's device.
     pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let model = self.models.get(name).ok_or_else(|| err!("model {name} not loaded"))?;
         if inputs.len() != model.meta.input_shapes.len() {
@@ -312,17 +419,16 @@ impl Runtime {
                 inputs.len()
             );
         }
-        for (i, data) in inputs.iter().enumerate() {
-            let want = model.meta.input_len(i);
-            if data.len() != want {
-                bail!("{name}: input {i} has {} elements, expected {want}", data.len());
-            }
-        }
-        let out = model.exe.execute(inputs).map_err(|e| e.context(format!("execute {name}")))?;
-        if out.len() != model.meta.output_len() {
-            bail!("{name}: output has {} elements, expected {}", out.len(), model.meta.output_len());
-        }
-        Ok(out)
+        let trefs: Vec<TensorRef<'_>> = inputs
+            .iter()
+            .zip(&model.meta.input_shapes)
+            .map(|(d, s)| TensorRef::f32(d, s))
+            .collect();
+        let mut result = vec![0f32; model.meta.output_len()];
+        let mut out = TensorMut::f32(&mut result, &model.meta.output_shape);
+        let mut ctx = self.device.ctx();
+        self.execute_typed(name, &mut ctx, &trefs, &mut out)?;
+        Ok(result)
     }
 
     /// Read the python-side expected output for the deterministic inputs.
@@ -378,6 +484,20 @@ mod tests {
     }
 
     #[test]
+    fn meta_rejects_trailing_fields() {
+        // a fourth field used to parse silently (split(';') never ran
+        // dry); it must be a hard error now
+        let e = ModelMeta::parse("name;2x2;2x2;junk").unwrap_err().to_string();
+        assert!(e.contains("trailing field"), "{e}");
+        // even an *empty* trailing field is malformed
+        let e = ModelMeta::parse("name;2x2;2x2;").unwrap_err().to_string();
+        assert!(e.contains("trailing field"), "{e}");
+        assert!(ModelMeta::parse("name;2x2;2x2;4x4;8x8").is_err());
+        // the well-formed line still parses
+        assert!(ModelMeta::parse("name;2x2;2x2").is_ok());
+    }
+
+    #[test]
     fn det_input_matches_python_formula() {
         let v = det_input(4, 1);
         for (i, &val) in v.iter().enumerate() {
@@ -406,6 +526,98 @@ mod tests {
         // input validation
         assert!(rt.execute("gemm_f32", &[]).is_err());
         assert!(rt.execute("nonexistent", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_all_uses_the_manifest_meta_without_rereading() {
+        // load_all parses each manifest line once and passes the meta
+        // through; the per-model .meta file is NOT re-read. Corrupting it
+        // must therefore not affect load_all...
+        let dir = std::env::temp_dir().join(format!("mma-rt-meta1x-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        std::fs::write(dir.join("gemm_f32.meta"), "garbage;;junk;;\n").unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        let names = rt.load_all().unwrap();
+        assert!(names.contains(&"gemm_f32".to_string()));
+        // ...while the by-name path (which does read the file) fails
+        let mut rt2 = Runtime::cpu(&dir).unwrap();
+        assert!(rt2.load("gemm_f32").is_err(), "corrupt .meta must fail load-by-name");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn typed_execution_matches_compat_shim_bitwise() {
+        let dir = std::env::temp_dir().join(format!("mma-rt-typed-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        rt.load_all().unwrap();
+        let meta = rt.meta("mlp_b32").unwrap().clone();
+        let ins = det_inputs(&meta);
+        let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+        let shim = rt.execute("mlp_b32", &refs).unwrap();
+        let trefs: Vec<TensorRef<'_>> = ins
+            .iter()
+            .zip(&meta.input_shapes)
+            .map(|(d, s)| TensorRef::f32(d, s))
+            .collect();
+        let mut typed = vec![0f32; meta.output_len()];
+        let mut out = TensorMut::f32(&mut typed, &meta.output_shape);
+        let mut ctx = rt.device().ctx();
+        rt.execute_typed("mlp_b32", &mut ctx, &trefs, &mut out).unwrap();
+        assert_eq!(
+            typed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            shim.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "typed path and compat shim must agree bit for bit"
+        );
+        // typed validation: wrong dims are rejected up front
+        let bad_dims = vec![1usize, 2];
+        let bad: Vec<TensorRef<'_>> =
+            ins.iter().map(|d| TensorRef::f32(d, &bad_dims)).collect();
+        assert!(rt.execute_typed("mlp_b32", &mut ctx, &bad, &mut out).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bf16_typed_inputs_stage_exactly() {
+        // feeding bf16 storage must equal feeding the pre-rounded f32
+        // values through the f32 path, bit for bit
+        let dir = std::env::temp_dir().join(format!("mma-rt-bf16-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        rt.load_all().unwrap();
+        let meta = rt.meta("gemm_f32").unwrap().clone();
+        let ins = det_inputs(&meta);
+        // bf16-quantize the inputs both ways
+        let bits: Vec<Vec<u16>> =
+            ins.iter().map(|v| v.iter().map(|&x| f32_to_bf16(x)).collect()).collect();
+        let widened: Vec<Vec<f32>> =
+            bits.iter().map(|v| v.iter().map(|&b| bf16_to_f32(b)).collect()).collect();
+        let refs: Vec<&[f32]> = widened.iter().map(|v| v.as_slice()).collect();
+        let via_f32 = rt.execute("gemm_f32", &refs).unwrap();
+        let trefs: Vec<TensorRef<'_>> = bits
+            .iter()
+            .zip(&meta.input_shapes)
+            .map(|(d, s)| TensorRef::bf16(d, s))
+            .collect();
+        let mut via_bf16 = vec![0f32; meta.output_len()];
+        let mut out = TensorMut::f32(&mut via_bf16, &meta.output_shape);
+        let mut ctx = rt.device().ctx();
+        rt.execute_typed("gemm_f32", &mut ctx, &trefs, &mut out).unwrap();
+        assert_eq!(
+            via_bf16.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via_f32.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // bf16 *output* buffers round the result on store
+        let mut hout = vec![0u16; meta.output_len()];
+        let mut out = TensorMut::bf16(&mut hout, &meta.output_shape);
+        rt.execute_typed("gemm_f32", &mut ctx, &trefs, &mut out).unwrap();
+        for (h, &v) in hout.iter().zip(&via_f32) {
+            assert_eq!(*h, f32_to_bf16(v));
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

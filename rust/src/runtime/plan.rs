@@ -53,9 +53,13 @@
 //! in `f32` after the accumulator narrows (see
 //! [`crate::blas::block_gemm`]'s numerics contract; tested per fixture).
 //!
-//! Threading: [`Plan::execute_into`] takes a worker cap; each GEMM step
-//! decides via [`threads_for`] whether to fan its M-panel loop out over
-//! scoped threads. Workers never outlive the call, so a plan is safe to
+//! Threading: [`Plan::execute_par`] takes a worker policy
+//! ([`Par`](crate::blas::block_gemm::Par)); each GEMM step decides via
+//! the policy's flop threshold whether to fan its column-chunk loop out.
+//! On the serving path the policy is [`Par::Pool`] over the persistent
+//! worker pool of a [`Device`](super::device::Device) — **no scoped
+//! thread is spawned on the `dot`/`Im2colGemm` hot path** — and every
+//! dispatch drains before the step returns, so a plan is still safe to
 //! drive from the coordinator's thread-confined engine thread.
 //!
 //! ```
@@ -86,7 +90,7 @@
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
 use crate::blas::block_gemm::{
-    gemm_f32_fused_into, threads_for, Accum, Epilogue, GemmScratch, PanelB,
+    gemm_f32_fused_into, threads_for_pooled, Accum, Epilogue, GemmScratch, PanelB, Par,
 };
 use crate::error::Result;
 use crate::kernels::pack::Im2colSpec;
@@ -1170,24 +1174,77 @@ impl Plan {
         let mut scratch = GemmScratch::new();
         let (m, n, k) = self.max_dot;
         if m > 0 {
-            // reserve for the default worker cap; a larger explicit cap
-            // grows the per-worker A-panel buffers lazily, once
-            let cap = super::HloPlanBackend::default_threads();
-            scratch.reserve(m, n, k, threads_for(m, n, k, cap));
+            // reserve for the default device budget; a larger explicit
+            // cap grows the per-worker chunk buffers lazily, once
+            let cap = super::device::Device::default_threads();
+            scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
         }
         ExecBuffers { slots, scratch }
     }
 
     /// Execute the plan on flat row-major f32 inputs, reusing `bufs`.
-    /// Returns the ROOT tuple elements (the only per-request allocation).
-    /// `threads` caps the worker count of each dot step (see
-    /// [`threads_for`]).
+    /// `threads` caps the worker count of each dot step; for `threads >
+    /// 1` the workers are drawn from the **process-wide persistent
+    /// pool** ([`Device::shared`](super::device::Device::shared)), while
+    /// `threads <= 1` runs fully serial without instantiating the global
+    /// pool. This is a convenience over [`Plan::execute_par`], which
+    /// takes the full policy (an explicit device pool, scoped threads,
+    /// or serial).
     pub fn execute_into(
         &self,
         bufs: &mut ExecBuffers,
         inputs: &[&[f32]],
         threads: usize,
     ) -> Result<Vec<Tensor>> {
+        if threads <= 1 {
+            return self.execute_par(bufs, inputs, Par::Seq);
+        }
+        let device = super::device::Device::shared();
+        self.execute_par(bufs, inputs, Par::Pool(device.pool(), threads))
+    }
+
+    /// Execute the plan on flat row-major f32 inputs, reusing `bufs`,
+    /// with an explicit GEMM worker policy. Returns the ROOT tuple
+    /// elements (the only per-request allocation). Allocation-free
+    /// callers (the typed serving path) use [`Plan::run_steps`] +
+    /// [`Plan::root_slices`] instead and copy the root slot straight
+    /// into their own output buffer.
+    pub fn execute_par(
+        &self,
+        bufs: &mut ExecBuffers,
+        inputs: &[&[f32]],
+        par: Par<'_>,
+    ) -> Result<Vec<Tensor>> {
+        self.run_steps(bufs, inputs, par)?;
+        let mut out = Vec::with_capacity(self.root.len());
+        for (slot, dims) in &self.root {
+            let len: usize = dims.iter().product();
+            out.push(Tensor { dims: dims.clone(), data: bufs.slots[*slot][..len].to_vec() });
+        }
+        Ok(out)
+    }
+
+    /// Borrowed views `(data, dims)` of the ROOT tuple values, valid
+    /// after [`Plan::run_steps`] on the same `bufs` — the zero-copy way
+    /// to read results (the arena slots stay owned by `bufs`).
+    pub fn root_slices<'b>(&'b self, bufs: &'b ExecBuffers) -> Vec<(&'b [f32], &'b [usize])> {
+        self.root
+            .iter()
+            .map(|(slot, dims)| {
+                let len: usize = dims.iter().product();
+                (&bufs.slots[*slot][..len], dims.as_slice())
+            })
+            .collect()
+    }
+
+    /// Run the compiled step list against `bufs` without materializing
+    /// output tensors; read the results with [`Plan::root_slices`].
+    pub fn run_steps(
+        &self,
+        bufs: &mut ExecBuffers,
+        inputs: &[&[f32]],
+        par: Par<'_>,
+    ) -> Result<()> {
         if inputs.len() != self.num_params {
             bail!("plan expects {} inputs, got {}", self.num_params, inputs.len());
         }
@@ -1230,7 +1287,7 @@ impl Plan {
                 }
                 Step::Dot { a, b, out, m, n, k, epi } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
-                    let nthreads = threads_for(*m, *n, *k, threads);
+                    let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
                     let epilogue = match epi {
                         StepEpi::None => Epilogue::None,
@@ -1246,14 +1303,14 @@ impl Plan {
                         *k,
                         Accum::F64,
                         epilogue,
-                        nthreads,
+                        step_par,
                         &mut bufs.scratch,
                     );
                     bufs.slots[*out] = o;
                 }
                 Step::Im2colGemm { w, img, out, m, n, k, spec } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
-                    let nthreads = threads_for(*m, *n, *k, threads);
+                    let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
                     gemm_f32_fused_into(
                         &mut o[..m * n],
@@ -1264,7 +1321,7 @@ impl Plan {
                         *k,
                         Accum::F32,
                         Epilogue::None,
-                        nthreads,
+                        step_par,
                         &mut bufs.scratch,
                     );
                     bufs.slots[*out] = o;
@@ -1284,12 +1341,7 @@ impl Plan {
                 }
             }
         }
-        let mut out = Vec::with_capacity(self.root.len());
-        for (slot, dims) in &self.root {
-            let len: usize = dims.iter().product();
-            out.push(Tensor { dims: dims.clone(), data: bufs.slots[*slot][..len].to_vec() });
-        }
-        Ok(out)
+        Ok(())
     }
 
     /// Convenience: execute with fresh buffers (tests, one-shot tools).

@@ -1,0 +1,167 @@
+//! Integration coverage for the device/session execution API: typed
+//! tensors ([`TensorRef`]/[`TensorMut`]) through [`Runtime::execute_typed`]
+//! on an explicit [`Device`] (persistent pool), bitwise-checked against
+//! the untyped compat shim and the interpreter oracle, plus bf16-typed
+//! buffers end to end.
+
+use power_mma::runtime::{
+    artifacts, bf16_to_f32, det_inputs, f32_to_bf16, Device, HloInterpreterBackend, Runtime,
+    TensorMut, TensorRef,
+};
+
+/// Materialize the embedded artifact set once per test process.
+fn artifact_dir() -> std::path::PathBuf {
+    static DIR: std::sync::OnceLock<std::path::PathBuf> = std::sync::OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir =
+            std::env::temp_dir().join(format!("power-mma-device-artifacts-{}", std::process::id()));
+        artifacts::write_artifacts(&dir).expect("materialize embedded artifacts");
+        dir
+    })
+    .clone()
+}
+
+fn assert_bits_eq(what: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} ({x} vs {y})");
+    }
+}
+
+/// The typed path on an explicit pooled device must match both the
+/// untyped compat shim and the interpreter oracle bit for bit, on every
+/// embedded fixture, across repeated requests through one reused ctx.
+#[test]
+fn typed_pooled_execution_matches_shim_and_interpreter() {
+    let dir = artifact_dir();
+    let device = Device::new(3); // explicit small pool, distinct from shared()
+    let backend = Box::new(power_mma::runtime::HloPlanBackend::new());
+    let mut rt = Runtime::with_device(device.clone(), backend, &dir);
+    let names = rt.load_all().unwrap();
+    let mut oracle = Runtime::with_backend(Box::new(HloInterpreterBackend), &dir);
+    oracle.load_all().unwrap();
+    let mut ctx = device.ctx();
+    for name in &names {
+        let meta = rt.meta(name).unwrap().clone();
+        let inputs = det_inputs(&meta);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let shim = rt.execute(name, &refs).unwrap();
+        let want = oracle.execute(name, &refs).unwrap();
+        for round in 0..2 {
+            let trefs: Vec<TensorRef<'_>> = inputs
+                .iter()
+                .zip(&meta.input_shapes)
+                .map(|(d, s)| TensorRef::f32(d, s))
+                .collect();
+            let mut typed = vec![0f32; meta.output_len()];
+            let mut out = TensorMut::f32(&mut typed, &meta.output_shape);
+            rt.execute_typed(name, &mut ctx, &trefs, &mut out).unwrap();
+            assert_bits_eq(&format!("{name} typed-vs-shim round {round}"), &typed, &shim);
+            assert_bits_eq(&format!("{name} typed-vs-oracle round {round}"), &typed, &want);
+        }
+    }
+}
+
+/// Typed validation catches what the untyped API could not: wrong dims
+/// with the right element count, wrong input count, wrong output shape.
+#[test]
+fn typed_validation_rejects_shape_mismatches() {
+    let dir = artifact_dir();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load("gemm_f32").unwrap();
+    let meta = rt.meta("gemm_f32").unwrap().clone();
+    let inputs = det_inputs(&meta);
+    let device = rt.device().clone();
+    let mut ctx = device.ctx();
+    let mut result = vec![0f32; meta.output_len()];
+
+    // transposed dims: same element count, different shape -> rejected
+    let n = meta.input_shapes[0][0];
+    let transposed = vec![n * 2, n / 2];
+    let bad: Vec<TensorRef<'_>> =
+        inputs.iter().map(|d| TensorRef::f32(d, &transposed)).collect();
+    let mut out = TensorMut::f32(&mut result, &meta.output_shape);
+    let e = rt.execute_typed("gemm_f32", &mut ctx, &bad, &mut out).unwrap_err().to_string();
+    assert!(e.contains("dims"), "{e}");
+
+    // wrong input count
+    let good: Vec<TensorRef<'_>> = inputs
+        .iter()
+        .zip(&meta.input_shapes)
+        .map(|(d, s)| TensorRef::f32(d, s))
+        .collect();
+    let mut out = TensorMut::f32(&mut result, &meta.output_shape);
+    assert!(rt.execute_typed("gemm_f32", &mut ctx, &good[..1], &mut out).is_err());
+
+    // wrong output shape
+    let bad_odims = vec![1usize];
+    let mut short = vec![0f32; 1];
+    let mut out = TensorMut::f32(&mut short, &bad_odims);
+    assert!(rt.execute_typed("gemm_f32", &mut ctx, &good, &mut out).is_err());
+}
+
+/// bf16 tensors end to end: bf16 inputs are widened exactly (equal to
+/// pre-rounding on the caller side), bf16 outputs round on store, and
+/// the gemm_bf16 artifact — whose HLO converts to bf16 internally —
+/// accepts bf16 storage without the caller round-tripping through f32.
+#[test]
+fn bf16_typed_tensors_round_trip() {
+    let dir = artifact_dir();
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    rt.load("gemm_bf16").unwrap();
+    let meta = rt.meta("gemm_bf16").unwrap().clone();
+    let inputs = det_inputs(&meta);
+    let device = rt.device().clone();
+    let mut ctx = device.ctx();
+
+    // path A: caller pre-rounds to the bf16 grid, feeds f32
+    let widened: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|v| v.iter().map(|&x| bf16_to_f32(f32_to_bf16(x))).collect())
+        .collect();
+    let refs: Vec<&[f32]> = widened.iter().map(|v| v.as_slice()).collect();
+    let via_f32 = rt.execute("gemm_bf16", &refs).unwrap();
+
+    // path B: caller hands over raw bf16 bits
+    let bits: Vec<Vec<u16>> =
+        inputs.iter().map(|v| v.iter().map(|&x| f32_to_bf16(x)).collect()).collect();
+    let trefs: Vec<TensorRef<'_>> = bits
+        .iter()
+        .zip(&meta.input_shapes)
+        .map(|(d, s)| TensorRef::bf16(d, s))
+        .collect();
+    let mut via_bf16 = vec![0f32; meta.output_len()];
+    let mut out = TensorMut::f32(&mut via_bf16, &meta.output_shape);
+    rt.execute_typed("gemm_bf16", &mut ctx, &trefs, &mut out).unwrap();
+    assert_bits_eq("bf16-in vs prerounded-f32-in", &via_bf16, &via_f32);
+
+    // bf16 output storage: every element equals the rounded f32 result
+    let mut hout = vec![0u16; meta.output_len()];
+    let mut out = TensorMut::bf16(&mut hout, &meta.output_shape);
+    rt.execute_typed("gemm_bf16", &mut ctx, &trefs, &mut out).unwrap();
+    for (i, (&h, &v)) in hout.iter().zip(&via_bf16).enumerate() {
+        assert_eq!(h, f32_to_bf16(v), "output element {i}");
+    }
+}
+
+/// Two runtimes sharing one device share its pool; a runtime created
+/// via `cpu()` uses the process-shared device.
+#[test]
+fn runtimes_share_devices() {
+    let dir = artifact_dir();
+    let device = Device::new(2);
+    let rt1 = Runtime::with_device(
+        device.clone(),
+        Box::new(power_mma::runtime::HloPlanBackend::new()),
+        &dir,
+    );
+    let rt2 = Runtime::with_device(
+        device.clone(),
+        Box::new(power_mma::runtime::HloPlanBackend::new()),
+        &dir,
+    );
+    assert!(std::sync::Arc::ptr_eq(rt1.device(), rt2.device()));
+    assert_eq!(rt1.device().threads(), 2);
+    let shared = Runtime::cpu(&dir).unwrap();
+    assert!(std::sync::Arc::ptr_eq(shared.device(), &Device::shared()));
+}

@@ -84,7 +84,7 @@ fn coordinator_serves_real_models_end_to_end() {
     let cfg = CoordinatorConfig { max_delay: std::time::Duration::from_millis(5), ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let dir2 = dir.clone();
-    let coord = Coordinator::start(cfg.clone(), weights, move || {
+    let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
         let mut rt = Runtime::cpu(&dir2)?;
         rt.load_all()?;
         Ok(rt)
@@ -131,6 +131,55 @@ fn coordinator_serves_real_models_end_to_end() {
 }
 
 #[test]
+fn sharded_coordinator_matches_single_shard_bitwise() {
+    // the same classify request served by a 1-shard and a 2-shard
+    // coordinator (real plan backend, shared device pool) must produce
+    // bitwise-identical logits: each output row depends only on its own
+    // features, never on shard assignment or batch-mates
+    let dir = artifact_dir();
+    let features = det_input(64, 3);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for shards in [1usize, 2] {
+        let cfg = CoordinatorConfig {
+            max_delay: std::time::Duration::from_millis(2),
+            shards,
+            ..Default::default()
+        };
+        let weights = MlpWeights::deterministic(&cfg);
+        let dir2 = dir.clone();
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            let mut rt = Runtime::cpu(&dir2)?;
+            rt.load_all()?;
+            Ok(rt)
+        });
+        // a few extra requests so both shards actually serve traffic
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            rxs.push(coord.submit(Payload::Classify { features: features.clone() }).1);
+        }
+        let mut got: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().result.unwrap())
+            .collect();
+        // all responses to the same features must agree with each other
+        for r in &got[1..] {
+            assert_eq!(r, &got[0], "shards={shards}: same request, different answer");
+        }
+        rows.push(got.remove(0));
+        coord.shutdown();
+    }
+    let (one, two) = (&rows[0], &rows[1]);
+    assert_eq!(one.len(), two.len());
+    for (i, (x, y)) in one.iter().zip(two).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "logit {i} differs between shards=1 and shards=2 ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
 fn failure_injection_corrupt_artifacts() {
     // a runtime over a directory with malformed artifacts must fail
     // loudly at load time, not at serve time
@@ -162,7 +211,7 @@ fn coordinator_survives_engine_init_failure_with_real_runtime() {
     let cfg = CoordinatorConfig::default();
     let weights = MlpWeights::deterministic(&cfg);
     let tmp2 = tmp.clone();
-    let coord = Coordinator::start(cfg.clone(), weights, move || {
+    let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
         let mut rt = Runtime::cpu(&tmp2)?;
         rt.load_all()?; // fails: no manifest
         Ok(rt)
