@@ -22,8 +22,9 @@ fn main() -> power_mma::error::Result<()> {
     if power_mma::runtime::artifacts::ensure_artifacts(&dir)? {
         println!("(materialized embedded AOT artifacts into {})", dir.display());
     }
-    // two engine shards behind one process-wide device pool: requests
-    // route round-robin, GEMM workers stay within the shared budget
+    // two engine shards behind one process-wide device pool: each model
+    // family hashes to a sticky shard (plan buffers stay hot), GEMM
+    // workers stay within the shared budget
     let cfg = CoordinatorConfig { shards: 2, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let dir2 = dir.clone();

@@ -75,7 +75,12 @@ fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if power_mma::runtime::artifacts::ensure_artifacts(&dir).is_ok() {
         for shards in [1usize, 2] {
-            let cfg = CoordinatorConfig { shards, ..Default::default() };
+            // single-model traffic: round-robin so both shards serve it
+            let cfg = CoordinatorConfig {
+                shards,
+                routing: power_mma::coordinator::ShardRouting::RoundRobin,
+                ..Default::default()
+            };
             let weights = MlpWeights::deterministic(&cfg);
             let dir2 = dir.clone();
             let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {

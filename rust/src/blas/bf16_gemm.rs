@@ -1,0 +1,721 @@
+//! Reduced-precision **bf16 packed-panel GEMM engine** — the serving-side
+//! realization of the paper's Table I claim that `xvbf16ger2` rank-2
+//! updates double the MACs per instruction over `xvf32ger` (§II-B), built
+//! the way Kuzma et al.'s layered-reorganization work realizes it: the
+//! win lives in the **packing layer**, which interleaves the operands as
+//! bf16 *k-pairs* so every microkernel step consumes two inner-dimension
+//! values per fused update.
+//!
+//! Structure (the BLIS-style skeleton of [`crate::blas::block_gemm`],
+//! re-instantiated for a half-width element type):
+//!
+//! * operands arrive as [`Bf16Src`]: **raw bf16 bits** (`u16`, the
+//!   `xvbf16ger2` operand width — packed straight into panels, no f32
+//!   widening round-trip) or f32 with the bf16 round-to-nearest-even
+//!   **fused into packing** (the compiled form of a `convert(bf16)`
+//!   feeding a `dot` — see the `DotBf16` lowering in
+//!   [`crate::runtime::plan`]);
+//! * panels are **k-pair-interleaved** (`kernels::pack::
+//!   {pack_a_panel_bf16, pack_b_panel_bf16}` and their `_f32_` fused
+//!   variants): step `s` of an A panel holds `MR` adjacent (lo, hi)
+//!   pairs for `k = 2s, 2s+1`, a B-panel step holds `NR` pairs — the
+//!   `xvbf16ger2pp` rank-2 operand layout of [`crate::kernels::gemm_rp`]
+//!   scaled to the blocked engine's micropanels;
+//! * the **`MR×NR = 8×16` microkernel** (the Figure 8 virtual
+//!   accumulator shape) applies one rank-2 update per step and keeps the
+//!   accumulator tile in registers across the packed `KC` depth;
+//! * the **column (jc) loop is the parallel axis**: whole-`NR` column
+//!   chunks fan out under the same [`Par`] policy (and flop thresholds)
+//!   as the f32 engine — on the serving path that is the persistent
+//!   device pool, so the bf16 path parallelizes from day one.
+//!
+//! ## Numerics: two contracts, both bit-exact
+//!
+//! * [`Bf16Accum::Widened`] — the **serving contract**: every packed
+//!   bf16 value widens exactly, products are exact in `f64`, and each
+//!   `C` element accumulates in strictly ascending `k` order in `f64`
+//!   with one final narrowing store. On finite inputs this is
+//!   bit-identical to the legacy interpreter executing
+//!   `convert(bf16) → convert(f32) → dot` (elementwise rounding followed
+//!   by the [`ref_gemm`](crate::blas::gemm::ref_gemm) `f64` path), which
+//!   is exactly the subgraph the plan rewrite collapses into a
+//!   `DotBf16` step. [`gemm_bf16_reference`] is that contract in
+//!   20 lines, for tests and the bench identity probe.
+//! * [`Bf16Accum::F32Pairs`] — the **MME contract**: each step's pair of
+//!   products is summed low-then-high in `f32` and chained onto an `f32`
+//!   accumulator, the first step *assigned* (`AccOp::New` primes the
+//!   accumulator) — bit-identical to the functional Machine executing
+//!   the `xvbf16ger2`/`xvbf16ger2pp` kernel of
+//!   [`gemm_rp::rp_gemm_program`](crate::kernels::gemm_rp), masked tail
+//!   included (tested against [`gemm_bf16_8x16`](crate::kernels::gemm_rp::gemm_bf16_8x16)).
+//!
+//! The odd-`k` tail needs no masked special case in either mode: the
+//! packers zero-fill the pad lane, and a zero pair product contributes
+//! `+0.0` *after* the real product of its step — `x + 0.0` preserves
+//! every `x` the chain can produce (the accumulator can never be `-0.0`:
+//! it starts at `+0.0`, and IEEE round-to-nearest addition only yields
+//! `-0.0` from `-0.0 + -0.0`), and it matches the Machine's prefixed
+//! `pmsk` form bit for bit (the masked sum starts from `+0.0` there,
+//! with the same effect on zero signs).
+//!
+//! NaN policy: packing canonicalizes bf16 NaN bits (sign-preserved
+//! `0x7fc0`), so the raw-bits path and the widen-then-round path agree
+//! bitwise even on NaN payloads — the XLA `convert` contract of
+//! [`bf16_round`](crate::runtime::hlo::bf16_round).
+//!
+//! ```
+//! use power_mma::blas::bf16_gemm::{
+//!     gemm_bf16_packed_into, gemm_bf16_reference, Bf16Accum, Bf16Scratch, Bf16Src,
+//! };
+//! use power_mma::blas::block_gemm::Par;
+//!
+//! // 2x2: the convert-to-bf16 is fused into packing, so 0.3004 rounds
+//! // to the bf16 grid on its way into the panel
+//! let a = [1.0f32, 2.0, 3.0, 4.0];
+//! let b = [0.3004f32, 0.0, 0.0, 1.0];
+//! let mut c = [0.0f32; 4];
+//! let mut scratch = Bf16Scratch::new();
+//! gemm_bf16_packed_into(
+//!     &mut c, Bf16Src::F32(&a), Bf16Src::F32(&b), 2, 2, 2,
+//!     Bf16Accum::Widened, Par::Seq, &mut scratch,
+//! );
+//! assert_eq!(c.to_vec(), gemm_bf16_reference(&a, &b, 2, 2, 2));
+//! assert_eq!(c[0], 0.30078125, "bf16 grid, not 0.3004");
+//! ```
+
+use crate::blas::block_gemm::{chunk_plan_nr, Par, KC, MC, NC};
+use crate::isa::types::bf16_to_f32;
+use crate::kernels::pack::{
+    pack_a_panel_bf16, pack_a_panel_f32_bf16, pack_b_panel_bf16, pack_b_panel_f32_bf16,
+};
+use std::sync::Mutex;
+
+/// Microkernel register-block rows (the 8 of the Figure 8 `8×16` virtual
+/// accumulator).
+pub const MR: usize = 8;
+/// Microkernel register-block columns (16: four 4-wide accumulators
+/// side by side, the SGEMM/bf16 shape of Figure 8).
+pub const NR: usize = 16;
+
+// KC blocks must cover whole k-pairs: an odd block boundary would split
+// a rank-2 step (and force a masked pad mid-chain).
+const _: () = assert!(KC % 2 == 0, "KC must be even: packed bf16 steps cover k-pairs");
+
+/// Where a bf16 GEMM operand comes from. Both variants pack to the same
+/// pair-interleaved bf16 panels; neither widens the operand to an f32
+/// tensor first.
+#[derive(Clone, Copy)]
+pub enum Bf16Src<'a> {
+    /// Row-major f32 storage; the bf16 round-to-nearest-even is fused
+    /// into packing (canonical NaNs — the XLA `convert` contract).
+    F32(&'a [f32]),
+    /// Row-major raw bf16 bits (the `DTypeSlice::Bf16` serving input);
+    /// packed verbatim with NaN canonicalization.
+    Bits(&'a [u16]),
+}
+
+impl Bf16Src<'_> {
+    /// Number of elements in the backing storage.
+    pub fn len(&self) -> usize {
+        match self {
+            Bf16Src::F32(s) => s.len(),
+            Bf16Src::Bits(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pack an A micropanel (rows `i0..i0+rows` × columns `k0..k0+kc`).
+    #[allow(clippy::too_many_arguments)]
+    fn pack_a(
+        &self,
+        lda: usize,
+        i0: usize,
+        rows: usize,
+        k0: usize,
+        kc: usize,
+        mr: usize,
+        out: &mut [u16],
+    ) {
+        match self {
+            Bf16Src::F32(a) => pack_a_panel_f32_bf16(a, lda, i0, rows, k0, kc, mr, out),
+            Bf16Src::Bits(a) => pack_a_panel_bf16(a, lda, i0, rows, k0, kc, mr, out),
+        }
+    }
+
+    /// Pack a B micropanel (rows `k0..k0+kc` × columns `j0..j0+cols`).
+    #[allow(clippy::too_many_arguments)]
+    fn pack_b(
+        &self,
+        ldb: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        cols: usize,
+        nr: usize,
+        out: &mut [u16],
+    ) {
+        match self {
+            Bf16Src::F32(b) => pack_b_panel_f32_bf16(b, ldb, k0, kc, j0, cols, nr, out),
+            Bf16Src::Bits(b) => pack_b_panel_bf16(b, ldb, k0, kc, j0, cols, nr, out),
+        }
+    }
+}
+
+/// Accumulation mode of the bf16 microkernel — each mode is bit-exact
+/// against one existing oracle (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bf16Accum {
+    /// Exact widening, `f64` products and ascending-`k` `f64` sums, one
+    /// narrowing store — the interpreter's `convert → dot` contract
+    /// (what [`crate::runtime::plan`]'s `DotBf16` step uses).
+    Widened,
+    /// `f32` pair products summed low-then-high, chained in `f32` with
+    /// the first step assigned — the `xvbf16ger2(pp)` Machine contract
+    /// of [`crate::kernels::gemm_rp`].
+    F32Pairs,
+}
+
+/// Reusable scratch for [`gemm_bf16_packed_into`]: the `f64` accumulation
+/// image of `C` (column-chunk-blocked during the parallel phase; for
+/// [`Bf16Accum::F32Pairs`] it carries exact f32 values widened) plus one
+/// packed-B-block and packed-A-panel buffer per column-chunk worker —
+/// panels are `u16`, half the footprint of the f32 engine's. Hold one
+/// per compiled plan and steady-state requests allocate nothing.
+#[derive(Default)]
+pub struct Bf16Scratch {
+    c64: Vec<f64>,
+    bp: Vec<Vec<u16>>,
+    ap: Vec<Vec<u16>>,
+}
+
+impl Bf16Scratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> Bf16Scratch {
+        Bf16Scratch::default()
+    }
+
+    /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
+    /// workers allocates nothing.
+    pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
+        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), NR);
+        self.reserve_chunks(m, n, k, nchunks, cols_per);
+    }
+
+    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
+        let c_need = m * n;
+        if self.c64.len() < c_need {
+            self.c64.resize(c_need, 0.0);
+        }
+        let steps = KC.min(k.max(1)).div_ceil(2);
+        let bp_need = steps * 2 * NC.min(cols_per.max(NR));
+        if self.bp.len() < nchunks {
+            self.bp.resize_with(nchunks, Vec::new);
+        }
+        for b in &mut self.bp[..nchunks] {
+            if b.len() < bp_need {
+                b.resize(bp_need, 0);
+            }
+        }
+        let ap_need = steps * 2 * MR;
+        if self.ap.len() < nchunks {
+            self.ap.resize_with(nchunks, Vec::new);
+        }
+        for a in &mut self.ap[..nchunks] {
+            if a.len() < ap_need {
+                a.resize(ap_need, 0);
+            }
+        }
+    }
+}
+
+/// The elementwise-rounding reference of the **widened contract**: round
+/// both operands to the bf16 grid (canonical NaNs), widen exactly, and
+/// accumulate each element's products in strictly ascending `k` order in
+/// `f64`, narrowing once — what the legacy interpreter computes for
+/// `convert(bf16) → convert(f32) → dot`, spelled out without packing or
+/// tiling. (The interpreter's `ref_gemm` additionally skips products
+/// whose A element is exactly zero — an optimization that is bitwise
+/// invisible unless a zero A element meets a non-finite B element, the
+/// same already-documented caveat the f32 blocked engine carries.) The
+/// packed engine in [`Bf16Accum::Widened`] mode must match this bit for
+/// bit on *all* inputs, NaN payloads included; tests and `bench serve`'s
+/// `bf16` identity probe hold it to that.
+pub fn gemm_bf16_reference(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    use crate::isa::types::f32_to_bf16_canonical as rnd;
+    let ar: Vec<f64> = a.iter().map(|&v| f64::from(bf16_to_f32(rnd(v)))).collect();
+    let br: Vec<f64> = b.iter().map(|&v| f64::from(bf16_to_f32(rnd(v)))).collect();
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += ar[i * k + kk] * br[kk * n + j];
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// `C = A·B` over pair-interleaved bf16 panels into a caller-provided
+/// `c` (`m×n`, row-major, fully overwritten). `a` is `m×k`, `b` is
+/// `k×n`, both row-major and contiguous, each either raw bf16 bits or
+/// f32 rounded during packing ([`Bf16Src`]). The column chunks are
+/// distributed per `par` (callers pick the per-step policy with
+/// [`Par::for_gemm`], exactly like the f32 engine) and drained before
+/// the call returns. See [`Bf16Accum`] for the two bit-exact
+/// accumulation contracts.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bf16_packed_into(
+    c: &mut [f32],
+    a: Bf16Src<'_>,
+    b: Bf16Src<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: Bf16Accum,
+    par: Par<'_>,
+    scratch: &mut Bf16Scratch,
+) {
+    assert_eq!(a.len(), m * k, "A must be m*k");
+    assert_eq!(b.len(), k * n, "B must be k*n");
+    assert_eq!(c.len(), m * n, "C must be m*n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), NR);
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
+    let c64 = &mut scratch.c64[..m * n];
+    c64.fill(0.0);
+    if k > 0 {
+        // Per-chunk state behind per-index mutexes (worker w locks only
+        // entry w — uncontended, they exist to keep the closure `Fn`);
+        // chunk w owns the contiguous m×wcols block of the f64 image for
+        // columns [w*cols_per, w*cols_per + wcols), like the f32 engine.
+        struct Chunk<'s> {
+            c64: &'s mut [f64],
+            bp: &'s mut [u16],
+            ap: &'s mut [u16],
+        }
+        let mut chunks: Vec<Mutex<Chunk<'_>>> = Vec::with_capacity(nchunks);
+        let mut rest: &mut [f64] = c64;
+        for (w, (bpb, apb)) in
+            scratch.bp.iter_mut().zip(scratch.ap.iter_mut()).take(nchunks).enumerate()
+        {
+            let wcols = cols_per.min(n - w * cols_per);
+            let (cw, r) = rest.split_at_mut(m * wcols);
+            rest = r;
+            chunks.push(Mutex::new(Chunk { c64: cw, bp: bpb, ap: apb }));
+        }
+        let chunks = &chunks;
+        par.run(nchunks, &|w| {
+            let mut guard = chunks[w].lock().unwrap_or_else(|p| p.into_inner());
+            let ch = &mut *guard;
+            let j0 = w * cols_per;
+            let wcols = cols_per.min(n - j0);
+            col_worker(ch.c64, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+        });
+    }
+    // writeback: narrow the f64 image (exact for F32Pairs — it carries
+    // f32 values widened) and de-block the column chunks
+    let c64 = &scratch.c64;
+    for w in 0..nchunks {
+        let j0 = w * cols_per;
+        let wcols = cols_per.min(n - j0);
+        let cw = &c64[m * cols_per * w..m * cols_per * w + m * wcols];
+        for i in 0..m {
+            let crow = &mut c[i * n + j0..i * n + j0 + wcols];
+            let srow = &cw[i * wcols..(i + 1) * wcols];
+            for (dst, &src) in crow.iter_mut().zip(srow) {
+                *dst = src as f32;
+            }
+        }
+    }
+}
+
+/// One worker's share: all `m` rows of columns `j0 .. j0+wcols`, the
+/// whole `k` depth, walked in NC/KC cache blocks with `kc` ascending
+/// (the bit-exactness order). The worker packs its own pair-interleaved
+/// B panels per (NC, kc) block and sweeps each packed `MR×kc` A
+/// micropanel across the chunk's `NR` panels.
+#[allow(clippy::too_many_arguments)]
+fn col_worker(
+    c64: &mut [f64],
+    a: &Bf16Src<'_>,
+    b: &Bf16Src<'_>,
+    bp: &mut [u16],
+    ap: &mut [u16],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    wcols: usize,
+    accum: Bf16Accum,
+) {
+    for jc in (0..wcols).step_by(NC) {
+        let ncl = NC.min(wcols - jc);
+        let n_panels = ncl.div_ceil(NR);
+        for kc0 in (0..k).step_by(KC) {
+            let kcl = KC.min(k - kc0);
+            let steps = kcl.div_ceil(2);
+            // the F32Pairs chain *assigns* its first pair product
+            // (AccOp::New primes the accumulators on the Machine)
+            let first = accum == Bf16Accum::F32Pairs && kc0 == 0;
+            let bpl = &mut bp[..n_panels * steps * NR * 2];
+            for jp in 0..n_panels {
+                let jabs = j0 + jc + jp * NR;
+                let cols = NR.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * steps * NR * 2..(jp + 1) * steps * NR * 2];
+                b.pack_b(n, kc0, kcl, jabs, cols, NR, panel);
+            }
+            let bpl = &*bpl;
+            let apl = &mut ap[..steps * MR * 2];
+            for ic in (0..m).step_by(MC) {
+                let mcl = MC.min(m - ic);
+                for ir in (0..mcl).step_by(MR) {
+                    let gi = ic + ir;
+                    let mrl = MR.min(m - gi);
+                    a.pack_a(k, gi, mrl, kc0, kcl, MR, apl);
+                    for jp in 0..n_panels {
+                        let jloc = jc + jp * NR;
+                        let nrl = NR.min(wcols - jloc);
+                        let bpp = &bpl[jp * steps * NR * 2..(jp + 1) * steps * NR * 2];
+                        match accum {
+                            Bf16Accum::Widened => microkernel_widened(
+                                c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl,
+                            ),
+                            Bf16Accum::F32Pairs => microkernel_pairs(
+                                c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, first,
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The `MR×NR` widened-contract microkernel: loads the running `f64`
+/// sums of one `C` register block, applies `steps` rank-2 updates from
+/// the pair-interleaved panels — each pair's products added in ascending
+/// `k` order (low lane, then high) so the whole chain replays the
+/// interpreter's `f64` accumulation — and stores the sums back. Only the
+/// `mrl×nrl` valid corner is loaded/stored; zero-padded panel lanes are
+/// computed and discarded.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_widened(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[u16],
+    bp: &[u16],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+) {
+    let mut acc = [0f64; MR * NR];
+    for i in 0..mrl {
+        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
+    }
+    for s in 0..steps {
+        let ar = &ap[s * MR * 2..(s + 1) * MR * 2];
+        let br = &bp[s * NR * 2..(s + 1) * NR * 2];
+        // widen each lane exactly once per step
+        let mut bw = [0f64; 2 * NR];
+        for (slot, &bits) in bw.iter_mut().zip(br) {
+            *slot = f64::from(bf16_to_f32(bits));
+        }
+        for i in 0..MR {
+            let a0 = f64::from(bf16_to_f32(ar[i * 2]));
+            let a1 = f64::from(bf16_to_f32(ar[i * 2 + 1]));
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot += a0 * bw[j * 2];
+                *slot += a1 * bw[j * 2 + 1];
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    }
+}
+
+/// The `MR×NR` MME-contract microkernel ([`Bf16Accum::F32Pairs`]): the
+/// running sums are exact `f32` values stored widened in the `f64` image
+/// (lossless round-trip), each step computes the rank-2 pair product
+/// `x₀·y₀ + x₁·y₁` in `f32` (bf16 products are exact in `f32`; the pair
+/// sum rounds once — the MME's single-precision rank-2 accumulate) and
+/// chains it with an `f32` add. When `first` is set (the `k = 0` block),
+/// step 0 *assigns* its pair product — `AccOp::New` on the Machine — so
+/// even the sign of a zero matches `xvbf16ger2`.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_pairs(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[u16],
+    bp: &[u16],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+    first: bool,
+) {
+    let mut acc = [0f32; MR * NR];
+    if !first {
+        for i in 0..mrl {
+            let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+            for (slot, &v) in acc[i * NR..i * NR + nrl].iter_mut().zip(crow) {
+                *slot = v as f32; // exact: the image holds f32 values
+            }
+        }
+    }
+    for s in 0..steps {
+        let ar = &ap[s * MR * 2..(s + 1) * MR * 2];
+        let br = &bp[s * NR * 2..(s + 1) * NR * 2];
+        let mut bw = [0f32; 2 * NR];
+        for (slot, &bits) in bw.iter_mut().zip(br) {
+            *slot = bf16_to_f32(bits);
+        }
+        for i in 0..MR {
+            let a0 = bf16_to_f32(ar[i * 2]);
+            let a1 = bf16_to_f32(ar[i * 2 + 1]);
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            if first && s == 0 {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot = a0 * bw[j * 2] + a1 * bw[j * 2 + 1];
+                }
+            } else {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let p = a0 * bw[j * 2] + a1 * bw[j * 2 + 1];
+                    *slot = p + *slot;
+                }
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        for (slot, &v) in crow.iter_mut().zip(&acc[i * NR..i * NR + nrl]) {
+            *slot = f64::from(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::types::{f32_to_bf16, f32_to_bf16_canonical};
+    use crate::kernels::gemm_rp::gemm_bf16_8x16;
+    use crate::rt::ThreadPool;
+    use crate::testkit::{check, Rng};
+
+    fn run_packed(
+        a: Bf16Src<'_>,
+        b: Bf16Src<'_>,
+        m: usize,
+        n: usize,
+        k: usize,
+        accum: Bf16Accum,
+        par: Par<'_>,
+    ) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        let mut scratch = Bf16Scratch::new();
+        gemm_bf16_packed_into(&mut c, a, b, m, n, k, accum, par, &mut scratch);
+        c
+    }
+
+    #[test]
+    fn widened_matches_reference_across_shapes_and_policies() {
+        // shapes straddling MR/NR/KC boundaries, odd k included
+        let pool = ThreadPool::new("bf16-test", 4);
+        let mut rng = Rng::new(0xbf16);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 1, 3),
+            (3, 5, 9),
+            (8, 16, 27),
+            (9, 17, 31),
+            (16, 33, KC + 3),
+            (8, 300, 9),
+            (33, 70, 40),
+        ] {
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let expect = gemm_bf16_reference(&a, &b, m, n, k);
+            for par in [Par::Seq, Par::Scoped(3), Par::Pool(&pool, 3), Par::Pool(&pool, 4)] {
+                let got = run_packed(
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    Bf16Accum::Widened,
+                    par,
+                );
+                assert_eq!(got, expect, "m={m} n={n} k={k}");
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn raw_bits_and_f32_sources_are_bit_identical() {
+        // feeding pre-rounded raw bits must equal feeding the f32
+        // originals (round fused into packing) — per operand side
+        check("bf16 raw vs f32 sources", 6, |rng: &mut Rng| {
+            let (m, n, k) = (rng.range(1, 20), rng.range(1, 40), rng.range(1, 30));
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let ab: Vec<u16> = a.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+            let bb: Vec<u16> = b.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+            for accum in [Bf16Accum::Widened, Bf16Accum::F32Pairs] {
+                let base = run_packed(
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Par::Seq,
+                );
+                for (sa, sb) in [
+                    (Bf16Src::Bits(&ab), Bf16Src::F32(&b)),
+                    (Bf16Src::F32(&a), Bf16Src::Bits(&bb)),
+                    (Bf16Src::Bits(&ab), Bf16Src::Bits(&bb)),
+                ] {
+                    let got = run_packed(sa, sb, m, n, k, accum, Par::Seq);
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    let eb: Vec<u32> = base.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, eb, "m={m} n={n} k={k} {accum:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f32pairs_matches_the_machine_kernel_bitwise() {
+        // the MME contract: on the Machine's native 8xKx16 tile, the
+        // scalar rank-2 kernel must reproduce xvbf16ger2(pp) exactly —
+        // including odd k, which the Machine handles with the prefixed
+        // pmsk form and we handle with the zero-padded pair lane
+        let mut rng = Rng::new(0x9e12);
+        for &k in &[1usize, 2, 3, 7, 8, 15, 16, 24] {
+            let x = rng.f32_vec(8 * k);
+            let y = rng.f32_vec(16 * k);
+            let machine = gemm_bf16_8x16(&x, &y, k).unwrap();
+            // engine B is k x n: transpose y (16 x k row-major)
+            let mut b = vec![0f32; k * 16];
+            for j in 0..16 {
+                for kk in 0..k {
+                    b[kk * 16 + j] = y[j * k + kk];
+                }
+            }
+            let got = run_packed(
+                Bf16Src::F32(&x),
+                Bf16Src::F32(&b),
+                8,
+                16,
+                k,
+                Bf16Accum::F32Pairs,
+                Par::Seq,
+            );
+            for i in 0..8 {
+                for j in 0..16 {
+                    assert_eq!(
+                        got[i * 16 + j].to_bits(),
+                        machine[i][j].to_bits(),
+                        "k={k} ({i},{j}): {} vs {}",
+                        got[i * 16 + j],
+                        machine[i][j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_policy_never_changes_bits() {
+        let pool = ThreadPool::new("bf16-par", 3);
+        let mut rng = Rng::new(0x7a11);
+        for accum in [Bf16Accum::Widened, Bf16Accum::F32Pairs] {
+            for &(m, n, k) in &[(8usize, 48usize, 27usize), (16, 300, 9), (5, 33, 64)] {
+                let a = rng.f32_vec(m * k);
+                let b = rng.f32_vec(k * n);
+                let seq =
+                    run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), m, n, k, accum, Par::Seq);
+                for par in [Par::Scoped(3), Par::Pool(&pool, 2), Par::Pool(&pool, 3)] {
+                    let got = run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), m, n, k, accum, par);
+                    assert_eq!(got, seq, "m={m} n={n} k={k} {accum:?}");
+                }
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_and_degenerate_shapes_work() {
+        let mut scratch = Bf16Scratch::new();
+        let mut rng = Rng::new(0x5c);
+        let (a1, b1) = (rng.f32_vec(20 * 24), rng.f32_vec(24 * 36));
+        let mut c1 = vec![0f32; 20 * 36];
+        gemm_bf16_packed_into(
+            &mut c1,
+            Bf16Src::F32(&a1),
+            Bf16Src::F32(&b1),
+            20,
+            36,
+            24,
+            Bf16Accum::Widened,
+            Par::Seq,
+            &mut scratch,
+        );
+        let (a2, b2) = (rng.f32_vec(3 * 5), rng.f32_vec(5 * 4));
+        let mut c2 = vec![0f32; 3 * 4];
+        gemm_bf16_packed_into(
+            &mut c2,
+            Bf16Src::F32(&a2),
+            Bf16Src::F32(&b2),
+            3,
+            4,
+            5,
+            Bf16Accum::Widened,
+            Par::Seq,
+            &mut scratch,
+        );
+        assert_eq!(c1, gemm_bf16_reference(&a1, &b1, 20, 36, 24));
+        assert_eq!(c2, gemm_bf16_reference(&a2, &b2, 3, 4, 5));
+        // k = 0 -> all zeros (the empty-sum contract)
+        let mut c = vec![9f32; 6];
+        gemm_bf16_packed_into(
+            &mut c,
+            Bf16Src::F32(&[]),
+            Bf16Src::F32(&[]),
+            2,
+            3,
+            0,
+            Bf16Accum::Widened,
+            Par::Seq,
+            &mut scratch,
+        );
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn rounding_actually_bites() {
+        // a value off the bf16 grid must be rounded before multiplying —
+        // the packed path models xvbf16ger2 inputs, not f32 inputs
+        let a = [0.3004f32];
+        let b = [1.0f32];
+        let got =
+            run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), 1, 1, 1, Bf16Accum::Widened, Par::Seq);
+        let grid = bf16_to_f32(f32_to_bf16(0.3004));
+        assert_eq!(got[0], grid);
+        assert_ne!(got[0], 0.3004);
+    }
+}

@@ -146,8 +146,9 @@ impl<'a> Par<'a> {
         }
     }
 
-    /// Run `f(0..tasks)` to completion under this policy.
-    fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    /// Run `f(0..tasks)` to completion under this policy (shared with
+    /// the bf16 packed engine, [`crate::blas::bf16_gemm`]).
+    pub(crate) fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         if tasks <= 1 {
             for i in 0..tasks {
                 f(i);
@@ -226,14 +227,21 @@ impl GemmScratch {
 }
 
 /// The column-chunk decomposition of an `n`-column GEMM over up to `cap`
-/// workers: each chunk is a whole number of `NR` panels, and
-/// `(nchunks, cols_per)` satisfies `nchunks <= cap` and
-/// `nchunks * cols_per >= n`.
-fn chunk_plan(n: usize, cap: usize) -> (usize, usize) {
-    let col_panels = n.max(1).div_ceil(NR);
+/// workers for a microkernel `nr` columns wide: each chunk is a whole
+/// number of `nr` panels, and `(nchunks, cols_per)` satisfies
+/// `nchunks <= cap` and `nchunks * cols_per >= n`. Shared by this
+/// module's f32 engine (`nr = `[`NR`]) and the bf16 packed engine of
+/// [`crate::blas::bf16_gemm`] (`nr = 16`, the Figure 8 virtual
+/// accumulator width).
+pub(crate) fn chunk_plan_nr(n: usize, cap: usize, nr: usize) -> (usize, usize) {
+    let col_panels = n.max(1).div_ceil(nr);
     let cap = cap.clamp(1, col_panels);
-    let cols_per = col_panels.div_ceil(cap) * NR;
+    let cols_per = col_panels.div_ceil(cap) * nr;
     (n.max(1).div_ceil(cols_per), cols_per)
+}
+
+fn chunk_plan(n: usize, cap: usize) -> (usize, usize) {
+    chunk_plan_nr(n, cap, NR)
 }
 
 /// Accumulation mode of the microkernel — each mode is bit-identical to

@@ -12,10 +12,17 @@
 //!   (MC/KC/NC), register-blocked (`MR×NR` microkernel) f32 GEMM with
 //!   scoped-thread M-panel parallelism, bit-identical to the widened
 //!   reference path (see its module docs for the numerics contract).
+//! * [`bf16_gemm`] — the reduced-precision packed engine: `8×16`
+//!   rank-2 microkernel over k-pair-interleaved bf16 panels (the
+//!   `xvbf16ger2` operand layout, Table I's 2× MACs-per-instruction
+//!   path), packing straight from raw bf16 bits or fusing the f32→bf16
+//!   round into the packers; two bit-exact accumulation contracts (see
+//!   its module docs).
 //! * [`lu`] — blocked right-looking LU with partial pivoting (`dgetrf`,
 //!   `dgetf2`, `dtrsm`, `dlaswp`) and triangular solves: the computational
 //!   core of HPL.
 
+pub mod bf16_gemm;
 pub mod block_gemm;
 pub mod gemm;
 pub mod level1;

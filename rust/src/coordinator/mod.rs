@@ -14,10 +14,13 @@
 //! * **backpressure** comes from the bounded per-shard submission queues;
 //! * the executables run on **`shards` engine threads**
 //!   ([`CoordinatorConfig::shards`]), each with its own bounded queue
-//!   and its own engine instance; requests are routed round-robin across
-//!    shards (backends may be thread-confined — each engine is
-//!   constructed *inside* its thread via the factory, so no `Send`
-//!   requirement leaks).
+//!   and its own engine instance; requests route per [`ShardRouting`] —
+//!   by default a request's **model name hashes to a sticky shard**, so
+//!   a model family's compiled plan and packed-panel buffers stay hot
+//!   on one engine (round-robin by id stays available for
+//!   single-model-dominated traffic). Backends may be thread-confined —
+//!   each engine is constructed *inside* its thread via the factory, so
+//!   no `Send` requirement leaks.
 //!
 //! ## Threading and ownership contract
 //!
@@ -100,6 +103,23 @@ enum Msg {
     Shutdown,
 }
 
+/// How requests map to engine shards (the ROADMAP "shard-aware routing
+/// / model affinity" policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardRouting {
+    /// **Sticky (the default):** hash the request's *model name* to a
+    /// shard, so a model family always lands on the same engine — its
+    /// compiled plan, arena, and packed-panel scratch stay hot in that
+    /// engine's caches instead of ping-ponging across shards. The hash
+    /// (FNV-1a) is deterministic across runs and processes.
+    ModelSticky,
+    /// Spread requests round-robin by request id — even load regardless
+    /// of model mix (the pre-affinity behavior; the right choice when
+    /// traffic is dominated by a single model family, where stickiness
+    /// would funnel everything through one shard).
+    RoundRobin,
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -110,12 +130,16 @@ pub struct CoordinatorConfig {
     /// Bounded submission queue depth **per shard** (backpressure).
     pub queue_cap: usize,
     /// Number of engine threads (shards). Each shard runs its own engine
-    /// behind its own bounded queue; requests are routed round-robin.
-    /// Engines built over [`Runtime`](crate::runtime::Runtime)s that
-    /// share a [`Device`](crate::runtime::device::Device) draw their
-    /// GEMM workers from the one shared pool, so shards scale request
+    /// behind its own bounded queue; requests are routed per
+    /// [`CoordinatorConfig::routing`]. Engines built over
+    /// [`Runtime`](crate::runtime::Runtime)s that share a
+    /// [`Device`](crate::runtime::device::Device) draw their GEMM
+    /// workers from the one shared pool, so shards scale request
     /// concurrency without oversubscribing cores. `0` is treated as `1`.
     pub shards: usize,
+    /// Request→shard policy: sticky model-affinity hashing by default,
+    /// [`ShardRouting::RoundRobin`] to keep the legacy even spread.
+    pub routing: ShardRouting,
     /// MLP feature/class dims (must match `python/compile/model.py`).
     pub features: usize,
     pub classes: usize,
@@ -129,6 +153,7 @@ impl Default for CoordinatorConfig {
             max_delay: Duration::from_millis(2),
             queue_cap: 1024,
             shards: 1,
+            routing: ShardRouting::ModelSticky,
             features: 64,
             classes: 32,
             hidden: 128,
@@ -168,11 +193,15 @@ impl CoordStats {
 }
 
 /// Handle to a running coordinator (one submission queue + engine
-/// thread per shard; requests route round-robin by request id).
+/// thread per shard; requests route per [`ShardRouting`] — sticky
+/// model-name hashing by default, round-robin by request id on demand).
 pub struct Coordinator {
     txs: Vec<rt::Sender<Msg>>,
     engine_threads: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
+    routing: ShardRouting,
+    /// The batched-MLP model name (what a `Classify` hashes as).
+    mlp_model: String,
     pub stats: Arc<CoordStats>,
 }
 
@@ -212,6 +241,8 @@ impl Coordinator {
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
         let shards = cfg.shards.max(1);
+        let routing = cfg.routing;
+        let mlp_model = cfg.mlp_model();
         let stats = Arc::new(CoordStats::default());
         let factory = Arc::new(engine_factory);
         let mut txs = Vec::with_capacity(shards);
@@ -233,6 +264,8 @@ impl Coordinator {
             txs,
             engine_threads,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            routing,
+            mlp_model,
             stats,
         }
     }
@@ -242,9 +275,27 @@ impl Coordinator {
         self.txs.len()
     }
 
-    /// The shard a request id routes to (round-robin).
-    fn shard_of(&self, id: u64) -> &rt::Sender<Msg> {
-        &self.txs[(id as usize) % self.txs.len()]
+    /// The model a payload executes — what the sticky router hashes.
+    fn model_of<'a>(&'a self, payload: &'a Payload) -> &'a str {
+        match payload {
+            Payload::Classify { .. } => &self.mlp_model,
+            Payload::Gemm { model, .. } => model,
+            Payload::Conv { .. } => "conv2d_k3",
+        }
+    }
+
+    /// The shard index a request routes to, per the configured policy.
+    /// The sticky hash is the crate-wide deterministic FNV-1a
+    /// ([`rt::fnv1a`]) — never `DefaultHasher`, whose algorithm is
+    /// unspecified — so the shard a model lands on is stable across
+    /// runs, processes, and toolchains.
+    fn shard_index(&self, id: u64, payload: &Payload) -> usize {
+        match self.routing {
+            ShardRouting::RoundRobin => (id as usize) % self.txs.len(),
+            ShardRouting::ModelSticky => {
+                (rt::fnv1a(self.model_of(payload).as_bytes()) as usize) % self.txs.len()
+            }
+        }
     }
 
     /// Submit a request; returns a receiver for the response. Fails fast
@@ -252,10 +303,11 @@ impl Coordinator {
     /// backpressure signal.
     pub fn try_submit(&self, payload: Payload) -> Result<(u64, rt::Receiver<Response>), u64> {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let shard = self.shard_index(id, &payload);
         let (rtx, rrx) = rt::bounded(1);
         let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
-        match self.shard_of(id).try_send(Msg::Req(req)) {
+        match self.txs[shard].try_send(Msg::Req(req)) {
             Ok(()) => Ok((id, rrx)),
             Err(_) => {
                 self.stats.rejected.inc();
@@ -267,10 +319,11 @@ impl Coordinator {
     /// Blocking submit (waits for queue space on the target shard).
     pub fn submit(&self, payload: Payload) -> (u64, rt::Receiver<Response>) {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let shard = self.shard_index(id, &payload);
         let (rtx, rrx) = rt::bounded(1);
         let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
-        self.shard_of(id).send(Msg::Req(req)).ok();
+        self.txs[shard].send(Msg::Req(req)).ok();
         (id, rrx)
     }
 
@@ -651,6 +704,7 @@ mod tests {
             batch_size: 4,
             max_delay: Duration::from_millis(1),
             shards: 2,
+            routing: ShardRouting::RoundRobin,
             ..Default::default()
         };
         let served = Arc::new(Mutex::new(std::collections::HashSet::new()));
@@ -697,6 +751,74 @@ mod tests {
             2,
             "both shards must serve traffic, not one funnel"
         );
+    }
+
+    /// Mock engine recording (model, shard) pairs, for routing asserts.
+    struct RouteTagEngine {
+        shard: usize,
+        served: Arc<Mutex<Vec<(String, usize)>>>,
+        inner: MockEngine,
+    }
+
+    impl InferenceEngine for RouteTagEngine {
+        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            self.served.lock().unwrap().push((model.to_string(), self.shard));
+            self.inner.run(model, inputs)
+        }
+    }
+
+    #[test]
+    fn sticky_routing_pins_each_model_family_to_one_shard() {
+        // the default policy hashes the model name: across many shard
+        // counts and interleavings, every request for a given model must
+        // land on the same engine (cache affinity), and the assignment
+        // must be the deterministic FNV one
+        let cfg = CoordinatorConfig {
+            batch_size: 2,
+            max_delay: Duration::from_millis(1),
+            shards: 3,
+            ..Default::default() // routing: ModelSticky is the default
+        };
+        assert_eq!(cfg.routing, ShardRouting::ModelSticky);
+        let served = Arc::new(Mutex::new(Vec::new()));
+        let served2 = served.clone();
+        let cfg2 = cfg.clone();
+        let weights = MlpWeights::deterministic(&cfg);
+        let coord = Coordinator::start(cfg.clone(), weights, move |shard| {
+            Ok(RouteTagEngine {
+                shard,
+                served: served2.clone(),
+                inner: MockEngine {
+                    calls: Arc::new(Mutex::new(Vec::new())),
+                    fail_on: None,
+                    cfg: cfg2.clone(),
+                },
+            })
+        });
+        let mut rxs = Vec::new();
+        for i in 0..24 {
+            let payload = match i % 3 {
+                0 => Payload::Classify { features: vec![1.0; cfg.features] },
+                1 => Payload::Gemm { model: "gemm_f32".into(), x: vec![1.0], y: vec![1.0] },
+                _ => Payload::Gemm { model: "gemm_bf16".into(), x: vec![1.0], y: vec![1.0] },
+            };
+            rxs.push(coord.submit(payload).1);
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        coord.shutdown();
+        let served = served.lock().unwrap();
+        let mut shard_of: std::collections::HashMap<String, usize> =
+            std::collections::HashMap::new();
+        for (model, shard) in served.iter() {
+            let expect = (crate::rt::fnv1a(model.as_bytes()) as usize) % 3;
+            assert_eq!(*shard, expect, "{model} must land on its hash shard");
+            if let Some(prev) = shard_of.insert(model.clone(), *shard) {
+                assert_eq!(prev, *shard, "{model} bounced between shards");
+            }
+        }
+        assert_eq!(shard_of.len(), 3, "all three model families served: {shard_of:?}");
     }
 
     #[test]

@@ -87,15 +87,13 @@ pub fn bf16_to_f32(b: u16) -> f32 {
     f32::from_bits(u32::from(b) << 16)
 }
 
-/// Convert an `f32` to bfloat16 with round-to-nearest-even.
-///
-/// NaNs are quieted (payload preserved in the top bits) so that a NaN never
-/// rounds to infinity.
-pub fn f32_to_bf16(x: f32) -> u16 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040; // force quiet bit
-    }
+/// The shared round-to-nearest-even core of every f32→bf16 conversion in
+/// the crate: rounds a **non-NaN** f32 bit pattern to the nearest bf16
+/// (a rounded-away carry propagating into the exponent — including
+/// overflow to infinity — is correct RNE). NaN policy is the *only*
+/// thing the public converters disagree on, so it stays out of here.
+#[inline(always)]
+fn bf16_rne_bits(bits: u32) -> u16 {
     let round_bit = 0x8000u32;
     let lsb = (bits >> 16) & 1;
     let rem = bits & 0xffff;
@@ -104,6 +102,50 @@ pub fn f32_to_bf16(x: f32) -> u16 {
         b = b.wrapping_add(1);
     }
     b
+}
+
+/// Convert an `f32` to bfloat16 with round-to-nearest-even — the MMA
+/// hardware input contract. NaNs are quieted (payload preserved in the
+/// top bits) so that a NaN never rounds to infinity.
+///
+/// This is the crate's **single source** of the f32→bf16 rounding
+/// (`runtime::device` re-exports it; `runtime::hlo::bf16_round` wraps
+/// the canonical-NaN variant [`f32_to_bf16_canonical`] over the same
+/// RNE core).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // force quiet bit
+    }
+    bf16_rne_bits(bits)
+}
+
+/// Convert an `f32` to bfloat16 with round-to-nearest-even and the XLA
+/// `convert` NaN policy: any NaN becomes the **canonical quiet NaN**
+/// with its sign preserved and payload dropped (`0x7fc0` / `0xffc0`).
+/// Identical to [`f32_to_bf16`] on every non-NaN input (same RNE core).
+/// This is the rounding the bf16 panel packers fuse into packing.
+pub fn f32_to_bf16_canonical(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16 & 0x8000) | 0x7fc0;
+    }
+    bf16_rne_bits(bits)
+}
+
+/// Canonicalize **raw bf16 bits**: NaN patterns collapse to the
+/// sign-preserved canonical quiet NaN (exactly what
+/// [`f32_to_bf16_canonical`] would produce after an exact widening),
+/// everything else passes through untouched. The raw-bits panel packers
+/// apply this so the no-widening path stays bitwise identical to the
+/// widen-then-round path on every input, NaN payloads included.
+#[inline(always)]
+pub fn bf16_canon_nan(b: u16) -> u16 {
+    if (b & 0x7fff) > 0x7f80 {
+        (b & 0x8000) | 0x7fc0
+    } else {
+        b
+    }
 }
 
 /// Sign-extend a 4-bit value (stored in the low nibble) to `i32`.
@@ -198,6 +240,66 @@ mod tests {
         // 1.0 + 2^-9 rounds to nearest-even bf16 of 1.0
         assert_eq!(f32_to_bf16(1.0 + 2.0f32.powi(-9)), f32_to_bf16(1.0));
         assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 3.0 * 2.0f32.powi(-9))), 1.0 + 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_converters_share_one_rne_core() {
+        // the satellite contract: every f32->bf16 conversion in the crate
+        // rounds through bf16_rne_bits, so the two public converters (and
+        // the runtime re-exports / bf16_round wrapper over them) can only
+        // disagree on NaN policy. Pin that on a value sweep that crosses
+        // ties, carries, subnormals, signed zeros and infinities.
+        let cases = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            1.0 + 2.0f32.powi(-9),        // exact tie -> even (down)
+            1.0 + 3.0 * 2.0f32.powi(-9),  // exact tie -> even (up)
+            1.0 + 2.0f32.powi(-8),        // above halfway
+            f32::from_bits(0x7f7f_ffff),  // max finite: rounds up to inf
+            f32::from_bits(0x0000_0001),  // smallest subnormal
+            f32::from_bits(0x0080_0000),  // smallest normal
+            6.1e-39,                      // subnormal range
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1e30,
+            -1e-30,
+        ];
+        for &v in &cases {
+            assert_eq!(
+                f32_to_bf16(v),
+                f32_to_bf16_canonical(v),
+                "non-NaN value {v:?} must round identically through both converters"
+            );
+        }
+        assert_eq!(f32_to_bf16_canonical(f32::from_bits(0x7f7f_ffff)), 0x7f80, "overflow -> inf");
+        // NaN is where the contracts differ: the ISA converter quiets and
+        // keeps the payload, the XLA converter canonicalizes.
+        let snan = f32::from_bits(0x7f81_2345);
+        assert_eq!(f32_to_bf16(snan), 0x7f81 | 0x0040);
+        assert_eq!(f32_to_bf16_canonical(snan), 0x7fc0);
+        let neg_nan = f32::from_bits(0xffc1_0000);
+        assert_eq!(f32_to_bf16_canonical(neg_nan), 0xffc0, "sign survives canonicalization");
+    }
+
+    #[test]
+    fn bf16_canon_nan_matches_widen_then_round() {
+        // raw-bits canonicalization must equal "widen exactly, then
+        // convert with the canonical-NaN policy" for every u16 pattern —
+        // the invariant that keeps the raw-bf16 panel path bitwise
+        // identical to the staged f32 path.
+        for bits in 0..=u16::MAX {
+            let via_f32 = f32_to_bf16_canonical(bf16_to_f32(bits));
+            assert_eq!(bf16_canon_nan(bits), via_f32, "bits {bits:#06x}");
+        }
+        // spot-check the interesting classes
+        assert_eq!(bf16_canon_nan(0x7f80), 0x7f80, "inf passes through");
+        assert_eq!(bf16_canon_nan(0xff80), 0xff80, "-inf passes through");
+        assert_eq!(bf16_canon_nan(0x7f81), 0x7fc0, "sNaN canonicalizes");
+        assert_eq!(bf16_canon_nan(0xffff), 0xffc0, "-NaN keeps its sign");
+        assert_eq!(bf16_canon_nan(0x8000), 0x8000, "-0.0 passes through");
+        assert_eq!(bf16_canon_nan(0x0001), 0x0001, "subnormal passes through");
     }
 
     #[test]

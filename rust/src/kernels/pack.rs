@@ -114,6 +114,157 @@ pub fn pack_b_im2col_f32(
     }
 }
 
+// ---------------------------------------------------------------------------
+// bf16 pair-interleaved panels — the `xvbf16ger2pp` rank-2 operand layout
+// (the panel shape `kernels::gemm_rp` models per step, scaled to the
+// blocked GEMM's MR×NR micropanels). A *step* covers two consecutive `k`
+// values; within a step, element `(lane, kl)` sits at `lane*2 + kl`, so
+// one step of an A panel is `mr` adjacent (lo, hi) bf16 pairs and one
+// step of a B panel is `nr` pairs — exactly what a rank-2 accumulate
+// consumes per instruction. The odd-`k` tail step zero-fills its `kl=1`
+// lane: a zero pair product contributes `+0.0` at the end of the chain,
+// which is bitwise identical to the prefixed `pmsk` form's disabled
+// product (see `blas::bf16_gemm` for the argument). Packing happens
+// **straight from raw `u16` bits** (NaNs canonicalized so the raw path
+// matches the widen-then-round path bit for bit) or from f32 with the
+// bf16 round-to-nearest-even fused in — no widening round-trip either
+// way.
+// ---------------------------------------------------------------------------
+
+use crate::isa::types::{bf16_canon_nan, f32_to_bf16_canonical};
+
+/// Pack an A micropanel for the bf16 packed GEMM from **raw bf16 bits**:
+/// rows `i0 .. i0+rows` × columns `k0 .. k0+kc` of a row-major `a` with
+/// row stride `lda`, pair-interleaved — step `s` holds `k = k0+2s` and
+/// `k0+2s+1`, element `(i, kl)` at `out[s*mr*2 + i*2 + kl]`. Rows past
+/// `rows` (the m-tail) and the odd-`k` pad lane are zero-filled; NaN
+/// bits are canonicalized ([`bf16_canon_nan`]). `out` must hold
+/// `kc.div_ceil(2) * mr * 2` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panel_bf16(
+    a: &[u16],
+    lda: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [u16],
+) {
+    let steps = kc.div_ceil(2);
+    debug_assert!(rows <= mr && out.len() >= steps * mr * 2);
+    for s in 0..steps {
+        let step = &mut out[s * mr * 2..(s + 1) * mr * 2];
+        for i in 0..mr {
+            for kl in 0..2 {
+                let kk = 2 * s + kl;
+                step[i * 2 + kl] = if i < rows && kk < kc {
+                    bf16_canon_nan(a[(i0 + i) * lda + k0 + kk])
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// [`pack_a_panel_bf16`] with the f32→bf16 **round fused into packing**:
+/// the source is row-major f32 and every packed element is rounded to
+/// bf16 bits with round-to-nearest-even (canonical NaNs) on the way into
+/// the panel — the compiled form of a `convert(bf16)` feeding a dot, so
+/// the conversion never materializes an intermediate tensor.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panel_f32_bf16(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [u16],
+) {
+    let steps = kc.div_ceil(2);
+    debug_assert!(rows <= mr && out.len() >= steps * mr * 2);
+    for s in 0..steps {
+        let step = &mut out[s * mr * 2..(s + 1) * mr * 2];
+        for i in 0..mr {
+            for kl in 0..2 {
+                let kk = 2 * s + kl;
+                step[i * 2 + kl] = if i < rows && kk < kc {
+                    f32_to_bf16_canonical(a[(i0 + i) * lda + k0 + kk])
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// Pack a B micropanel for the bf16 packed GEMM from **raw bf16 bits**:
+/// rows `k0 .. k0+kc` × columns `j0 .. j0+cols` of a row-major `b` with
+/// row stride `ldb`, pair-interleaved — element `(j, kl)` of step `s` at
+/// `out[s*nr*2 + j*2 + kl]` (`k = k0+2s+kl`). Columns past `cols` (the
+/// n-tail) and the odd-`k` pad lane are zero-filled; NaN bits are
+/// canonicalized. `out` must hold `kc.div_ceil(2) * nr * 2` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panel_bf16(
+    b: &[u16],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [u16],
+) {
+    let steps = kc.div_ceil(2);
+    debug_assert!(cols <= nr && out.len() >= steps * nr * 2);
+    for s in 0..steps {
+        let step = &mut out[s * nr * 2..(s + 1) * nr * 2];
+        for j in 0..nr {
+            for kl in 0..2 {
+                let kk = 2 * s + kl;
+                step[j * 2 + kl] = if j < cols && kk < kc {
+                    bf16_canon_nan(b[(k0 + kk) * ldb + j0 + j])
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// [`pack_b_panel_bf16`] with the f32→bf16 round fused into packing
+/// (see [`pack_a_panel_f32_bf16`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panel_f32_bf16(
+    b: &[f32],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [u16],
+) {
+    let steps = kc.div_ceil(2);
+    debug_assert!(cols <= nr && out.len() >= steps * nr * 2);
+    for s in 0..steps {
+        let step = &mut out[s * nr * 2..(s + 1) * nr * 2];
+        for j in 0..nr {
+            for kl in 0..2 {
+                let kk = 2 * s + kl;
+                step[j * 2 + kl] = if j < cols && kk < kc {
+                    f32_to_bf16_canonical(b[(k0 + kk) * ldb + j0 + j])
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
 /// Pack a B micropanel for the blocked f32 GEMM: rows `k0 .. k0+kc` ×
 /// columns `j0 .. j0+cols` of a row-major `b` with row stride `ldb`, kept
 /// row-major per step — row `p` stored as `nr` consecutive elements at
@@ -296,6 +447,72 @@ mod tests {
         pack_b_im2col_f32(&img, &spec, 1, 2, 0, 3, 4, &mut out);
         assert_eq!(out[0], 12.0, "tap (0,1,2) at output pixel (0,0)");
         assert_eq!(out[4], 121.0, "tap (1,2,1) at output pixel (0,0)");
+    }
+
+    #[test]
+    fn bf16_panels_pair_interleave_and_pad() {
+        use crate::isa::types::f32_to_bf16;
+        // a: 4 x 5 row-major of exactly-representable values; pack rows
+        // 1..4 (3 rows, mr=4 -> one zero row), columns 1..4 (kc=3, odd ->
+        // step 1 pads its kl=1 lane)
+        let a: Vec<u16> =
+            (0..4 * 5).map(|x| f32_to_bf16((10 * (x / 5) + x % 5) as f32)).collect();
+        let mut out = vec![0xdeadu16; 2 * 4 * 2];
+        pack_a_panel_bf16(&a, 5, 1, 3, 1, 3, 4, &mut out);
+        for s in 0..2 {
+            for i in 0..4 {
+                for kl in 0..2 {
+                    let kk = 2 * s + kl;
+                    let expect = if i < 3 && kk < 3 {
+                        f32_to_bf16((10 * (1 + i) + 1 + kk) as f32)
+                    } else {
+                        0
+                    };
+                    assert_eq!(out[s * 8 + i * 2 + kl], expect, "(s={s}, i={i}, kl={kl})");
+                }
+            }
+        }
+        // B: 5 x 6 row-major; rows 2..5 (kc=3), columns 1..5 (cols=4,
+        // nr=6 -> two zero columns)
+        let b: Vec<u16> =
+            (0..5 * 6).map(|x| f32_to_bf16((10 * (x / 6) + x % 6) as f32)).collect();
+        let mut out = vec![0xdeadu16; 2 * 6 * 2];
+        pack_b_panel_bf16(&b, 6, 2, 3, 1, 4, 6, &mut out);
+        for s in 0..2 {
+            for j in 0..6 {
+                for kl in 0..2 {
+                    let kk = 2 * s + kl;
+                    let expect = if j < 4 && kk < 3 {
+                        f32_to_bf16((10 * (2 + kk) + 1 + j) as f32)
+                    } else {
+                        0
+                    };
+                    assert_eq!(out[s * 12 + j * 2 + kl], expect, "(s={s}, j={j}, kl={kl})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_f32_packers_round_like_the_raw_path() {
+        use crate::isa::types::bf16_to_f32;
+        // packing f32 sources must equal rounding first and packing the
+        // raw bits — including a NaN payload, which both paths collapse
+        // to the canonical quiet NaN
+        let vals = [1.0f32, -2.5, 1.0 + 2.0f32.powi(-9), f32::INFINITY, -0.0,
+            f32::from_bits(0x7f81_2345), 3.1e-41];
+        let bits: Vec<u16> = vals.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+        let widened: Vec<f32> = bits.iter().map(|&b| bf16_to_f32(b)).collect();
+        let (mut from_f32, mut from_bits) = (vec![0u16; 4 * 7 * 2], vec![0u16; 4 * 7 * 2]);
+        // treat vals as a 1 x 7 A row (mr=1) and as a 7 x 1 B column
+        pack_a_panel_f32_bf16(&vals, 7, 0, 1, 0, 7, 1, &mut from_f32[..4 * 2]);
+        pack_a_panel_bf16(&bits, 7, 0, 1, 0, 7, 1, &mut from_bits[..4 * 2]);
+        assert_eq!(from_f32[..4 * 2], from_bits[..4 * 2]);
+        pack_b_panel_f32_bf16(&widened, 1, 0, 7, 0, 1, 1, &mut from_f32[..4 * 2]);
+        pack_b_panel_bf16(&bits, 1, 0, 7, 0, 1, 1, &mut from_bits[..4 * 2]);
+        assert_eq!(from_f32[..4 * 2], from_bits[..4 * 2]);
+        // the NaN payload really was canonicalized
+        assert!(from_bits.iter().all(|&b| b != 0x7f81 | 0x0040));
     }
 
     #[test]

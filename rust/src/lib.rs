@@ -26,8 +26,10 @@
 //!   event-based power model used for Figure 12.
 //! * [`blas`] / [`hpl`] — the numerical substrate: reference BLAS, blocked
 //!   GEMM over the simulated kernels, the panel-packed multithreaded
-//!   serving GEMM ([`blas::block_gemm`]), and an HPL (LU) driver for
-//!   Figure 10.
+//!   serving GEMM ([`blas::block_gemm`]), the bf16 packed-panel engine
+//!   ([`blas::bf16_gemm`]: rank-2 microkernel over k-pair-interleaved
+//!   bf16 panels — the `xvbf16ger2` Table I fast path), and an HPL (LU)
+//!   driver for Figure 10.
 //! * [`runtime`] — the native serving runtime: loads the AOT-compiled
 //!   JAX artifacts (`artifacts/*.hlo.txt`) produced by
 //!   `python/compile/aot.py`, parses the HLO text ([`runtime::hlo`]), and
@@ -44,7 +46,8 @@
 //!   the whole request path is self-hosted rust.
 //! * [`coordinator`] — the "data-in-flight business analytics" serving layer
 //!   of §I: request router + dynamic batcher over the native runtime,
-//!   sharded across engine threads that share one device pool.
+//!   sharded across engine threads that share one device pool, with
+//!   sticky model→shard routing (cache affinity) by default.
 //! * [`rt`], [`cli`], [`error`], [`testkit`], [`benchkit`], [`metrics`] —
 //!   substrates (thread pool with blocking `par_for`, argument parser,
 //!   error chain, property testing, benchmark harness, metrics) built

@@ -284,18 +284,36 @@ fn cmd_disasm(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+    use power_mma::coordinator::{
+        Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting,
+    };
     use power_mma::runtime::{artifacts, det_input, Device, HloPlanBackend, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
         .opt("requests", Some("1000"), "self-test request count")
         .opt("threads", Some("0"), "device GEMM worker budget (0 = auto)")
-        .opt("shards", Some("1"), "coordinator engine shards (share one device pool)");
+        .opt("shards", Some("1"), "coordinator engine shards (share one device pool)")
+        .opt(
+            "routing",
+            Some("round-robin"),
+            "request->shard policy: round-robin (the self-test load is a single \
+             model family, so this default lets --shards scale it) | sticky \
+             (hash the model name to a shard — the library default, keeps a \
+             model's plan buffers hot under mixed traffic)",
+        );
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
     let n_req = m.get_usize("requests").unwrap();
     let threads = m.get_usize("threads").unwrap();
     let shards = m.get_usize("shards").unwrap().max(1);
+    let routing = match m.get("routing") {
+        "sticky" => ShardRouting::ModelSticky,
+        "round-robin" => ShardRouting::RoundRobin,
+        other => {
+            eprintln!("unknown --routing '{other}' (expected: sticky | round-robin)");
+            return 2;
+        }
+    };
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -304,7 +322,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     }
-    let cfg = CoordinatorConfig { shards, ..Default::default() };
+    let cfg = CoordinatorConfig { shards, routing, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     // one device = one persistent GEMM pool + budget, shared by every
@@ -336,10 +354,11 @@ fn cmd_serve(args: &[String]) -> i32 {
     let dt = t0.elapsed();
     let stats = coord.shutdown();
     println!(
-        "served {ok}/{n_req} requests in {:.2?} ({:.0} req/s); \
+        "served {ok}/{n_req} requests in {:.2?} ({:.0} req/s, {shards} shard(s), {} routing); \
          p50 {} us, p99 {} us, mean batch occupancy {:.1}",
         dt,
         n_req as f64 / dt.as_secs_f64(),
+        if routing == ShardRouting::RoundRobin { "round-robin" } else { "sticky" },
         stats.latency.quantile_us(0.5),
         stats.latency.quantile_us(0.99),
         stats.mean_batch_occupancy()
@@ -395,12 +414,18 @@ fn bench_coordinator_in(
     shards: usize,
     dir: &std::path::Path,
 ) -> power_mma::error::Result<CoordBench> {
-    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+    use power_mma::coordinator::{
+        Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting,
+    };
     use power_mma::runtime::{artifacts, det_input, Runtime};
     use std::time::Instant;
 
     artifacts::ensure_artifacts(dir)?;
-    let cfg = CoordinatorConfig { shards, ..Default::default() };
+    // this bench drives a single model family (classify), so sticky
+    // routing would funnel everything through one shard — round-robin
+    // keeps the shards=1-vs-2 comparison a measurement of engine
+    // concurrency, which is what the `pool` block reports
+    let cfg = CoordinatorConfig { shards, routing: ShardRouting::RoundRobin, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     let dir2 = dir.to_path_buf(); // owned: the factory closure must be 'static
@@ -488,10 +513,16 @@ fn run_model(
 
 fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::benchkit::{bench_budget, black_box};
+    use power_mma::blas::bf16_gemm::{
+        gemm_bf16_packed_into, gemm_bf16_reference, Bf16Accum, Bf16Scratch, Bf16Src,
+    };
     use power_mma::blas::block_gemm::{
         gemm_f32_fused_into, gemm_f32_into, Accum, Epilogue, GemmScratch, PanelB, Par,
     };
     use power_mma::blas::gemm::ref_gemm;
+    use power_mma::isa::GerKind;
+    use power_mma::kernels::gemm_rp::rp_gemm_program;
+    use power_mma::runtime::hlo::bf16_round;
     use power_mma::runtime::{
         artifacts, det_input, det_inputs, Device, EngineBackend, HloInterpreterBackend,
         HloPlanBackend, ModelMeta,
@@ -705,7 +736,112 @@ fn cmd_bench(args: &[String]) -> i32 {
         return 1;
     }
 
-    // -- 5. pool: scoped-spawn vs persistent-pool GEMM, bit-identical ----
+    // -- 5. bf16: packed-panel engine vs the widened path ----------------
+    // plan shape first: the gemm_bf16 fixture must fuse its convert
+    // round-trips into a single packed dot_bf16 step (the acceptance bar
+    // of the bf16 engine)
+    let Some(bf16_art) = artifacts::EMBEDDED.iter().find(|a| a.name == "gemm_bf16") else {
+        eprintln!("gemm_bf16 fixture missing from the embedded artifact set");
+        return 1;
+    };
+    let bf16_plan = match power_mma::runtime::hlo::HloModule::parse(bf16_art.hlo_text)
+        .and_then(|m| power_mma::runtime::plan::Plan::compile(&m))
+    {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("gemm_bf16: plan compile failed: {e}");
+            return 1;
+        }
+    };
+    let bf16_names = bf16_plan.step_names();
+    let plan_has_dot_bf16 = bf16_names.iter().any(|&s| s == "dot_bf16");
+    println!(
+        "gemm_bf16 plan: {} steps {bf16_names:?} ({})",
+        bf16_plan.num_steps(),
+        if plan_has_dot_bf16 { "convert fused into packing" } else { "NO dot_bf16 step" }
+    );
+    if !plan_has_dot_bf16 {
+        eprintln!("gemm_bf16 must compile to a plan containing a dot_bf16 step");
+        return 1;
+    }
+    // the pre-packed-engine serving path: round every element to the
+    // bf16 grid (two output-sized sweeps), then run the f32 blocked GEMM
+    let mut ar = vec![0f32; size * size];
+    let mut br = vec![0f32; size * size];
+    let mut c_bf16_widened = vec![0f32; size * size];
+    let mut widened_scratch = GemmScratch::new();
+    let s_bf16_widened = bench_budget("bf16 widened (round + f32 gemm)", budget, || {
+        for (d, &v) in ar.iter_mut().zip(&a) {
+            *d = bf16_round(v);
+        }
+        for (d, &v) in br.iter_mut().zip(&b) {
+            *d = bf16_round(v);
+        }
+        gemm_f32_fused_into(
+            &mut c_bf16_widened,
+            &ar,
+            PanelB::Matrix(&br),
+            size,
+            size,
+            size,
+            Accum::F64,
+            Epilogue::None,
+            Par::Pool(shared_dev.pool(), avail),
+            &mut widened_scratch,
+        );
+        black_box(c_bf16_widened[0]);
+    });
+    // the packed path: rounding fused into the pair-interleaved packers,
+    // half-width panels, same worker pool
+    let mut c_bf16_packed = vec![0f32; size * size];
+    let mut bf16_scratch = Bf16Scratch::new();
+    let s_bf16_packed = bench_budget("bf16 packed panels", budget, || {
+        gemm_bf16_packed_into(
+            &mut c_bf16_packed,
+            Bf16Src::F32(&a),
+            Bf16Src::F32(&b),
+            size,
+            size,
+            size,
+            Bf16Accum::Widened,
+            Par::Pool(shared_dev.pool(), avail),
+            &mut bf16_scratch,
+        );
+        black_box(c_bf16_packed[0]);
+    });
+    let (bf16_widened_ms, bf16_packed_ms) = (
+        s_bf16_widened.median.as_secs_f64() * 1e3,
+        s_bf16_packed.median.as_secs_f64() * 1e3,
+    );
+    // bitwise identity: packed == widened == the elementwise-rounding
+    // reference (all three must agree — the interpreter contract)
+    let bf16_ref = gemm_bf16_reference(&a, &b, size, size, size);
+    let bf16_identical = c_bf16_packed
+        .iter()
+        .zip(&c_bf16_widened)
+        .zip(&bf16_ref)
+        .all(|((x, y), z)| x.to_bits() == y.to_bits() && x.to_bits() == z.to_bits());
+    // Table I modeled on the core simulator: the rank-2 bf16 kernel
+    // retires 2x the MACs per instruction of xvf32ger, so at equal issue
+    // rates the MACs/cycle ratio approaches 2
+    let sim_fpc = |prog: &[power_mma::isa::Inst]| {
+        let mut sim = CoreSim::new(MachineConfig::power10());
+        sim.run(prog, 1 << 22).flops_per_cycle()
+    };
+    let sim_steps = 64usize;
+    let fpc_f32 = sim_fpc(&rp_gemm_program(GerKind::F32Ger, 2 * sim_steps, None));
+    let fpc_bf16 = sim_fpc(&rp_gemm_program(GerKind::Bf16Ger2, sim_steps, None));
+    let macs_ratio = fpc_bf16 / fpc_f32;
+    println!(
+        "bf16 {size}^3  widened {bf16_widened_ms:9.2} ms | packed {bf16_packed_ms:9.2} ms \
+         ({:.2}x) | numerics {} | sim MACs/cycle f32 {:.2} -> bf16 {:.2} ({macs_ratio:.2}x)",
+        bf16_widened_ms / bf16_packed_ms,
+        if bf16_identical { "identical" } else { "DIFFER" },
+        fpc_f32 / 2.0,
+        fpc_bf16 / 2.0
+    );
+
+    // -- 6. pool: scoped-spawn vs persistent-pool GEMM, bit-identical ----
     let mut c_scoped = vec![0f32; size * size];
     let mut c_pool = vec![0f32; size * size];
     let mut pool_scratch = GemmScratch::new();
@@ -750,7 +886,7 @@ fn cmd_bench(args: &[String]) -> i32 {
         if pool_gemm_identical { "identical" } else { "DIFFER" }
     );
 
-    // -- 6. coordinator end-to-end over the plan backend, shards 1 vs 2 --
+    // -- 7. coordinator end-to-end over the plan backend, shards 1 vs 2 --
     let n_coord = if quick { 400 } else { 4000 };
     let (coord1, coord2) = match (bench_coordinator(n_coord, 1), bench_coordinator(n_coord, 2)) {
         (Ok(c1), Ok(c2)) => (c1, c2),
@@ -771,9 +907,9 @@ fn cmd_bench(args: &[String]) -> i32 {
         coord2.req_per_s,
         if shard_identical { "identical" } else { "DIFFER" }
     );
-    let numerics_ok = all_identical && pool_gemm_identical && shard_identical;
+    let numerics_ok = all_identical && pool_gemm_identical && shard_identical && bf16_identical;
 
-    // -- 7. machine-readable report --------------------------------------
+    // -- 8. machine-readable report --------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"runtime\",\n  \"quick\": {quick},\n  \"size\": {size},\n  \
          \"threads_available\": {avail},\n  \"threads_swept\": {threads:?},\n  \
@@ -783,6 +919,11 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"fixtures\": [\n    {}\n  ],\n  \
          \"conv\": {{\"plan_steps\": {conv_steps}, \"im2col_gemm_steps\": {conv_gemms}, \
          \"max_steps\": 10}},\n  \
+         \"bf16\": {{\"size\": {size}, \"plan_has_dot_bf16\": {plan_has_dot_bf16}, \
+         \"widened_ms\": {bf16_widened_ms:.3}, \"packed_ms\": {bf16_packed_ms:.3}, \
+         \"packed_vs_widened\": {:.3}, \"identical\": {bf16_identical}, \
+         \"sim_macs_per_cycle_f32\": {:.3}, \"sim_macs_per_cycle_bf16\": {:.3}, \
+         \"sim_macs_per_cycle_ratio\": {macs_ratio:.3}}},\n  \
          \"pool\": {{\"gemm_scoped_ms\": {scoped_ms:.3}, \"gemm_pool_ms\": {pool_ms:.3}, \
          \"gemm_identical\": {pool_gemm_identical}, \
          \"shards1_req_per_s\": {:.1}, \"shards2_req_per_s\": {:.1}, \
@@ -794,6 +935,9 @@ fn cmd_bench(args: &[String]) -> i32 {
         gemm_rows.join(",\n    "),
         plan_rows.join(",\n    "),
         fixture_rows.join(",\n    "),
+        bf16_widened_ms / bf16_packed_ms,
+        fpc_f32 / 2.0,
+        fpc_bf16 / 2.0,
         coord1.req_per_s,
         coord2.req_per_s,
         coord1.json,

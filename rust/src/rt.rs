@@ -18,6 +18,20 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Deterministic FNV-1a (64-bit). `DefaultHasher`'s algorithm is
+/// unspecified and may change between toolchains; everything in this
+/// crate that needs a *stable* string hash — the coordinator's sticky
+/// model→shard router, testkit's name→seed derivation — goes through
+/// this one definition.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 // ---------------------------------------------------------------------------
 // MPMC channel
 // ---------------------------------------------------------------------------

@@ -15,12 +15,15 @@
 //!   shards all draw from this one pool, so adding shards cannot
 //!   oversubscribe cores;
 //! * [`DTypeSlice`] makes the element type part of the API: `F32` slices
-//!   execute directly, `Bf16` slices (stored as raw `u16` bits, the
-//!   `xvbf16ger2` operand width) are widened exactly at the boundary
-//!   today and are the hook for a future natively-packed bf16 panel path
-//!   (ROADMAP "bf16 packed fast path");
+//!   execute directly; `Bf16` slices (stored as raw `u16` bits, the
+//!   `xvbf16ger2` operand width) route to the **bf16 packed-panel
+//!   engine** on the plan backend — a parameter consumed only by fused
+//!   `dot_bf16` steps is packed straight from the raw bits
+//!   ([`crate::blas::bf16_gemm`]), with no f32 widening anywhere on the
+//!   path, and anything else widens exactly into its arena slot;
 //! * the [`ExecCtx`] bundles the device handle with reusable per-request
-//!   staging, so dtype conversion allocates once per context, not once
+//!   staging for backends that still need an f32 view (the interpreter
+//!   oracle), so dtype conversion allocates once per context, not once
 //!   per request.
 //!
 //! ```
@@ -96,18 +99,15 @@ impl Device {
     }
 }
 
-/// Widen one bf16 value (raw bits, high half of the f32 layout) to f32 —
-/// exact, every bf16 value is representable.
-pub fn bf16_to_f32(bits: u16) -> f32 {
-    f32::from_bits(u32::from(bits) << 16)
-}
-
-/// Narrow an f32 to bf16 bits with round-to-nearest-even (the
-/// `xvbf16ger2` input contract, shared with
-/// [`bf16_round`](super::hlo::bf16_round)).
-pub fn f32_to_bf16(x: f32) -> u16 {
-    (super::hlo::bf16_round(x).to_bits() >> 16) as u16
-}
+/// The bf16↔f32 conversions of the typed-tensor boundary, re-exported
+/// from their single source in [`crate::isa::types`] (this module used
+/// to carry its own copies): `bf16_to_f32` widens exactly (every bf16
+/// value is representable), `f32_to_bf16` narrows with
+/// round-to-nearest-even — the `xvbf16ger2` input contract, sharing its
+/// RNE core with [`bf16_round`](super::hlo::bf16_round) (which differs
+/// only in NaN policy: `bf16_round` canonicalizes, `f32_to_bf16` quiets
+/// and keeps the payload).
+pub use crate::isa::types::{bf16_to_f32, f32_to_bf16};
 
 /// A typed, borrowed, read-only tensor buffer: the element storage of
 /// one model input. `F32` is the native execution dtype; `Bf16` carries
@@ -249,8 +249,11 @@ impl<'a> TensorMut<'a> {
                 if dst.len() != result.len() {
                     bail!("output buffer has {} elements, result has {}", dst.len(), result.len());
                 }
+                // the output contract is XLA's convert (canonical quiet
+                // NaN), matching bf16_round and the packers — NOT the
+                // payload-preserving ISA converter re-exported above
                 for (d, &v) in dst.iter_mut().zip(result) {
-                    *d = f32_to_bf16(v);
+                    *d = crate::isa::types::f32_to_bf16_canonical(v);
                 }
             }
         }
@@ -407,6 +410,12 @@ mod tests {
         for (i, (&bits, &v)) in h.iter().zip(&src).enumerate() {
             assert_eq!(bf16_to_f32(bits), crate::runtime::hlo::bf16_round(v), "elem {i}");
         }
+        // NaN results store as the *canonical* quiet NaN (the XLA
+        // convert / bf16_round contract), payload dropped, sign kept
+        let nans = [f32::from_bits(0x7f81_2345), f32::from_bits(0xffaa_0001)];
+        let mut hn = [0u16; 2];
+        TensorMut::bf16(&mut hn, &[2]).store(&nans).unwrap();
+        assert_eq!(hn, [0x7fc0, 0xffc0]);
         // length mismatch rejected
         let mut short = [0f32; 2];
         assert!(TensorMut::f32(&mut short, &[2]).store(&src).is_err());

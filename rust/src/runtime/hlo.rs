@@ -93,16 +93,12 @@ pub struct HloModule {
 }
 
 /// Round an f32 to the nearest bf16 value (round-to-nearest-even), kept
-/// in f32 — the `xvbf16ger2` input contract and XLA's `convert` to bf16.
+/// in f32 — the `xvbf16ger2` input contract and XLA's `convert` to bf16
+/// (NaNs collapse to the sign-preserved canonical quiet NaN). A thin
+/// wrapper over the crate's single f32→bf16 rounding source,
+/// [`crate::isa::types::f32_to_bf16_canonical`].
 pub fn bf16_round(x: f32) -> f32 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        // canonical quiet NaN with the sign preserved
-        return f32::from_bits((bits & 0x8000_0000) | 0x7fc0_0000);
-    }
-    let lsb = (bits >> 16) & 1;
-    let rounded = bits.wrapping_add(0x7fff + lsb) & 0xffff_0000;
-    f32::from_bits(rounded)
+    crate::isa::types::bf16_to_f32(crate::isa::types::f32_to_bf16_canonical(x))
 }
 
 /// Parse `f32[128,128]{1,0}` / `bf16[8]{0}` / `f32[]` into dtype + dims.

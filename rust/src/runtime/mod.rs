@@ -255,13 +255,23 @@ impl CompiledModel for PlanModel {
         out: &mut TensorMut<'_>,
     ) -> Result<()> {
         let device = ctx.device();
-        let refs = ctx.f32_inputs(inputs);
+        // dtype-aware handoff: bf16 inputs reach the plan as raw bits —
+        // parameters feeding only the packed bf16 GEMM are consumed
+        // straight by the panel packers (no f32 staging anywhere), the
+        // rest widen exactly into their arena slots inside the plan
+        let typed: Vec<plan::PlanInput<'_>> = inputs
+            .iter()
+            .map(|t| match t.data {
+                DTypeSlice::F32(s) => plan::PlanInput::F32(s),
+                DTypeSlice::Bf16(b) => plan::PlanInput::Bf16(b),
+            })
+            .collect();
         let mut bufs = self.bufs.lock().unwrap_or_else(|p| p.into_inner());
         let par = Par::Pool(device.pool(), device.threads());
         // zero-copy: run the steps, then store the root arena slot
         // straight into the caller's typed buffer — no intermediate
         // output tensor is materialized on the serving hot path
-        self.plan.run_steps(&mut bufs, &refs, par)?;
+        self.plan.run_steps_typed(&mut bufs, &typed, par)?;
         let roots = self.plan.root_slices(&bufs);
         let (data, _dims) =
             *roots.first().ok_or_else(|| err!("model produced no output"))?;

@@ -24,7 +24,7 @@
 //!   buffers are all owned by [`ExecBuffers`] and reused.
 //!
 //! Between validation and arena assignment, a **pattern-rewrite pass**
-//! collapses the two subgraph shapes the AOT graphs spend their time in
+//! collapses the subgraph shapes the AOT graphs spend their time in
 //! (the layered-reorganization strategy of the paper's Figure 9 SCONV,
 //! applied at the plan level):
 //!
@@ -37,7 +37,15 @@
 //! * trailing `broadcast`+`add` (bias) and `maximum(0)` (relu) chains
 //!   after a `dot` fuse into the GEMM's writeback
 //!   [`Epilogue`](crate::blas::block_gemm::Epilogue), eliminating the
-//!   output-sized memory sweeps of the MLP's post-dot instructions.
+//!   output-sized memory sweeps of the MLP's post-dot instructions;
+//! * a `convert(bf16) → convert(f32) → dot` round-trip (the graph a
+//!   bf16 matmul over f32 storage lowers to — the `gemm_bf16` fixture)
+//!   becomes one `dot_bf16` step on the **bf16 packed-panel engine**
+//!   ([`crate::blas::bf16_gemm`]): both rounding converts fuse into the
+//!   pair-interleaved panel packers (the `xvbf16ger2` rank-2 operand
+//!   layout), so the bf16 grid values never materialize as tensors —
+//!   and a raw-bf16 request input ([`PlanInput::Bf16`]) is packed
+//!   straight from its bits with no f32 widening anywhere.
 //!
 //! Fused interior values are never materialized: they get no steps and
 //! no arena slots, so the rewrite also shrinks the arena (the conv
@@ -89,10 +97,12 @@
 //! ```
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
+use crate::blas::bf16_gemm::{gemm_bf16_packed_into, Bf16Accum, Bf16Scratch, Bf16Src};
 use crate::blas::block_gemm::{
     gemm_f32_fused_into, threads_for_pooled, Accum, Epilogue, GemmScratch, PanelB, Par,
 };
 use crate::error::Result;
+use crate::isa::types::bf16_to_f32;
 use crate::kernels::pack::Im2colSpec;
 use crate::{bail, err};
 
@@ -148,6 +158,16 @@ enum Step {
     /// accumulation — bit-identical to the elementwise sweep it
     /// replaces).
     Im2colGemm { w: usize, img: usize, out: usize, m: usize, n: usize, k: usize, spec: Im2colSpec },
+    /// A `convert(bf16) → convert(f32) → dot` subgraph collapsed to one
+    /// step on the **bf16 packed engine**
+    /// ([`crate::blas::bf16_gemm`]): both rounding converts are fused
+    /// into the pair-interleaved panel packers, the rank-2 microkernel
+    /// accumulates in the widened contract — bit-identical to the
+    /// interpreter executing the three instructions separately. When an
+    /// operand slot holds a raw-bf16 request input
+    /// ([`PlanInput::Bf16`]), the bits feed the packers directly (no
+    /// widening staging at all).
+    DotBf16 { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize },
     /// Affine gather (`broadcast` / `slice`).
     Gather { src: usize, out: usize, spec: GatherSpec },
 }
@@ -191,14 +211,59 @@ pub struct Plan {
     assigns: Vec<SlotAssign>,
     /// Largest `m`/`n`/`k` over all dot steps (sizes the GEMM scratch).
     max_dot: (usize, usize, usize),
+    /// Largest `m`/`n`/`k` over all `DotBf16` steps (sizes the bf16
+    /// packed-panel scratch).
+    max_bf16: (usize, usize, usize),
+    /// Per-parameter: true when every read of the parameter's value is a
+    /// `DotBf16` operand, so a raw-bf16 request input
+    /// ([`PlanInput::Bf16`]) can feed the packers directly — no widening
+    /// copy into the arena at all (see [`Plan::run_steps_typed`]).
+    param_pack_bf16: Vec<bool>,
 }
 
-/// Reusable per-model execution state: the arena slots plus the GEMM
-/// scratch. One `ExecBuffers` serves any number of sequential requests
-/// with no allocation; create with [`Plan::new_buffers`].
+/// Reusable per-model execution state: the arena slots, the GEMM
+/// scratch of each engine (f32 and packed bf16), and the per-request
+/// raw-input routing table. One `ExecBuffers` serves any number of
+/// sequential requests with no allocation; create with
+/// [`Plan::new_buffers`].
 pub struct ExecBuffers {
     slots: Vec<Vec<f32>>,
     scratch: GemmScratch,
+    bf16_scratch: Bf16Scratch,
+    /// Per-slot: `param index + 1` while the slot logically holds a
+    /// raw-bf16 request input that skipped its widening copy (consumed
+    /// directly by `DotBf16` packers), 0 otherwise. Reset each request.
+    raw_param: Vec<u32>,
+}
+
+/// One typed request input at the plan boundary: the dtype-aware
+/// counterpart of the flat `&[f32]` the legacy entry points take.
+/// `Bf16` carries raw bf16 bits (the `DTypeSlice::Bf16` storage of the
+/// device API): for a parameter consumed only by `DotBf16` steps the
+/// bits feed the pair-interleaved panel packers directly — **no f32
+/// widening anywhere on the path** — and for any other parameter they
+/// are widened exactly into the arena slot (still no staging
+/// allocation).
+#[derive(Clone, Copy, Debug)]
+pub enum PlanInput<'a> {
+    /// Flat row-major f32 storage.
+    F32(&'a [f32]),
+    /// Flat row-major raw bf16 bits.
+    Bf16(&'a [u16]),
+}
+
+impl PlanInput<'_> {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            PlanInput::F32(s) => s.len(),
+            PlanInput::Bf16(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 fn row_major_strides(dims: &[usize]) -> Vec<usize> {
@@ -249,6 +314,9 @@ enum Fuse {
     /// `dot` + broadcast-bias `add` (+ `maximum(0)`): one epilogued dot
     /// over inputs `(a, b, bias)`.
     DotEpi { a: usize, b: usize, bias: usize, relu: bool, m: usize, n: usize, k: usize },
+    /// A dot over two `convert(bf16) → convert(f32)` chains: one packed
+    /// bf16 GEMM over inputs `(a, b)`, the rounding fused into packing.
+    DotBf16 { a: usize, b: usize, m: usize, n: usize, k: usize },
 }
 
 impl Fuse {
@@ -257,6 +325,7 @@ impl Fuse {
         match self {
             Fuse::Conv { w, img, .. } => vec![*w, *img],
             Fuse::DotEpi { a, b, bias, .. } => vec![*a, *b, *bias],
+            Fuse::DotBf16 { a, b, .. } => vec![*a, *b],
         }
     }
 }
@@ -623,6 +692,62 @@ fn match_dot_epi(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(Fu
     None
 }
 
+/// One side of a bf16 dot: a single-use `convert` to f32 over a
+/// single-use `convert` to bf16 over an f32 base value, every link
+/// shape-preserving — the round-trip XLA emits for a bf16 matmul over
+/// f32 storage. Returns the base and the two consumed converts.
+fn match_bf16_side(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+) -> Option<(usize, Vec<usize>)> {
+    let outer = &instrs[idx];
+    if outer.opcode != "convert" || outer.dtype != DType::F32 || users[idx].len() != 1 {
+        return None;
+    }
+    let inner_i = *outer.operands.first()?;
+    let inner = &instrs[inner_i];
+    if inner.opcode != "convert" || inner.dtype != DType::Bf16 || users[inner_i].len() != 1 {
+        return None;
+    }
+    let base = *inner.operands.first()?;
+    if instrs[base].dtype != DType::F32 {
+        return None;
+    }
+    // converts preserve shape; require it so the dot's m/n/k derived
+    // from the base are the validated ones
+    if inner.dims != outer.dims || instrs[base].dims != outer.dims {
+        return None;
+    }
+    Some((base, vec![idx, inner_i]))
+}
+
+/// Match a bf16 dot rooted at `i`: `dot(convert_f32(convert_bf16(a)),
+/// convert_f32(convert_bf16(b)))` with the `{1}×{0}` rank-2 contraction
+/// the plan supports. Both sides must round (a mixed f32/bf16 dot has no
+/// packed-kernel equivalent and falls back to the elementwise lowering).
+/// The dot itself is the fusion root — it may be multi-use or a request
+/// output; only the four interior converts are consumed.
+fn match_dot_bf16(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(Fuse, Vec<usize>)> {
+    let d = &instrs[i];
+    if d.opcode != "dot" {
+        return None;
+    }
+    if d.lhs_contracting != Some(1) || d.rhs_contracting != Some(0) {
+        return None;
+    }
+    let (x, y) = (*d.operands.first()?, *d.operands.get(1)?);
+    let (a, ca) = match_bf16_side(instrs, users, x)?;
+    let (b, cb) = match_bf16_side(instrs, users, y)?;
+    let (ad, bd) = (&instrs[a].dims, &instrs[b].dims);
+    if ad.len() != 2 || bd.len() != 2 || ad[1] != bd[0] || d.dims != [ad[0], bd[1]] {
+        return None;
+    }
+    let mut consumed = ca;
+    consumed.extend(cb);
+    Some((Fuse::DotBf16 { a, b, m: ad[0], n: bd[1], k: ad[1] }, consumed))
+}
+
 /// Run the rewrite over the whole entry computation (outermost roots
 /// first, so a sub-chain never steals a match from the chain containing
 /// it). Returns the per-instruction fusion decisions and the consumed
@@ -637,14 +762,22 @@ fn rewrite(instrs: &[Instr], is_out: &[bool]) -> (Vec<Option<Fuse>>, Vec<bool>) 
         if consumed[i] || instrs[i].dtype != DType::F32 {
             continue;
         }
-        let m = match_dot_epi(instrs, &users, i).or_else(|| match_conv(instrs, &users, i));
+        let m = match_dot_epi(instrs, &users, i)
+            .or_else(|| match_conv(instrs, &users, i))
+            .or_else(|| match_dot_bf16(instrs, &users, i));
         let Some((f, cons)) = m else {
             continue;
         };
-        if cons
-            .iter()
-            .any(|&c| consumed[c] || is_out[c] || instrs[c].dtype != DType::F32)
-        {
+        // a consumed interior must be invisible: not already claimed,
+        // not a request output, and f32 — except the bf16 `convert`s the
+        // DotBf16 matcher explicitly vouches for (their rounding is what
+        // the fused step's packers reproduce)
+        if cons.iter().any(|&c| {
+            consumed[c]
+                || is_out[c]
+                || (instrs[c].dtype != DType::F32
+                    && !(instrs[c].dtype == DType::Bf16 && instrs[c].opcode == "convert"))
+        }) {
             continue;
         }
         for &c in &cons {
@@ -653,6 +786,60 @@ fn rewrite(instrs: &[Instr], is_out: &[bool]) -> (Vec<Option<Fuse>>, Vec<bool>) 
         fused[i] = Some(f);
     }
     (fused, consumed)
+}
+
+/// Which parameters may arrive as **raw bf16 bits** and skip the arena
+/// entirely: walk the compiled steps tracking which arena slot currently
+/// holds which parameter's value (a slot stops holding a parameter the
+/// moment any other step writes it — slots are recycled), and demote a
+/// parameter whenever anything but a `DotBf16` operand reads it. Request
+/// outputs read the root slots at the end, so a parameter that *is* an
+/// output also demotes. Raw inputs for the surviving parameters feed the
+/// bf16 panel packers directly (bitwise identical to widening first:
+/// packing canonicalizes NaNs exactly like round-after-widen does).
+fn param_pack_flags(
+    steps: &[Step],
+    num_slots: usize,
+    num_params: usize,
+    root: &[(usize, Vec<usize>)],
+) -> Vec<bool> {
+    let mut ok = vec![true; num_params];
+    let mut holder: Vec<Option<usize>> = vec![None; num_slots];
+    for step in steps {
+        // f32 reads demote; `DotBf16` operand reads are the one kind
+        // that keeps a parameter packable (its packers accept raw bits)
+        let (reads, out): (Vec<usize>, usize) = match step {
+            Step::Param { out, .. } => (vec![], *out),
+            Step::Copy { src, out, .. } | Step::Bf16 { src, out, .. } => (vec![*src], *out),
+            Step::Binary { a, b, out, .. } => (vec![*a, *b], *out),
+            Step::Dot { a, b, out, epi, .. } => {
+                let mut r = vec![*a, *b];
+                match epi {
+                    StepEpi::Bias(s) | StepEpi::BiasRelu(s) => r.push(*s),
+                    StepEpi::None => {}
+                }
+                (r, *out)
+            }
+            Step::Im2colGemm { w, img, out, .. } => (vec![*w, *img], *out),
+            Step::DotBf16 { out, .. } => (vec![], *out),
+            Step::Gather { src, out, .. } => (vec![*src], *out),
+        };
+        for slot in reads {
+            if let Some(p) = holder[slot] {
+                ok[p] = false;
+            }
+        }
+        holder[out] = match step {
+            Step::Param { index, .. } => Some(*index),
+            _ => None,
+        };
+    }
+    for (slot, _) in root {
+        if let Some(p) = holder[*slot] {
+            ok[p] = false; // the root copy-out reads f32
+        }
+    }
+    ok
 }
 
 impl Plan {
@@ -744,6 +931,7 @@ impl Plan {
         let mut consts: Vec<(usize, Vec<f32>)> = Vec::new();
         let mut assigns: Vec<SlotAssign> = Vec::new();
         let mut max_dot = (0usize, 0usize, 0usize);
+        let mut max_bf16 = (0usize, 0usize, 0usize);
 
         // Recycle the slots of values whose last consumer is step `i`
         // (its operands, or an output nobody consumes). Runs only *after*
@@ -834,6 +1022,17 @@ impl Plan {
                             } else {
                                 StepEpi::Bias(bias_slot)
                             },
+                        });
+                    }
+                    Fuse::DotBf16 { a, b, m, n: nn, k } => {
+                        max_bf16 = (max_bf16.0.max(*m), max_bf16.1.max(*nn), max_bf16.2.max(*k));
+                        steps.push(Step::DotBf16 {
+                            a: slot_of[*a].unwrap(),
+                            b: slot_of[*b].unwrap(),
+                            out,
+                            m: *m,
+                            n: *nn,
+                            k: *k,
                         });
                     }
                 }
@@ -1094,14 +1293,19 @@ impl Plan {
             root.push((slot, instrs[r].dims.clone()));
         }
 
+        let num_params = module.num_parameters();
+        let param_pack_bf16 = param_pack_flags(&steps, slot_caps.len(), num_params, &root);
+
         Ok(Plan {
             steps,
             consts,
             slot_caps,
             root,
-            num_params: module.num_parameters(),
+            num_params,
             assigns,
             max_dot,
+            max_bf16,
+            param_pack_bf16,
         })
     }
 
@@ -1115,7 +1319,7 @@ impl Plan {
     /// Step kinds in program order — the observable shape of the
     /// compiled plan, for tests and the bench smoke: `"param"`,
     /// `"copy"`, `"bf16"`, `"binary"`, `"dot"`, `"dot_bias"`,
-    /// `"dot_bias_relu"`, `"im2col_gemm"`, `"gather"`.
+    /// `"dot_bias_relu"`, `"dot_bf16"`, `"im2col_gemm"`, `"gather"`.
     pub fn step_names(&self) -> Vec<&'static str> {
         self.steps
             .iter()
@@ -1127,10 +1331,20 @@ impl Plan {
                 Step::Dot { epi: StepEpi::None, .. } => "dot",
                 Step::Dot { epi: StepEpi::Bias(_), .. } => "dot_bias",
                 Step::Dot { epi: StepEpi::BiasRelu(_), .. } => "dot_bias_relu",
+                Step::DotBf16 { .. } => "dot_bf16",
                 Step::Im2colGemm { .. } => "im2col_gemm",
                 Step::Gather { .. } => "gather",
             })
             .collect()
+    }
+
+    /// Whether parameter `i` may be fed as raw bf16 bits with **no
+    /// widening anywhere**: every read of its value is a `DotBf16`
+    /// packing operand. A raw input for any other parameter still works
+    /// — it is widened (exactly) straight into the parameter's arena
+    /// slot.
+    pub fn param_packs_bf16(&self, i: usize) -> bool {
+        self.param_pack_bf16.get(i).copied().unwrap_or(false)
     }
 
     /// Number of arena slots (≤ live values at the widest point, not the
@@ -1164,8 +1378,9 @@ impl Plan {
     }
 
     /// Preallocate execution buffers for this plan: all arena slots at
-    /// full capacity, constants baked in, GEMM scratch sized for the
-    /// largest dot. Request execution then allocates nothing.
+    /// full capacity, constants baked in, GEMM scratch (f32 and packed
+    /// bf16) sized for the largest dot of each kind. Request execution
+    /// then allocates nothing.
     pub fn new_buffers(&self) -> ExecBuffers {
         let mut slots: Vec<Vec<f32>> = self.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
         for (slot, data) in &self.consts {
@@ -1179,7 +1394,18 @@ impl Plan {
             let cap = super::device::Device::default_threads();
             scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
         }
-        ExecBuffers { slots, scratch }
+        let mut bf16_scratch = Bf16Scratch::new();
+        let (m, n, k) = self.max_bf16;
+        if m > 0 {
+            let cap = super::device::Device::default_threads();
+            bf16_scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
+        }
+        ExecBuffers {
+            slots,
+            scratch,
+            bf16_scratch,
+            raw_param: vec![0u32; self.slot_caps.len()],
+        }
     }
 
     /// Execute the plan on flat row-major f32 inputs, reusing `bufs`.
@@ -1239,16 +1465,53 @@ impl Plan {
 
     /// Run the compiled step list against `bufs` without materializing
     /// output tensors; read the results with [`Plan::root_slices`].
+    /// Convenience over [`Plan::run_steps_typed`] for all-f32 inputs.
     pub fn run_steps(
         &self,
         bufs: &mut ExecBuffers,
         inputs: &[&[f32]],
         par: Par<'_>,
     ) -> Result<()> {
+        let typed: Vec<PlanInput<'_>> = inputs.iter().map(|&d| PlanInput::F32(d)).collect();
+        self.run_steps_typed(bufs, &typed, par)
+    }
+
+    /// Run the compiled step list on **dtype-aware** inputs, reusing
+    /// `bufs`; read the results with [`Plan::root_slices`]. This is the
+    /// serving hot path: [`PlanInput::Bf16`] inputs for parameters that
+    /// feed only `DotBf16` steps ([`Plan::param_packs_bf16`]) skip the
+    /// arena entirely — their raw bits are packed straight into bf16
+    /// panels by the GEMM step — and every other bf16 input is widened
+    /// exactly into its parameter's arena slot. Both routes are bitwise
+    /// identical to pre-widening on the caller side.
+    pub fn run_steps_typed(
+        &self,
+        bufs: &mut ExecBuffers,
+        inputs: &[PlanInput<'_>],
+        par: Par<'_>,
+    ) -> Result<()> {
         if inputs.len() != self.num_params {
             bail!("plan expects {} inputs, got {}", self.num_params, inputs.len());
         }
+        // clear any raw-input routing left by a previous request
+        bufs.raw_param.fill(0);
         for step in &self.steps {
+            // Every step fully (re)writes its output slot, so whatever
+            // raw-input routing that slot carried is dead the moment the
+            // step starts — invalidate it HERE, once, so no step arm can
+            // forget to. The Param arm below re-flags its slot when a
+            // raw bf16 input legitimately skips the widening copy.
+            let out_slot = match step {
+                Step::Param { out, .. }
+                | Step::Copy { out, .. }
+                | Step::Bf16 { out, .. }
+                | Step::Binary { out, .. }
+                | Step::Dot { out, .. }
+                | Step::DotBf16 { out, .. }
+                | Step::Im2colGemm { out, .. }
+                | Step::Gather { out, .. } => *out,
+            };
+            bufs.raw_param[out_slot] = 0;
             match step {
                 Step::Param { index, len, out } => {
                     let data = *inputs
@@ -1257,7 +1520,23 @@ impl Plan {
                     if data.len() != *len {
                         bail!("input {index} has {} elements, plan wants {len}", data.len());
                     }
-                    bufs.slots[*out][..*len].copy_from_slice(data);
+                    match data {
+                        PlanInput::F32(d) => {
+                            bufs.slots[*out][..*len].copy_from_slice(d);
+                        }
+                        PlanInput::Bf16(bits) => {
+                            if self.param_pack_bf16[*index] {
+                                // consumed raw by DotBf16 packers: no copy
+                                bufs.raw_param[*out] = *index as u32 + 1;
+                            } else {
+                                for (dst, &b) in
+                                    bufs.slots[*out][..*len].iter_mut().zip(bits)
+                                {
+                                    *dst = bf16_to_f32(b);
+                                }
+                            }
+                        }
+                    }
                 }
                 Step::Copy { src, len, out } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
@@ -1305,6 +1584,47 @@ impl Plan {
                         epilogue,
                         step_par,
                         &mut bufs.scratch,
+                    );
+                    bufs.slots[*out] = o;
+                }
+                Step::DotBf16 { a, b, out, m, n, k } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let step_par = par.for_gemm(*m, *n, *k);
+                    let slots = &bufs.slots;
+                    let raw = &bufs.raw_param;
+                    // an operand slot flagged raw holds no f32 value —
+                    // the request input's bf16 bits are packed directly
+                    fn src<'s>(
+                        raw: &[u32],
+                        slots: &'s [Vec<f32>],
+                        inputs: &[PlanInput<'s>],
+                        slot: usize,
+                        len: usize,
+                    ) -> Result<Bf16Src<'s>> {
+                        if raw[slot] != 0 {
+                            let idx = (raw[slot] - 1) as usize;
+                            match inputs[idx] {
+                                PlanInput::Bf16(bits) => Ok(Bf16Src::Bits(bits)),
+                                PlanInput::F32(_) => {
+                                    bail!("raw-input routing points at an f32 input")
+                                }
+                            }
+                        } else {
+                            Ok(Bf16Src::F32(&slots[slot][..len]))
+                        }
+                    }
+                    let asrc = src(raw, slots, inputs, *a, m * k)?;
+                    let bsrc = src(raw, slots, inputs, *b, k * n)?;
+                    gemm_bf16_packed_into(
+                        &mut o[..m * n],
+                        asrc,
+                        bsrc,
+                        *m,
+                        *n,
+                        *k,
+                        Bf16Accum::Widened,
+                        step_par,
+                        &mut bufs.bf16_scratch,
                     );
                     bufs.slots[*out] = o;
                 }
@@ -1591,6 +1911,135 @@ ENTRY main {
         let m = HloModule::parse(text).unwrap();
         let e = Plan::compile(&m).unwrap_err().to_string();
         assert!(e.contains("shape mismatch"), "{e}");
+    }
+
+    /// The bf16 serving graph at its smallest: both dot operands round
+    /// through bf16 (the double-convert chain `aot.py` lowers).
+    const BF16_DOT: &str = r#"
+HloModule jit_bf16_dot
+
+ENTRY main.9 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  convert.3 = bf16[2,3]{1,0} convert(Arg_0.1)
+  convert.4 = f32[2,3]{1,0} convert(convert.3)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  convert.5 = bf16[3,2]{1,0} convert(Arg_1.2)
+  convert.6 = f32[3,2]{1,0} convert(convert.5)
+  dot.7 = f32[2,2]{1,0} dot(convert.4, convert.6), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.8 = (f32[2,2]{1,0}) tuple(dot.7)
+}
+"#;
+
+    #[test]
+    fn fuses_bf16_convert_dot_to_one_packed_step() {
+        let m = HloModule::parse(BF16_DOT).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert_eq!(
+            plan.step_names(),
+            ["param", "param", "dot_bf16"],
+            "all four converts must fold into the packed GEMM"
+        );
+        assert_eq!(plan.num_slots(), 3, "fused converts take no arena slots");
+        assert!(plan.param_packs_bf16(0) && plan.param_packs_bf16(1));
+        // bitwise identical to the interpreter walking the five
+        // instructions (values chosen off the bf16 grid so rounding bites)
+        let x = [1.0f32, 0.3004, -2.5, 0.1, 7.0, -0.0625];
+        let w = [0.5f32, -1.5, 2.25, 0.3004, -4.0, 8.0];
+        let got = plan.execute(&[&x, &w], 1).unwrap();
+        let want = m.evaluate(&[&x, &w]).unwrap();
+        let gb: Vec<u32> = got[0].data.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want[0].data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb);
+    }
+
+    #[test]
+    fn raw_bf16_inputs_skip_the_arena_and_match_the_widened_path() {
+        use crate::isa::types::f32_to_bf16_canonical;
+        let m = HloModule::parse(BF16_DOT).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let x = [1.0f32, 0.3004, -2.5, 0.1, 7.0, -0.0625];
+        let w = [0.5f32, -1.5, 2.25, 0.3004, -4.0, 8.0];
+        let via_f32 = plan.execute(&[&x, &w], 1).unwrap();
+        // the same values as raw bf16 bits (pre-rounded) through the
+        // typed entry point: no widening happens anywhere, yet the
+        // result is bitwise identical
+        let xb: Vec<u16> = x.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+        let wb: Vec<u16> = w.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+        let mut bufs = plan.new_buffers();
+        for inputs in [
+            [PlanInput::Bf16(&xb), PlanInput::Bf16(&wb)],
+            [PlanInput::Bf16(&xb), PlanInput::F32(&w)],
+            [PlanInput::F32(&x), PlanInput::Bf16(&wb)],
+        ] {
+            plan.run_steps_typed(&mut bufs, &inputs, Par::Seq).unwrap();
+            let roots = plan.root_slices(&bufs);
+            let (data, dims) = roots[0];
+            assert_eq!(dims, &[2, 2]);
+            let gb: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+            let eb: Vec<u32> = via_f32[0].data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, eb);
+        }
+        // wrong raw-input length is rejected like any other input
+        let short = [0u16; 3];
+        assert!(plan
+            .run_steps_typed(
+                &mut bufs,
+                &[PlanInput::Bf16(&short), PlanInput::F32(&w)],
+                Par::Seq
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn one_sided_bf16_convert_does_not_fuse() {
+        // only the lhs rounds: there is no packed-kernel equivalent, so
+        // the plan must keep the elementwise lowering (and stay correct)
+        let text = r#"
+ENTRY main {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  convert.2 = bf16[2,2]{1,0} convert(Arg_0.1)
+  convert.3 = f32[2,2]{1,0} convert(convert.2)
+  Arg_1.4 = f32[2,2]{1,0} parameter(1)
+  ROOT dot.5 = f32[2,2]{1,0} dot(convert.3, Arg_1.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|&s| s != "dot_bf16"), "{names:?}");
+        assert!(names.contains(&"bf16"), "the convert still lowers: {names:?}");
+        let x = [0.3004f32, 1.0, -2.0, 4.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let got = plan.execute(&[&x, &w], 1).unwrap();
+        assert_eq!(got[0].data, m.evaluate(&[&x, &w]).unwrap()[0].data);
+    }
+
+    #[test]
+    fn bf16_convert_with_another_consumer_does_not_fuse() {
+        // the widened value also escapes as a request output: consuming
+        // it would hide the output, so the matcher must decline
+        let text = r#"
+ENTRY main {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  convert.2 = bf16[2,2]{1,0} convert(Arg_0.1)
+  convert.3 = f32[2,2]{1,0} convert(convert.2)
+  Arg_1.4 = f32[2,2]{1,0} parameter(1)
+  convert.5 = bf16[2,2]{1,0} convert(Arg_1.4)
+  convert.6 = f32[2,2]{1,0} convert(convert.5)
+  dot.7 = f32[2,2]{1,0} dot(convert.3, convert.6), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT t = (f32[2,2]{1,0}, f32[2,2]{1,0}) tuple(dot.7, convert.3)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|&s| s != "dot_bf16"), "{names:?}");
+        let x = [0.3004f32, 1.0, -2.0, 4.0];
+        let w = [1.0f32, 0.5, -0.25, 1.0];
+        let got = plan.execute(&[&x, &w], 1).unwrap();
+        let want = m.evaluate(&[&x, &w]).unwrap();
+        assert_eq!(got[0].data, want[0].data);
+        assert_eq!(got[1].data, want[1].data);
     }
 
     #[test]

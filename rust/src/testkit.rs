@@ -104,7 +104,7 @@ impl Rng {
 /// Run `f` for `cases` generated cases. On panic, reports the case index and
 /// the per-case seed so the failure can be replayed with [`replay`].
 pub fn check(name: &str, cases: u32, mut f: impl FnMut(&mut Rng)) {
-    let base = fnv1a(name.as_bytes());
+    let base = crate::rt::fnv1a(name.as_bytes());
     for i in 0..cases {
         let seed = base ^ (u64::from(i) << 32) ^ u64::from(i);
         let mut rng = Rng::new(seed);
@@ -124,15 +124,6 @@ pub fn check(name: &str, cases: u32, mut f: impl FnMut(&mut Rng)) {
 pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng)) {
     let mut rng = Rng::new(seed);
     f(&mut rng);
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 /// Assert two float slices are close: `|a-b| <= atol + rtol*|b|` elementwise.

@@ -1,0 +1,191 @@
+//! Edge-numerics coverage for the bf16 packed-panel GEMM engine: NaN
+//! payloads, infinities, signed zeros, subnormals, and odd-`k` tails
+//! must all flow through pack → rank-2 microkernel → writeback **bitwise
+//! identical** to the elementwise-rounding reference (round to the bf16
+//! grid, widen exactly, ascending-`k` `f64` accumulation, one narrowing
+//! store — the interpreter's `convert → dot` contract), on both the
+//! f32-source path (round fused into packing) and the raw-bits path
+//! (NaNs canonicalized at pack time). Plus the end-to-end check: the
+//! `gemm_bf16` artifact served from raw bf16 storage through the typed
+//! device API equals the interpreter oracle bit for bit.
+
+use power_mma::blas::bf16_gemm::{
+    gemm_bf16_packed_into, gemm_bf16_reference, Bf16Accum, Bf16Scratch, Bf16Src,
+};
+use power_mma::blas::block_gemm::Par;
+use power_mma::isa::types::{bf16_to_f32, f32_to_bf16_canonical};
+use power_mma::testkit::Rng;
+
+fn run_packed(a: Bf16Src<'_>, b: Bf16Src<'_>, m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    let mut scratch = Bf16Scratch::new();
+    gemm_bf16_packed_into(&mut c, a, b, m, n, k, Bf16Accum::Widened, Par::Seq, &mut scratch);
+    c
+}
+
+fn assert_bitwise(name: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{name}: element {i} differs ({g} vs {w})");
+    }
+}
+
+/// Sprinkle edge values into otherwise-random operands.
+fn spiked(rng: &mut Rng, len: usize, spikes: &[f32]) -> Vec<f32> {
+    let mut v = rng.f32_vec(len);
+    for (i, &s) in spikes.iter().enumerate() {
+        let pos = (i * 7 + 3) % len.max(1);
+        v[pos] = s;
+    }
+    v
+}
+
+#[test]
+fn edge_values_match_the_reference_bitwise() {
+    let spikes = [
+        f32::NAN,
+        f32::from_bits(0x7f81_2345), // signaling NaN with payload
+        f32::from_bits(0xffc0_0001), // negative NaN with payload
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0,
+        0.0,
+        f32::from_bits(0x0000_0001), // smallest f32 subnormal
+        f32::from_bits(0x8000_ffff), // negative subnormal
+        6.1e-39,
+        f32::MAX, // rounds up to bf16 inf
+        1e38,
+    ];
+    let mut rng = Rng::new(0xedbe);
+    // shapes straddling the 8x16 microkernel and the odd-k tail
+    for &(m, n, k) in &[
+        (1usize, 1usize, 1usize),
+        (1, 1, 2),
+        (3, 5, 7),
+        (8, 16, 9),
+        (9, 17, 27),
+        (4, 40, 31),
+    ] {
+        let a = spiked(&mut rng, m * k, &spikes);
+        let b = spiked(&mut rng, k * n, &spikes);
+        let want = gemm_bf16_reference(&a, &b, m, n, k);
+        let got = run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), m, n, k);
+        assert_bitwise(&format!("f32-src m={m} n={n} k={k}"), &got, &want);
+        // the raw-bits path: pre-round (canonical) and hand over bits
+        let ab: Vec<u16> = a.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+        let bb: Vec<u16> = b.iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+        let got = run_packed(Bf16Src::Bits(&ab), Bf16Src::Bits(&bb), m, n, k);
+        assert_bitwise(&format!("bits-src m={m} n={n} k={k}"), &got, &want);
+    }
+}
+
+#[test]
+fn raw_nan_payload_bits_canonicalize_like_the_staged_path() {
+    // hand the engine *non-canonical* NaN bf16 bits (payloads, signaling
+    // patterns): the packers must canonicalize exactly the way
+    // widen-then-round does, so both routes agree bitwise
+    let nan_bits: [u16; 4] = [0x7f81, 0x7fff, 0xff90, 0xffc7];
+    let (m, n, k) = (2usize, 3usize, 4usize);
+    let mut rng = Rng::new(0x4a4);
+    let mut ab: Vec<u16> = rng.f32_vec(m * k).iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+    let mut bb: Vec<u16> = rng.f32_vec(k * n).iter().map(|&v| f32_to_bf16_canonical(v)).collect();
+    ab[1] = nan_bits[0];
+    ab[5] = nan_bits[1];
+    bb[2] = nan_bits[2];
+    bb[7] = nan_bits[3];
+    // the staged route: widen the raw bits exactly, let packing re-round
+    let aw: Vec<f32> = ab.iter().map(|&b| bf16_to_f32(b)).collect();
+    let bw: Vec<f32> = bb.iter().map(|&b| bf16_to_f32(b)).collect();
+    let staged = run_packed(Bf16Src::F32(&aw), Bf16Src::F32(&bw), m, n, k);
+    let raw = run_packed(Bf16Src::Bits(&ab), Bf16Src::Bits(&bb), m, n, k);
+    assert_bitwise("raw vs staged NaN payloads", &raw, &staged);
+    // and both equal the reference over the widened values
+    assert_bitwise("staged vs reference", &staged, &gemm_bf16_reference(&aw, &bw, m, n, k));
+    // NaN actually propagated into the output
+    assert!(staged.iter().any(|v| v.is_nan()), "NaN rows must produce NaN outputs");
+}
+
+#[test]
+fn negative_zero_and_subnormal_flush_contract() {
+    // -0.0 products: the accumulator starts at +0.0, so a column of
+    // -0.0 products yields +0.0 (IEEE: +0.0 + -0.0 = +0.0) — same as
+    // the interpreter's f64 chain, *not* the assigned-first f32 conv
+    // chain. Pin it.
+    let a = [-1.0f32, -1.0];
+    let b = [0.0f32, 0.0];
+    let got = run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), 1, 1, 2);
+    assert_eq!(got[0].to_bits(), 0.0f32.to_bits(), "+0.0, sign from the f64 chain");
+    // subnormal behavior: bf16 rounding does NOT flush — an f32
+    // subnormal rounds to the nearest bf16 subnormal (or zero), and the
+    // widened product is computed exactly; the engine must agree with
+    // the reference on the full subnormal sweep
+    let tiny: Vec<f32> = (0..8)
+        .map(|i| f32::from_bits(0x0000_0001u32 << i))
+        .chain((0..8).map(|i| f32::from_bits(0x8000_0000 | (0x100u32 << i))))
+        .collect();
+    let scale = [2.0f32.powi(120); 16];
+    let want = gemm_bf16_reference(&tiny, &scale, 1, 1, 16);
+    let got = run_packed(Bf16Src::F32(&tiny), Bf16Src::F32(&scale), 1, 1, 16);
+    assert_bitwise("subnormal sweep", &got, &want);
+    // the smallest f32 subnormals underflow to (signed) zero on the
+    // bf16 grid; scaled back up they must stay zero, not reappear
+    assert_eq!(f32_to_bf16_canonical(f32::from_bits(1)) & 0x7fff, 0);
+}
+
+#[test]
+fn odd_k_tails_across_the_kc_boundary() {
+    // k values that leave every kind of tail: odd within one KC block,
+    // odd straddling blocks, exactly one pair short of a block
+    use power_mma::blas::block_gemm::KC;
+    let mut rng = Rng::new(0x0dd);
+    for &k in &[1usize, 3, 15, KC - 1, KC + 1, KC + 3] {
+        let (m, n) = (3usize, 19usize);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let want = gemm_bf16_reference(&a, &b, m, n, k);
+        let got = run_packed(Bf16Src::F32(&a), Bf16Src::F32(&b), m, n, k);
+        assert_bitwise(&format!("odd-k {k}"), &got, &want);
+    }
+}
+
+#[test]
+fn served_bf16_artifact_from_raw_bits_equals_the_interpreter() {
+    // end to end through the typed device API: raw bf16 storage (with a
+    // NaN payload spiked in) served by the plan backend's packed path
+    // must equal the interpreter oracle staging the same bits to f32
+    use power_mma::runtime::{
+        artifacts, det_inputs, Device, HloInterpreterBackend, Runtime, TensorMut, TensorRef,
+    };
+    let dir = std::env::temp_dir().join(format!("mma-bf16eng-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    artifacts::write_artifacts(&dir).unwrap();
+    let device = Device::new(2);
+    let plan_backend = Box::new(power_mma::runtime::HloPlanBackend::new());
+    let mut plan_rt = Runtime::with_device(device.clone(), plan_backend, &dir);
+    let mut oracle_rt =
+        Runtime::with_device(device.clone(), Box::new(HloInterpreterBackend), &dir);
+    plan_rt.load("gemm_bf16").unwrap();
+    oracle_rt.load("gemm_bf16").unwrap();
+    let meta = plan_rt.meta("gemm_bf16").unwrap().clone();
+    let mut bits: Vec<Vec<u16>> = det_inputs(&meta)
+        .iter()
+        .map(|v| v.iter().map(|&x| f32_to_bf16_canonical(x)).collect())
+        .collect();
+    bits[0][7] = 0x7f99; // non-canonical NaN payload
+    bits[1][3] = 0xff80; // -inf
+    let trefs: Vec<TensorRef<'_>> = bits
+        .iter()
+        .zip(&meta.input_shapes)
+        .map(|(d, s)| TensorRef::bf16(d, s))
+        .collect();
+    let mut ctx = device.ctx();
+    let mut via_plan = vec![0f32; meta.output_len()];
+    let mut out = TensorMut::f32(&mut via_plan, &meta.output_shape);
+    plan_rt.execute_typed("gemm_bf16", &mut ctx, &trefs, &mut out).unwrap();
+    let mut via_oracle = vec![0f32; meta.output_len()];
+    let mut out = TensorMut::f32(&mut via_oracle, &meta.output_shape);
+    oracle_rt.execute_typed("gemm_bf16", &mut ctx, &trefs, &mut out).unwrap();
+    assert_bitwise("plan vs interpreter on raw bf16 bits", &via_plan, &via_oracle);
+    assert!(via_plan.iter().any(|v| v.is_nan()), "the NaN input must reach the output");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -215,10 +215,19 @@ fn conv_fixture_compiles_to_a_single_im2col_gemm() {
                     "no post-dot sweeps may remain: {names:?}"
                 );
             }
-            // pure GEMM graphs have nothing to fuse (bf16 keeps its
-            // convert round-trip: a "bf16" and a "copy" step per input)
+            "gemm_bf16" => {
+                // the bf16 serving graph collapses to one packed-panel
+                // GEMM: both convert round-trips fuse into the packers
+                assert_eq!(
+                    names,
+                    ["param", "param", "dot_bf16"],
+                    "bf16 converts must fold into the packed GEMM"
+                );
+                assert!(plan.param_packs_bf16(0) && plan.param_packs_bf16(1));
+            }
+            // the pure f32 GEMM graph has nothing to fuse
             _ => assert!(
-                names.iter().all(|&s| matches!(s, "param" | "dot" | "bf16" | "copy")),
+                names.iter().all(|&s| matches!(s, "param" | "dot")),
                 "{name}: {names:?}"
             ),
         }
