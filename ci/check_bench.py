@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Assert the invariants of a ``BENCH_runtime.json`` report.
+
+The single gate shared by CI (``.github/workflows/ci.yml``) and local
+runs::
+
+    cargo run --release -- bench serve --quick --out BENCH_runtime.json
+    python3 ci/check_bench.py BENCH_runtime.json
+
+Checks are *correctness* invariants, never absolute performance numbers
+(CI runners are noisy): plan shapes, bitwise-identity bits, block
+presence, and req/s strictly positive. Exits non-zero with a pointed
+message on the first violation.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def need(report, key):
+    if key not in report:
+        fail(f"required block '{key}' missing from report")
+    return report[key]
+
+
+def check(report):
+    # -- acceptance: every bitwise-identity bit folded together --------
+    acceptance = need(report, "acceptance")
+    if acceptance.get("numerics_identical") is not True:
+        fail(f"acceptance.numerics_identical is not true: {acceptance}")
+
+    # -- plan shapes ---------------------------------------------------
+    conv = need(report, "conv")
+    if not conv.get("plan_steps", 10**9) <= 10:
+        fail(f"conv fixture must compile to <= 10 plan steps: {conv}")
+    if conv.get("im2col_gemm_steps") != 1:
+        fail(f"conv fixture must fuse to exactly one im2col GEMM: {conv}")
+
+    # -- bf16 engine: packed plan step + both accumulation contracts ---
+    bf16 = need(report, "bf16")
+    if bf16.get("plan_has_dot_bf16") is not True:
+        fail(f"gemm_bf16 plan lost its packed dot_bf16 step: {bf16}")
+    if bf16.get("identical") is not True:
+        fail(f"bf16 packed path is not bitwise identical to widened: {bf16}")
+    if not bf16.get("packed_vs_widened", 0) > 0:
+        fail(f"bf16 packed-vs-widened ratio must be positive: {bf16}")
+    if bf16.get("f32pairs_identical") is not True:
+        fail(f"bf16 F32Pairs path diverges from its pairs oracle: {bf16}")
+    if bf16.get("plan_f32pairs_identical") is not True:
+        fail(f"F32Pairs-compiled plan diverges from the pairs oracle: {bf16}")
+
+    # -- coordinator end-to-end ----------------------------------------
+    coord = need(report, "coordinator")
+    if not coord.get("req_per_s", 0) > 0:
+        fail(f"coordinator served no requests: {coord}")
+    sharded = need(report, "coordinator_sharded")
+    if sharded.get("shards") != 2:
+        fail(f"sharded coordinator bench must run with 2 shards: {sharded}")
+
+    # -- pool: persistent-pool GEMM + shard numerics -------------------
+    pool = need(report, "pool")
+    if pool.get("gemm_identical") is not True:
+        fail(f"persistent-pool GEMM diverged from scoped-spawn: {pool}")
+    if pool.get("shard_numerics_identical") is not True:
+        fail(f"sharded serving diverged from single-shard: {pool}")
+
+    # -- continuous batching -------------------------------------------
+    batching = need(report, "batching")
+    ladder = batching.get("ladder")
+    if not isinstance(ladder, list) or len(ladder) < 3:
+        fail(f"batching ladder must list >= 3 bucket sizes: {batching}")
+    if ladder != sorted(ladder) or len(set(ladder)) != len(ladder):
+        fail(f"batching ladder must be ascending and deduplicated: {ladder}")
+    per_bucket = batching.get("per_bucket")
+    if not isinstance(per_bucket, list) or len(per_bucket) < 3:
+        fail(f"batching.per_bucket must sweep >= 3 bucket sizes: {batching}")
+    if [row.get("bucket") for row in per_bucket] != ladder:
+        fail(f"per_bucket sweep must cover the ladder {ladder}: {per_bucket}")
+    for row in per_bucket:
+        if not row.get("req_per_s", 0) > 0:
+            fail(f"bucket {row.get('bucket')} served no requests: {row}")
+        if not row.get("p99_us", 0) > 0:
+            fail(f"bucket {row.get('bucket')} reported no p99 latency: {row}")
+    windows = batching.get("windows")
+    if not isinstance(windows, list) or len(windows) < 2:
+        fail(f"batching.windows must sweep >= 2 window sizes: {batching}")
+    for row in windows:
+        if not row.get("req_per_s", 0) > 0:
+            fail(f"window {row.get('window_us')}us served no requests: {row}")
+        flushes = sum(
+            b.get("flushes_full", 0)
+            + b.get("flushes_deadline", 0)
+            + b.get("flushes_shutdown", 0)
+            for b in row.get("buckets", [])
+        )
+        if not flushes > 0:
+            fail(f"window {row.get('window_us')}us recorded no bucket flushes: {row}")
+    if batching.get("batched_vs_singleton_identical") is not True:
+        fail(
+            "batched responses are not bitwise identical to singleton "
+            f"responses: {batching}"
+        )
+
+    print(
+        "check_bench: OK:"
+        f" speedup {acceptance.get('achieved')},"
+        f" conv steps {conv.get('plan_steps')},"
+        f" bf16 packed-vs-widened {bf16.get('packed_vs_widened')},"
+        f" coord req/s {coord.get('req_per_s')},"
+        f" sharded req/s {sharded.get('req_per_s')},"
+        f" ladder {ladder},"
+        f" bucket req/s {[row.get('req_per_s') for row in per_bucket]},"
+        f" batched==singleton {batching.get('batched_vs_singleton_identical')}"
+    )
+
+
+def main(argv):
+    paths = argv[1:] or ["BENCH_runtime.json"]
+    for path in paths:
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except OSError as e:
+            fail(f"cannot read {path}: {e}")
+        except json.JSONDecodeError as e:
+            fail(f"{path} is not valid JSON: {e}")
+        print(f"check_bench: {path}")
+        check(report)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -3,8 +3,8 @@
 //! transaction, with model agility (three model families served at once).
 //!
 //! Loads the AOT artifacts (JAX serving graphs → HLO text), starts the
-//! coordinator with **two engine shards** (router + dynamic batcher over
-//! the native compiled-plan runtime, both shards drawing GEMM workers
+//! coordinator with **two engine shards** (router + continuous batcher
+//! over a bucket ladder of compiled plans, both shards drawing GEMM workers
 //! from the one process-wide device pool), fires a mixed workload from
 //! concurrent client threads, and reports throughput + latency
 //! percentiles + batch occupancy.
@@ -28,11 +28,15 @@ fn main() -> power_mma::error::Result<()> {
     let cfg = CoordinatorConfig { shards: 2, ..Default::default() };
     let weights = MlpWeights::deterministic(&cfg);
     let dir2 = dir.clone();
+    let ladder = cfg.ladder();
+    let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
     let coord = Arc::new(Coordinator::start(cfg.clone(), weights, move |shard| {
         let mut rt = Runtime::cpu(&dir2)?;
         let names = rt.load_all()?;
+        let buckets = rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
         println!(
-            "engine shard {shard}: loaded {names:?} on platform {} ({} pool workers)",
+            "engine shard {shard}: loaded {names:?} + buckets {buckets:?} on platform {} \
+             ({} pool workers)",
             rt.platform(),
             rt.device().threads()
         );
@@ -98,11 +102,22 @@ fn main() -> power_mma::error::Result<()> {
         stats.latency.max_us()
     );
     println!(
-        "batching:   {} batches, mean occupancy {:.1}/{}",
+        "batching:   {} batches, mean occupancy {:.1} (ladder {:?})",
         stats.batches.get(),
         stats.mean_batch_occupancy(),
-        cfg.batch_size
+        cfg.ladder()
     );
+    for b in &stats.buckets {
+        println!(
+            "  bucket {:3}: {:4} flushes ({} full, {} deadline, {} shutdown), occupancy {:.2}",
+            b.bucket,
+            b.flushes(),
+            b.full.get(),
+            b.deadline.get(),
+            b.shutdown.get(),
+            b.occupancy()
+        );
+    }
     println!("rejected:   {} (backpressure)", stats.rejected.get());
     assert_eq!(ok, total, "all requests must succeed");
     Ok(())

@@ -6,8 +6,8 @@
 //! by `power-mma bench serve` (the `coordinator` block of
 //! `BENCH_runtime.json`).
 //!
-//! Also sweeps the dynamic-batching knob (batch size), the serving
-//! analogue of the paper's throughput-vs-latency trade.
+//! Also sweeps the continuous-batching knob (the bucket ladder), the
+//! serving analogue of the paper's throughput-vs-latency trade.
 //!
 //! Run: `cargo bench --bench coordinator`
 
@@ -26,8 +26,9 @@ struct SyntheticEngine {
 impl InferenceEngine for SyntheticEngine {
     fn run(&mut self, model: &str, inputs: &[&[f32]]) -> power_mma::error::Result<Vec<f32>> {
         std::thread::sleep(self.cost);
-        if model.starts_with("mlp") {
-            Ok(vec![0.5; self.cfg.batch_size * self.cfg.classes])
+        // the batcher names the bucket it picked (`mlp_b{m}`)
+        if let Some(b) = model.strip_prefix("mlp_b").and_then(|b| b.parse::<usize>().ok()) {
+            Ok(vec![0.5; b * self.cfg.classes])
         } else {
             Ok(inputs[0].to_vec())
         }
@@ -55,10 +56,11 @@ fn drive(cfg: CoordinatorConfig, n: usize, engine_cost: Duration) -> (f64, u64, 
 
 fn main() {
     println!("batching ablation (synthetic engine, 200us per batch call):");
-    let mut table = Table::new(&["batch", "req/s", "p50 us", "occupancy"]);
+    let mut table = Table::new(&["bucket", "req/s", "p50 us", "occupancy"]);
     for batch in [1usize, 4, 8, 16, 32] {
+        // a singleton ladder [b] pins every window to one compiled bucket
         let cfg = CoordinatorConfig {
-            batch_size: batch,
+            buckets: vec![batch],
             max_delay: Duration::from_millis(1),
             ..Default::default()
         };
@@ -66,7 +68,19 @@ fn main() {
         table.row(&[batch.to_string(), format!("{tput:.0}"), p50.to_string(), format!("{occ:.1}")]);
     }
     println!("{}", table.render());
-    println!("batching amortizes the fixed per-call cost: throughput scales with batch size\n");
+    println!("batching amortizes the fixed per-call cost: throughput scales with bucket size\n");
+
+    // the full ladder: partial windows execute in the smallest
+    // sufficient bucket instead of padding to the maximum
+    let ladder_cfg = CoordinatorConfig {
+        buckets: vec![1, 8, 32],
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let (tput, p50, occ) = drive(ladder_cfg, 2000, Duration::from_micros(200));
+    println!(
+        "bucket ladder [1, 8, 32]: {tput:.0} req/s, p50 {p50} us, occupancy {occ:.1}\n"
+    );
 
     // the real native engine (plan backend) over the AOT artifacts,
     // swept across coordinator shard counts — every shard's runtime
@@ -83,9 +97,12 @@ fn main() {
             };
             let weights = MlpWeights::deterministic(&cfg);
             let dir2 = dir.clone();
+            let ladder = cfg.ladder();
+            let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
             let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
                 let mut rt = Runtime::cpu(&dir2)?;
                 rt.load_all()?;
+                rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
                 Ok(rt)
             });
             // warm up every shard (first call compiles/faults in)
@@ -110,7 +127,7 @@ fn main() {
             let dt = t0.elapsed();
             let stats = coord.shutdown();
             println!(
-                "real plan-backend engine, {shards} shard(s) (mlp_b32, fused epilogues): \
+                "real plan-backend engine, {shards} shard(s) (bucket ladder, fused epilogues): \
                  {n} requests in {dt:.2?} -> {:.0} req/s, p50 {} us, occupancy {:.1}",
                 n as f64 / dt.as_secs_f64(),
                 stats.latency.quantile_us(0.5),

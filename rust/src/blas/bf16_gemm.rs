@@ -166,11 +166,12 @@ impl Bf16Src<'_> {
 
 /// Accumulation mode of the bf16 microkernel — each mode is bit-exact
 /// against one existing oracle (see the module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Bf16Accum {
     /// Exact widening, `f64` products and ascending-`k` `f64` sums, one
     /// narrowing store — the interpreter's `convert → dot` contract
-    /// (what [`crate::runtime::plan`]'s `DotBf16` step uses).
+    /// (what [`crate::runtime::plan`]'s `DotBf16` step uses by default).
+    #[default]
     Widened,
     /// `f32` pair products summed low-then-high, chained in `f32` with
     /// the first step assigned — the `xvbf16ger2(pp)` Machine contract
@@ -255,6 +256,43 @@ pub fn gemm_bf16_reference(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -
                 acc += ar[i * k + kk] * br[kk * n + j];
             }
             c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// The elementwise-rounding reference of the **`F32Pairs` contract**
+/// ([`Bf16Accum::F32Pairs`]): round both operands to the bf16 grid
+/// (canonical NaNs), then per output element walk the `k` pairs in
+/// ascending order computing each rank-2 pair product
+/// `a₀·b₀ + a₁·b₁` in `f32` (bf16 products are exact in `f32`; the pair
+/// sum rounds once) and chaining in `f32` — the first pair *assigns*
+/// (the Machine's `AccOp::New`), every later pair adds `p + acc` in that
+/// operand order. An odd `k` contributes a literal `+0.0` high-lane
+/// product (not skipped: `-0.0 + 0.0` is `+0.0`, so the padding term is
+/// observable in zero signs), and `k = 0` yields `0.0` — all exactly
+/// what the packed engine's zero-padded panels compute. Because `KC` is
+/// even, the engine's cache blocks never split a pair, so this flat
+/// chain IS the blocked chain; the packed engine in
+/// [`Bf16Accum::F32Pairs`] mode must match this bit for bit.
+pub fn gemm_bf16_reference_pairs(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    use crate::isa::types::f32_to_bf16_canonical as rnd;
+    let ar: Vec<f32> = a.iter().map(|&v| bf16_to_f32(rnd(v))).collect();
+    let br: Vec<f32> = b.iter().map(|&v| bf16_to_f32(rnd(v))).collect();
+    let pairs = k.div_ceil(2);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..pairs {
+                let (k0, k1) = (2 * p, 2 * p + 1);
+                let a0 = ar[i * k + k0];
+                let b0 = br[k0 * n + j];
+                let (a1, b1) = if k1 < k { (ar[i * k + k1], br[k1 * n + j]) } else { (0.0, 0.0) };
+                let prod = a0 * b0 + a1 * b1;
+                acc = if p == 0 { prod } else { prod + acc };
+            }
+            c[i * n + j] = acc;
         }
     }
     c
@@ -559,6 +597,44 @@ mod tests {
                     par,
                 );
                 assert_eq!(got, expect, "m={m} n={n} k={k}");
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn f32pairs_matches_reference_across_shapes_and_policies() {
+        // the elementwise pairs oracle IS the blocked pairs chain (KC is
+        // even, so cache blocks never split a pair) — across MR/NR/KC
+        // boundary shapes, odd k, and every worker policy
+        let pool = ThreadPool::new("bf16-pairs-test", 4);
+        let mut rng = Rng::new(0xf32a);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 1, 3),
+            (3, 5, 9),
+            (8, 16, 27),
+            (9, 17, 31),
+            (16, 33, KC + 3),
+            (8, 300, 9),
+            (33, 70, 40),
+        ] {
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let expect = gemm_bf16_reference_pairs(&a, &b, m, n, k);
+            for par in [Par::Seq, Par::Scoped(3), Par::Pool(&pool, 3), Par::Pool(&pool, 4)] {
+                let got = run_packed(
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    Bf16Accum::F32Pairs,
+                    par,
+                );
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, eb, "m={m} n={n} k={k}");
             }
         }
         pool.shutdown();

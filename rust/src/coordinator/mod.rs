@@ -8,16 +8,27 @@
 //!
 //! * a **router** dispatches each request to its model family (tabular
 //!   classification / GEMM / convolution);
-//! * a **dynamic batcher** coalesces classification requests up to the
-//!   compiled batch size or a latency deadline, pads the tail, executes
-//!   one batched MLP inference, and scatters the rows back to callers;
-//! * **backpressure** comes from the bounded per-shard submission queues;
+//! * a **continuous batcher** drains each shard's queue into a ladder of
+//!   compiled batch buckets ([`CoordinatorConfig::buckets`], e.g.
+//!   `m = 1/8/32`): whatever is pending when the largest bucket fills or
+//!   the latency window ([`CoordinatorConfig::max_delay`]) expires
+//!   executes in the **smallest bucket that covers it** — partial
+//!   batches no longer pad all the way to one fixed compiled size, and
+//!   a full queue executes at maximum GEMM utilization (the paper's §VI
+//!   efficiency-vs-`m` curve, applied to serving). Output rows scatter
+//!   back to their callers;
+//! * **backpressure** comes from the bounded per-shard submission queues
+//!   plus optional per-model-family policies
+//!   ([`CoordinatorConfig::policies`]): in-flight caps and low-priority
+//!   shedding keep one family from starving the batcher under mixed
+//!   traffic;
 //! * the executables run on **`shards` engine threads**
 //!   ([`CoordinatorConfig::shards`]), each with its own bounded queue
 //!   and its own engine instance; requests route per [`ShardRouting`] —
-//!   by default a request's **model name hashes to a sticky shard**, so
-//!   a model family's compiled plan and packed-panel buffers stay hot
-//!   on one engine (round-robin by id stays available for
+//!   by default a request's **model family hashes to a sticky shard**
+//!   (every bucket of a family hashes as one name), so a family's
+//!   compiled bucket plans and packed-panel buffers stay hot on one
+//!   engine (round-robin by id stays available for
 //!   single-model-dominated traffic). Backends may be thread-confined —
 //!   each engine is constructed *inside* its thread via the factory, so
 //!   no `Send` requirement leaks.
@@ -50,11 +61,20 @@
 //! 3. **Responses are owned, requests are moved.** A request's payload
 //!    moves into its shard's engine thread; the reply channel is the
 //!    only route back. Nothing on the hot path is shared mutable state
-//!    except the atomic [`CoordStats`] counters (shared by all shards).
+//!    except the atomic [`CoordStats`] counters (shared by all shards)
+//!    and the per-policy in-flight counters.
+//!
+//! ## Time
+//!
+//! Deadlines and latencies read a [`Clock`]: real time by default, or a
+//! [`ManualTime`] handle tests advance explicitly — the deflaking hook
+//! for deadline behavior on loaded CI runners (batching decisions become
+//! deterministic functions of clock reads, not of scheduler timing).
 
 use crate::error::Result;
 use crate::metrics::{Counter, Histogram};
 use crate::rt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -63,11 +83,24 @@ use std::time::{Duration, Instant};
 pub trait InferenceEngine {
     /// Execute `model` on flat f32 inputs, returning the flat output.
     fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>>;
+
+    /// Whether `model` is servable. The batcher resolves its bucket
+    /// ladder through this at startup, so an engine that only loaded
+    /// the largest compiled batch keeps the legacy pad-to-max behavior
+    /// instead of erroring on smaller buckets. Defaults to `true`
+    /// (mock engines serve any batch size).
+    fn has_model(&self, _model: &str) -> bool {
+        true
+    }
 }
 
 impl InferenceEngine for crate::runtime::Runtime {
     fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         self.execute(model, inputs)
+    }
+
+    fn has_model(&self, model: &str) -> bool {
+        self.meta(model).is_some()
     }
 }
 
@@ -91,11 +124,25 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// RAII in-flight token for a policy-tracked model family: incremented
+/// at submit, decremented when the request is dropped — which happens on
+/// *every* exit path (reply sent, batch failed, engine dead), so the
+/// counter cannot leak.
+struct InflightGuard(Arc<AtomicU64>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 struct Request {
     id: u64,
     payload: Payload,
     submitted: Instant,
     reply: rt::Sender<Response>,
+    /// Held for the request's lifetime when its family has a policy.
+    _inflight: Option<InflightGuard>,
 }
 
 enum Msg {
@@ -107,11 +154,14 @@ enum Msg {
 /// / model affinity" policy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardRouting {
-    /// **Sticky (the default):** hash the request's *model name* to a
-    /// shard, so a model family always lands on the same engine — its
-    /// compiled plan, arena, and packed-panel scratch stay hot in that
-    /// engine's caches instead of ping-ponging across shards. The hash
-    /// (FNV-1a) is deterministic across runs and processes.
+    /// **Sticky (the default):** hash the request's *model family* to a
+    /// shard, so a family always lands on the same engine — its
+    /// compiled bucket plans, arenas, and packed-panel scratch stay hot
+    /// in that engine's caches instead of ping-ponging across shards.
+    /// Every classify request hashes as one name
+    /// ([`CoordinatorConfig::mlp_model`]) regardless of which bucket it
+    /// ends up executing in. The hash (FNV-1a) is deterministic across
+    /// runs and processes.
     ModelSticky,
     /// Spread requests round-robin by request id — even load regardless
     /// of model mix (the pre-affinity behavior; the right choice when
@@ -120,12 +170,99 @@ pub enum ShardRouting {
     RoundRobin,
 }
 
+/// Request priority class for [`ModelPolicy`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Admitted whenever the target shard queue has space.
+    Normal,
+    /// Shed early: [`Coordinator::try_submit`] rejects the request once
+    /// the target shard's queue is at least half full, keeping headroom
+    /// for normal-priority traffic under load.
+    Low,
+}
+
+/// Per-model-family admission policy (the ROADMAP "per-model
+/// queue-depth caps / priorities" item): applied by
+/// [`Coordinator::try_submit`] — the backpressure interface. The
+/// blocking [`Coordinator::submit`] records in-flight counts but never
+/// rejects (callers who block have opted out of shedding).
+#[derive(Clone, Debug)]
+pub struct ModelPolicy {
+    /// Family key: [`CoordinatorConfig::mlp_model`] for classify
+    /// traffic, the exact model name for direct-dispatch families.
+    pub model: String,
+    /// Maximum requests of this family in flight (submitted, not yet
+    /// replied) across all shards; `0` = unlimited.
+    pub max_inflight: usize,
+    pub priority: Priority,
+}
+
+impl ModelPolicy {
+    /// Cap a family's in-flight depth at `max_inflight`.
+    pub fn capped(model: &str, max_inflight: usize) -> ModelPolicy {
+        ModelPolicy { model: model.to_string(), max_inflight, priority: Priority::Normal }
+    }
+
+    /// Mark a family low-priority (shed when its shard queue is ≥ half
+    /// full), with no in-flight cap.
+    pub fn low_priority(model: &str) -> ModelPolicy {
+        ModelPolicy { model: model.to_string(), max_inflight: 0, priority: Priority::Low }
+    }
+}
+
+/// Time source for batching deadlines and latency accounting.
+/// [`Clock::default`] reads `Instant::now`; [`Clock::manual`] returns a
+/// clock frozen at construction plus a [`ManualTime`] handle whose
+/// `advance` moves it forward deterministically — timing-sensitive tests
+/// drive the batcher without sleeping.
+#[derive(Clone, Debug, Default)]
+pub struct Clock(Option<Arc<ManualTime>>);
+
+/// Shared handle behind a manual [`Clock`].
+#[derive(Debug)]
+pub struct ManualTime {
+    base: Instant,
+    offset_us: AtomicU64,
+}
+
+impl ManualTime {
+    /// Move the clock forward by `d` (saturating at microsecond grain).
+    pub fn advance(&self, d: Duration) {
+        self.offset_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+impl Clock {
+    /// The real clock (`Instant::now`).
+    pub fn real() -> Clock {
+        Clock(None)
+    }
+
+    /// A manual clock plus the handle that advances it.
+    pub fn manual() -> (Clock, Arc<ManualTime>) {
+        let m = Arc::new(ManualTime { base: Instant::now(), offset_us: AtomicU64::new(0) });
+        (Clock(Some(m.clone())), m)
+    }
+
+    /// Current time on this clock.
+    pub fn now(&self) -> Instant {
+        match &self.0 {
+            None => Instant::now(),
+            Some(m) => m.base + Duration::from_micros(m.offset_us.load(Ordering::Relaxed)),
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Compiled MLP batch size (must match an artifact, e.g. `mlp_b32`).
-    pub batch_size: usize,
-    /// Maximum time the batcher holds a partial batch.
+    /// Compiled MLP batch-bucket ladder (each entry must match a loaded
+    /// artifact, e.g. `mlp_b8`). The batcher executes each window in
+    /// the smallest bucket ≥ the pending row count; see
+    /// [`CoordinatorConfig::ladder`] for normalization.
+    pub buckets: Vec<usize>,
+    /// The batching window: maximum time the batcher holds a partial
+    /// batch before flushing it at the deadline.
     pub max_delay: Duration,
     /// Bounded submission queue depth **per shard** (backpressure).
     pub queue_cap: usize,
@@ -140,6 +277,12 @@ pub struct CoordinatorConfig {
     /// Request→shard policy: sticky model-affinity hashing by default,
     /// [`ShardRouting::RoundRobin`] to keep the legacy even spread.
     pub routing: ShardRouting,
+    /// Per-model-family admission policies (in-flight caps, priority
+    /// shedding); empty = admit everything the queues accept.
+    pub policies: Vec<ModelPolicy>,
+    /// Time source for deadlines and latency (tests inject
+    /// [`Clock::manual`]; the default reads real time).
+    pub clock: Clock,
     /// MLP feature/class dims (must match `python/compile/model.py`).
     pub features: usize,
     pub classes: usize,
@@ -149,11 +292,13 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            batch_size: 32,
+            buckets: vec![1, 8, 32],
             max_delay: Duration::from_millis(2),
             queue_cap: 1024,
             shards: 1,
             routing: ShardRouting::ModelSticky,
+            policies: Vec::new(),
+            clock: Clock::default(),
             features: 64,
             classes: 32,
             hidden: 128,
@@ -162,8 +307,89 @@ impl Default for CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
+    /// The normalized bucket ladder: sorted ascending, deduplicated,
+    /// zeros dropped. An empty `buckets` falls back to `[32]` (the
+    /// legacy fixed batch size, matching the `mlp_b32` AOT fixture).
+    pub fn ladder(&self) -> Vec<usize> {
+        let mut l: Vec<usize> = self.buckets.iter().copied().filter(|&b| b > 0).collect();
+        l.sort_unstable();
+        l.dedup();
+        if l.is_empty() {
+            l.push(32);
+        }
+        l
+    }
+
+    /// Largest ladder bucket — the window size the batcher fills to.
+    pub fn max_bucket(&self) -> usize {
+        *self.ladder().last().unwrap()
+    }
+
+    /// The classify family's canonical model name (the largest bucket's
+    /// plan). This is what sticky routing hashes for *every* classify
+    /// request, so a family's whole bucket ladder pins to one shard.
     pub fn mlp_model(&self) -> String {
-        format!("mlp_b{}", self.batch_size)
+        self.mlp_model_for(self.max_bucket())
+    }
+
+    /// The compiled model name of one batch bucket.
+    pub fn mlp_model_for(&self, bucket: usize) -> String {
+        format!("mlp_b{bucket}")
+    }
+}
+
+/// Why a batch left the batcher — each flush increments exactly one
+/// per-bucket reason counter in [`BucketStat`].
+enum FlushWhy {
+    /// Pending rows reached the largest bucket.
+    Full,
+    /// The oldest pending request hit the latency window.
+    Deadline,
+    /// Coordinator shutdown drained the remainder.
+    Shutdown,
+}
+
+/// Per-bucket batching statistics: how often each compiled bucket
+/// executed, why, and at what occupancy.
+#[derive(Debug)]
+pub struct BucketStat {
+    /// The compiled batch size this row tracks.
+    pub bucket: usize,
+    /// Flushes triggered by the window filling to the largest bucket.
+    pub full: Counter,
+    /// Flushes forced by the latency deadline.
+    pub deadline: Counter,
+    /// Flushes during shutdown drain.
+    pub shutdown: Counter,
+    /// Real (unpadded) rows executed in this bucket.
+    pub rows: Counter,
+}
+
+impl BucketStat {
+    fn new(bucket: usize) -> BucketStat {
+        BucketStat {
+            bucket,
+            full: Counter::new(),
+            deadline: Counter::new(),
+            shutdown: Counter::new(),
+            rows: Counter::new(),
+        }
+    }
+
+    /// Total executions of this bucket.
+    pub fn flushes(&self) -> u64 {
+        self.full.get() + self.deadline.get() + self.shutdown.get()
+    }
+
+    /// Mean fraction of the bucket's rows that were real requests
+    /// (1.0 = no padding).
+    pub fn occupancy(&self) -> f64 {
+        let f = self.flushes();
+        if f == 0 {
+            0.0
+        } else {
+            self.rows.get() as f64 / (f * self.bucket as u64) as f64
+        }
     }
 }
 
@@ -173,14 +399,33 @@ pub struct CoordStats {
     pub received: Counter,
     pub completed: Counter,
     pub failed: Counter,
+    /// Backpressure rejections (target shard queue full) from
+    /// [`Coordinator::try_submit`].
     pub rejected: Counter,
+    /// Policy rejections (in-flight cap hit, or low-priority shed) from
+    /// [`Coordinator::try_submit`]; disjoint from `rejected`.
+    pub throttled: Counter,
     pub batches: Counter,
     /// Sum of batch occupancies (completed classify requests).
     pub batched_requests: Counter,
     pub latency: Histogram,
+    /// One row per ladder bucket (ascending), shared by all shards.
+    pub buckets: Vec<BucketStat>,
 }
 
 impl CoordStats {
+    fn for_buckets(ladder: &[usize]) -> CoordStats {
+        CoordStats {
+            buckets: ladder.iter().map(|&b| BucketStat::new(b)).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// The stats row of one ladder bucket.
+    pub fn bucket(&self, bucket: usize) -> Option<&BucketStat> {
+        self.buckets.iter().find(|s| s.bucket == bucket)
+    }
+
     /// Mean rows per executed MLP batch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         let b = self.batches.get();
@@ -192,16 +437,27 @@ impl CoordStats {
     }
 }
 
+/// Per-policy shared state: the policy plus its cross-shard in-flight
+/// counter.
+struct PolicyState {
+    policy: ModelPolicy,
+    inflight: Arc<AtomicU64>,
+}
+
 /// Handle to a running coordinator (one submission queue + engine
 /// thread per shard; requests route per [`ShardRouting`] — sticky
-/// model-name hashing by default, round-robin by request id on demand).
+/// model-family hashing by default, round-robin by request id on
+/// demand).
 pub struct Coordinator {
     txs: Vec<rt::Sender<Msg>>,
     engine_threads: Vec<std::thread::JoinHandle<()>>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
     routing: ShardRouting,
-    /// The batched-MLP model name (what a `Classify` hashes as).
+    /// The classify family name (what a `Classify` hashes as).
     mlp_model: String,
+    queue_cap: usize,
+    policies: Vec<PolicyState>,
+    clock: Clock,
     pub stats: Arc<CoordStats>,
 }
 
@@ -243,7 +499,12 @@ impl Coordinator {
         let shards = cfg.shards.max(1);
         let routing = cfg.routing;
         let mlp_model = cfg.mlp_model();
-        let stats = Arc::new(CoordStats::default());
+        let stats = Arc::new(CoordStats::for_buckets(&cfg.ladder()));
+        let policies: Vec<PolicyState> = cfg
+            .policies
+            .iter()
+            .map(|p| PolicyState { policy: p.clone(), inflight: Arc::new(AtomicU64::new(0)) })
+            .collect();
         let factory = Arc::new(engine_factory);
         let mut txs = Vec::with_capacity(shards);
         let mut engine_threads = Vec::with_capacity(shards);
@@ -263,9 +524,12 @@ impl Coordinator {
         Coordinator {
             txs,
             engine_threads,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
             routing,
             mlp_model,
+            queue_cap: cfg.queue_cap,
+            policies,
+            clock: cfg.clock,
             stats,
         }
     }
@@ -275,8 +539,12 @@ impl Coordinator {
         self.txs.len()
     }
 
-    /// The model a payload executes — what the sticky router hashes.
-    fn model_of<'a>(&'a self, payload: &'a Payload) -> &'a str {
+    /// The model family a payload belongs to — what the sticky router
+    /// hashes and what [`ModelPolicy`] keys match. Classify requests
+    /// all map to [`CoordinatorConfig::mlp_model`] regardless of the
+    /// bucket they execute in, so a family's whole ladder shares one
+    /// shard and one policy.
+    fn family_of<'a>(&'a self, payload: &'a Payload) -> &'a str {
         match payload {
             Payload::Classify { .. } => &self.mlp_model,
             Payload::Gemm { model, .. } => model,
@@ -293,20 +561,52 @@ impl Coordinator {
         match self.routing {
             ShardRouting::RoundRobin => (id as usize) % self.txs.len(),
             ShardRouting::ModelSticky => {
-                (rt::fnv1a(self.model_of(payload).as_bytes()) as usize) % self.txs.len()
+                (rt::fnv1a(self.family_of(payload).as_bytes()) as usize) % self.txs.len()
             }
         }
     }
 
+    /// Acquire the family's in-flight token (when a policy tracks it).
+    fn inflight_token(&self, payload: &Payload) -> Option<InflightGuard> {
+        let family = self.family_of(payload);
+        self.policies.iter().find(|p| p.policy.model == family).map(|p| {
+            p.inflight.fetch_add(1, Ordering::Relaxed);
+            InflightGuard(p.inflight.clone())
+        })
+    }
+
     /// Submit a request; returns a receiver for the response. Fails fast
-    /// (`Err(id)`) when the target shard's queue is full — the
-    /// backpressure signal.
+    /// (`Err(id)`) when the target shard's queue is full (`rejected`) or
+    /// the family's [`ModelPolicy`] denies admission (`throttled`) —
+    /// the backpressure signals.
     pub fn try_submit(&self, payload: Payload) -> Result<(u64, rt::Receiver<Response>), u64> {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let shard = self.shard_index(id, &payload);
-        let (rtx, rrx) = rt::bounded(1);
-        let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
+        if let Some(p) = self.policies.iter().find(|p| p.policy.model == self.family_of(&payload))
+        {
+            let cap = p.policy.max_inflight as u64;
+            if cap > 0 && p.inflight.load(Ordering::Relaxed) >= cap {
+                self.stats.throttled.inc();
+                return Err(id);
+            }
+            if p.policy.priority == Priority::Low
+                && self.queue_cap > 0
+                && self.txs[shard].len() * 2 >= self.queue_cap
+            {
+                self.stats.throttled.inc();
+                return Err(id);
+            }
+        }
+        let token = self.inflight_token(&payload);
+        let (rtx, rrx) = rt::bounded(1);
+        let req = Box::new(Request {
+            id,
+            payload,
+            submitted: self.clock.now(),
+            reply: rtx,
+            _inflight: token,
+        });
         match self.txs[shard].try_send(Msg::Req(req)) {
             Ok(()) => Ok((id, rrx)),
             Err(_) => {
@@ -317,12 +617,21 @@ impl Coordinator {
     }
 
     /// Blocking submit (waits for queue space on the target shard).
+    /// Policies are recorded but never enforced here — a blocking
+    /// caller has opted out of shedding.
     pub fn submit(&self, payload: Payload) -> (u64, rt::Receiver<Response>) {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let shard = self.shard_index(id, &payload);
-        let (rtx, rrx) = rt::bounded(1);
-        let req = Box::new(Request { id, payload, submitted: Instant::now(), reply: rtx });
         self.stats.received.inc();
+        let token = self.inflight_token(&payload);
+        let (rtx, rrx) = rt::bounded(1);
+        let req = Box::new(Request {
+            id,
+            payload,
+            submitted: self.clock.now(),
+            reply: rtx,
+            _inflight: token,
+        });
         self.txs[shard].send(Msg::Req(req)).ok();
         (id, rrx)
     }
@@ -362,6 +671,7 @@ fn engine_loop<E, F>(
     E: InferenceEngine,
     F: FnOnce() -> Result<E>,
 {
+    let clock = cfg.clock.clone();
     let mut engine = match factory() {
         Ok(e) => e,
         Err(e) => {
@@ -373,7 +683,7 @@ fn engine_loop<E, F>(
                         let _ = req.reply.send(Response {
                             id: req.id,
                             result: Err(format!("engine init failed: {e}")),
-                            latency: req.submitted.elapsed(),
+                            latency: clock.now().saturating_duration_since(req.submitted),
                         });
                     }
                     Msg::Shutdown => break,
@@ -382,63 +692,89 @@ fn engine_loop<E, F>(
             return;
         }
     };
-    let mlp_model = cfg.mlp_model();
-    let mut pending: Vec<Box<Request>> = Vec::with_capacity(cfg.batch_size);
-
-    let flush = |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats| {
-        if pending.is_empty() {
-            return;
-        }
-        let rows = pending.len();
-        // gather + pad to the compiled batch size
-        let mut xbatch = vec![0f32; cfg.batch_size * cfg.features];
-        for (r, req) in pending.iter().enumerate() {
-            if let Payload::Classify { features } = &req.payload {
-                xbatch[r * cfg.features..(r + 1) * cfg.features].copy_from_slice(features);
-            }
-        }
-        let result = engine.run(
-            &mlp_model,
-            &[&xbatch, &weights.w1, &weights.b1, &weights.w2, &weights.b2],
-        );
-        stats.batches.inc();
-        stats.batched_requests.add(rows as u64);
-        match result {
-            Ok(out) => {
-                for (r, req) in pending.drain(..).enumerate() {
-                    let row = out[r * cfg.classes..(r + 1) * cfg.classes].to_vec();
-                    let latency = req.submitted.elapsed();
-                    stats.completed.inc();
-                    stats.latency.record(latency);
-                    let _ = req.reply.send(Response { id: req.id, result: Ok(row), latency });
-                }
-            }
-            Err(e) => {
-                for req in pending.drain(..) {
-                    stats.failed.inc();
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        result: Err(format!("batch failed: {e}")),
-                        latency: req.submitted.elapsed(),
-                    });
-                }
-            }
+    // Resolve the usable ladder against the engine: buckets whose
+    // compiled plan the engine actually loaded. An engine that only
+    // loaded the largest bucket (e.g. load_all over the fixture set)
+    // degrades to the legacy pad-to-max batcher.
+    let ladder: Vec<usize> = {
+        let mut l = cfg.ladder();
+        l.retain(|&b| engine.has_model(&cfg.mlp_model_for(b)));
+        if l.is_empty() {
+            vec![cfg.max_bucket()]
+        } else {
+            l
         }
     };
+    let max_bucket = *ladder.last().unwrap();
+    let mut pending: Vec<Box<Request>> = Vec::with_capacity(max_bucket);
 
-    loop {
-        // deadline of the oldest pending classification, if any
-        let wait = if let Some(first) = pending.first() {
-            cfg.max_delay.saturating_sub(first.submitted.elapsed())
-        } else {
-            Duration::from_millis(50)
-        };
-        match rx.recv_timeout(wait) {
-            Some(Msg::Shutdown) => {
-                flush(&mut engine, &mut pending, &stats);
-                break;
+    // Execute the pending window in the smallest bucket that covers it,
+    // pad the tail, scatter output rows back per request.
+    let flush =
+        |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats, why: FlushWhy| {
+            if pending.is_empty() {
+                return;
             }
-            Some(Msg::Req(req)) => match &req.payload {
+            let rows = pending.len();
+            let bucket = ladder.iter().copied().find(|&b| b >= rows).unwrap_or(max_bucket);
+            let model = cfg.mlp_model_for(bucket);
+            let mut xbatch = vec![0f32; bucket * cfg.features];
+            for (r, req) in pending.iter().enumerate() {
+                if let Payload::Classify { features } = &req.payload {
+                    xbatch[r * cfg.features..(r + 1) * cfg.features].copy_from_slice(features);
+                }
+            }
+            let result = engine
+                .run(&model, &[&xbatch, &weights.w1, &weights.b1, &weights.w2, &weights.b2])
+                .and_then(|out| {
+                    if out.len() < rows * cfg.classes {
+                        crate::bail!(
+                            "{model}: engine returned {} values for {rows} rows of {} classes",
+                            out.len(),
+                            cfg.classes
+                        );
+                    }
+                    Ok(out)
+                });
+            stats.batches.inc();
+            stats.batched_requests.add(rows as u64);
+            if let Some(bs) = stats.bucket(bucket) {
+                match why {
+                    FlushWhy::Full => bs.full.inc(),
+                    FlushWhy::Deadline => bs.deadline.inc(),
+                    FlushWhy::Shutdown => bs.shutdown.inc(),
+                }
+                bs.rows.add(rows as u64);
+            }
+            match result {
+                Ok(out) => {
+                    for (r, req) in pending.drain(..).enumerate() {
+                        let row = out[r * cfg.classes..(r + 1) * cfg.classes].to_vec();
+                        let latency = clock.now().saturating_duration_since(req.submitted);
+                        stats.completed.inc();
+                        stats.latency.record(latency);
+                        let _ =
+                            req.reply.send(Response { id: req.id, result: Ok(row), latency });
+                    }
+                }
+                Err(e) => {
+                    for req in pending.drain(..) {
+                        stats.failed.inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!("batch failed: {e}")),
+                            latency: clock.now().saturating_duration_since(req.submitted),
+                        });
+                    }
+                }
+            }
+        };
+
+    // Route one request: classify joins the batching window, GEMM/conv
+    // dispatch directly.
+    let process =
+        |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats, req: Box<Request>| {
+            match &req.payload {
                 Payload::Classify { features } => {
                     if features.len() != cfg.features {
                         stats.failed.inc();
@@ -449,19 +785,15 @@ fn engine_loop<E, F>(
                                 cfg.features,
                                 features.len()
                             )),
-                            latency: req.submitted.elapsed(),
+                            latency: clock.now().saturating_duration_since(req.submitted),
                         });
-                        continue;
+                        return;
                     }
                     pending.push(req);
-                    if pending.len() >= cfg.batch_size {
-                        flush(&mut engine, &mut pending, &stats);
-                    }
                 }
                 Payload::Gemm { model, x, y } => {
-                    let result =
-                        engine.run(model, &[x, y]).map_err(|e| format!("{model}: {e}"));
-                    let latency = req.submitted.elapsed();
+                    let result = engine.run(model, &[x, y]).map_err(|e| format!("{model}: {e}"));
+                    let latency = clock.now().saturating_duration_since(req.submitted);
                     match &result {
                         Ok(_) => {
                             stats.completed.inc();
@@ -477,7 +809,7 @@ fn engine_loop<E, F>(
                     let result = engine
                         .run("conv2d_k3", &[filters, image])
                         .map_err(|e| format!("conv2d_k3: {e}"));
-                    let latency = req.submitted.elapsed();
+                    let latency = clock.now().saturating_duration_since(req.submitted);
                     match &result {
                         Ok(_) => {
                             stats.completed.inc();
@@ -489,11 +821,49 @@ fn engine_loop<E, F>(
                     }
                     let _ = req.reply.send(Response { id: req.id, result, latency });
                 }
-            },
-            None => {
-                // deadline expired (or idle): flush partial batch
-                flush(&mut engine, &mut pending, &stats);
             }
+        };
+
+    'outer: loop {
+        // continuous drain: pull everything already queued into the
+        // window (up to the largest bucket) before deciding what to run
+        while pending.len() < max_bucket {
+            match rx.try_recv() {
+                Some(Msg::Req(req)) => process(&mut engine, &mut pending, &stats, req),
+                Some(Msg::Shutdown) => {
+                    flush(&mut engine, &mut pending, &stats, FlushWhy::Shutdown);
+                    break 'outer;
+                }
+                None => break,
+            }
+        }
+        if pending.len() >= max_bucket {
+            flush(&mut engine, &mut pending, &stats, FlushWhy::Full);
+            continue;
+        }
+        // deadline of the oldest pending classification, if any
+        let wait = match pending.first() {
+            Some(first) => {
+                let age = clock.now().saturating_duration_since(first.submitted);
+                match cfg.max_delay.checked_sub(age) {
+                    Some(rem) if rem > Duration::ZERO => rem,
+                    _ => {
+                        flush(&mut engine, &mut pending, &stats, FlushWhy::Deadline);
+                        continue;
+                    }
+                }
+            }
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(wait) {
+            Some(Msg::Shutdown) => {
+                flush(&mut engine, &mut pending, &stats, FlushWhy::Shutdown);
+                break;
+            }
+            Some(Msg::Req(req)) => process(&mut engine, &mut pending, &stats, req),
+            // timeout: loop back and re-read the clock — the deadline
+            // check above decides (a manual clock may not have advanced)
+            None => {}
         }
     }
 }
@@ -502,26 +872,35 @@ fn engine_loop<E, F>(
 mod tests {
     use super::*;
     use crate::testkit::{check, Rng};
-    use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Mutex;
 
-    /// Mock engine: records calls; MLP output row r = features[0] of row r
-    /// repeated over classes; gemm returns x unchanged; conv errors.
+    /// Mock engine: records calls; MLP output row r = features[0] of row
+    /// r repeated over classes (batch size parsed from the model name,
+    /// like the real bucket artifacts); gemm returns x unchanged.
     struct MockEngine {
         calls: Arc<Mutex<Vec<(String, usize)>>>,
         fail_on: Option<&'static str>,
         cfg: CoordinatorConfig,
     }
 
+    impl MockEngine {
+        fn batch_of(&self, model: &str) -> usize {
+            model
+                .strip_prefix("mlp_b")
+                .and_then(|b| b.parse().ok())
+                .unwrap_or_else(|| self.cfg.max_bucket())
+        }
+    }
+
     impl InferenceEngine for MockEngine {
         fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
             self.calls.lock().unwrap().push((model.to_string(), inputs.len()));
-            if Some(model) == self.fail_on.map(|s| s) || self.fail_on == Some("*") {
+            if self.fail_on == Some("*") || self.fail_on == Some(model) {
                 crate::bail!("mock failure");
             }
             if model.starts_with("mlp") {
                 let x = inputs[0];
-                let (b, f, c) = (self.cfg.batch_size, self.cfg.features, self.cfg.classes);
+                let (b, f, c) = (self.batch_of(model), self.cfg.features, self.cfg.classes);
                 let mut out = vec![0f32; b * c];
                 for r in 0..b {
                     for j in 0..c {
@@ -551,7 +930,11 @@ mod tests {
 
     #[test]
     fn full_batch_executes_once() {
-        let cfg = CoordinatorConfig { batch_size: 4, max_delay: Duration::from_secs(5), ..Default::default() };
+        let cfg = CoordinatorConfig {
+            buckets: vec![4],
+            max_delay: Duration::from_secs(5),
+            ..Default::default()
+        };
         let (coord, calls) = start_mock(cfg.clone(), None);
         let rxs: Vec<_> = (0..4)
             .map(|i| {
@@ -571,27 +954,145 @@ mod tests {
         assert_eq!(stats.batches.get(), 1, "one full batch");
         assert_eq!(stats.completed.get(), 4);
         assert_eq!(calls.lock().unwrap().len(), 1);
+        let bs = stats.bucket(4).unwrap();
+        assert_eq!(bs.full.get(), 1, "the flush was a window-full flush");
+        assert_eq!(bs.rows.get(), 4);
+        assert_eq!(bs.occupancy(), 1.0);
     }
 
     #[test]
     fn deadline_flushes_partial_batch() {
-        let cfg = CoordinatorConfig { batch_size: 8, max_delay: Duration::from_millis(10), ..Default::default() };
+        let cfg = CoordinatorConfig {
+            buckets: vec![8],
+            max_delay: Duration::from_millis(10),
+            ..Default::default()
+        };
         let (coord, _) = start_mock(cfg.clone(), None);
         let (_, rx) = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] });
         let t0 = Instant::now();
         let resp = rx.recv().unwrap();
         assert!(resp.result.is_ok());
+        // generous bound: this only asserts the deadline path fires at
+        // all, not its precision (see the manual-clock test for exact
+        // semantics) — loaded CI runners must not flake here
         let waited = t0.elapsed();
-        assert!(waited < Duration::from_millis(500), "deadline flush took {waited:?}");
+        assert!(waited < Duration::from_secs(5), "deadline flush took {waited:?}");
         let stats = coord.shutdown();
         assert_eq!(stats.mean_batch_occupancy(), 1.0);
+        assert_eq!(stats.bucket(8).unwrap().deadline.get(), 1);
+    }
+
+    #[test]
+    fn manual_clock_drives_deadline_deterministically() {
+        // with an injected clock the deadline flush is a pure function
+        // of clock reads: no sleeps, no scheduler timing, no flake
+        let (clock, time) = Clock::manual();
+        let cfg = CoordinatorConfig {
+            buckets: vec![8],
+            max_delay: Duration::from_secs(60),
+            clock,
+            ..Default::default()
+        };
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let (_, rx) = coord.submit(Payload::Classify { features: vec![3.0; cfg.features] });
+        // the window is nowhere near its deadline in manual time, so the
+        // batcher holds the request; advance past the window and wake
+        // the engine loop with an unrelated direct-dispatch request
+        time.advance(Duration::from_secs(61));
+        let (_, grx) = coord.submit(Payload::Gemm {
+            model: "gemm_f32".into(),
+            x: vec![1.0],
+            y: vec![1.0],
+        });
+        assert!(grx.recv().unwrap().result.is_ok());
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.unwrap()[0], 3.0);
+        // latency is measured on the same clock: ≥ the advance we made
+        assert!(resp.latency >= Duration::from_secs(61), "latency {:?}", resp.latency);
+        let stats = coord.shutdown();
+        assert_eq!(stats.bucket(8).unwrap().deadline.get(), 1);
+    }
+
+    #[test]
+    fn shutdown_flush_uses_smallest_sufficient_bucket() {
+        // r pending rows must execute in the smallest ladder bucket ≥ r
+        for (r, expect) in [(1usize, 1usize), (2, 8), (8, 8), (9, 32), (32, 32)] {
+            let cfg = CoordinatorConfig {
+                buckets: vec![1, 8, 32],
+                max_delay: Duration::from_secs(60),
+                ..Default::default()
+            };
+            let (coord, calls) = start_mock(cfg.clone(), None);
+            let rxs: Vec<_> = (0..r)
+                .map(|_| {
+                    coord.submit(Payload::Classify { features: vec![1.0; cfg.features] }).1
+                })
+                .collect();
+            let stats = coord.shutdown();
+            for rx in rxs {
+                assert!(rx.recv().unwrap().result.is_ok());
+            }
+            let calls = calls.lock().unwrap();
+            assert_eq!(calls.len(), 1, "rows={r}: exactly one batch");
+            assert_eq!(
+                calls[0].0,
+                format!("mlp_b{expect}"),
+                "rows={r} must land in bucket {expect}"
+            );
+            let bs = stats.bucket(expect).unwrap();
+            assert_eq!(bs.shutdown.get(), 1, "rows={r}: shutdown flush");
+            assert_eq!(bs.rows.get(), r as u64);
+        }
+    }
+
+    #[test]
+    fn bucket_selection_invariants_under_mixed_occupancy() {
+        // whatever the interleaving, every executed batch of b rows must
+        // have used the smallest bucket ≥ b: per bucket, rows ≤
+        // flushes·bucket and rows > flushes·(next smaller bucket)
+        check("smallest sufficient bucket", 5, |rng: &mut Rng| {
+            let ladder = [1usize, 4, 16];
+            let cfg = CoordinatorConfig {
+                buckets: ladder.to_vec(),
+                max_delay: Duration::from_millis(1),
+                ..Default::default()
+            };
+            let n = rng.range(1, 60);
+            let (coord, _) = start_mock(cfg.clone(), None);
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                let mut f = vec![0f32; cfg.features];
+                f[0] = i as f32;
+                rxs.push((i, coord.submit(Payload::Classify { features: f }).1));
+            }
+            for (i, rx) in rxs {
+                let row = rx.recv().unwrap().result.unwrap();
+                assert_eq!(row[0] as usize, i, "response routed to wrong requester");
+            }
+            let stats = coord.shutdown();
+            let mut total_rows = 0u64;
+            for (bi, &b) in ladder.iter().enumerate() {
+                let bs = stats.bucket(b).unwrap();
+                let (flushes, rows) = (bs.flushes(), bs.rows.get());
+                total_rows += rows;
+                assert!(rows <= flushes * b as u64, "bucket {b}: rows {rows} > cap");
+                let prev = if bi == 0 { 0 } else { ladder[bi - 1] as u64 };
+                assert!(
+                    rows >= flushes * (prev + 1),
+                    "bucket {b}: {flushes} flushes carried only {rows} rows — \
+                     a smaller bucket would have sufficed"
+                );
+            }
+            assert_eq!(total_rows, n as u64, "every request accounted to exactly one bucket");
+            assert_eq!(stats.completed.get(), n as u64);
+        });
     }
 
     #[test]
     fn no_request_lost_or_duplicated() {
         check("router loses nothing", 5, |rng: &mut Rng| {
             let cfg = CoordinatorConfig {
-                batch_size: 4,
+                buckets: vec![4],
                 max_delay: Duration::from_millis(1),
                 ..Default::default()
             };
@@ -617,6 +1118,156 @@ mod tests {
     }
 
     #[test]
+    fn scatter_back_row_exact_under_interleaved_families() {
+        // classify rows and direct-dispatch requests interleaved at
+        // random: every response must carry exactly its own request's
+        // data, whatever bucket its window executed in
+        check("scatter-back row-exact", 5, |rng: &mut Rng| {
+            let cfg = CoordinatorConfig {
+                buckets: vec![1, 4, 8],
+                max_delay: Duration::from_millis(1),
+                ..Default::default()
+            };
+            let n = rng.range(5, 50);
+            let (coord, _) = start_mock(cfg.clone(), None);
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                if rng.range(0, 3) == 0 {
+                    let x = vec![i as f32 + 0.25];
+                    rxs.push((i, true, coord.submit(Payload::Gemm {
+                        model: "gemm_f32".into(),
+                        x,
+                        y: vec![0.0],
+                    }).1));
+                } else {
+                    let mut f = vec![0f32; cfg.features];
+                    f[0] = i as f32;
+                    rxs.push((i, false, coord.submit(Payload::Classify { features: f }).1));
+                }
+            }
+            for (i, is_gemm, rx) in rxs {
+                let row = rx.recv().unwrap().result.unwrap();
+                if is_gemm {
+                    assert_eq!(row, vec![i as f32 + 0.25], "gemm echo for {i}");
+                } else {
+                    assert_eq!(row[0] as usize, i, "classify row for {i}");
+                }
+            }
+            let stats = coord.shutdown();
+            assert_eq!(stats.completed.get(), n as u64);
+            assert_eq!(stats.failed.get(), 0);
+        });
+    }
+
+    /// Engine whose gemm calls block until the test releases a token —
+    /// pins requests in flight so policy caps are observable without
+    /// sleeps.
+    struct GatedEngine {
+        gate: rt::Receiver<()>,
+        inner: MockEngine,
+    }
+
+    impl InferenceEngine for GatedEngine {
+        fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            if model == "gemm_f32" {
+                let _ = self.gate.recv();
+            }
+            self.inner.run(model, inputs)
+        }
+    }
+
+    fn start_gated(cfg: CoordinatorConfig) -> (Coordinator, rt::Sender<()>) {
+        let (gtx, grx) = rt::bounded::<()>(64);
+        let weights = MlpWeights::deterministic(&cfg);
+        let cfg2 = cfg.clone();
+        let grx = Mutex::new(Some(grx));
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            Ok(GatedEngine {
+                gate: grx.lock().unwrap().take().expect("single shard"),
+                inner: MockEngine {
+                    calls: Arc::new(Mutex::new(Vec::new())),
+                    fail_on: None,
+                    cfg: cfg2.clone(),
+                },
+            })
+        });
+        (coord, gtx)
+    }
+
+    #[test]
+    fn inflight_cap_throttles_one_family_only() {
+        let cfg = CoordinatorConfig {
+            buckets: vec![4],
+            max_delay: Duration::from_millis(1),
+            policies: vec![ModelPolicy::capped("gemm_f32", 2)],
+            ..Default::default()
+        };
+        let (coord, gate) = start_gated(cfg.clone());
+        let gemm = |v: f32| Payload::Gemm { model: "gemm_f32".into(), x: vec![v], y: vec![0.0] };
+        // two admitted (the cap), pinned in flight by the gate
+        let rx1 = coord.try_submit(gemm(1.0)).expect("first under cap").1;
+        let rx2 = coord.try_submit(gemm(2.0)).expect("second under cap").1;
+        // third gemm is throttled by the family cap...
+        assert!(coord.try_submit(gemm(3.0)).is_err());
+        assert_eq!(coord.stats.throttled.get(), 1);
+        assert_eq!(coord.stats.rejected.get(), 0, "policy throttle is not queue rejection");
+        // ...while the classify family is unaffected
+        let rxc = coord
+            .try_submit(Payload::Classify { features: vec![5.0; cfg.features] })
+            .expect("uncapped family admitted")
+            .1;
+        // blocking submit bypasses enforcement (still counted in flight)
+        let rx4 = coord.submit(gemm(4.0)).1;
+        for _ in 0..3 {
+            gate.send(()).unwrap();
+        }
+        assert_eq!(rx1.recv().unwrap().result.unwrap(), vec![1.0]);
+        assert_eq!(rx2.recv().unwrap().result.unwrap(), vec![2.0]);
+        assert_eq!(rx4.recv().unwrap().result.unwrap(), vec![4.0]);
+        assert_eq!(rxc.recv().unwrap().result.unwrap()[0], 5.0);
+        // all replies delivered -> tokens released; the family admits again
+        let rx5 = coord.try_submit(gemm(6.0)).expect("cap released after replies").1;
+        gate.send(()).unwrap();
+        assert_eq!(rx5.recv().unwrap().result.unwrap(), vec![6.0]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn low_priority_family_sheds_on_half_full_queue() {
+        let cfg = CoordinatorConfig {
+            buckets: vec![4],
+            max_delay: Duration::from_millis(1),
+            queue_cap: 4,
+            policies: vec![ModelPolicy::low_priority("gemm_low")],
+            ..Default::default()
+        };
+        let (coord, gate) = start_gated(cfg.clone());
+        // pin the engine on a gated gemm, then stack two more behind it:
+        // the shard queue is now at least half of queue_cap=4
+        let blocker = Payload::Gemm { model: "gemm_f32".into(), x: vec![0.0], y: vec![0.0] };
+        let mut rxs = vec![coord.submit(blocker.clone()).1];
+        rxs.push(coord.submit(blocker.clone()).1);
+        rxs.push(coord.submit(blocker.clone()).1);
+        // low-priority family is shed...
+        let low = Payload::Gemm { model: "gemm_low".into(), x: vec![9.0], y: vec![0.0] };
+        assert!(coord.try_submit(low.clone()).is_err());
+        assert_eq!(coord.stats.throttled.get(), 1);
+        // ...normal-priority traffic still admitted at the same depth
+        let rx_ok = coord.try_submit(blocker.clone()).expect("normal family admitted").1;
+        rxs.push(rx_ok);
+        for _ in 0..rxs.len() {
+            gate.send(()).unwrap();
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        // drained queue: the low-priority family is admitted again
+        let rx = coord.try_submit(low).expect("admitted once the queue drains").1;
+        assert_eq!(rx.recv().unwrap().result.unwrap(), vec![9.0]);
+        coord.shutdown();
+    }
+
+    #[test]
     fn gemm_and_conv_route_directly() {
         let cfg = CoordinatorConfig::default();
         let (coord, calls) = start_mock(cfg, None);
@@ -636,7 +1287,11 @@ mod tests {
 
     #[test]
     fn engine_failure_fails_whole_batch_gracefully() {
-        let cfg = CoordinatorConfig { batch_size: 2, max_delay: Duration::from_millis(1), ..Default::default() };
+        let cfg = CoordinatorConfig {
+            buckets: vec![2],
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
         let (coord, _) = start_mock(cfg.clone(), Some("*"));
         let rx1 = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] }).1;
         let rx2 = coord.submit(Payload::Classify { features: vec![0.0; cfg.features] }).1;
@@ -649,7 +1304,11 @@ mod tests {
 
     #[test]
     fn malformed_request_rejected_without_poisoning_batch() {
-        let cfg = CoordinatorConfig { batch_size: 2, max_delay: Duration::from_millis(5), ..Default::default() };
+        let cfg = CoordinatorConfig {
+            buckets: vec![2],
+            max_delay: Duration::from_millis(5),
+            ..Default::default()
+        };
         let (coord, _) = start_mock(cfg.clone(), None);
         let bad = coord.submit(Payload::Classify { features: vec![1.0; 3] }).1;
         let good = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] }).1;
@@ -673,12 +1332,17 @@ mod tests {
 
     #[test]
     fn shutdown_flushes_pending() {
-        let cfg = CoordinatorConfig { batch_size: 100, max_delay: Duration::from_secs(60), ..Default::default() };
+        let cfg = CoordinatorConfig {
+            buckets: vec![100],
+            max_delay: Duration::from_secs(60),
+            ..Default::default()
+        };
         let (coord, _) = start_mock(cfg.clone(), None);
         let rx = coord.submit(Payload::Classify { features: vec![2.0; cfg.features] }).1;
         let stats = coord.shutdown();
         assert_eq!(rx.recv().unwrap().result.unwrap()[0], 2.0);
         assert_eq!(stats.completed.get(), 1);
+        assert_eq!(stats.bucket(100).unwrap().shutdown.get(), 1);
     }
 
     /// Mock engine that records which shard served each request, so the
@@ -701,7 +1365,7 @@ mod tests {
         // two shards, round-robin routing: every request answered once,
         // responses routed to the right requester, nothing lost
         let cfg = CoordinatorConfig {
-            batch_size: 4,
+            buckets: vec![4],
             max_delay: Duration::from_millis(1),
             shards: 2,
             routing: ShardRouting::RoundRobin,
@@ -769,12 +1433,13 @@ mod tests {
 
     #[test]
     fn sticky_routing_pins_each_model_family_to_one_shard() {
-        // the default policy hashes the model name: across many shard
-        // counts and interleavings, every request for a given model must
-        // land on the same engine (cache affinity), and the assignment
-        // must be the deterministic FNV one
+        // the default policy hashes the model *family*: across many
+        // shard counts and interleavings, every request for a given
+        // family must land on the same engine (cache affinity) — and
+        // every bucket of the classify ladder counts as ONE family, so
+        // the whole ladder's plans stay hot on one shard
         let cfg = CoordinatorConfig {
-            batch_size: 2,
+            buckets: vec![1, 2],
             max_delay: Duration::from_millis(1),
             shards: 3,
             ..Default::default() // routing: ModelSticky is the default
@@ -812,10 +1477,14 @@ mod tests {
         let mut shard_of: std::collections::HashMap<String, usize> =
             std::collections::HashMap::new();
         for (model, shard) in served.iter() {
-            let expect = (crate::rt::fnv1a(model.as_bytes()) as usize) % 3;
-            assert_eq!(*shard, expect, "{model} must land on its hash shard");
-            if let Some(prev) = shard_of.insert(model.clone(), *shard) {
-                assert_eq!(prev, *shard, "{model} bounced between shards");
+            // executed bucket models (mlp_b1, mlp_b2, ...) all belong to
+            // the classify family, which hashes as cfg.mlp_model()
+            let family =
+                if model.starts_with("mlp_b") { cfg.mlp_model() } else { model.clone() };
+            let expect = (crate::rt::fnv1a(family.as_bytes()) as usize) % 3;
+            assert_eq!(*shard, expect, "{model} must land on its family's hash shard");
+            if let Some(prev) = shard_of.insert(family.clone(), *shard) {
+                assert_eq!(prev, *shard, "{family} bounced between shards");
             }
         }
         assert_eq!(shard_of.len(), 3, "all three model families served: {shard_of:?}");
@@ -829,5 +1498,53 @@ mod tests {
         let (_, rx) = coord.submit(Payload::Classify { features: vec![1.0; cfg.features] });
         assert!(rx.recv().unwrap().result.is_ok());
         coord.shutdown();
+    }
+
+    #[test]
+    fn ladder_normalization() {
+        let cfg = CoordinatorConfig { buckets: vec![32, 1, 8, 8, 0], ..Default::default() };
+        assert_eq!(cfg.ladder(), vec![1, 8, 32]);
+        assert_eq!(cfg.max_bucket(), 32);
+        assert_eq!(cfg.mlp_model(), "mlp_b32");
+        assert_eq!(cfg.mlp_model_for(8), "mlp_b8");
+        let empty = CoordinatorConfig { buckets: vec![], ..Default::default() };
+        assert_eq!(empty.ladder(), vec![32], "empty ladder falls back to the legacy b32");
+    }
+
+    #[test]
+    fn engine_without_small_buckets_degrades_to_pad_to_max() {
+        // an engine that only owns the largest bucket's plan (the
+        // legacy load_all fixture set) must still serve a 1-row window
+        // — padded to the max bucket, as before this PR
+        struct OnlyMax(MockEngine);
+        impl InferenceEngine for OnlyMax {
+            fn run(&mut self, model: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+                assert_eq!(model, "mlp_b32", "small buckets are not loaded");
+                self.0.run(model, inputs)
+            }
+            fn has_model(&self, model: &str) -> bool {
+                model == "mlp_b32"
+            }
+        }
+        let cfg = CoordinatorConfig {
+            buckets: vec![1, 8, 32],
+            max_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let cfg2 = cfg.clone();
+        let weights = MlpWeights::deterministic(&cfg);
+        let coord = Coordinator::start(cfg.clone(), weights, move |_shard| {
+            Ok(OnlyMax(MockEngine {
+                calls: Arc::new(Mutex::new(Vec::new())),
+                fail_on: None,
+                cfg: cfg2.clone(),
+            }))
+        });
+        let (_, rx) = coord.submit(Payload::Classify { features: vec![4.0; cfg.features] });
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], 4.0);
+        let stats = coord.shutdown();
+        assert_eq!(stats.bucket(32).unwrap().rows.get(), 1);
+        assert_eq!(stats.bucket(1).unwrap().flushes(), 0);
+        assert_eq!(stats.bucket(8).unwrap().flushes(), 0);
     }
 }

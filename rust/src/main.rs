@@ -284,6 +284,7 @@ fn cmd_disasm(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
+    use power_mma::blas::bf16_gemm::Bf16Accum;
     use power_mma::coordinator::{
         Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting,
     };
@@ -300,6 +301,20 @@ fn cmd_serve(args: &[String]) -> i32 {
              model family, so this default lets --shards scale it) | sticky \
              (hash the model name to a shard — the library default, keeps a \
              model's plan buffers hot under mixed traffic)",
+        )
+        .opt(
+            "buckets",
+            Some("1,8,32"),
+            "batch-bucket ladder: each entry compiles an mlp_b{m} plan; the \
+             batcher executes every window in the smallest bucket >= its rows",
+        )
+        .opt("window-us", Some("2000"), "batching window (deadline for partial batches)")
+        .opt("queue-cap", Some("1024"), "bounded submission queue depth per shard")
+        .opt(
+            "bf16-accum",
+            Some("widened"),
+            "bf16 dot accumulation contract: widened (f64 image, default) | \
+             f32-pairs (f32 chain over k-pairs, the MMA rank-2 update order)",
         );
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
@@ -314,6 +329,23 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let buckets = match m.get_usize_list("buckets") {
+        Ok(b) if !b.is_empty() && b.iter().all(|&x| x > 0) => b,
+        _ => {
+            eprintln!("--buckets expects a non-empty list of positive batch sizes");
+            return 2;
+        }
+    };
+    let window = std::time::Duration::from_micros(m.get_u64("window-us").unwrap());
+    let queue_cap = m.get_usize("queue-cap").unwrap().max(1);
+    let accum = match m.get("bf16-accum") {
+        "widened" => Bf16Accum::Widened,
+        "f32-pairs" => Bf16Accum::F32Pairs,
+        other => {
+            eprintln!("unknown --bf16-accum '{other}' (expected: widened | f32-pairs)");
+            return 2;
+        }
+    };
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -322,18 +354,32 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     }
-    let cfg = CoordinatorConfig { shards, routing, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        shards,
+        routing,
+        buckets,
+        max_delay: window,
+        queue_cap,
+        ..Default::default()
+    };
+    let ladder = cfg.ladder();
+    let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     // one device = one persistent GEMM pool + budget, shared by every
     // shard (shards add engines, not worker threads)
     let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
     let coord = Coordinator::start(cfg, weights, move |shard| {
-        let mut rt =
-            Runtime::with_device(device.clone(), Box::new(HloPlanBackend::new()), &dir);
+        let mut rt = Runtime::with_device(
+            device.clone(),
+            Box::new(HloPlanBackend::with_bf16_accum(accum)),
+            &dir,
+        );
         let names = rt.load_all()?;
+        let bucket_names = rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
         eprintln!(
-            "shard {shard}: loaded models {names:?} on {} ({} pool workers)",
+            "shard {shard}: loaded models {names:?} + buckets {bucket_names:?} on {} \
+             ({} pool workers)",
             rt.platform(),
             rt.device().threads()
         );
@@ -363,6 +409,19 @@ fn cmd_serve(args: &[String]) -> i32 {
         stats.latency.quantile_us(0.99),
         stats.mean_batch_occupancy()
     );
+    for b in &stats.buckets {
+        println!(
+            "  bucket {:3}: {:5} flushes ({} full, {} deadline, {} shutdown), \
+             {} rows, occupancy {:.2}",
+            b.bucket,
+            b.flushes(),
+            b.full.get(),
+            b.deadline.get(),
+            b.shutdown.get(),
+            b.rows.get(),
+            b.occupancy()
+        );
+    }
     if ok == n_req {
         0
     } else {
@@ -385,53 +444,75 @@ fn gemm_hlo_text(n: usize) -> String {
     )
 }
 
+/// Parameters of one coordinator end-to-end measurement.
+struct CoordBenchOpts {
+    /// Short tag used for the scratch artifact directory + log lines.
+    label: String,
+    n_req: usize,
+    shards: usize,
+    routing: power_mma::coordinator::ShardRouting,
+    /// Batch-bucket ladder handed to [`CoordinatorConfig::buckets`].
+    buckets: Vec<usize>,
+    /// Batching window ([`CoordinatorConfig::max_delay`]).
+    window: std::time::Duration,
+    /// Suppress the per-run stdout line (the sweep prints its own).
+    quiet: bool,
+}
+
 /// One coordinator end-to-end measurement: the JSON fragment plus a
 /// deterministic **numerics probe** (the classify response for a fixed
 /// feature vector — each output row depends only on its own features, so
-/// the probe must be bitwise identical across shard counts).
+/// the probe must be bitwise identical across shard counts, bucket
+/// ladders, and batch-mates) and the coordinator's own batching stats.
 struct CoordBench {
     json: String,
     req_per_s: f64,
+    p50_us: u64,
+    p99_us: u64,
     probe: Vec<f32>,
+    stats: std::sync::Arc<power_mma::coordinator::CoordStats>,
 }
 
 /// Drive the serving coordinator end-to-end over the **plan backend**
-/// (router → dynamic batcher → compiled plan → pool-backed blocked GEMM)
-/// on the embedded artifacts with `shards` engine threads sharing the
-/// process device pool — the cross-PR end-to-end number of
-/// `BENCH_runtime.json`, now also the shards=1-vs-2 comparison of the
-/// `pool` block.
-fn bench_coordinator(n_req: usize, shards: usize) -> power_mma::error::Result<CoordBench> {
-    let dir =
-        std::env::temp_dir().join(format!("mma-bench-coord-{}-{shards}", std::process::id()));
-    let result = bench_coordinator_in(n_req, shards, &dir);
+/// (router → continuous batcher → compiled bucket plans → pool-backed
+/// blocked GEMM) on the embedded artifacts with `shards` engine threads
+/// sharing the process device pool — the cross-PR end-to-end number of
+/// `BENCH_runtime.json`, the shards=1-vs-2 comparison of the `pool`
+/// block, and (swept over buckets/windows) the `batching` block.
+fn bench_coordinator(opts: CoordBenchOpts) -> power_mma::error::Result<CoordBench> {
+    let dir = std::env::temp_dir()
+        .join(format!("mma-bench-coord-{}-{}", std::process::id(), opts.label));
+    let result = bench_coordinator_in(&opts, &dir);
     std::fs::remove_dir_all(&dir).ok(); // clean up on every path
     result
 }
 
 fn bench_coordinator_in(
-    n_req: usize,
-    shards: usize,
+    opts: &CoordBenchOpts,
     dir: &std::path::Path,
 ) -> power_mma::error::Result<CoordBench> {
-    use power_mma::coordinator::{
-        Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting,
-    };
+    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
     use power_mma::runtime::{artifacts, det_input, Runtime};
     use std::time::Instant;
 
     artifacts::ensure_artifacts(dir)?;
-    // this bench drives a single model family (classify), so sticky
-    // routing would funnel everything through one shard — round-robin
-    // keeps the shards=1-vs-2 comparison a measurement of engine
-    // concurrency, which is what the `pool` block reports
-    let cfg = CoordinatorConfig { shards, routing: ShardRouting::RoundRobin, ..Default::default() };
+    let (n_req, shards) = (opts.n_req, opts.shards);
+    let cfg = CoordinatorConfig {
+        shards,
+        routing: opts.routing,
+        buckets: opts.buckets.clone(),
+        max_delay: opts.window,
+        ..Default::default()
+    };
+    let ladder = cfg.ladder();
+    let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
     let dir2 = dir.to_path_buf(); // owned: the factory closure must be 'static
     let coord = Coordinator::start(cfg, weights, move |_shard| {
         let mut rt = Runtime::cpu(&dir2)?;
         rt.load_all()?;
+        rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
         Ok(rt)
     });
     // warm up every shard: the first call per engine faults the plans in
@@ -476,18 +557,79 @@ fn bench_coordinator_in(
     let q = |f: f64| lat_us[((lat_us.len() - 1) as f64 * f) as usize];
     let (p50, p99) = (q(0.5), q(0.99));
     let req_s = n_req as f64 / dt.as_secs_f64();
-    println!(
-        "coordinator e2e (plan backend, {shards} shard(s)): {n_req} requests -> \
-         {req_s:.0} req/s, p50 {p50} us, p99 {p99} us, occupancy {:.1}",
-        stats.mean_batch_occupancy()
-    );
+    if !opts.quiet {
+        println!(
+            "coordinator e2e (plan backend, {shards} shard(s)): {n_req} requests -> \
+             {req_s:.0} req/s, p50 {p50} us, p99 {p99} us, occupancy {:.1}",
+            stats.mean_batch_occupancy()
+        );
+    }
     let json = format!(
         "{{\"backend\": \"native-hlo-plan\", \"shards\": {shards}, \"requests\": {n_req}, \
          \"req_per_s\": {req_s:.1}, \"p50_us\": {p50}, \"p99_us\": {p99}, \
          \"mean_batch_occupancy\": {:.2}}}",
         stats.mean_batch_occupancy()
     );
-    Ok(CoordBench { json, req_per_s: req_s, probe })
+    Ok(CoordBench { json, req_per_s: req_s, p50_us: p50, p99_us: p99, probe, stats })
+}
+
+/// The `batching` block's identity bit: serve the **same** request set
+/// once through the full bucket ladder (requests submitted in a burst so
+/// windows batch and pad) and once with a buckets=[1] ladder (every
+/// request executes as a singleton `mlp_b1` plan), and compare every
+/// response bitwise. Each output row depends only on its own feature
+/// row, so bucketization and padding must not change a single bit.
+fn batching_identity_check(
+    routing: power_mma::coordinator::ShardRouting,
+) -> power_mma::error::Result<bool> {
+    let dir =
+        std::env::temp_dir().join(format!("mma-bench-batchid-{}", std::process::id()));
+    let result = batching_identity_check_in(routing, &dir);
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+fn batching_identity_check_in(
+    routing: power_mma::coordinator::ShardRouting,
+    dir: &std::path::Path,
+) -> power_mma::error::Result<bool> {
+    use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload};
+    use power_mma::runtime::{artifacts, det_input, Runtime};
+
+    artifacts::ensure_artifacts(dir)?;
+    let n = 48; // larger than the biggest bucket: forces at least one full flush
+    let run = |buckets: Vec<usize>| -> power_mma::error::Result<Vec<Vec<f32>>> {
+        let cfg = CoordinatorConfig { routing, buckets, ..Default::default() };
+        let ladder = cfg.ladder();
+        let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
+        let weights = MlpWeights::deterministic(&cfg);
+        let features = cfg.features;
+        let dir2 = dir.to_path_buf();
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            let mut rt = Runtime::cpu(&dir2)?;
+            rt.load_all()?;
+            rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
+            Ok(rt)
+        });
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            let f = det_input(features, i as u64);
+            rxs.push(coord.submit(Payload::Classify { features: f }).1);
+        }
+        let mut outs = Vec::with_capacity(n);
+        for rx in rxs {
+            let r = rx.recv().map_err(|_| power_mma::err!("identity request dropped"))?;
+            outs.push(r.result.map_err(|e| power_mma::err!("identity request failed: {e}"))?);
+        }
+        coord.shutdown();
+        Ok(outs)
+    };
+    let batched = run(CoordinatorConfig::default().buckets)?;
+    let singleton = run(vec![1])?;
+    Ok(batched.len() == singleton.len()
+        && batched.iter().zip(&singleton).all(|(x, y)| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }))
 }
 
 /// Execute a compiled model on f32 inputs through the typed API (the
@@ -514,12 +656,14 @@ fn run_model(
 fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::benchkit::{bench_budget, black_box};
     use power_mma::blas::bf16_gemm::{
-        gemm_bf16_packed_into, gemm_bf16_reference, Bf16Accum, Bf16Scratch, Bf16Src,
+        gemm_bf16_packed_into, gemm_bf16_reference, gemm_bf16_reference_pairs, Bf16Accum,
+        Bf16Scratch, Bf16Src,
     };
     use power_mma::blas::block_gemm::{
         gemm_f32_fused_into, gemm_f32_into, Accum, Epilogue, GemmScratch, PanelB, Par,
     };
     use power_mma::blas::gemm::ref_gemm;
+    use power_mma::coordinator::ShardRouting;
     use power_mma::isa::GerKind;
     use power_mma::kernels::gemm_rp::rp_gemm_program;
     use power_mma::runtime::hlo::bf16_round;
@@ -537,6 +681,13 @@ fn cmd_bench(args: &[String]) -> i32 {
     .opt("size", Some("512"), "GEMM problem size N (NxNxN)")
     .opt("threads", Some(""), "worker counts to sweep (default 1,2,...,available)")
     .opt("budget-ms", Some("400"), "time budget per measurement")
+    .opt(
+        "routing",
+        Some("round-robin"),
+        "request->shard policy for the coordinator benches: round-robin \
+         (default: the load is one model family, so this lets shards=2 \
+         scale) | sticky (the library default path, exercised by CI)",
+    )
     .flag("quick", "CI smoke mode (N=128, short budget)")
     .positional("target", "what to benchmark: serve");
     let m = parse_or_exit(cmd, args);
@@ -544,6 +695,15 @@ fn cmd_bench(args: &[String]) -> i32 {
         eprintln!("unknown bench target '{}' (only: serve)", m.positional(0));
         return 2;
     }
+    let routing = match m.get("routing") {
+        "sticky" => ShardRouting::ModelSticky,
+        "round-robin" => ShardRouting::RoundRobin,
+        other => {
+            eprintln!("unknown --routing '{other}' (expected: sticky | round-robin)");
+            return 2;
+        }
+    };
+    let routing_name = if routing == ShardRouting::ModelSticky { "sticky" } else { "round-robin" };
     let quick = m.flag("quick");
     let size = if quick { 128 } else { m.get_usize("size").unwrap() };
     let budget = Duration::from_millis(if quick { 60 } else { m.get_u64("budget-ms").unwrap() });
@@ -821,6 +981,66 @@ fn cmd_bench(args: &[String]) -> i32 {
         .zip(&c_bf16_widened)
         .zip(&bf16_ref)
         .all(|((x, y), z)| x.to_bits() == y.to_bits() && x.to_bits() == z.to_bits());
+    // the F32Pairs serving-mode contract (serve --bf16-accum f32-pairs):
+    // same packed panels, accumulation chained in f32 over k-pairs (the
+    // MMA rank-2 update order) instead of the widened f64 image — its
+    // own oracle, bitwise
+    let mut c_bf16_pairs = vec![0f32; size * size];
+    let s_bf16_pairs = bench_budget("bf16 packed panels (f32-pairs)", budget, || {
+        gemm_bf16_packed_into(
+            &mut c_bf16_pairs,
+            Bf16Src::F32(&a),
+            Bf16Src::F32(&b),
+            size,
+            size,
+            size,
+            Bf16Accum::F32Pairs,
+            Par::Pool(shared_dev.pool(), avail),
+            &mut bf16_scratch,
+        );
+        black_box(c_bf16_pairs[0]);
+    });
+    let bf16_pairs_ms = s_bf16_pairs.median.as_secs_f64() * 1e3;
+    let pairs_ref = gemm_bf16_reference_pairs(&a, &b, size, size, size);
+    let bf16_pairs_identical =
+        c_bf16_pairs.iter().zip(&pairs_ref).all(|(x, y)| x.to_bits() == y.to_bits());
+    // and end-to-end through the plan: the gemm_bf16 fixture compiled
+    // with the F32Pairs plan option must match the pairs oracle bitwise
+    // (this is exactly what a `--bf16-accum f32-pairs` serving engine
+    // executes)
+    let bf16_meta = match ModelMeta::parse(bf16_art.meta) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("gemm_bf16: bad meta: {e}");
+            return 1;
+        }
+    };
+    let pairs_model = match HloPlanBackend::with_bf16_accum(Bf16Accum::F32Pairs).compile(
+        &shared_dev,
+        bf16_art.name,
+        bf16_art.hlo_text,
+        &bf16_meta,
+    ) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("gemm_bf16: F32Pairs plan compile failed: {e}");
+            return 1;
+        }
+    };
+    let bf16_inputs = det_inputs(&bf16_meta);
+    let plan_pairs_out = {
+        let mut ctx = shared_dev.ctx();
+        run_model(pairs_model.as_ref(), &mut ctx, &bf16_meta, &bf16_inputs)
+    };
+    let (bf16_m, bf16_k) = (bf16_meta.input_shapes[0][0], bf16_meta.input_shapes[0][1]);
+    let bf16_n = bf16_meta.input_shapes[1][1];
+    let plan_pairs_ref =
+        gemm_bf16_reference_pairs(&bf16_inputs[0], &bf16_inputs[1], bf16_m, bf16_n, bf16_k);
+    let plan_pairs_identical = plan_pairs_out.len() == plan_pairs_ref.len()
+        && plan_pairs_out
+            .iter()
+            .zip(&plan_pairs_ref)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
     // Table I modeled on the core simulator: the rank-2 bf16 kernel
     // retires 2x the MACs per instruction of xvf32ger, so at equal issue
     // rates the MACs/cycle ratio approaches 2
@@ -839,6 +1059,12 @@ fn cmd_bench(args: &[String]) -> i32 {
         if bf16_identical { "identical" } else { "DIFFER" },
         fpc_f32 / 2.0,
         fpc_bf16 / 2.0
+    );
+    println!(
+        "bf16 {size}^3  f32-pairs {bf16_pairs_ms:9.2} ms | vs pairs oracle {} | \
+         plan(F32Pairs) vs oracle {}",
+        if bf16_pairs_identical { "identical" } else { "DIFFER" },
+        if plan_pairs_identical { "identical" } else { "DIFFER" }
     );
 
     // -- 6. pool: scoped-spawn vs persistent-pool GEMM, bit-identical ----
@@ -887,14 +1113,29 @@ fn cmd_bench(args: &[String]) -> i32 {
     );
 
     // -- 7. coordinator end-to-end over the plan backend, shards 1 vs 2 --
+    // this bench drives a single model family (classify), so sticky
+    // routing funnels everything through one shard — the round-robin
+    // default keeps shards=1-vs-2 a measurement of engine concurrency;
+    // CI also runs the whole bench under --routing sticky
     let n_coord = if quick { 400 } else { 4000 };
-    let (coord1, coord2) = match (bench_coordinator(n_coord, 1), bench_coordinator(n_coord, 2)) {
-        (Ok(c1), Ok(c2)) => (c1, c2),
-        (Err(e), _) | (_, Err(e)) => {
-            eprintln!("coordinator bench failed: {e}");
-            return 1;
-        }
+    let ladder = power_mma::coordinator::CoordinatorConfig::default().ladder();
+    let shard_opts = |label: &str, shards: usize| CoordBenchOpts {
+        label: label.to_string(),
+        n_req: n_coord,
+        shards,
+        routing,
+        buckets: ladder.clone(),
+        window: Duration::from_millis(2),
+        quiet: false,
     };
+    let (coord1, coord2) =
+        match (bench_coordinator(shard_opts("s1", 1)), bench_coordinator(shard_opts("s2", 2))) {
+            (Ok(c1), Ok(c2)) => (c1, c2),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("coordinator bench failed: {e}");
+                return 1;
+            }
+        };
     let shard_identical = coord1.probe.len() == coord2.probe.len()
         && coord1
             .probe
@@ -907,12 +1148,124 @@ fn cmd_bench(args: &[String]) -> i32 {
         coord2.req_per_s,
         if shard_identical { "identical" } else { "DIFFER" }
     );
-    let numerics_ok = all_identical && pool_gemm_identical && shard_identical && bf16_identical;
 
-    // -- 8. machine-readable report --------------------------------------
+    // -- 8. continuous batching: bucket-ladder + window sweeps, identity -
+    // per-bucket: force a singleton ladder [b] so every window executes
+    // in (and pads to) exactly that compiled bucket — req/s vs p99 shows
+    // the utilization-vs-latency trade of the paper's m dimension
+    let n_batch = if quick { 240 } else { 1200 };
+    let mut per_bucket_rows = Vec::new();
+    for &bkt in &ladder {
+        let cb = match bench_coordinator(CoordBenchOpts {
+            label: format!("b{bkt}"),
+            n_req: n_batch,
+            shards: 1,
+            routing,
+            buckets: vec![bkt],
+            window: Duration::from_millis(2),
+            quiet: true,
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("batching bucket {bkt} bench failed: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "batching bucket {bkt:3}: {:7.0} req/s, p50 {:5} us, p99 {:5} us, occupancy {:.2}",
+            cb.req_per_s,
+            cb.p50_us,
+            cb.p99_us,
+            cb.stats.mean_batch_occupancy()
+        );
+        per_bucket_rows.push(format!(
+            "{{\"bucket\": {bkt}, \"req_per_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"occupancy\": {:.3}}}",
+            cb.req_per_s,
+            cb.p50_us,
+            cb.p99_us,
+            cb.stats.mean_batch_occupancy()
+        ));
+    }
+    // window sweep: the full ladder under three deadlines — the
+    // per-bucket flush counters show where the continuous batcher
+    // actually lands each window
+    let mut window_rows = Vec::new();
+    for &wus in &[500u64, 2000, 8000] {
+        let cb = match bench_coordinator(CoordBenchOpts {
+            label: format!("w{wus}"),
+            n_req: n_batch,
+            shards: 1,
+            routing,
+            buckets: ladder.clone(),
+            window: Duration::from_micros(wus),
+            quiet: true,
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("batching window {wus}us bench failed: {e}");
+                return 1;
+            }
+        };
+        let bucket_cells: Vec<String> = cb
+            .stats
+            .buckets
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"bucket\": {}, \"flushes_full\": {}, \"flushes_deadline\": {}, \
+                     \"flushes_shutdown\": {}, \"rows\": {}, \"occupancy\": {:.3}}}",
+                    s.bucket,
+                    s.full.get(),
+                    s.deadline.get(),
+                    s.shutdown.get(),
+                    s.rows.get(),
+                    s.occupancy()
+                )
+            })
+            .collect();
+        println!(
+            "batching window {wus:5} us: {:7.0} req/s, p50 {:5} us, p99 {:5} us, \
+             occupancy {:.2}",
+            cb.req_per_s,
+            cb.p50_us,
+            cb.p99_us,
+            cb.stats.mean_batch_occupancy()
+        );
+        window_rows.push(format!(
+            "{{\"window_us\": {wus}, \"req_per_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"occupancy\": {:.3}, \"buckets\": [{}]}}",
+            cb.req_per_s,
+            cb.p50_us,
+            cb.p99_us,
+            cb.stats.mean_batch_occupancy(),
+            bucket_cells.join(", ")
+        ));
+    }
+    let batch_identical = match batching_identity_check(routing) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("batched-vs-singleton identity check failed to run: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "batching identity: batched (ladder {ladder:?}) vs singleton responses {}",
+        if batch_identical { "identical" } else { "DIFFER" }
+    );
+    let numerics_ok = all_identical
+        && pool_gemm_identical
+        && shard_identical
+        && bf16_identical
+        && bf16_pairs_identical
+        && plan_pairs_identical
+        && batch_identical;
+
+    // -- 9. machine-readable report --------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"runtime\",\n  \"quick\": {quick},\n  \"size\": {size},\n  \
          \"threads_available\": {avail},\n  \"threads_swept\": {threads:?},\n  \
+         \"routing\": \"{routing_name}\",\n  \
          \"gemm\": [\n    {}\n  ],\n  \
          \"plan_vs_interpreter\": {{\"size\": {size}, \"interpreter_ms\": {interp_ms:.3}, \
          \"plan\": [\n    {}\n  ], \"speedup_best\": {speedup:.3}}},\n  \
@@ -922,6 +1275,9 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"bf16\": {{\"size\": {size}, \"plan_has_dot_bf16\": {plan_has_dot_bf16}, \
          \"widened_ms\": {bf16_widened_ms:.3}, \"packed_ms\": {bf16_packed_ms:.3}, \
          \"packed_vs_widened\": {:.3}, \"identical\": {bf16_identical}, \
+         \"f32pairs_ms\": {bf16_pairs_ms:.3}, \
+         \"f32pairs_identical\": {bf16_pairs_identical}, \
+         \"plan_f32pairs_identical\": {plan_pairs_identical}, \
          \"sim_macs_per_cycle_f32\": {:.3}, \"sim_macs_per_cycle_bf16\": {:.3}, \
          \"sim_macs_per_cycle_ratio\": {macs_ratio:.3}}},\n  \
          \"pool\": {{\"gemm_scoped_ms\": {scoped_ms:.3}, \"gemm_pool_ms\": {pool_ms:.3}, \
@@ -930,6 +1286,11 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"shard_numerics_identical\": {shard_identical}}},\n  \
          \"coordinator\": {},\n  \
          \"coordinator_sharded\": {},\n  \
+         \"batching\": {{\"ladder\": {ladder:?}, \"routing\": \"{routing_name}\", \
+         \"requests_per_run\": {n_batch}, \
+         \"per_bucket\": [\n    {}\n  ], \
+         \"windows\": [\n    {}\n  ], \
+         \"batched_vs_singleton_identical\": {batch_identical}}},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
          \"pass\": {}, \"numerics_identical\": {numerics_ok}}}\n}}\n",
         gemm_rows.join(",\n    "),
@@ -942,6 +1303,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         coord2.req_per_s,
         coord1.json,
         coord2.json,
+        per_bucket_rows.join(",\n    "),
+        window_rows.join(",\n    "),
         speedup >= 3.0
     );
     let out_path = m.get("out");

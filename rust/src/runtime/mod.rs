@@ -204,12 +204,24 @@ impl CompiledModel for InterpretedModel {
 /// several times faster on GEMM-heavy artifacts (measure with `power-mma
 /// bench serve`). The worker budget comes from the [`Device`] of the
 /// executing [`ExecCtx`].
-pub struct HloPlanBackend;
+pub struct HloPlanBackend {
+    opts: plan::PlanOptions,
+}
 
 impl HloPlanBackend {
-    /// The plan backend (stateless: thread policy lives on the device).
+    /// The plan backend with default options (thread policy lives on the
+    /// device; bf16 dots accumulate widened).
     pub fn new() -> HloPlanBackend {
-        HloPlanBackend
+        HloPlanBackend { opts: plan::PlanOptions::default() }
+    }
+
+    /// A plan backend whose `DotBf16` steps run under the given
+    /// accumulation contract — the serving-mode surface for the paper's
+    /// §IV-B `xvbf16ger2` rank-2 f32 chain
+    /// ([`Bf16Accum::F32Pairs`](crate::blas::bf16_gemm::Bf16Accum)):
+    /// `power-mma serve --bf16-accum f32-pairs` builds its engines here.
+    pub fn with_bf16_accum(accum: crate::blas::bf16_gemm::Bf16Accum) -> HloPlanBackend {
+        HloPlanBackend { opts: plan::PlanOptions { bf16_accum: accum } }
     }
 }
 
@@ -232,7 +244,7 @@ impl EngineBackend for HloPlanBackend {
         meta: &ModelMeta,
     ) -> Result<Box<dyn CompiledModel>> {
         let module = parse_and_validate(name, hlo_text, meta)?;
-        let plan = plan::Plan::compile(&module)
+        let plan = plan::Plan::compile_with_options(&module, self.opts)
             .map_err(|e| e.context(format!("compiling plan for {name}")))?;
         let bufs = std::sync::Mutex::new(plan.new_buffers());
         Ok(Box::new(PlanModel { plan, bufs }))
@@ -441,6 +453,48 @@ impl Runtime {
         Ok(result)
     }
 
+    /// Compile a model from an in-memory HLO string (no artifact files on
+    /// disk) — how the batch-bucket ladder is materialized at `load()`
+    /// time. Idempotent by model name: an already-loaded model (e.g. the
+    /// `mlp_b32` AOT fixture) is kept, not recompiled.
+    pub fn load_from_text(&mut self, meta: ModelMeta, hlo_text: &str) -> Result<()> {
+        if self.models.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let exe = self.backend.compile(&self.device, &meta.name, hlo_text, &meta)?;
+        self.models.insert(meta.name.clone(), LoadedModel { meta, exe });
+        Ok(())
+    }
+
+    /// Compile the MLP classifier at every batch size in `buckets`
+    /// (`mlp_b{b}`), synthesizing each bucket's HLO with [`mlp_hlo_text`]
+    /// — the same lowering as the `mlp_b32` AOT fixture, so every bucket
+    /// gets the identical fused plan shape (dot+bias+relu, dot+bias) with
+    /// its own arena sized for its `m`. Buckets already loaded (the b32
+    /// fixture via [`Runtime::load_all`]) are kept as-is. Returns the
+    /// bucket model names. Zero-sized buckets are skipped.
+    pub fn load_mlp_buckets(
+        &mut self,
+        buckets: &[usize],
+        features: usize,
+        hidden: usize,
+        classes: usize,
+    ) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for &b in buckets {
+            if b == 0 {
+                continue;
+            }
+            let meta = mlp_meta(b, features, hidden, classes);
+            let name = meta.name.clone();
+            let text = mlp_hlo_text(b, features, hidden, classes);
+            self.load_from_text(meta, &text)
+                .map_err(|e| e.context(format!("compiling batch bucket {name}")))?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
     /// Read the python-side expected output for the deterministic inputs.
     pub fn expected(&self, name: &str) -> Result<Vec<f32>> {
         let path = self.dir.join(format!("{name}.expected.bin"));
@@ -470,6 +524,59 @@ pub fn det_inputs(meta: &ModelMeta) -> Vec<Vec<f32>> {
         .enumerate()
         .map(|(i, s)| det_input(s.iter().product(), i as u64 + 1))
         .collect()
+}
+
+/// The serving MLP's HLO text at an arbitrary batch size — the exact
+/// lowering of the `mlp_b32` AOT fixture (`jit_mlp_classifier_serving`)
+/// with `m = batch` substituted: same instruction names, same
+/// reshape→broadcast bias idiom, same constant-0/maximum relu, so the
+/// plan compiler produces the identical fused step shape
+/// (`dot_bias_relu` + `dot_bias`) for every bucket of the ladder.
+pub fn mlp_hlo_text(batch: usize, features: usize, hidden: usize, classes: usize) -> String {
+    let (b, f, h, c) = (batch, features, hidden, classes);
+    format!(
+        "HloModule jit_mlp_classifier_serving, entry_computation_layout={{(f32[{b},{f}]{{1,0}}, f32[{f},{h}]{{1,0}}, f32[{h}]{{0}}, f32[{h},{c}]{{1,0}}, f32[{c}]{{0}})->(f32[{b},{c}]{{1,0}})}}\n\
+         \n\
+         ENTRY main.22 {{\n\
+         \x20 Arg_0.1 = f32[{b},{f}]{{1,0}} parameter(0)\n\
+         \x20 Arg_1.2 = f32[{f},{h}]{{1,0}} parameter(1)\n\
+         \x20 dot.8 = f32[{b},{h}]{{1,0}} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 Arg_2.3 = f32[{h}]{{0}} parameter(2)\n\
+         \x20 reshape.9 = f32[1,{h}]{{1,0}} reshape(Arg_2.3)\n\
+         \x20 broadcast.10 = f32[1,{h}]{{1,0}} broadcast(reshape.9), dimensions={{0,1}}\n\
+         \x20 reshape.11 = f32[{h}]{{0}} reshape(broadcast.10)\n\
+         \x20 broadcast.12 = f32[{b},{h}]{{1,0}} broadcast(reshape.11), dimensions={{1}}\n\
+         \x20 add.13 = f32[{b},{h}]{{1,0}} add(dot.8, broadcast.12)\n\
+         \x20 constant.6 = f32[] constant(0)\n\
+         \x20 broadcast.7 = f32[{b},{h}]{{1,0}} broadcast(constant.6), dimensions={{}}\n\
+         \x20 maximum.14 = f32[{b},{h}]{{1,0}} maximum(add.13, broadcast.7)\n\
+         \x20 Arg_3.4 = f32[{h},{c}]{{1,0}} parameter(3)\n\
+         \x20 dot.15 = f32[{b},{c}]{{1,0}} dot(maximum.14, Arg_3.4), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 Arg_4.5 = f32[{c}]{{0}} parameter(4)\n\
+         \x20 reshape.16 = f32[1,{c}]{{1,0}} reshape(Arg_4.5)\n\
+         \x20 broadcast.17 = f32[1,{c}]{{1,0}} broadcast(reshape.16), dimensions={{0,1}}\n\
+         \x20 reshape.18 = f32[{c}]{{0}} reshape(broadcast.17)\n\
+         \x20 broadcast.19 = f32[{b},{c}]{{1,0}} broadcast(reshape.18), dimensions={{1}}\n\
+         \x20 add.20 = f32[{b},{c}]{{1,0}} add(dot.15, broadcast.19)\n\
+         \x20 ROOT tuple.21 = (f32[{b},{c}]{{1,0}}) tuple(add.20)\n\
+         }}\n"
+    )
+}
+
+/// The meta line matching [`mlp_hlo_text`]:
+/// `mlp_b{b};{b}x{f},{f}x{h},{h},{h}x{c},{c};{b}x{c}`.
+pub fn mlp_meta(batch: usize, features: usize, hidden: usize, classes: usize) -> ModelMeta {
+    ModelMeta {
+        name: format!("mlp_b{batch}"),
+        input_shapes: vec![
+            vec![batch, features],
+            vec![features, hidden],
+            vec![hidden],
+            vec![hidden, classes],
+            vec![classes],
+        ],
+        output_shape: vec![batch, classes],
+    }
 }
 
 #[cfg(test)]
@@ -627,6 +734,73 @@ mod tests {
         rt.execute_typed("gemm_f32", &mut ctx, &trefs, &mut out).unwrap();
         for (h, &v) in hout.iter().zip(&via_f32) {
             assert_eq!(*h, f32_to_bf16(v));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn generated_mlp_hlo_reproduces_the_aot_fixture() {
+        // the bucket generator at b=32 must emit the fixture's lowering:
+        // same text (modulo trailing whitespace), same fused plan shape,
+        // bitwise-identical execution
+        let fixture = artifacts::EMBEDDED
+            .iter()
+            .find(|a| a.name == "mlp_b32")
+            .expect("embedded mlp_b32")
+            .hlo_text;
+        let generated = mlp_hlo_text(32, 64, 128, 32);
+        assert_eq!(generated.trim_end(), fixture.trim_end(), "generator drifted from AOT");
+        let plan_of = |text: &str| {
+            let m = hlo::HloModule::parse(text).unwrap();
+            plan::Plan::compile(&m).unwrap()
+        };
+        assert_eq!(
+            plan_of(&generated).step_names(),
+            plan_of(fixture).step_names(),
+            "bucket plans must fuse identically to the fixture plan"
+        );
+    }
+
+    #[test]
+    fn bucket_ladder_rows_match_b32_bitwise() {
+        // a window of r rows executed in bucket b (r <= b) must produce,
+        // row for row, the bits the full b32 batch produces for the same
+        // features — the invariant the continuous batcher's
+        // batched-vs-singleton identity rests on: each GEMM output row
+        // depends only on its own input row
+        let dir = std::env::temp_dir().join(format!("mma-rt-ladder-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        rt.load_all().unwrap();
+        let names = rt.load_mlp_buckets(&[1, 8, 32], 64, 128, 32).unwrap();
+        assert_eq!(names, vec!["mlp_b1", "mlp_b8", "mlp_b32"]);
+        assert_eq!(rt.meta("mlp_b1").unwrap().input_shapes[0], vec![1, 64]);
+        // the b32 name was already loaded from the fixture; the ladder
+        // call must not have replaced it (idempotent by name)
+        assert_eq!(rt.meta("mlp_b32").unwrap().input_shapes[0], vec![32, 64]);
+        let (f, c) = (64usize, 32usize);
+        let x = det_input(32 * f, 1);
+        let w = [det_input(f * 128, 2), det_input(128, 3), det_input(128 * c, 4), det_input(c, 5)];
+        let full = rt
+            .execute("mlp_b32", &[&x, &w[0], &w[1], &w[2], &w[3]])
+            .unwrap();
+        for (bucket, rows) in [(1usize, 1usize), (8, 3), (8, 8)] {
+            // pad a partial window exactly like the batcher does
+            let mut xb = vec![0f32; bucket * f];
+            xb[..rows * f].copy_from_slice(&x[..rows * f]);
+            let out = rt
+                .execute(&format!("mlp_b{bucket}"), &[&xb, &w[0], &w[1], &w[2], &w[3]])
+                .unwrap();
+            for r in 0..rows {
+                for j in 0..c {
+                    assert_eq!(
+                        out[r * c + j].to_bits(),
+                        full[r * c + j].to_bits(),
+                        "bucket {bucket}, row {r}, logit {j} differs from the b32 batch"
+                    );
+                }
+            }
         }
         std::fs::remove_dir_all(&dir).ok();
     }

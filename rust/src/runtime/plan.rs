@@ -219,6 +219,21 @@ pub struct Plan {
     /// ([`PlanInput::Bf16`]) can feed the packers directly — no widening
     /// copy into the arena at all (see [`Plan::run_steps_typed`]).
     param_pack_bf16: Vec<bool>,
+    /// Accumulation contract every `DotBf16` step executes under (from
+    /// [`PlanOptions`]).
+    bf16_accum: Bf16Accum,
+}
+
+/// Compile-time options for [`Plan::compile_with_options`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanOptions {
+    /// Accumulation contract for `DotBf16` steps: the default
+    /// [`Bf16Accum::Widened`] (f64 image, checked against
+    /// `gemm_bf16_reference`) or [`Bf16Accum::F32Pairs`] (the paper's
+    /// §IV-B `xvbf16ger2pp` rank-2 f32 chain, checked against
+    /// `gemm_bf16_reference_pairs`) — the serving-mode switch behind
+    /// `power-mma serve --bf16-accum`.
+    pub bf16_accum: Bf16Accum,
 }
 
 /// Reusable per-model execution state: the arena slots, the GEMM
@@ -846,8 +861,14 @@ impl Plan {
     /// Lower a parsed module into an execution plan, performing every
     /// shape/attribute/operand validation the interpreter would do per
     /// request, then running the fusion rewrite (see the module docs).
-    /// Fails on anything outside the serving op set.
+    /// Fails on anything outside the serving op set. Uses the default
+    /// [`PlanOptions`] (widened bf16 accumulation).
     pub fn compile(module: &HloModule) -> Result<Plan> {
+        Plan::compile_with_options(module, PlanOptions::default())
+    }
+
+    /// [`Plan::compile`] with explicit [`PlanOptions`].
+    pub fn compile_with_options(module: &HloModule, opts: PlanOptions) -> Result<Plan> {
         let instrs = &module.instrs;
         let n = instrs.len();
 
@@ -1306,7 +1327,14 @@ impl Plan {
             max_dot,
             max_bf16,
             param_pack_bf16,
+            bf16_accum: opts.bf16_accum,
         })
+    }
+
+    /// The bf16 accumulation contract this plan's `DotBf16` steps run
+    /// under (from the [`PlanOptions`] it was compiled with).
+    pub fn bf16_accum(&self) -> Bf16Accum {
+        self.bf16_accum
     }
 
     /// Number of compiled steps (≤ instruction count: constants and the
@@ -1622,7 +1650,7 @@ impl Plan {
                         *m,
                         *n,
                         *k,
-                        Bf16Accum::Widened,
+                        self.bf16_accum,
                         step_par,
                         &mut bufs.bf16_scratch,
                     );

@@ -95,9 +95,9 @@ fn coordinator_serves_real_models_end_to_end() {
     let mlp_name = cfg.mlp_model();
     let rt_check = Runtime::cpu(&dir).unwrap();
     let expect = rt_check.expected(&mlp_name).unwrap();
-    let features_all = det_input(cfg.batch_size * cfg.features, 1);
+    let features_all = det_input(cfg.max_bucket() * cfg.features, 1);
     let mut rxs = Vec::new();
-    for r in 0..cfg.batch_size {
+    for r in 0..cfg.max_bucket() {
         let f = features_all[r * cfg.features..(r + 1) * cfg.features].to_vec();
         rxs.push((r, coord.submit(Payload::Classify { features: f }).1));
     }
@@ -127,7 +127,7 @@ fn coordinator_serves_real_models_end_to_end() {
 
     let stats = coord.shutdown();
     assert_eq!(stats.failed.get(), 0);
-    assert!(stats.completed.get() >= cfg.batch_size as u64 + 2);
+    assert!(stats.completed.get() >= cfg.max_bucket() as u64 + 2);
 }
 
 #[test]
