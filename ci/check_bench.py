@@ -54,6 +54,26 @@ def check(report):
     if bf16.get("plan_f32pairs_identical") is not True:
         fail(f"F32Pairs-compiled plan diverges from the pairs oracle: {bf16}")
 
+    # -- int8 engine: quantized plan step, Machine parity, Table I 4x --
+    int8 = need(report, "int8")
+    if int8.get("plan_has_dot_i8") is not True:
+        fail(f"calibrated MLP plan lost its quantized dot_i8 step: {int8}")
+    if int8.get("identical") is not True:
+        fail(f"int8 packed path broke Machine parity or its dequant reference: {int8}")
+    if not int8.get("packed_vs_f32", 0) > 0:
+        fail(f"int8 packed-vs-f32 ratio must be positive: {int8}")
+    if not int8.get("max_abs_err_vs_f32", -1) >= 0:
+        fail(f"int8 accuracy-vs-f32 error must be reported: {int8}")
+    # Table I ordering: one xvi8ger4 retires 4x the MACs of xvf32ger,
+    # rank-2 bf16 only 2x — the sim must rank the integer engine above
+    # the bf16 engine at equal MACs
+    if not int8.get("sim_macs_per_cycle_ratio", 0) > bf16.get("sim_macs_per_cycle_ratio", 10**9):
+        fail(
+            "xvi8ger4 sim MACs/cycle ratio must beat the bf16 ratio: "
+            f"i8 {int8.get('sim_macs_per_cycle_ratio')} vs "
+            f"bf16 {bf16.get('sim_macs_per_cycle_ratio')}"
+        )
+
     # -- coordinator end-to-end ----------------------------------------
     coord = need(report, "coordinator")
     if not coord.get("req_per_s", 0) > 0:
@@ -111,6 +131,8 @@ def check(report):
         f" speedup {acceptance.get('achieved')},"
         f" conv steps {conv.get('plan_steps')},"
         f" bf16 packed-vs-widened {bf16.get('packed_vs_widened')},"
+        f" int8 packed-vs-f32 {int8.get('packed_vs_f32')}"
+        f" (sim ratio {int8.get('sim_macs_per_cycle_ratio')}),"
         f" coord req/s {coord.get('req_per_s')},"
         f" sharded req/s {sharded.get('req_per_s')},"
         f" ladder {ladder},"

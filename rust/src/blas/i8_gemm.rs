@@ -1,0 +1,900 @@
+//! Integer **int8 rank-4 packed-panel GEMM engine** — the serving-side
+//! realization of the paper's Table I claim that `xvi8ger4` retires 4
+//! MACs per instruction per lane with i32 accumulation (§II-B.2's
+//! mixed-signedness deep-learning path: signed i8 X, unsigned u8 Y),
+//! built exactly the way the bf16 engine was built: the win lives in the
+//! **packing layer**, which interleaves the operands as *k-quads* so
+//! every microkernel step consumes four inner-dimension values per fused
+//! update.
+//!
+//! Structure (the BLIS-style skeleton of [`crate::blas::block_gemm`],
+//! re-instantiated for byte-wide element types):
+//!
+//! * operands arrive as [`I8SrcA`] / [`I8SrcB`]: **quantized bytes**
+//!   (`i8` A / `u8` B — packed verbatim) or f32 with the affine
+//!   quantization (scale + zero-point, round-to-nearest) **fused into
+//!   packing** ([`crate::kernels::pack::quantize_i8`] is the scalar
+//!   contract), so the quantized tensor never materializes;
+//! * panels are **k-quad-interleaved** (`kernels::pack::
+//!   {pack_a_panel_i8, pack_b_panel_u8}` and their `_f32_` fused
+//!   variants): step `s` of an A panel holds `MR` adjacent i8 quads for
+//!   `k = 4s .. 4s+3`, a B-panel step holds `NR` u8 quads — the
+//!   `xvi8ger4pp` rank-4 operand layout of [`crate::kernels::gemm_rp`]
+//!   scaled to the blocked engine's micropanels;
+//! * the **`MR×NR = 8×16` microkernel** applies one rank-4 update per
+//!   step over an i32 accumulator tile held in registers across the
+//!   packed `KC` depth;
+//! * the **column (jc) loop is the parallel axis**: whole-`NR` column
+//!   chunks fan out under the same [`Par`] policy as the f32 and bf16
+//!   engines — on the serving path that is the persistent device pool.
+//!
+//! ## Numerics: two contracts, both bit-exact against the Machine
+//!
+//! Per rank-4 step the four mixed-sign products are summed **exactly**
+//! in `i64` (max magnitude `4·128·255 = 130_560`, far inside `i64`) and
+//! folded into the i32 accumulator with one of the ISA's two integer
+//! accumulate ops ([`crate::isa::types`]):
+//!
+//! * [`I8Accum::Wrapping`] — `mod_add_i32` per step: bit-identical to
+//!   the Machine executing the `xvi8ger4` prime + `xvi8ger4pp` chain of
+//!   [`rp_gemm_program`](crate::kernels::gemm_rp::rp_gemm_program)
+//!   (tested against [`gemm_i8_8x16`](crate::kernels::gemm_rp::gemm_i8_8x16));
+//! * [`I8Accum::Saturating`] — `sat_add_i32` per step: bit-identical to
+//!   the `xvi8ger4` prime + `xvi8ger4spp` chain (§II-B.2's "do not wrap
+//!   around" accumulate; tested against
+//!   [`gemm_i8_8x16_sat`](crate::kernels::gemm_rp::gemm_i8_8x16_sat)).
+//!
+//! No first-step special case is needed in either mode (unlike the bf16
+//! `F32Pairs` contract, whose `AccOp::New` prime is observable in zero
+//! signs): a single step's exact sum always fits i32, so folding it into
+//! a zero accumulator — wrapping or saturating — produces exactly the
+//! value `AccOp::New` assigns. The `k % 4` tail needs no masked special
+//! case either: the packers zero-fill the pad lanes, a zero product adds
+//! `+0` to the step's exact sum, and that equals the Machine's prefixed
+//! `pmsk` form (whose disabled products are simply absent from the same
+//! exact sum). And because `KC % 4 == 0`, cache blocks never split a
+//! quad step, so the blocked chain IS the flat chain: the i32 tile is
+//! stored to the image between KC blocks and reloaded bit-for-bit.
+//!
+//! ## Dequantization epilogue
+//!
+//! [`gemm_i8_dequant_into`] serves the quantized f32→f32 path: quantize
+//! fused into packing, the raw Wrapping dot, then at C writeback the
+//! exact affine correction
+//!
+//! ```text
+//! real[i][j] = sa·sb·(dot[i][j] − zp_b·rowsum_a[i] − zp_a·colsum_b[j]
+//!              + k·zp_a·zp_b)  (+ bias[j], then relu)
+//! ```
+//!
+//! with `rowsum_a`/`colsum_b` computed in `i64` by re-quantizing the f32
+//! sources elementwise with the *same* scalar quantizers the packers use
+//! (`O(m·k + k·n)` — cheap next to the `O(m·n·k)` dot). The correction
+//! is exact as long as the true dot does not wrap i32, i.e. for
+//! `k < 2³¹ / 130_560 ≈ 16_448` quads (`k ≲ 65_790`) — far beyond any
+//! serving shape; [`gemm_i8_dequant_reference`] spells the whole
+//! contract out elementwise for tests and the bench accuracy probe.
+
+use crate::blas::block_gemm::{chunk_plan_nr, Par, KC, MC, NC};
+use crate::isa::types::{mod_add_i32, sat_add_i32};
+use crate::kernels::pack::{
+    pack_a_panel_f32_i8, pack_a_panel_i8, pack_b_panel_f32_u8, pack_b_panel_u8, quantize_i8,
+    quantize_u8,
+};
+use std::sync::Mutex;
+
+/// Microkernel register-block rows (the 8 of the Figure 8 `8×16` virtual
+/// accumulator).
+pub const MR: usize = 8;
+/// Microkernel register-block columns (16: four 4-wide accumulators side
+/// by side).
+pub const NR: usize = 16;
+
+// KC blocks must cover whole k-quads: a non-multiple-of-4 block boundary
+// would split a rank-4 step (and force a masked pad mid-chain).
+const _: () = assert!(KC % 4 == 0, "KC must be a multiple of 4: packed int8 steps cover k-quads");
+
+/// Per-tensor affine quantization parameters of one int8 GEMM: A
+/// quantizes to signed i8 with `(a_scale, a_zp)`, B to unsigned u8 with
+/// `(b_scale, b_zp)` — the §II-B.2 mixed-signedness operand split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub a_scale: f32,
+    pub a_zp: i32,
+    pub b_scale: f32,
+    pub b_zp: i32,
+}
+
+/// Where the signed A operand comes from. Both variants pack to the same
+/// quad-interleaved i8 panels.
+#[derive(Clone, Copy)]
+pub enum I8SrcA<'a> {
+    /// Row-major f32 storage; the affine f32→i8 quantization is fused
+    /// into packing ([`quantize_i8`]).
+    F32 { data: &'a [f32], scale: f32, zp: i32 },
+    /// Row-major pre-quantized i8 bytes, packed verbatim.
+    Q(&'a [i8]),
+}
+
+/// Where the unsigned B operand comes from (see [`I8SrcA`]).
+#[derive(Clone, Copy)]
+pub enum I8SrcB<'a> {
+    F32 { data: &'a [f32], scale: f32, zp: i32 },
+    Q(&'a [u8]),
+}
+
+impl I8SrcA<'_> {
+    /// Number of elements in the backing storage.
+    pub fn len(&self) -> usize {
+        match self {
+            I8SrcA::F32 { data, .. } => data.len(),
+            I8SrcA::Q(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pack an A micropanel (rows `i0..i0+rows` × columns `k0..k0+kc`).
+    #[allow(clippy::too_many_arguments)]
+    fn pack_a(
+        &self,
+        lda: usize,
+        i0: usize,
+        rows: usize,
+        k0: usize,
+        kc: usize,
+        mr: usize,
+        out: &mut [i8],
+    ) {
+        match self {
+            I8SrcA::F32 { data, scale, zp } => {
+                pack_a_panel_f32_i8(data, *scale, *zp, lda, i0, rows, k0, kc, mr, out)
+            }
+            I8SrcA::Q(a) => pack_a_panel_i8(a, lda, i0, rows, k0, kc, mr, out),
+        }
+    }
+}
+
+impl I8SrcB<'_> {
+    /// Number of elements in the backing storage.
+    pub fn len(&self) -> usize {
+        match self {
+            I8SrcB::F32 { data, .. } => data.len(),
+            I8SrcB::Q(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pack a B micropanel (rows `k0..k0+kc` × columns `j0..j0+cols`).
+    #[allow(clippy::too_many_arguments)]
+    fn pack_b(
+        &self,
+        ldb: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        cols: usize,
+        nr: usize,
+        out: &mut [u8],
+    ) {
+        match self {
+            I8SrcB::F32 { data, scale, zp } => {
+                pack_b_panel_f32_u8(data, *scale, *zp, ldb, k0, kc, j0, cols, nr, out)
+            }
+            I8SrcB::Q(b) => pack_b_panel_u8(b, ldb, k0, kc, j0, cols, nr, out),
+        }
+    }
+}
+
+/// Accumulation mode of the int8 microkernel — each mode is bit-exact
+/// against one Machine chain (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum I8Accum {
+    /// 32-bit modulo accumulate per rank-4 step (`mod_add_i32`) — the
+    /// `xvi8ger4pp` chain, the default integer accumulation model and
+    /// what the plan's `DotI8` step executes.
+    #[default]
+    Wrapping,
+    /// Saturating accumulate per rank-4 step (`sat_add_i32`) — the
+    /// `xvi8ger4spp` chain (§II-B.2's "do not wrap around" form).
+    Saturating,
+}
+
+/// Reusable scratch for the int8 engine: the i32 accumulation image of
+/// `C` (column-chunk-blocked during the parallel phase) plus one
+/// packed-B-block and packed-A-panel buffer per column-chunk worker —
+/// panels are bytes, a quarter the footprint of the f32 engine's — and
+/// the `i64` row/column quantized sums of the dequantize correction.
+/// Hold one per compiled plan and steady-state requests allocate
+/// nothing.
+#[derive(Default)]
+pub struct I8Scratch {
+    ci32: Vec<i32>,
+    bp: Vec<Vec<u8>>,
+    ap: Vec<Vec<i8>>,
+    rs: Vec<i64>,
+    cs: Vec<i64>,
+}
+
+impl I8Scratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> I8Scratch {
+        I8Scratch::default()
+    }
+
+    /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
+    /// workers allocates nothing.
+    pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
+        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), NR);
+        self.reserve_chunks(m, n, k, nchunks, cols_per);
+        if self.rs.len() < m {
+            self.rs.resize(m, 0);
+        }
+        if self.cs.len() < n {
+            self.cs.resize(n, 0);
+        }
+    }
+
+    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
+        let c_need = m * n;
+        if self.ci32.len() < c_need {
+            self.ci32.resize(c_need, 0);
+        }
+        let steps = KC.min(k.max(1)).div_ceil(4);
+        let bp_need = steps * 4 * NC.min(cols_per.max(NR));
+        if self.bp.len() < nchunks {
+            self.bp.resize_with(nchunks, Vec::new);
+        }
+        for b in &mut self.bp[..nchunks] {
+            if b.len() < bp_need {
+                b.resize(bp_need, 0);
+            }
+        }
+        let ap_need = steps * 4 * MR;
+        if self.ap.len() < nchunks {
+            self.ap.resize_with(nchunks, Vec::new);
+        }
+        for a in &mut self.ap[..nchunks] {
+            if a.len() < ap_need {
+                a.resize(ap_need, 0);
+            }
+        }
+    }
+}
+
+/// The stepwise reference of both integer contracts, spelled out without
+/// packing or tiling: per output element, walk the k-quads in ascending
+/// order, sum each quad's four mixed-sign products **exactly** in `i64`
+/// (pad lanes of the `k % 4` tail contribute `+0`), and fold the step
+/// sum into the i32 accumulator with the contract's accumulate op. This
+/// flat chain IS the blocked chain (`KC % 4 == 0`, so cache blocks never
+/// split a quad), and it replays the Machine's `xvi8ger4` prime +
+/// `xvi8ger4[s]pp` loop exactly (a single step sum always fits i32, so
+/// fold-into-zero equals `AccOp::New`). The packed engine must match
+/// this bit for bit; tests additionally pin it to `isa::exec` via
+/// [`gemm_i8_8x16`](crate::kernels::gemm_rp::gemm_i8_8x16).
+pub fn gemm_i8_reference(
+    a: &[i8],
+    b: &[u8],
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: I8Accum,
+) -> Vec<i32> {
+    let steps = k.div_ceil(4);
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for s in 0..steps {
+                let mut sum = 0i64;
+                for kl in 0..4 {
+                    let kk = 4 * s + kl;
+                    if kk < k {
+                        sum += i64::from(a[i * k + kk]) * i64::from(b[kk * n + j]);
+                    }
+                }
+                acc = match accum {
+                    I8Accum::Wrapping => mod_add_i32(acc, sum),
+                    I8Accum::Saturating => sat_add_i32(acc, sum),
+                };
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// The elementwise reference of the **quantized f32→f32 serving path**
+/// ([`gemm_i8_dequant_into`]): quantize both operands with the scalar
+/// quantizers, run the Wrapping integer dot ([`gemm_i8_reference`]),
+/// then apply the exact affine correction and the optional bias/relu
+/// epilogue. The scale product is formed in `f64` and narrowed once per
+/// element; bias adds and relu happen in f32 after the narrowing — the
+/// packed engine's writeback must match this bit for bit.
+pub fn gemm_i8_dequant_reference(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    q: &QuantParams,
+    bias: Option<&[f32]>,
+    relu: bool,
+) -> Vec<f32> {
+    let qa: Vec<i8> = a.iter().map(|&v| quantize_i8(v, q.a_scale, q.a_zp)).collect();
+    let qb: Vec<u8> = b.iter().map(|&v| quantize_u8(v, q.b_scale, q.b_zp)).collect();
+    let dot = gemm_i8_reference(&qa, &qb, m, n, k, I8Accum::Wrapping);
+    let rs: Vec<i64> =
+        (0..m).map(|i| qa[i * k..(i + 1) * k].iter().map(|&v| i64::from(v)).sum()).collect();
+    let cs: Vec<i64> =
+        (0..n).map(|j| (0..k).map(|kk| i64::from(qb[kk * n + j])).sum()).collect();
+    let (za, zb) = (i64::from(q.a_zp), i64::from(q.b_zp));
+    let ss = f64::from(q.a_scale) * f64::from(q.b_scale);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let centered =
+                i64::from(dot[i * n + j]) - zb * rs[i] - za * cs[j] + (k as i64) * za * zb;
+            let mut v = (ss * centered as f64) as f32;
+            if let Some(bias) = bias {
+                v += bias[j];
+            }
+            if relu {
+                v = v.max(0.0);
+            }
+            c[i * n + j] = v;
+        }
+    }
+    c
+}
+
+/// `C = A·B` over quad-interleaved int8 panels into a caller-provided
+/// raw **i32** `c` (`m×n`, row-major, fully overwritten) — the
+/// Machine-parity surface. `a` is `m×k` signed, `b` is `k×n` unsigned,
+/// both row-major and contiguous, each either pre-quantized bytes or f32
+/// quantized during packing ([`I8SrcA`]/[`I8SrcB`]). The column chunks
+/// are distributed per `par` and drained before the call returns. See
+/// [`I8Accum`] for the two bit-exact accumulation contracts.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed_into(
+    c: &mut [i32],
+    a: I8SrcA<'_>,
+    b: I8SrcB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: I8Accum,
+    par: Par<'_>,
+    scratch: &mut I8Scratch,
+) {
+    assert_eq!(c.len(), m * n, "C must be m*n");
+    let (nchunks, cols_per) = run_chunks(a, b, m, n, k, accum, par, scratch);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // writeback: de-block the column chunks of the i32 image
+    let ci32 = &scratch.ci32;
+    for w in 0..nchunks {
+        let j0 = w * cols_per;
+        let wcols = cols_per.min(n - j0);
+        let cw = &ci32[m * cols_per * w..m * cols_per * w + m * wcols];
+        for i in 0..m {
+            c[i * n + j0..i * n + j0 + wcols].copy_from_slice(&cw[i * wcols..(i + 1) * wcols]);
+        }
+    }
+}
+
+/// Optional fused writeback tail of the dequantized path — the same
+/// bias/relu shapes the f32 engine's `Epilogue` fuses behind a `dot`.
+#[derive(Clone, Copy)]
+pub enum I8Epilogue<'a> {
+    None,
+    /// `+ bias[j]` per output column (`bias.len() == n`).
+    Bias(&'a [f32]),
+    /// `max(0, · + bias[j])`.
+    BiasRelu(&'a [f32]),
+}
+
+/// The quantized **f32→f32 serving path**: affine-quantize both f32
+/// operands during packing (`q`), run the Wrapping rank-4 integer dot,
+/// and dequantize at C writeback with the exact zero-point correction
+/// (plus the optional bias/relu tail). Bitwise equal to
+/// [`gemm_i8_dequant_reference`] on the same inputs — and the integer
+/// dot underneath is the same Machine-parity chain
+/// [`gemm_i8_packed_into`] exposes raw.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_dequant_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    q: &QuantParams,
+    epi: I8Epilogue<'_>,
+    par: Par<'_>,
+    scratch: &mut I8Scratch,
+) {
+    assert_eq!(c.len(), m * n, "C must be m*n");
+    let sa = I8SrcA::F32 { data: a, scale: q.a_scale, zp: q.a_zp };
+    let sb = I8SrcB::F32 { data: b, scale: q.b_scale, zp: q.b_zp };
+    let (nchunks, cols_per) = run_chunks(sa, sb, m, n, k, I8Accum::Wrapping, par, scratch);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // the correction's row/column sums: re-quantize the f32 sources with
+    // the same scalar quantizers the packers used — identical values by
+    // construction, O(m·k + k·n)
+    if scratch.rs.len() < m {
+        scratch.rs.resize(m, 0);
+    }
+    if scratch.cs.len() < n {
+        scratch.cs.resize(n, 0);
+    }
+    for (i, slot) in scratch.rs[..m].iter_mut().enumerate() {
+        *slot = a[i * k..(i + 1) * k]
+            .iter()
+            .map(|&v| i64::from(quantize_i8(v, q.a_scale, q.a_zp)))
+            .sum();
+    }
+    for (j, slot) in scratch.cs[..n].iter_mut().enumerate() {
+        *slot = (0..k).map(|kk| i64::from(quantize_u8(b[kk * n + j], q.b_scale, q.b_zp))).sum();
+    }
+    let (za, zb) = (i64::from(q.a_zp), i64::from(q.b_zp));
+    let ss = f64::from(q.a_scale) * f64::from(q.b_scale);
+    let (ci32, rs, cs) = (&scratch.ci32, &scratch.rs, &scratch.cs);
+    for w in 0..nchunks {
+        let j0 = w * cols_per;
+        let wcols = cols_per.min(n - j0);
+        let cw = &ci32[m * cols_per * w..m * cols_per * w + m * wcols];
+        for i in 0..m {
+            let crow = &mut c[i * n + j0..i * n + j0 + wcols];
+            let srow = &cw[i * wcols..(i + 1) * wcols];
+            for (jl, (dst, &dot)) in crow.iter_mut().zip(srow).enumerate() {
+                let j = j0 + jl;
+                let centered =
+                    i64::from(dot) - zb * rs[i] - za * cs[j] + (k as i64) * za * zb;
+                let mut v = (ss * centered as f64) as f32;
+                match epi {
+                    I8Epilogue::None => {}
+                    I8Epilogue::Bias(bias) => v += bias[j],
+                    I8Epilogue::BiasRelu(bias) => v = (v + bias[j]).max(0.0),
+                }
+                *dst = v;
+            }
+        }
+    }
+}
+
+/// The shared parallel phase: pack, fan the column chunks out per `par`,
+/// and leave the accumulated i32 image chunk-blocked in `scratch.ci32`.
+/// Returns the chunk plan so each caller can de-block its own writeback.
+#[allow(clippy::too_many_arguments)]
+fn run_chunks(
+    a: I8SrcA<'_>,
+    b: I8SrcB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: I8Accum,
+    par: Par<'_>,
+    scratch: &mut I8Scratch,
+) -> (usize, usize) {
+    assert_eq!(a.len(), m * k, "A must be m*k");
+    assert_eq!(b.len(), k * n, "B must be k*n");
+    if m == 0 || n == 0 {
+        return (0, 0);
+    }
+    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), NR);
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
+    let ci32 = &mut scratch.ci32[..m * n];
+    ci32.fill(0);
+    if k > 0 {
+        // Per-chunk state behind per-index mutexes (worker w locks only
+        // entry w — uncontended, they exist to keep the closure `Fn`);
+        // chunk w owns the contiguous m×wcols block of the i32 image for
+        // columns [w*cols_per, w*cols_per + wcols), like the f32 engine.
+        struct Chunk<'s> {
+            ci32: &'s mut [i32],
+            bp: &'s mut [u8],
+            ap: &'s mut [i8],
+        }
+        let mut chunks: Vec<Mutex<Chunk<'_>>> = Vec::with_capacity(nchunks);
+        let mut rest: &mut [i32] = ci32;
+        for (w, (bpb, apb)) in
+            scratch.bp.iter_mut().zip(scratch.ap.iter_mut()).take(nchunks).enumerate()
+        {
+            let wcols = cols_per.min(n - w * cols_per);
+            let (cw, r) = rest.split_at_mut(m * wcols);
+            rest = r;
+            chunks.push(Mutex::new(Chunk { ci32: cw, bp: bpb, ap: apb }));
+        }
+        let chunks = &chunks;
+        par.run(nchunks, &|w| {
+            let mut guard = chunks[w].lock().unwrap_or_else(|p| p.into_inner());
+            let ch = &mut *guard;
+            let j0 = w * cols_per;
+            let wcols = cols_per.min(n - j0);
+            col_worker(ch.ci32, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+        });
+    }
+    (nchunks, cols_per)
+}
+
+/// One worker's share: all `m` rows of columns `j0 .. j0+wcols`, the
+/// whole `k` depth, walked in NC/KC cache blocks with `kc` ascending
+/// (the bit-exactness order). The worker packs its own quad-interleaved
+/// B panels per (NC, kc) block and sweeps each packed `MR×kc` A
+/// micropanel across the chunk's `NR` panels.
+#[allow(clippy::too_many_arguments)]
+fn col_worker(
+    ci32: &mut [i32],
+    a: &I8SrcA<'_>,
+    b: &I8SrcB<'_>,
+    bp: &mut [u8],
+    ap: &mut [i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    wcols: usize,
+    accum: I8Accum,
+) {
+    for jc in (0..wcols).step_by(NC) {
+        let ncl = NC.min(wcols - jc);
+        let n_panels = ncl.div_ceil(NR);
+        for kc0 in (0..k).step_by(KC) {
+            let kcl = KC.min(k - kc0);
+            let steps = kcl.div_ceil(4);
+            let bpl = &mut bp[..n_panels * steps * NR * 4];
+            for jp in 0..n_panels {
+                let jabs = j0 + jc + jp * NR;
+                let cols = NR.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * steps * NR * 4..(jp + 1) * steps * NR * 4];
+                b.pack_b(n, kc0, kcl, jabs, cols, NR, panel);
+            }
+            let bpl = &*bpl;
+            let apl = &mut ap[..steps * MR * 4];
+            for ic in (0..m).step_by(MC) {
+                let mcl = MC.min(m - ic);
+                for ir in (0..mcl).step_by(MR) {
+                    let gi = ic + ir;
+                    let mrl = MR.min(m - gi);
+                    a.pack_a(k, gi, mrl, kc0, kcl, MR, apl);
+                    for jp in 0..n_panels {
+                        let jloc = jc + jp * NR;
+                        let nrl = NR.min(wcols - jloc);
+                        let bpp = &bpl[jp * steps * NR * 4..(jp + 1) * steps * NR * 4];
+                        microkernel_i8(ci32, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, accum);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The `MR×NR` rank-4 microkernel: loads the running i32 sums of one `C`
+/// register block, applies `steps` rank-4 updates from the
+/// quad-interleaved panels — each step's four products summed exactly in
+/// `i64` and folded with the contract's accumulate op — and stores the
+/// sums back. Only the `mrl×nrl` valid corner is loaded/stored;
+/// zero-padded panel lanes are computed and discarded.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_i8(
+    ci32: &mut [i32],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[i8],
+    bp: &[u8],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+    accum: I8Accum,
+) {
+    let mut acc = [0i32; MR * NR];
+    for i in 0..mrl {
+        let crow = &ci32[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
+    }
+    for s in 0..steps {
+        let ar = &ap[s * MR * 4..(s + 1) * MR * 4];
+        let br = &bp[s * NR * 4..(s + 1) * NR * 4];
+        // widen each lane exactly once per step
+        let mut bw = [0i64; 4 * NR];
+        for (slot, &v) in bw.iter_mut().zip(br) {
+            *slot = i64::from(v);
+        }
+        for i in 0..MR {
+            let x0 = i64::from(ar[i * 4]);
+            let x1 = i64::from(ar[i * 4 + 1]);
+            let x2 = i64::from(ar[i * 4 + 2]);
+            let x3 = i64::from(ar[i * 4 + 3]);
+            let row = &mut acc[i * NR..(i + 1) * NR];
+            match accum {
+                I8Accum::Wrapping => {
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        let sum = x0 * bw[j * 4]
+                            + x1 * bw[j * 4 + 1]
+                            + x2 * bw[j * 4 + 2]
+                            + x3 * bw[j * 4 + 3];
+                        *slot = mod_add_i32(*slot, sum);
+                    }
+                }
+                I8Accum::Saturating => {
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        let sum = x0 * bw[j * 4]
+                            + x1 * bw[j * 4 + 1]
+                            + x2 * bw[j * 4 + 2]
+                            + x3 * bw[j * 4 + 3];
+                        *slot = sat_add_i32(*slot, sum);
+                    }
+                }
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut ci32[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm_rp::{gemm_i8_8x16, gemm_i8_8x16_sat};
+    use crate::rt::ThreadPool;
+    use crate::testkit::{check, Rng};
+
+    fn run_packed(
+        a: I8SrcA<'_>,
+        b: I8SrcB<'_>,
+        m: usize,
+        n: usize,
+        k: usize,
+        accum: I8Accum,
+        par: Par<'_>,
+    ) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        let mut scratch = I8Scratch::new();
+        gemm_i8_packed_into(&mut c, a, b, m, n, k, accum, par, &mut scratch);
+        c
+    }
+
+    fn rand_q(rng: &mut Rng, m: usize, n: usize, k: usize) -> (Vec<i8>, Vec<u8>) {
+        let a: Vec<i8> = (0..m * k).map(|_| rng.irange(-128, 127) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.irange(0, 255) as u8).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn both_contracts_match_reference_across_shapes_and_policies() {
+        // shapes straddling MR/NR/KC boundaries, k % 4 tails included
+        let pool = ThreadPool::new("i8-test", 4);
+        let mut rng = Rng::new(0x18a4);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 1, 5),
+            (3, 5, 9),
+            (8, 16, 27),
+            (9, 17, 31),
+            (16, 33, KC + 3),
+            (8, 300, 9),
+            (33, 70, 40),
+        ] {
+            let (a, b) = rand_q(&mut rng, m, n, k);
+            for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+                let expect = gemm_i8_reference(&a, &b, m, n, k, accum);
+                for par in [Par::Seq, Par::Scoped(3), Par::Pool(&pool, 3), Par::Pool(&pool, 4)] {
+                    let got = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), m, n, k, accum, par);
+                    assert_eq!(got, expect, "m={m} n={n} k={k} {accum:?}");
+                }
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn f32_and_quantized_sources_are_bit_identical() {
+        // feeding f32 sources (quantize fused into packing) must equal
+        // pre-quantizing with the scalar contract and feeding raw bytes
+        check("i8 f32 vs quantized sources", 6, |rng: &mut Rng| {
+            let (m, n, k) = (rng.range(1, 20), rng.range(1, 40), rng.range(1, 30));
+            let (qp_a, zp_a) = (0.043f32, rng.irange(-16, 16) as i32);
+            let (qp_b, zp_b) = (0.021f32, rng.irange(96, 160) as i32);
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let qa: Vec<i8> = a.iter().map(|&v| quantize_i8(v, qp_a, zp_a)).collect();
+            let qb: Vec<u8> = b.iter().map(|&v| quantize_u8(v, qp_b, zp_b)).collect();
+            for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+                let from_f32 = run_packed(
+                    I8SrcA::F32 { data: &a, scale: qp_a, zp: zp_a },
+                    I8SrcB::F32 { data: &b, scale: qp_b, zp: zp_b },
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Par::Seq,
+                );
+                let from_q = run_packed(I8SrcA::Q(&qa), I8SrcB::Q(&qb), m, n, k, accum, Par::Seq);
+                assert_eq!(from_f32, from_q, "m={m} n={n} k={k} {accum:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn wrapping_matches_the_machine_kernel_bitwise() {
+        // the Machine-parity contract on its native 8xKx16 tile: the
+        // packed engine must reproduce the xvi8ger4(pp) chain of
+        // isa::exec exactly — including k % 4, which the Machine handles
+        // with the prefixed pmsk form and we handle with zero-padded
+        // quad lanes
+        let mut rng = Rng::new(0x8416);
+        for &k in &[1usize, 2, 3, 4, 5, 7, 8, 11, 16, 24] {
+            let x: Vec<i8> = (0..8 * k).map(|_| rng.irange(-128, 127) as i8).collect();
+            let y: Vec<u8> = (0..16 * k).map(|_| rng.irange(0, 255) as u8).collect();
+            let machine = gemm_i8_8x16(&x, &y, k).unwrap();
+            // engine B is k x n: transpose y (16 x k row-major)
+            let mut b = vec![0u8; k * 16];
+            for j in 0..16 {
+                for kk in 0..k {
+                    b[kk * 16 + j] = y[j * k + kk];
+                }
+            }
+            let got = run_packed(I8SrcA::Q(&x), I8SrcB::Q(&b), 8, 16, k, I8Accum::Wrapping, Par::Seq);
+            for i in 0..8 {
+                for j in 0..16 {
+                    assert_eq!(got[i * 16 + j], machine[i][j], "k={k} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_matches_the_machine_sat_kernel_where_it_bites() {
+        // drive the exact chain past i32::MIN so spp visibly clamps:
+        // every product pinned at -128*255, plus a random tail
+        let mut rng = Rng::new(0x54a7);
+        let k = 4 * 16_500 + 3; // wraps i32 ~16.4k steps in, then a pmsk tail
+        let mut x = vec![-128i8; 8 * k];
+        let mut y = vec![255u8; 16 * k];
+        // randomize every row's k % 4 tail so the pmsk/zero-pad step
+        // carries non-constant values
+        for i in 0..8 {
+            for kk in k - 3..k {
+                x[i * k + kk] = rng.irange(-128, 127) as i8;
+            }
+        }
+        for j in 0..16 {
+            for kk in k - 3..k {
+                y[j * k + kk] = rng.irange(0, 255) as u8;
+            }
+        }
+        let machine = gemm_i8_8x16_sat(&x, &y, k).unwrap();
+        let mut b = vec![0u8; k * 16];
+        for j in 0..16 {
+            for kk in 0..k {
+                b[kk * 16 + j] = y[j * k + kk];
+            }
+        }
+        let got = run_packed(I8SrcA::Q(&x), I8SrcB::Q(&b), 8, 16, k, I8Accum::Saturating, Par::Seq);
+        for i in 0..8 {
+            for j in 0..16 {
+                assert_eq!(got[i * 16 + j], machine[i][j], "({i},{j})");
+            }
+        }
+        // and the contracts genuinely diverged on this input
+        let wrapped = run_packed(I8SrcA::Q(&x), I8SrcB::Q(&b), 8, 16, k, I8Accum::Wrapping, Par::Seq);
+        assert_ne!(got, wrapped, "saturation must be observable");
+    }
+
+    #[test]
+    fn dequant_epilogue_matches_reference_bitwise() {
+        let mut rng = Rng::new(0xdeca);
+        let q = QuantParams { a_scale: 0.019, a_zp: -5, b_scale: 0.037, b_zp: 131 };
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 9), (9, 17, 31), (8, 300, 9)] {
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let bias = rng.f32_vec(n);
+            let mut scratch = I8Scratch::new();
+            for (epi, want_bias, want_relu) in [
+                (I8Epilogue::None, None, false),
+                (I8Epilogue::Bias(&bias), Some(&bias[..]), false),
+                (I8Epilogue::BiasRelu(&bias), Some(&bias[..]), true),
+            ] {
+                let mut c = vec![0f32; m * n];
+                gemm_i8_dequant_into(&mut c, &a, &b, m, n, k, &q, epi, Par::Seq, &mut scratch);
+                let expect =
+                    gemm_i8_dequant_reference(&a, &b, m, n, k, &q, want_bias, want_relu);
+                let gb: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+                let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, eb, "m={m} n={n} k={k} relu={want_relu}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_policy_never_changes_bits() {
+        let pool = ThreadPool::new("i8-par", 3);
+        let mut rng = Rng::new(0x7a12);
+        for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+            for &(m, n, k) in &[(8usize, 48usize, 27usize), (16, 300, 9), (5, 33, 64)] {
+                let (a, b) = rand_q(&mut rng, m, n, k);
+                let seq = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), m, n, k, accum, Par::Seq);
+                for par in [Par::Scoped(3), Par::Pool(&pool, 2), Par::Pool(&pool, 3)] {
+                    let got = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), m, n, k, accum, par);
+                    assert_eq!(got, seq, "m={m} n={n} k={k} {accum:?}");
+                }
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_and_degenerate_shapes_work() {
+        let mut scratch = I8Scratch::new();
+        let mut rng = Rng::new(0x5d);
+        let (a1, b1) = rand_q(&mut rng, 20, 36, 24);
+        let mut c1 = vec![0i32; 20 * 36];
+        gemm_i8_packed_into(
+            &mut c1,
+            I8SrcA::Q(&a1),
+            I8SrcB::Q(&b1),
+            20,
+            36,
+            24,
+            I8Accum::Wrapping,
+            Par::Seq,
+            &mut scratch,
+        );
+        let (a2, b2) = rand_q(&mut rng, 3, 4, 5);
+        let mut c2 = vec![0i32; 3 * 4];
+        gemm_i8_packed_into(
+            &mut c2,
+            I8SrcA::Q(&a2),
+            I8SrcB::Q(&b2),
+            3,
+            4,
+            5,
+            I8Accum::Wrapping,
+            Par::Seq,
+            &mut scratch,
+        );
+        assert_eq!(c1, gemm_i8_reference(&a1, &b1, 20, 36, 24, I8Accum::Wrapping));
+        assert_eq!(c2, gemm_i8_reference(&a2, &b2, 3, 4, 5, I8Accum::Wrapping));
+        // k = 0 -> all zeros (the empty-sum contract)
+        let mut c = vec![9i32; 6];
+        gemm_i8_packed_into(
+            &mut c,
+            I8SrcA::Q(&[]),
+            I8SrcB::Q(&[]),
+            2,
+            3,
+            0,
+            I8Accum::Wrapping,
+            Par::Seq,
+            &mut scratch,
+        );
+        assert_eq!(c, vec![0i32; 6]);
+    }
+
+    #[test]
+    fn quantization_actually_bites() {
+        // a value off the int8 grid must quantize before multiplying —
+        // the packed path models xvi8ger4 inputs, not f32 inputs
+        let q = QuantParams { a_scale: 0.1, a_zp: 0, b_scale: 1.0, b_zp: 0 };
+        let a = [0.333f32];
+        let b = [1.0f32];
+        let mut c = [0f32; 1];
+        let mut scratch = I8Scratch::new();
+        gemm_i8_dequant_into(&mut c, &a, &b, 1, 1, 1, &q, I8Epilogue::None, Par::Seq, &mut scratch);
+        assert_eq!(c[0].to_bits(), 0.3f32.to_bits(), "0.333 lands on the 0.1-step grid");
+        assert_ne!(c[0].to_bits(), 0.333f32.to_bits());
+    }
+}

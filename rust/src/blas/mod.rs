@@ -18,12 +18,20 @@
 //!   path), packing straight from raw bf16 bits or fusing the f32→bf16
 //!   round into the packers; two bit-exact accumulation contracts (see
 //!   its module docs).
+//! * [`i8_gemm`] — the integer quantized engine: `8×16` rank-4
+//!   microkernel over quad-interleaved i8/u8 panels (the `xvi8ger4`
+//!   operand layout, Table I's 4× MACs-per-instruction path) with i32
+//!   accumulators, affine quantize fused into packing from f32 sources,
+//!   two Machine-bit-exact accumulation contracts (wrapping
+//!   `xvi8ger4pp` / saturating `xvi8ger4spp`), and a dequantize (+
+//!   bias/relu) epilogue at C writeback.
 //! * [`lu`] — blocked right-looking LU with partial pivoting (`dgetrf`,
 //!   `dgetf2`, `dtrsm`, `dlaswp`) and triangular solves: the computational
 //!   core of HPL.
 
 pub mod bf16_gemm;
 pub mod block_gemm;
+pub mod i8_gemm;
 pub mod gemm;
 pub mod level1;
 pub mod level2;

@@ -1014,6 +1014,72 @@ mod tests {
     }
 
     #[test]
+    fn deadline_and_shutdown_racing_on_a_partial_window_flush_exactly_once() {
+        // the PR 6 deflake follow-up, now deterministic on a manual
+        // clock: a partially-filled window whose deadline has already
+        // expired when shutdown() lands. The drain loop may notice the
+        // expired deadline first (Deadline flush, then an empty-window
+        // shutdown that flushes nothing) or take the queued Shutdown
+        // first (Shutdown flush) — scheduling picks one — but the rows
+        // must scatter back exactly once either way, and the BucketStat
+        // counters must record exactly one partial flush of 3 rows.
+        for round in 0..20 {
+            let (clock, time) = Clock::manual();
+            let cfg = CoordinatorConfig {
+                buckets: vec![8],
+                max_delay: Duration::from_secs(60),
+                clock,
+                ..Default::default()
+            };
+            let (coord, calls) = start_mock(cfg.clone(), None);
+            let rxs: Vec<_> = (0..3)
+                .map(|i| {
+                    let mut f = vec![0f32; cfg.features];
+                    f[0] = i as f32 * 10.0;
+                    coord.submit(Payload::Classify { features: f }).1
+                })
+                .collect();
+            // all three submissions happen-before the advance, so the
+            // deadline can only expire with the full window visible —
+            // no interleaving can split the three rows across flushes
+            time.advance(Duration::from_secs(61));
+            // wake the engine loop so the Deadline path gets a chance to
+            // race the Shutdown message that follows immediately
+            let (_, grx) = coord.submit(Payload::Gemm {
+                model: "gemm_f32".into(),
+                x: vec![1.0],
+                y: vec![1.0],
+            });
+            let stats = coord.shutdown();
+            assert!(grx.recv().unwrap().result.is_ok(), "round {round}");
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().expect("row must come back");
+                let row = resp.result.expect("row must succeed");
+                assert_eq!(row[0], i as f32 * 10.0, "round {round}: row {i} scattered to its requester");
+                assert!(resp.latency >= Duration::from_secs(61), "measured on the manual clock");
+                assert!(rx.recv().is_err(), "round {round}: row {i} must arrive exactly once");
+            }
+            let bs = stats.bucket(8).unwrap();
+            assert_eq!(
+                bs.deadline.get() + bs.shutdown.get(),
+                1,
+                "round {round}: exactly one partial flush, by either why (deadline={} shutdown={})",
+                bs.deadline.get(),
+                bs.shutdown.get()
+            );
+            assert_eq!(bs.full.get(), 0, "round {round}: 3 rows never fill the 8-bucket");
+            assert_eq!(bs.rows.get(), 3, "round {round}: all rows in the one flush");
+            assert_eq!(stats.batches.get(), 1, "round {round}");
+            assert_eq!(stats.completed.get(), 4, "round {round}: 3 classify + 1 gemm");
+            assert_eq!(stats.failed.get(), 0, "round {round}");
+            // the engine saw exactly one mlp batch (plus the gemm wake)
+            let calls = calls.lock().unwrap();
+            let mlp_calls = calls.iter().filter(|(m, _)| m.starts_with("mlp")).count();
+            assert_eq!(mlp_calls, 1, "round {round}: {calls:?}");
+        }
+    }
+
+    #[test]
     fn shutdown_flush_uses_smallest_sufficient_bucket() {
         // r pending rows must execute in the smallest ladder bucket ≥ r
         for (r, expect) in [(1usize, 1usize), (2, 8), (8, 8), (9, 32), (32, 32)] {

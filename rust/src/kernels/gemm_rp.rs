@@ -25,6 +25,21 @@ use crate::kernels::pack::{unpack_c8x16_f32, unpack_c8x16_i32};
 /// `tail_pmsk`, if given, adds one final *prefixed* step whose product mask
 /// enables only the first `k % rank` products (residual handling, §II-C).
 pub fn rp_gemm_program(kind: GerKind, steps: usize, tail_pmsk: Option<u8>) -> Vec<Inst> {
+    rp_gemm_program_op(kind, steps, tail_pmsk, AccOp::PP)
+}
+
+/// [`rp_gemm_program`] with the accumulate op of the non-priming steps
+/// chosen by the caller: `AccOp::PP` is the modulo chain every kind
+/// supports; `AccOp::SPP` builds the **saturating** integer chain
+/// (`xvi8ger4spp`, §II-B.2's "do not wrap around" accumulate). The first
+/// step always primes with `AccOp::New` — the Machine rejects the op at
+/// execute time if it is invalid for `kind`.
+pub fn rp_gemm_program_op(
+    kind: GerKind,
+    steps: usize,
+    tail_pmsk: Option<u8>,
+    acc_op: AccOp,
+) -> Vec<Inst> {
     assert_ne!(kind, GerKind::F64Ger, "fp64 uses the Figure 6 kernel");
     assert!(steps >= 1 || tail_pmsk.is_some());
     let mut p = Vec::new();
@@ -61,7 +76,7 @@ pub fn rp_gemm_program(kind: GerKind, steps: usize, tail_pmsk: Option<u8>) -> Ve
             p.push(Inst::Mtctr { rs: 9 });
             let top_len = p.len();
             emit_loads(&mut p);
-            emit_gers(&mut p, AccOp::PP, None);
+            emit_gers(&mut p, acc_op, None);
             bump(&mut p);
             // all loop-body instructions are 4 bytes
             let body_bytes = 4 * (p.len() - top_len) as i32;
@@ -69,7 +84,7 @@ pub fn rp_gemm_program(kind: GerKind, steps: usize, tail_pmsk: Option<u8>) -> Ve
         }
     }
     if let Some(pm) = tail_pmsk {
-        let op = if steps == 0 { AccOp::New } else { AccOp::PP };
+        let op = if steps == 0 { AccOp::New } else { acc_op };
         emit_loads(&mut p);
         emit_gers(&mut p, op, Some(pm));
         bump(&mut p);
@@ -136,6 +151,7 @@ fn tail_mask(rem: usize) -> Option<u8> {
 }
 
 /// Shared driver: write packed panels, run, read the raw C block.
+#[allow(clippy::too_many_arguments)]
 fn run_rp<TX: Copy, TY: Copy>(
     kind: GerKind,
     xpacked: &[TX],
@@ -145,6 +161,7 @@ fn run_rp<TX: Copy, TY: Copy>(
     write_y: impl Fn(&mut Machine, u64, &[TY]),
     elem_x: usize,
     elem_y: usize,
+    acc_op: AccOp,
 ) -> Result<Vec<u8>, ExecError> {
     let rank = kind.rank();
     let (steps, rem) = steps_of(k, rank);
@@ -157,7 +174,7 @@ fn run_rp<TX: Copy, TY: Copy>(
     m.gpr[3] = cb;
     m.gpr[4] = xb;
     m.gpr[5] = yb;
-    let prog = rp_gemm_program(kind, steps, tail_mask(rem));
+    let prog = rp_gemm_program_op(kind, steps, tail_mask(rem), acc_op);
     m.run(&prog, 1024 + 32 * (steps as u64 + 2))?;
     Ok(m.mem[cb as usize..cb as usize + 512].to_vec())
 }
@@ -182,7 +199,7 @@ pub fn gemm_f32_8x16(x: &[f64], y: &[f64], k: usize) -> Result<[[f32; 16]; 8], E
     let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
     let xp = pack_x(&xf, k, 1);
     let yp = pack_y(&yf, k, 1);
-    let raw = run_rp(GerKind::F32Ger, &xp, &yp, k, |m, a, d| m.write_f32s(a, d), |m, a, d| m.write_f32s(a, d), 4, 4)?;
+    let raw = run_rp(GerKind::F32Ger, &xp, &yp, k, |m, a, d| m.write_f32s(a, d), |m, a, d| m.write_f32s(a, d), 4, 4, AccOp::PP)?;
     Ok(c_as_f32(&raw))
 }
 
@@ -195,7 +212,7 @@ pub fn gemm_bf16_8x16(x: &[f32], y: &[f32], k: usize) -> Result<[[f32; 16]; 8], 
     let yh: Vec<u16> = y.iter().map(|&v| f32_to_bf16(v)).collect();
     let xp = pack_x(&xh, k, 2);
     let yp = pack_y(&yh, k, 2);
-    let raw = run_rp(GerKind::Bf16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    let raw = run_rp(GerKind::Bf16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2, AccOp::PP)?;
     Ok(c_as_f32(&raw))
 }
 
@@ -207,7 +224,7 @@ pub fn gemm_f16_8x16(x: &[f32], y: &[f32], k: usize) -> Result<[[f32; 16]; 8], E
     let yh: Vec<u16> = y.iter().map(|&v| f32_to_f16(v)).collect();
     let xp = pack_x(&xh, k, 2);
     let yp = pack_y(&yh, k, 2);
-    let raw = run_rp(GerKind::F16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    let raw = run_rp(GerKind::F16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2, AccOp::PP)?;
     Ok(c_as_f32(&raw))
 }
 
@@ -219,20 +236,38 @@ pub fn gemm_i16_8x16(x: &[i16], y: &[i16], k: usize) -> Result<[[i32; 16]; 8], E
     let yu: Vec<u16> = y.iter().map(|&v| v as u16).collect();
     let xp = pack_x(&xu, k, 2);
     let yp = pack_y(&yu, k, 2);
-    let raw = run_rp(GerKind::I16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2)?;
+    let raw = run_rp(GerKind::I16Ger2, &xp, &yp, k, |m, a, d| m.write_u16s(a, d), |m, a, d| m.write_u16s(a, d), 2, 2, AccOp::PP)?;
     Ok(c_as_i32(&raw))
 }
 
 /// int8 (signed X) × uint8 (unsigned Y) with int32 accumulation
 /// (`xvi8ger4`, the §II-B.2 mixed-signedness deep-learning path).
 pub fn gemm_i8_8x16(x: &[i8], y: &[u8], k: usize) -> Result<[[i32; 16]; 8], ExecError> {
+    gemm_i8_8x16_op(x, y, k, AccOp::PP)
+}
+
+/// [`gemm_i8_8x16`] with the **saturating** accumulate chain
+/// (`xvi8ger4` prime + `xvi8ger4spp` steps): each step's exact rank-4
+/// sum folds into the i32 accumulator with clamping instead of
+/// wrapping — the differential oracle for `I8Accum::Saturating` in
+/// `blas::i8_gemm`.
+pub fn gemm_i8_8x16_sat(x: &[i8], y: &[u8], k: usize) -> Result<[[i32; 16]; 8], ExecError> {
+    gemm_i8_8x16_op(x, y, k, AccOp::SPP)
+}
+
+fn gemm_i8_8x16_op(
+    x: &[i8],
+    y: &[u8],
+    k: usize,
+    acc_op: AccOp,
+) -> Result<[[i32; 16]; 8], ExecError> {
     assert_eq!(x.len(), 8 * k);
     assert_eq!(y.len(), 16 * k);
     let xb: Vec<u8> = x.iter().map(|&v| v as u8).collect();
     let xp = pack_x(&xb, k, 4);
     let yp = pack_y(y, k, 4);
     let w = |m: &mut Machine, a: u64, d: &[u8]| m.mem[a as usize..a as usize + d.len()].copy_from_slice(d);
-    let raw = run_rp(GerKind::I8Ger4, &xp, &yp, k, w, w, 1, 1)?;
+    let raw = run_rp(GerKind::I8Ger4, &xp, &yp, k, w, w, 1, 1, acc_op)?;
     Ok(c_as_i32(&raw))
 }
 
@@ -250,7 +285,7 @@ pub fn gemm_i4_8x16(x: &[i32], y: &[i32], k: usize) -> Result<[[i32; 16]; 8], Ex
     };
     let (xn, yn) = (to_nibbles(&xp), to_nibbles(&yp));
     let w = |m: &mut Machine, a: u64, d: &[u8]| m.mem[a as usize..a as usize + d.len()].copy_from_slice(d);
-    let raw = run_rp(GerKind::I4Ger8, &xn, &yn, k, w, w, 1, 1)?;
+    let raw = run_rp(GerKind::I4Ger8, &xn, &yn, k, w, w, 1, 1, AccOp::PP)?;
     Ok(c_as_i32(&raw))
 }
 
@@ -352,6 +387,20 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn i8_saturating_chain_clamps_instead_of_wrapping() {
+        // pin every product at the most negative value: each rank-4 step
+        // adds 4·(-128·255) = -130560 exactly, so enough steps drive the
+        // exact sum past i32::MIN — where spp clamps and pp wraps
+        let k = 4 * 16_500; // exact sum -2_154_240_000 < i32::MIN
+        let x = vec![-128i8; 8 * k];
+        let y = vec![255u8; 16 * k];
+        let sat = gemm_i8_8x16_sat(&x, &y, k).unwrap();
+        let wrap = gemm_i8_8x16(&x, &y, k).unwrap();
+        assert!(sat.iter().flatten().all(|&v| v == i32::MIN));
+        assert!(wrap.iter().flatten().all(|&v| v != i32::MIN));
     }
 
     #[test]

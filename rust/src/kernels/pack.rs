@@ -265,6 +265,170 @@ pub fn pack_b_panel_f32_bf16(
     }
 }
 
+// ---------------------------------------------------------------------------
+// int8 quad-interleaved panels — the `xvi8ger4pp` rank-4 operand layout
+// (§II-B.2's mixed-signedness deep-learning path: signed i8 X, unsigned
+// u8 Y, i32 accumulation). A *step* covers four consecutive `k` values;
+// within a step, element `(lane, kl)` sits at `lane*4 + kl`, so one step
+// of an A panel is `mr` adjacent i8 quads and one step of a B panel is
+// `nr` u8 quads — exactly what one rank-4 accumulate consumes per
+// instruction. The `k % 4` tail step zero-fills its pad lanes: a zero
+// quad product contributes `+0` to the step's exact i64 sum, identical
+// to the prefixed `pmsk` form's disabled products (see `blas::i8_gemm`
+// for the argument). Packing happens **straight from quantized bytes**
+// or from f32 with the affine quantization (scale + zero-point,
+// round-to-nearest) fused in — the quantized tensor never materializes.
+// ---------------------------------------------------------------------------
+
+/// Affine-quantize one f32 onto the signed i8 grid:
+/// `clamp(round(v / scale) + zp, -128, 127)`. Rounding is
+/// [`f32::round`] (half away from zero); the f32→i32 cast saturates and
+/// maps NaN to 0, so every input is well-defined. This scalar IS the
+/// quantization contract — the fused packers and the dequantize
+/// epilogue's row/column sums must call exactly this function so both
+/// sides of the correction see identical quantized values.
+#[inline]
+pub fn quantize_i8(v: f32, scale: f32, zp: i32) -> i8 {
+    ((v / scale).round() as i32).saturating_add(zp).clamp(-128, 127) as i8
+}
+
+/// Affine-quantize one f32 onto the unsigned u8 grid:
+/// `clamp(round(v / scale) + zp, 0, 255)` (see [`quantize_i8`] for the
+/// rounding/NaN contract).
+#[inline]
+pub fn quantize_u8(v: f32, scale: f32, zp: i32) -> u8 {
+    ((v / scale).round() as i32).saturating_add(zp).clamp(0, 255) as u8
+}
+
+/// Pack an A micropanel for the int8 packed GEMM from **quantized i8
+/// bytes**: rows `i0 .. i0+rows` × columns `k0 .. k0+kc` of a row-major
+/// `a` with row stride `lda`, quad-interleaved — step `s` holds
+/// `k = k0+4s .. k0+4s+3`, element `(i, kl)` at `out[s*mr*4 + i*4 + kl]`.
+/// Rows past `rows` (the m-tail) and the `k % 4` pad lanes are
+/// zero-filled. `out` must hold `kc.div_ceil(4) * mr * 4` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panel_i8(
+    a: &[i8],
+    lda: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [i8],
+) {
+    let steps = kc.div_ceil(4);
+    debug_assert!(rows <= mr && out.len() >= steps * mr * 4);
+    for s in 0..steps {
+        let step = &mut out[s * mr * 4..(s + 1) * mr * 4];
+        for i in 0..mr {
+            for kl in 0..4 {
+                let kk = 4 * s + kl;
+                step[i * 4 + kl] =
+                    if i < rows && kk < kc { a[(i0 + i) * lda + k0 + kk] } else { 0 };
+            }
+        }
+    }
+}
+
+/// [`pack_a_panel_i8`] with the affine f32→i8 **quantization fused into
+/// packing**: the source is row-major f32 and every packed element is
+/// quantized with `scale`/`zp` ([`quantize_i8`]) on the way into the
+/// panel — the compiled form of a quantize feeding a dot, so the
+/// quantized tensor never materializes.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panel_f32_i8(
+    a: &[f32],
+    scale: f32,
+    zp: i32,
+    lda: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [i8],
+) {
+    let steps = kc.div_ceil(4);
+    debug_assert!(rows <= mr && out.len() >= steps * mr * 4);
+    for s in 0..steps {
+        let step = &mut out[s * mr * 4..(s + 1) * mr * 4];
+        for i in 0..mr {
+            for kl in 0..4 {
+                let kk = 4 * s + kl;
+                step[i * 4 + kl] = if i < rows && kk < kc {
+                    quantize_i8(a[(i0 + i) * lda + k0 + kk], scale, zp)
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// Pack a B micropanel for the int8 packed GEMM from **quantized u8
+/// bytes**: rows `k0 .. k0+kc` × columns `j0 .. j0+cols` of a row-major
+/// `b` with row stride `ldb`, quad-interleaved — element `(j, kl)` of
+/// step `s` at `out[s*nr*4 + j*4 + kl]` (`k = k0+4s+kl`). Columns past
+/// `cols` (the n-tail) and the `k % 4` pad lanes are zero-filled. `out`
+/// must hold `kc.div_ceil(4) * nr * 4` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panel_u8(
+    b: &[u8],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [u8],
+) {
+    let steps = kc.div_ceil(4);
+    debug_assert!(cols <= nr && out.len() >= steps * nr * 4);
+    for s in 0..steps {
+        let step = &mut out[s * nr * 4..(s + 1) * nr * 4];
+        for j in 0..nr {
+            for kl in 0..4 {
+                let kk = 4 * s + kl;
+                step[j * 4 + kl] =
+                    if j < cols && kk < kc { b[(k0 + kk) * ldb + j0 + j] } else { 0 };
+            }
+        }
+    }
+}
+
+/// [`pack_b_panel_u8`] with the affine f32→u8 quantization fused into
+/// packing (see [`pack_a_panel_f32_i8`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panel_f32_u8(
+    b: &[f32],
+    scale: f32,
+    zp: i32,
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    cols: usize,
+    nr: usize,
+    out: &mut [u8],
+) {
+    let steps = kc.div_ceil(4);
+    debug_assert!(cols <= nr && out.len() >= steps * nr * 4);
+    for s in 0..steps {
+        let step = &mut out[s * nr * 4..(s + 1) * nr * 4];
+        for j in 0..nr {
+            for kl in 0..4 {
+                let kk = 4 * s + kl;
+                step[j * 4 + kl] = if j < cols && kk < kc {
+                    quantize_u8(b[(k0 + kk) * ldb + j0 + j], scale, zp)
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
 /// Pack a B micropanel for the blocked f32 GEMM: rows `k0 .. k0+kc` ×
 /// columns `j0 .. j0+cols` of a row-major `b` with row stride `ldb`, kept
 /// row-major per step — row `p` stored as `nr` consecutive elements at
@@ -513,6 +677,74 @@ mod tests {
         assert_eq!(from_f32[..4 * 2], from_bits[..4 * 2]);
         // the NaN payload really was canonicalized
         assert!(from_bits.iter().all(|&b| b != 0x7f81 | 0x0040));
+    }
+
+    #[test]
+    fn i8_panels_quad_interleave_and_pad() {
+        // a: 4 x 6 row-major i8, a[i][k] = 10*i + k - 3; pack rows 1..4
+        // (3 rows, mr=4 -> one zero row), columns 1..6 (kc=5 -> step 1
+        // pads its kl=1..3 lanes)
+        let a: Vec<i8> = (0..4 * 6).map(|x| (10 * (x / 6) + x % 6) as i8 - 3).collect();
+        let mut out = vec![0x55i8; 2 * 4 * 4];
+        pack_a_panel_i8(&a, 6, 1, 3, 1, 5, 4, &mut out);
+        for s in 0..2 {
+            for i in 0..4 {
+                for kl in 0..4 {
+                    let kk = 4 * s + kl;
+                    let expect = if i < 3 && kk < 5 {
+                        (10 * (1 + i) + 1 + kk) as i8 - 3
+                    } else {
+                        0
+                    };
+                    assert_eq!(out[s * 16 + i * 4 + kl], expect, "(s={s}, i={i}, kl={kl})");
+                }
+            }
+        }
+        // B: 6 x 7 row-major u8; rows 1..6 (kc=5), columns 2..6 (cols=4,
+        // nr=6 -> two zero columns)
+        let b: Vec<u8> = (0..6 * 7).map(|x| (10 * (x / 7) + x % 7) as u8).collect();
+        let mut out = vec![0xaau8; 2 * 6 * 4];
+        pack_b_panel_u8(&b, 7, 1, 5, 2, 4, 6, &mut out);
+        for s in 0..2 {
+            for j in 0..6 {
+                for kl in 0..4 {
+                    let kk = 4 * s + kl;
+                    let expect = if j < 4 && kk < 5 {
+                        (10 * (1 + kk) + 2 + j) as u8
+                    } else {
+                        0
+                    };
+                    assert_eq!(out[s * 24 + j * 4 + kl], expect, "(s={s}, j={j}, kl={kl})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_f32_packers_quantize_like_the_scalar_path() {
+        // fused quantization must equal quantizing first and packing the
+        // raw bytes — including saturating inputs, NaN, and infinities
+        let vals = [0.0f32, 1.26, -1.24, 500.0, -500.0, f32::NAN, f32::INFINITY,
+            f32::NEG_INFINITY, 0.049, -0.051, 63.76];
+        let (scale, zp) = (0.1f32, 3i32);
+        let qa: Vec<i8> = vals.iter().map(|&v| quantize_i8(v, scale, zp)).collect();
+        let qb: Vec<u8> = vals.iter().map(|&v| quantize_u8(v, scale, zp)).collect();
+        // saturation boundaries really engage
+        assert_eq!(quantize_i8(500.0, scale, zp), 127);
+        assert_eq!(quantize_i8(-500.0, scale, zp), -128);
+        assert_eq!(quantize_u8(-500.0, scale, zp), 0);
+        assert_eq!(quantize_u8(500.0, scale, zp), 255);
+        assert_eq!(quantize_i8(f32::NAN, scale, zp), 3, "NaN quantizes to zp");
+        // treat vals as a 1 x 11 A row (mr=1) and an 11 x 1 B column
+        let steps = 11usize.div_ceil(4);
+        let (mut fa, mut ra) = (vec![0i8; steps * 4], vec![0i8; steps * 4]);
+        pack_a_panel_f32_i8(&vals, scale, zp, 11, 0, 1, 0, 11, 1, &mut fa);
+        pack_a_panel_i8(&qa, 11, 0, 1, 0, 11, 1, &mut ra);
+        assert_eq!(fa, ra);
+        let (mut fb, mut rb) = (vec![0u8; steps * 4], vec![0u8; steps * 4]);
+        pack_b_panel_f32_u8(&vals, scale, zp, 1, 0, 11, 0, 1, 1, &mut fb);
+        pack_b_panel_u8(&qb, 1, 0, 11, 0, 1, 1, &mut rb);
+        assert_eq!(fb, rb);
     }
 
     #[test]

@@ -288,7 +288,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     use power_mma::coordinator::{
         Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting,
     };
-    use power_mma::runtime::{artifacts, det_input, Device, HloPlanBackend, Runtime};
+    use power_mma::runtime::{artifacts, det_input, Device, EngineBackend, HloPlanBackend, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
         .opt("requests", Some("1000"), "self-test request count")
@@ -315,6 +315,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             Some("widened"),
             "bf16 dot accumulation contract: widened (f64 image, default) | \
              f32-pairs (f32 chain over k-pairs, the MMA rank-2 update order)",
+        )
+        .opt(
+            "dtype",
+            Some("f32"),
+            "serving dtype: f32 (default) | int8 (calibrated quantized serving: \
+             every bucket's dots run on the rank-4 xvi8ger4 integer engine, \
+             quantize->dot->dequantize fused into one plan step)",
         );
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
@@ -346,6 +353,14 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let int8 = match m.get("dtype") {
+        "f32" => false,
+        "int8" => true,
+        other => {
+            eprintln!("unknown --dtype '{other}' (expected: f32 | int8)");
+            return 2;
+        }
+    };
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -370,18 +385,29 @@ fn cmd_serve(args: &[String]) -> i32 {
     // shard (shards add engines, not worker threads)
     let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
     let coord = Coordinator::start(cfg, weights, move |shard| {
-        let mut rt = Runtime::with_device(
-            device.clone(),
-            Box::new(HloPlanBackend::with_bf16_accum(accum)),
-            &dir,
-        );
+        let backend: Box<dyn EngineBackend> = if int8 {
+            Box::new(HloPlanBackend::int8())
+        } else {
+            Box::new(HloPlanBackend::with_bf16_accum(accum))
+        };
+        let mut rt = Runtime::with_device(device.clone(), backend, &dir);
+        // int8: the calibrated buckets load *first* so their metas win
+        // the bucket names over the record-less mlp_b32 disk fixture
+        // (loads are idempotent by name)
+        let int8_buckets =
+            if int8 { rt.load_mlp_buckets_int8(&ladder, feat, hid, cls)? } else { Vec::new() };
         let names = rt.load_all()?;
-        let bucket_names = rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
+        let bucket_names = if int8 {
+            int8_buckets
+        } else {
+            rt.load_mlp_buckets(&ladder, feat, hid, cls)?
+        };
         eprintln!(
             "shard {shard}: loaded models {names:?} + buckets {bucket_names:?} on {} \
-             ({} pool workers)",
+             ({} pool workers, dtype {})",
             rt.platform(),
-            rt.device().threads()
+            rt.device().threads(),
+            if int8 { "int8" } else { "f32" }
         );
         Ok(rt)
     });
@@ -663,13 +689,17 @@ fn cmd_bench(args: &[String]) -> i32 {
         gemm_f32_fused_into, gemm_f32_into, Accum, Epilogue, GemmScratch, PanelB, Par,
     };
     use power_mma::blas::gemm::ref_gemm;
+    use power_mma::blas::i8_gemm::{
+        gemm_i8_dequant_into, gemm_i8_dequant_reference, gemm_i8_packed_into, I8Accum,
+        I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
+    };
     use power_mma::coordinator::ShardRouting;
     use power_mma::isa::GerKind;
-    use power_mma::kernels::gemm_rp::rp_gemm_program;
+    use power_mma::kernels::gemm_rp::{gemm_i8_8x16, rp_gemm_program};
     use power_mma::runtime::hlo::bf16_round;
     use power_mma::runtime::{
-        artifacts, det_input, det_inputs, Device, EngineBackend, HloInterpreterBackend,
-        HloPlanBackend, ModelMeta,
+        artifacts, det_input, det_inputs, mlp_hlo_text, mlp_int8_calib, Device, EngineBackend,
+        HloInterpreterBackend, HloPlanBackend, ModelMeta,
     };
     use std::time::Duration;
 
@@ -771,6 +801,7 @@ fn cmd_bench(args: &[String]) -> i32 {
         name: format!("bench_gemm_{size}"),
         input_shapes: vec![vec![size, size], vec![size, size]],
         output_shape: vec![size, size],
+        calib: None,
     };
     let interp = match HloInterpreterBackend.compile(&shared_dev, &meta.name, &hlo, &meta) {
         Ok(m) => m,
@@ -1112,6 +1143,118 @@ fn cmd_bench(args: &[String]) -> i32 {
         if pool_gemm_identical { "identical" } else { "DIFFER" }
     );
 
+    // -- 6b. int8: the rank-4 quantized serving engine (Table I's 4x) ----
+    // plan shape first: the calibrated serving MLP must lower both its
+    // dots onto the quantized engine (the acceptance bar of the int8
+    // serving path behind `serve --dtype int8`)
+    let (i8f, i8h, i8c) = (64usize, 128usize, 32usize);
+    let int8_calib = mlp_int8_calib(i8f, i8h, i8c);
+    let int8_plan = match power_mma::runtime::hlo::HloModule::parse(&mlp_hlo_text(
+        32, i8f, i8h, i8c,
+    ))
+    .and_then(|m| {
+        power_mma::runtime::plan::Plan::compile_with_options(
+            &m,
+            power_mma::runtime::plan::PlanOptions {
+                int8_calib: Some(int8_calib),
+                ..Default::default()
+            },
+        )
+    }) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("int8 MLP: plan compile failed: {e}");
+            return 1;
+        }
+    };
+    let int8_names = int8_plan.step_names();
+    let plan_has_dot_i8 = int8_names.iter().any(|s| s.starts_with("dot_i8"));
+    println!(
+        "int8 MLP plan: {} steps {int8_names:?} ({})",
+        int8_plan.num_steps(),
+        if plan_has_dot_i8 { "dots quantized" } else { "NO dot_i8 step" }
+    );
+    if !plan_has_dot_i8 {
+        eprintln!("the calibrated MLP must compile to a plan containing dot_i8 steps");
+        return 1;
+    }
+    // Machine-parity identity bit: the engine's wrapping rank-4 integer
+    // dot vs the instruction-level xvi8ger4/pp chain on an 8x16 tile
+    // (k % 4 != 0, so the zero-padded tail == pmsk-disabled lanes)
+    let i8k = 27usize;
+    let xq: Vec<i8> = (0..8 * i8k).map(|i| ((i * 37 + 11) % 256) as u8 as i8).collect();
+    let yq: Vec<u8> = (0..i8k * 16).map(|i| ((i * 53 + 7) % 256) as u8).collect();
+    let mut i8_tile = vec![0i32; 8 * 16];
+    let mut i8_scratch = I8Scratch::new();
+    gemm_i8_packed_into(
+        &mut i8_tile,
+        I8SrcA::Q(&xq),
+        I8SrcB::Q(&yq),
+        8,
+        16,
+        i8k,
+        I8Accum::Wrapping,
+        Par::Seq,
+        &mut i8_scratch,
+    );
+    // the Machine oracle takes Y as 16 rows of k — transpose the panel
+    let mut yt = vec![0u8; 16 * i8k];
+    for r in 0..i8k {
+        for j in 0..16 {
+            yt[j * i8k + r] = yq[r * 16 + j];
+        }
+    }
+    let machine_parity = match gemm_i8_8x16(&xq, &yt, i8k) {
+        Ok(tile) => i8_tile == tile.iter().flatten().copied().collect::<Vec<i32>>(),
+        Err(e) => {
+            eprintln!("xvi8ger4 Machine oracle failed: {e:?}");
+            return 1;
+        }
+    };
+    // packed int8 vs the f32 pool GEMM at the same size: quantize both
+    // f32 operands inside packing, integer dot, dequantize at writeback
+    let i8_q =
+        QuantParams { a_scale: 1.0 / 255.0, a_zp: 0, b_scale: 1.0 / 255.0, b_zp: 128 };
+    let mut c_int8 = vec![0f32; size * size];
+    let s_int8 = bench_budget("int8 packed panels (quantize+dequant fused)", budget, || {
+        gemm_i8_dequant_into(
+            &mut c_int8,
+            &a,
+            &b,
+            size,
+            size,
+            size,
+            &i8_q,
+            I8Epilogue::None,
+            Par::Pool(shared_dev.pool(), avail),
+            &mut i8_scratch,
+        );
+        black_box(c_int8[0]);
+    });
+    let int8_ms = s_int8.median.as_secs_f64() * 1e3;
+    // bitwise vs the engine's own scalar reference; accuracy vs the f32
+    // pool result is quantization-grid error, reported, not a parity bar
+    let i8_ref = gemm_i8_dequant_reference(&a, &b, size, size, size, &i8_q, None, false);
+    let int8_ref_identical =
+        c_int8.iter().zip(&i8_ref).all(|(x, y)| x.to_bits() == y.to_bits());
+    let int8_identical = machine_parity && int8_ref_identical;
+    let int8_max_err =
+        c_int8.iter().zip(&c_pool).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    // Table I on the core simulator: xvi8ger4 retires 4x the MACs per
+    // instruction of xvf32ger (equal-MACs programs, like the bf16 pair)
+    let fpc_f32_4x = sim_fpc(&rp_gemm_program(GerKind::F32Ger, 4 * sim_steps, None));
+    let fpc_i8 = sim_fpc(&rp_gemm_program(GerKind::I8Ger4, sim_steps, None));
+    let int8_macs_ratio = fpc_i8 / fpc_f32_4x;
+    println!(
+        "int8 {size}^3  f32 {pool_ms:9.2} ms | packed {int8_ms:9.2} ms ({:.2}x) | \
+         machine parity {} | max |err| vs f32 {int8_max_err:.5} | \
+         sim MACs/cycle f32 {:.2} -> i8 {:.2} ({int8_macs_ratio:.2}x)",
+        pool_ms / int8_ms,
+        if int8_identical { "identical" } else { "DIFFER" },
+        fpc_f32_4x / 2.0,
+        fpc_i8 / 2.0
+    );
+
     // -- 7. coordinator end-to-end over the plan backend, shards 1 vs 2 --
     // this bench drives a single model family (classify), so sticky
     // routing funnels everything through one shard — the round-robin
@@ -1259,6 +1402,7 @@ fn cmd_bench(args: &[String]) -> i32 {
         && bf16_identical
         && bf16_pairs_identical
         && plan_pairs_identical
+        && int8_identical
         && batch_identical;
 
     // -- 9. machine-readable report --------------------------------------
@@ -1280,6 +1424,12 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"plan_f32pairs_identical\": {plan_pairs_identical}, \
          \"sim_macs_per_cycle_f32\": {:.3}, \"sim_macs_per_cycle_bf16\": {:.3}, \
          \"sim_macs_per_cycle_ratio\": {macs_ratio:.3}}},\n  \
+         \"int8\": {{\"size\": {size}, \"plan_has_dot_i8\": {plan_has_dot_i8}, \
+         \"f32_ms\": {pool_ms:.3}, \"packed_ms\": {int8_ms:.3}, \
+         \"packed_vs_f32\": {:.3}, \"identical\": {int8_identical}, \
+         \"max_abs_err_vs_f32\": {int8_max_err:.6}, \
+         \"sim_macs_per_cycle_f32\": {:.3}, \"sim_macs_per_cycle_i8\": {:.3}, \
+         \"sim_macs_per_cycle_ratio\": {int8_macs_ratio:.3}}},\n  \
          \"pool\": {{\"gemm_scoped_ms\": {scoped_ms:.3}, \"gemm_pool_ms\": {pool_ms:.3}, \
          \"gemm_identical\": {pool_gemm_identical}, \
          \"shards1_req_per_s\": {:.1}, \"shards2_req_per_s\": {:.1}, \
@@ -1299,6 +1449,9 @@ fn cmd_bench(args: &[String]) -> i32 {
         bf16_widened_ms / bf16_packed_ms,
         fpc_f32 / 2.0,
         fpc_bf16 / 2.0,
+        pool_ms / int8_ms,
+        fpc_f32_4x / 2.0,
+        fpc_i8 / 2.0,
         coord1.req_per_s,
         coord2.req_per_s,
         coord1.json,

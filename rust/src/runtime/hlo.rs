@@ -778,4 +778,47 @@ ENTRY main.5 {
         assert!(m.evaluate(&[&short, &short]).is_err(), "wrong input length");
         assert!(m.evaluate(&[&[0f32; 6]]).is_err(), "missing input");
     }
+
+    #[test]
+    fn dtype_mismatched_and_malformed_dots_error_instead_of_panicking() {
+        // integer element types parse (DType::Other) but must be
+        // rejected with an error at evaluation, never a panic
+        let s32 = "ENTRY main {\n  Arg_0.1 = s32[2,3]{1,0} parameter(0)\n  Arg_1.2 = s32[3,2]{1,0} parameter(1)\n  ROOT dot.3 = s32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(s32).unwrap();
+        let e = m.evaluate(&[&[0f32; 6], &[0f32; 6]]).unwrap_err().to_string();
+        assert!(e.contains("unsupported element type"), "{e}");
+
+        // contraction mismatch: [2,3] × [4,2]
+        let bad_k = "ENTRY main {\n  Arg_0.1 = f32[2,3]{1,0} parameter(0)\n  Arg_1.2 = f32[4,2]{1,0} parameter(1)\n  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(bad_k).unwrap();
+        let e = m.evaluate(&[&[0f32; 6], &[0f32; 8]]).unwrap_err().to_string();
+        assert!(e.contains("contraction mismatch"), "{e}");
+
+        // unsupported contracting-dim layout
+        let bad_dims = "ENTRY main {\n  Arg_0.1 = f32[2,3]{1,0} parameter(0)\n  Arg_1.2 = f32[2,3]{1,0} parameter(1)\n  ROOT dot.3 = f32[3,3]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={0}, rhs_contracting_dims={1}\n}\n";
+        let m = HloModule::parse(bad_dims).unwrap();
+        let e = m.evaluate(&[&[0f32; 6], &[0f32; 6]]).unwrap_err().to_string();
+        assert!(e.contains("lhs_contracting_dims"), "{e}");
+
+        // rank-1 operands
+        let rank1 = "ENTRY main {\n  Arg_0.1 = f32[3]{0} parameter(0)\n  Arg_1.2 = f32[3]{0} parameter(1)\n  ROOT dot.3 = f32[]{} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(rank1).unwrap();
+        let e = m.evaluate(&[&[0f32; 3], &[0f32; 3]]).unwrap_err().to_string();
+        assert!(e.contains("rank-2"), "{e}");
+
+        // declared result shape lies about the operand shapes
+        let bad_out = "ENTRY main {\n  Arg_0.1 = f32[2,3]{1,0} parameter(0)\n  Arg_1.2 = f32[3,2]{1,0} parameter(1)\n  ROOT dot.3 = f32[3,3]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(bad_out).unwrap();
+        let e = m.evaluate(&[&[0f32; 6], &[0f32; 6]]).unwrap_err().to_string();
+        assert!(e.contains("dot result shape"), "{e}");
+
+        // truncated shapes and attributes are parse-time errors
+        for bad in [
+            "ENTRY main {\n  ROOT Arg_0.1 = f32[2, parameter(0)\n}\n",
+            "ENTRY main {\n  ROOT Arg_0.1 = f32[2,]{1,0} parameter(0)\n}\n",
+            "ENTRY main {\n  Arg_0.1 = f32[2,2]{1,0} parameter(0)\n  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_0.1), lhs_contracting_dims={1\n}\n",
+        ] {
+            assert!(HloModule::parse(bad).is_err(), "must reject: {bad}");
+        }
+    }
 }

@@ -53,18 +53,125 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-/// Parsed `<name>.meta` line: `name;in0shape,in1shape,…;outshape`.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// One tensor's calibration: the affine int8 quantization (`real =
+/// scale · (q − zp)`) chosen for it by a calibration sweep, plus which
+/// side of the `xvi8ger4` mixed-signedness split it plays (§II-B.2: the
+/// X operand is signed i8, the Y operand unsigned u8). The plan's
+/// `DotI8` matcher only quantizes a dot whose lhs has a *signed* entry
+/// and whose rhs has an *unsigned* one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibEntry {
+    /// HLO instruction name of the tensor (e.g. `Arg_1.2`,
+    /// `maximum.14`).
+    pub name: String,
+    /// `true` → quantizes to signed i8 (a dot lhs), `false` → unsigned
+    /// u8 (a dot rhs).
+    pub signed: bool,
+    /// Quantization step (> 0, finite).
+    pub scale: f32,
+    /// Zero point, in the i8 range for signed entries / u8 for unsigned.
+    pub zp: i32,
+}
+
+/// The per-tensor calibration record an int8-served model carries in its
+/// [`ModelMeta`] — the optional fourth manifest field,
+/// `calib:<name>=<i8|u8>@<scale>@<zp>,…`. Produced by a calibration
+/// sweep ([`mlp_int8_calib`]) and consumed by the plan compiler's
+/// `DotI8` matcher ([`plan::PlanOptions::int8_calib`]).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Int8Calib {
+    pub entries: Vec<CalibEntry>,
+}
+
+impl Int8Calib {
+    /// Look up a tensor's entry by HLO instruction name.
+    pub fn get(&self, name: &str) -> Option<&CalibEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Parse the payload of a `calib:` manifest field (the part after
+    /// the prefix). The whole record must parse — a truncated or
+    /// malformed entry is a hard error, mirroring the trailing-field
+    /// strictness of [`ModelMeta::parse`].
+    pub fn parse(payload: &str) -> Result<Int8Calib> {
+        if payload.trim().is_empty() {
+            bail!("empty calibration record");
+        }
+        let mut entries = Vec::new();
+        for item in payload.split(',') {
+            let (name, spec) = item
+                .split_once('=')
+                .ok_or_else(|| err!("calibration entry '{item}' is missing '='"))?;
+            if name.is_empty() {
+                bail!("calibration entry '{item}' has an empty tensor name");
+            }
+            let mut parts = spec.split('@');
+            let kind = parts.next().unwrap_or_default();
+            let signed = match kind {
+                "i8" => true,
+                "u8" => false,
+                other => bail!("calibration entry '{name}': bad kind '{other}' (want i8|u8)"),
+            };
+            let scale: f32 = parts
+                .next()
+                .ok_or_else(|| err!("calibration entry '{name}' is truncated (no scale)"))?
+                .parse()
+                .map_err(|_| err!("calibration entry '{name}': bad scale"))?;
+            if !scale.is_finite() || scale <= 0.0 {
+                bail!("calibration entry '{name}': scale must be finite and > 0");
+            }
+            let zp: i32 = parts
+                .next()
+                .ok_or_else(|| err!("calibration entry '{name}' is truncated (no zero point)"))?
+                .parse()
+                .map_err(|_| err!("calibration entry '{name}': bad zero point"))?;
+            if let Some(extra) = parts.next() {
+                bail!("calibration entry '{name}': trailing part '{extra}'");
+            }
+            let (lo, hi) = if signed { (-128, 127) } else { (0, 255) };
+            if zp < lo || zp > hi {
+                bail!("calibration entry '{name}': zero point {zp} outside [{lo},{hi}]");
+            }
+            entries.push(CalibEntry { name: name.to_string(), signed, scale, zp });
+        }
+        Ok(Int8Calib { entries })
+    }
+
+    /// Serialize as the manifest field (with the `calib:` prefix);
+    /// round-trips exactly through [`Int8Calib::parse`] (Rust's shortest
+    /// f32 display re-parses to the identical bits).
+    pub fn manifest_field(&self) -> String {
+        let body: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| {
+                format!("{}={}@{}@{}", e.name, if e.signed { "i8" } else { "u8" }, e.scale, e.zp)
+            })
+            .collect();
+        format!("calib:{}", body.join(","))
+    }
+}
+
+/// Parsed `<name>.meta` line: `name;in0shape,in1shape,…;outshape`, plus
+/// an optional fourth `calib:…` field carrying the int8 calibration
+/// record ([`Int8Calib`]).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelMeta {
     pub name: String,
     pub input_shapes: Vec<Vec<usize>>,
     pub output_shape: Vec<usize>,
+    /// Per-tensor int8 quantization record; `Some` marks the model as
+    /// servable under `--dtype int8` (the plan backend quantizes its
+    /// eligible dots when int8 mode is on).
+    pub calib: Option<Int8Calib>,
 }
 
 impl ModelMeta {
-    /// Parse one manifest line. Exactly three `;`-separated fields are
-    /// accepted — a line with trailing fields (`name;ins;out;junk`) is
-    /// malformed and rejected, not silently truncated.
+    /// Parse one manifest line. Three `;`-separated fields, plus at most
+    /// one optional `calib:`-prefixed calibration field — any other
+    /// trailing field (`name;ins;out;junk`) is malformed and rejected,
+    /// not silently truncated, and a recognized `calib:` field must
+    /// parse completely (truncated records are hard errors too).
     pub fn parse(line: &str) -> Result<ModelMeta> {
         let mut parts = line.trim().split(';');
         let name = parts.next().ok_or_else(|| err!("empty manifest line"))?.to_string();
@@ -73,6 +180,16 @@ impl ModelMeta {
         }
         let ins = parts.next().ok_or_else(|| err!("{name}: missing input shapes"))?;
         let out = parts.next().ok_or_else(|| err!("{name}: missing output shape"))?;
+        let calib = match parts.next() {
+            None => None,
+            Some(field) => match field.strip_prefix("calib:") {
+                Some(payload) => Some(
+                    Int8Calib::parse(payload)
+                        .map_err(|e| e.context(format!("{name}: calibration field")))?,
+                ),
+                None => bail!("{name}: trailing field '{field}' in manifest line"),
+            },
+        };
         if let Some(extra) = parts.next() {
             bail!("{name}: trailing field '{extra}' in manifest line");
         }
@@ -83,6 +200,7 @@ impl ModelMeta {
             name,
             input_shapes: ins.split(',').map(parse_shape).collect::<Result<_>>()?,
             output_shape: parse_shape(out)?,
+            calib,
         })
     }
 
@@ -206,13 +324,17 @@ impl CompiledModel for InterpretedModel {
 /// executing [`ExecCtx`].
 pub struct HloPlanBackend {
     opts: plan::PlanOptions,
+    /// `--dtype int8`: quantize the eligible dots of every model whose
+    /// meta carries a calibration record (models without one still
+    /// compile and serve f32 — the mixed fleet a coordinator loads).
+    int8: bool,
 }
 
 impl HloPlanBackend {
     /// The plan backend with default options (thread policy lives on the
     /// device; bf16 dots accumulate widened).
     pub fn new() -> HloPlanBackend {
-        HloPlanBackend { opts: plan::PlanOptions::default() }
+        HloPlanBackend { opts: plan::PlanOptions::default(), int8: false }
     }
 
     /// A plan backend whose `DotBf16` steps run under the given
@@ -221,7 +343,26 @@ impl HloPlanBackend {
     /// ([`Bf16Accum::F32Pairs`](crate::blas::bf16_gemm::Bf16Accum)):
     /// `power-mma serve --bf16-accum f32-pairs` builds its engines here.
     pub fn with_bf16_accum(accum: crate::blas::bf16_gemm::Bf16Accum) -> HloPlanBackend {
-        HloPlanBackend { opts: plan::PlanOptions { bf16_accum: accum } }
+        HloPlanBackend {
+            opts: plan::PlanOptions { bf16_accum: accum, ..Default::default() },
+            int8: false,
+        }
+    }
+
+    /// The **int8 serving** backend (`power-mma serve --dtype int8`):
+    /// each model whose [`ModelMeta`] carries a calibration record
+    /// compiles with [`plan::PlanOptions::int8_calib`] set, so its
+    /// calibrated `{1}×{0}` dots (and their bias/relu tails) lower to
+    /// `dot_i8` steps on the quantized rank-4 engine
+    /// ([`crate::blas::i8_gemm`]). Models without a record serve f32,
+    /// unchanged.
+    pub fn int8() -> HloPlanBackend {
+        HloPlanBackend { opts: plan::PlanOptions::default(), int8: true }
+    }
+
+    /// Whether this backend quantizes calibrated models.
+    pub fn is_int8(&self) -> bool {
+        self.int8
     }
 }
 
@@ -244,7 +385,11 @@ impl EngineBackend for HloPlanBackend {
         meta: &ModelMeta,
     ) -> Result<Box<dyn CompiledModel>> {
         let module = parse_and_validate(name, hlo_text, meta)?;
-        let plan = plan::Plan::compile_with_options(&module, self.opts)
+        let mut opts = self.opts.clone();
+        if self.int8 {
+            opts.int8_calib = meta.calib.clone();
+        }
+        let plan = plan::Plan::compile_with_options(&module, opts)
             .map_err(|e| e.context(format!("compiling plan for {name}")))?;
         let bufs = std::sync::Mutex::new(plan.new_buffers());
         Ok(Box::new(PlanModel { plan, bufs }))
@@ -495,6 +640,38 @@ impl Runtime {
         Ok(names)
     }
 
+    /// [`Runtime::load_mlp_buckets`] for **int8 serving**: every bucket
+    /// meta carries the calibration record of [`mlp_int8_calib`]
+    /// (computed once and shared — the record is per-tensor, not
+    /// per-batch), so an int8 backend ([`HloPlanBackend::int8`]) lowers
+    /// each bucket's dots onto the quantized rank-4 engine. Call this
+    /// *before* [`Runtime::load_all`] when serving int8: loads are
+    /// idempotent by name, and the calibrated bucket must win over the
+    /// record-less `mlp_b32` disk fixture.
+    pub fn load_mlp_buckets_int8(
+        &mut self,
+        buckets: &[usize],
+        features: usize,
+        hidden: usize,
+        classes: usize,
+    ) -> Result<Vec<String>> {
+        let calib = mlp_int8_calib(features, hidden, classes);
+        let mut names = Vec::new();
+        for &b in buckets {
+            if b == 0 {
+                continue;
+            }
+            let mut meta = mlp_meta(b, features, hidden, classes);
+            meta.calib = Some(calib.clone());
+            let name = meta.name.clone();
+            let text = mlp_hlo_text(b, features, hidden, classes);
+            self.load_from_text(meta, &text)
+                .map_err(|e| e.context(format!("compiling int8 batch bucket {name}")))?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
     /// Read the python-side expected output for the deterministic inputs.
     pub fn expected(&self, name: &str) -> Result<Vec<f32>> {
         let path = self.dir.join(format!("{name}.expected.bin"));
@@ -576,7 +753,88 @@ pub fn mlp_meta(batch: usize, features: usize, hidden: usize, classes: usize) ->
             vec![classes],
         ],
         output_shape: vec![batch, classes],
+        calib: None,
     }
+}
+
+/// The **calibration sweep** of the int8 serving path: replay the MLP's
+/// f32 forward pass over a sweep of deterministic request batches
+/// ([`det_input`], the serving traffic model), track the min/max range
+/// of every tensor feeding a dot — the activations `Arg_0.1` /
+/// `maximum.14` (the `xvi8ger4` signed-i8 X side) and the weights
+/// `Arg_1.2` / `Arg_3.4` (the unsigned-u8 Y side) — and derive each
+/// tensor's asymmetric affine quantization (`scale = range/255`, zero
+/// point placing `lo` at the bottom of the integer range). The entry
+/// names are the instruction names of [`mlp_hlo_text`], which the plan's
+/// `DotI8` matcher looks up.
+pub fn mlp_int8_calib(features: usize, hidden: usize, classes: usize) -> Int8Calib {
+    let (f, h, c) = (features, hidden, classes);
+    let w1 = det_input(f * h, 2);
+    let b1 = det_input(h, 3);
+    let w2 = det_input(h * c, 4);
+    let range = |v: &[f32]| {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in v {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        (lo.min(0.0), hi.max(0.0)) // affine grids must represent 0 exactly
+    };
+    // sweep: batches of serving traffic at several salts, batch 32
+    let (mut xlo, mut xhi) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut alo, mut ahi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for salt in 1..=8u64 {
+        let x = det_input(32 * f, salt);
+        let (lo, hi) = range(&x);
+        xlo = xlo.min(lo);
+        xhi = xhi.max(hi);
+        // h = relu(x·w1 + b1), the f32 activation the second dot consumes
+        for i in 0..32 {
+            for j in 0..h {
+                let mut acc = 0f32;
+                for kk in 0..f {
+                    acc += x[i * f + kk] * w1[kk * h + j];
+                }
+                let v = (acc + b1[j]).max(0.0);
+                alo = alo.min(v.min(0.0));
+                ahi = ahi.max(v);
+            }
+        }
+    }
+    let entry = |name: &str, signed: bool, lo: f32, hi: f32| {
+        let qmin = if signed { -128i32 } else { 0 };
+        let span = (hi - lo).max(f32::MIN_POSITIVE);
+        let scale = span / 255.0;
+        let zp = qmin - (lo / scale).round() as i32;
+        CalibEntry {
+            name: name.to_string(),
+            signed,
+            scale,
+            zp: zp.clamp(qmin, qmin + 255),
+        }
+    };
+    let (w1lo, w1hi) = range(&w1);
+    let (w2lo, w2hi) = range(&w2);
+    Int8Calib {
+        entries: vec![
+            entry("Arg_0.1", true, xlo, xhi),
+            entry("Arg_1.2", false, w1lo, w1hi),
+            entry("maximum.14", true, alo, ahi),
+            entry("Arg_3.4", false, w2lo, w2hi),
+        ],
+    }
+}
+
+/// [`mlp_meta`] with the int8 calibration record attached
+/// ([`mlp_int8_calib`]) — the **quantized-MLP fixture**: loaded under an
+/// int8 backend ([`HloPlanBackend::int8`]) both its dots lower to
+/// `dot_i8` steps; under any other backend the record is inert and the
+/// model serves f32.
+pub fn mlp_int8_meta(batch: usize, features: usize, hidden: usize, classes: usize) -> ModelMeta {
+    let mut meta = mlp_meta(batch, features, hidden, classes);
+    meta.calib = Some(mlp_int8_calib(features, hidden, classes));
+    meta
 }
 
 #[cfg(test)]
@@ -802,6 +1060,114 @@ mod tests {
                 }
             }
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn calib_field_round_trips_and_rejects_malformed_records() {
+        let calib = mlp_int8_calib(8, 6, 4);
+        let line = format!("q;2x8,8x6,6,6x4,4;2x4;{}", calib.manifest_field());
+        let m = ModelMeta::parse(&line).unwrap();
+        assert_eq!(m.calib.as_ref(), Some(&calib), "manifest round-trip must be exact");
+        // a non-calib fourth field is still the PR-4 trailing-field error
+        let e = ModelMeta::parse("name;2x2;2x2;junk").unwrap_err().to_string();
+        assert!(e.contains("trailing field"), "{e}");
+        // truncated or malformed records are hard errors (never panics,
+        // never silently-partial parses)
+        for bad in [
+            "calib:",                 // empty record
+            "calib:x",                // no '='
+            "calib:=i8@0.1@0",        // empty tensor name
+            "calib:x=f8@0.1@0",       // bad kind
+            "calib:x=i8",             // truncated: no scale
+            "calib:x=i8@zz@0",        // bad scale
+            "calib:x=i8@0@0",         // scale must be > 0
+            "calib:x=i8@inf@0",       // scale must be finite
+            "calib:x=i8@0.1",         // truncated: no zero point
+            "calib:x=i8@0.1@q",       // bad zero point
+            "calib:x=i8@0.1@200",     // zp outside the i8 range
+            "calib:x=u8@0.1@-1",      // zp outside the u8 range
+            "calib:x=i8@0.1@0@extra", // trailing part
+            "calib:a=i8@0.1@0,",      // truncated second entry
+        ] {
+            let line = format!("name;2x2;2x2;{bad}");
+            let e = ModelMeta::parse(&line);
+            assert!(e.is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn int8_backend_serves_the_calibrated_mlp_quantized() {
+        use crate::blas::i8_gemm::{gemm_i8_dequant_reference, QuantParams};
+        let dir = std::env::temp_dir().join(format!("mma-rt-int8-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::with_backend(Box::new(HloPlanBackend::int8()), &dir);
+        assert!(rt.platform().contains("plan"));
+        // the calibrated buckets load BEFORE load_all, so they win the
+        // name over the record-less mlp_b32 disk fixture (loads are
+        // idempotent by name)
+        let (f, h, c) = (64usize, 128usize, 32usize);
+        let names = rt.load_mlp_buckets_int8(&[4, 32], f, h, c).unwrap();
+        assert_eq!(names, vec!["mlp_b4", "mlp_b32"]);
+        rt.load_all().unwrap();
+        assert!(
+            rt.meta("mlp_b32").unwrap().calib.is_some(),
+            "the calibrated bucket must win over the fixture meta"
+        );
+
+        // quantized serving is bitwise the composition of the int8
+        // engine's own quantize→dot→dequantize reference, layer by layer
+        let b = 4usize;
+        let x = det_input(b * f, 1);
+        let w1 = det_input(f * h, 2);
+        let b1 = det_input(h, 3);
+        let w2 = det_input(h * c, 4);
+        let b2 = det_input(c, 5);
+        let got = rt.execute("mlp_b4", &[&x, &w1, &b1, &w2, &b2]).unwrap();
+        let calib = mlp_int8_calib(f, h, c);
+        let qp = |an: &str, bn: &str| {
+            let (ea, eb) = (calib.get(an).unwrap(), calib.get(bn).unwrap());
+            QuantParams { a_scale: ea.scale, a_zp: ea.zp, b_scale: eb.scale, b_zp: eb.zp }
+        };
+        let hid = gemm_i8_dequant_reference(
+            &x,
+            &w1,
+            b,
+            h,
+            f,
+            &qp("Arg_0.1", "Arg_1.2"),
+            Some(&b1),
+            true,
+        );
+        let want = gemm_i8_dequant_reference(
+            &hid,
+            &w2,
+            b,
+            c,
+            h,
+            &qp("maximum.14", "Arg_3.4"),
+            Some(&b2),
+            false,
+        );
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "int8 serving must equal the engine reference bit for bit"
+        );
+
+        // and it really is the quantized path: an f32 runtime over the
+        // same artifacts produces (close but) different bits
+        let mut rtf = Runtime::cpu(&dir).unwrap();
+        rtf.load_mlp_buckets(&[4], f, h, c).unwrap();
+        let f32_out = rtf.execute("mlp_b4", &[&x, &w1, &b1, &w2, &b2]).unwrap();
+        assert_ne!(got, f32_out, "quantization must bite");
+        let max_err = got
+            .iter()
+            .zip(&f32_out)
+            .map(|(a, e)| (a - e).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.5, "quantization error out of family: {max_err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

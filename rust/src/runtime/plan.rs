@@ -97,7 +97,9 @@
 //! ```
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
+use super::Int8Calib;
 use crate::blas::bf16_gemm::{gemm_bf16_packed_into, Bf16Accum, Bf16Scratch, Bf16Src};
+use crate::blas::i8_gemm::{gemm_i8_dequant_into, I8Epilogue, I8Scratch, QuantParams};
 use crate::blas::block_gemm::{
     gemm_f32_fused_into, threads_for_pooled, Accum, Epilogue, GemmScratch, PanelB, Par,
 };
@@ -168,6 +170,25 @@ enum Step {
     /// ([`PlanInput::Bf16`]), the bits feed the packers directly (no
     /// widening staging at all).
     DotBf16 { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize },
+    /// A calibrated dot (plus any fused bias/relu tail) lowered onto the
+    /// **int8 rank-4 quantized engine** ([`crate::blas::i8_gemm`]): the
+    /// whole quantize→dot→dequantize pipeline runs inside one step —
+    /// both f32 operands are affine-quantized (signed-i8 lhs /
+    /// unsigned-u8 rhs, the `xvi8ger4` §II-B.2 split, parameters from
+    /// the model's calibration record) *during* panel packing, the
+    /// rank-4 wrapping i32 dot is bitwise the Machine's `xvi8ger4pp`
+    /// chain, and the C writeback dequantizes with the exact zero-point
+    /// correction before applying the epilogue.
+    DotI8 {
+        a: usize,
+        b: usize,
+        out: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        epi: StepEpi,
+        q: QuantParams,
+    },
     /// Affine gather (`broadcast` / `slice`).
     Gather { src: usize, out: usize, spec: GatherSpec },
 }
@@ -214,6 +235,9 @@ pub struct Plan {
     /// Largest `m`/`n`/`k` over all `DotBf16` steps (sizes the bf16
     /// packed-panel scratch).
     max_bf16: (usize, usize, usize),
+    /// Largest `m`/`n`/`k` over all `DotI8` steps (sizes the int8
+    /// packed-panel scratch).
+    max_i8: (usize, usize, usize),
     /// Per-parameter: true when every read of the parameter's value is a
     /// `DotBf16` operand, so a raw-bf16 request input
     /// ([`PlanInput::Bf16`]) can feed the packers directly — no widening
@@ -225,7 +249,7 @@ pub struct Plan {
 }
 
 /// Compile-time options for [`Plan::compile_with_options`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PlanOptions {
     /// Accumulation contract for `DotBf16` steps: the default
     /// [`Bf16Accum::Widened`] (f64 image, checked against
@@ -234,17 +258,25 @@ pub struct PlanOptions {
     /// `gemm_bf16_reference_pairs`) — the serving-mode switch behind
     /// `power-mma serve --bf16-accum`.
     pub bf16_accum: Bf16Accum,
+    /// Per-tensor int8 calibration (`Some` = int8 serving mode, the
+    /// switch behind `power-mma serve --dtype int8`): every `{1}×{0}`
+    /// rank-2 dot whose lhs has a *signed* entry and whose rhs has an
+    /// *unsigned* entry — by HLO instruction name — lowers to a
+    /// [`Step::DotI8`] on the quantized rank-4 engine, bias/relu tails
+    /// included. Uncalibrated dots keep their f32 lowering.
+    pub int8_calib: Option<Int8Calib>,
 }
 
 /// Reusable per-model execution state: the arena slots, the GEMM
-/// scratch of each engine (f32 and packed bf16), and the per-request
-/// raw-input routing table. One `ExecBuffers` serves any number of
+/// scratch of each engine (f32, packed bf16, packed i8/u8), and the
+/// per-request raw-input routing table. One `ExecBuffers` serves any number of
 /// sequential requests with no allocation; create with
 /// [`Plan::new_buffers`].
 pub struct ExecBuffers {
     slots: Vec<Vec<f32>>,
     scratch: GemmScratch,
     bf16_scratch: Bf16Scratch,
+    i8_scratch: I8Scratch,
     /// Per-slot: `param index + 1` while the slot logically holds a
     /// raw-bf16 request input that skipped its widening copy (consumed
     /// directly by `DotBf16` packers), 0 otherwise. Reset each request.
@@ -332,6 +364,18 @@ enum Fuse {
     /// A dot over two `convert(bf16) → convert(f32)` chains: one packed
     /// bf16 GEMM over inputs `(a, b)`, the rounding fused into packing.
     DotBf16 { a: usize, b: usize, m: usize, n: usize, k: usize },
+    /// A calibrated dot (with any bias/relu tail) routed to the int8
+    /// rank-4 quantized engine: quantize→dot→dequantize in one step.
+    DotI8 {
+        a: usize,
+        b: usize,
+        bias: Option<usize>,
+        relu: bool,
+        m: usize,
+        n: usize,
+        k: usize,
+        q: QuantParams,
+    },
 }
 
 impl Fuse {
@@ -341,6 +385,13 @@ impl Fuse {
             Fuse::Conv { w, img, .. } => vec![*w, *img],
             Fuse::DotEpi { a, b, bias, .. } => vec![*a, *b, *bias],
             Fuse::DotBf16 { a, b, .. } => vec![*a, *b],
+            Fuse::DotI8 { a, b, bias, .. } => {
+                let mut v = vec![*a, *b];
+                if let Some(s) = bias {
+                    v.push(*s);
+                }
+                v
+            }
         }
     }
 }
@@ -763,12 +814,77 @@ fn match_dot_bf16(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(F
     Some((Fuse::DotBf16 { a, b, m: ad[0], n: bd[1], k: ad[1] }, consumed))
 }
 
+/// Both dot operands calibrated with the right `xvi8ger4` signedness
+/// (signed lhs, unsigned rhs), looked up by HLO instruction name →
+/// the step's [`QuantParams`]. `None` (f32 fallback) otherwise.
+fn i8_quant_params(
+    instrs: &[Instr],
+    calib: &Int8Calib,
+    a: usize,
+    b: usize,
+) -> Option<QuantParams> {
+    if instrs[a].dtype != DType::F32 || instrs[b].dtype != DType::F32 {
+        return None;
+    }
+    let ea = calib.get(&instrs[a].name)?;
+    let eb = calib.get(&instrs[b].name)?;
+    if !ea.signed || eb.signed {
+        return None;
+    }
+    Some(QuantParams { a_scale: ea.scale, a_zp: ea.zp, b_scale: eb.scale, b_zp: eb.zp })
+}
+
+/// Match a quantizable dot rooted at `i` (int8 serving mode only): an
+/// epilogued dot (`add(dot, bias)` / `maximum(add(dot, bias), 0)`) or a
+/// bare `{1}×{0}` rank-2 dot, whose operands both carry calibration
+/// entries of the right signedness. The bias/relu tail fuses *behind*
+/// the dequantized writeback — quantize→dot→dequantize(+bias/relu) is
+/// one step. A structurally-matching dot without calibration returns
+/// `None` so the f32 matchers keep it.
+fn match_dot_i8(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    i: usize,
+    calib: Option<&Int8Calib>,
+) -> Option<(Fuse, Vec<usize>)> {
+    let calib = calib?;
+    if let Some((Fuse::DotEpi { a, b, bias, relu, m, n, k }, consumed)) =
+        match_dot_epi(instrs, users, i)
+    {
+        let q = i8_quant_params(instrs, calib, a, b)?;
+        return Some((Fuse::DotI8 { a, b, bias: Some(bias), relu, m, n, k, q }, consumed));
+    }
+    // a bare calibrated dot: the dot itself is the root (it may be
+    // multi-use or a request output), nothing is consumed
+    let d = &instrs[i];
+    if d.opcode != "dot" || d.lhs_contracting != Some(1) || d.rhs_contracting != Some(0) {
+        return None;
+    }
+    let (a, b) = (*d.operands.first()?, *d.operands.get(1)?);
+    let (ad, bd) = (&instrs[a].dims, &instrs[b].dims);
+    if ad.len() != 2 || bd.len() != 2 || ad[1] != bd[0] || d.dims != [ad[0], bd[1]] {
+        return None;
+    }
+    let q = i8_quant_params(instrs, calib, a, b)?;
+    Some((
+        Fuse::DotI8 { a, b, bias: None, relu: false, m: ad[0], n: bd[1], k: ad[1], q },
+        vec![],
+    ))
+}
+
 /// Run the rewrite over the whole entry computation (outermost roots
 /// first, so a sub-chain never steals a match from the chain containing
 /// it). Returns the per-instruction fusion decisions and the consumed
 /// set; a match is dropped whenever consuming it would hide a request
 /// output, a non-`f32` value, or a node another match already claimed.
-fn rewrite(instrs: &[Instr], is_out: &[bool]) -> (Vec<Option<Fuse>>, Vec<bool>) {
+/// In int8 serving mode (`calib` present) the quantized matcher runs
+/// first, so a calibrated dot+bias tail becomes `DotI8` rather than the
+/// f32 `DotEpi`.
+fn rewrite(
+    instrs: &[Instr],
+    is_out: &[bool],
+    calib: Option<&Int8Calib>,
+) -> (Vec<Option<Fuse>>, Vec<bool>) {
     let users = build_users(instrs);
     let n = instrs.len();
     let mut fused: Vec<Option<Fuse>> = (0..n).map(|_| None).collect();
@@ -777,7 +893,8 @@ fn rewrite(instrs: &[Instr], is_out: &[bool]) -> (Vec<Option<Fuse>>, Vec<bool>) 
         if consumed[i] || instrs[i].dtype != DType::F32 {
             continue;
         }
-        let m = match_dot_epi(instrs, &users, i)
+        let m = match_dot_i8(instrs, &users, i, calib)
+            .or_else(|| match_dot_epi(instrs, &users, i))
             .or_else(|| match_conv(instrs, &users, i))
             .or_else(|| match_dot_bf16(instrs, &users, i));
         let Some((f, cons)) = m else {
@@ -837,6 +954,16 @@ fn param_pack_flags(
             }
             Step::Im2colGemm { w, img, out, .. } => (vec![*w, *img], *out),
             Step::DotBf16 { out, .. } => (vec![], *out),
+            Step::DotI8 { a, b, out, epi, .. } => {
+                // DotI8 packers quantize from f32 slots, so its reads
+                // demote like any other f32 read
+                let mut r = vec![*a, *b];
+                match epi {
+                    StepEpi::Bias(s) | StepEpi::BiasRelu(s) => r.push(*s),
+                    StepEpi::None => {}
+                }
+                (r, *out)
+            }
             Step::Gather { src, out, .. } => (vec![*src], *out),
         };
         for slot in reads {
@@ -887,7 +1014,7 @@ impl Plan {
         }
 
         // -- rewrite: fuse conv chains and dot epilogue tails ------------
-        let (fused, mut consumed) = rewrite(instrs, &is_out);
+        let (fused, mut consumed) = rewrite(instrs, &is_out, opts.int8_calib.as_ref());
 
         // effective operands after fusion: what the emitted step actually
         // reads (fused roots read the fusion inputs; consumed interior
@@ -953,6 +1080,7 @@ impl Plan {
         let mut assigns: Vec<SlotAssign> = Vec::new();
         let mut max_dot = (0usize, 0usize, 0usize);
         let mut max_bf16 = (0usize, 0usize, 0usize);
+        let mut max_i8 = (0usize, 0usize, 0usize);
 
         // Recycle the slots of values whose last consumer is step `i`
         // (its operands, or an output nobody consumes). Runs only *after*
@@ -1054,6 +1182,24 @@ impl Plan {
                             m: *m,
                             n: *nn,
                             k: *k,
+                        });
+                    }
+                    Fuse::DotI8 { a, b, bias, relu, m, n: nn, k, q } => {
+                        max_i8 = (max_i8.0.max(*m), max_i8.1.max(*nn), max_i8.2.max(*k));
+                        let epi = match (bias, relu) {
+                            (None, _) => StepEpi::None,
+                            (Some(s), false) => StepEpi::Bias(slot_of[*s].unwrap()),
+                            (Some(s), true) => StepEpi::BiasRelu(slot_of[*s].unwrap()),
+                        };
+                        steps.push(Step::DotI8 {
+                            a: slot_of[*a].unwrap(),
+                            b: slot_of[*b].unwrap(),
+                            out,
+                            m: *m,
+                            n: *nn,
+                            k: *k,
+                            epi,
+                            q: *q,
                         });
                     }
                 }
@@ -1326,6 +1472,7 @@ impl Plan {
             assigns,
             max_dot,
             max_bf16,
+            max_i8,
             param_pack_bf16,
             bf16_accum: opts.bf16_accum,
         })
@@ -1347,7 +1494,8 @@ impl Plan {
     /// Step kinds in program order — the observable shape of the
     /// compiled plan, for tests and the bench smoke: `"param"`,
     /// `"copy"`, `"bf16"`, `"binary"`, `"dot"`, `"dot_bias"`,
-    /// `"dot_bias_relu"`, `"dot_bf16"`, `"im2col_gemm"`, `"gather"`.
+    /// `"dot_bias_relu"`, `"dot_bf16"`, `"dot_i8"`, `"dot_i8_bias"`,
+    /// `"dot_i8_bias_relu"`, `"im2col_gemm"`, `"gather"`.
     pub fn step_names(&self) -> Vec<&'static str> {
         self.steps
             .iter()
@@ -1360,6 +1508,9 @@ impl Plan {
                 Step::Dot { epi: StepEpi::Bias(_), .. } => "dot_bias",
                 Step::Dot { epi: StepEpi::BiasRelu(_), .. } => "dot_bias_relu",
                 Step::DotBf16 { .. } => "dot_bf16",
+                Step::DotI8 { epi: StepEpi::None, .. } => "dot_i8",
+                Step::DotI8 { epi: StepEpi::Bias(_), .. } => "dot_i8_bias",
+                Step::DotI8 { epi: StepEpi::BiasRelu(_), .. } => "dot_i8_bias_relu",
                 Step::Im2colGemm { .. } => "im2col_gemm",
                 Step::Gather { .. } => "gather",
             })
@@ -1406,9 +1557,9 @@ impl Plan {
     }
 
     /// Preallocate execution buffers for this plan: all arena slots at
-    /// full capacity, constants baked in, GEMM scratch (f32 and packed
-    /// bf16) sized for the largest dot of each kind. Request execution
-    /// then allocates nothing.
+    /// full capacity, constants baked in, GEMM scratch (f32, packed
+    /// bf16, packed i8/u8) sized for the largest dot of each kind.
+    /// Request execution then allocates nothing.
     pub fn new_buffers(&self) -> ExecBuffers {
         let mut slots: Vec<Vec<f32>> = self.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
         for (slot, data) in &self.consts {
@@ -1428,10 +1579,17 @@ impl Plan {
             let cap = super::device::Device::default_threads();
             bf16_scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
         }
+        let mut i8_scratch = I8Scratch::new();
+        let (m, n, k) = self.max_i8;
+        if m > 0 {
+            let cap = super::device::Device::default_threads();
+            i8_scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
+        }
         ExecBuffers {
             slots,
             scratch,
             bf16_scratch,
+            i8_scratch,
             raw_param: vec![0u32; self.slot_caps.len()],
         }
     }
@@ -1536,6 +1694,7 @@ impl Plan {
                 | Step::Binary { out, .. }
                 | Step::Dot { out, .. }
                 | Step::DotBf16 { out, .. }
+                | Step::DotI8 { out, .. }
                 | Step::Im2colGemm { out, .. }
                 | Step::Gather { out, .. } => *out,
             };
@@ -1653,6 +1812,29 @@ impl Plan {
                         self.bf16_accum,
                         step_par,
                         &mut bufs.bf16_scratch,
+                    );
+                    bufs.slots[*out] = o;
+                }
+                Step::DotI8 { a, b, out, m, n, k, epi, q } => {
+                    let mut o = std::mem::take(&mut bufs.slots[*out]);
+                    let step_par = par.for_gemm(*m, *n, *k);
+                    let slots = &bufs.slots;
+                    let epilogue = match epi {
+                        StepEpi::None => I8Epilogue::None,
+                        StepEpi::Bias(s) => I8Epilogue::Bias(&slots[*s][..*n]),
+                        StepEpi::BiasRelu(s) => I8Epilogue::BiasRelu(&slots[*s][..*n]),
+                    };
+                    gemm_i8_dequant_into(
+                        &mut o[..m * n],
+                        &slots[*a][..m * k],
+                        &slots[*b][..k * n],
+                        *m,
+                        *n,
+                        *k,
+                        q,
+                        epilogue,
+                        step_par,
+                        &mut bufs.i8_scratch,
                     );
                     bufs.slots[*out] = o;
                 }
@@ -2076,5 +2258,165 @@ ENTRY main {
         let m = HloModule::parse(text).unwrap();
         let e = Plan::compile(&m).unwrap_err().to_string();
         assert!(e.contains("unsupported HLO opcode"), "{e}");
+    }
+
+    fn int8_opts(calib: crate::runtime::Int8Calib) -> PlanOptions {
+        PlanOptions { int8_calib: Some(calib), ..Default::default() }
+    }
+
+    #[test]
+    fn int8_calibration_lowers_both_mlp_dots_to_quantized_steps() {
+        use crate::blas::i8_gemm::gemm_i8_dequant_reference;
+        use crate::runtime::{det_input, mlp_hlo_text, mlp_int8_calib};
+
+        let (b, f, h, c) = (4usize, 6usize, 5usize, 3usize);
+        let m = HloModule::parse(&mlp_hlo_text(b, f, h, c)).unwrap();
+        let calib = mlp_int8_calib(f, h, c);
+        let plan = Plan::compile_with_options(&m, int8_opts(calib.clone())).unwrap();
+        let names = plan.step_names();
+        assert!(names.contains(&"dot_i8_bias_relu"), "layer 1: {names:?}");
+        assert!(names.contains(&"dot_i8_bias"), "layer 2: {names:?}");
+        assert!(
+            names.iter().all(|s| !s.starts_with("dot_bias") && *s != "dot"),
+            "no f32 dot survives under full calibration: {names:?}"
+        );
+
+        // execution is bitwise the composition of the engine's own
+        // quantize→dot→dequantize reference, layer by layer
+        let x = det_input(b * f, 1);
+        let w1 = det_input(f * h, 2);
+        let b1 = det_input(h, 3);
+        let w2 = det_input(h * c, 4);
+        let b2 = det_input(c, 5);
+        let qp = |an: &str, bn: &str| {
+            let (ea, eb) = (calib.get(an).unwrap(), calib.get(bn).unwrap());
+            assert!(ea.signed && !eb.signed);
+            QuantParams { a_scale: ea.scale, a_zp: ea.zp, b_scale: eb.scale, b_zp: eb.zp }
+        };
+        let hid = gemm_i8_dequant_reference(
+            &x,
+            &w1,
+            b,
+            h,
+            f,
+            &qp("Arg_0.1", "Arg_1.2"),
+            Some(&b1),
+            true,
+        );
+        let want = gemm_i8_dequant_reference(
+            &hid,
+            &w2,
+            b,
+            c,
+            h,
+            &qp("maximum.14", "Arg_3.4"),
+            Some(&b2),
+            false,
+        );
+        let got = plan.execute(&[&x, &w1, &b1, &w2, &b2], 1).unwrap();
+        assert_eq!(got[0].dims, vec![b, c]);
+        let gb: Vec<u32> = got[0].data.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb);
+
+        // the quantized path really ran: it differs from f32 serving,
+        // but only by quantization-grid error
+        let f32_out = Plan::compile(&m).unwrap().execute(&[&x, &w1, &b1, &w2, &b2], 1).unwrap();
+        assert_ne!(got[0].data, f32_out[0].data, "quantization must bite");
+        let max_err = got[0]
+            .data
+            .iter()
+            .zip(&f32_out[0].data)
+            .map(|(a, e)| (a - e).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 0.25, "quantization error out of family: {max_err}");
+    }
+
+    #[test]
+    fn empty_int8_options_compile_the_unchanged_f32_plan() {
+        use crate::runtime::mlp_hlo_text;
+        let m = HloModule::parse(&mlp_hlo_text(2, 3, 4, 2)).unwrap();
+        let with_none = Plan::compile_with_options(&m, PlanOptions::default()).unwrap();
+        assert_eq!(
+            with_none.step_names(),
+            Plan::compile(&m).unwrap().step_names(),
+            "no calibration record → the f32 lowering, untouched"
+        );
+        assert!(with_none.step_names().contains(&"dot_bias_relu"));
+    }
+
+    #[test]
+    fn partially_calibrated_or_missigned_dots_fall_back_to_f32() {
+        use crate::runtime::{CalibEntry, Int8Calib, mlp_hlo_text, mlp_int8_calib};
+        let m = HloModule::parse(&mlp_hlo_text(2, 3, 4, 2)).unwrap();
+
+        // only the lhs of layer 1 calibrated: neither dot may lower
+        let partial = Int8Calib {
+            entries: vec![CalibEntry {
+                name: "Arg_0.1".into(),
+                signed: true,
+                scale: 0.01,
+                zp: 0,
+            }],
+        };
+        let plan = Plan::compile_with_options(&m, int8_opts(partial)).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|s| !s.starts_with("dot_i8")), "{names:?}");
+        assert!(names.contains(&"dot_bias_relu"), "{names:?}");
+
+        // signedness swapped on layer 1's operands (lhs must be the
+        // signed i8 side, rhs the unsigned u8 side): layer 1 stays f32
+        // while the still-valid layer 2 lowers
+        let mut swapped = mlp_int8_calib(3, 4, 2);
+        for e in &mut swapped.entries {
+            if e.name == "Arg_0.1" {
+                e.signed = false;
+                e.zp = 128;
+            }
+        }
+        let plan = Plan::compile_with_options(&m, int8_opts(swapped)).unwrap();
+        let names = plan.step_names();
+        assert!(names.contains(&"dot_bias_relu"), "layer 1 falls back: {names:?}");
+        assert!(names.contains(&"dot_i8_bias"), "layer 2 still lowers: {names:?}");
+    }
+
+    #[test]
+    fn dtype_mismatched_dots_error_or_fall_back_never_panic() {
+        use crate::runtime::{CalibEntry, Int8Calib};
+        let entry = |name: &str, signed: bool| CalibEntry {
+            name: name.into(),
+            signed,
+            scale: 0.01,
+            zp: if signed { 0 } else { 128 },
+        };
+        let calib = Int8Calib {
+            entries: vec![entry("Arg_0.1", true), entry("Arg_1.2", false)],
+        };
+
+        // integer-typed operands: parseable (DType::Other) but the plan
+        // must reject them with an error, calibrated or not
+        let s32 = "ENTRY main {\n  Arg_0.1 = s32[2,3]{1,0} parameter(0)\n  Arg_1.2 = s32[3,2]{1,0} parameter(1)\n  ROOT dot.3 = s32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(s32).unwrap();
+        let e = Plan::compile_with_options(&m, int8_opts(calib.clone())).unwrap_err().to_string();
+        assert!(e.contains("unsupported element type"), "{e}");
+        assert!(Plan::compile(&m).is_err());
+
+        // contraction mismatch under calibration: the quantized matcher
+        // must skip the malformed dot and the bare lowering reports it
+        let bad_k = "ENTRY main {\n  Arg_0.1 = f32[2,3]{1,0} parameter(0)\n  Arg_1.2 = f32[4,2]{1,0} parameter(1)\n  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(bad_k).unwrap();
+        let e = Plan::compile_with_options(&m, int8_opts(calib.clone())).unwrap_err().to_string();
+        assert!(e.contains("contraction mismatch"), "{e}");
+
+        // a bf16-typed lhs with calibration entries present for *both*
+        // operand names: dtype rules out quantization (the matcher
+        // requires f32 operands) — the dot must fall back to the f32
+        // step, not lower to dot_i8 and not panic
+        let bf16_lhs = "ENTRY main {\n  Arg_0.1 = bf16[2,3]{1,0} parameter(0)\n  Arg_1.2 = f32[3,2]{1,0} parameter(1)\n  ROOT dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = HloModule::parse(bf16_lhs).unwrap();
+        let plan = Plan::compile_with_options(&m, int8_opts(calib)).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|s| !s.starts_with("dot_i8")), "must not quantize: {names:?}");
+        assert!(names.contains(&"dot"), "the f32 fallback dot runs instead: {names:?}");
     }
 }

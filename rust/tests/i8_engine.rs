@@ -1,0 +1,262 @@
+//! Differential coverage for the int8 rank-4 quantized GEMM engine: the
+//! packed-panel microkernel (`blas::i8_gemm`) must replay the Machine's
+//! `xvi8ger4` prime + `xvi8ger4[s]pp` accumulate chains **bitwise** — for
+//! every `k % 4` tail, at operand extremes (i8 −128/127, u8 0/255), and
+//! across the i32 overflow boundary where the `spp` chain clamps while
+//! the modulo chain wraps. The oracle on one side is `isa::exec` itself
+//! (via the register-pressure kernels `gemm_i8_8x16[_sat]`), on the
+//! other the stepwise `gemm_i8_reference`; blocking (KC) and column-chunk
+//! parallel policies must never change a single bit. On top rides the
+//! quantized f32→f32 serving contract: fused quantize→dot→dequantize
+//! equal to its elementwise reference, up to the int8-served MLP bucket
+//! behind the public runtime API.
+
+use power_mma::blas::block_gemm::{Par, KC};
+use power_mma::blas::i8_gemm::{
+    gemm_i8_dequant_into, gemm_i8_dequant_reference, gemm_i8_packed_into, gemm_i8_reference,
+    I8Accum, I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
+};
+use power_mma::kernels::gemm_rp::{gemm_i8_8x16, gemm_i8_8x16_sat};
+use power_mma::testkit::{check, Rng};
+
+fn run_packed(
+    a: I8SrcA<'_>,
+    b: I8SrcB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: I8Accum,
+    par: Par<'_>,
+) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    let mut scratch = I8Scratch::new();
+    gemm_i8_packed_into(&mut c, a, b, m, n, k, accum, par, &mut scratch);
+    c
+}
+
+/// The `isa::exec` oracle at the fixed 8×16 tile: packs the operands into
+/// Machine memory, runs the `xvi8ger4` prime + `xvi8ger4[s]pp` program
+/// (masked-tail prefixed forms for `k % 4 != 0`) instruction by
+/// instruction, and reads the accumulators back. `b` comes in engine
+/// layout (`k×16` row-major) and is transposed to the kernel's 16 rows
+/// of `k`.
+fn machine_8x16(a: &[i8], b: &[u8], k: usize, accum: I8Accum) -> Vec<i32> {
+    let mut yt = vec![0u8; 16 * k];
+    for r in 0..k {
+        for j in 0..16 {
+            yt[j * k + r] = b[r * 16 + j];
+        }
+    }
+    let tile = match accum {
+        I8Accum::Wrapping => gemm_i8_8x16(a, &yt, k),
+        I8Accum::Saturating => gemm_i8_8x16_sat(a, &yt, k),
+    }
+    .expect("the xvi8ger4 program must execute");
+    tile.iter().flatten().copied().collect()
+}
+
+/// Random signed operand with the extreme values guaranteed present.
+fn spiked_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+    let mut v: Vec<i8> = (0..len).map(|_| rng.irange(-128, 127) as i8).collect();
+    for (i, &s) in [-128i8, 127, 0, -1, 1].iter().enumerate() {
+        v[(i * 11 + 5) % len.max(1)] = s;
+    }
+    v
+}
+
+/// Random unsigned operand with the extreme values guaranteed present.
+fn spiked_u8(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mut v: Vec<u8> = (0..len).map(|_| rng.irange(0, 255) as u8).collect();
+    for (i, &s) in [255u8, 0, 128, 1, 254].iter().enumerate() {
+        v[(i * 13 + 7) % len.max(1)] = s;
+    }
+    v
+}
+
+#[test]
+fn every_k_tail_matches_the_isa_machine_bitwise() {
+    // k = 1..=16 walks every k % 4 tail through the masked prefixed
+    // forms, with both accumulate chains, at operand extremes — the
+    // engine, the stepwise reference, and the Machine must agree on
+    // every one of the 8×16 i32 accumulators exactly
+    let mut rng = Rng::new(0x18e4);
+    for k in 1..=16usize {
+        for trial in 0..2 {
+            let a = spiked_i8(&mut rng, 8 * k);
+            let b = spiked_u8(&mut rng, k * 16);
+            for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+                let want = machine_8x16(&a, &b, k, accum);
+                let got = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, accum, Par::Seq);
+                assert_eq!(got, want, "engine vs machine k={k} trial={trial} {accum:?}");
+                let reference = gemm_i8_reference(&a, &b, 8, 16, k, accum);
+                assert_eq!(reference, want, "reference vs machine k={k} {accum:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn kc_boundary_blocks_replay_the_machine_chain() {
+    // the Machine accumulates one flat chain; the engine re-packs per
+    // KC block — KC % 4 == 0 means blocks never split a quad, so the
+    // chains must be the same chain, bit for bit, on both contracts
+    let mut rng = Rng::new(0xb10c);
+    for &k in &[KC - 1, KC + 1] {
+        let a = spiked_i8(&mut rng, 8 * k);
+        let b = spiked_u8(&mut rng, k * 16);
+        for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+            let want = machine_8x16(&a, &b, k, accum);
+            let got = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, accum, Par::Seq);
+            assert_eq!(got, want, "KC straddle k={k} {accum:?}");
+        }
+    }
+}
+
+#[test]
+fn spp_clamps_at_i32_min_where_the_modulo_chain_wraps() {
+    // every product pinned at the most negative value: each rank-4 step
+    // adds 4·(−128·255) = −130560 exactly, so 16500 steps drive the
+    // exact sum to −2_154_240_000, past i32::MIN — spp clamps there,
+    // pp wraps to +2_140_727_296. A k % 4 tail rides the padded lanes
+    // through the overflow crossing.
+    for &tail in &[0usize, 3] {
+        let k = 4 * 16_500 + tail;
+        let a = vec![-128i8; 8 * k];
+        let b = vec![255u8; k * 16];
+        let sat = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, I8Accum::Saturating, Par::Seq);
+        let wrap = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, I8Accum::Wrapping, Par::Seq);
+        assert!(sat.iter().all(|&v| v == i32::MIN), "spp must clamp (tail={tail})");
+        assert_ne!(sat, wrap, "the chains must diverge past the boundary");
+        assert_eq!(sat, machine_8x16(&a, &b, k, I8Accum::Saturating), "spp vs machine tail={tail}");
+        assert_eq!(wrap, gemm_i8_reference(&a, &b, 8, 16, k, I8Accum::Wrapping));
+        if tail == 0 {
+            assert!(wrap.iter().all(|&v| v == 2_140_727_296), "pp wraps to the exact residue");
+            assert_eq!(wrap, machine_8x16(&a, &b, k, I8Accum::Wrapping), "pp vs machine");
+        }
+    }
+}
+
+#[test]
+fn spp_clamps_at_i32_max_on_the_positive_side() {
+    // the positive boundary needs more steps (4·127·255 = 129540 per
+    // step): 16600 steps reach +2_150_364_000 > i32::MAX
+    let k = 4 * 16_600;
+    let a = vec![127i8; 8 * k];
+    let b = vec![255u8; k * 16];
+    let sat = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, I8Accum::Saturating, Par::Seq);
+    let wrap = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), 8, 16, k, I8Accum::Wrapping, Par::Seq);
+    assert!(sat.iter().all(|&v| v == i32::MAX), "spp must clamp at i32::MAX");
+    assert_ne!(sat, wrap);
+    assert_eq!(wrap, gemm_i8_reference(&a, &b, 8, 16, k, I8Accum::Wrapping));
+}
+
+#[test]
+fn random_shapes_across_blocking_boundaries_match_the_reference() {
+    // shapes straddling the microkernel tile, the KC depth blocks, and
+    // the column-chunk split; the parallel policies redistribute work
+    // but must never change bits
+    check("i8 engine blocking boundaries", 12, |rng: &mut Rng| {
+        let m = *rng.pick(&[1usize, 3, 8, 9, 17, 33]);
+        let n = *rng.pick(&[1usize, 15, 16, 17, 48, 130]);
+        let k = *rng.pick(&[1usize, 5, 16, KC - 1, KC, KC + 1, KC + 3, 2 * KC + 2]);
+        let a = spiked_i8(rng, m * k);
+        let b = spiked_u8(rng, k * n);
+        let accum = if rng.bool() { I8Accum::Wrapping } else { I8Accum::Saturating };
+        let want = gemm_i8_reference(&a, &b, m, n, k, accum);
+        for threads in [1usize, 3, 5] {
+            let par = if threads == 1 { Par::Seq } else { Par::Scoped(threads) };
+            let got = run_packed(I8SrcA::Q(&a), I8SrcB::Q(&b), m, n, k, accum, par);
+            assert_eq!(got, want, "m={m} n={n} k={k} threads={threads} {accum:?}");
+        }
+    });
+}
+
+#[test]
+fn fused_quantize_dot_dequantize_matches_the_reference_bitwise() {
+    // the serving path: quantization fused into packing, the exact
+    // zero-point correction and bias/relu at writeback — bit-equal to
+    // the elementwise staged reference for every epilogue shape
+    check("i8 dequant serving path", 8, |rng: &mut Rng| {
+        let m = rng.range(1, 20);
+        let n = rng.range(1, 40);
+        let k = *rng.pick(&[3usize, 17, 64, KC + 1]);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let q = QuantParams {
+            a_scale: 1.0 / 127.0,
+            a_zp: rng.irange(-8, 8) as i32,
+            b_scale: 1.0 / 255.0,
+            b_zp: rng.irange(96, 160) as i32,
+        };
+        let bias = rng.f32_vec(n);
+        let cases: [(I8Epilogue<'_>, Option<&[f32]>, bool); 3] = [
+            (I8Epilogue::None, None, false),
+            (I8Epilogue::Bias(&bias), Some(&bias), false),
+            (I8Epilogue::BiasRelu(&bias), Some(&bias), true),
+        ];
+        for (epi, rbias, relu) in cases {
+            let want = gemm_i8_dequant_reference(&a, &b, m, n, k, &q, rbias, relu);
+            let mut got = vec![0f32; m * n];
+            let mut scratch = I8Scratch::new();
+            gemm_i8_dequant_into(&mut got, &a, &b, m, n, k, &q, epi, Par::Scoped(2), &mut scratch);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "m={m} n={n} k={k} relu={relu} element {i}: {g} vs {w}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn served_int8_bucket_equals_the_quantized_reference_composition() {
+    // end to end through the public runtime API: an int8-served MLP
+    // bucket (calibration in the meta, quantized dots lowered by the
+    // plan compiler) must equal composing the two quantized layers by
+    // hand — and must *differ* from the f32 serving path, proving the
+    // integer engine actually ran
+    use power_mma::runtime::{det_input, mlp_int8_calib, HloPlanBackend, Runtime};
+    let dir = std::env::temp_dir(); // nothing is read: the buckets compile from generated text
+    let (b, f, h, c) = (6usize, 24usize, 40usize, 12usize);
+    let mut rt = Runtime::with_backend(Box::new(HloPlanBackend::int8()), &dir);
+    let names = rt.load_mlp_buckets_int8(&[b], f, h, c).unwrap();
+    assert_eq!(names, vec![format!("mlp_b{b}")]);
+    assert!(rt.meta("mlp_b6").unwrap().calib.is_some(), "the bucket meta must carry the record");
+
+    let calib = mlp_int8_calib(f, h, c);
+    let qp = |xn: &str, yn: &str| {
+        let (x, y) = (calib.get(xn).unwrap(), calib.get(yn).unwrap());
+        assert!(x.signed && !y.signed, "activation feeds X (i8), weight feeds Y (u8)");
+        QuantParams { a_scale: x.scale, a_zp: x.zp, b_scale: y.scale, b_zp: y.zp }
+    };
+    let x = det_input(b * f, 1);
+    let w1 = det_input(f * h, 2);
+    let b1 = det_input(h, 3);
+    let w2 = det_input(h * c, 4);
+    let b2 = det_input(c, 5);
+    let got = rt.execute("mlp_b6", &[&x, &w1, &b1, &w2, &b2]).unwrap();
+    let hid =
+        gemm_i8_dequant_reference(&x, &w1, b, h, f, &qp("Arg_0.1", "Arg_1.2"), Some(&b1), true);
+    let want =
+        gemm_i8_dequant_reference(&hid, &w2, b, c, h, &qp("maximum.14", "Arg_3.4"), Some(&b2), false);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "served vs composed reference, element {i}");
+    }
+
+    let mut f32_rt = Runtime::with_backend(Box::new(HloPlanBackend::new()), &dir);
+    f32_rt.load_mlp_buckets(&[b], f, h, c).unwrap();
+    let exact = f32_rt.execute("mlp_b6", &[&x, &w1, &b1, &w2, &b2]).unwrap();
+    assert!(
+        got.iter().zip(&exact).any(|(g, e)| g.to_bits() != e.to_bits()),
+        "quantization must actually bite"
+    );
+    let max_err = got
+        .iter()
+        .zip(&exact)
+        .map(|(g, e)| (g - e).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 0.5, "quantized output strayed too far from f32: {max_err}");
+}
