@@ -126,6 +126,36 @@ def check(report):
             f"responses: {batching}"
         )
 
+    # -- autotuner: memoized table, identity per class, audit trail ----
+    tuning = need(report, "tuning")
+    if tuning.get("enabled") is not True:
+        fail(f"the bench must run with the autotuner enabled: {tuning}")
+    table = tuning.get("table")
+    if not isinstance(table, list) or not table:
+        fail(f"tuning.table must be a non-empty list of memoized classes: {tuning}")
+    if tuning.get("identical") is not True:
+        fail(f"a tuned variant changed bits vs the canonical engine: {tuning}")
+    for row in table:
+        if row.get("identical") is not True:
+            fail(f"tuned class is not bitwise identical to canonical: {row}")
+        for key in ("m", "n", "k", "dtype", "epilogue", "variant"):
+            if key not in row:
+                fail(f"tuning table row missing '{key}': {row}")
+        chosen, default = row.get("chosen_ms", -1), row.get("default_ms", -1)
+        if chosen < 0 or default < 0:
+            fail(f"tuning table row must report chosen/default ms: {row}")
+        # chosen_ms <= default_ms holds by construction (canonical-first
+        # argmin); 5% tolerance guards against float printing jitter
+        if row.get("measured") and chosen > default * 1.05:
+            fail(f"chosen variant measured slower than the default: {row}")
+    if not tuning.get("distinct_variants", 0) >= 2:
+        fail(
+            "the tuner must pick >= 2 distinct variants across classes "
+            f"(a single winner means the search is vacuous): {tuning}"
+        )
+    if not tuning.get("measured_classes", 0) >= 1:
+        fail(f"at least one class must be measured (not heuristic): {tuning}")
+
     print(
         "check_bench: OK:"
         f" speedup {acceptance.get('achieved')},"
@@ -137,7 +167,10 @@ def check(report):
         f" sharded req/s {sharded.get('req_per_s')},"
         f" ladder {ladder},"
         f" bucket req/s {[row.get('req_per_s') for row in per_bucket]},"
-        f" batched==singleton {batching.get('batched_vs_singleton_identical')}"
+        f" batched==singleton {batching.get('batched_vs_singleton_identical')},"
+        f" tuned classes {len(table)}"
+        f" ({tuning.get('distinct_variants')} variants,"
+        f" {tuning.get('measured_classes')} measured)"
     )
 
 

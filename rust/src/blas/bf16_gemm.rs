@@ -83,7 +83,7 @@
 //! assert_eq!(c[0], 0.30078125, "bf16 grid, not 0.3004");
 //! ```
 
-use crate::blas::block_gemm::{chunk_plan_nr, Par, KC, MC, NC};
+use crate::blas::block_gemm::{chunk_plan_nr, GemmVariant, Par, KC};
 use crate::isa::types::bf16_to_f32;
 use crate::kernels::pack::{
     pack_a_panel_bf16, pack_a_panel_f32_bf16, pack_b_panel_bf16, pack_b_panel_f32_bf16,
@@ -199,19 +199,34 @@ impl Bf16Scratch {
     }
 
     /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
-    /// workers allocates nothing.
+    /// workers allocates nothing (canonical 8×16 variant).
     pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
-        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), NR);
-        self.reserve_chunks(m, n, k, nchunks, cols_per);
+        self.reserve_for(m, n, k, threads, GemmVariant::CANONICAL_WIDE);
     }
 
-    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
+    /// [`Bf16Scratch::reserve`] for an explicit variant: panel sizes are
+    /// derived from the variant's blocking config, not the fixed
+    /// `KC`/`NC` constants.
+    pub fn reserve_for(&mut self, m: usize, n: usize, k: usize, threads: usize, v: GemmVariant) {
+        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), v.nr);
+        self.reserve_chunks(m, n, k, nchunks, cols_per, v);
+    }
+
+    fn reserve_chunks(
+        &mut self,
+        m: usize,
+        n: usize,
+        k: usize,
+        nchunks: usize,
+        cols_per: usize,
+        v: GemmVariant,
+    ) {
         let c_need = m * n;
         if self.c64.len() < c_need {
             self.c64.resize(c_need, 0.0);
         }
-        let steps = KC.min(k.max(1)).div_ceil(2);
-        let bp_need = steps * 2 * NC.min(cols_per.max(NR));
+        let steps = v.block.kc.min(k.max(1)).div_ceil(2);
+        let bp_need = steps * 2 * v.block.nc.min(cols_per.max(v.nr));
         if self.bp.len() < nchunks {
             self.bp.resize_with(nchunks, Vec::new);
         }
@@ -220,7 +235,7 @@ impl Bf16Scratch {
                 b.resize(bp_need, 0);
             }
         }
-        let ap_need = steps * 2 * MR;
+        let ap_need = steps * 2 * v.mr;
         if self.ap.len() < nchunks {
             self.ap.resize_with(nchunks, Vec::new);
         }
@@ -318,14 +333,44 @@ pub fn gemm_bf16_packed_into(
     par: Par<'_>,
     scratch: &mut Bf16Scratch,
 ) {
+    gemm_bf16_tuned_into(c, a, b, m, n, k, accum, par, scratch, GemmVariant::CANONICAL_WIDE);
+}
+
+/// [`gemm_bf16_packed_into`] with an explicit [`GemmVariant`] — the
+/// entry point the autotuned plan steps call. Every variant produces
+/// the same bits as [`GemmVariant::CANONICAL_WIDE`] under both
+/// [`Bf16Accum`] contracts: the variant's `kc` must stay even (cache
+/// blocks never split a rank-2 pair), so each `C` element replays the
+/// same ascending-`k` pair chain from the same rounded values whatever
+/// the tile geometry (`rust/tests/tune_engine.rs` pins this across the
+/// family).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bf16_tuned_into(
+    c: &mut [f32],
+    a: Bf16Src<'_>,
+    b: Bf16Src<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: Bf16Accum,
+    par: Par<'_>,
+    scratch: &mut Bf16Scratch,
+    v: GemmVariant,
+) {
+    assert!(v.block.kc % 2 == 0, "bf16 kc must be even: steps cover k-pairs ({})", v.name());
+    assert!(
+        v.block.nc % v.nr == 0 && v.block.mc % v.mr == 0,
+        "blocking must be tile-aligned: {}",
+        v.name()
+    );
     assert_eq!(a.len(), m * k, "A must be m*k");
     assert_eq!(b.len(), k * n, "B must be k*n");
     assert_eq!(c.len(), m * n, "C must be m*n");
     if m == 0 || n == 0 {
         return;
     }
-    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), NR);
-    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
+    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), v.nr);
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per, v);
     let c64 = &mut scratch.c64[..m * n];
     c64.fill(0.0);
     if k > 0 {
@@ -354,7 +399,7 @@ pub fn gemm_bf16_packed_into(
             let ch = &mut *guard;
             let j0 = w * cols_per;
             let wcols = cols_per.min(n - j0);
-            col_worker(ch.c64, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+            col_worker(ch.c64, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum, v);
         });
     }
     // writeback: narrow the f64 image (exact for F32Pairs — it carries
@@ -375,10 +420,10 @@ pub fn gemm_bf16_packed_into(
 }
 
 /// One worker's share: all `m` rows of columns `j0 .. j0+wcols`, the
-/// whole `k` depth, walked in NC/KC cache blocks with `kc` ascending
-/// (the bit-exactness order). The worker packs its own pair-interleaved
-/// B panels per (NC, kc) block and sweeps each packed `MR×kc` A
-/// micropanel across the chunk's `NR` panels.
+/// whole `k` depth, walked in `v.block.nc`/`v.block.kc` cache blocks
+/// with `kc` ascending (the bit-exactness order). The worker packs its
+/// own pair-interleaved B panels per (nc, kc) block and sweeps each
+/// packed `mr×kc` A micropanel across the chunk's `nr` panels.
 #[allow(clippy::too_many_arguments)]
 fn col_worker(
     c64: &mut [f64],
@@ -392,41 +437,44 @@ fn col_worker(
     j0: usize,
     wcols: usize,
     accum: Bf16Accum,
+    v: GemmVariant,
 ) {
-    for jc in (0..wcols).step_by(NC) {
-        let ncl = NC.min(wcols - jc);
-        let n_panels = ncl.div_ceil(NR);
-        for kc0 in (0..k).step_by(KC) {
-            let kcl = KC.min(k - kc0);
+    let (mr, nr) = (v.mr, v.nr);
+    let (mc, kc, nc) = (v.block.mc, v.block.kc, v.block.nc);
+    for jc in (0..wcols).step_by(nc) {
+        let ncl = nc.min(wcols - jc);
+        let n_panels = ncl.div_ceil(nr);
+        for kc0 in (0..k).step_by(kc) {
+            let kcl = kc.min(k - kc0);
             let steps = kcl.div_ceil(2);
             // the F32Pairs chain *assigns* its first pair product
             // (AccOp::New primes the accumulators on the Machine)
             let first = accum == Bf16Accum::F32Pairs && kc0 == 0;
-            let bpl = &mut bp[..n_panels * steps * NR * 2];
+            let bpl = &mut bp[..n_panels * steps * nr * 2];
             for jp in 0..n_panels {
-                let jabs = j0 + jc + jp * NR;
-                let cols = NR.min(j0 + jc + ncl - jabs);
-                let panel = &mut bpl[jp * steps * NR * 2..(jp + 1) * steps * NR * 2];
-                b.pack_b(n, kc0, kcl, jabs, cols, NR, panel);
+                let jabs = j0 + jc + jp * nr;
+                let cols = nr.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * steps * nr * 2..(jp + 1) * steps * nr * 2];
+                b.pack_b(n, kc0, kcl, jabs, cols, nr, panel);
             }
             let bpl = &*bpl;
-            let apl = &mut ap[..steps * MR * 2];
-            for ic in (0..m).step_by(MC) {
-                let mcl = MC.min(m - ic);
-                for ir in (0..mcl).step_by(MR) {
+            let apl = &mut ap[..steps * mr * 2];
+            for ic in (0..m).step_by(mc) {
+                let mcl = mc.min(m - ic);
+                for ir in (0..mcl).step_by(mr) {
                     let gi = ic + ir;
-                    let mrl = MR.min(m - gi);
-                    a.pack_a(k, gi, mrl, kc0, kcl, MR, apl);
+                    let mrl = mr.min(m - gi);
+                    a.pack_a(k, gi, mrl, kc0, kcl, mr, apl);
                     for jp in 0..n_panels {
-                        let jloc = jc + jp * NR;
-                        let nrl = NR.min(wcols - jloc);
-                        let bpp = &bpl[jp * steps * NR * 2..(jp + 1) * steps * NR * 2];
+                        let jloc = jc + jp * nr;
+                        let nrl = nr.min(wcols - jloc);
+                        let bpp = &bpl[jp * steps * nr * 2..(jp + 1) * steps * nr * 2];
                         match accum {
-                            Bf16Accum::Widened => microkernel_widened(
-                                c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl,
+                            Bf16Accum::Widened => microkernel_widened_v(
+                                v, c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl,
                             ),
-                            Bf16Accum::F32Pairs => microkernel_pairs(
-                                c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, first,
+                            Bf16Accum::F32Pairs => microkernel_pairs_v(
+                                v, c64, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, first,
                             ),
                         }
                     }
@@ -436,15 +484,11 @@ fn col_worker(
     }
 }
 
-/// The `MR×NR` widened-contract microkernel: loads the running `f64`
-/// sums of one `C` register block, applies `steps` rank-2 updates from
-/// the pair-interleaved panels — each pair's products added in ascending
-/// `k` order (low lane, then high) so the whole chain replays the
-/// interpreter's `f64` accumulation — and stores the sums back. Only the
-/// `mrl×nrl` valid corner is loaded/stored; zero-padded panel lanes are
-/// computed and discarded.
+/// Dispatch one widened-contract register tile to its monomorphized
+/// kernel.
 #[allow(clippy::too_many_arguments)]
-fn microkernel_widened(
+fn microkernel_widened_v(
+    v: GemmVariant,
     c64: &mut [f64],
     ci: usize,
     j0: usize,
@@ -455,45 +499,17 @@ fn microkernel_widened(
     mrl: usize,
     nrl: usize,
 ) {
-    let mut acc = [0f64; MR * NR];
-    for i in 0..mrl {
-        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
-    }
-    for s in 0..steps {
-        let ar = &ap[s * MR * 2..(s + 1) * MR * 2];
-        let br = &bp[s * NR * 2..(s + 1) * NR * 2];
-        // widen each lane exactly once per step
-        let mut bw = [0f64; 2 * NR];
-        for (slot, &bits) in bw.iter_mut().zip(br) {
-            *slot = f64::from(bf16_to_f32(bits));
-        }
-        for i in 0..MR {
-            let a0 = f64::from(bf16_to_f32(ar[i * 2]));
-            let a1 = f64::from(bf16_to_f32(ar[i * 2 + 1]));
-            let row = &mut acc[i * NR..(i + 1) * NR];
-            for (j, slot) in row.iter_mut().enumerate() {
-                *slot += a0 * bw[j * 2];
-                *slot += a1 * bw[j * 2 + 1];
-            }
-        }
-    }
-    for i in 0..mrl {
-        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    match (v.mr, v.nr) {
+        (8, 8) => microkernel_widened_g::<8, 8>(c64, ci, j0, ld, ap, bp, steps, mrl, nrl),
+        (8, 16) => microkernel_widened_g::<8, 16>(c64, ci, j0, ld, ap, bp, steps, mrl, nrl),
+        (mr, nr) => unreachable!("no monomorphized bf16 register tile {mr}x{nr}"),
     }
 }
 
-/// The `MR×NR` MME-contract microkernel ([`Bf16Accum::F32Pairs`]): the
-/// running sums are exact `f32` values stored widened in the `f64` image
-/// (lossless round-trip), each step computes the rank-2 pair product
-/// `x₀·y₀ + x₁·y₁` in `f32` (bf16 products are exact in `f32`; the pair
-/// sum rounds once — the MME's single-precision rank-2 accumulate) and
-/// chains it with an `f32` add. When `first` is set (the `k = 0` block),
-/// step 0 *assigns* its pair product — `AccOp::New` on the Machine — so
-/// even the sign of a zero matches `xvbf16ger2`.
+/// Dispatch one MME-contract register tile to its monomorphized kernel.
 #[allow(clippy::too_many_arguments)]
-fn microkernel_pairs(
+fn microkernel_pairs_v(
+    v: GemmVariant,
     c64: &mut [f64],
     ci: usize,
     j0: usize,
@@ -505,33 +521,113 @@ fn microkernel_pairs(
     nrl: usize,
     first: bool,
 ) {
-    let mut acc = [0f32; MR * NR];
+    match (v.mr, v.nr) {
+        (8, 8) => microkernel_pairs_g::<8, 8>(c64, ci, j0, ld, ap, bp, steps, mrl, nrl, first),
+        (8, 16) => microkernel_pairs_g::<8, 16>(c64, ci, j0, ld, ap, bp, steps, mrl, nrl, first),
+        (mr, nr) => unreachable!("no monomorphized bf16 register tile {mr}x{nr}"),
+    }
+}
+
+/// The `MR_×NR_` widened-contract microkernel, monomorphized per
+/// register tile: loads the running `f64` sums of one `C` register
+/// block, applies `steps` rank-2 updates from the pair-interleaved
+/// panels — each pair's products added in ascending `k` order (low lane,
+/// then high) so the whole chain replays the interpreter's `f64`
+/// accumulation — and stores the sums back. Only the `mrl×nrl` valid
+/// corner is loaded/stored; zero-padded panel lanes are computed and
+/// discarded.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_widened_g<const MR_: usize, const NR_: usize>(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[u16],
+    bp: &[u16],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+) {
+    let mut acc = [[0f64; NR_]; MR_];
+    for i in 0..mrl {
+        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        acc[i][..nrl].copy_from_slice(crow);
+    }
+    for s in 0..steps {
+        let ar = &ap[s * MR_ * 2..(s + 1) * MR_ * 2];
+        let br = &bp[s * NR_ * 2..(s + 1) * NR_ * 2];
+        // widen each lane exactly once per step (one (lo, hi) pair per
+        // output column — the [[f64; 2]; NR_] shape keeps the length a
+        // plain const on stable)
+        let mut bw = [[0f64; 2]; NR_];
+        for (slot, pair) in bw.iter_mut().zip(br.chunks_exact(2)) {
+            slot[0] = f64::from(bf16_to_f32(pair[0]));
+            slot[1] = f64::from(bf16_to_f32(pair[1]));
+        }
+        for (i, row) in acc.iter_mut().enumerate() {
+            let a0 = f64::from(bf16_to_f32(ar[i * 2]));
+            let a1 = f64::from(bf16_to_f32(ar[i * 2 + 1]));
+            for (slot, bwp) in row.iter_mut().zip(&bw) {
+                *slot += a0 * bwp[0];
+                *slot += a1 * bwp[1];
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        crow.copy_from_slice(&acc[i][..nrl]);
+    }
+}
+
+/// The `MR_×NR_` MME-contract microkernel ([`Bf16Accum::F32Pairs`]),
+/// monomorphized per register tile: the running sums are exact `f32`
+/// values stored widened in the `f64` image (lossless round-trip), each
+/// step computes the rank-2 pair product `x₀·y₀ + x₁·y₁` in `f32` (bf16
+/// products are exact in `f32`; the pair sum rounds once — the MME's
+/// single-precision rank-2 accumulate) and chains it with an `f32` add.
+/// When `first` is set (the `k = 0` block), step 0 *assigns* its pair
+/// product — `AccOp::New` on the Machine — so even the sign of a zero
+/// matches `xvbf16ger2`.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_pairs_g<const MR_: usize, const NR_: usize>(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[u16],
+    bp: &[u16],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+    first: bool,
+) {
+    let mut acc = [[0f32; NR_]; MR_];
     if !first {
         for i in 0..mrl {
             let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-            for (slot, &v) in acc[i * NR..i * NR + nrl].iter_mut().zip(crow) {
+            for (slot, &v) in acc[i][..nrl].iter_mut().zip(crow) {
                 *slot = v as f32; // exact: the image holds f32 values
             }
         }
     }
     for s in 0..steps {
-        let ar = &ap[s * MR * 2..(s + 1) * MR * 2];
-        let br = &bp[s * NR * 2..(s + 1) * NR * 2];
-        let mut bw = [0f32; 2 * NR];
-        for (slot, &bits) in bw.iter_mut().zip(br) {
-            *slot = bf16_to_f32(bits);
+        let ar = &ap[s * MR_ * 2..(s + 1) * MR_ * 2];
+        let br = &bp[s * NR_ * 2..(s + 1) * NR_ * 2];
+        let mut bw = [[0f32; 2]; NR_];
+        for (slot, pair) in bw.iter_mut().zip(br.chunks_exact(2)) {
+            slot[0] = bf16_to_f32(pair[0]);
+            slot[1] = bf16_to_f32(pair[1]);
         }
-        for i in 0..MR {
+        for (i, row) in acc.iter_mut().enumerate() {
             let a0 = bf16_to_f32(ar[i * 2]);
             let a1 = bf16_to_f32(ar[i * 2 + 1]);
-            let row = &mut acc[i * NR..(i + 1) * NR];
             if first && s == 0 {
-                for (j, slot) in row.iter_mut().enumerate() {
-                    *slot = a0 * bw[j * 2] + a1 * bw[j * 2 + 1];
+                for (slot, bwp) in row.iter_mut().zip(&bw) {
+                    *slot = a0 * bwp[0] + a1 * bwp[1];
                 }
             } else {
-                for (j, slot) in row.iter_mut().enumerate() {
-                    let p = a0 * bw[j * 2] + a1 * bw[j * 2 + 1];
+                for (slot, bwp) in row.iter_mut().zip(&bw) {
+                    let p = a0 * bwp[0] + a1 * bwp[1];
                     *slot = p + *slot;
                 }
             }
@@ -539,7 +635,7 @@ fn microkernel_pairs(
     }
     for i in 0..mrl {
         let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        for (slot, &v) in crow.iter_mut().zip(&acc[i * NR..i * NR + nrl]) {
+        for (slot, &v) in crow.iter_mut().zip(&acc[i][..nrl]) {
             *slot = f64::from(v);
         }
     }
@@ -780,6 +876,41 @@ mod tests {
             &mut scratch,
         );
         assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn every_wide_variant_matches_reference_bitwise_spot() {
+        // the full sweep lives in tests/tune_engine.rs; this in-module
+        // spot check keeps the invariant visible next to the kernels
+        let mut rng = Rng::new(0x77de);
+        let (m, n, k) = (9, 17, 31);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        for accum in [Bf16Accum::Widened, Bf16Accum::F32Pairs] {
+            let expect = match accum {
+                Bf16Accum::Widened => gemm_bf16_reference(&a, &b, m, n, k),
+                Bf16Accum::F32Pairs => gemm_bf16_reference_pairs(&a, &b, m, n, k),
+            };
+            for v in GemmVariant::wide_candidates() {
+                let mut c = vec![0f32; m * n];
+                let mut scratch = Bf16Scratch::new();
+                gemm_bf16_tuned_into(
+                    &mut c,
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                let gb: Vec<u32> = c.iter().map(|x| x.to_bits()).collect();
+                let eb: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, eb, "variant {} {accum:?}", v.name());
+            }
+        }
     }
 
     #[test]

@@ -91,6 +91,111 @@ pub const KC: usize = 256;
 /// Cache-block columns of the packed B block (L2/L3 residency).
 pub const NC: usize = 512;
 
+/// One cache-blocking configuration (the MC/KC/NC triple) a tuned GEMM
+/// runs under. [`BlockCfg::DEFAULT`] is the hand-picked canonical
+/// blocking every engine shipped with before the autotuner existed; the
+/// autotuner ([`crate::runtime::tune`]) searches [`BlockCfg::GRID`].
+/// Blocking never changes bits — every `C` element still accumulates its
+/// `k` products in strictly ascending order regardless of where the
+/// KC/NC/MC seams fall — so the tuner can only ever change speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockCfg {
+    /// Cache-block rows of A per worker pass.
+    pub mc: usize,
+    /// Cache-block depth of the packed panels.
+    pub kc: usize,
+    /// Cache-block columns of the packed B block.
+    pub nc: usize,
+}
+
+impl BlockCfg {
+    /// The canonical blocking ([`MC`]/[`KC`]/[`NC`]).
+    pub const DEFAULT: BlockCfg = BlockCfg { mc: MC, kc: KC, nc: NC };
+
+    /// The autotuner's blocking search grid. Every `kc` is a multiple of
+    /// 4 (the i8 quad-interleave stride, which also covers the bf16 pair
+    /// stride), and every `nc` / `mc` is a multiple of every `nr` / `mr`
+    /// in the kernel family, so panel slicing never straddles a block
+    /// boundary (the scratch-sizing invariant `reserve_for` relies on).
+    pub const GRID: [BlockCfg; 8] = [
+        BlockCfg { mc: 64, kc: 128, nc: 256 },
+        BlockCfg { mc: 64, kc: 128, nc: 512 },
+        BlockCfg { mc: 64, kc: 256, nc: 256 },
+        BlockCfg { mc: 64, kc: 256, nc: 512 },
+        BlockCfg { mc: 128, kc: 128, nc: 256 },
+        BlockCfg { mc: 128, kc: 128, nc: 512 },
+        BlockCfg { mc: 128, kc: 256, nc: 256 },
+        BlockCfg { mc: 128, kc: 256, nc: 512 },
+    ];
+}
+
+/// One monomorphized GEMM variant: a register-tile geometry (`mr × nr`,
+/// the paper's virtual-accumulator shape) plus a cache-blocking
+/// configuration. The dispatchers monomorphize a small family per dtype
+/// (f32: 4×8 / 8×8 / 8×16; bf16 and i8: 8×8 / 8×16) — every member is
+/// bitwise identical to the canonical variant under every accumulation
+/// contract, so the autotuner selects purely on speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmVariant {
+    /// Register-block rows.
+    pub mr: usize,
+    /// Register-block columns.
+    pub nr: usize,
+    /// Cache-blocking configuration.
+    pub block: BlockCfg,
+}
+
+impl GemmVariant {
+    /// The canonical f32 variant ([`MR`]×[`NR`], default blocking) — the
+    /// exact engine every pre-tuner caller ran, and the deterministic
+    /// heuristic default when tuning is off.
+    pub const CANONICAL_F32: GemmVariant =
+        GemmVariant { mr: MR, nr: NR, block: BlockCfg::DEFAULT };
+
+    /// The canonical 8×16 variant the bf16 and i8 engines ship with
+    /// (the Figure 8 / `xvi8ger4` virtual-accumulator width).
+    pub const CANONICAL_WIDE: GemmVariant =
+        GemmVariant { mr: 8, nr: 16, block: BlockCfg::DEFAULT };
+
+    /// The f32 register tiles the dispatcher monomorphizes.
+    pub const F32_KERNELS: [(usize, usize); 3] = [(8, 8), (4, 8), (8, 16)];
+    /// The bf16/i8 register tiles (canonical 8×16 plus the narrow 8×8).
+    pub const WIDE_KERNELS: [(usize, usize); 2] = [(8, 16), (8, 8)];
+
+    /// Every f32 candidate, **canonical first** (the tuner breaks ties
+    /// toward the head of the list, so equal timings keep the default).
+    pub fn f32_candidates() -> Vec<GemmVariant> {
+        GemmVariant::family(&Self::F32_KERNELS, Self::CANONICAL_F32)
+    }
+
+    /// Every bf16/i8 candidate, canonical (8×16, default blocking) first.
+    pub fn wide_candidates() -> Vec<GemmVariant> {
+        GemmVariant::family(&Self::WIDE_KERNELS, Self::CANONICAL_WIDE)
+    }
+
+    fn family(kernels: &[(usize, usize)], canonical: GemmVariant) -> Vec<GemmVariant> {
+        let mut out = vec![canonical];
+        for &(mr, nr) in kernels {
+            for block in BlockCfg::GRID {
+                let v = GemmVariant { mr, nr, block };
+                if v != canonical {
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable identity, e.g. `"8x8/mc128kc256nc512"` — the form
+    /// the `bench serve` tuning table and test failures print.
+    pub fn name(&self) -> String {
+        format!(
+            "{}x{}/mc{}kc{}nc{}",
+            self.mr, self.nr, self.block.mc, self.block.kc, self.block.nc
+        )
+    }
+}
+
 /// Approximate flop count (`2·m·n·k`) below which a **scoped-spawn** GEMM
 /// runs inline instead of spawning workers — spawning and joining OS
 /// threads only pays for 128³-and-up tiles.
@@ -194,18 +299,35 @@ impl GemmScratch {
     }
 
     /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
-    /// workers allocates nothing.
+    /// workers allocates nothing (canonical variant).
     pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
-        let (nchunks, cols_per) = chunk_plan(n, threads.max(1));
-        self.reserve_chunks(m, n, k, nchunks, cols_per);
+        self.reserve_for(m, n, k, threads, GemmVariant::CANONICAL_F32);
     }
 
-    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
+    /// [`GemmScratch::reserve`] for an explicit variant: panel sizes are
+    /// derived from the variant's blocking config, not the fixed
+    /// [`KC`]/[`NC`] constants — the satellite fix for the latent
+    /// scratch-sizing assumption.
+    pub fn reserve_for(&mut self, m: usize, n: usize, k: usize, threads: usize, v: GemmVariant) {
+        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), v.nr);
+        self.reserve_chunks(m, n, k, nchunks, cols_per, v);
+    }
+
+    fn reserve_chunks(
+        &mut self,
+        m: usize,
+        n: usize,
+        k: usize,
+        nchunks: usize,
+        cols_per: usize,
+        v: GemmVariant,
+    ) {
         let c_need = m * n;
         if self.c64.len() < c_need {
             self.c64.resize(c_need, 0.0);
         }
-        let bp_need = KC.min(k.max(1)) * NC.min(cols_per.max(NR));
+        let kc = v.block.kc.min(k.max(1));
+        let bp_need = kc * v.block.nc.min(cols_per.max(v.nr));
         if self.bp.len() < nchunks {
             self.bp.resize_with(nchunks, Vec::new);
         }
@@ -214,7 +336,7 @@ impl GemmScratch {
                 b.resize(bp_need, 0.0);
             }
         }
-        let ap_need = KC.min(k.max(1)) * MR;
+        let ap_need = kc * v.mr;
         if self.ap.len() < nchunks {
             self.ap.resize_with(nchunks, Vec::new);
         }
@@ -229,19 +351,16 @@ impl GemmScratch {
 /// The column-chunk decomposition of an `n`-column GEMM over up to `cap`
 /// workers for a microkernel `nr` columns wide: each chunk is a whole
 /// number of `nr` panels, and `(nchunks, cols_per)` satisfies
-/// `nchunks <= cap` and `nchunks * cols_per >= n`. Shared by this
-/// module's f32 engine (`nr = `[`NR`]) and the bf16 packed engine of
-/// [`crate::blas::bf16_gemm`] (`nr = 16`, the Figure 8 virtual
-/// accumulator width).
-pub(crate) fn chunk_plan_nr(n: usize, cap: usize, nr: usize) -> (usize, usize) {
+/// `nchunks <= cap` and `nchunks * cols_per >= n` with `cols_per % nr ==
+/// 0`. Shared by every engine — this module's f32 engine, the bf16 and
+/// i8 packed engines, and every tuned variant (`nr` ∈ {8, 16}); the
+/// coverage/no-overlap/clamp properties are pinned for the whole family
+/// by `rust/tests/tune_engine.rs`.
+pub fn chunk_plan_nr(n: usize, cap: usize, nr: usize) -> (usize, usize) {
     let col_panels = n.max(1).div_ceil(nr);
     let cap = cap.clamp(1, col_panels);
     let cols_per = col_panels.div_ceil(cap) * nr;
     (n.max(1).div_ceil(cols_per), cols_per)
-}
-
-fn chunk_plan(n: usize, cap: usize) -> (usize, usize) {
-    chunk_plan_nr(n, cap, NR)
 }
 
 /// Accumulation mode of the microkernel — each mode is bit-identical to
@@ -394,6 +513,48 @@ pub fn gemm_f32_fused_into(
     par: Par<'_>,
     scratch: &mut GemmScratch,
 ) {
+    gemm_f32_tuned_into(
+        c,
+        a,
+        b,
+        m,
+        n,
+        k,
+        accum,
+        epilogue,
+        par,
+        scratch,
+        GemmVariant::CANONICAL_F32,
+    );
+}
+
+/// [`gemm_f32_fused_into`] with an explicit [`GemmVariant`] — the entry
+/// point the autotuned plan steps call. **Every variant produces the
+/// same bits as [`GemmVariant::CANONICAL_F32`]** under both [`Accum`]
+/// contracts: each `C` element is computed by exactly one worker from
+/// the same packed values in the same strictly-ascending-`k` order, so
+/// the register-tile geometry and the KC/NC/MC seams only move work
+/// around, never reassociate it (`rust/tests/tune_engine.rs` pins this
+/// across the full family).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_tuned_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: PanelB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: Accum,
+    epilogue: Epilogue<'_>,
+    par: Par<'_>,
+    scratch: &mut GemmScratch,
+    v: GemmVariant,
+) {
+    assert!(
+        v.block.nc % v.nr == 0 && v.block.mc % v.mr == 0,
+        "blocking must be tile-aligned: {}",
+        v.name()
+    );
     assert_eq!(a.len(), m * k, "A must be m*k");
     assert_eq!(c.len(), m * n, "C must be m*n");
     match &b {
@@ -411,8 +572,8 @@ pub fn gemm_f32_fused_into(
     if m == 0 || n == 0 {
         return;
     }
-    let (nchunks, cols_per) = chunk_plan(n, par.cap());
-    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
+    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), v.nr);
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per, v);
     let c64 = &mut scratch.c64[..m * n];
     c64.fill(0.0);
     if k > 0 {
@@ -445,7 +606,7 @@ pub fn gemm_f32_fused_into(
             let ch = &mut *guard;
             let j0 = w * cols_per;
             let wcols = cols_per.min(n - j0);
-            col_worker(ch.c64, a, b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+            col_worker(ch.c64, a, b, ch.bp, ch.ap, m, n, k, j0, wcols, accum, v);
         });
     }
     // the C-tile writeback: narrow, then apply the fused epilogue in f32
@@ -478,10 +639,10 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, threads: usi
 
 /// One worker's share: the full `m` rows of columns `j0 .. j0+wcols`
 /// (passed as the chunk-owned `m×wcols` block `c64`), the whole `k`
-/// depth. Walks its columns in NC cache blocks, `kc` ascending inside
-/// (the bit-identity order), packs its own B panels per (NC, kc) block —
-/// including the im2col gather — and sweeps each packed `MR×kcl` A
-/// micropanel across the chunk's `NR` panels.
+/// depth. Walks its columns in `v.block.nc` cache blocks, `kc` ascending
+/// inside (the bit-identity order), packs its own B panels per (nc, kc)
+/// block — including the im2col gather — and sweeps each packed
+/// `mr×kcl` A micropanel across the chunk's `nr` panels.
 #[allow(clippy::too_many_arguments)]
 fn col_worker(
     c64: &mut [f64],
@@ -495,43 +656,46 @@ fn col_worker(
     j0: usize,
     wcols: usize,
     accum: Accum,
+    v: GemmVariant,
 ) {
-    for jc in (0..wcols).step_by(NC) {
-        let ncl = NC.min(wcols - jc);
-        let n_panels = ncl.div_ceil(NR);
-        for kc0 in (0..k).step_by(KC) {
-            let kcl = KC.min(k - kc0);
+    let (mr, nr) = (v.mr, v.nr);
+    let BlockCfg { mc, kc, nc } = v.block;
+    for jc in (0..wcols).step_by(nc) {
+        let ncl = nc.min(wcols - jc);
+        let n_panels = ncl.div_ceil(nr);
+        for kc0 in (0..k).step_by(kc) {
+            let kcl = kc.min(k - kc0);
             // the F32 chain *assigns* its first product (kc0 == 0)
             // instead of accumulating into the zeroed image, so even
             // the sign of a zero product matches the interpreter
             let first = accum == Accum::F32 && kc0 == 0;
-            // pack the KC×ncl sub-block of B into NR-wide row panels:
-            // panel jp at bp[jp*kcl*NR ..], element (p, j) at p*NR + j
-            let bpl = &mut bp[..n_panels * kcl * NR];
+            // pack the kc×ncl sub-block of B into nr-wide row panels:
+            // panel jp at bp[jp*kcl*nr ..], element (p, j) at p*nr + j
+            let bpl = &mut bp[..n_panels * kcl * nr];
             for jp in 0..n_panels {
-                let jabs = j0 + jc + jp * NR;
-                let cols = NR.min(j0 + jc + ncl - jabs);
-                let panel = &mut bpl[jp * kcl * NR..(jp + 1) * kcl * NR];
-                b.pack(n, kc0, kcl, jabs, cols, NR, panel);
+                let jabs = j0 + jc + jp * nr;
+                let cols = nr.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * kcl * nr..(jp + 1) * kcl * nr];
+                b.pack(n, kc0, kcl, jabs, cols, nr, panel);
             }
             let bpl = &*bpl;
-            let apl = &mut ap[..kcl * MR];
-            for ic in (0..m).step_by(MC) {
-                let mcl = MC.min(m - ic);
-                for ir in (0..mcl).step_by(MR) {
+            let apl = &mut ap[..kcl * mr];
+            for ic in (0..m).step_by(mc) {
+                let mcl = mc.min(m - ic);
+                for ir in (0..mcl).step_by(mr) {
                     let gi = ic + ir;
-                    let mrl = MR.min(m - gi);
-                    pack_a_panel_f32(a, k, gi, mrl, kc0, kcl, MR, apl);
+                    let mrl = mr.min(m - gi);
+                    pack_a_panel_f32(a, k, gi, mrl, kc0, kcl, mr, apl);
                     for jp in 0..n_panels {
-                        let jloc = jc + jp * NR;
-                        let nrl = NR.min(wcols - jloc);
-                        let bpp = &bpl[jp * kcl * NR..(jp + 1) * kcl * NR];
+                        let jloc = jc + jp * nr;
+                        let nrl = nr.min(wcols - jloc);
+                        let bpp = &bpl[jp * kcl * nr..(jp + 1) * kcl * nr];
                         match accum {
                             Accum::F64 => {
-                                microkernel(c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl)
+                                microkernel_f64_v(v, c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl)
                             }
-                            Accum::F32 => microkernel_f32(
-                                c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl, first,
+                            Accum::F32 => microkernel_f32_v(
+                                v, c64, gi, jloc, wcols, apl, bpp, kcl, mrl, nrl, first,
                             ),
                         }
                     }
@@ -541,13 +705,10 @@ fn col_worker(
     }
 }
 
-/// The `MR×NR` f64 microkernel: loads the running `f64` sums of one `C`
-/// register block (row stride `ld`), applies `kcl` rank-1 updates from
-/// the packed panels in ascending `k` order, and stores the sums back.
-/// Only the `mrl×nrl` valid corner is loaded/stored (tail handling); the
-/// zero-padded panel lanes are computed and discarded.
+/// Dispatch one f64-contract register tile to its monomorphized kernel.
 #[allow(clippy::too_many_arguments)]
-fn microkernel(
+fn microkernel_f64_v(
+    v: GemmVariant,
     c64: &mut [f64],
     ci: usize,
     j0: usize,
@@ -558,38 +719,18 @@ fn microkernel(
     mrl: usize,
     nrl: usize,
 ) {
-    let mut acc = [0f64; MR * NR];
-    for i in 0..mrl {
-        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
-    }
-    for p in 0..kcl {
-        let ac = &ap[p * MR..(p + 1) * MR];
-        let br = &bp[p * NR..(p + 1) * NR];
-        for i in 0..MR {
-            let av = f64::from(ac[i]);
-            let row = &mut acc[i * NR..(i + 1) * NR];
-            for (slot, &bv) in row.iter_mut().zip(br) {
-                *slot += av * f64::from(bv);
-            }
-        }
-    }
-    for i in 0..mrl {
-        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+    match (v.mr, v.nr) {
+        (4, 8) => microkernel_g::<4, 8>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl),
+        (8, 8) => microkernel_g::<8, 8>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl),
+        (8, 16) => microkernel_g::<8, 16>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl),
+        (mr, nr) => unreachable!("no monomorphized f32 register tile {mr}x{nr}"),
     }
 }
 
-/// The `MR×NR` f32-chain microkernel ([`Accum::F32`]): the running sums
-/// are exact `f32` values stored widened in the `c64` image (load and
-/// store round-trip losslessly), each product is rounded to `f32`, and
-/// the chain advances with `f32` adds in ascending `k` order. When
-/// `first` is set (the `k = 0` block), the first product is *assigned*
-/// rather than added to the zero image — `fl32(0 + x)` would turn a
-/// `-0.0` product into `+0.0` and break bit-identity with the
-/// interpreter's elementwise sweep.
+/// Dispatch one f32-chain register tile to its monomorphized kernel.
 #[allow(clippy::too_many_arguments)]
-fn microkernel_f32(
+fn microkernel_f32_v(
+    v: GemmVariant,
     c64: &mut [f64],
     ci: usize,
     j0: usize,
@@ -601,21 +742,89 @@ fn microkernel_f32(
     nrl: usize,
     first: bool,
 ) {
-    let mut acc = [0f32; MR * NR];
+    match (v.mr, v.nr) {
+        (4, 8) => microkernel_f32_g::<4, 8>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl, first),
+        (8, 8) => microkernel_f32_g::<8, 8>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl, first),
+        (8, 16) => microkernel_f32_g::<8, 16>(c64, ci, j0, ld, ap, bp, kcl, mrl, nrl, first),
+        (mr, nr) => unreachable!("no monomorphized f32 register tile {mr}x{nr}"),
+    }
+}
+
+/// The `MR_×NR_` f64 microkernel, monomorphized per register tile: loads
+/// the running `f64` sums of one `C` register block (row stride `ld`),
+/// applies `kcl` rank-1 updates from the packed panels in ascending `k`
+/// order, and stores the sums back. Only the `mrl×nrl` valid corner is
+/// loaded/stored (tail handling); the zero-padded panel lanes are
+/// computed and discarded — so a tile *taller* than `mrl` burns rows,
+/// which is exactly the asymmetry the autotuner exploits (4×8 beats 8×8
+/// on `m = 1` classes).
+#[allow(clippy::too_many_arguments)]
+fn microkernel_g<const MR_: usize, const NR_: usize>(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[f32],
+    bp: &[f32],
+    kcl: usize,
+    mrl: usize,
+    nrl: usize,
+) {
+    let mut acc = [[0f64; NR_]; MR_];
+    for i in 0..mrl {
+        let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        acc[i][..nrl].copy_from_slice(crow);
+    }
+    for p in 0..kcl {
+        let ac = &ap[p * MR_..(p + 1) * MR_];
+        let br = &bp[p * NR_..(p + 1) * NR_];
+        for (row, &araw) in acc.iter_mut().zip(ac) {
+            let av = f64::from(araw);
+            for (slot, &bv) in row.iter_mut().zip(br) {
+                *slot += av * f64::from(bv);
+            }
+        }
+    }
+    for i in 0..mrl {
+        let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
+        crow.copy_from_slice(&acc[i][..nrl]);
+    }
+}
+
+/// The `MR_×NR_` f32-chain microkernel ([`Accum::F32`]), monomorphized
+/// per register tile: the running sums are exact `f32` values stored
+/// widened in the `c64` image (load and store round-trip losslessly),
+/// each product is rounded to `f32`, and the chain advances with `f32`
+/// adds in ascending `k` order. When `first` is set (the `k = 0` block),
+/// the first product is *assigned* rather than added to the zero image —
+/// `fl32(0 + x)` would turn a `-0.0` product into `+0.0` and break
+/// bit-identity with the interpreter's elementwise sweep.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_f32_g<const MR_: usize, const NR_: usize>(
+    c64: &mut [f64],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[f32],
+    bp: &[f32],
+    kcl: usize,
+    mrl: usize,
+    nrl: usize,
+    first: bool,
+) {
+    let mut acc = [[0f32; NR_]; MR_];
     if !first {
         for i in 0..mrl {
             let crow = &c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-            for (slot, &v) in acc[i * NR..i * NR + nrl].iter_mut().zip(crow) {
+            for (slot, &v) in acc[i][..nrl].iter_mut().zip(crow) {
                 *slot = v as f32; // exact: the image holds f32 values
             }
         }
     }
     for p in 0..kcl {
-        let ac = &ap[p * MR..(p + 1) * MR];
-        let br = &bp[p * NR..(p + 1) * NR];
-        for i in 0..MR {
-            let av = ac[i];
-            let row = &mut acc[i * NR..(i + 1) * NR];
+        let ac = &ap[p * MR_..(p + 1) * MR_];
+        let br = &bp[p * NR_..(p + 1) * NR_];
+        for (row, &av) in acc.iter_mut().zip(ac) {
             if first && p == 0 {
                 for (slot, &bv) in row.iter_mut().zip(br) {
                     *slot = av * bv;
@@ -629,7 +838,7 @@ fn microkernel_f32(
     }
     for i in 0..mrl {
         let crow = &mut c64[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        for (slot, &v) in crow.iter_mut().zip(&acc[i * NR..i * NR + nrl]) {
+        for (slot, &v) in crow.iter_mut().zip(&acc[i][..nrl]) {
             *slot = f64::from(v);
         }
     }
@@ -646,6 +855,10 @@ mod tests {
         let af: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
         let bf: Vec<f64> = b.iter().map(|&v| f64::from(v)).collect();
         ref_gemm(&af, &bf, m, n, k).iter().map(|&v| v as f32).collect()
+    }
+
+    fn chunk_plan(n: usize, cap: usize) -> (usize, usize) {
+        chunk_plan_nr(n, cap, NR)
     }
 
     #[test]
@@ -995,6 +1208,54 @@ mod tests {
             }
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn variant_family_shape_and_order() {
+        let f32v = GemmVariant::f32_candidates();
+        let wide = GemmVariant::wide_candidates();
+        // canonical first (tie-breaking), no duplicates, expected counts
+        assert_eq!(f32v[0], GemmVariant::CANONICAL_F32);
+        assert_eq!(wide[0], GemmVariant::CANONICAL_WIDE);
+        assert_eq!(f32v.len(), 3 * BlockCfg::GRID.len());
+        assert_eq!(wide.len(), 2 * BlockCfg::GRID.len());
+        for (i, v) in f32v.iter().enumerate() {
+            assert!(!f32v[..i].contains(v), "duplicate {}", v.name());
+            // the scratch-sizing invariant: blocking aligned to the tile
+            assert_eq!(v.block.nc % v.nr, 0, "{}", v.name());
+            assert_eq!(v.block.mc % v.mr, 0, "{}", v.name());
+            assert_eq!(v.block.kc % 4, 0, "{}", v.name());
+        }
+        assert_eq!(GemmVariant::CANONICAL_F32.name(), "8x8/mc128kc256nc512");
+    }
+
+    #[test]
+    fn every_f32_variant_matches_canonical_bitwise_spot() {
+        // the full sweep lives in tests/tune_engine.rs; this in-module
+        // spot check keeps the invariant visible next to the kernels
+        let mut rng = Rng::new(0x7a11);
+        let (m, n, k) = (9, 17, 33);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let expect = ref_path(&a, &b, m, n, k);
+        for v in GemmVariant::f32_candidates() {
+            let mut c = vec![0f32; m * n];
+            let mut scratch = GemmScratch::new();
+            gemm_f32_tuned_into(
+                &mut c,
+                &a,
+                PanelB::Matrix(&b),
+                m,
+                n,
+                k,
+                Accum::F64,
+                Epilogue::None,
+                Par::Seq,
+                &mut scratch,
+                v,
+            );
+            assert_eq!(c, expect, "variant {}", v.name());
+        }
     }
 
     #[test]

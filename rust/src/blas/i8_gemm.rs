@@ -75,7 +75,7 @@
 //! serving shape; [`gemm_i8_dequant_reference`] spells the whole
 //! contract out elementwise for tests and the bench accuracy probe.
 
-use crate::blas::block_gemm::{chunk_plan_nr, Par, KC, MC, NC};
+use crate::blas::block_gemm::{chunk_plan_nr, GemmVariant, Par, KC};
 use crate::isa::types::{mod_add_i32, sat_add_i32};
 use crate::kernels::pack::{
     pack_a_panel_f32_i8, pack_a_panel_i8, pack_b_panel_f32_u8, pack_b_panel_u8, quantize_i8,
@@ -228,10 +228,16 @@ impl I8Scratch {
     }
 
     /// Grow the buffers so a subsequent `m×n×k` GEMM on up to `threads`
-    /// workers allocates nothing.
+    /// workers allocates nothing (canonical variant).
     pub fn reserve(&mut self, m: usize, n: usize, k: usize, threads: usize) {
-        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), NR);
-        self.reserve_chunks(m, n, k, nchunks, cols_per);
+        self.reserve_for(m, n, k, threads, GemmVariant::CANONICAL_WIDE);
+    }
+
+    /// Variant-aware reserve: sizes the panel buffers for the blocking
+    /// config `v` actually executes with, not the fixed defaults.
+    pub fn reserve_for(&mut self, m: usize, n: usize, k: usize, threads: usize, v: GemmVariant) {
+        let (nchunks, cols_per) = chunk_plan_nr(n, threads.max(1), v.nr);
+        self.reserve_chunks(m, n, k, nchunks, cols_per, v);
         if self.rs.len() < m {
             self.rs.resize(m, 0);
         }
@@ -240,13 +246,22 @@ impl I8Scratch {
         }
     }
 
-    fn reserve_chunks(&mut self, m: usize, n: usize, k: usize, nchunks: usize, cols_per: usize) {
+    #[allow(clippy::too_many_arguments)]
+    fn reserve_chunks(
+        &mut self,
+        m: usize,
+        n: usize,
+        k: usize,
+        nchunks: usize,
+        cols_per: usize,
+        v: GemmVariant,
+    ) {
         let c_need = m * n;
         if self.ci32.len() < c_need {
             self.ci32.resize(c_need, 0);
         }
-        let steps = KC.min(k.max(1)).div_ceil(4);
-        let bp_need = steps * 4 * NC.min(cols_per.max(NR));
+        let steps = v.block.kc.min(k.max(1)).div_ceil(4);
+        let bp_need = steps * 4 * v.block.nc.min(cols_per.max(v.nr));
         if self.bp.len() < nchunks {
             self.bp.resize_with(nchunks, Vec::new);
         }
@@ -255,7 +270,7 @@ impl I8Scratch {
                 b.resize(bp_need, 0);
             }
         }
-        let ap_need = steps * 4 * MR;
+        let ap_need = steps * 4 * v.mr;
         if self.ap.len() < nchunks {
             self.ap.resize_with(nchunks, Vec::new);
         }
@@ -373,8 +388,29 @@ pub fn gemm_i8_packed_into(
     par: Par<'_>,
     scratch: &mut I8Scratch,
 ) {
+    gemm_i8_packed_tuned_into(c, a, b, m, n, k, accum, par, scratch, GemmVariant::CANONICAL_WIDE);
+}
+
+/// [`gemm_i8_packed_into`] with an explicit microkernel/blocking variant
+/// (the autotuner's entry point). Bitwise identical to the canonical
+/// engine for every variant in [`GemmVariant::wide_candidates`]: both
+/// integer contracts are per-element ascending-quad chains, and every
+/// grid `kc` is a multiple of 4 so blocking never splits a quad step.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed_tuned_into(
+    c: &mut [i32],
+    a: I8SrcA<'_>,
+    b: I8SrcB<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: I8Accum,
+    par: Par<'_>,
+    scratch: &mut I8Scratch,
+    v: GemmVariant,
+) {
     assert_eq!(c.len(), m * n, "C must be m*n");
-    let (nchunks, cols_per) = run_chunks(a, b, m, n, k, accum, par, scratch);
+    let (nchunks, cols_per) = run_chunks(a, b, m, n, k, accum, par, scratch, v);
     if m == 0 || n == 0 {
         return;
     }
@@ -421,10 +457,31 @@ pub fn gemm_i8_dequant_into(
     par: Par<'_>,
     scratch: &mut I8Scratch,
 ) {
+    gemm_i8_dequant_tuned_into(c, a, b, m, n, k, q, epi, par, scratch, GemmVariant::CANONICAL_WIDE);
+}
+
+/// [`gemm_i8_dequant_into`] with an explicit microkernel/blocking
+/// variant (the autotuner's entry point): the variant only steers the
+/// integer dot underneath — the dequantize correction and epilogue are
+/// geometry-independent, so every variant stays bitwise identical.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_dequant_tuned_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    q: &QuantParams,
+    epi: I8Epilogue<'_>,
+    par: Par<'_>,
+    scratch: &mut I8Scratch,
+    v: GemmVariant,
+) {
     assert_eq!(c.len(), m * n, "C must be m*n");
     let sa = I8SrcA::F32 { data: a, scale: q.a_scale, zp: q.a_zp };
     let sb = I8SrcB::F32 { data: b, scale: q.b_scale, zp: q.b_zp };
-    let (nchunks, cols_per) = run_chunks(sa, sb, m, n, k, I8Accum::Wrapping, par, scratch);
+    let (nchunks, cols_per) = run_chunks(sa, sb, m, n, k, I8Accum::Wrapping, par, scratch, v);
     if m == 0 || n == 0 {
         return;
     }
@@ -485,14 +542,25 @@ fn run_chunks(
     accum: I8Accum,
     par: Par<'_>,
     scratch: &mut I8Scratch,
+    v: GemmVariant,
 ) -> (usize, usize) {
+    assert!(
+        v.block.kc % 4 == 0,
+        "int8 kc must be a multiple of 4: steps cover k-quads ({})",
+        v.name()
+    );
+    assert!(
+        v.block.nc % v.nr == 0 && v.block.mc % v.mr == 0,
+        "blocking must be tile-aligned: {}",
+        v.name()
+    );
     assert_eq!(a.len(), m * k, "A must be m*k");
     assert_eq!(b.len(), k * n, "B must be k*n");
     if m == 0 || n == 0 {
         return (0, 0);
     }
-    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), NR);
-    scratch.reserve_chunks(m, n, k, nchunks, cols_per);
+    let (nchunks, cols_per) = chunk_plan_nr(n, par.cap(), v.nr);
+    scratch.reserve_chunks(m, n, k, nchunks, cols_per, v);
     let ci32 = &mut scratch.ci32[..m * n];
     ci32.fill(0);
     if k > 0 {
@@ -521,7 +589,7 @@ fn run_chunks(
             let ch = &mut *guard;
             let j0 = w * cols_per;
             let wcols = cols_per.min(n - j0);
-            col_worker(ch.ci32, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum);
+            col_worker(ch.ci32, &a, &b, ch.bp, ch.ap, m, n, k, j0, wcols, accum, v);
         });
     }
     (nchunks, cols_per)
@@ -545,33 +613,38 @@ fn col_worker(
     j0: usize,
     wcols: usize,
     accum: I8Accum,
+    v: GemmVariant,
 ) {
-    for jc in (0..wcols).step_by(NC) {
-        let ncl = NC.min(wcols - jc);
-        let n_panels = ncl.div_ceil(NR);
-        for kc0 in (0..k).step_by(KC) {
-            let kcl = KC.min(k - kc0);
+    let (mr, nr) = (v.mr, v.nr);
+    let (mc, kc, nc) = (v.block.mc, v.block.kc, v.block.nc);
+    for jc in (0..wcols).step_by(nc) {
+        let ncl = nc.min(wcols - jc);
+        let n_panels = ncl.div_ceil(nr);
+        for kc0 in (0..k).step_by(kc) {
+            let kcl = kc.min(k - kc0);
             let steps = kcl.div_ceil(4);
-            let bpl = &mut bp[..n_panels * steps * NR * 4];
+            let bpl = &mut bp[..n_panels * steps * nr * 4];
             for jp in 0..n_panels {
-                let jabs = j0 + jc + jp * NR;
-                let cols = NR.min(j0 + jc + ncl - jabs);
-                let panel = &mut bpl[jp * steps * NR * 4..(jp + 1) * steps * NR * 4];
-                b.pack_b(n, kc0, kcl, jabs, cols, NR, panel);
+                let jabs = j0 + jc + jp * nr;
+                let cols = nr.min(j0 + jc + ncl - jabs);
+                let panel = &mut bpl[jp * steps * nr * 4..(jp + 1) * steps * nr * 4];
+                b.pack_b(n, kc0, kcl, jabs, cols, nr, panel);
             }
             let bpl = &*bpl;
-            let apl = &mut ap[..steps * MR * 4];
-            for ic in (0..m).step_by(MC) {
-                let mcl = MC.min(m - ic);
-                for ir in (0..mcl).step_by(MR) {
+            let apl = &mut ap[..steps * mr * 4];
+            for ic in (0..m).step_by(mc) {
+                let mcl = mc.min(m - ic);
+                for ir in (0..mcl).step_by(mr) {
                     let gi = ic + ir;
-                    let mrl = MR.min(m - gi);
-                    a.pack_a(k, gi, mrl, kc0, kcl, MR, apl);
+                    let mrl = mr.min(m - gi);
+                    a.pack_a(k, gi, mrl, kc0, kcl, mr, apl);
                     for jp in 0..n_panels {
-                        let jloc = jc + jp * NR;
-                        let nrl = NR.min(wcols - jloc);
-                        let bpp = &bpl[jp * steps * NR * 4..(jp + 1) * steps * NR * 4];
-                        microkernel_i8(ci32, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, accum);
+                        let jloc = jc + jp * nr;
+                        let nrl = nr.min(wcols - jloc);
+                        let bpp = &bpl[jp * steps * nr * 4..(jp + 1) * steps * nr * 4];
+                        microkernel_i8_v(
+                            v, ci32, gi, jloc, wcols, apl, bpp, steps, mrl, nrl, accum,
+                        );
                     }
                 }
             }
@@ -579,14 +652,12 @@ fn col_worker(
     }
 }
 
-/// The `MR×NR` rank-4 microkernel: loads the running i32 sums of one `C`
-/// register block, applies `steps` rank-4 updates from the
-/// quad-interleaved panels — each step's four products summed exactly in
-/// `i64` and folded with the contract's accumulate op — and stores the
-/// sums back. Only the `mrl×nrl` valid corner is loaded/stored;
-/// zero-padded panel lanes are computed and discarded.
+/// Dispatch to the monomorphized rank-4 microkernel for `v`'s register
+/// tile. The family shares one generic body ([`microkernel_i8_g`]); only
+/// tiles in [`GemmVariant::WIDE_KERNELS`] are instantiated.
 #[allow(clippy::too_many_arguments)]
-fn microkernel_i8(
+fn microkernel_i8_v(
+    v: GemmVariant,
     ci32: &mut [i32],
     ci: usize,
     j0: usize,
@@ -598,50 +669,72 @@ fn microkernel_i8(
     nrl: usize,
     accum: I8Accum,
 ) {
-    let mut acc = [0i32; MR * NR];
-    for i in 0..mrl {
+    match (v.mr, v.nr) {
+        (8, 8) => microkernel_i8_g::<8, 8>(ci32, ci, j0, ld, ap, bp, steps, mrl, nrl, accum),
+        (8, 16) => microkernel_i8_g::<8, 16>(ci32, ci, j0, ld, ap, bp, steps, mrl, nrl, accum),
+        (mr, nr) => unreachable!("no monomorphized int8 register tile {mr}x{nr}"),
+    }
+}
+
+/// The `MR_×NR_` rank-4 microkernel: loads the running i32 sums of one
+/// `C` register block, applies `steps` rank-4 updates from the
+/// quad-interleaved panels — each step's four products summed exactly in
+/// `i64` and folded with the contract's accumulate op — and stores the
+/// sums back. Only the `mrl×nrl` valid corner is loaded/stored;
+/// zero-padded panel lanes are computed and discarded.
+#[allow(clippy::too_many_arguments)]
+fn microkernel_i8_g<const MR_: usize, const NR_: usize>(
+    ci32: &mut [i32],
+    ci: usize,
+    j0: usize,
+    ld: usize,
+    ap: &[i8],
+    bp: &[u8],
+    steps: usize,
+    mrl: usize,
+    nrl: usize,
+    accum: I8Accum,
+) {
+    let mut acc = [[0i32; NR_]; MR_];
+    for (i, row) in acc.iter_mut().enumerate().take(mrl) {
         let crow = &ci32[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        acc[i * NR..i * NR + nrl].copy_from_slice(crow);
+        row[..nrl].copy_from_slice(crow);
     }
     for s in 0..steps {
-        let ar = &ap[s * MR * 4..(s + 1) * MR * 4];
-        let br = &bp[s * NR * 4..(s + 1) * NR * 4];
+        let ar = &ap[s * MR_ * 4..(s + 1) * MR_ * 4];
+        let br = &bp[s * NR_ * 4..(s + 1) * NR_ * 4];
         // widen each lane exactly once per step
-        let mut bw = [0i64; 4 * NR];
-        for (slot, &v) in bw.iter_mut().zip(br) {
-            *slot = i64::from(v);
+        let mut bw = [[0i64; 4]; NR_];
+        for (slot, quad) in bw.iter_mut().zip(br.chunks_exact(4)) {
+            slot[0] = i64::from(quad[0]);
+            slot[1] = i64::from(quad[1]);
+            slot[2] = i64::from(quad[2]);
+            slot[3] = i64::from(quad[3]);
         }
-        for i in 0..MR {
+        for (i, row) in acc.iter_mut().enumerate() {
             let x0 = i64::from(ar[i * 4]);
             let x1 = i64::from(ar[i * 4 + 1]);
             let x2 = i64::from(ar[i * 4 + 2]);
             let x3 = i64::from(ar[i * 4 + 3]);
-            let row = &mut acc[i * NR..(i + 1) * NR];
             match accum {
                 I8Accum::Wrapping => {
-                    for (j, slot) in row.iter_mut().enumerate() {
-                        let sum = x0 * bw[j * 4]
-                            + x1 * bw[j * 4 + 1]
-                            + x2 * bw[j * 4 + 2]
-                            + x3 * bw[j * 4 + 3];
+                    for (slot, bwq) in row.iter_mut().zip(&bw) {
+                        let sum = x0 * bwq[0] + x1 * bwq[1] + x2 * bwq[2] + x3 * bwq[3];
                         *slot = mod_add_i32(*slot, sum);
                     }
                 }
                 I8Accum::Saturating => {
-                    for (j, slot) in row.iter_mut().enumerate() {
-                        let sum = x0 * bw[j * 4]
-                            + x1 * bw[j * 4 + 1]
-                            + x2 * bw[j * 4 + 2]
-                            + x3 * bw[j * 4 + 3];
+                    for (slot, bwq) in row.iter_mut().zip(&bw) {
+                        let sum = x0 * bwq[0] + x1 * bwq[1] + x2 * bwq[2] + x3 * bwq[3];
                         *slot = sat_add_i32(*slot, sum);
                     }
                 }
             }
         }
     }
-    for i in 0..mrl {
+    for (i, row) in acc.iter().enumerate().take(mrl) {
         let crow = &mut ci32[(ci + i) * ld + j0..(ci + i) * ld + j0 + nrl];
-        crow.copy_from_slice(&acc[i * NR..i * NR + nrl]);
+        crow.copy_from_slice(&row[..nrl]);
     }
 }
 
@@ -816,6 +909,60 @@ mod tests {
                 let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
                 assert_eq!(gb, eb, "m={m} n={n} k={k} relu={want_relu}");
             }
+        }
+    }
+
+    #[test]
+    fn every_wide_variant_matches_reference_bitwise_spot() {
+        // the full sweep lives in tests/tune_engine.rs; this in-module
+        // spot check pins the whole wide family (both register tiles x
+        // the blocking grid) on one seam-heavy shape for both contracts
+        // and the dequant path
+        let mut rng = Rng::new(0x1e8a);
+        let (m, n, k) = (9usize, 17usize, 31usize);
+        let (a, b) = rand_q(&mut rng, m, n, k);
+        let af = rng.f32_vec(m * k);
+        let bf = rng.f32_vec(k * n);
+        let bias = rng.f32_vec(n);
+        let q = QuantParams { a_scale: 0.031, a_zp: -3, b_scale: 0.027, b_zp: 125 };
+        let dq_expect = gemm_i8_dequant_reference(&af, &bf, m, n, k, &q, Some(&bias), true);
+        for v in GemmVariant::wide_candidates() {
+            for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+                let expect = gemm_i8_reference(&a, &b, m, n, k, accum);
+                let mut c = vec![0i32; m * n];
+                let mut scratch = I8Scratch::new();
+                gemm_i8_packed_tuned_into(
+                    &mut c,
+                    I8SrcA::Q(&a),
+                    I8SrcB::Q(&b),
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                assert_eq!(c, expect, "variant {} {accum:?}", v.name());
+            }
+            let mut c = vec![0f32; m * n];
+            let mut scratch = I8Scratch::new();
+            gemm_i8_dequant_tuned_into(
+                &mut c,
+                &af,
+                &bf,
+                m,
+                n,
+                k,
+                &q,
+                I8Epilogue::BiasRelu(&bias),
+                Par::Seq,
+                &mut scratch,
+                v,
+            );
+            let gb: Vec<u32> = c.iter().map(|x| x.to_bits()).collect();
+            let eb: Vec<u32> = dq_expect.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, eb, "dequant variant {}", v.name());
         }
     }
 

@@ -748,6 +748,174 @@ mod tests {
     }
 
     #[test]
+    fn f32_panels_zero_fill_every_seam_shape() {
+        // the tuner's register-tile family (mr in {4,8}, nr in {8,16})
+        // at every tile seam (rows/cols = tile−1, tile) and every KC
+        // tail (kc = 1, KC−1, KC, KC+1), from offset windows: every
+        // in-range element lands per the layout formula and every pad
+        // slot is exactly +0.0 — sentinel-filled outputs prove full
+        // overwrite
+        const KC: usize = crate::blas::block_gemm::KC;
+        let (i0, k0, j0) = (2usize, 3usize, 1usize);
+        let src = |r: usize, c: usize| (r * 997 + c) as f32;
+        for mr in [4usize, 8] {
+            for rows in [1usize, mr - 1, mr] {
+                for kc in [1usize, KC - 1, KC, KC + 1] {
+                    let lda = k0 + kc + 2;
+                    let a: Vec<f32> =
+                        (0..(i0 + mr) * lda).map(|x| src(x / lda, x % lda)).collect();
+                    let mut out = vec![f32::NAN; kc * mr];
+                    pack_a_panel_f32(&a, lda, i0, rows, k0, kc, mr, &mut out);
+                    for p in 0..kc {
+                        for i in 0..mr {
+                            let got = out[p * mr + i];
+                            if i < rows {
+                                assert_eq!(got, src(i0 + i, k0 + p), "mr={mr} p={p} i={i}");
+                            } else {
+                                assert_eq!(got.to_bits(), 0, "m-tail pad mr={mr} p={p} i={i}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for nr in [8usize, 16] {
+            for cols in [1usize, nr - 1, nr] {
+                for kc in [1usize, KC - 1, KC, KC + 1] {
+                    let ldb = j0 + nr + 2;
+                    let b: Vec<f32> =
+                        (0..(k0 + kc) * ldb).map(|x| src(x / ldb, x % ldb)).collect();
+                    let mut out = vec![f32::NAN; kc * nr];
+                    pack_b_panel_f32(&b, ldb, k0, kc, j0, cols, nr, &mut out);
+                    for p in 0..kc {
+                        for j in 0..nr {
+                            let got = out[p * nr + j];
+                            if j < cols {
+                                assert_eq!(got, src(k0 + p, j0 + j), "nr={nr} p={p} j={j}");
+                            } else {
+                                assert_eq!(got.to_bits(), 0, "n-tail pad nr={nr} p={p} j={j}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_panels_zero_fill_every_seam_shape() {
+        // the pair-interleaved layout at the same seam sweep: the odd-k
+        // pad lane, the m/n tails, and the KC±1 windows must all land
+        // zero bits (never a stale sentinel), in-range elements per the
+        // (s, lane, kl) formula
+        const KC: usize = crate::blas::block_gemm::KC;
+        let (i0, k0, j0) = (1usize, 2usize, 3usize);
+        let src = |r: usize, c: usize| ((r * 131 + c * 7) % 0x7f00) as u16;
+        for (mr_nr, a_side) in [(8usize, true), (8, false), (16, false)] {
+            for edge in [1usize, mr_nr - 1, mr_nr] {
+                for kc in [1usize, KC - 1, KC, KC + 1] {
+                    let steps = kc.div_ceil(2);
+                    let mut out = vec![0xdeadu16; steps * mr_nr * 2];
+                    if a_side {
+                        let lda = k0 + kc + 1;
+                        let a: Vec<u16> =
+                            (0..(i0 + mr_nr) * lda).map(|x| src(x / lda, x % lda)).collect();
+                        pack_a_panel_bf16(&a, lda, i0, edge, k0, kc, mr_nr, &mut out);
+                        for s in 0..steps {
+                            for i in 0..mr_nr {
+                                for kl in 0..2 {
+                                    let kk = 2 * s + kl;
+                                    let want = if i < edge && kk < kc {
+                                        src(i0 + i, k0 + kk)
+                                    } else {
+                                        0
+                                    };
+                                    let got = out[s * mr_nr * 2 + i * 2 + kl];
+                                    assert_eq!(got, want, "A s={s} i={i} kl={kl} kc={kc}");
+                                }
+                            }
+                        }
+                    } else {
+                        let ldb = j0 + mr_nr + 1;
+                        let b: Vec<u16> =
+                            (0..(k0 + kc) * ldb).map(|x| src(x / ldb, x % ldb)).collect();
+                        pack_b_panel_bf16(&b, ldb, k0, kc, j0, edge, mr_nr, &mut out);
+                        for s in 0..steps {
+                            for j in 0..mr_nr {
+                                for kl in 0..2 {
+                                    let kk = 2 * s + kl;
+                                    let want = if j < edge && kk < kc {
+                                        src(k0 + kk, j0 + j)
+                                    } else {
+                                        0
+                                    };
+                                    let got = out[s * mr_nr * 2 + j * 2 + kl];
+                                    assert_eq!(got, want, "B s={s} j={j} kl={kl} kc={kc}");
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_panels_zero_fill_every_seam_shape() {
+        // the quad-interleaved layout at the seam sweep: k%4 pad lanes,
+        // m/n tails, KC±1 windows — pad bytes are literal zero (the
+        // rank-4 step's disabled-product image; the dequantize
+        // zero-point correction happens in the engine, never in the
+        // panel), in-range bytes per the (s, lane, kl) formula
+        const KC: usize = crate::blas::block_gemm::KC;
+        let (i0, k0, j0) = (2usize, 1usize, 2usize);
+        for mr_nr in [8usize, 16] {
+            for edge in [1usize, mr_nr - 1, mr_nr] {
+                for kc in [1usize, KC - 1, KC, KC + 1] {
+                    let steps = kc.div_ceil(4);
+                    let lda = k0 + kc + 3;
+                    let a: Vec<i8> =
+                        (0..(i0 + mr_nr) * lda).map(|x| (x % 256) as u8 as i8).collect();
+                    let mut out = vec![0x55i8; steps * mr_nr * 4];
+                    pack_a_panel_i8(&a, lda, i0, edge, k0, kc, mr_nr, &mut out);
+                    for s in 0..steps {
+                        for i in 0..mr_nr {
+                            for kl in 0..4 {
+                                let kk = 4 * s + kl;
+                                let want = if i < edge && kk < kc {
+                                    a[(i0 + i) * lda + k0 + kk]
+                                } else {
+                                    0
+                                };
+                                let got = out[s * mr_nr * 4 + i * 4 + kl];
+                                assert_eq!(got, want, "A s={s} i={i} kl={kl} kc={kc}");
+                            }
+                        }
+                    }
+                    let ldb = j0 + mr_nr + 2;
+                    let b: Vec<u8> = (0..(k0 + kc) * ldb).map(|x| (x % 256) as u8).collect();
+                    let mut out = vec![0xaau8; steps * mr_nr * 4];
+                    pack_b_panel_u8(&b, ldb, k0, kc, j0, edge, mr_nr, &mut out);
+                    for s in 0..steps {
+                        for j in 0..mr_nr {
+                            for kl in 0..4 {
+                                let kk = 4 * s + kl;
+                                let want = if j < edge && kk < kc {
+                                    b[(k0 + kk) * ldb + j0 + j]
+                                } else {
+                                    0
+                                };
+                                let got = out[s * mr_nr * 4 + j * 4 + kl];
+                                assert_eq!(got, want, "B s={s} j={j} kl={kl} kc={kc}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn unpack_c8x16_block_layout() {
         let mut raw = vec![0f32; 128];
         for s in 0..8 {

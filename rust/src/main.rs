@@ -322,6 +322,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             "serving dtype: f32 (default) | int8 (calibrated quantized serving: \
              every bucket's dots run on the rank-4 xvi8ger4 integer engine, \
              quantize->dot->dequantize fused into one plan step)",
+        )
+        .flag(
+            "no-tune",
+            "skip the microkernel autotuner: every dot compiles to the \
+             deterministic per-dtype heuristic variant instead of measuring \
+             candidates on first sight of a shape class",
         );
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
@@ -361,6 +367,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let no_tune = m.flag("no-tune");
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -385,11 +392,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     // shard (shards add engines, not worker threads)
     let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
     let coord = Coordinator::start(cfg, weights, move |shard| {
-        let backend: Box<dyn EngineBackend> = if int8 {
-            Box::new(HloPlanBackend::int8())
+        // one tune table per device: shape classes measured by any shard's
+        // compile are reused verbatim by every later shard/bucket compile
+        let mut backend = if int8 {
+            HloPlanBackend::int8()
         } else {
-            Box::new(HloPlanBackend::with_bf16_accum(accum))
+            HloPlanBackend::with_bf16_accum(accum)
         };
+        if !no_tune {
+            backend = backend.with_tuning(device.tune());
+        }
+        let backend: Box<dyn EngineBackend> = Box::new(backend);
         let mut rt = Runtime::with_device(device.clone(), backend, &dir);
         // int8: the calibrated buckets load *first* so their metas win
         // the bucket names over the record-less mlp_b32 disk fixture
@@ -682,16 +695,17 @@ fn run_model(
 fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::benchkit::{bench_budget, black_box};
     use power_mma::blas::bf16_gemm::{
-        gemm_bf16_packed_into, gemm_bf16_reference, gemm_bf16_reference_pairs, Bf16Accum,
-        Bf16Scratch, Bf16Src,
+        gemm_bf16_packed_into, gemm_bf16_reference, gemm_bf16_reference_pairs, gemm_bf16_tuned_into,
+        Bf16Accum, Bf16Scratch, Bf16Src,
     };
     use power_mma::blas::block_gemm::{
-        gemm_f32_fused_into, gemm_f32_into, Accum, Epilogue, GemmScratch, PanelB, Par,
+        gemm_f32_fused_into, gemm_f32_into, gemm_f32_tuned_into, Accum, Epilogue, GemmScratch,
+        GemmVariant, PanelB, Par,
     };
     use power_mma::blas::gemm::ref_gemm;
     use power_mma::blas::i8_gemm::{
-        gemm_i8_dequant_into, gemm_i8_dequant_reference, gemm_i8_packed_into, I8Accum,
-        I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
+        gemm_i8_dequant_into, gemm_i8_dequant_reference, gemm_i8_dequant_tuned_into,
+        gemm_i8_packed_into, I8Accum, I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
     };
     use power_mma::coordinator::ShardRouting;
     use power_mma::isa::GerKind;
@@ -699,7 +713,7 @@ fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::runtime::hlo::bf16_round;
     use power_mma::runtime::{
         artifacts, det_input, det_inputs, mlp_hlo_text, mlp_int8_calib, Device, EngineBackend,
-        HloInterpreterBackend, HloPlanBackend, ModelMeta,
+        HloInterpreterBackend, HloPlanBackend, ModelMeta, TuneDtype, TuneEpi, TuneTable,
     };
     use std::time::Duration;
 
@@ -1255,6 +1269,177 @@ fn cmd_bench(args: &[String]) -> i32 {
         fpc_i8 / 2.0
     );
 
+    // -- 6c. autotuner: measure -> memoize -> bake into compiled plans ---
+    // seed one device-style tune table through real plan compiles at two
+    // batch points of the serving MLP (batch 1 decisively favors the
+    // narrow 4x8 f32 tile: every microkernel computes all MR rows, so
+    // mr=8 wastes 7/8 of the arithmetic at m=1), plus the bf16 fixture
+    // and the calibrated int8 MLP so every dtype lands in the table
+    let tune_table = std::sync::Arc::new(TuneTable::new());
+    for batch in [1usize, 32] {
+        let mlp = mlp_hlo_text(batch, i8f, i8h, i8c);
+        let opts = power_mma::runtime::plan::PlanOptions {
+            tune: Some(tune_table.clone()),
+            ..Default::default()
+        };
+        if let Err(e) = power_mma::runtime::hlo::HloModule::parse(&mlp)
+            .and_then(|m| power_mma::runtime::plan::Plan::compile_with_options(&m, opts))
+        {
+            eprintln!("autotune: MLP b{batch} plan compile failed: {e}");
+            return 1;
+        }
+    }
+    if let Err(e) = power_mma::runtime::hlo::HloModule::parse(bf16_art.hlo_text).and_then(|m| {
+        power_mma::runtime::plan::Plan::compile_with_options(
+            &m,
+            power_mma::runtime::plan::PlanOptions {
+                tune: Some(tune_table.clone()),
+                ..Default::default()
+            },
+        )
+    }) {
+        eprintln!("autotune: gemm_bf16 plan compile failed: {e}");
+        return 1;
+    }
+    if let Err(e) =
+        power_mma::runtime::hlo::HloModule::parse(&mlp_hlo_text(32, i8f, i8h, i8c)).and_then(|m| {
+            power_mma::runtime::plan::Plan::compile_with_options(
+                &m,
+                power_mma::runtime::plan::PlanOptions {
+                    int8_calib: Some(mlp_int8_calib(i8f, i8h, i8c)),
+                    tune: Some(tune_table.clone()),
+                    ..Default::default()
+                },
+            )
+        })
+    {
+        eprintln!("autotune: int8 MLP plan compile failed: {e}");
+        return 1;
+    }
+    let tune_snapshot = tune_table.snapshot();
+    if tune_snapshot.is_empty() {
+        eprintln!("autotune: the tune table is empty after seeding compiles");
+        return 1;
+    }
+    // per memoized class: re-run the chosen variant and the dtype's
+    // canonical engine on deterministic operands — the identity bit the
+    // whole tuner rests on (a variant may only change speed, never bits)
+    let mut tuning_rows = Vec::new();
+    let mut tuning_identical = true;
+    let mut tune_variants = std::collections::BTreeSet::new();
+    let mut tune_measured = 0usize;
+    let mut tv_scratch = GemmScratch::new();
+    let mut tv_bf16_scratch = Bf16Scratch::new();
+    let mut tv_i8_scratch = I8Scratch::new();
+    for (key, choice) in &tune_snapshot {
+        let (tm, tn, tk) = (key.m, key.n, key.k);
+        let ta = det_input(tm * tk, 5);
+        let tb = det_input(tk * tn, 6);
+        let bias = det_input(tn, 9);
+        let canon = power_mma::runtime::tune::heuristic_variant(key.dtype);
+        let identical = match key.dtype {
+            TuneDtype::F32 => {
+                let mut run = |c: &mut [f32], s: &mut GemmScratch, v: GemmVariant| {
+                    let epi = match key.epi {
+                        TuneEpi::None => Epilogue::None,
+                        TuneEpi::Bias => Epilogue::Bias(&bias),
+                        TuneEpi::BiasRelu => Epilogue::BiasRelu(&bias),
+                    };
+                    gemm_f32_tuned_into(
+                        c,
+                        &ta,
+                        PanelB::Matrix(&tb),
+                        tm,
+                        tn,
+                        tk,
+                        Accum::F64,
+                        epi,
+                        Par::Seq,
+                        s,
+                        v,
+                    );
+                };
+                let mut chosen = vec![0f32; tm * tn];
+                let mut def = vec![0f32; tm * tn];
+                run(&mut chosen, &mut tv_scratch, choice.variant);
+                run(&mut def, &mut tv_scratch, canon);
+                chosen.iter().zip(&def).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            TuneDtype::Bf16 => {
+                let mut run = |c: &mut [f32], s: &mut Bf16Scratch, v: GemmVariant| {
+                    gemm_bf16_tuned_into(
+                        c,
+                        Bf16Src::F32(&ta),
+                        Bf16Src::F32(&tb),
+                        tm,
+                        tn,
+                        tk,
+                        Bf16Accum::Widened,
+                        Par::Seq,
+                        s,
+                        v,
+                    );
+                };
+                let mut chosen = vec![0f32; tm * tn];
+                let mut def = vec![0f32; tm * tn];
+                run(&mut chosen, &mut tv_bf16_scratch, choice.variant);
+                run(&mut def, &mut tv_bf16_scratch, canon);
+                chosen.iter().zip(&def).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            TuneDtype::I8 => {
+                let tq =
+                    QuantParams { a_scale: 0.02, a_zp: -5, b_scale: 0.017, b_zp: 120 };
+                let mut run = |c: &mut [f32], s: &mut I8Scratch, v: GemmVariant| {
+                    let epi = match key.epi {
+                        TuneEpi::None => I8Epilogue::None,
+                        TuneEpi::Bias => I8Epilogue::Bias(&bias),
+                        TuneEpi::BiasRelu => I8Epilogue::BiasRelu(&bias),
+                    };
+                    gemm_i8_dequant_tuned_into(
+                        c, &ta, &tb, tm, tn, tk, &tq, epi, Par::Seq, s, v,
+                    );
+                };
+                let mut chosen = vec![0f32; tm * tn];
+                let mut def = vec![0f32; tm * tn];
+                run(&mut chosen, &mut tv_i8_scratch, choice.variant);
+                run(&mut def, &mut tv_i8_scratch, canon);
+                chosen.iter().zip(&def).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+        };
+        tuning_identical &= identical;
+        tune_variants.insert(choice.variant.name());
+        tune_measured += usize::from(choice.measured);
+        println!(
+            "tune {:4} {tm:3}x{tn:3}x{tk:3} epi {:9} -> {:20} \
+             ({}, chosen {:.3} ms vs default {:.3} ms) numerics {}",
+            key.dtype.as_str(),
+            key.epi.as_str(),
+            choice.variant.name(),
+            if choice.measured { "measured" } else { "heuristic" },
+            choice.chosen_ms,
+            choice.default_ms,
+            if identical { "identical" } else { "DIFFER" }
+        );
+        tuning_rows.push(format!(
+            "{{\"m\": {tm}, \"n\": {tn}, \"k\": {tk}, \"dtype\": \"{}\", \
+             \"epilogue\": \"{}\", \"variant\": \"{}\", \"chosen_ms\": {:.4}, \
+             \"default_ms\": {:.4}, \"measured\": {}, \"identical\": {identical}}}",
+            key.dtype.as_str(),
+            key.epi.as_str(),
+            choice.variant.name(),
+            choice.chosen_ms,
+            choice.default_ms,
+            choice.measured
+        ));
+    }
+    let tune_distinct = tune_variants.len();
+    println!(
+        "tune table: {} classes, {tune_measured} measured, {tune_distinct} distinct \
+         variants, numerics {}",
+        tune_snapshot.len(),
+        if tuning_identical { "identical" } else { "DIFFER" }
+    );
+
     // -- 7. coordinator end-to-end over the plan backend, shards 1 vs 2 --
     // this bench drives a single model family (classify), so sticky
     // routing funnels everything through one shard — the round-robin
@@ -1403,7 +1588,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         && bf16_pairs_identical
         && plan_pairs_identical
         && int8_identical
-        && batch_identical;
+        && batch_identical
+        && tuning_identical;
 
     // -- 9. machine-readable report --------------------------------------
     let json = format!(
@@ -1441,6 +1627,10 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"per_bucket\": [\n    {}\n  ], \
          \"windows\": [\n    {}\n  ], \
          \"batched_vs_singleton_identical\": {batch_identical}}},\n  \
+         \"tuning\": {{\"enabled\": true, \"classes\": {}, \
+         \"measured_classes\": {tune_measured}, \"distinct_variants\": {tune_distinct}, \
+         \"identical\": {tuning_identical}, \
+         \"table\": [\n    {}\n  ]}},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
          \"pass\": {}, \"numerics_identical\": {numerics_ok}}}\n}}\n",
         gemm_rows.join(",\n    "),
@@ -1458,6 +1648,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         coord2.json,
         per_bucket_rows.join(",\n    "),
         window_rows.join(",\n    "),
+        tune_snapshot.len(),
+        tuning_rows.join(",\n    "),
         speedup >= 3.0
     );
     let out_path = m.get("out");

@@ -56,6 +56,7 @@ use std::sync::{Arc, OnceLock};
 pub struct Device {
     pool: ThreadPool,
     threads: usize,
+    tune: Arc<super::tune::TuneTable>,
 }
 
 impl Device {
@@ -70,7 +71,11 @@ impl Device {
     /// eagerly and lives as long as the device).
     pub fn new(threads: usize) -> Arc<Device> {
         let threads = threads.max(1);
-        Arc::new(Device { pool: ThreadPool::new("mma-gemm", threads), threads })
+        Arc::new(Device {
+            pool: ThreadPool::new("mma-gemm", threads),
+            threads,
+            tune: Arc::new(super::tune::TuneTable::new()),
+        })
     }
 
     /// The process-wide shared device (budget =
@@ -91,6 +96,16 @@ impl Device {
     /// [`ThreadPool::par_for`]).
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
+    }
+
+    /// The device's shape-autotuning table: one memoized
+    /// `class → variant` map shared by every plan compiled against this
+    /// device (pass it to
+    /// [`PlanOptions`](super::plan::PlanOptions)/`HloPlanBackend::
+    /// with_tuning` to opt a compilation in). Lazy: it costs nothing
+    /// until a tuned compilation first consults it.
+    pub fn tune(&self) -> Arc<super::tune::TuneTable> {
+        self.tune.clone()
     }
 
     /// A fresh per-request execution context on this device.

@@ -41,10 +41,12 @@ pub mod artifacts;
 pub mod device;
 pub mod hlo;
 pub mod plan;
+pub mod tune;
 
 pub use device::{
     bf16_to_f32, f32_to_bf16, DTypeSlice, DTypeSliceMut, Device, ExecCtx, TensorMut, TensorRef,
 };
+pub use tune::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TuneTable};
 
 use crate::blas::block_gemm::Par;
 use crate::error::{Context, Result};
@@ -363,6 +365,18 @@ impl HloPlanBackend {
     /// Whether this backend quantizes calibrated models.
     pub fn is_int8(&self) -> bool {
         self.int8
+    }
+
+    /// Opt this backend's compilations into shape autotuning against
+    /// `table` (normally [`Device::tune`]): every fused GEMM step's
+    /// class is resolved through the table at compile time and the
+    /// winning [`GemmVariant`](crate::blas::block_gemm::GemmVariant) is
+    /// baked into the step — re-execution never re-measures. Without
+    /// this, steps run the deterministic heuristic default (the
+    /// canonical pre-tuner variants).
+    pub fn with_tuning(mut self, table: Arc<tune::TuneTable>) -> HloPlanBackend {
+        self.opts.tune = Some(table);
+        self
     }
 }
 

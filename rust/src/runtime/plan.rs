@@ -97,11 +97,13 @@
 //! ```
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
+use super::tune::{heuristic_variant, TuneDtype, TuneEpi, TuneKey, TuneTable};
 use super::Int8Calib;
-use crate::blas::bf16_gemm::{gemm_bf16_packed_into, Bf16Accum, Bf16Scratch, Bf16Src};
-use crate::blas::i8_gemm::{gemm_i8_dequant_into, I8Epilogue, I8Scratch, QuantParams};
+use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
+use crate::blas::i8_gemm::{gemm_i8_dequant_tuned_into, I8Epilogue, I8Scratch, QuantParams};
 use crate::blas::block_gemm::{
-    gemm_f32_fused_into, threads_for_pooled, Accum, Epilogue, GemmScratch, PanelB, Par,
+    gemm_f32_tuned_into, threads_for_pooled, Accum, Epilogue, GemmScratch, GemmVariant, PanelB,
+    Par,
 };
 use crate::error::Result;
 use crate::isa::types::bf16_to_f32;
@@ -138,6 +140,35 @@ enum StepEpi {
     BiasRelu(usize),
 }
 
+impl StepEpi {
+    /// The autotuner's epilogue class of this step epilogue.
+    fn tune_epi(&self) -> TuneEpi {
+        match self {
+            StepEpi::None => TuneEpi::None,
+            StepEpi::Bias(_) => TuneEpi::Bias,
+            StepEpi::BiasRelu(_) => TuneEpi::BiasRelu,
+        }
+    }
+}
+
+/// Resolve the microkernel/blocking variant for one fused GEMM step at
+/// compile time: consult the installed [`TuneTable`] (measuring the
+/// class on first sight, memoized lookup after), or fall back to the
+/// deterministic heuristic default — the canonical pre-tuner variant.
+fn tuned_variant(
+    tune: &Option<std::sync::Arc<TuneTable>>,
+    m: usize,
+    n: usize,
+    k: usize,
+    dtype: TuneDtype,
+    epi: TuneEpi,
+) -> GemmVariant {
+    match tune {
+        Some(t) => t.choose(TuneKey { m, n, k, dtype, epi }).variant,
+        None => heuristic_variant(dtype),
+    }
+}
+
 /// One compiled step of a [`Plan`]. Slot indices refer to the arena of
 /// [`ExecBuffers`].
 #[derive(Clone, Debug)]
@@ -153,13 +184,34 @@ enum Step {
     /// `[m,k] × [k,n]` matmul on the blocked parallel GEMM, with an
     /// optional fused bias/relu epilogue (the rewrite pass's compiled
     /// form of trailing `broadcast+add` / `maximum(0)` instructions).
-    Dot { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize, epi: StepEpi },
+    /// `v` is the microkernel/blocking variant the autotuner resolved
+    /// for this step's shape class at compile time (the canonical
+    /// variant when tuning is off) — execution never re-measures.
+    Dot {
+        a: usize,
+        b: usize,
+        out: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        epi: StepEpi,
+        v: GemmVariant,
+    },
     /// A whole conv-as-shifted-multiply-add chain collapsed to one
     /// im2col-gathered GEMM: weights `[m,k]` × the virtual `[k,n]`
     /// im2col view of the padded image in slot `img` (`f32`-chain
     /// accumulation — bit-identical to the elementwise sweep it
     /// replaces).
-    Im2colGemm { w: usize, img: usize, out: usize, m: usize, n: usize, k: usize, spec: Im2colSpec },
+    Im2colGemm {
+        w: usize,
+        img: usize,
+        out: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        spec: Im2colSpec,
+        v: GemmVariant,
+    },
     /// A `convert(bf16) → convert(f32) → dot` subgraph collapsed to one
     /// step on the **bf16 packed engine**
     /// ([`crate::blas::bf16_gemm`]): both rounding converts are fused
@@ -169,7 +221,7 @@ enum Step {
     /// operand slot holds a raw-bf16 request input
     /// ([`PlanInput::Bf16`]), the bits feed the packers directly (no
     /// widening staging at all).
-    DotBf16 { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize },
+    DotBf16 { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize, v: GemmVariant },
     /// A calibrated dot (plus any fused bias/relu tail) lowered onto the
     /// **int8 rank-4 quantized engine** ([`crate::blas::i8_gemm`]): the
     /// whole quantize→dot→dequantize pipeline runs inside one step —
@@ -188,6 +240,7 @@ enum Step {
         k: usize,
         epi: StepEpi,
         q: QuantParams,
+        v: GemmVariant,
     },
     /// Affine gather (`broadcast` / `slice`).
     Gather { src: usize, out: usize, spec: GatherSpec },
@@ -265,6 +318,16 @@ pub struct PlanOptions {
     /// [`Step::DotI8`] on the quantized rank-4 engine, bias/relu tails
     /// included. Uncalibrated dots keep their f32 lowering.
     pub int8_calib: Option<Int8Calib>,
+    /// Shape-autotuning table (normally [`Device::tune`]
+    /// (super::device::Device::tune), installed via
+    /// `HloPlanBackend::with_tuning`): when set, every fused GEMM step's
+    /// `(m, n, k, dtype, epilogue)` class is resolved through
+    /// [`TuneTable::choose`] at compile time and the winning variant is
+    /// baked into the step. `None` (the default, and the `--no-tune`
+    /// escape hatch) compiles the deterministic heuristic default —
+    /// byte-for-byte the pre-autotuner engine configuration. Either way
+    /// the bits are identical; only speed can differ.
+    pub tune: Option<std::sync::Arc<TuneTable>>,
 }
 
 /// Reusable per-model execution state: the arena slots, the GEMM
@@ -1146,6 +1209,8 @@ impl Plan {
                 match f {
                     Fuse::Conv { w, img, m, n: nn, k, spec } => {
                         max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
+                        let v =
+                            tuned_variant(&opts.tune, *m, *nn, *k, TuneDtype::F32, TuneEpi::None);
                         steps.push(Step::Im2colGemm {
                             w: slot_of[*w].unwrap(),
                             img: slot_of[*img].unwrap(),
@@ -1154,11 +1219,25 @@ impl Plan {
                             n: *nn,
                             k: *k,
                             spec: spec.clone(),
+                            v,
                         });
                     }
                     Fuse::DotEpi { a, b, bias, relu, m, n: nn, k } => {
                         max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
                         let bias_slot = slot_of[*bias].unwrap();
+                        let epi = if *relu {
+                            StepEpi::BiasRelu(bias_slot)
+                        } else {
+                            StepEpi::Bias(bias_slot)
+                        };
+                        let v = tuned_variant(
+                            &opts.tune,
+                            *m,
+                            *nn,
+                            *k,
+                            TuneDtype::F32,
+                            epi.tune_epi(),
+                        );
                         steps.push(Step::Dot {
                             a: slot_of[*a].unwrap(),
                             b: slot_of[*b].unwrap(),
@@ -1166,15 +1245,14 @@ impl Plan {
                             m: *m,
                             n: *nn,
                             k: *k,
-                            epi: if *relu {
-                                StepEpi::BiasRelu(bias_slot)
-                            } else {
-                                StepEpi::Bias(bias_slot)
-                            },
+                            epi,
+                            v,
                         });
                     }
                     Fuse::DotBf16 { a, b, m, n: nn, k } => {
                         max_bf16 = (max_bf16.0.max(*m), max_bf16.1.max(*nn), max_bf16.2.max(*k));
+                        let v =
+                            tuned_variant(&opts.tune, *m, *nn, *k, TuneDtype::Bf16, TuneEpi::None);
                         steps.push(Step::DotBf16 {
                             a: slot_of[*a].unwrap(),
                             b: slot_of[*b].unwrap(),
@@ -1182,6 +1260,7 @@ impl Plan {
                             m: *m,
                             n: *nn,
                             k: *k,
+                            v,
                         });
                     }
                     Fuse::DotI8 { a, b, bias, relu, m, n: nn, k, q } => {
@@ -1191,6 +1270,14 @@ impl Plan {
                             (Some(s), false) => StepEpi::Bias(slot_of[*s].unwrap()),
                             (Some(s), true) => StepEpi::BiasRelu(slot_of[*s].unwrap()),
                         };
+                        let v = tuned_variant(
+                            &opts.tune,
+                            *m,
+                            *nn,
+                            *k,
+                            TuneDtype::I8,
+                            epi.tune_epi(),
+                        );
                         steps.push(Step::DotI8 {
                             a: slot_of[*a].unwrap(),
                             b: slot_of[*b].unwrap(),
@@ -1200,6 +1287,7 @@ impl Plan {
                             k: *k,
                             epi,
                             q: *q,
+                            v,
                         });
                     }
                 }
@@ -1341,6 +1429,7 @@ impl Plan {
                         bail!("{}: dot result shape {:?} != [{m},{nn}]", ins.name, ins.dims);
                     }
                     max_dot = (max_dot.0.max(m), max_dot.1.max(nn), max_dot.2.max(k));
+                    let v = tuned_variant(&opts.tune, m, nn, k, TuneDtype::F32, TuneEpi::None);
                     steps.push(Step::Dot {
                         a: slot_of[ins.operands[0]].unwrap(),
                         b: slot_of[ins.operands[1]].unwrap(),
@@ -1349,6 +1438,7 @@ impl Plan {
                         n: nn,
                         k,
                         epi: StepEpi::None,
+                        v,
                     });
                 }
                 "broadcast" => {
@@ -1556,34 +1646,79 @@ impl Plan {
         &self.assigns
     }
 
+    /// Largest `(m, n, k)` over the f32 (dot + im2col), bf16, and i8
+    /// fused GEMM steps, in that order — the scratch-sizing envelope
+    /// (each step additionally reserves for its own tuned variant's
+    /// blocking; see [`Plan::new_buffers`]).
+    pub fn max_gemm_shapes(&self) -> [(usize, usize, usize); 3] {
+        [self.max_dot, self.max_bf16, self.max_i8]
+    }
+
+    /// The autotuner's audit surface: the `(shape class, resolved
+    /// variant)` of every fused GEMM step, in program order — what the
+    /// bench's `tuning` block cross-checks against the device table and
+    /// `tests/tune_engine.rs` uses to observe compiled choices.
+    pub fn gemm_variants(&self) -> Vec<(TuneKey, GemmVariant)> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Dot { m, n, k, epi, v, .. } => {
+                    let key =
+                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::F32, epi: epi.tune_epi() };
+                    Some((key, *v))
+                }
+                Step::Im2colGemm { m, n, k, v, .. } => {
+                    let key =
+                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::F32, epi: TuneEpi::None };
+                    Some((key, *v))
+                }
+                Step::DotBf16 { m, n, k, v, .. } => {
+                    let key =
+                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::Bf16, epi: TuneEpi::None };
+                    Some((key, *v))
+                }
+                Step::DotI8 { m, n, k, epi, v, .. } => {
+                    let key =
+                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::I8, epi: epi.tune_epi() };
+                    Some((key, *v))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Preallocate execution buffers for this plan: all arena slots at
     /// full capacity, constants baked in, GEMM scratch (f32, packed
-    /// bf16, packed i8/u8) sized for the largest dot of each kind.
-    /// Request execution then allocates nothing.
+    /// bf16, packed i8/u8) sized per fused GEMM step for the **variant
+    /// the step was compiled with** (panel buffers depend on the
+    /// blocking config, so a tuned step reserves its own geometry; the
+    /// canonical `max_dot`-style reserve is just the special case where
+    /// every step is canonical). Request execution then allocates
+    /// nothing.
     pub fn new_buffers(&self) -> ExecBuffers {
         let mut slots: Vec<Vec<f32>> = self.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
         for (slot, data) in &self.consts {
             slots[*slot][..data.len()].copy_from_slice(data);
         }
+        // reserve for the default device budget; a larger explicit
+        // cap grows the per-worker chunk buffers lazily, once
+        let cap = super::device::Device::default_threads();
         let mut scratch = GemmScratch::new();
-        let (m, n, k) = self.max_dot;
-        if m > 0 {
-            // reserve for the default device budget; a larger explicit
-            // cap grows the per-worker chunk buffers lazily, once
-            let cap = super::device::Device::default_threads();
-            scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
-        }
         let mut bf16_scratch = Bf16Scratch::new();
-        let (m, n, k) = self.max_bf16;
-        if m > 0 {
-            let cap = super::device::Device::default_threads();
-            bf16_scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
-        }
         let mut i8_scratch = I8Scratch::new();
-        let (m, n, k) = self.max_i8;
-        if m > 0 {
-            let cap = super::device::Device::default_threads();
-            i8_scratch.reserve(m, n, k, threads_for_pooled(m, n, k, cap));
+        for s in &self.steps {
+            match s {
+                Step::Dot { m, n, k, v, .. } | Step::Im2colGemm { m, n, k, v, .. } => {
+                    scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
+                }
+                Step::DotBf16 { m, n, k, v, .. } => {
+                    bf16_scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
+                }
+                Step::DotI8 { m, n, k, v, .. } => {
+                    i8_scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
+                }
+                _ => {}
+            }
         }
         ExecBuffers {
             slots,
@@ -1751,7 +1886,7 @@ impl Plan {
                     }
                     bufs.slots[*out] = o;
                 }
-                Step::Dot { a, b, out, m, n, k, epi } => {
+                Step::Dot { a, b, out, m, n, k, epi, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
@@ -1760,7 +1895,7 @@ impl Plan {
                         StepEpi::Bias(s) => Epilogue::Bias(&slots[*s][..*n]),
                         StepEpi::BiasRelu(s) => Epilogue::BiasRelu(&slots[*s][..*n]),
                     };
-                    gemm_f32_fused_into(
+                    gemm_f32_tuned_into(
                         &mut o[..m * n],
                         &slots[*a][..m * k],
                         PanelB::Matrix(&slots[*b][..k * n]),
@@ -1771,10 +1906,11 @@ impl Plan {
                         epilogue,
                         step_par,
                         &mut bufs.scratch,
+                        *v,
                     );
                     bufs.slots[*out] = o;
                 }
-                Step::DotBf16 { a, b, out, m, n, k } => {
+                Step::DotBf16 { a, b, out, m, n, k, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
@@ -1802,7 +1938,7 @@ impl Plan {
                     }
                     let asrc = src(raw, slots, inputs, *a, m * k)?;
                     let bsrc = src(raw, slots, inputs, *b, k * n)?;
-                    gemm_bf16_packed_into(
+                    gemm_bf16_tuned_into(
                         &mut o[..m * n],
                         asrc,
                         bsrc,
@@ -1812,10 +1948,11 @@ impl Plan {
                         self.bf16_accum,
                         step_par,
                         &mut bufs.bf16_scratch,
+                        *v,
                     );
                     bufs.slots[*out] = o;
                 }
-                Step::DotI8 { a, b, out, m, n, k, epi, q } => {
+                Step::DotI8 { a, b, out, m, n, k, epi, q, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
@@ -1824,7 +1961,7 @@ impl Plan {
                         StepEpi::Bias(s) => I8Epilogue::Bias(&slots[*s][..*n]),
                         StepEpi::BiasRelu(s) => I8Epilogue::BiasRelu(&slots[*s][..*n]),
                     };
-                    gemm_i8_dequant_into(
+                    gemm_i8_dequant_tuned_into(
                         &mut o[..m * n],
                         &slots[*a][..m * k],
                         &slots[*b][..k * n],
@@ -1835,14 +1972,15 @@ impl Plan {
                         epilogue,
                         step_par,
                         &mut bufs.i8_scratch,
+                        *v,
                     );
                     bufs.slots[*out] = o;
                 }
-                Step::Im2colGemm { w, img, out, m, n, k, spec } => {
+                Step::Im2colGemm { w, img, out, m, n, k, spec, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
-                    gemm_f32_fused_into(
+                    gemm_f32_tuned_into(
                         &mut o[..m * n],
                         &slots[*w][..m * k],
                         PanelB::Im2col { img: &slots[*img], spec },
@@ -1853,6 +1991,7 @@ impl Plan {
                         Epilogue::None,
                         step_par,
                         &mut bufs.scratch,
+                        *v,
                     );
                     bufs.slots[*out] = o;
                 }

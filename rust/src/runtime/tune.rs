@@ -1,0 +1,481 @@
+//! The **shape autotuner** of the plan backend: a device-level
+//! [`TuneTable`] that maps a GEMM *shape class* ([`TuneKey`]: `m × n × k`
+//! + dtype + fused epilogue) to the fastest [`GemmVariant`] of the
+//! monomorphized microkernel family, measured once and memoized.
+//!
+//! This is the "generate a family, select per shape" strategy of the
+//! kernel-generation literature (Hello SME!'s per-shape kernel selection;
+//! Kuzma et al.'s layered data-reorganization), applied where it is
+//! essentially free on our serving path: plans are compiled once and
+//! executed many times, so a one-time measurement per shape class
+//! amortizes to nothing.
+//!
+//! The contract that makes tuning *safe* is established by the engines
+//! themselves and pinned by `rust/tests/tune_engine.rs`: **every variant
+//! is bitwise identical to the canonical variant** under every
+//! accumulation contract, because each `C` element accumulates its `k`
+//! products in strictly ascending order from the same packed values no
+//! matter where the register-tile or cache-block seams fall (and every
+//! grid `kc` keeps the bf16 pair / i8 quad steps whole). The tuner can
+//! therefore only ever change speed, never bits.
+//!
+//! Flow:
+//!
+//! 1. [`Plan`](super::plan::Plan) compilation asks the table for each
+//!    fused GEMM step's class via [`TuneTable::choose`];
+//! 2. on first sight of a class the table **measures** every candidate
+//!    ([`GemmVariant::f32_candidates`] / [`GemmVariant::wide_candidates`])
+//!    on synthetic operands of exactly that shape, serially, and memoizes
+//!    the argmin (ties keep the canonical head — so `chosen_ms <=
+//!    default_ms` by construction);
+//! 3. the winning variant is stored **in the compiled step**, so
+//!    re-execution never consults the table again, and other plans
+//!    compiled against the same device reuse the memoized row;
+//! 4. classes too large to measure cheaply (above
+//!    [`MEASURE_FLOP_CAP`]) fall back to the deterministic heuristic
+//!    default ([`heuristic_variant`]: the canonical variant per dtype)
+//!    with `measured: false` — same bits, just no search.
+//!
+//! `--no-tune` (or simply not installing a table in
+//! [`PlanOptions`](super::plan::PlanOptions)) short-circuits the whole
+//! mechanism to the heuristic default, which is byte-for-byte the
+//! pre-autotuner engine configuration.
+
+use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
+use crate::blas::block_gemm::{
+    gemm_f32_tuned_into, Accum, Epilogue, GemmScratch, GemmVariant, PanelB, Par,
+};
+use crate::blas::i8_gemm::{gemm_i8_packed_tuned_into, I8Accum, I8Scratch, I8SrcA, I8SrcB};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Largest `2·m·n·k` flop count the tuner will measure. Above this the
+/// class gets the heuristic default (`measured: false`) — measurement
+/// would cost more than it could ever save at plan-compile time. The cap
+/// is two 256³ GEMMs; every MLP serving shape in the bench fixture sits
+/// far below it.
+pub const MEASURE_FLOP_CAP: usize = 33_554_432;
+
+/// How many timed repetitions back the per-candidate measurement (the
+/// minimum is taken; one untimed warmup precedes them).
+const MEASURE_REPS: usize = 3;
+
+/// The dtype axis of a shape class — which engine (and so which
+/// candidate family) the class tunes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TuneDtype {
+    /// The f32 blocked engine (`dot` / im2col steps).
+    F32,
+    /// The bf16 packed-panel engine (`dot_bf16` steps).
+    Bf16,
+    /// The int8 rank-4 engine (`dot_i8` steps).
+    I8,
+}
+
+impl TuneDtype {
+    /// Stable lowercase name (the `tuning` JSON block's `dtype` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TuneDtype::F32 => "f32",
+            TuneDtype::Bf16 => "bf16",
+            TuneDtype::I8 => "i8",
+        }
+    }
+
+    fn order(&self) -> u8 {
+        match self {
+            TuneDtype::F32 => 0,
+            TuneDtype::Bf16 => 1,
+            TuneDtype::I8 => 2,
+        }
+    }
+}
+
+/// The fused-epilogue axis of a shape class. The epilogue runs on the
+/// single-threaded writeback pass and is geometry-independent, so it
+/// never changes which variant wins — but it is part of the class key so
+/// the table rows match the compiled steps one-to-one (auditable in the
+/// bench's `tuning` block).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TuneEpi {
+    None,
+    Bias,
+    BiasRelu,
+}
+
+impl TuneEpi {
+    /// Stable name (the `tuning` JSON block's `epilogue` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TuneEpi::None => "none",
+            TuneEpi::Bias => "bias",
+            TuneEpi::BiasRelu => "bias_relu",
+        }
+    }
+
+    fn order(&self) -> u8 {
+        match self {
+            TuneEpi::None => 0,
+            TuneEpi::Bias => 1,
+            TuneEpi::BiasRelu => 2,
+        }
+    }
+}
+
+/// One GEMM shape class: everything that determines which variant is
+/// fastest (shape + engine), plus the epilogue for step-level audit
+/// identity. This is the explicit key stored next to the chosen variant
+/// in the compiled step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: TuneDtype,
+    pub epi: TuneEpi,
+}
+
+impl TuneKey {
+    fn sort_idx(&self) -> (u8, usize, usize, usize, u8) {
+        (self.dtype.order(), self.m, self.n, self.k, self.epi.order())
+    }
+}
+
+/// The memoized decision for one class: the winning variant plus the
+/// audit trail (`chosen_ms` vs the canonical `default_ms`, and whether a
+/// measurement actually ran or the heuristic default was used).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneChoice {
+    /// The variant compiled into the plan step.
+    pub variant: GemmVariant,
+    /// Best measured milliseconds of `variant` (0.0 when `!measured`).
+    pub chosen_ms: f64,
+    /// Best measured milliseconds of the canonical default variant
+    /// (0.0 when `!measured`). `chosen_ms <= default_ms` always: the
+    /// candidate list is canonical-first and ties keep the head.
+    pub default_ms: f64,
+    /// Whether a measurement ran (`false`: heuristic default, either
+    /// because tuning was off for this class or the class is above
+    /// [`MEASURE_FLOP_CAP`]).
+    pub measured: bool,
+}
+
+/// The deterministic no-measurement default for a dtype: exactly the
+/// canonical variant the engines shipped with, so an untuned plan is
+/// byte-for-byte the pre-autotuner engine configuration.
+pub fn heuristic_variant(dtype: TuneDtype) -> GemmVariant {
+    match dtype {
+        TuneDtype::F32 => GemmVariant::CANONICAL_F32,
+        TuneDtype::Bf16 | TuneDtype::I8 => GemmVariant::CANONICAL_WIDE,
+    }
+}
+
+/// The device-level memoized `class → variant` table. Shared behind an
+/// `Arc` by every plan compiled against one
+/// [`Device`](super::device::Device); interior-mutable so concurrent
+/// compilations can tune (a racing class is measured at most once per
+/// racer, and the first insert wins — both measure the same winner on
+/// the same synthetic inputs anyway).
+#[derive(Default)]
+pub struct TuneTable {
+    entries: Mutex<HashMap<TuneKey, TuneChoice>>,
+    measures: AtomicUsize,
+}
+
+impl std::fmt::Debug for TuneTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TuneTable")
+            .field("classes", &self.len())
+            .field("measured", &self.measure_count())
+            .finish()
+    }
+}
+
+impl TuneTable {
+    /// An empty table (classes tune lazily on first sight).
+    pub fn new() -> TuneTable {
+        TuneTable::default()
+    }
+
+    /// The memoized choice for `key`, measuring the candidate family
+    /// first if this is the class's first sight (see the module docs for
+    /// the measure-vs-heuristic rule).
+    pub fn choose(&self, key: TuneKey) -> TuneChoice {
+        if let Some(c) = self.entries.lock().unwrap_or_else(|p| p.into_inner()).get(&key) {
+            return *c;
+        }
+        let fresh = self.measure_class(key);
+        let mut map = self.entries.lock().unwrap_or_else(|p| p.into_inner());
+        *map.entry(key).or_insert(fresh)
+    }
+
+    /// The memoized choice if the class has been seen, without tuning.
+    pub fn lookup(&self, key: TuneKey) -> Option<TuneChoice> {
+        self.entries.lock().unwrap_or_else(|p| p.into_inner()).get(&key).copied()
+    }
+
+    /// Pre-seed (or override) a class — the escape hatch tests use to
+    /// force specific variants through the plan path, and what a future
+    /// serialized-table load would call.
+    pub fn insert(&self, key: TuneKey, choice: TuneChoice) {
+        self.entries.lock().unwrap_or_else(|p| p.into_inner()).insert(key, choice);
+    }
+
+    /// Number of memoized classes.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many classes have actually been *measured* (memoized lookups
+    /// and heuristic fallbacks don't count) — the "re-execution never
+    /// re-measures" property, observable.
+    pub fn measure_count(&self) -> usize {
+        self.measures.load(Ordering::Relaxed)
+    }
+
+    /// Every memoized row in deterministic order (dtype, then m, n, k,
+    /// then epilogue) — the bench's `tuning` JSON table.
+    pub fn snapshot(&self) -> Vec<(TuneKey, TuneChoice)> {
+        let mut rows: Vec<(TuneKey, TuneChoice)> = self
+            .entries
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .map(|(k, c)| (*k, *c))
+            .collect();
+        rows.sort_by_key(|(k, _)| k.sort_idx());
+        rows
+    }
+
+    fn measure_class(&self, key: TuneKey) -> TuneChoice {
+        let default_v = heuristic_variant(key.dtype);
+        let flops =
+            2usize.saturating_mul(key.m).saturating_mul(key.n).saturating_mul(key.k);
+        if key.m == 0 || key.n == 0 || key.k == 0 || flops > MEASURE_FLOP_CAP {
+            let (chosen_ms, default_ms) = (0.0, 0.0);
+            return TuneChoice { variant: default_v, chosen_ms, default_ms, measured: false };
+        }
+        self.measures.fetch_add(1, Ordering::Relaxed);
+        let (m, n, k) = (key.m, key.n, key.k);
+        // synthetic operands: deterministic, value-independent for speed
+        // (timing depends only on shape), measured serially so the search
+        // never fights the serving pool for cores
+        let timings: Vec<(GemmVariant, f64)> = match key.dtype {
+            TuneDtype::F32 => {
+                let a = fill_f32(m * k, 0x5eed_0001);
+                let b = fill_f32(k * n, 0x5eed_0002);
+                let mut c = vec![0f32; m * n];
+                let mut scratch = GemmScratch::new();
+                GemmVariant::f32_candidates()
+                    .into_iter()
+                    .map(|v| {
+                        let ms = time_ms(|| {
+                            gemm_f32_tuned_into(
+                                &mut c,
+                                &a,
+                                PanelB::Matrix(&b),
+                                m,
+                                n,
+                                k,
+                                Accum::F64,
+                                Epilogue::None,
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                        });
+                        (v, ms)
+                    })
+                    .collect()
+            }
+            TuneDtype::Bf16 => {
+                let a = fill_f32(m * k, 0x5eed_0003);
+                let b = fill_f32(k * n, 0x5eed_0004);
+                let mut c = vec![0f32; m * n];
+                let mut scratch = Bf16Scratch::new();
+                GemmVariant::wide_candidates()
+                    .into_iter()
+                    .map(|v| {
+                        let ms = time_ms(|| {
+                            gemm_bf16_tuned_into(
+                                &mut c,
+                                Bf16Src::F32(&a),
+                                Bf16Src::F32(&b),
+                                m,
+                                n,
+                                k,
+                                Bf16Accum::Widened,
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                        });
+                        (v, ms)
+                    })
+                    .collect()
+            }
+            TuneDtype::I8 => {
+                let a = fill_i8(m * k, 0x5eed_0005);
+                let b = fill_u8(k * n, 0x5eed_0006);
+                let mut c = vec![0i32; m * n];
+                let mut scratch = I8Scratch::new();
+                GemmVariant::wide_candidates()
+                    .into_iter()
+                    .map(|v| {
+                        let ms = time_ms(|| {
+                            gemm_i8_packed_tuned_into(
+                                &mut c,
+                                I8SrcA::Q(&a),
+                                I8SrcB::Q(&b),
+                                m,
+                                n,
+                                k,
+                                I8Accum::Wrapping,
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                        });
+                        (v, ms)
+                    })
+                    .collect()
+            }
+        };
+        // argmin with strict `<`: ties keep the earlier candidate, and
+        // the head is canonical — so chosen_ms <= default_ms always
+        let default_ms = timings[0].1;
+        let mut best = timings[0];
+        for &t in &timings[1..] {
+            if t.1 < best.1 {
+                best = t;
+            }
+        }
+        TuneChoice { variant: best.0, chosen_ms: best.1, default_ms, measured: true }
+    }
+}
+
+/// Minimum of [`MEASURE_REPS`] timed runs after one untimed warmup, in
+/// milliseconds.
+fn time_ms(mut run: impl FnMut()) -> f64 {
+    run();
+    let mut best = f64::INFINITY;
+    for _ in 0..MEASURE_REPS {
+        let t0 = Instant::now();
+        run();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+fn lcg(state: &mut u32) -> u32 {
+    *state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+    *state
+}
+
+fn fill_f32(len: usize, seed: u32) -> Vec<f32> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 8) as f32 / (1u32 << 24) as f32 - 0.5).collect()
+}
+
+fn fill_i8(len: usize, seed: u32) -> Vec<i8> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 16) as i8).collect()
+}
+
+fn fill_u8(len: usize, seed: u32) -> Vec<u8> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 16) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize, n: usize, k: usize, dtype: TuneDtype) -> TuneKey {
+        TuneKey { m, n, k, dtype, epi: TuneEpi::None }
+    }
+
+    #[test]
+    fn first_sight_measures_and_memoizes() {
+        let table = TuneTable::new();
+        let k1 = key(8, 16, 16, TuneDtype::F32);
+        let c1 = table.choose(k1);
+        assert!(c1.measured);
+        assert!(c1.chosen_ms <= c1.default_ms, "ties must keep the canonical head");
+        assert_eq!(table.measure_count(), 1);
+        assert_eq!(table.len(), 1);
+        // second sight: memoized, no re-measure, identical row
+        let c2 = table.choose(k1);
+        assert_eq!(table.measure_count(), 1);
+        assert_eq!(c2.variant, c1.variant);
+        assert_eq!(c2.chosen_ms.to_bits(), c1.chosen_ms.to_bits());
+    }
+
+    #[test]
+    fn classes_above_the_flop_cap_take_the_heuristic() {
+        let table = TuneTable::new();
+        for dtype in [TuneDtype::F32, TuneDtype::Bf16, TuneDtype::I8] {
+            let c = table.choose(key(512, 512, 512, dtype));
+            assert!(!c.measured, "{dtype:?}");
+            assert_eq!(c.variant, heuristic_variant(dtype));
+            assert_eq!(c.chosen_ms, 0.0);
+        }
+        assert_eq!(table.measure_count(), 0);
+        // degenerate shapes also never measure
+        let c = table.choose(key(0, 8, 8, TuneDtype::F32));
+        assert!(!c.measured);
+        assert_eq!(table.measure_count(), 0);
+    }
+
+    #[test]
+    fn preseeded_rows_are_honored_verbatim() {
+        let table = TuneTable::new();
+        let k1 = key(4, 8, 8, TuneDtype::Bf16);
+        let forced = GemmVariant::wide_candidates()[3];
+        table.insert(
+            k1,
+            TuneChoice { variant: forced, chosen_ms: 1.0, default_ms: 2.0, measured: true },
+        );
+        let c = table.choose(k1);
+        assert_eq!(c.variant, forced);
+        assert_eq!(table.measure_count(), 0, "pre-seeded classes never measure");
+        assert_eq!(table.lookup(k1).unwrap().variant, forced);
+        assert!(table.lookup(key(9, 9, 9, TuneDtype::F32)).is_none());
+    }
+
+    #[test]
+    fn snapshot_is_deterministically_ordered() {
+        let table = TuneTable::new();
+        let keys = [
+            key(2, 2, 1024 * 1024 * 16, TuneDtype::I8),
+            key(1, 8, 8, TuneDtype::F32),
+            TuneKey { m: 1, n: 8, k: 8, dtype: TuneDtype::F32, epi: TuneEpi::BiasRelu },
+            key(2, 2, 1024 * 1024 * 16, TuneDtype::Bf16),
+        ];
+        for k in keys {
+            table.choose(k);
+        }
+        let rows = table.snapshot();
+        assert_eq!(rows.len(), 4);
+        let idx: Vec<_> = rows.iter().map(|(k, _)| k.sort_idx()).collect();
+        let mut sorted = idx.clone();
+        sorted.sort();
+        assert_eq!(idx, sorted);
+        assert_eq!(rows[0].0.dtype, TuneDtype::F32);
+        assert_eq!(rows[0].0.epi, TuneEpi::None);
+        assert_eq!(rows[1].0.epi, TuneEpi::BiasRelu);
+    }
+
+    #[test]
+    fn heuristic_matches_the_canonical_engines() {
+        assert_eq!(heuristic_variant(TuneDtype::F32), GemmVariant::CANONICAL_F32);
+        assert_eq!(heuristic_variant(TuneDtype::Bf16), GemmVariant::CANONICAL_WIDE);
+        assert_eq!(heuristic_variant(TuneDtype::I8), GemmVariant::CANONICAL_WIDE);
+    }
+}

@@ -1,0 +1,463 @@
+//! Differential coverage for the microkernel family + shape autotuner:
+//! every monomorphized `GemmVariant` (register tile × blocking grid
+//! point) must be **bitwise identical** to the canonical engine — and to
+//! the existing scalar oracles — under every accumulation contract,
+//! epilogue, and column-chunk parallel policy, across shapes that
+//! straddle the MR/NR tile seams and every KC tail. On top rides the
+//! `TuneTable` contract: first sight of a class measures and memoizes,
+//! re-compiles reuse the row without re-measuring, pre-seeded rows are
+//! honored verbatim (baked into compiled plan steps), and `tune: None`
+//! reproduces the pre-autotuner canonical configuration exactly.
+
+use power_mma::blas::bf16_gemm::{
+    gemm_bf16_reference, gemm_bf16_reference_pairs, gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch,
+    Bf16Src,
+};
+use power_mma::blas::block_gemm::{
+    chunk_plan_nr, gemm_f32_tuned_into, threads_for, threads_for_pooled, Accum, BlockCfg,
+    Epilogue, GemmScratch, GemmVariant, PanelB, Par,
+};
+use power_mma::blas::i8_gemm::{
+    gemm_i8_dequant_reference, gemm_i8_dequant_tuned_into, gemm_i8_packed_tuned_into,
+    gemm_i8_reference, I8Accum, I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
+};
+use power_mma::runtime::tune::heuristic_variant;
+use power_mma::runtime::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TuneTable};
+use power_mma::testkit::{check, Rng};
+
+/// Scalar f32 oracle with the `Accum::F64` contract: one per-element f64
+/// chain in strictly ascending `k`, narrowed once, then the fused
+/// epilogue — exactly the interpreter's elementwise image.
+fn ref_f32_f64acc(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bias: Option<&[f32]>,
+    relu: bool,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                acc += f64::from(a[i * k + p]) * f64::from(b[p * n + j]);
+            }
+            let mut v = acc as f32;
+            if let Some(bias) = bias {
+                v += bias[j];
+            }
+            if relu {
+                v = v.max(0.0);
+            }
+            c[i * n + j] = v;
+        }
+    }
+    c
+}
+
+fn run_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    accum: Accum,
+    epi: Epilogue<'_>,
+    par: Par<'_>,
+    v: GemmVariant,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    let mut scratch = GemmScratch::new();
+    gemm_f32_tuned_into(&mut c, a, PanelB::Matrix(b), m, n, k, accum, epi, par, &mut scratch, v);
+    c
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random signed operand with the extremes present (the i8 sweeps).
+fn spiked_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+    let mut v: Vec<i8> = (0..len).map(|_| rng.irange(-128, 127) as i8).collect();
+    for (i, &s) in [-128i8, 127, 0, -1, 1].iter().enumerate() {
+        v[(i * 11 + 5) % len.max(1)] = s;
+    }
+    v
+}
+
+fn spiked_u8(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mut v: Vec<u8> = (0..len).map(|_| rng.irange(0, 255) as u8).collect();
+    for (i, &s) in [255u8, 0, 128, 1, 254].iter().enumerate() {
+        v[(i * 13 + 7) % len.max(1)] = s;
+    }
+    v
+}
+
+// ---------------------------------------------------------------- tentpole
+
+#[test]
+fn every_f32_variant_matches_canonical_and_the_oracle_bitwise() {
+    // the whole family (3 register tiles × 8 blocking grid points) vs
+    // the canonical engine and the scalar f64-chain oracle, across tile
+    // seams, KC tails, both accumulation contracts, fused epilogues,
+    // and the scoped parallel policy — not one bit may move
+    check("tune f32 variant family", 10, |rng: &mut Rng| {
+        let m = *rng.pick(&[1usize, 3, 4, 5, 7, 8, 9, 17, 33]);
+        let n = *rng.pick(&[1usize, 7, 8, 9, 15, 16, 17, 33]);
+        let k = *rng.pick(&[1usize, 2, 5, 8, 127, 128, 129, 255, 256, 257]);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let bias = rng.f32_vec(n);
+        let oracle = ref_f32_f64acc(&a, &b, m, n, k, None, false);
+        let oracle_relu = ref_f32_f64acc(&a, &b, m, n, k, Some(&bias), true);
+        let canon = GemmVariant::CANONICAL_F32;
+        let base_f32 =
+            run_f32(&a, &b, m, n, k, Accum::F32, Epilogue::Bias(&bias), Par::Seq, canon);
+        for v in GemmVariant::f32_candidates() {
+            let plain = run_f32(&a, &b, m, n, k, Accum::F64, Epilogue::None, Par::Seq, v);
+            assert_eq!(bits(&plain), bits(&oracle), "{} vs f64 oracle m={m} n={n} k={k}", v.name());
+            let relu =
+                run_f32(&a, &b, m, n, k, Accum::F64, Epilogue::BiasRelu(&bias), Par::Scoped(3), v);
+            assert_eq!(bits(&relu), bits(&oracle_relu), "{} bias_relu scoped", v.name());
+            let f32acc = run_f32(&a, &b, m, n, k, Accum::F32, Epilogue::Bias(&bias), Par::Seq, v);
+            assert_eq!(bits(&f32acc), bits(&base_f32), "{} f32-chain vs canonical", v.name());
+        }
+    });
+}
+
+#[test]
+fn every_bf16_variant_matches_the_references_bitwise() {
+    // both bf16 accumulation contracts (widened f64 image, f32 k-pair
+    // chain) against their elementwise references for every wide-family
+    // variant — the grid keeps kc even, so no pair is ever split
+    check("tune bf16 variant family", 8, |rng: &mut Rng| {
+        let m = *rng.pick(&[1usize, 7, 8, 9, 17]);
+        let n = *rng.pick(&[1usize, 8, 15, 16, 17, 33]);
+        let k = *rng.pick(&[1usize, 2, 3, 127, 128, 129, 255, 256, 257]);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let widened = gemm_bf16_reference(&a, &b, m, n, k);
+        let pairs = gemm_bf16_reference_pairs(&a, &b, m, n, k);
+        for v in GemmVariant::wide_candidates() {
+            for (accum, want) in [(Bf16Accum::Widened, &widened), (Bf16Accum::F32Pairs, &pairs)] {
+                for par in [Par::Seq, Par::Scoped(3)] {
+                    let mut c = vec![0f32; m * n];
+                    let mut scratch = Bf16Scratch::new();
+                    gemm_bf16_tuned_into(
+                        &mut c,
+                        Bf16Src::F32(&a),
+                        Bf16Src::F32(&b),
+                        m,
+                        n,
+                        k,
+                        accum,
+                        par,
+                        &mut scratch,
+                        v,
+                    );
+                    assert_eq!(
+                        bits(&c),
+                        bits(want),
+                        "{} {accum:?} m={m} n={n} k={k}",
+                        v.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn every_i8_variant_matches_the_references_bitwise() {
+    // the raw integer dot under both chains (wrapping / saturating) and
+    // the fused quantize→dot→dequantize serving path with every
+    // epilogue, for every wide-family variant — kc stays a multiple of
+    // 4, so no rank-4 quad is ever split across a depth block
+    check("tune i8 variant family", 8, |rng: &mut Rng| {
+        let m = *rng.pick(&[1usize, 7, 8, 9, 17]);
+        let n = *rng.pick(&[1usize, 8, 15, 16, 17, 33]);
+        let k = *rng.pick(&[1usize, 3, 4, 5, 127, 128, 129, 255, 256, 257]);
+        let aq = spiked_i8(rng, m * k);
+        let bq = spiked_u8(rng, k * n);
+        let af = rng.f32_vec(m * k);
+        let bf = rng.f32_vec(k * n);
+        let bias = rng.f32_vec(n);
+        let q = QuantParams {
+            a_scale: 1.0 / 127.0,
+            a_zp: rng.irange(-8, 8) as i32,
+            b_scale: 1.0 / 255.0,
+            b_zp: rng.irange(96, 160) as i32,
+        };
+        for v in GemmVariant::wide_candidates() {
+            for accum in [I8Accum::Wrapping, I8Accum::Saturating] {
+                let want = gemm_i8_reference(&aq, &bq, m, n, k, accum);
+                let mut c = vec![0i32; m * n];
+                let mut scratch = I8Scratch::new();
+                gemm_i8_packed_tuned_into(
+                    &mut c,
+                    I8SrcA::Q(&aq),
+                    I8SrcB::Q(&bq),
+                    m,
+                    n,
+                    k,
+                    accum,
+                    Par::Scoped(3),
+                    &mut scratch,
+                    v,
+                );
+                assert_eq!(c, want, "{} {accum:?} m={m} n={n} k={k}", v.name());
+            }
+            let cases: [(I8Epilogue<'_>, Option<&[f32]>, bool); 3] = [
+                (I8Epilogue::None, None, false),
+                (I8Epilogue::Bias(&bias), Some(&bias), false),
+                (I8Epilogue::BiasRelu(&bias), Some(&bias), true),
+            ];
+            for (epi, rbias, relu) in cases {
+                let want = gemm_i8_dequant_reference(&af, &bf, m, n, k, &q, rbias, relu);
+                let mut c = vec![0f32; m * n];
+                let mut scratch = I8Scratch::new();
+                gemm_i8_dequant_tuned_into(
+                    &mut c, &af, &bf, m, n, k, &q, epi, Par::Seq, &mut scratch, v,
+                );
+                assert_eq!(bits(&c), bits(&want), "{} dequant relu={relu}", v.name());
+            }
+        }
+    });
+}
+
+// ------------------------------------------- satellite: chunk-plan laws
+
+#[test]
+fn chunk_plan_covers_every_column_exactly_once_for_every_nr() {
+    // exact coverage, no overlap, nr-aligned chunk starts, cap clamped
+    // to the column-panel count, last chunk never empty — for both
+    // register-tile widths in the family
+    for nr in [8usize, 16] {
+        for n in [1usize, 2, 7, 8, 9, 15, 16, 17, 31, 32, 33, 127, 128, 129, 255, 256, 529] {
+            for cap in [1usize, 2, 3, 5, 8, 16, 64] {
+                let (nchunks, cols_per) = chunk_plan_nr(n, cap, nr);
+                let col_panels = n.div_ceil(nr);
+                assert!(cols_per % nr == 0, "chunk width must be tile-aligned");
+                assert!(nchunks >= 1 && nchunks <= cap.clamp(1, col_panels));
+                assert!(
+                    (nchunks - 1) * cols_per < n,
+                    "last chunk must own at least one column (n={n} cap={cap} nr={nr})"
+                );
+                let mut owned = vec![0u32; n];
+                for w in 0..nchunks {
+                    let j0 = w * cols_per;
+                    let wcols = cols_per.min(n - j0);
+                    for c in &mut owned[j0..j0 + wcols] {
+                        *c += 1;
+                    }
+                }
+                assert!(
+                    owned.iter().all(|&c| c == 1),
+                    "every column owned exactly once (n={n} cap={cap} nr={nr})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_budgets_stay_inside_their_clamps() {
+    // both budget policies: >= 1 always, never above the cap, small
+    // problems stay sequential, huge problems take the whole budget —
+    // and the pooled bar (cheaper dispatch) never picks fewer workers
+    // than the scoped bar on the same problem
+    for &(m, n, k) in
+        &[(1usize, 1usize, 1usize), (8, 8, 8), (64, 64, 64), (512, 512, 512), (1, 529, 257)]
+    {
+        for cap in [1usize, 2, 4, 8, 64] {
+            let t = threads_for(m, n, k, cap);
+            let tp = threads_for_pooled(m, n, k, cap);
+            assert!(t >= 1 && t <= cap.max(1), "threads_for out of [1, cap]");
+            assert!(tp >= 1 && tp <= cap.max(1), "threads_for_pooled out of [1, cap]");
+            assert!(tp >= t, "the pooled bar is lower, so its budget can only grow");
+        }
+    }
+    assert_eq!(threads_for(2, 2, 2, 8), 1, "tiny problems must stay sequential");
+    assert_eq!(threads_for(512, 512, 512, 8), 8, "big problems take the whole budget");
+}
+
+// ------------------------------------- satellite: scratch at grid extremes
+
+#[test]
+fn scratch_sizing_holds_at_the_blocking_grid_extremes() {
+    // the smallest and largest grid points, at shapes that straddle
+    // every cache-block boundary (mc+1, nc+1, kc+1): panel scratch is
+    // sized from the variant's own blocking, so the slicing inside the
+    // column workers must never overrun — and the bits must still equal
+    // the canonical engine's
+    let small = BlockCfg { mc: 64, kc: 128, nc: 256 };
+    let large = BlockCfg { mc: 128, kc: 256, nc: 512 };
+    let mut rng = Rng::new(0x50c7);
+    for (block, m, n, k) in [(small, 65, 257, 129), (large, 129, 513, 257), (small, 1, 1, 1)] {
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let cv = GemmVariant::CANONICAL_F32;
+        let canon = run_f32(&a, &b, m, n, k, Accum::F64, Epilogue::None, Par::Seq, cv);
+        for mr_nr in [(4usize, 8usize), (8, 8), (8, 16)] {
+            let v = GemmVariant { mr: mr_nr.0, nr: mr_nr.1, block };
+            let got = run_f32(&a, &b, m, n, k, Accum::F64, Epilogue::None, Par::Scoped(3), v);
+            assert_eq!(bits(&got), bits(&canon), "f32 {} at {m}x{n}x{k}", v.name());
+        }
+        // the interleaved engines at the same extremes (smaller m keeps
+        // the scalar references cheap)
+        let bm = m.min(9);
+        let wide_ref = gemm_bf16_reference(&a[..bm * k], &b, bm, n, k);
+        let i8_q = QuantParams { a_scale: 0.02, a_zp: -5, b_scale: 0.017, b_zp: 120 };
+        let i8_ref =
+            gemm_i8_dequant_reference(&a[..bm * k], &b, bm, n, k, &i8_q, None, false);
+        for mr_nr in [(8usize, 8usize), (8, 16)] {
+            let v = GemmVariant { mr: mr_nr.0, nr: mr_nr.1, block };
+            let mut c = vec![0f32; bm * n];
+            let mut bs = Bf16Scratch::new();
+            gemm_bf16_tuned_into(
+                &mut c,
+                Bf16Src::F32(&a[..bm * k]),
+                Bf16Src::F32(&b),
+                bm,
+                n,
+                k,
+                Bf16Accum::Widened,
+                Par::Scoped(3),
+                &mut bs,
+                v,
+            );
+            assert_eq!(bits(&c), bits(&wide_ref), "bf16 {} at {bm}x{n}x{k}", v.name());
+            let mut ci = vec![0f32; bm * n];
+            let mut is = I8Scratch::new();
+            gemm_i8_dequant_tuned_into(
+                &mut ci,
+                &a[..bm * k],
+                &b,
+                bm,
+                n,
+                k,
+                &i8_q,
+                I8Epilogue::None,
+                Par::Scoped(3),
+                &mut is,
+                v,
+            );
+            assert_eq!(bits(&ci), bits(&i8_ref), "i8 {} at {bm}x{n}x{k}", v.name());
+        }
+    }
+}
+
+// --------------------------------------- the table through compiled plans
+
+#[test]
+fn preseeded_rows_bake_into_plan_steps_without_remeasuring() {
+    use power_mma::runtime::hlo::HloModule;
+    use power_mma::runtime::plan::{Plan, PlanOptions};
+    let module = HloModule::parse(&power_mma::runtime::mlp_hlo_text(1, 24, 40, 12)).unwrap();
+
+    // tune: None compiles the deterministic heuristic — exactly the
+    // canonical pre-autotuner engine for every class
+    let untuned = Plan::compile_with_options(&module, PlanOptions::default()).unwrap();
+    let classes = untuned.gemm_variants();
+    assert!(classes.len() >= 2, "the MLP must compile at least two GEMM classes");
+    for (key, v) in &classes {
+        assert_eq!(v.name(), heuristic_variant(key.dtype).name(), "tune:None must be canonical");
+    }
+
+    // pre-seed every class with a forced non-canonical variant: the
+    // compile must bake it verbatim, without a single measurement
+    let forced = GemmVariant { mr: 4, nr: 8, block: BlockCfg { mc: 64, kc: 128, nc: 256 } };
+    assert_ne!(forced.name(), GemmVariant::CANONICAL_F32.name());
+    let table = std::sync::Arc::new(TuneTable::new());
+    for (key, _) in &classes {
+        let choice =
+            TuneChoice { variant: forced, chosen_ms: 0.0, default_ms: 0.0, measured: false };
+        table.insert(*key, choice);
+    }
+    let opts = PlanOptions { tune: Some(table.clone()), ..Default::default() };
+    let tuned = Plan::compile_with_options(&module, opts).unwrap();
+    for (key, v) in tuned.gemm_variants() {
+        assert_eq!(v.name(), forced.name(), "class {key:?} must carry the pre-seeded variant");
+    }
+    assert_eq!(table.measure_count(), 0, "pre-seeded rows must never re-measure");
+}
+
+#[test]
+fn first_sight_measures_once_and_recompiles_reuse_the_row() {
+    use power_mma::runtime::hlo::HloModule;
+    use power_mma::runtime::plan::{Plan, PlanOptions};
+    let module = HloModule::parse(&power_mma::runtime::mlp_hlo_text(2, 24, 40, 12)).unwrap();
+    let table = std::sync::Arc::new(TuneTable::new());
+    let opts = || PlanOptions { tune: Some(table.clone()), ..Default::default() };
+    let first = Plan::compile_with_options(&module, opts()).unwrap();
+    let classes = first.gemm_variants();
+    let measured_after_first = table.measure_count();
+    assert!(!table.is_empty(), "the compile must populate the table");
+    assert!(measured_after_first >= 1, "these classes sit under the flop cap: they measure");
+    for (key, v) in &classes {
+        let row = table.lookup(*key).expect("every compiled class is memoized");
+        assert_eq!(row.variant.name(), v.name(), "the step carries the table's choice");
+        assert!(row.measured && row.chosen_ms <= row.default_ms, "canonical-first argmin");
+    }
+    // an identical re-compile must hit the memo, not the stopwatch
+    let second = Plan::compile_with_options(&module, opts()).unwrap();
+    assert_eq!(table.measure_count(), measured_after_first, "re-compiles must not re-measure");
+    let names = |cs: &[(TuneKey, GemmVariant)]| -> Vec<String> {
+        cs.iter().map(|(_, v)| v.name()).collect()
+    };
+    assert_eq!(names(&classes), names(&second.gemm_variants()), "deterministic re-compile");
+}
+
+#[test]
+fn forced_variants_serve_bitwise_identical_results_end_to_end() {
+    // through the public runtime API: a backend tuned with forced
+    // non-canonical variants for every class must serve byte-for-byte
+    // the same responses as the untuned backend — for the f32 MLP and
+    // the calibrated int8 MLP both
+    use power_mma::runtime::{det_input, HloPlanBackend, Runtime};
+    let dir = std::env::temp_dir(); // nothing is read: buckets compile from generated text
+    let (b, f, h, c) = (3usize, 24usize, 40usize, 12usize);
+    let x = det_input(b * f, 1);
+    let w1 = det_input(f * h, 2);
+    let b1 = det_input(h, 3);
+    let w2 = det_input(h * c, 4);
+    let b2 = det_input(c, 5);
+    let args: [&[f32]; 5] = [&x, &w1, &b1, &w2, &b2];
+    let name = format!("mlp_b{b}");
+
+    let forced_f32 = GemmVariant { mr: 4, nr: 8, block: BlockCfg { mc: 64, kc: 128, nc: 512 } };
+    let forced_wide = GemmVariant { mr: 8, nr: 8, block: BlockCfg { mc: 128, kc: 128, nc: 256 } };
+    let seed = |dtype: TuneDtype| {
+        let table = std::sync::Arc::new(TuneTable::new());
+        let forced = if dtype == TuneDtype::F32 { forced_f32 } else { forced_wide };
+        let classes =
+            [(b, h, f, TuneEpi::BiasRelu), (b, c, h, TuneEpi::Bias), (b, c, h, TuneEpi::None)];
+        for (m, n, k, epi) in classes {
+            let key = TuneKey { m, n, k, dtype, epi };
+            let choice =
+                TuneChoice { variant: forced, chosen_ms: 0.0, default_ms: 0.0, measured: false };
+            table.insert(key, choice);
+        }
+        table
+    };
+
+    let mut rt_plain = Runtime::with_backend(Box::new(HloPlanBackend::new()), &dir);
+    rt_plain.load_mlp_buckets(&[b], f, h, c).unwrap();
+    let want = rt_plain.execute(&name, &args).unwrap();
+    let tuned_backend = HloPlanBackend::new().with_tuning(seed(TuneDtype::F32));
+    let mut rt_tuned = Runtime::with_backend(Box::new(tuned_backend), &dir);
+    rt_tuned.load_mlp_buckets(&[b], f, h, c).unwrap();
+    let got = rt_tuned.execute(&name, &args).unwrap();
+    assert_eq!(bits(&got), bits(&want), "forced f32 variants changed served bits");
+
+    let mut rt_i8_plain = Runtime::with_backend(Box::new(HloPlanBackend::int8()), &dir);
+    rt_i8_plain.load_mlp_buckets_int8(&[b], f, h, c).unwrap();
+    let want_i8 = rt_i8_plain.execute(&name, &args).unwrap();
+    let tuned_i8 = HloPlanBackend::int8().with_tuning(seed(TuneDtype::I8));
+    let mut rt_i8_tuned = Runtime::with_backend(Box::new(tuned_i8), &dir);
+    rt_i8_tuned.load_mlp_buckets_int8(&[b], f, h, c).unwrap();
+    let got_i8 = rt_i8_tuned.execute(&name, &args).unwrap();
+    assert_eq!(bits(&got_i8), bits(&want_i8), "forced i8 variants changed served bits");
+}
