@@ -126,6 +126,47 @@ def check(report):
             f"responses: {batching}"
         )
 
+    # -- DFT: the second served model family ---------------------------
+    dft = need(report, "dft")
+    if dft.get("dft_gemm_steps") != 1:
+        fail(f"the DFT fixture must fuse to exactly one dft_gemm step: {dft}")
+    if dft.get("generated_matches_fixture") is not True:
+        fail(f"dft_hlo_text must reproduce the AOT fixture byte for byte: {dft}")
+    if dft.get("identical") is not True:
+        fail(f"fused DFT diverged from interpreter/oracle bits: {dft}")
+    if not dft.get("max_abs_err_vs_fixture", -1) >= 0:
+        fail(f"DFT accuracy vs the JAX fixture bytes must be reported: {dft}")
+    if not dft.get("max_abs_err_vs_f64_reference", -1) >= 0:
+        fail(f"DFT accuracy vs the f64 reference must be reported: {dft}")
+    mix = need(dft, "mix")
+    if not mix.get("req_per_s", 0) > 0:
+        fail(f"two-family mix served no requests: {mix}")
+    if not mix.get("dft_requests", 0) > 0 or not mix.get("classify_requests", 0) > 0:
+        fail(f"the mix must carry traffic from both families: {mix}")
+    if mix.get("rows_identical") is not True:
+        fail(f"a served DFT response diverged from its per-request oracle: {mix}")
+    throttled = need(mix, "throttled")
+    for family in ("mlp", "dft"):
+        if not throttled.get(family, -1) >= 0:
+            fail(f"per-family throttle counter '{family}' missing: {mix}")
+    dft_buckets = mix.get("dft_buckets")
+    if not isinstance(dft_buckets, list) or not dft_buckets:
+        fail(f"the mix must report per-bucket DFT flush counters: {mix}")
+    dft_flushes = sum(
+        b.get("flushes_full", 0)
+        + b.get("flushes_deadline", 0)
+        + b.get("flushes_shutdown", 0)
+        for b in dft_buckets
+    )
+    if not dft_flushes > 0:
+        fail(f"the mix recorded no DFT bucket flushes: {mix}")
+    dft_rows = sum(b.get("rows", 0) for b in dft_buckets)
+    if dft_rows != mix.get("dft_requests"):
+        fail(
+            f"DFT bucket rows {dft_rows} != submitted DFT requests "
+            f"{mix.get('dft_requests')}: {mix}"
+        )
+
     # -- autotuner: memoized table, identity per class, audit trail ----
     tuning = need(report, "tuning")
     if tuning.get("enabled") is not True:
@@ -168,6 +209,8 @@ def check(report):
         f" ladder {ladder},"
         f" bucket req/s {[row.get('req_per_s') for row in per_bucket]},"
         f" batched==singleton {batching.get('batched_vs_singleton_identical')},"
+        f" dft mix req/s {mix.get('req_per_s')}"
+        f" (rows identical {mix.get('rows_identical')}),"
         f" tuned classes {len(table)}"
         f" ({tuning.get('distinct_variants')} variants,"
         f" {tuning.get('measured_classes')} measured)"

@@ -40,7 +40,14 @@ def to_hlo_text(lowered) -> str:
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
     )
-    return comp.as_hlo_text()
+    # `short_parsable` is byte-identical to `as_hlo_text()`, but exposes
+    # `print_large_constants`: without it the printer elides any literal
+    # over 16 elements as `constant({...})`, which the rust parser can't
+    # execute — the DFT family bakes its 16x16 twiddle matrices into the
+    # graph as constants and needs the real values in the text.
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
 
 
 def det_input(shape, salt: int) -> np.ndarray:
@@ -67,8 +74,11 @@ def build_artifact(name, fn, input_shapes, out_dir):
         f.write(hlo)
 
     inputs = [det_input(s, salt + 1) for salt, s in enumerate(input_shapes)]
-    (out,) = fn(*[jnp.asarray(v) for v in inputs])
-    out = np.asarray(out, dtype=np.float32)
+    outs = fn(*[jnp.asarray(v) for v in inputs])
+    # multi-output graphs (the DFT family's (yr, yi) pair) stack their
+    # outputs along axis 0 — the same root-order concatenation the rust
+    # runtime performs, so `.meta`/`.expected.bin` describe one tensor
+    out = np.concatenate([np.asarray(o, dtype=np.float32) for o in outs], axis=0)
     with open(os.path.join(out_dir, f"{name}.expected.bin"), "wb") as f:
         f.write(out.tobytes())
     meta = f"{name};{','.join(shape_str(s) for s in input_shapes)};{shape_str(out.shape)}\n"
@@ -110,6 +120,15 @@ def main() -> None:
                     (model.MLP_HIDDEN, model.MLP_CLASSES),
                     (model.MLP_CLASSES,),
                 ],
+                args.out_dir,
+            )
+        )
+    for b in model.DFT_BATCHES:
+        manifest.append(
+            build_artifact(
+                f"dft_b{b}",
+                model.dft16_serving,
+                [(b, model.DFT_N), (b, model.DFT_N)],
                 args.out_dir,
             )
         )

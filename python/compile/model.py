@@ -13,6 +13,8 @@ once; the rust runtime loads and executes the artifacts. Python never sits
 on the request path.
 """
 
+import math
+
 import jax.numpy as jnp
 
 from compile.kernels import ref
@@ -26,6 +28,8 @@ MLP_HIDDEN = 128
 MLP_CLASSES = 32
 MLP_BATCHES = (32,)  # compiled batch size(s); the batcher pads to these
 CONV_IMG = (3, 18, 130)  # (channels, rows, width) -> (8, 16, 128) output
+DFT_N = 16  # DFT length (one request row = one 16-point transform)
+DFT_BATCHES = (32,)  # compiled batch size(s) for the DFT family
 
 
 def gemm_f32(x, y):
@@ -94,3 +98,49 @@ def conv2d_k3_serving(h, img):
 def mlp_classifier_serving(x, w1, b1, w2, b2):
     """jnp-only twin of :func:`mlp_classifier` (batch already padded)."""
     return (ref.mlp_ref(x, w1, b1, w2, b2),)
+
+
+def _dft16_twiddles():
+    """``(Fr, Fi)`` as nested row-major lists: ``F[j][k] = exp(-2πi·jk/16)``.
+
+    Built from *exact* IEEE-754 sqrt expressions (sqrt, divide, and
+    negate are correctly rounded and exactly specified), so the rust
+    generator (`kernels::dft::dft16_twiddles_f32`) computing the same
+    formula produces bit-identical f32 values — no libm cos/sin
+    divergence between languages, which is what lets the AOT fixture,
+    the rust bucket generator, and the fused plan agree byte for byte.
+    """
+    s2 = math.sqrt(2.0)
+    c1 = math.sqrt(2.0 + s2) / 2.0  # cos(pi/8)
+    c2 = s2 / 2.0  # cos(pi/4)
+    c3 = math.sqrt(2.0 - s2) / 2.0  # cos(3pi/8)
+    cos = [1.0, c1, c2, c3, 0.0, -c3, -c2, -c1, -1.0, -c1, -c2, -c3, 0.0, c3, c2, c1]
+    sin = [0.0, c3, c2, c1, 1.0, c1, c2, c3, 0.0, -c3, -c2, -c1, -1.0, -c1, -c2, -c3]
+    n = DFT_N
+    fr = [[cos[(j * k) % n] for k in range(n)] for j in range(n)]
+    fi = [[-sin[(j * k) % n] for k in range(n)] for j in range(n)]
+    return fr, fi
+
+
+def dft16_serving(xr, xi):
+    """Real-signal batched 16-point DFT as a complex matmul — the second
+    served model family.
+
+    One request row is one transform: ``y[r] = DFT(xr[r] + i·xi[r])``,
+    computed against the baked twiddle constants of
+    :func:`_dft16_twiddles` as ``yr = xr·Fr − xi·Fi``,
+    ``yi = xr·Fi + xi·Fr`` (``F`` is symmetric, so the row-per-request
+    layout needs no transpose).  The subtraction is written as
+    ``+ (−1)·`` so XLA lowers it to the
+    ``multiply(dot, broadcast(constant(-1)))`` then ``add`` shape the
+    rust plan compiler's DFT matcher fuses (in either operand order)
+    into a single ``dft_gemm`` step over once-packed twiddle panels.  IEEE-754 makes
+    ``a + (−1·b)`` bitwise identical to ``a − b``, so the lowering
+    costs nothing numerically.
+    """
+    fr_rows, fi_rows = _dft16_twiddles()
+    fr = jnp.asarray(fr_rows, dtype=jnp.float32)
+    fi = jnp.asarray(fi_rows, dtype=jnp.float32)
+    yr = jnp.dot(xr, fr) + (-1.0) * jnp.dot(xi, fi)
+    yi = jnp.dot(xr, fi) + jnp.dot(xi, fr)
+    return (yr, yi)

@@ -83,7 +83,7 @@
 //! assert_eq!(c[0], 0.30078125, "bf16 grid, not 0.3004");
 //! ```
 
-use crate::blas::block_gemm::{chunk_plan_nr, GemmVariant, Par, KC};
+use crate::blas::block_gemm::{chunk_plan_nr, Epilogue, GemmVariant, Par, KC};
 use crate::isa::types::bf16_to_f32;
 use crate::kernels::pack::{
     pack_a_panel_bf16, pack_a_panel_f32_bf16, pack_b_panel_bf16, pack_b_panel_f32_bf16,
@@ -333,17 +333,32 @@ pub fn gemm_bf16_packed_into(
     par: Par<'_>,
     scratch: &mut Bf16Scratch,
 ) {
-    gemm_bf16_tuned_into(c, a, b, m, n, k, accum, par, scratch, GemmVariant::CANONICAL_WIDE);
+    gemm_bf16_tuned_into(
+        c,
+        a,
+        b,
+        m,
+        n,
+        k,
+        accum,
+        Epilogue::None,
+        par,
+        scratch,
+        GemmVariant::CANONICAL_WIDE,
+    );
 }
 
-/// [`gemm_bf16_packed_into`] with an explicit [`GemmVariant`] — the
-/// entry point the autotuned plan steps call. Every variant produces
-/// the same bits as [`GemmVariant::CANONICAL_WIDE`] under both
-/// [`Bf16Accum`] contracts: the variant's `kc` must stay even (cache
-/// blocks never split a rank-2 pair), so each `C` element replays the
-/// same ascending-`k` pair chain from the same rounded values whatever
-/// the tile geometry (`rust/tests/tune_engine.rs` pins this across the
-/// family).
+/// [`gemm_bf16_packed_into`] with an explicit [`GemmVariant`] and fused
+/// [`Epilogue`] — the entry point the autotuned plan steps call. Every
+/// variant produces the same bits as [`GemmVariant::CANONICAL_WIDE`]
+/// under both [`Bf16Accum`] contracts: the variant's `kc` must stay even
+/// (cache blocks never split a rank-2 pair), so each `C` element replays
+/// the same ascending-`k` pair chain from the same rounded values
+/// whatever the tile geometry (`rust/tests/tune_engine.rs` pins this
+/// across the family). The epilogue applies per element at the final
+/// narrowed `f32` writeback, exactly like the f32 engine's — so a fused
+/// `dot → add(bias) → maximum(0)` tail is bitwise the interpreter's
+/// separate instructions.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_bf16_tuned_into(
     c: &mut [f32],
@@ -353,6 +368,7 @@ pub fn gemm_bf16_tuned_into(
     n: usize,
     k: usize,
     accum: Bf16Accum,
+    epilogue: Epilogue<'_>,
     par: Par<'_>,
     scratch: &mut Bf16Scratch,
     v: GemmVariant,
@@ -366,6 +382,15 @@ pub fn gemm_bf16_tuned_into(
     assert_eq!(a.len(), m * k, "A must be m*k");
     assert_eq!(b.len(), k * n, "B must be k*n");
     assert_eq!(c.len(), m * n, "C must be m*n");
+    match epilogue {
+        Epilogue::Bias(bias) | Epilogue::BiasRelu(bias) => {
+            assert!(bias.len() >= n, "bias must cover all n columns");
+        }
+        Epilogue::DftCombine { other, .. } => {
+            assert!(other.len() >= m * n, "combine operand must cover the m*n output");
+        }
+        Epilogue::None => {}
+    }
     if m == 0 || n == 0 {
         return;
     }
@@ -403,7 +428,8 @@ pub fn gemm_bf16_tuned_into(
         });
     }
     // writeback: narrow the f64 image (exact for F32Pairs — it carries
-    // f32 values widened) and de-block the column chunks
+    // f32 values widened), apply the fused epilogue per element, and
+    // de-block the column chunks
     let c64 = &scratch.c64;
     for w in 0..nchunks {
         let j0 = w * cols_per;
@@ -412,8 +438,8 @@ pub fn gemm_bf16_tuned_into(
         for i in 0..m {
             let crow = &mut c[i * n + j0..i * n + j0 + wcols];
             let srow = &cw[i * wcols..(i + 1) * wcols];
-            for (dst, &src) in crow.iter_mut().zip(srow) {
-                *dst = src as f32;
+            for (jl, (dst, &src)) in crow.iter_mut().zip(srow).enumerate() {
+                *dst = epilogue.apply(src as f32, j0 + jl, i * n + j0 + jl);
             }
         }
     }
@@ -902,6 +928,7 @@ mod tests {
                     n,
                     k,
                     accum,
+                    Epilogue::None,
                     Par::Seq,
                     &mut scratch,
                     v,

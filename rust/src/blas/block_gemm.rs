@@ -75,7 +75,9 @@
 //! assert_eq!(c, [1.5, 0.0, 3.5, 0.0]);
 //! ```
 
-use crate::kernels::pack::{pack_a_panel_f32, pack_b_im2col_f32, pack_b_panel_f32, Im2colSpec};
+use crate::kernels::pack::{
+    pack_a_panel_f32, pack_b_im2col_f32, pack_b_panel_f32, Im2colSpec, PackedB,
+};
 use crate::rt::ThreadPool;
 use std::sync::Mutex;
 
@@ -390,16 +392,33 @@ pub enum Epilogue<'a> {
     /// `c = max((f32)acc + bias[j], 0.0)` — bias add then relu, the
     /// MLP's fused `dot → add → maximum` tail.
     BiasRelu(&'a [f32]),
+    /// `c = (f32)acc ∓ other[i·n+j]` — combine with a same-shaped `m×n`
+    /// matrix at the writeback, the DFT step's fused `±` tail
+    /// (`yr = xr·Fr − xi·Fi`, `yi = xr·Fi + xi·Fr`). `sub == true`
+    /// subtracts; IEEE `a − b` is bit-identical to the interpreter's
+    /// lowered `a + (−1·b)` for every input, so the fused form matches
+    /// the oracle exactly.
+    DftCombine {
+        /// The already-computed other product, `m×n` row-major.
+        other: &'a [f32],
+        /// Subtract (`true`, the `yr` real combine) or add (`false`,
+        /// the `yi` imaginary combine).
+        sub: bool,
+    },
 }
 
 impl Epilogue<'_> {
-    /// Apply the epilogue to one already-narrowed element of column `j`.
+    /// Apply the epilogue to one already-narrowed element of column `j`
+    /// at linear output index `idx` (`i·n + j`). Shared with the bf16
+    /// engine, whose writeback fuses the same tails.
     #[inline]
-    fn apply(&self, v: f32, j: usize) -> f32 {
+    pub(crate) fn apply(&self, v: f32, j: usize, idx: usize) -> f32 {
         match self {
             Epilogue::None => v,
             Epilogue::Bias(bias) => v + bias[j],
             Epilogue::BiasRelu(bias) => (v + bias[j]).max(0.0),
+            Epilogue::DftCombine { other, sub: true } => v - other[idx],
+            Epilogue::DftCombine { other, sub: false } => v + other[idx],
         }
     }
 }
@@ -418,6 +437,12 @@ pub enum PanelB<'a> {
         /// The precompiled gather (one base offset per `k` row).
         spec: &'a Im2colSpec,
     },
+    /// A `k×n` matrix pre-packed at plan-compile time
+    /// ([`PackedB`](crate::kernels::pack::PackedB)): panel queries are
+    /// straight copies of the stored grid cells. The grid must have been
+    /// built for this GEMM's exact `(k, n, nr, kc)` geometry — the DFT
+    /// step's pinned Fourier panels.
+    Packed(&'a PackedB),
 }
 
 impl PanelB<'_> {
@@ -438,6 +463,11 @@ impl PanelB<'_> {
             PanelB::Matrix(b) => pack_b_panel_f32(b, ldb, k0, kc, j0, cols, nr, out),
             PanelB::Im2col { img, spec } => {
                 pack_b_im2col_f32(img, spec, k0, kc, j0, cols, nr, out)
+            }
+            PanelB::Packed(pb) => {
+                debug_assert_eq!(pb.geometry().1, ldb, "packed B built for a different n");
+                debug_assert!(cols <= nr);
+                out[..kc * nr].copy_from_slice(pb.panel(k0, kc, j0));
             }
         }
     }
@@ -562,10 +592,18 @@ pub fn gemm_f32_tuned_into(
         PanelB::Im2col { spec, .. } => {
             assert!(spec.bases.len() >= k, "im2col spec must cover all k rows");
         }
+        PanelB::Packed(pb) => assert_eq!(
+            pb.geometry(),
+            (k, n, v.nr, v.block.kc),
+            "packed B geometry must match this GEMM's shape and variant"
+        ),
     }
     match epilogue {
         Epilogue::Bias(bias) | Epilogue::BiasRelu(bias) => {
             assert!(bias.len() >= n, "bias must cover all n columns");
+        }
+        Epilogue::DftCombine { other, .. } => {
+            assert!(other.len() >= m * n, "combine operand must cover the m*n output");
         }
         Epilogue::None => {}
     }
@@ -622,7 +660,7 @@ pub fn gemm_f32_tuned_into(
             let crow = &mut c[i * n + j0..i * n + j0 + wcols];
             let srow = &cw[i * wcols..(i + 1) * wcols];
             for (jl, (dst, &src)) in crow.iter_mut().zip(srow).enumerate() {
-                *dst = epilogue.apply(src as f32, j0 + jl);
+                *dst = epilogue.apply(src as f32, j0 + jl, i * n + j0 + jl);
             }
         }
     }

@@ -113,6 +113,11 @@ pub enum Payload {
     Gemm { model: String, x: Vec<f32>, y: Vec<f32> },
     /// 8 filter banks over a 3-channel image (the SCONV service).
     Conv { filters: Vec<f32>, image: Vec<f32> },
+    /// One complex signal row for the batched DFT family
+    /// ([`CoordinatorConfig::dft_n`] points, split re/im). The response
+    /// carries `2·dft_n` values: the spectrum's real bins followed by
+    /// its imaginary bins.
+    Dft { re: Vec<f32>, im: Vec<f32> },
 }
 
 /// Completed request.
@@ -287,6 +292,12 @@ pub struct CoordinatorConfig {
     pub features: usize,
     pub classes: usize,
     pub hidden: usize,
+    /// DFT length of the second served family (must match
+    /// `python/compile/model.py::DFT_N`; one request row = one
+    /// `dft_n`-point transform). The DFT family batches on the same
+    /// bucket ladder as classify, resolved against the engine's loaded
+    /// `dft_b{b}` plans.
+    pub dft_n: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -302,6 +313,7 @@ impl Default for CoordinatorConfig {
             features: 64,
             classes: 32,
             hidden: 128,
+            dft_n: 16,
         }
     }
 }
@@ -335,6 +347,18 @@ impl CoordinatorConfig {
     /// The compiled model name of one batch bucket.
     pub fn mlp_model_for(&self, bucket: usize) -> String {
         format!("mlp_b{bucket}")
+    }
+
+    /// The DFT family's canonical model name (the largest bucket's
+    /// plan) — what sticky routing hashes for every [`Payload::Dft`]
+    /// and what a [`ModelPolicy`] keys the family by.
+    pub fn dft_model(&self) -> String {
+        self.dft_model_for(self.max_bucket())
+    }
+
+    /// The compiled DFT model name of one batch bucket.
+    pub fn dft_model_for(&self, bucket: usize) -> String {
+        format!("dft_b{bucket}")
     }
 }
 
@@ -411,12 +435,16 @@ pub struct CoordStats {
     pub latency: Histogram,
     /// One row per ladder bucket (ascending), shared by all shards.
     pub buckets: Vec<BucketStat>,
+    /// The DFT family's per-bucket rows (same ladder, batched in its
+    /// own window — a DFT flush never mixes with a classify flush).
+    pub dft_buckets: Vec<BucketStat>,
 }
 
 impl CoordStats {
     fn for_buckets(ladder: &[usize]) -> CoordStats {
         CoordStats {
             buckets: ladder.iter().map(|&b| BucketStat::new(b)).collect(),
+            dft_buckets: ladder.iter().map(|&b| BucketStat::new(b)).collect(),
             ..Default::default()
         }
     }
@@ -424,6 +452,11 @@ impl CoordStats {
     /// The stats row of one ladder bucket.
     pub fn bucket(&self, bucket: usize) -> Option<&BucketStat> {
         self.buckets.iter().find(|s| s.bucket == bucket)
+    }
+
+    /// The DFT family's stats row of one ladder bucket.
+    pub fn dft_bucket(&self, bucket: usize) -> Option<&BucketStat> {
+        self.dft_buckets.iter().find(|s| s.bucket == bucket)
     }
 
     /// Mean rows per executed MLP batch.
@@ -438,10 +471,13 @@ impl CoordStats {
 }
 
 /// Per-policy shared state: the policy plus its cross-shard in-flight
-/// counter.
+/// counter and its own throttle count (the per-family slice of
+/// [`CoordStats::throttled`], readable via
+/// [`Coordinator::throttled_for`]).
 struct PolicyState {
     policy: ModelPolicy,
     inflight: Arc<AtomicU64>,
+    throttled: Counter,
 }
 
 /// Handle to a running coordinator (one submission queue + engine
@@ -455,6 +491,8 @@ pub struct Coordinator {
     routing: ShardRouting,
     /// The classify family name (what a `Classify` hashes as).
     mlp_model: String,
+    /// The DFT family name (what a `Dft` hashes as).
+    dft_model: String,
     queue_cap: usize,
     policies: Vec<PolicyState>,
     clock: Clock,
@@ -499,11 +537,16 @@ impl Coordinator {
         let shards = cfg.shards.max(1);
         let routing = cfg.routing;
         let mlp_model = cfg.mlp_model();
+        let dft_model = cfg.dft_model();
         let stats = Arc::new(CoordStats::for_buckets(&cfg.ladder()));
         let policies: Vec<PolicyState> = cfg
             .policies
             .iter()
-            .map(|p| PolicyState { policy: p.clone(), inflight: Arc::new(AtomicU64::new(0)) })
+            .map(|p| PolicyState {
+                policy: p.clone(),
+                inflight: Arc::new(AtomicU64::new(0)),
+                throttled: Counter::new(),
+            })
             .collect();
         let factory = Arc::new(engine_factory);
         let mut txs = Vec::with_capacity(shards);
@@ -527,6 +570,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             routing,
             mlp_model,
+            dft_model,
             queue_cap: cfg.queue_cap,
             policies,
             clock: cfg.clock,
@@ -549,7 +593,15 @@ impl Coordinator {
             Payload::Classify { .. } => &self.mlp_model,
             Payload::Gemm { model, .. } => model,
             Payload::Conv { .. } => "conv2d_k3",
+            Payload::Dft { .. } => &self.dft_model,
         }
+    }
+
+    /// Per-family policy throttle count (in-flight cap hits plus
+    /// low-priority sheds, the family's slice of
+    /// [`CoordStats::throttled`]); `None` when no policy tracks `model`.
+    pub fn throttled_for(&self, model: &str) -> Option<u64> {
+        self.policies.iter().find(|p| p.policy.model == model).map(|p| p.throttled.get())
     }
 
     /// The shard index a request routes to, per the configured policy.
@@ -588,6 +640,7 @@ impl Coordinator {
             let cap = p.policy.max_inflight as u64;
             if cap > 0 && p.inflight.load(Ordering::Relaxed) >= cap {
                 self.stats.throttled.inc();
+                p.throttled.inc();
                 return Err(id);
             }
             if p.policy.priority == Priority::Low
@@ -595,6 +648,7 @@ impl Coordinator {
                 && self.txs[shard].len() * 2 >= self.queue_cap
             {
                 self.stats.throttled.inc();
+                p.throttled.inc();
                 return Err(id);
             }
         }
@@ -707,6 +761,22 @@ fn engine_loop<E, F>(
     };
     let max_bucket = *ladder.last().unwrap();
     let mut pending: Vec<Box<Request>> = Vec::with_capacity(max_bucket);
+    // The DFT family batches on the same configured ladder but in its
+    // own window, resolved against the engine's loaded dft_b{b} plans —
+    // a flush never mixes families (the two models pack different
+    // panels), and an engine without small DFT buckets degrades to
+    // pad-to-max exactly like classify.
+    let dft_ladder: Vec<usize> = {
+        let mut l = cfg.ladder();
+        l.retain(|&b| engine.has_model(&cfg.dft_model_for(b)));
+        if l.is_empty() {
+            vec![cfg.max_bucket()]
+        } else {
+            l
+        }
+    };
+    let dft_max = *dft_ladder.last().unwrap();
+    let mut dft_pending: Vec<Box<Request>> = Vec::with_capacity(dft_max);
 
     // Execute the pending window in the smallest bucket that covers it,
     // pad the tail, scatter output rows back per request.
@@ -770,10 +840,78 @@ fn engine_loop<E, F>(
             }
         };
 
-    // Route one request: classify joins the batching window, GEMM/conv
-    // dispatch directly.
-    let process =
-        |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats, req: Box<Request>| {
+    // Execute the pending DFT window in its smallest covering bucket:
+    // one engine call on the batched split re/im planes, then each
+    // request's spectrum row scatters back as its yr bins followed by
+    // its yi bins (output rows r and bucket+r of the stacked [2b,n]
+    // result).
+    let flush_dft =
+        |engine: &mut E, pending: &mut Vec<Box<Request>>, stats: &CoordStats, why: FlushWhy| {
+            if pending.is_empty() {
+                return;
+            }
+            let rows = pending.len();
+            let bucket = dft_ladder.iter().copied().find(|&b| b >= rows).unwrap_or(dft_max);
+            let model = cfg.dft_model_for(bucket);
+            let n = cfg.dft_n;
+            let mut xr = vec![0f32; bucket * n];
+            let mut xi = vec![0f32; bucket * n];
+            for (r, req) in pending.iter().enumerate() {
+                if let Payload::Dft { re, im } = &req.payload {
+                    xr[r * n..(r + 1) * n].copy_from_slice(re);
+                    xi[r * n..(r + 1) * n].copy_from_slice(im);
+                }
+            }
+            let result = engine.run(&model, &[&xr, &xi]).and_then(|out| {
+                if out.len() < (bucket + rows) * n {
+                    crate::bail!(
+                        "{model}: engine returned {} values for {rows} rows of {n} bins",
+                        out.len()
+                    );
+                }
+                Ok(out)
+            });
+            if let Some(bs) = stats.dft_bucket(bucket) {
+                match why {
+                    FlushWhy::Full => bs.full.inc(),
+                    FlushWhy::Deadline => bs.deadline.inc(),
+                    FlushWhy::Shutdown => bs.shutdown.inc(),
+                }
+                bs.rows.add(rows as u64);
+            }
+            match result {
+                Ok(out) => {
+                    for (r, req) in pending.drain(..).enumerate() {
+                        let mut row = Vec::with_capacity(2 * n);
+                        row.extend_from_slice(&out[r * n..(r + 1) * n]);
+                        row.extend_from_slice(&out[(bucket + r) * n..(bucket + r + 1) * n]);
+                        let latency = clock.now().saturating_duration_since(req.submitted);
+                        stats.completed.inc();
+                        stats.latency.record(latency);
+                        let _ =
+                            req.reply.send(Response { id: req.id, result: Ok(row), latency });
+                    }
+                }
+                Err(e) => {
+                    for req in pending.drain(..) {
+                        stats.failed.inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!("batch failed: {e}")),
+                            latency: clock.now().saturating_duration_since(req.submitted),
+                        });
+                    }
+                }
+            }
+        };
+
+    // Route one request: classify joins the batching window, DFT joins
+    // its own window, GEMM/conv dispatch directly.
+    let process = |engine: &mut E,
+                   pending: &mut Vec<Box<Request>>,
+                   dft_pending: &mut Vec<Box<Request>>,
+                   stats: &CoordStats,
+                   req: Box<Request>| {
             match &req.payload {
                 Payload::Classify { features } => {
                     if features.len() != cfg.features {
@@ -790,6 +928,23 @@ fn engine_loop<E, F>(
                         return;
                     }
                     pending.push(req);
+                }
+                Payload::Dft { re, im } => {
+                    if re.len() != cfg.dft_n || im.len() != cfg.dft_n {
+                        stats.failed.inc();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            result: Err(format!(
+                                "expected {n}+{n} re/im samples, got {}+{}",
+                                re.len(),
+                                im.len(),
+                                n = cfg.dft_n
+                            )),
+                            latency: clock.now().saturating_duration_since(req.submitted),
+                        });
+                        return;
+                    }
+                    dft_pending.push(req);
                 }
                 Payload::Gemm { model, x, y } => {
                     let result = engine.run(model, &[x, y]).map_err(|e| format!("{model}: {e}"));
@@ -826,12 +981,16 @@ fn engine_loop<E, F>(
 
     'outer: loop {
         // continuous drain: pull everything already queued into the
-        // window (up to the largest bucket) before deciding what to run
-        while pending.len() < max_bucket {
+        // two family windows (up to each largest bucket) before
+        // deciding what to run
+        while pending.len() < max_bucket && dft_pending.len() < dft_max {
             match rx.try_recv() {
-                Some(Msg::Req(req)) => process(&mut engine, &mut pending, &stats, req),
+                Some(Msg::Req(req)) => {
+                    process(&mut engine, &mut pending, &mut dft_pending, &stats, req)
+                }
                 Some(Msg::Shutdown) => {
                     flush(&mut engine, &mut pending, &stats, FlushWhy::Shutdown);
+                    flush_dft(&mut engine, &mut dft_pending, &stats, FlushWhy::Shutdown);
                     break 'outer;
                 }
                 None => break,
@@ -841,14 +1000,37 @@ fn engine_loop<E, F>(
             flush(&mut engine, &mut pending, &stats, FlushWhy::Full);
             continue;
         }
-        // deadline of the oldest pending classification, if any
-        let wait = match pending.first() {
-            Some(first) => {
-                let age = clock.now().saturating_duration_since(first.submitted);
+        if dft_pending.len() >= dft_max {
+            flush_dft(&mut engine, &mut dft_pending, &stats, FlushWhy::Full);
+            continue;
+        }
+        // deadline of the oldest pending request across both windows
+        let oldest = match (pending.first(), dft_pending.first()) {
+            (Some(a), Some(b)) => Some(a.submitted.min(b.submitted)),
+            (Some(a), None) => Some(a.submitted),
+            (None, Some(b)) => Some(b.submitted),
+            (None, None) => None,
+        };
+        let wait = match oldest {
+            Some(t0) => {
+                let age = clock.now().saturating_duration_since(t0);
                 match cfg.max_delay.checked_sub(age) {
                     Some(rem) if rem > Duration::ZERO => rem,
                     _ => {
-                        flush(&mut engine, &mut pending, &stats, FlushWhy::Deadline);
+                        // flush every window whose own head has expired
+                        // (at least one has — `t0` is the older head)
+                        let now = clock.now();
+                        let expired = |w: &[Box<Request>]| {
+                            w.first().is_some_and(|r| {
+                                now.saturating_duration_since(r.submitted) >= cfg.max_delay
+                            })
+                        };
+                        if expired(&pending) {
+                            flush(&mut engine, &mut pending, &stats, FlushWhy::Deadline);
+                        }
+                        if expired(&dft_pending) {
+                            flush_dft(&mut engine, &mut dft_pending, &stats, FlushWhy::Deadline);
+                        }
                         continue;
                     }
                 }
@@ -858,9 +1040,12 @@ fn engine_loop<E, F>(
         match rx.recv_timeout(wait) {
             Some(Msg::Shutdown) => {
                 flush(&mut engine, &mut pending, &stats, FlushWhy::Shutdown);
+                flush_dft(&mut engine, &mut dft_pending, &stats, FlushWhy::Shutdown);
                 break;
             }
-            Some(Msg::Req(req)) => process(&mut engine, &mut pending, &stats, req),
+            Some(Msg::Req(req)) => {
+                process(&mut engine, &mut pending, &mut dft_pending, &stats, req)
+            }
             // timeout: loop back and re-read the clock — the deadline
             // check above decides (a manual clock may not have advanced)
             None => {}
@@ -887,6 +1072,7 @@ mod tests {
         fn batch_of(&self, model: &str) -> usize {
             model
                 .strip_prefix("mlp_b")
+                .or_else(|| model.strip_prefix("dft_b"))
                 .and_then(|b| b.parse().ok())
                 .unwrap_or_else(|| self.cfg.max_bucket())
         }
@@ -905,6 +1091,21 @@ mod tests {
                 for r in 0..b {
                     for j in 0..c {
                         out[r * c + j] = x[r * f] + j as f32;
+                    }
+                }
+                Ok(out)
+            } else if model.starts_with("dft_b") {
+                // stacked [2b, n] output like the real DFT plans:
+                // yr[r][j] = re[r][0] + j, yi[r][j] = im[r][0] - j — each
+                // half row identifies its request, so scatter-back
+                // mistakes (wrong row, swapped halves) are visible
+                let (xr, xi) = (inputs[0], inputs[1]);
+                let (b, n) = (self.batch_of(model), self.cfg.dft_n);
+                let mut out = vec![0f32; 2 * b * n];
+                for r in 0..b {
+                    for j in 0..n {
+                        out[r * n + j] = xr[r * n] + j as f32;
+                        out[(b + r) * n + j] = xi[r * n] - j as f32;
                     }
                 }
                 Ok(out)
@@ -1612,5 +1813,194 @@ mod tests {
         assert_eq!(stats.bucket(32).unwrap().rows.get(), 1);
         assert_eq!(stats.bucket(1).unwrap().flushes(), 0);
         assert_eq!(stats.bucket(8).unwrap().flushes(), 0);
+    }
+
+    #[test]
+    fn dft_requests_batch_and_scatter_back_both_halves() {
+        // a full window of DFT requests executes as ONE batched call,
+        // and each response carries exactly its own request's yr half
+        // followed by its yi half
+        let cfg = CoordinatorConfig {
+            buckets: vec![4],
+            max_delay: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let n = cfg.dft_n;
+        let (coord, calls) = start_mock(cfg.clone(), None);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let mut re = vec![0f32; n];
+                let mut im = vec![0f32; n];
+                re[0] = i as f32 * 10.0;
+                im[0] = i as f32 * 10.0 + 1.0;
+                coord.submit(Payload::Dft { re, im }).1
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let row = rx.recv().unwrap().result.unwrap();
+            assert_eq!(row.len(), 2 * n, "yr bins then yi bins");
+            assert_eq!(row[0], i as f32 * 10.0, "yr half routed to its requester");
+            assert_eq!(row[3], i as f32 * 10.0 + 3.0);
+            assert_eq!(row[n], i as f32 * 10.0 + 1.0, "yi half routed to its requester");
+            assert_eq!(row[n + 3], i as f32 * 10.0 + 1.0 - 3.0);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed.get(), 4);
+        let bs = stats.dft_bucket(4).unwrap();
+        assert_eq!(bs.full.get(), 1, "one window-full DFT flush");
+        assert_eq!(bs.rows.get(), 4);
+        assert_eq!(bs.occupancy(), 1.0);
+        // classify buckets untouched — the families batch independently
+        assert_eq!(stats.bucket(4).unwrap().flushes(), 0);
+        let calls = calls.lock().unwrap();
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0], ("dft_b4".to_string(), 2), "one call, two input planes");
+    }
+
+    #[test]
+    fn two_family_traffic_batches_independently_and_stays_row_exact() {
+        // classify and DFT requests interleaved at random: every
+        // response must carry exactly its own request's data, every
+        // flush must be single-family, and both ladders' stats must
+        // account for all rows
+        check("two-family scatter-back", 5, |rng: &mut Rng| {
+            let cfg = CoordinatorConfig {
+                buckets: vec![1, 4, 8],
+                max_delay: Duration::from_millis(1),
+                ..Default::default()
+            };
+            let n = cfg.dft_n;
+            let total = rng.range(5, 50);
+            let (coord, calls) = start_mock(cfg.clone(), None);
+            let mut rxs = Vec::new();
+            let mut dfts = 0u64;
+            let mut classifies = 0u64;
+            for i in 0..total {
+                if rng.range(0, 2) == 0 {
+                    let mut re = vec![0f32; n];
+                    let mut im = vec![0f32; n];
+                    re[0] = i as f32;
+                    im[0] = i as f32 + 0.5;
+                    dfts += 1;
+                    rxs.push((i, true, coord.submit(Payload::Dft { re, im }).1));
+                } else {
+                    let mut f = vec![0f32; cfg.features];
+                    f[0] = i as f32;
+                    classifies += 1;
+                    rxs.push((i, false, coord.submit(Payload::Classify { features: f }).1));
+                }
+            }
+            for (i, is_dft, rx) in rxs {
+                let row = rx.recv().unwrap().result.unwrap();
+                if is_dft {
+                    assert_eq!(row.len(), 2 * n, "dft row {i}");
+                    assert_eq!(row[0] as usize, i, "dft yr row for {i}");
+                    assert_eq!(row[n], i as f32 + 0.5, "dft yi row for {i}");
+                } else {
+                    assert_eq!(row[0] as usize, i, "classify row for {i}");
+                }
+            }
+            let stats = coord.shutdown();
+            assert_eq!(stats.completed.get(), total as u64);
+            assert_eq!(stats.failed.get(), 0);
+            let dft_rows: u64 = stats.dft_buckets.iter().map(|b| b.rows.get()).sum();
+            let mlp_rows: u64 = stats.buckets.iter().map(|b| b.rows.get()).sum();
+            assert_eq!(dft_rows, dfts, "every DFT row accounted to a dft bucket");
+            assert_eq!(mlp_rows, classifies, "every classify row accounted to an mlp bucket");
+            // no engine call ever mixed families
+            for (model, ins) in calls.lock().unwrap().iter() {
+                assert!(
+                    model.starts_with("mlp_b") && *ins == 5
+                        || model.starts_with("dft_b") && *ins == 2,
+                    "unexpected engine call {model} with {ins} inputs"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn dft_deadline_flush_on_manual_clock() {
+        // a lone DFT request held in its window must flush by deadline
+        // on the manual clock, exactly like classify — same windowing
+        // machinery, separate window
+        let (clock, time) = Clock::manual();
+        let cfg = CoordinatorConfig {
+            buckets: vec![8],
+            max_delay: Duration::from_secs(60),
+            clock,
+            ..Default::default()
+        };
+        let n = cfg.dft_n;
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let mut re = vec![0f32; n];
+        re[0] = 7.0;
+        let (_, rx) = coord.submit(Payload::Dft { re, im: vec![0f32; n] });
+        time.advance(Duration::from_secs(61));
+        // wake the engine loop with a direct-dispatch request
+        let (_, grx) =
+            coord.submit(Payload::Gemm { model: "gemm_f32".into(), x: vec![1.0], y: vec![1.0] });
+        assert!(grx.recv().unwrap().result.is_ok());
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.unwrap()[0], 7.0);
+        assert!(resp.latency >= Duration::from_secs(61));
+        let stats = coord.shutdown();
+        assert_eq!(stats.dft_bucket(8).unwrap().deadline.get(), 1);
+    }
+
+    #[test]
+    fn malformed_dft_request_rejected_without_poisoning_window() {
+        let cfg = CoordinatorConfig {
+            buckets: vec![2],
+            max_delay: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let n = cfg.dft_n;
+        let (coord, _) = start_mock(cfg.clone(), None);
+        let bad = coord.submit(Payload::Dft { re: vec![1.0; 3], im: vec![0.0; n] }).1;
+        let good = coord.submit(Payload::Dft { re: vec![1.0; n], im: vec![0.0; n] }).1;
+        let resp = bad.recv().unwrap();
+        assert!(resp.result.unwrap_err().contains("re/im samples"));
+        assert!(good.recv().unwrap().result.is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dft_family_policy_throttles_with_per_family_counter() {
+        // a low-priority DFT family sheds when its shard queue is half
+        // full, and the per-family throttle counter records exactly the
+        // DFT sheds while other families stay admitted
+        let dft_family = CoordinatorConfig::default().dft_model();
+        let cfg = CoordinatorConfig {
+            buckets: vec![4],
+            max_delay: Duration::from_millis(1),
+            queue_cap: 4,
+            policies: vec![ModelPolicy::low_priority(&dft_family)],
+            ..Default::default()
+        };
+        let n = cfg.dft_n;
+        let (coord, gate) = start_gated(cfg.clone());
+        // pin the engine on gated gemms until the queue is half full
+        let blocker = Payload::Gemm { model: "gemm_f32".into(), x: vec![0.0], y: vec![0.0] };
+        let mut rxs = vec![coord.submit(blocker.clone()).1];
+        rxs.push(coord.submit(blocker.clone()).1);
+        rxs.push(coord.submit(blocker.clone()).1);
+        let dft = Payload::Dft { re: vec![1.0; n], im: vec![0.0; n] };
+        assert!(coord.try_submit(dft.clone()).is_err(), "low-priority DFT shed under load");
+        assert_eq!(coord.stats.throttled.get(), 1);
+        assert_eq!(coord.throttled_for(&dft_family), Some(1), "family-sliced counter");
+        assert_eq!(coord.throttled_for("gemm_f32"), None, "untracked family has no policy");
+        // normal-priority traffic still admitted at the same depth
+        rxs.push(coord.try_submit(blocker.clone()).expect("normal family admitted").1);
+        for _ in 0..rxs.len() {
+            gate.send(()).unwrap();
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        // drained queue: the DFT family is admitted again
+        let rx = coord.try_submit(dft).expect("admitted once the queue drains").1;
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], 1.0);
+        assert_eq!(coord.throttled_for(&dft_family), Some(1), "no new sheds");
+        coord.shutdown();
     }
 }

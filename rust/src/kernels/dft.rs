@@ -34,35 +34,91 @@ pub fn fourier_matrix(n: usize) -> (Vec<f64>, Vec<f64>) {
     (re, im)
 }
 
+/// The 16-point Fourier matrix split into `f32` real/imaginary parts
+/// (`F[j][k] = exp(-2πi·jk/16)`, row-major) with **exact sqrt-derived
+/// twiddles**: every entry is built from `sqrt(2)`, `sqrt(2±sqrt(2))/2`
+/// and negations — operations IEEE 754 specifies as correctly rounded —
+/// so any language computing the same formula produces bit-identical
+/// values. This is the table the python AOT generator
+/// (`python/compile/model.py`) embeds in the `dft_b32` fixture, which is
+/// why the serving plan's pinned panels match the fixture constants bit
+/// for bit with no libm `cos`/`sin` in the loop.
+pub fn dft16_twiddles_f32() -> (Vec<f32>, Vec<f32>) {
+    let s2 = 2f64.sqrt();
+    let c1 = (2.0 + s2).sqrt() / 2.0; // cos(π/8)
+    let c2 = s2 / 2.0; // cos(π/4)
+    let c3 = (2.0 - s2).sqrt() / 2.0; // cos(3π/8)
+    let cos = [1.0, c1, c2, c3, 0.0, -c3, -c2, -c1, -1.0, -c1, -c2, -c3, 0.0, c3, c2, c1];
+    let sin = [0.0, c3, c2, c1, 1.0, c1, c2, c3, 0.0, -c3, -c2, -c1, -1.0, -c1, -c2, -c3];
+    let mut fr = Vec::with_capacity(256);
+    let mut fi = Vec::with_capacity(256);
+    for j in 0..16 {
+        for k in 0..16 {
+            let t = (j * k) % 16;
+            fr.push(cos[t] as f32);
+            fi.push((-sin[t]) as f32);
+        }
+    }
+    (fr, fi)
+}
+
 /// Batched complex DFT over the simulated MMA datapath.
 ///
 /// `xr`/`xi` hold `batch` signals of length `n` **column-wise**: sample
 /// `k` of signal `b` at `x[k*batch + b]` (so the GEMM is `F(n×n) ·
-/// X(n×batch)`). `n` must be a multiple of 8 and `batch` a multiple of 8
-/// (the Figure 6 kernel tile); returns `(yr, yi, stats)`.
+/// X(n×batch)`). Sizes off the Figure 6 kernel tile grid (multiples
+/// of 8) are handled by zero-padding the GEMM panels — padded rows and
+/// columns contribute only zero products, so the valid region of the
+/// result is exactly the unpadded computation. Returns
+/// `(yr, yi, stats)`.
 pub fn dft_mma(
     xr: &[f64],
     xi: &[f64],
     n: usize,
     batch: usize,
 ) -> Result<(Vec<f64>, Vec<f64>, ExecStats), ExecError> {
-    assert!(n % 8 == 0 && batch % 8 == 0, "tile-multiple sizes (pad otherwise)");
+    assert!(n > 0 && batch > 0, "empty DFT");
     assert_eq!(xr.len(), n * batch);
     assert_eq!(xi.len(), n * batch);
+    let np = n.div_ceil(8) * 8;
+    let bp = batch.div_ceil(8) * 8;
     let (fr, fi) = fourier_matrix(n);
+    // zero-pad each row-major operand onto the tile grid (no-op copies
+    // when already aligned)
+    let pad = |src: &[f64], rows: usize, cols: usize, rp: usize, cp: usize| -> Vec<f64> {
+        let mut p = vec![0f64; rp * cp];
+        for r in 0..rows {
+            p[r * cp..r * cp + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+        }
+        p
+    };
+    let frp = pad(&fr, n, n, np, np);
+    let fip = pad(&fi, n, n, np, np);
+    let xrp = pad(xr, n, batch, np, bp);
+    let xip = pad(xi, n, batch, np, bp);
     // four real GEMMs on the MMA kernel
-    let (rr, s1) = dgemm_sim(&fr, xr, n, batch, n)?;
-    let (ii, s2) = dgemm_sim(&fi, xi, n, batch, n)?;
-    let (ri, s3) = dgemm_sim(&fr, xi, n, batch, n)?;
-    let (ir, s4) = dgemm_sim(&fi, xr, n, batch, n)?;
-    let mut yr = rr;
-    let mut yi = ri;
-    for (a, b) in yr.iter_mut().zip(&ii) {
+    let (rr, s1) = dgemm_sim(&frp, &xrp, np, bp, np)?;
+    let (ii, s2) = dgemm_sim(&fip, &xip, np, bp, np)?;
+    let (ri, s3) = dgemm_sim(&frp, &xip, np, bp, np)?;
+    let (ir, s4) = dgemm_sim(&fip, &xrp, np, bp, np)?;
+    let mut yrp = rr;
+    let mut yip = ri;
+    for (a, b) in yrp.iter_mut().zip(&ii) {
         *a -= b;
     }
-    for (a, b) in yi.iter_mut().zip(&ir) {
+    for (a, b) in yip.iter_mut().zip(&ir) {
         *a += b;
     }
+    let unpad = |p: Vec<f64>| -> Vec<f64> {
+        if np == n && bp == batch {
+            return p;
+        }
+        let mut o = vec![0f64; n * batch];
+        for j in 0..n {
+            o[j * batch..(j + 1) * batch].copy_from_slice(&p[j * bp..j * bp + batch]);
+        }
+        o
+    };
     let mut stats = s1;
     for s in [s2, s3, s4] {
         stats.instructions += s.instructions;
@@ -72,7 +128,7 @@ pub fn dft_mma(
         stats.stores += s.stores;
         stats.mem_bytes += s.mem_bytes;
     }
-    Ok((yr, yi, stats))
+    Ok((unpad(yrp), unpad(yip), stats))
 }
 
 /// Scalar reference DFT (O(N²), exact summation order independent).
@@ -164,6 +220,38 @@ mod tests {
         let (er, ei) = dft_reference(&xr, &xi, n, batch);
         assert_allclose(&yr, &er, 1e-10, 1e-10);
         assert_allclose(&yi, &ei, 1e-10, 1e-10);
+    }
+
+    #[test]
+    fn dft_off_tile_sizes_pad_transparently() {
+        // n and batch deliberately NOT multiples of 8: the zero-padded
+        // panels must reproduce the unpadded reference exactly
+        let mut rng = Rng::new(41);
+        for (n, batch) in [(12, 5), (7, 3), (16, 9), (13, 8)] {
+            let xr = rng.f64_vec(n * batch);
+            let xi = rng.f64_vec(n * batch);
+            let (yr, yi, _) = dft_mma(&xr, &xi, n, batch).unwrap();
+            let (er, ei) = dft_reference(&xr, &xi, n, batch);
+            assert_allclose(&yr, &er, 1e-10, 1e-10);
+            assert_allclose(&yi, &ei, 1e-10, 1e-10);
+        }
+    }
+
+    #[test]
+    fn exact_twiddles_match_libm_fourier_matrix() {
+        let (fr, fi) = dft16_twiddles_f32();
+        let (er, ei) = fourier_matrix(16);
+        for idx in 0..256 {
+            assert!((fr[idx] as f64 - er[idx]).abs() < 1e-7, "re[{idx}]");
+            assert!((fi[idx] as f64 - ei[idx]).abs() < 1e-7, "im[{idx}]");
+        }
+        // the sqrt table is symmetric like the matrix itself
+        for j in 0..16 {
+            for k in 0..16 {
+                assert_eq!(fr[j * 16 + k].to_bits(), fr[k * 16 + j].to_bits());
+                assert_eq!(fi[j * 16 + k].to_bits(), fi[k * 16 + j].to_bits());
+            }
+        }
     }
 
     #[test]

@@ -455,6 +455,99 @@ pub fn pack_b_panel_f32(
     }
 }
 
+/// A whole `k×n` B matrix pre-packed into the blocked GEMM's panel grid
+/// — every `(kc-block, nr-panel)` micropanel [`pack_b_panel_f32`] would
+/// produce at request time, materialized **once** and replayed as a
+/// straight copy by [`PanelB::Packed`](crate::blas::block_gemm::PanelB).
+/// Built for one specific variant geometry (`nr`, `kc`): the panel
+/// queries of a GEMM running under that geometry are exactly the grid
+/// cells (the column chunking guarantees `j0 % nr == 0` and `k0` a
+/// multiple of `kc` — see
+/// [`chunk_plan_nr`](crate::blas::block_gemm::chunk_plan_nr)).
+///
+/// Layout: depth blocks outermost (block `bk` covers rows `bk·kc ..`,
+/// only the last may be short), `n.div_ceil(nr)` panels inside, each
+/// panel `kcl·nr` elements in [`pack_b_panel_f32`]'s row-per-step order
+/// with the n-tail zero-filled.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+    nr: usize,
+    kc: usize,
+}
+
+impl PackedB {
+    /// Pack the full row-major `k×n` matrix `b` for a GEMM running with
+    /// microkernel width `nr` and depth blocking `kc`.
+    pub fn pack(b: &[f32], k: usize, n: usize, nr: usize, kc: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "B must be k*n");
+        assert!(nr > 0 && kc > 0);
+        let np = n.div_ceil(nr).max(1);
+        let mut data = vec![0f32; k * np * nr];
+        for bk in 0..k.div_ceil(kc) {
+            let k0 = bk * kc;
+            let kcl = kc.min(k - k0);
+            for jp in 0..np {
+                let j0 = jp * nr;
+                let cols = nr.min(n - j0);
+                let off = k0 * np * nr + jp * kcl * nr;
+                pack_b_panel_f32(b, n, k0, kcl, j0, cols, nr, &mut data[off..off + kcl * nr]);
+            }
+        }
+        PackedB { data, k, n, nr, kc }
+    }
+
+    /// The packed micropanel covering rows `k0 .. k0+kcl` × the `nr`
+    /// columns starting at `j0` — the slice a GEMM panel query copies.
+    /// `k0` must be a grid depth block start and `j0` panel-aligned.
+    pub fn panel(&self, k0: usize, kcl: usize, j0: usize) -> &[f32] {
+        assert!(
+            k0 % self.kc == 0 && kcl == self.kc.min(self.k - k0),
+            "depth query ({k0}, {kcl}) off the packed kc={} grid of k={}",
+            self.kc,
+            self.k
+        );
+        assert!(
+            j0 % self.nr == 0 && j0 < self.n.max(1),
+            "column query {j0} off the packed nr={} grid of n={}",
+            self.nr,
+            self.n
+        );
+        let np = self.n.div_ceil(self.nr).max(1);
+        let off = k0 * np * self.nr + (j0 / self.nr) * kcl * self.nr;
+        &self.data[off..off + kcl * self.nr]
+    }
+
+    /// The geometry this matrix was packed for: `(k, n, nr, kc)`.
+    pub fn geometry(&self) -> (usize, usize, usize, usize) {
+        (self.k, self.n, self.nr, self.kc)
+    }
+}
+
+/// The split re/im packed operand of a DFT-as-complex-matmul step: the
+/// real and imaginary Fourier matrices (`F = Fr + i·Fi`, each `n×n`) as
+/// two [`PackedB`] panel grids sharing one variant geometry. Packed once
+/// at plan-compile time from the lowered graph's constant literals and
+/// pinned alongside the plan — the four real GEMMs of
+/// `(xr + i·xi)·(Fr + i·Fi)` replay the panels with zero per-request
+/// packing work on the B side.
+#[derive(Clone, Debug)]
+pub struct DftPanels {
+    /// Packed `Fr` (the cosine matrix).
+    pub re: PackedB,
+    /// Packed `Fi` (the negated-sine matrix).
+    pub im: PackedB,
+}
+
+impl DftPanels {
+    /// Pack both `k×n` Fourier matrices for the step's variant geometry.
+    pub fn pack(fr: &[f32], fi: &[f32], k: usize, n: usize, nr: usize, kc: usize) -> DftPanels {
+        DftPanels { re: PackedB::pack(fr, k, n, nr, kc), im: PackedB::pack(fi, k, n, nr, kc) }
+    }
+}
+
 /// Unpack the DGEMM result written by the Figure 6 epilogue into a row-major
 /// `8×8` matrix.
 ///

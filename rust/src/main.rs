@@ -291,7 +291,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     use power_mma::runtime::{artifacts, det_input, Device, EngineBackend, HloPlanBackend, Runtime};
     let cmd = Command::new("power-mma serve", "serve AOT models; run a self-test load")
         .opt("artifacts", Some("artifacts"), "artifact directory")
-        .opt("requests", Some("1000"), "self-test request count")
+        .opt(
+            "requests",
+            Some("1000"),
+            "self-test request count (a classify/DFT mix: every 4th request \
+             exercises the second served family)",
+        )
         .opt("threads", Some("0"), "device GEMM worker budget (0 = auto)")
         .opt("shards", Some("1"), "coordinator engine shards (share one device pool)")
         .opt(
@@ -305,8 +310,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt(
             "buckets",
             Some("1,8,32"),
-            "batch-bucket ladder: each entry compiles an mlp_b{m} plan; the \
-             batcher executes every window in the smallest bucket >= its rows",
+            "batch-bucket ladder: each entry compiles an mlp_b{m} and a \
+             dft_b{m} plan; each family's batcher executes its window in the \
+             smallest bucket >= its rows",
         )
         .opt("window-us", Some("2000"), "batching window (deadline for partial batches)")
         .opt("queue-cap", Some("1024"), "bounded submission queue depth per shard")
@@ -388,6 +394,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
     let weights = MlpWeights::deterministic(&cfg);
     let features = cfg.features;
+    let dft_n = cfg.dft_n;
     // one device = one persistent GEMM pool + budget, shared by every
     // shard (shards add engines, not worker threads)
     let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
@@ -415,9 +422,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         } else {
             rt.load_mlp_buckets(&ladder, feat, hid, cls)?
         };
+        // the second served family: the same bucket ladder compiled as
+        // fused dft_gemm plans (f32 regardless of --dtype — the DFT
+        // family has no quantized contract)
+        let dft_names = rt.load_dft_buckets(&ladder)?;
         eprintln!(
-            "shard {shard}: loaded models {names:?} + buckets {bucket_names:?} on {} \
-             ({} pool workers, dtype {})",
+            "shard {shard}: loaded models {names:?} + buckets {bucket_names:?} + \
+             dft {dft_names:?} on {} ({} pool workers, dtype {})",
             rt.platform(),
             rt.device().threads(),
             if int8 { "int8" } else { "f32" }
@@ -427,8 +438,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n_req);
     for i in 0..n_req {
-        let f = det_input(features, i as u64 % 13);
-        rxs.push(coord.submit(Payload::Classify { features: f }).1);
+        // two-family self-test mix: every 4th request is a DFT transform,
+        // the rest classify — both batchers fill independently
+        let payload = if i % 4 == 3 {
+            Payload::Dft {
+                re: det_input(dft_n, i as u64 % 13),
+                im: det_input(dft_n, (i as u64 + 1) % 13),
+            }
+        } else {
+            Payload::Classify { features: det_input(features, i as u64 % 13) }
+        };
+        rxs.push(coord.submit(payload).1);
     }
     let mut ok = 0;
     for rx in rxs {
@@ -448,18 +468,20 @@ fn cmd_serve(args: &[String]) -> i32 {
         stats.latency.quantile_us(0.99),
         stats.mean_batch_occupancy()
     );
-    for b in &stats.buckets {
-        println!(
-            "  bucket {:3}: {:5} flushes ({} full, {} deadline, {} shutdown), \
-             {} rows, occupancy {:.2}",
-            b.bucket,
-            b.flushes(),
-            b.full.get(),
-            b.deadline.get(),
-            b.shutdown.get(),
-            b.rows.get(),
-            b.occupancy()
-        );
+    for (family, buckets) in [("mlp", &stats.buckets), ("dft", &stats.dft_buckets)] {
+        for b in buckets {
+            println!(
+                "  {family} bucket {:3}: {:5} flushes ({} full, {} deadline, {} shutdown), \
+                 {} rows, occupancy {:.2}",
+                b.bucket,
+                b.flushes(),
+                b.full.get(),
+                b.deadline.get(),
+                b.shutdown.get(),
+                b.rows.get(),
+                b.occupancy()
+            );
+        }
     }
     if ok == n_req {
         0
@@ -671,6 +693,188 @@ fn batching_identity_check_in(
         }))
 }
 
+/// Bitwise f32 oracle for the batched 16-point serving DFT under the
+/// interpreter accumulation contract: each of the four real dots
+/// accumulates its products in f64 in ascending k and narrows once to
+/// f32; the ± combine then happens in f32 — the exact arithmetic of both
+/// the fused `dft_gemm` step and the interpreter's lowered graph.
+/// Row-major request layout (`re[r*n + k]`); returns the stacked
+/// `[2*batch, n]` artifact layout (yr rows then yi rows).
+fn dft_oracle(re: &[f32], im: &[f32], batch: usize, n: usize) -> Vec<f32> {
+    assert_eq!(n, 16, "the serving DFT family is fixed at n=16");
+    let (fr, fi) = power_mma::kernels::dft::dft16_twiddles_f32();
+    let dot = |x: &[f32], f: &[f32], j: usize| {
+        let mut acc = 0f64;
+        for k in 0..n {
+            acc += x[k] as f64 * f[k * n + j] as f64;
+        }
+        acc as f32
+    };
+    let mut yr = Vec::with_capacity(2 * batch * n);
+    let mut yi = Vec::with_capacity(batch * n);
+    for r in 0..batch {
+        let (xr, xi) = (&re[r * n..(r + 1) * n], &im[r * n..(r + 1) * n]);
+        for j in 0..n {
+            let neg = -1f32 * dot(xi, &fi, j);
+            yr.push(dot(xr, &fr, j) + neg);
+            yi.push(dot(xr, &fi, j) + dot(xi, &fr, j));
+        }
+    }
+    yr.extend_from_slice(&yi);
+    yr
+}
+
+/// One two-family (classify + DFT) coordinator measurement for the
+/// `dft` bench block.
+struct DftMixBench {
+    req_per_s: f64,
+    p50_us: u64,
+    p99_us: u64,
+    classify_requests: usize,
+    dft_requests: usize,
+    /// Every DFT response matched its per-request oracle row bitwise.
+    rows_exact: bool,
+    /// JSON cells for the DFT family's per-bucket flush counters.
+    dft_bucket_cells: Vec<String>,
+    mlp_throttled: u64,
+    dft_throttled: u64,
+}
+
+/// Drive mixed two-family traffic (3 classify : 1 DFT, the `serve`
+/// self-test shape) through one coordinator over the plan backend, with
+/// live per-family admission policies so the per-family throttle
+/// counters exist, and a bitwise oracle for every DFT response — each
+/// response row depends only on its own request, so batching, padding,
+/// and cross-family interleaving must not change a single bit.
+fn dft_mix_bench(
+    n_req: usize,
+    routing: power_mma::coordinator::ShardRouting,
+) -> power_mma::error::Result<DftMixBench> {
+    let dir =
+        std::env::temp_dir().join(format!("mma-bench-dftmix-{}", std::process::id()));
+    let result = dft_mix_bench_in(n_req, routing, &dir);
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+fn dft_mix_bench_in(
+    n_req: usize,
+    routing: power_mma::coordinator::ShardRouting,
+    dir: &std::path::Path,
+) -> power_mma::error::Result<DftMixBench> {
+    use power_mma::coordinator::{
+        Coordinator, CoordinatorConfig, MlpWeights, ModelPolicy, Payload,
+    };
+    use power_mma::runtime::{artifacts, det_input, Runtime};
+    use std::time::Instant;
+
+    artifacts::ensure_artifacts(dir)?;
+    let base = CoordinatorConfig { routing, ..Default::default() };
+    // never-tripping caps: the point is that each family's throttle
+    // counter is tracked (and reads zero under a healthy mixed load)
+    let cfg = CoordinatorConfig {
+        policies: vec![
+            ModelPolicy::capped(&base.mlp_model(), usize::MAX),
+            ModelPolicy::capped(&base.dft_model(), usize::MAX),
+        ],
+        ..base
+    };
+    let ladder = cfg.ladder();
+    let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
+    let weights = MlpWeights::deterministic(&cfg);
+    let features = cfg.features;
+    let dft_n = cfg.dft_n;
+    let (mlp_family, dft_family) = (cfg.mlp_model(), cfg.dft_model());
+    let dir2 = dir.to_path_buf();
+    let coord = Coordinator::start(cfg, weights, move |_shard| {
+        let mut rt = Runtime::cpu(&dir2)?;
+        rt.load_all()?;
+        rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
+        rt.load_dft_buckets(&ladder)?;
+        Ok(rt)
+    });
+    // warm both families so the timed loop measures hot plans
+    for warm in 0..2u64 {
+        let payloads = [
+            Payload::Classify { features: det_input(features, warm) },
+            Payload::Dft { re: det_input(dft_n, warm), im: det_input(dft_n, warm + 1) },
+        ];
+        for p in payloads {
+            let (_, rx) = coord.submit(p);
+            rx.recv()
+                .map_err(|_| power_mma::err!("dft-mix warmup request dropped"))?
+                .result
+                .map_err(|e| power_mma::err!("dft-mix warmup failed: {e}"))?;
+        }
+    }
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        if i % 4 == 3 {
+            let re = det_input(dft_n, i as u64 % 13);
+            let im = det_input(dft_n, (i as u64 + 1) % 13);
+            let rx = coord.submit(Payload::Dft { re: re.clone(), im: im.clone() }).1;
+            pending.push((rx, Some((re, im))));
+        } else {
+            let f = det_input(features, i as u64 % 13);
+            pending.push((coord.submit(Payload::Classify { features: f }).1, None));
+        }
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(n_req);
+    let mut rows_exact = true;
+    let (mut classify_requests, mut dft_requests) = (0usize, 0usize);
+    for (rx, dft_in) in pending {
+        let Ok(r) = rx.recv() else { continue };
+        let Ok(out) = r.result else { continue };
+        lat_us.push(r.latency.as_micros() as u64);
+        match dft_in {
+            Some((re, im)) => {
+                dft_requests += 1;
+                let want = dft_oracle(&re, &im, 1, dft_n);
+                rows_exact &= out.len() == want.len()
+                    && out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+            }
+            None => classify_requests += 1,
+        }
+    }
+    let dt = t0.elapsed();
+    let mlp_throttled = coord.throttled_for(&mlp_family).unwrap_or(0);
+    let dft_throttled = coord.throttled_for(&dft_family).unwrap_or(0);
+    let stats = coord.shutdown();
+    if lat_us.len() != n_req {
+        power_mma::bail!("dft-mix completed {}/{n_req} requests", lat_us.len());
+    }
+    lat_us.sort_unstable();
+    let q = |f: f64| lat_us[((lat_us.len() - 1) as f64 * f) as usize];
+    let dft_bucket_cells = stats
+        .dft_buckets
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"bucket\": {}, \"flushes_full\": {}, \"flushes_deadline\": {}, \
+                 \"flushes_shutdown\": {}, \"rows\": {}, \"occupancy\": {:.3}}}",
+                s.bucket,
+                s.full.get(),
+                s.deadline.get(),
+                s.shutdown.get(),
+                s.rows.get(),
+                s.occupancy()
+            )
+        })
+        .collect();
+    Ok(DftMixBench {
+        req_per_s: n_req as f64 / dt.as_secs_f64(),
+        p50_us: q(0.5),
+        p99_us: q(0.99),
+        classify_requests,
+        dft_requests,
+        rows_exact,
+        dft_bucket_cells,
+        mlp_throttled,
+        dft_throttled,
+    })
+}
+
 /// Execute a compiled model on f32 inputs through the typed API (the
 /// bench-side bridge: wraps the inputs as [`TensorRef`]s with the meta
 /// shapes and collects the f32 output).
@@ -709,11 +913,14 @@ fn cmd_bench(args: &[String]) -> i32 {
     };
     use power_mma::coordinator::ShardRouting;
     use power_mma::isa::GerKind;
+    use power_mma::kernels::dft::dft_reference;
     use power_mma::kernels::gemm_rp::{gemm_i8_8x16, rp_gemm_program};
+    use power_mma::kernels::pack::Im2colSpec;
     use power_mma::runtime::hlo::bf16_round;
     use power_mma::runtime::{
-        artifacts, det_input, det_inputs, mlp_hlo_text, mlp_int8_calib, Device, EngineBackend,
-        HloInterpreterBackend, HloPlanBackend, ModelMeta, TuneDtype, TuneEpi, TuneTable,
+        artifacts, det_input, det_inputs, dft_hlo_text, mlp_hlo_text, mlp_int8_calib, Device,
+        EngineBackend, HloInterpreterBackend, HloPlanBackend, ModelMeta, TuneDtype, TuneEpi,
+        TunePanel, TuneTable,
     };
     use std::time::Duration;
 
@@ -1339,20 +1546,35 @@ fn cmd_bench(args: &[String]) -> i32 {
         let canon = power_mma::runtime::tune::heuristic_variant(key.dtype);
         let identical = match key.dtype {
             TuneDtype::F32 => {
+                // im2col classes replay through the same synthetic gather
+                // spec the tuner measures with (identity k-row gather over
+                // a k×n image) under the conv execution contract
+                // (f32 accumulate); matrix classes replay the dot contract
+                let spec = Im2colSpec {
+                    bases: (0..tk).map(|p| p * tn).collect(),
+                    img_w: tn,
+                    out_w: tn,
+                };
                 let mut run = |c: &mut [f32], s: &mut GemmScratch, v: GemmVariant| {
                     let epi = match key.epi {
                         TuneEpi::None => Epilogue::None,
                         TuneEpi::Bias => Epilogue::Bias(&bias),
                         TuneEpi::BiasRelu => Epilogue::BiasRelu(&bias),
                     };
+                    let (src, accum) = match key.panel {
+                        TunePanel::Matrix => (PanelB::Matrix(&tb), Accum::F64),
+                        TunePanel::Im2col => {
+                            (PanelB::Im2col { img: &tb, spec: &spec }, Accum::F32)
+                        }
+                    };
                     gemm_f32_tuned_into(
                         c,
                         &ta,
-                        PanelB::Matrix(&tb),
+                        src,
                         tm,
                         tn,
                         tk,
-                        Accum::F64,
+                        accum,
                         epi,
                         Par::Seq,
                         s,
@@ -1367,6 +1589,11 @@ fn cmd_bench(args: &[String]) -> i32 {
             }
             TuneDtype::Bf16 => {
                 let mut run = |c: &mut [f32], s: &mut Bf16Scratch, v: GemmVariant| {
+                    let epi = match key.epi {
+                        TuneEpi::None => Epilogue::None,
+                        TuneEpi::Bias => Epilogue::Bias(&bias),
+                        TuneEpi::BiasRelu => Epilogue::BiasRelu(&bias),
+                    };
                     gemm_bf16_tuned_into(
                         c,
                         Bf16Src::F32(&ta),
@@ -1375,6 +1602,7 @@ fn cmd_bench(args: &[String]) -> i32 {
                         tn,
                         tk,
                         Bf16Accum::Widened,
+                        epi,
                         Par::Seq,
                         s,
                         v,
@@ -1410,9 +1638,10 @@ fn cmd_bench(args: &[String]) -> i32 {
         tune_variants.insert(choice.variant.name());
         tune_measured += usize::from(choice.measured);
         println!(
-            "tune {:4} {tm:3}x{tn:3}x{tk:3} epi {:9} -> {:20} \
+            "tune {:4} {tm:3}x{tn:3}x{tk:3} {:6} epi {:9} -> {:20} \
              ({}, chosen {:.3} ms vs default {:.3} ms) numerics {}",
             key.dtype.as_str(),
+            key.panel.as_str(),
             key.epi.as_str(),
             choice.variant.name(),
             if choice.measured { "measured" } else { "heuristic" },
@@ -1422,9 +1651,11 @@ fn cmd_bench(args: &[String]) -> i32 {
         );
         tuning_rows.push(format!(
             "{{\"m\": {tm}, \"n\": {tn}, \"k\": {tk}, \"dtype\": \"{}\", \
-             \"epilogue\": \"{}\", \"variant\": \"{}\", \"chosen_ms\": {:.4}, \
+             \"panel\": \"{}\", \"epilogue\": \"{}\", \"variant\": \"{}\", \
+             \"chosen_ms\": {:.4}, \
              \"default_ms\": {:.4}, \"measured\": {}, \"identical\": {identical}}}",
             key.dtype.as_str(),
+            key.panel.as_str(),
             key.epi.as_str(),
             choice.variant.name(),
             choice.chosen_ms,
@@ -1581,6 +1812,184 @@ fn cmd_bench(args: &[String]) -> i32 {
         "batching identity: batched (ladder {ladder:?}) vs singleton responses {}",
         if batch_identical { "identical" } else { "DIFFER" }
     );
+
+    // -- 8b. DFT: the second served model family end to end --------------
+    // the missing-fixture failure mode degrades to a diagnostic + nonzero
+    // exit, never a panic (ci/check_bench.py then fails loudly on the
+    // absent `dft` block)
+    let Some(dft_art) = artifacts::EMBEDDED.iter().find(|a| a.name == "dft_b32") else {
+        eprintln!("dft_b32 fixture missing from the embedded artifact set");
+        return 1;
+    };
+    let dft_meta_parsed = match ModelMeta::parse(dft_art.meta) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("dft_b32: bad meta: {e}");
+            return 1;
+        }
+    };
+    // plan shape first: the lowered twiddle-multiply structure (four real
+    // dots plus the ± combines) must collapse to exactly one fused
+    // dft_gemm step over once-packed Fourier panels, no raw dots left
+    let dft_plan = match power_mma::runtime::hlo::HloModule::parse(dft_art.hlo_text)
+        .and_then(|m| power_mma::runtime::plan::Plan::compile(&m))
+    {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("dft_b32: plan compile failed: {e}");
+            return 1;
+        }
+    };
+    let dft_step_names = dft_plan.step_names();
+    let dft_gemm_steps = dft_step_names.iter().filter(|&&s| s == "dft_gemm").count();
+    let dft_plan_fused =
+        dft_gemm_steps == 1 && !dft_step_names.iter().any(|&s| s == "dot");
+    println!(
+        "dft_b32 plan: {} steps {dft_step_names:?} ({})",
+        dft_plan.num_steps(),
+        if dft_plan_fused { "four dots fused into one dft_gemm" } else { "NOT fused" }
+    );
+    if !dft_plan_fused {
+        eprintln!(
+            "dft_b32 must compile to a plan with exactly one dft_gemm step and no \
+             raw dot steps (got {dft_step_names:?})"
+        );
+        return 1;
+    }
+    // the rust bucket generator must reproduce the JAX-lowered fixture
+    // byte for byte — the cross-language contract `serve`'s ladder rests on
+    if dft_hlo_text(32) != dft_art.hlo_text {
+        eprintln!("dft_hlo_text(32) does not reproduce the dft_b32 AOT fixture");
+        return 1;
+    }
+    // numeric identity: fused plan vs interpreter vs the twiddle-table
+    // oracle, all bitwise; plus tolerance cross-checks against the
+    // fixture bytes (JAX's own f32 dot output) and the libm f64 scalar
+    // DFT
+    let dft_backends = (
+        HloInterpreterBackend.compile(
+            &shared_dev,
+            dft_art.name,
+            dft_art.hlo_text,
+            &dft_meta_parsed,
+        ),
+        HloPlanBackend::new().compile(
+            &shared_dev,
+            dft_art.name,
+            dft_art.hlo_text,
+            &dft_meta_parsed,
+        ),
+    );
+    let (dft_interp, dft_fused) = match dft_backends {
+        (Ok(i), Ok(p)) => (i, p),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("dft_b32: compile failed: {e}");
+            return 1;
+        }
+    };
+    let dft_inputs = det_inputs(&dft_meta_parsed);
+    let (dft_iout, dft_pout) = {
+        let mut ctx = shared_dev.ctx();
+        (
+            run_model(dft_interp.as_ref(), &mut ctx, &dft_meta_parsed, &dft_inputs),
+            run_model(dft_fused.as_ref(), &mut ctx, &dft_meta_parsed, &dft_inputs),
+        )
+    };
+    let dft_batch = dft_meta_parsed.input_shapes[0][0];
+    let dft_want = dft_oracle(&dft_inputs[0], &dft_inputs[1], dft_batch, 16);
+    let dft_fixture: Vec<f32> = dft_art
+        .expected
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let dft_identical = dft_pout.len() == dft_iout.len()
+        && dft_pout.len() == dft_want.len()
+        && dft_pout.iter().zip(&dft_iout).all(|(x, y)| x.to_bits() == y.to_bits())
+        && dft_pout.iter().zip(&dft_want).all(|(x, y)| x.to_bits() == y.to_bits());
+    let mut dft_fixture_err = 0f64;
+    for (x, y) in dft_pout.iter().zip(&dft_fixture) {
+        dft_fixture_err = dft_fixture_err.max((f64::from(*x) - f64::from(*y)).abs());
+    }
+    let dft_fixture_close = dft_pout.len() == dft_fixture.len() && dft_fixture_err < 1e-4;
+    // dft_reference is sample-major (one transform per column) in f64
+    // with libm twiddles — transpose in, compare within f32 rounding
+    let (ref_xr, ref_xi) = {
+        let n = 16usize;
+        let mut xr = vec![0f64; n * dft_batch];
+        let mut xi = vec![0f64; n * dft_batch];
+        for r in 0..dft_batch {
+            for k in 0..n {
+                xr[k * dft_batch + r] = dft_inputs[0][r * n + k] as f64;
+                xi[k * dft_batch + r] = dft_inputs[1][r * n + k] as f64;
+            }
+        }
+        (xr, xi)
+    };
+    let (ref_yr, ref_yi) = dft_reference(&ref_xr, &ref_xi, 16, dft_batch);
+    let mut dft_ref_err = 0f64;
+    for r in 0..dft_batch {
+        for j in 0..16 {
+            let er = (dft_pout[r * 16 + j] as f64 - ref_yr[j * dft_batch + r]).abs();
+            let ei = (dft_pout[(dft_batch + r) * 16 + j] as f64
+                - ref_yi[j * dft_batch + r])
+                .abs();
+            dft_ref_err = dft_ref_err.max(er).max(ei);
+        }
+    }
+    let dft_ref_close = dft_ref_err < 1e-4;
+    // served two-family traffic: mixed classify + DFT through one
+    // coordinator, every DFT response checked bitwise against its oracle
+    let n_mix = if quick { 400 } else { 4000 };
+    let dft_mix = match dft_mix_bench(n_mix, routing) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("dft two-family coordinator bench failed: {e}");
+            return 1;
+        }
+    };
+    let dft_numerics = dft_identical && dft_fixture_close && dft_ref_close && dft_mix.rows_exact;
+    println!(
+        "dft_b32 fused vs interpreter/oracle {} | vs JAX fixture max |err| \
+         {dft_fixture_err:.2e} | vs f64 reference max |err| {dft_ref_err:.2e} | \
+         sim MACs/cycle f32 {:.2}",
+        if dft_identical { "identical" } else { "DIFFER" },
+        fpc_f32_4x / 2.0
+    );
+    println!(
+        "dft mix ({} classify + {} dft): {:.0} req/s, p50 {} us, p99 {} us, rows {} | \
+         throttled mlp {} dft {}",
+        dft_mix.classify_requests,
+        dft_mix.dft_requests,
+        dft_mix.req_per_s,
+        dft_mix.p50_us,
+        dft_mix.p99_us,
+        if dft_mix.rows_exact { "identical" } else { "DIFFER" },
+        dft_mix.mlp_throttled,
+        dft_mix.dft_throttled
+    );
+    let dft_json = format!(
+        "{{\"plan_steps\": {}, \"dft_gemm_steps\": {dft_gemm_steps}, \
+         \"generated_matches_fixture\": true, \"identical\": {dft_identical}, \
+         \"max_abs_err_vs_fixture\": {dft_fixture_err:.3e}, \
+         \"max_abs_err_vs_f64_reference\": {dft_ref_err:.3e}, \
+         \"sim_macs_per_cycle_f32\": {:.3}, \
+         \"mix\": {{\"requests\": {n_mix}, \"classify_requests\": {}, \
+         \"dft_requests\": {}, \"req_per_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \
+         \"rows_identical\": {}, \"throttled\": {{\"mlp\": {}, \"dft\": {}}}, \
+         \"dft_buckets\": [{}]}}}}",
+        dft_plan.num_steps(),
+        fpc_f32_4x / 2.0,
+        dft_mix.classify_requests,
+        dft_mix.dft_requests,
+        dft_mix.req_per_s,
+        dft_mix.p50_us,
+        dft_mix.p99_us,
+        dft_mix.rows_exact,
+        dft_mix.mlp_throttled,
+        dft_mix.dft_throttled,
+        dft_mix.dft_bucket_cells.join(", ")
+    );
+
     let numerics_ok = all_identical
         && pool_gemm_identical
         && shard_identical
@@ -1589,7 +1998,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         && plan_pairs_identical
         && int8_identical
         && batch_identical
-        && tuning_identical;
+        && tuning_identical
+        && dft_numerics;
 
     // -- 9. machine-readable report --------------------------------------
     let json = format!(
@@ -1631,6 +2041,7 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"measured_classes\": {tune_measured}, \"distinct_variants\": {tune_distinct}, \
          \"identical\": {tuning_identical}, \
          \"table\": [\n    {}\n  ]}},\n  \
+         \"dft\": {dft_json},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
          \"pass\": {}, \"numerics_identical\": {numerics_ok}}}\n}}\n",
         gemm_rows.join(",\n    "),

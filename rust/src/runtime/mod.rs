@@ -46,7 +46,7 @@ pub mod tune;
 pub use device::{
     bf16_to_f32, f32_to_bf16, DTypeSlice, DTypeSliceMut, Device, ExecCtx, TensorMut, TensorRef,
 };
-pub use tune::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TuneTable};
+pub use tune::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TunePanel, TuneTable};
 
 use crate::blas::block_gemm::Par;
 use crate::error::{Context, Result};
@@ -307,13 +307,25 @@ impl CompiledModel for InterpretedModel {
         inputs: &[TensorRef<'_>],
         out: &mut TensorMut<'_>,
     ) -> Result<()> {
-        let result = {
-            let refs = ctx.f32_inputs(inputs);
-            let outputs = self.module.evaluate(&refs)?;
-            // aot.py lowers with return_tuple=True -> 1-tuple
-            outputs.into_iter().next().ok_or_else(|| err!("model produced no output"))?
-        };
-        out.store(&result.data)
+        let refs = ctx.f32_inputs(inputs);
+        let mut outputs = self.module.evaluate(&refs)?;
+        if outputs.is_empty() {
+            return Err(err!("model produced no output"));
+        }
+        // aot.py lowers with return_tuple=True; a 1-tuple stores
+        // directly, wider tuples (the DFT family's (re, im) pair)
+        // concatenate in root order — meta.output_shape declares the
+        // stacked dims, e.g. [2b, n] for two [b, n] roots
+        if outputs.len() == 1 {
+            let result = outputs.pop().unwrap();
+            out.store(&result.data)
+        } else {
+            let mut data = Vec::with_capacity(outputs.iter().map(|t| t.data.len()).sum());
+            for t in &outputs {
+                data.extend_from_slice(&t.data);
+            }
+            out.store(&data)
+        }
     }
 }
 
@@ -444,9 +456,20 @@ impl CompiledModel for PlanModel {
         // output tensor is materialized on the serving hot path
         self.plan.run_steps_typed(&mut bufs, &typed, par)?;
         let roots = self.plan.root_slices(&bufs);
-        let (data, _dims) =
-            *roots.first().ok_or_else(|| err!("model produced no output"))?;
-        out.store(data)
+        match roots.as_slice() {
+            [] => Err(err!("model produced no output")),
+            [(data, _dims)] => out.store(data),
+            // multi-root plans (the DFT family's (re, im) pair) stage a
+            // concatenation in root order; meta.output_shape declares
+            // the stacked dims, e.g. [2b, n] for two [b, n] roots
+            many => {
+                let mut data = Vec::with_capacity(many.iter().map(|(s, _)| s.len()).sum());
+                for (s, _) in many {
+                    data.extend_from_slice(s);
+                }
+                out.store(&data)
+            }
+        }
     }
 }
 
@@ -686,6 +709,30 @@ impl Runtime {
         Ok(names)
     }
 
+    /// Compile the DFT serving model at every batch size in `buckets`
+    /// (`dft_b{b}`), synthesizing each bucket's HLO with
+    /// [`dft_hlo_text`] — the same lowering as the `dft_b32` AOT
+    /// fixture, so every bucket fuses to the identical single
+    /// `dft_gemm` step over the once-packed twiddle panels with its own
+    /// arena sized for its `m`. Buckets already loaded (the b32 fixture
+    /// via [`Runtime::load_all`]) are kept as-is. Returns the bucket
+    /// model names. Zero-sized buckets are skipped.
+    pub fn load_dft_buckets(&mut self, buckets: &[usize]) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for &b in buckets {
+            if b == 0 {
+                continue;
+            }
+            let meta = dft_meta(b);
+            let name = meta.name.clone();
+            let text = dft_hlo_text(b);
+            self.load_from_text(meta, &text)
+                .map_err(|e| e.context(format!("compiling DFT batch bucket {name}")))?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
     /// Read the python-side expected output for the deterministic inputs.
     pub fn expected(&self, name: &str) -> Result<Vec<f32>> {
         let path = self.dir.join(format!("{name}.expected.bin"));
@@ -767,6 +814,85 @@ pub fn mlp_meta(batch: usize, features: usize, hidden: usize, classes: usize) ->
             vec![classes],
         ],
         output_shape: vec![batch, classes],
+        calib: None,
+    }
+}
+
+/// The serving DFT's HLO text at an arbitrary batch size — the exact
+/// lowering of the `dft_b32` AOT fixture (`jit_dft16_serving`) with
+/// `m = batch` substituted. The graph is the real-signal batched DFT as
+/// a complex matmul over baked twiddle constants:
+/// `yr = xr·Fr − xi·Fi`, `yi = xr·Fi + xi·Fr`, where the subtraction
+/// lowers the XLA way (`multiply(dot, broadcast(-1))` then `add` — a
+/// shape [`plan::Plan`]'s DFT matcher recognizes in either operand
+/// order). Instruction order and numbering follow the real XLA printer
+/// output (each twiddle constant is emitted right after the parameter
+/// feeding its first dot), and twiddle literals are formatted `%.9g`
+/// style — nine significant digits, trailing zeros trimmed, integers
+/// bare — from the exact sqrt-derived f32 table
+/// ([`crate::kernels::dft::dft16_twiddles_f32`]); nine digits uniquely
+/// round-trip an f32, so the parsed constants recover the exact bits.
+/// The result is byte-identical to the python AOT emitter's text at
+/// every batch size, and every bucket gets the identical single
+/// `dft_gemm` plan shape.
+pub fn dft_hlo_text(batch: usize) -> String {
+    let n = 16usize;
+    let (fr, fi) = crate::kernels::dft::dft16_twiddles_f32();
+    // `%.9g` for the twiddle value domain: 0 / -0 / ±1 print bare, and
+    // every other magnitude lies in [0.1, 1) where nine fraction digits
+    // are nine significant digits.
+    let g9 = |v: f32| -> String {
+        if v == 0.0 {
+            return if v.is_sign_negative() { "-0".into() } else { "0".into() };
+        }
+        if v == v.trunc() {
+            return format!("{}", v as i64);
+        }
+        debug_assert!((0.1..1.0).contains(&v.abs()), "unexpected twiddle magnitude {v}");
+        format!("{v:.9}").trim_end_matches('0').trim_end_matches('.').to_string()
+    };
+    let lit = |vals: &[f32]| {
+        let rows: Vec<String> = (0..n)
+            .map(|j| {
+                let cells: Vec<String> = vals[j * n..(j + 1) * n].iter().map(|&v| g9(v)).collect();
+                format!("{{ {} }}", cells.join(", "))
+            })
+            .collect();
+        format!("{{ {} }}", rows.join(", "))
+    };
+    let (b, fr_lit, fi_lit) = (batch, lit(&fr), lit(&fi));
+    format!(
+        "HloModule jit_dft{n}_serving, entry_computation_layout={{(f32[{b},{n}]{{1,0}}, f32[{b},{n}]{{1,0}})->(f32[{b},{n}]{{1,0}}, f32[{b},{n}]{{1,0}})}}\n\
+         \n\
+         ENTRY main.15 {{\n\
+         \x20 Arg_0.1 = f32[{b},{n}]{{1,0}} parameter(0)\n\
+         \x20 constant.5 = f32[{n},{n}]{{1,0}} constant({fr_lit})\n\
+         \x20 dot.7 = f32[{b},{n}]{{1,0}} dot(Arg_0.1, constant.5), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 Arg_1.2 = f32[{b},{n}]{{1,0}} parameter(1)\n\
+         \x20 constant.6 = f32[{n},{n}]{{1,0}} constant({fi_lit})\n\
+         \x20 dot.8 = f32[{b},{n}]{{1,0}} dot(Arg_1.2, constant.6), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 constant.3 = f32[] constant(-1)\n\
+         \x20 broadcast.4 = f32[{b},{n}]{{1,0}} broadcast(constant.3), dimensions={{}}\n\
+         \x20 multiply.9 = f32[{b},{n}]{{1,0}} multiply(dot.8, broadcast.4)\n\
+         \x20 add.10 = f32[{b},{n}]{{1,0}} add(dot.7, multiply.9)\n\
+         \x20 dot.11 = f32[{b},{n}]{{1,0}} dot(Arg_0.1, constant.6), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 dot.12 = f32[{b},{n}]{{1,0}} dot(Arg_1.2, constant.5), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 add.13 = f32[{b},{n}]{{1,0}} add(dot.11, dot.12)\n\
+         \x20 ROOT tuple.14 = (f32[{b},{n}]{{1,0}}, f32[{b},{n}]{{1,0}}) tuple(add.10, add.13)\n\
+         }}\n\
+         \n"
+    )
+}
+
+/// The meta line matching [`dft_hlo_text`]:
+/// `dft_b{b};{b}x16,{b}x16;{2b}x16` — two inputs (the real and
+/// imaginary signal rows), one stacked output (`yr` rows then `yi`
+/// rows; per-request row `r` scatters from output rows `r` and `b+r`).
+pub fn dft_meta(batch: usize) -> ModelMeta {
+    ModelMeta {
+        name: format!("dft_b{batch}"),
+        input_shapes: vec![vec![batch, 16], vec![batch, 16]],
+        output_shape: vec![2 * batch, 16],
         calib: None,
     }
 }
@@ -1031,6 +1157,84 @@ mod tests {
             plan_of(fixture).step_names(),
             "bucket plans must fuse identically to the fixture plan"
         );
+    }
+
+    #[test]
+    fn generated_dft_hlo_reproduces_the_aot_fixture() {
+        // the DFT bucket generator at b=32 must emit the fixture's
+        // lowering byte for byte — the twiddle literals come from the
+        // exact sqrt-derived table on both sides, so even the constant
+        // text is identical — and fuse to the same single-dft_gemm plan
+        let fixture = artifacts::EMBEDDED
+            .iter()
+            .find(|a| a.name == "dft_b32")
+            .expect("embedded dft_b32")
+            .hlo_text;
+        let generated = dft_hlo_text(32);
+        assert_eq!(generated, fixture, "DFT generator drifted from AOT fixture");
+        let plan_of = |text: &str| {
+            let m = hlo::HloModule::parse(text).unwrap();
+            plan::Plan::compile(&m).unwrap()
+        };
+        let plan = plan_of(&generated);
+        assert_eq!(plan.step_names(), vec!["param", "param", "dft_gemm"]);
+        assert_eq!(plan.step_names(), plan_of(fixture).step_names());
+    }
+
+    #[test]
+    fn dft_bucket_ladder_rows_match_b32_bitwise() {
+        // DFT output rows depend only on their own input row, so a
+        // window of r requests served in bucket b must reproduce, row
+        // for row (both the yr half and the yi half), the bits the full
+        // b32 batch produces — the second family's scatter-back
+        // invariant
+        let dir = std::env::temp_dir().join(format!("mma-rt-dftlad-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        artifacts::write_artifacts(&dir).unwrap();
+        let mut rt = Runtime::cpu(&dir).unwrap();
+        rt.load_all().unwrap();
+        let names = rt.load_dft_buckets(&[1, 8, 32]).unwrap();
+        assert_eq!(names, vec!["dft_b1", "dft_b8", "dft_b32"]);
+        // idempotent by name: the b32 fixture stays loaded
+        assert_eq!(rt.meta("dft_b32").unwrap().output_shape, vec![64, 16]);
+        let n = 16usize;
+        let xr = det_input(32 * n, 1);
+        let xi = det_input(32 * n, 2);
+        let full = rt.execute("dft_b32", &[&xr, &xi]).unwrap();
+        // the fixture's expected.bin is JAX's own output (XLA CPU f32
+        // dot), so like the other dot-family fixtures it is a
+        // tolerance check — the bitwise contracts are plan ==
+        // interpreter == f64-accumulation oracle, pinned elsewhere
+        let expect = rt.expected("dft_b32").unwrap();
+        assert_eq!(full.len(), expect.len());
+        for (i, (&y, &e)) in full.iter().zip(&expect).enumerate() {
+            assert!(
+                (y - e).abs() <= 1e-5 + 1e-5 * e.abs(),
+                "fused plan vs JAX expected.bin at {i}: {y} vs {e}"
+            );
+        }
+        for (bucket, rows) in [(1usize, 1usize), (8, 3), (8, 8)] {
+            let mut xrb = vec![0f32; bucket * n];
+            let mut xib = vec![0f32; bucket * n];
+            xrb[..rows * n].copy_from_slice(&xr[..rows * n]);
+            xib[..rows * n].copy_from_slice(&xi[..rows * n]);
+            let out = rt.execute(&format!("dft_b{bucket}"), &[&xrb, &xib]).unwrap();
+            for r in 0..rows {
+                for j in 0..n {
+                    assert_eq!(
+                        out[r * n + j].to_bits(),
+                        full[r * n + j].to_bits(),
+                        "bucket {bucket}, yr row {r}, bin {j} differs from b32"
+                    );
+                    assert_eq!(
+                        out[(bucket + r) * n + j].to_bits(),
+                        full[(32 + r) * n + j].to_bits(),
+                        "bucket {bucket}, yi row {r}, bin {j} differs from b32"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

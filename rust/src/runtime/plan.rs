@@ -97,7 +97,7 @@
 //! ```
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
-use super::tune::{heuristic_variant, TuneDtype, TuneEpi, TuneKey, TuneTable};
+use super::tune::{heuristic_variant, TuneDtype, TuneEpi, TuneKey, TunePanel, TuneTable};
 use super::Int8Calib;
 use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
 use crate::blas::i8_gemm::{gemm_i8_dequant_tuned_into, I8Epilogue, I8Scratch, QuantParams};
@@ -107,7 +107,7 @@ use crate::blas::block_gemm::{
 };
 use crate::error::Result;
 use crate::isa::types::bf16_to_f32;
-use crate::kernels::pack::Im2colSpec;
+use crate::kernels::pack::{DftPanels, Im2colSpec};
 use crate::{bail, err};
 
 /// Elementwise operator of a [`Plan`] step.
@@ -162,9 +162,10 @@ fn tuned_variant(
     k: usize,
     dtype: TuneDtype,
     epi: TuneEpi,
+    panel: TunePanel,
 ) -> GemmVariant {
     match tune {
-        Some(t) => t.choose(TuneKey { m, n, k, dtype, epi }).variant,
+        Some(t) => t.choose(TuneKey { m, n, k, dtype, epi, panel }).variant,
         None => heuristic_variant(dtype),
     }
 }
@@ -220,8 +221,41 @@ enum Step {
     /// interpreter executing the three instructions separately. When an
     /// operand slot holds a raw-bf16 request input
     /// ([`PlanInput::Bf16`]), the bits feed the packers directly (no
-    /// widening staging at all).
-    DotBf16 { a: usize, b: usize, out: usize, m: usize, n: usize, k: usize, v: GemmVariant },
+    /// widening staging at all). Trailing bias/relu chains fuse into the
+    /// writeback epilogue exactly like the f32 `Dot` step.
+    DotBf16 {
+        a: usize,
+        b: usize,
+        out: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        epi: StepEpi,
+        v: GemmVariant,
+    },
+    /// A batched real-signal DFT — the lowered complex matmul
+    /// `(xr + i·xi)·(Fr + i·Fi)` — collapsed from its four real dots
+    /// plus `±` combines into **one step over pre-packed Fourier
+    /// panels** ([`DftPanels`], packed once at compile time from the
+    /// graph's constant twiddle matrices and pinned beside the plan).
+    /// Executes four blocked GEMMs reusing the packed re/im B panels
+    /// (zero per-request B packing) with the `±` combination fused into
+    /// the last two writebacks
+    /// ([`Epilogue::DftCombine`](crate::blas::block_gemm::Epilogue)) —
+    /// bit-identical to the interpreter running the seven instructions
+    /// separately. Writes `yr` to `out_re` and `yi` to `out_im`.
+    DftGemm {
+        xr: usize,
+        xi: usize,
+        out_re: usize,
+        out_im: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        /// Index into [`Plan::dft_panels`].
+        panels: usize,
+        v: GemmVariant,
+    },
     /// A calibrated dot (plus any fused bias/relu tail) lowered onto the
     /// **int8 rank-4 quantized engine** ([`crate::blas::i8_gemm`]): the
     /// whole quantize→dot→dequantize pipeline runs inside one step —
@@ -299,6 +333,13 @@ pub struct Plan {
     /// Accumulation contract every `DotBf16` step executes under (from
     /// [`PlanOptions`]).
     bf16_accum: Bf16Accum,
+    /// Pre-packed Fourier-matrix panel pairs, one per `DftGemm` step
+    /// (indexed by the step's `panels` field): packed once at compile
+    /// time from the graph's constant twiddle matrices for the step's
+    /// exact variant geometry, pinned here for the plan's lifetime — the
+    /// constants themselves are dead after fusion and never enter the
+    /// arena.
+    dft_panels: Vec<DftPanels>,
 }
 
 /// Compile-time options for [`Plan::compile_with_options`].
@@ -344,6 +385,10 @@ pub struct ExecBuffers {
     /// raw-bf16 request input that skipped its widening copy (consumed
     /// directly by `DotBf16` packers), 0 otherwise. Reset each request.
     raw_param: Vec<u32>,
+    /// Staging for the two cross-products of a `DftGemm` step
+    /// (`xi·Fi` then `xi·Fr`, `2·m·n` elements) — combined into the
+    /// output slots by the fused `±` writeback of the last two GEMMs.
+    dft_tmp: Vec<f32>,
 }
 
 /// One typed request input at the plan boundary: the dtype-aware
@@ -424,9 +469,23 @@ enum Fuse {
     /// `dot` + broadcast-bias `add` (+ `maximum(0)`): one epilogued dot
     /// over inputs `(a, b, bias)`.
     DotEpi { a: usize, b: usize, bias: usize, relu: bool, m: usize, n: usize, k: usize },
-    /// A dot over two `convert(bf16) → convert(f32)` chains: one packed
-    /// bf16 GEMM over inputs `(a, b)`, the rounding fused into packing.
-    DotBf16 { a: usize, b: usize, m: usize, n: usize, k: usize },
+    /// A dot over two `convert(bf16) → convert(f32)` chains (plus any
+    /// broadcast-bias `add` / `maximum(0)` tail): one packed bf16 GEMM
+    /// over inputs `(a, b[, bias])`, the rounding fused into packing and
+    /// the tail into the writeback epilogue.
+    DotBf16 { a: usize, b: usize, bias: Option<usize>, relu: bool, m: usize, n: usize, k: usize },
+    /// The lowered complex matmul of a batched DFT: the four real dots
+    /// of `(xr + i·xi)·(Fr + i·Fi)` plus the `±` combines collapsed to
+    /// one split re/im packed-panel step over inputs `(xr, xi)`. `fr` /
+    /// `fi` are the constant twiddle-matrix instructions (packed at
+    /// compile time, dead thereafter); `im` is the companion
+    /// imaginary-part `add` (the second root), marked [`Fuse::DftIm`]
+    /// by `rewrite`.
+    Dft { xr: usize, xi: usize, fr: usize, fi: usize, im: usize, m: usize, n: usize, k: usize },
+    /// The imaginary-part root of a matched [`Fuse::Dft`]: its value is
+    /// written by the real root's `DftGemm` step into a slot that arm
+    /// pre-assigns, so this instruction compiles to no step at all.
+    DftIm,
     /// A calibrated dot (with any bias/relu tail) routed to the int8
     /// rank-4 quantized engine: quantize→dot→dequantize in one step.
     DotI8 {
@@ -447,14 +506,15 @@ impl Fuse {
         match self {
             Fuse::Conv { w, img, .. } => vec![*w, *img],
             Fuse::DotEpi { a, b, bias, .. } => vec![*a, *b, *bias],
-            Fuse::DotBf16 { a, b, .. } => vec![*a, *b],
-            Fuse::DotI8 { a, b, bias, .. } => {
+            Fuse::DotBf16 { a, b, bias, .. } | Fuse::DotI8 { a, b, bias, .. } => {
                 let mut v = vec![*a, *b];
                 if let Some(s) = bias {
                     v.push(*s);
                 }
                 v
             }
+            Fuse::Dft { xr, xi, .. } => vec![*xr, *xi],
+            Fuse::DftIm => vec![],
         }
     }
 }
@@ -874,7 +934,197 @@ fn match_dot_bf16(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(F
     }
     let mut consumed = ca;
     consumed.extend(cb);
-    Some((Fuse::DotBf16 { a, b, m: ad[0], n: bd[1], k: ad[1] }, consumed))
+    Some((
+        Fuse::DotBf16 { a, b, bias: None, relu: false, m: ad[0], n: bd[1], k: ad[1] },
+        consumed,
+    ))
+}
+
+/// `add(bf16-round-trip dot, broadcast(bias[n], dims={1}))` in either
+/// operand order — the bf16 twin of [`match_bias_add`]. The dot must be
+/// single-use (it is consumed along with its four interior converts).
+#[allow(clippy::type_complexity)]
+fn match_bf16_bias_add(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    i: usize,
+) -> Option<(usize, usize, usize, usize, usize, usize, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode != "add" || ins.dims.len() != 2 {
+        return None;
+    }
+    let (p0, p1) = (*ins.operands.first()?, *ins.operands.get(1)?);
+    for (p, q) in [(p0, p1), (p1, p0)] {
+        if users[p].len() != 1 {
+            continue;
+        }
+        let Some((Fuse::DotBf16 { a, b, m, n, k, .. }, dot_consumed)) =
+            match_dot_bf16(instrs, users, p)
+        else {
+            continue;
+        };
+        if ins.dims != [m, n] {
+            continue;
+        }
+        let bb = &instrs[q];
+        if bb.opcode != "broadcast" || users[q].len() != 1 || bb.dims != ins.dims {
+            continue;
+        }
+        if bb.dims_attr.as_deref() != Some(&[1usize][..]) {
+            continue;
+        }
+        let Some(&src) = bb.operands.first() else {
+            continue;
+        };
+        if instrs[src].dims != [n] {
+            continue;
+        }
+        let Some((bias, chain)) = peel(instrs, users, src) else {
+            continue;
+        };
+        let mut consumed = vec![p, q];
+        consumed.extend(dot_consumed);
+        consumed.extend(chain);
+        return Some((a, b, m, n, k, bias, consumed));
+    }
+    None
+}
+
+/// Match a bias/relu tail behind a **bf16 round-trip dot** rooted at
+/// `i` — the composition of [`match_dot_bf16`] and [`match_dot_epi`]:
+/// `add(dot_bf16, bias)` or `maximum(add(dot_bf16, bias), broadcast(0))`
+/// collapses to one `DotBf16` step with the tail fused into the packed
+/// engine's writeback epilogue. Must run *before* [`match_dot_epi`] in
+/// the matcher chain: the plain matcher would accept the same `add`
+/// (the round-trip dot's operands are rank-2 f32 converts) and strand
+/// the converts as materialized steps.
+fn match_dot_bf16_epi(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    i: usize,
+) -> Option<(Fuse, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode == "maximum" && ins.dims.len() == 2 {
+        let (x, z) = (*ins.operands.first()?, *ins.operands.get(1)?);
+        if instrs[z].dims != ins.dims || !is_zero_broadcast(instrs, users, z) {
+            return None;
+        }
+        if instrs[x].opcode != "add" || users[x].len() != 1 || instrs[x].dims != ins.dims {
+            return None;
+        }
+        let (a, b, m, n, k, bias, mut consumed) = match_bf16_bias_add(instrs, users, x)?;
+        consumed.push(x);
+        consumed.push(z);
+        return Some((Fuse::DotBf16 { a, b, bias: Some(bias), relu: true, m, n, k }, consumed));
+    }
+    if ins.opcode == "add" {
+        let (a, b, m, n, k, bias, consumed) = match_bf16_bias_add(instrs, users, i)?;
+        return Some((Fuse::DotBf16 { a, b, bias: Some(bias), relu: false, m, n, k }, consumed));
+    }
+    None
+}
+
+/// `broadcast(constant(-1), dimensions={})` of shape `dims` — the
+/// negation the XLA `subtract` lowering multiplies by.
+fn is_neg_one_broadcast(
+    instrs: &[Instr],
+    users: &[Vec<usize>],
+    idx: usize,
+    dims: &[usize],
+) -> bool {
+    let ins = &instrs[idx];
+    ins.opcode == "broadcast"
+        && ins.dims == dims
+        && users[idx].len() == 1
+        && matches!(ins.dims_attr.as_deref(), Some(d) if d.is_empty())
+        && ins.operands.first().is_some_and(|&c| {
+            let cst = &instrs[c];
+            cst.opcode == "constant"
+                && cst.dims.is_empty()
+                && cst.const_vals.len() == 1
+                && cst.const_vals[0].to_bits() == (-1.0f32).to_bits()
+        })
+}
+
+/// Match the lowered batched-DFT structure rooted at the **real-part**
+/// `add` `i`:
+///
+/// ```text
+/// yr(i)  = add(dot(xr, Fr), multiply(dot(xi, Fi), broadcast(-1)))
+/// yi(im) = add(dot(xr, Fi), dot(xi, Fr))     // sought at some im > i
+/// ```
+///
+/// with `Fr`/`Fi` constant `k×n` matrices shared between the halves and
+/// all four dots the `{1}×{0}` rank-2 contraction over the same
+/// `(xr, xi)` pair. Both combines commute bitwise (IEEE `a − b ≡
+/// a + (−1·b)` and f32 `add` is commutative), so either operand order
+/// matches. Consumes the four dots, the multiply, and the `−1`
+/// broadcast; the twiddle constants and the scalar `−1` die by DCE, and
+/// the companion `yi` add is *not* consumed — `rewrite` marks it
+/// [`Fuse::DftIm`] so it keeps its (root) slot without a step.
+fn match_dft(instrs: &[Instr], users: &[Vec<usize>], i: usize) -> Option<(Fuse, Vec<usize>)> {
+    let ins = &instrs[i];
+    if ins.opcode != "add" || ins.dims.len() != 2 {
+        return None;
+    }
+    let (p0, p1) = (*ins.operands.first()?, *ins.operands.get(1)?);
+    for (dp, mp) in [(p0, p1), (p1, p0)] {
+        // the positive half: dot(xr, Fr)
+        let Some((xr, fr, m, n, k)) = match_fusable_dot(instrs, users, dp) else {
+            continue;
+        };
+        if ins.dims != [m, n] {
+            continue;
+        }
+        // the negated half: multiply(dot(xi, Fi), broadcast(-1)) —
+        // either operand order
+        let mul = &instrs[mp];
+        if mul.opcode != "multiply" || users[mp].len() != 1 || mul.dims != ins.dims {
+            continue;
+        }
+        let (q0, q1) = (*mul.operands.first()?, *mul.operands.get(1)?);
+        for (bc, dii) in [(q0, q1), (q1, q0)] {
+            if !is_neg_one_broadcast(instrs, users, bc, &ins.dims) {
+                continue;
+            }
+            let Some((xi, fi, m2, n2, k2)) = match_fusable_dot(instrs, users, dii) else {
+                continue;
+            };
+            if (m2, n2, k2) != (m, n, k) || xi == xr || fi == fr {
+                continue;
+            }
+            // the twiddles must be graph constants: they are packed into
+            // pinned panels at compile time and never enter the arena
+            let is_twiddle = |c: usize| {
+                instrs[c].opcode == "constant"
+                    && instrs[c].dtype == DType::F32
+                    && instrs[c].const_vals.len() == k * n
+            };
+            if !is_twiddle(fr) || !is_twiddle(fi) {
+                continue;
+            }
+            // the companion imaginary root: add(dot(xr, Fi), dot(xi, Fr))
+            // over the *same* four values, anywhere later in the program
+            for (im, cand) in instrs.iter().enumerate().skip(i + 1) {
+                if cand.opcode != "add" || cand.dims != ins.dims || cand.operands.len() != 2 {
+                    continue;
+                }
+                let (c0, c1) = (cand.operands[0], cand.operands[1]);
+                let matched = [(c0, c1), (c1, c0)].into_iter().any(|(u, v)| {
+                    matches!(match_fusable_dot(instrs, users, u),
+                             Some((x, f, mm, nn, kk)) if (x, f, mm, nn, kk) == (xr, fi, m, n, k))
+                        && matches!(match_fusable_dot(instrs, users, v),
+                             Some((x, f, mm, nn, kk)) if (x, f, mm, nn, kk) == (xi, fr, m, n, k))
+                });
+                if !matched {
+                    continue;
+                }
+                let consumed = vec![dp, mp, bc, dii, c0, c1];
+                return Some((Fuse::Dft { xr, xi, fr, fi, im, m, n, k }, consumed));
+            }
+        }
+    }
+    None
 }
 
 /// Both dot operands calibrated with the right `xvi8ger4` signedness
@@ -957,6 +1207,8 @@ fn rewrite(
             continue;
         }
         let m = match_dot_i8(instrs, &users, i, calib)
+            .or_else(|| match_dft(instrs, &users, i))
+            .or_else(|| match_dot_bf16_epi(instrs, &users, i))
             .or_else(|| match_dot_epi(instrs, &users, i))
             .or_else(|| match_conv(instrs, &users, i))
             .or_else(|| match_dot_bf16(instrs, &users, i));
@@ -974,6 +1226,15 @@ fn rewrite(
                     && !(instrs[c].dtype == DType::Bf16 && instrs[c].opcode == "convert"))
         }) {
             continue;
+        }
+        // a DFT's imaginary root must still be free to take the marker
+        // (the descending walk visits it before the real root, so a
+        // competing claim would already be recorded)
+        if let Fuse::Dft { im, .. } = f {
+            if consumed[im] || fused[im].is_some() {
+                continue;
+            }
+            fused[im] = Some(Fuse::DftIm);
         }
         for &c in &cons {
             consumed[c] = true;
@@ -1002,21 +1263,31 @@ fn param_pack_flags(
     let mut holder: Vec<Option<usize>> = vec![None; num_slots];
     for step in steps {
         // f32 reads demote; `DotBf16` operand reads are the one kind
-        // that keeps a parameter packable (its packers accept raw bits)
-        let (reads, out): (Vec<usize>, usize) = match step {
-            Step::Param { out, .. } => (vec![], *out),
-            Step::Copy { src, out, .. } | Step::Bf16 { src, out, .. } => (vec![*src], *out),
-            Step::Binary { a, b, out, .. } => (vec![*a, *b], *out),
+        // that keeps a parameter packable (its packers accept raw bits —
+        // though its fused *bias* is read in f32 at the writeback)
+        let (reads, outs): (Vec<usize>, Vec<usize>) = match step {
+            Step::Param { out, .. } => (vec![], vec![*out]),
+            Step::Copy { src, out, .. } | Step::Bf16 { src, out, .. } => {
+                (vec![*src], vec![*out])
+            }
+            Step::Binary { a, b, out, .. } => (vec![*a, *b], vec![*out]),
             Step::Dot { a, b, out, epi, .. } => {
                 let mut r = vec![*a, *b];
                 match epi {
                     StepEpi::Bias(s) | StepEpi::BiasRelu(s) => r.push(*s),
                     StepEpi::None => {}
                 }
-                (r, *out)
+                (r, vec![*out])
             }
-            Step::Im2colGemm { w, img, out, .. } => (vec![*w, *img], *out),
-            Step::DotBf16 { out, .. } => (vec![], *out),
+            Step::Im2colGemm { w, img, out, .. } => (vec![*w, *img], vec![*out]),
+            Step::DotBf16 { out, epi, .. } => {
+                let mut r = vec![];
+                match epi {
+                    StepEpi::Bias(s) | StepEpi::BiasRelu(s) => r.push(*s),
+                    StepEpi::None => {}
+                }
+                (r, vec![*out])
+            }
             Step::DotI8 { a, b, out, epi, .. } => {
                 // DotI8 packers quantize from f32 slots, so its reads
                 // demote like any other f32 read
@@ -1025,19 +1296,24 @@ fn param_pack_flags(
                     StepEpi::Bias(s) | StepEpi::BiasRelu(s) => r.push(*s),
                     StepEpi::None => {}
                 }
-                (r, *out)
+                (r, vec![*out])
             }
-            Step::Gather { src, out, .. } => (vec![*src], *out),
+            Step::DftGemm { xr, xi, out_re, out_im, .. } => {
+                (vec![*xr, *xi], vec![*out_re, *out_im])
+            }
+            Step::Gather { src, out, .. } => (vec![*src], vec![*out]),
         };
         for slot in reads {
             if let Some(p) = holder[slot] {
                 ok[p] = false;
             }
         }
-        holder[out] = match step {
-            Step::Param { index, .. } => Some(*index),
-            _ => None,
-        };
+        for out in outs {
+            holder[out] = match step {
+                Step::Param { index, .. } => Some(*index),
+                _ => None,
+            };
+        }
     }
     for (slot, _) in root {
         if let Some(p) = holder[*slot] {
@@ -1144,6 +1420,7 @@ impl Plan {
         let mut max_dot = (0usize, 0usize, 0usize);
         let mut max_bf16 = (0usize, 0usize, 0usize);
         let mut max_i8 = (0usize, 0usize, 0usize);
+        let mut dft_panels: Vec<DftPanels> = Vec::new();
 
         // Recycle the slots of values whose last consumer is step `i`
         // (its operands, or an output nobody consumes). Runs only *after*
@@ -1189,6 +1466,16 @@ impl Plan {
 
             // a fused root lowers to one GEMM step over the fusion inputs
             if let Some(f) = &fused[i] {
+                // the imaginary DFT root's value is written by its
+                // partner's DftGemm step into a slot that arm already
+                // assigned (along with the SlotAssign): no step here
+                if matches!(f, Fuse::DftIm) {
+                    if slot_of[i].is_none() {
+                        bail!("{}: DFT imaginary root has no pre-assigned slot", ins.name);
+                    }
+                    recycle(i, &eff[i], &last_use, &pinned, &pinned_slot, &mut slot_of, &mut free);
+                    continue;
+                }
                 for &inp in &eff[i] {
                     if slot_of[inp].is_none() {
                         bail!("{}: fused input has no value", ins.name);
@@ -1209,8 +1496,18 @@ impl Plan {
                 match f {
                     Fuse::Conv { w, img, m, n: nn, k, spec } => {
                         max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
-                        let v =
-                            tuned_variant(&opts.tune, *m, *nn, *k, TuneDtype::F32, TuneEpi::None);
+                        // conv classes tune through the im2col modality:
+                        // same shape as a plain dot, different panel
+                        // sourcing — measured separately (PR 8 follow-up)
+                        let v = tuned_variant(
+                            &opts.tune,
+                            *m,
+                            *nn,
+                            *k,
+                            TuneDtype::F32,
+                            TuneEpi::None,
+                            TunePanel::Im2col,
+                        );
                         steps.push(Step::Im2colGemm {
                             w: slot_of[*w].unwrap(),
                             img: slot_of[*img].unwrap(),
@@ -1237,6 +1534,7 @@ impl Plan {
                             *k,
                             TuneDtype::F32,
                             epi.tune_epi(),
+                            TunePanel::Matrix,
                         );
                         steps.push(Step::Dot {
                             a: slot_of[*a].unwrap(),
@@ -1249,10 +1547,22 @@ impl Plan {
                             v,
                         });
                     }
-                    Fuse::DotBf16 { a, b, m, n: nn, k } => {
+                    Fuse::DotBf16 { a, b, bias, relu, m, n: nn, k } => {
                         max_bf16 = (max_bf16.0.max(*m), max_bf16.1.max(*nn), max_bf16.2.max(*k));
-                        let v =
-                            tuned_variant(&opts.tune, *m, *nn, *k, TuneDtype::Bf16, TuneEpi::None);
+                        let epi = match (bias, relu) {
+                            (None, _) => StepEpi::None,
+                            (Some(s), false) => StepEpi::Bias(slot_of[*s].unwrap()),
+                            (Some(s), true) => StepEpi::BiasRelu(slot_of[*s].unwrap()),
+                        };
+                        let v = tuned_variant(
+                            &opts.tune,
+                            *m,
+                            *nn,
+                            *k,
+                            TuneDtype::Bf16,
+                            epi.tune_epi(),
+                            TunePanel::Matrix,
+                        );
                         steps.push(Step::DotBf16 {
                             a: slot_of[*a].unwrap(),
                             b: slot_of[*b].unwrap(),
@@ -1260,9 +1570,63 @@ impl Plan {
                             m: *m,
                             n: *nn,
                             k: *k,
+                            epi,
                             v,
                         });
                     }
+                    Fuse::Dft { xr, xi, fr, fi, im, m, n: nn, k } => {
+                        max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
+                        let v = tuned_variant(
+                            &opts.tune,
+                            *m,
+                            *nn,
+                            *k,
+                            TuneDtype::F32,
+                            TuneEpi::None,
+                            TunePanel::Matrix,
+                        );
+                        // the imaginary root's slot, assigned here so the
+                        // one DftGemm step can write both halves (its own
+                        // compile turn skips allocation — see DftIm above)
+                        let want_im: usize = instrs[*im].dims.iter().product();
+                        let out_im = alloc_slot(want_im, &mut slot_caps, &mut free);
+                        pinned_slot.resize(slot_caps.len(), false);
+                        slot_of[*im] = Some(out_im);
+                        assigns.push(SlotAssign {
+                            instr: *im,
+                            name: instrs[*im].name.clone(),
+                            slot: out_im,
+                            elems: want_im,
+                            def: i,
+                            last_use: last_use[*im],
+                            pinned: false,
+                        });
+                        // pack the constant twiddle matrices once, for
+                        // exactly this step's variant geometry; the
+                        // constants are dead after this and never get
+                        // arena slots
+                        let panels = dft_panels.len();
+                        dft_panels.push(DftPanels::pack(
+                            &instrs[*fr].const_vals,
+                            &instrs[*fi].const_vals,
+                            *k,
+                            *nn,
+                            v.nr,
+                            v.block.kc,
+                        ));
+                        steps.push(Step::DftGemm {
+                            xr: slot_of[*xr].unwrap(),
+                            xi: slot_of[*xi].unwrap(),
+                            out_re: out,
+                            out_im,
+                            m: *m,
+                            n: *nn,
+                            k: *k,
+                            panels,
+                            v,
+                        });
+                    }
+                    Fuse::DftIm => unreachable!("intercepted before the fused-root arm"),
                     Fuse::DotI8 { a, b, bias, relu, m, n: nn, k, q } => {
                         max_i8 = (max_i8.0.max(*m), max_i8.1.max(*nn), max_i8.2.max(*k));
                         let epi = match (bias, relu) {
@@ -1277,6 +1641,7 @@ impl Plan {
                             *k,
                             TuneDtype::I8,
                             epi.tune_epi(),
+                            TunePanel::Matrix,
                         );
                         steps.push(Step::DotI8 {
                             a: slot_of[*a].unwrap(),
@@ -1429,7 +1794,15 @@ impl Plan {
                         bail!("{}: dot result shape {:?} != [{m},{nn}]", ins.name, ins.dims);
                     }
                     max_dot = (max_dot.0.max(m), max_dot.1.max(nn), max_dot.2.max(k));
-                    let v = tuned_variant(&opts.tune, m, nn, k, TuneDtype::F32, TuneEpi::None);
+                    let v = tuned_variant(
+                        &opts.tune,
+                        m,
+                        nn,
+                        k,
+                        TuneDtype::F32,
+                        TuneEpi::None,
+                        TunePanel::Matrix,
+                    );
                     steps.push(Step::Dot {
                         a: slot_of[ins.operands[0]].unwrap(),
                         b: slot_of[ins.operands[1]].unwrap(),
@@ -1565,6 +1938,7 @@ impl Plan {
             max_i8,
             param_pack_bf16,
             bf16_accum: opts.bf16_accum,
+            dft_panels,
         })
     }
 
@@ -1584,8 +1958,9 @@ impl Plan {
     /// Step kinds in program order — the observable shape of the
     /// compiled plan, for tests and the bench smoke: `"param"`,
     /// `"copy"`, `"bf16"`, `"binary"`, `"dot"`, `"dot_bias"`,
-    /// `"dot_bias_relu"`, `"dot_bf16"`, `"dot_i8"`, `"dot_i8_bias"`,
-    /// `"dot_i8_bias_relu"`, `"im2col_gemm"`, `"gather"`.
+    /// `"dot_bias_relu"`, `"dot_bf16"`, `"dot_bf16_bias"`,
+    /// `"dot_bf16_bias_relu"`, `"dot_i8"`, `"dot_i8_bias"`,
+    /// `"dot_i8_bias_relu"`, `"im2col_gemm"`, `"dft_gemm"`, `"gather"`.
     pub fn step_names(&self) -> Vec<&'static str> {
         self.steps
             .iter()
@@ -1597,11 +1972,14 @@ impl Plan {
                 Step::Dot { epi: StepEpi::None, .. } => "dot",
                 Step::Dot { epi: StepEpi::Bias(_), .. } => "dot_bias",
                 Step::Dot { epi: StepEpi::BiasRelu(_), .. } => "dot_bias_relu",
-                Step::DotBf16 { .. } => "dot_bf16",
+                Step::DotBf16 { epi: StepEpi::None, .. } => "dot_bf16",
+                Step::DotBf16 { epi: StepEpi::Bias(_), .. } => "dot_bf16_bias",
+                Step::DotBf16 { epi: StepEpi::BiasRelu(_), .. } => "dot_bf16_bias_relu",
                 Step::DotI8 { epi: StepEpi::None, .. } => "dot_i8",
                 Step::DotI8 { epi: StepEpi::Bias(_), .. } => "dot_i8_bias",
                 Step::DotI8 { epi: StepEpi::BiasRelu(_), .. } => "dot_i8_bias_relu",
                 Step::Im2colGemm { .. } => "im2col_gemm",
+                Step::DftGemm { .. } => "dft_gemm",
                 Step::Gather { .. } => "gather",
             })
             .collect()
@@ -1663,23 +2041,58 @@ impl Plan {
             .iter()
             .filter_map(|s| match s {
                 Step::Dot { m, n, k, epi, v, .. } => {
-                    let key =
-                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::F32, epi: epi.tune_epi() };
+                    let key = TuneKey {
+                        m: *m,
+                        n: *n,
+                        k: *k,
+                        dtype: TuneDtype::F32,
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                    };
                     Some((key, *v))
                 }
                 Step::Im2colGemm { m, n, k, v, .. } => {
-                    let key =
-                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::F32, epi: TuneEpi::None };
+                    let key = TuneKey {
+                        m: *m,
+                        n: *n,
+                        k: *k,
+                        dtype: TuneDtype::F32,
+                        epi: TuneEpi::None,
+                        panel: TunePanel::Im2col,
+                    };
                     Some((key, *v))
                 }
-                Step::DotBf16 { m, n, k, v, .. } => {
-                    let key =
-                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::Bf16, epi: TuneEpi::None };
+                Step::DftGemm { m, n, k, v, .. } => {
+                    let key = TuneKey {
+                        m: *m,
+                        n: *n,
+                        k: *k,
+                        dtype: TuneDtype::F32,
+                        epi: TuneEpi::None,
+                        panel: TunePanel::Matrix,
+                    };
+                    Some((key, *v))
+                }
+                Step::DotBf16 { m, n, k, epi, v, .. } => {
+                    let key = TuneKey {
+                        m: *m,
+                        n: *n,
+                        k: *k,
+                        dtype: TuneDtype::Bf16,
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                    };
                     Some((key, *v))
                 }
                 Step::DotI8 { m, n, k, epi, v, .. } => {
-                    let key =
-                        TuneKey { m: *m, n: *n, k: *k, dtype: TuneDtype::I8, epi: epi.tune_epi() };
+                    let key = TuneKey {
+                        m: *m,
+                        n: *n,
+                        k: *k,
+                        dtype: TuneDtype::I8,
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                    };
                     Some((key, *v))
                 }
                 _ => None,
@@ -1706,10 +2119,15 @@ impl Plan {
         let mut scratch = GemmScratch::new();
         let mut bf16_scratch = Bf16Scratch::new();
         let mut i8_scratch = I8Scratch::new();
+        let mut dft_tmp_len = 0usize;
         for s in &self.steps {
             match s {
                 Step::Dot { m, n, k, v, .. } | Step::Im2colGemm { m, n, k, v, .. } => {
                     scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
+                }
+                Step::DftGemm { m, n, k, v, .. } => {
+                    scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
+                    dft_tmp_len = dft_tmp_len.max(2 * *m * *n);
                 }
                 Step::DotBf16 { m, n, k, v, .. } => {
                     bf16_scratch.reserve_for(*m, *n, *k, threads_for_pooled(*m, *n, *k, cap), *v);
@@ -1726,6 +2144,7 @@ impl Plan {
             bf16_scratch,
             i8_scratch,
             raw_param: vec![0u32; self.slot_caps.len()],
+            dft_tmp: vec![0f32; dft_tmp_len],
         }
     }
 
@@ -1822,7 +2241,7 @@ impl Plan {
             // step starts — invalidate it HERE, once, so no step arm can
             // forget to. The Param arm below re-flags its slot when a
             // raw bf16 input legitimately skips the widening copy.
-            let out_slot = match step {
+            match step {
                 Step::Param { out, .. }
                 | Step::Copy { out, .. }
                 | Step::Bf16 { out, .. }
@@ -1831,9 +2250,12 @@ impl Plan {
                 | Step::DotBf16 { out, .. }
                 | Step::DotI8 { out, .. }
                 | Step::Im2colGemm { out, .. }
-                | Step::Gather { out, .. } => *out,
-            };
-            bufs.raw_param[out_slot] = 0;
+                | Step::Gather { out, .. } => bufs.raw_param[*out] = 0,
+                Step::DftGemm { out_re, out_im, .. } => {
+                    bufs.raw_param[*out_re] = 0;
+                    bufs.raw_param[*out_im] = 0;
+                }
+            }
             match step {
                 Step::Param { index, len, out } => {
                     let data = *inputs
@@ -1910,11 +2332,18 @@ impl Plan {
                     );
                     bufs.slots[*out] = o;
                 }
-                Step::DotBf16 { a, b, out, m, n, k, v } => {
+                Step::DotBf16 { a, b, out, m, n, k, epi, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
                     let step_par = par.for_gemm(*m, *n, *k);
                     let slots = &bufs.slots;
                     let raw = &bufs.raw_param;
+                    // fused epilogue biases live widened in f32 slots
+                    // (param_pack_flags demotes them from raw routing)
+                    let epilogue = match epi {
+                        StepEpi::None => Epilogue::None,
+                        StepEpi::Bias(s) => Epilogue::Bias(&slots[*s][..*n]),
+                        StepEpi::BiasRelu(s) => Epilogue::BiasRelu(&slots[*s][..*n]),
+                    };
                     // an operand slot flagged raw holds no f32 value —
                     // the request input's bf16 bits are packed directly
                     fn src<'s>(
@@ -1946,11 +2375,83 @@ impl Plan {
                         *n,
                         *k,
                         self.bf16_accum,
+                        epilogue,
                         step_par,
                         &mut bufs.bf16_scratch,
                         *v,
                     );
                     bufs.slots[*out] = o;
+                }
+                Step::DftGemm { xr, xi, out_re, out_im, m, n, k, panels, v } => {
+                    // Four real GEMMs over the pinned Fourier panels; the
+                    // ± combine runs inside the C writeback of the last
+                    // two, which is bitwise the interpreter's
+                    // multiply(-1)+add / add pair (IEEE a−b ≡ a+(−1·b)).
+                    let mn = *m * *n;
+                    let mut ore = std::mem::take(&mut bufs.slots[*out_re]);
+                    let mut oim = std::mem::take(&mut bufs.slots[*out_im]);
+                    let mut tmp = std::mem::take(&mut bufs.dft_tmp);
+                    let step_par = par.for_gemm(*m, *n, *k);
+                    let slots = &bufs.slots;
+                    let dp = &self.dft_panels[*panels];
+                    let (t_ii, t_ir) = tmp[..2 * mn].split_at_mut(mn);
+                    let xrv = &slots[*xr][..*m * *k];
+                    let xiv = &slots[*xi][..*m * *k];
+                    gemm_f32_tuned_into(
+                        t_ii,
+                        xiv,
+                        PanelB::Packed(&dp.im),
+                        *m,
+                        *n,
+                        *k,
+                        Accum::F64,
+                        Epilogue::None,
+                        step_par,
+                        &mut bufs.scratch,
+                        *v,
+                    );
+                    gemm_f32_tuned_into(
+                        t_ir,
+                        xiv,
+                        PanelB::Packed(&dp.re),
+                        *m,
+                        *n,
+                        *k,
+                        Accum::F64,
+                        Epilogue::None,
+                        step_par,
+                        &mut bufs.scratch,
+                        *v,
+                    );
+                    gemm_f32_tuned_into(
+                        &mut ore[..mn],
+                        xrv,
+                        PanelB::Packed(&dp.re),
+                        *m,
+                        *n,
+                        *k,
+                        Accum::F64,
+                        Epilogue::DftCombine { other: t_ii, sub: true },
+                        step_par,
+                        &mut bufs.scratch,
+                        *v,
+                    );
+                    gemm_f32_tuned_into(
+                        &mut oim[..mn],
+                        xrv,
+                        PanelB::Packed(&dp.im),
+                        *m,
+                        *n,
+                        *k,
+                        Accum::F64,
+                        Epilogue::DftCombine { other: t_ir, sub: false },
+                        step_par,
+                        &mut bufs.scratch,
+                        *v,
+                    );
+                    bufs.dft_tmp = tmp;
+                    bufs.slots[*out_re] = ore;
+                    bufs.slots[*out_im] = oim;
                 }
                 Step::DotI8 { a, b, out, m, n, k, epi, q, v } => {
                     let mut o = std::mem::take(&mut bufs.slots[*out]);
@@ -2557,5 +3058,103 @@ ENTRY main {
         let names = plan.step_names();
         assert!(names.iter().all(|s| !s.starts_with("dot_i8")), "must not quantize: {names:?}");
         assert!(names.contains(&"dot"), "the f32 fallback dot runs instead: {names:?}");
+    }
+
+    /// The lowered complex-matmul DFT structure of the `dft_b32` fixture
+    /// at a toy size: twiddle constants are arbitrary here (the matcher
+    /// keys on structure, not values), and `multiply.9` deliberately
+    /// flips the real lowering's `multiply(dot, broadcast)` operand
+    /// order — the matcher must accept both.
+    const DFT_TINY: &str = r#"
+HloModule jit_dft_tiny
+
+ENTRY main.15 {
+  Arg_0.1 = f32[3,2]{1,0} parameter(0)
+  Arg_1.2 = f32[3,2]{1,0} parameter(1)
+  constant.3 = f32[2,2]{1,0} constant({ { 1, 1 }, { 1, -1 } })
+  constant.4 = f32[2,2]{1,0} constant({ { 0, 0.5 }, { -0.25, 0 } })
+  dot.5 = f32[3,2]{1,0} dot(Arg_0.1, constant.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  dot.6 = f32[3,2]{1,0} dot(Arg_1.2, constant.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.7 = f32[] constant(-1)
+  broadcast.8 = f32[3,2]{1,0} broadcast(constant.7), dimensions={}
+  multiply.9 = f32[3,2]{1,0} multiply(broadcast.8, dot.6)
+  add.10 = f32[3,2]{1,0} add(dot.5, multiply.9)
+  dot.11 = f32[3,2]{1,0} dot(Arg_0.1, constant.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  dot.12 = f32[3,2]{1,0} dot(Arg_1.2, constant.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  add.13 = f32[3,2]{1,0} add(dot.11, dot.12)
+  ROOT tuple.14 = (f32[3,2]{1,0}, f32[3,2]{1,0}) tuple(add.10, add.13)
+}
+"#;
+
+    #[test]
+    fn fuses_dft_graph_to_one_packed_gemm_step() {
+        let m = HloModule::parse(DFT_TINY).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        assert_eq!(
+            plan.step_names(),
+            ["param", "param", "dft_gemm"],
+            "four dots + combine collapse to one step; twiddles and the -1 die by DCE"
+        );
+        let xr = [0.5f32, -1.25, 2.0, 0.125, -0.75, 3.5];
+        let xi = [1.5f32, 0.25, -2.5, 0.0625, 4.0, -0.5];
+        let got = plan.execute(&[&xr, &xi], 1).unwrap();
+        let want = m.evaluate(&[&xr, &xi]).unwrap();
+        assert_eq!(got.len(), 2, "both tuple roots");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.dims, w.dims);
+            let gb: Vec<u32> = g.data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "fused DftGemm must be bitwise the interpreter");
+        }
+    }
+
+    #[test]
+    fn dft_with_parameter_twiddles_does_not_fuse_but_stays_exact() {
+        // Fi arrives as a parameter instead of a constant: the matcher
+        // must decline (panels pack at compile time from constants only)
+        // and the generic lowering must still match the interpreter
+        let text = DFT_TINY.replace(
+            "  constant.4 = f32[2,2]{1,0} constant({ { 0, 0.5 }, { -0.25, 0 } })",
+            "  constant.4 = f32[2,2]{1,0} parameter(2)",
+        );
+        let m = HloModule::parse(&text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|&s| s != "dft_gemm"), "{names:?}");
+        let xr = [0.5f32, -1.25, 2.0, 0.125, -0.75, 3.5];
+        let xi = [1.5f32, 0.25, -2.5, 0.0625, 4.0, -0.5];
+        let fi = [0.0f32, 0.5, -0.25, 0.0];
+        let got = plan.execute(&[&xr, &xi, &fi], 1).unwrap();
+        let want = m.evaluate(&[&xr, &xi, &fi]).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            let gb: Vec<u32> = g.data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb);
+        }
+    }
+
+    #[test]
+    fn dft_with_shared_interior_dot_does_not_fuse_but_stays_exact() {
+        // dot.6 gains a second consumer surfaced as a third root: the
+        // interior is no longer invisible, so the match must fall apart
+        // and everything lowers generically — bitwise the interpreter
+        let text = DFT_TINY.replace(
+            "  ROOT tuple.14 = (f32[3,2]{1,0}, f32[3,2]{1,0}) tuple(add.10, add.13)",
+            "  ROOT tuple.14 = (f32[3,2]{1,0}, f32[3,2]{1,0}, f32[3,2]{1,0}) tuple(add.10, add.13, dot.6)",
+        );
+        let m = HloModule::parse(&text).unwrap();
+        let plan = Plan::compile(&m).unwrap();
+        let names = plan.step_names();
+        assert!(names.iter().all(|&s| s != "dft_gemm"), "{names:?}");
+        let xr = [0.5f32, -1.25, 2.0, 0.125, -0.75, 3.5];
+        let xi = [1.5f32, 0.25, -2.5, 0.0625, 4.0, -0.5];
+        let got = plan.execute(&[&xr, &xi], 1).unwrap();
+        let want = m.evaluate(&[&xr, &xi]).unwrap();
+        assert_eq!(got.len(), 3);
+        for (g, w) in got.iter().zip(&want) {
+            let gb: Vec<u32> = g.data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb);
+        }
     }
 }

@@ -46,6 +46,7 @@ use crate::blas::block_gemm::{
     gemm_f32_tuned_into, Accum, Epilogue, GemmScratch, GemmVariant, PanelB, Par,
 };
 use crate::blas::i8_gemm::{gemm_i8_packed_tuned_into, I8Accum, I8Scratch, I8SrcA, I8SrcB};
+use crate::kernels::pack::Im2colSpec;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -124,6 +125,36 @@ impl TuneEpi {
     }
 }
 
+/// The B-panel modality axis of a shape class: how the engine sources
+/// its packed panels. An im2col gather and a contiguous-matrix copy have
+/// different memory behavior at the same `m×n×k`, so conv classes are
+/// keyed — and **measured** — separately from plain `dot` classes
+/// instead of borrowing a matrix-modality winner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TunePanel {
+    /// Contiguous row-major B ([`PanelB::Matrix`]) — `dot`-family steps.
+    Matrix,
+    /// Virtual im2col gather ([`PanelB::Im2col`]) — `im2col_gemm` steps.
+    Im2col,
+}
+
+impl TunePanel {
+    /// Stable name (the `tuning` JSON block's `panel` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TunePanel::Matrix => "matrix",
+            TunePanel::Im2col => "im2col",
+        }
+    }
+
+    fn order(&self) -> u8 {
+        match self {
+            TunePanel::Matrix => 0,
+            TunePanel::Im2col => 1,
+        }
+    }
+}
+
 /// One GEMM shape class: everything that determines which variant is
 /// fastest (shape + engine), plus the epilogue for step-level audit
 /// identity. This is the explicit key stored next to the chosen variant
@@ -135,11 +166,13 @@ pub struct TuneKey {
     pub k: usize,
     pub dtype: TuneDtype,
     pub epi: TuneEpi,
+    /// B-panel modality ([`TunePanel::Im2col`] only for f32 conv steps).
+    pub panel: TunePanel,
 }
 
 impl TuneKey {
-    fn sort_idx(&self) -> (u8, usize, usize, usize, u8) {
-        (self.dtype.order(), self.m, self.n, self.k, self.epi.order())
+    fn sort_idx(&self) -> (u8, u8, usize, usize, usize, u8) {
+        (self.dtype.order(), self.panel.order(), self.m, self.n, self.k, self.epi.order())
     }
 }
 
@@ -270,16 +303,25 @@ impl TuneTable {
             TuneDtype::F32 => {
                 let a = fill_f32(m * k, 0x5eed_0001);
                 let b = fill_f32(k * n, 0x5eed_0002);
+                // im2col classes measure through the *gather* panel
+                // source (a synthetic k-row spec over a k×n image, one
+                // base per row), so the timing reflects im2col packing
+                // cost rather than the contiguous-matrix memcpy
+                let spec = Im2colSpec { bases: (0..k).map(|p| p * n).collect(), img_w: n, out_w: n };
                 let mut c = vec![0f32; m * n];
                 let mut scratch = GemmScratch::new();
                 GemmVariant::f32_candidates()
                     .into_iter()
                     .map(|v| {
                         let ms = time_ms(|| {
+                            let src = match key.panel {
+                                TunePanel::Matrix => PanelB::Matrix(&b),
+                                TunePanel::Im2col => PanelB::Im2col { img: &b, spec: &spec },
+                            };
                             gemm_f32_tuned_into(
                                 &mut c,
                                 &a,
-                                PanelB::Matrix(&b),
+                                src,
                                 m,
                                 n,
                                 k,
@@ -311,6 +353,7 @@ impl TuneTable {
                                 n,
                                 k,
                                 Bf16Accum::Widened,
+                                Epilogue::None,
                                 Par::Seq,
                                 &mut scratch,
                                 v,
@@ -398,7 +441,7 @@ mod tests {
     use super::*;
 
     fn key(m: usize, n: usize, k: usize, dtype: TuneDtype) -> TuneKey {
-        TuneKey { m, n, k, dtype, epi: TuneEpi::None }
+        TuneKey { m, n, k, dtype, epi: TuneEpi::None, panel: TunePanel::Matrix }
     }
 
     #[test]
@@ -455,7 +498,14 @@ mod tests {
         let keys = [
             key(2, 2, 1024 * 1024 * 16, TuneDtype::I8),
             key(1, 8, 8, TuneDtype::F32),
-            TuneKey { m: 1, n: 8, k: 8, dtype: TuneDtype::F32, epi: TuneEpi::BiasRelu },
+            TuneKey {
+                m: 1,
+                n: 8,
+                k: 8,
+                dtype: TuneDtype::F32,
+                epi: TuneEpi::BiasRelu,
+                panel: TunePanel::Matrix,
+            },
             key(2, 2, 1024 * 1024 * 16, TuneDtype::Bf16),
         ];
         for k in keys {
@@ -470,6 +520,25 @@ mod tests {
         assert_eq!(rows[0].0.dtype, TuneDtype::F32);
         assert_eq!(rows[0].0.epi, TuneEpi::None);
         assert_eq!(rows[1].0.epi, TuneEpi::BiasRelu);
+    }
+
+    #[test]
+    fn im2col_classes_are_keyed_and_measured_separately() {
+        let table = TuneTable::new();
+        let km = key(8, 9, 12, TuneDtype::F32);
+        let kc = TuneKey { panel: TunePanel::Im2col, ..km };
+        let cm = table.choose(km);
+        let cc = table.choose(kc);
+        assert!(cm.measured && cc.measured);
+        assert_eq!(table.len(), 2, "same shape, distinct modality rows");
+        assert_eq!(table.measure_count(), 2);
+        // memoized independently
+        table.choose(kc);
+        assert_eq!(table.measure_count(), 2);
+        // deterministic order puts matrix before im2col at equal shape
+        let rows = table.snapshot();
+        assert_eq!(rows[0].0.panel, TunePanel::Matrix);
+        assert_eq!(rows[1].0.panel, TunePanel::Im2col);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! End-to-end coverage for the DFT serving subsystem: the Fourier-matrix
+//! generators (structure + unitarity), the split re/im packed twiddle
+//! panels, the fused `dft_gemm` plan step against the interpreter oracle
+//! **bitwise** across batch seam shapes (including non-multiples of the
+//! microkernel tile), the simulated-MMA kernel against the scalar
+//! reference across `n` seams, and the served two-family path: mixed
+//! classify + DFT traffic through a real coordinator + runtime must
+//! scatter every DFT response back bit-exact to its per-request oracle.
+
+use power_mma::coordinator::{Coordinator, CoordinatorConfig, MlpWeights, Payload, ShardRouting};
+use power_mma::kernels::dft::{dft16_twiddles_f32, dft_mma, dft_reference, fourier_matrix};
+use power_mma::kernels::pack::{pack_b_panel_f32, DftPanels};
+use power_mma::runtime::hlo::HloModule;
+use power_mma::runtime::plan::Plan;
+use power_mma::runtime::{artifacts, det_input, dft_hlo_text, dft_meta, Runtime};
+use power_mma::testkit::assert_allclose;
+
+fn assert_bitwise(name: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{name}: element {i} differs ({g} vs {w})");
+    }
+}
+
+/// Bitwise f32 oracle for one 16-point serving transform under the
+/// interpreter accumulation contract: each of the four real dots
+/// accumulates its products in f64 in ascending k and narrows once to
+/// f32; the ± combine then happens in f32. Returns `(yr, yi)` rows.
+fn oracle_row(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = 16usize;
+    let (fr, fi) = dft16_twiddles_f32();
+    let dot = |x: &[f32], f: &[f32], j: usize| {
+        let mut acc = 0f64;
+        for k in 0..n {
+            acc += x[k] as f64 * f[k * n + j] as f64;
+        }
+        acc as f32
+    };
+    let mut yr = Vec::with_capacity(n);
+    let mut yi = Vec::with_capacity(n);
+    for j in 0..n {
+        let neg = -1f32 * dot(im, &fi, j);
+        yr.push(dot(re, &fr, j) + neg);
+        yi.push(dot(re, &fi, j) + dot(im, &fr, j));
+    }
+    (yr, yi)
+}
+
+#[test]
+fn fourier_matrix_is_symmetric_and_unitary() {
+    for n in [4usize, 8, 13, 16] {
+        let (re, im) = fourier_matrix(n);
+        // F depends on j*k only, so the matrix is symmetric — the
+        // property that lets the serving path run row-per-request X·F
+        // without a transpose
+        for j in 0..n {
+            for k in 0..n {
+                assert_eq!(re[j * n + k], re[k * n + j], "n={n} re ({j},{k})");
+                assert_eq!(im[j * n + k], im[k * n + j], "n={n} im ({j},{k})");
+            }
+        }
+        // unitarity up to the 1/n normalization: F·F^H = n·I
+        for j in 0..n {
+            for l in 0..n {
+                let (mut sr, mut si) = (0f64, 0f64);
+                for k in 0..n {
+                    let (ar, ai) = (re[j * n + k], im[j * n + k]);
+                    // conj of row l
+                    let (br, bi) = (re[l * n + k], -im[l * n + k]);
+                    sr += ar * br - ai * bi;
+                    si += ar * bi + ai * br;
+                }
+                let want = if j == l { n as f64 } else { 0.0 };
+                assert!((sr - want).abs() < 1e-9, "n={n} F*F^H re ({j},{l}) = {sr}");
+                assert!(si.abs() < 1e-9, "n={n} F*F^H im ({j},{l}) = {si}");
+            }
+        }
+    }
+}
+
+#[test]
+fn twiddle_table_matches_the_libm_fourier_matrix() {
+    let n = 16usize;
+    let (fr, fi) = dft16_twiddles_f32();
+    let (lr, li) = fourier_matrix(n);
+    for i in 0..n * n {
+        assert!((fr[i] as f64 - lr[i]).abs() < 1e-7, "re[{i}]: {} vs {}", fr[i], lr[i]);
+        assert!((fi[i] as f64 - li[i]).abs() < 1e-7, "im[{i}]: {} vs {}", fi[i], li[i]);
+        // and the sqrt-table values are symmetric like the matrix itself
+        let (j, k) = (i / n, i % n);
+        assert_eq!(fr[i].to_bits(), fr[k * n + j].to_bits());
+        assert_eq!(fi[i].to_bits(), fi[k * n + j].to_bits());
+    }
+}
+
+#[test]
+fn split_panels_replay_the_generic_packer_bitwise() {
+    let n = 16usize;
+    let (fr, fi) = dft16_twiddles_f32();
+    // geometries straddling the n=16 twiddle matrix: exact fit, wide
+    // panels with an n-tail, and a short depth tail
+    for &(nr, kc) in &[(8usize, 8usize), (16, 16), (16, 8), (12, 5), (16, 7)] {
+        let panels = DftPanels::pack(&fr, &fi, n, n, nr, kc);
+        for (label, packed, src) in [("re", &panels.re, &fr), ("im", &panels.im, &fi)] {
+            assert_eq!(packed.geometry(), (n, n, nr, kc), "{label} geometry");
+            let mut want = vec![0f32; kc * nr];
+            for k0 in (0..n).step_by(kc) {
+                let kcl = kc.min(n - k0);
+                for j0 in (0..n).step_by(nr) {
+                    let cols = nr.min(n - j0);
+                    pack_b_panel_f32(src, n, k0, kcl, j0, cols, nr, &mut want[..kcl * nr]);
+                    assert_bitwise(
+                        &format!("{label} nr={nr} kc={kc} panel ({k0},{j0})"),
+                        packed.panel(k0, kcl, j0),
+                        &want[..kcl * nr],
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_plan_matches_interpreter_and_oracle_across_batch_seams() {
+    // batch seams straddling the 8-row microkernel tile: 1, odd,
+    // just-off-tile, tile-aligned, and the served bucket size
+    for batch in [1usize, 3, 5, 8, 13, 32] {
+        let text = dft_hlo_text(batch);
+        let module = HloModule::parse(&text).unwrap_or_else(|e| panic!("b{batch}: {e}"));
+        let plan = Plan::compile(&module).unwrap_or_else(|e| panic!("b{batch}: {e}"));
+        assert_eq!(
+            plan.step_names(),
+            vec!["param", "param", "dft_gemm"],
+            "b{batch}: the four dots + combines must fuse to one dft_gemm"
+        );
+        let meta = dft_meta(batch);
+        assert_eq!(meta.output_shape, vec![2 * batch, 16]);
+        let re = det_input(batch * 16, 1);
+        let im = det_input(batch * 16, 2);
+        let refs: Vec<&[f32]> = vec![&re, &im];
+        let want = module.evaluate(&refs).unwrap_or_else(|e| panic!("b{batch}: {e}"));
+        assert_eq!(want.len(), 2, "b{batch}: (yr, yi) roots");
+        let mut bufs = plan.new_buffers();
+        for threads in [1usize, 4] {
+            let got = plan.execute_into(&mut bufs, &refs, threads).unwrap();
+            assert_eq!(got.len(), 2, "b{batch}: plan root arity");
+            for (half, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.dims, vec![batch, 16]);
+                assert_bitwise(
+                    &format!("b{batch} threads {threads} half {half} vs interpreter"),
+                    &g.data,
+                    &w.data,
+                );
+            }
+            // and bitwise against the row-wise twiddle-table oracle
+            for r in 0..batch {
+                let (yr, yi) = oracle_row(&re[r * 16..(r + 1) * 16], &im[r * 16..(r + 1) * 16]);
+                assert_bitwise(
+                    &format!("b{batch} threads {threads} row {r} yr"),
+                    &got[0].data[r * 16..(r + 1) * 16],
+                    &yr,
+                );
+                assert_bitwise(
+                    &format!("b{batch} threads {threads} row {r} yi"),
+                    &got[1].data[r * 16..(r + 1) * 16],
+                    &yi,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mma_kernel_matches_the_scalar_reference_across_n_seams() {
+    // n off the 8-tile grid exercises the zero-padded panels; the valid
+    // region must match the O(n²) scalar reference
+    for &(n, batch) in &[(3usize, 1usize), (5, 2), (8, 7), (12, 3), (16, 9)] {
+        let xr: Vec<f64> =
+            (0..n * batch).map(|i| ((i * 31 + 7) % 61) as f64 / 61.0 - 0.5).collect();
+        let xi: Vec<f64> =
+            (0..n * batch).map(|i| ((i * 17 + 5) % 53) as f64 / 53.0 - 0.5).collect();
+        let (yr, yi, stats) = dft_mma(&xr, &xi, n, batch).unwrap();
+        let (rr, ri) = dft_reference(&xr, &xi, n, batch);
+        assert_allclose(&yr, &rr, 1e-10, 1e-10);
+        assert_allclose(&yi, &ri, 1e-10, 1e-10);
+        assert!(stats.mma_instructions > 0, "n={n}: the kernel path must run on MMA");
+    }
+}
+
+#[test]
+fn served_two_family_traffic_scatters_back_exactly() {
+    let dir = std::env::temp_dir()
+        .join(format!("mma-dft-engine-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    artifacts::ensure_artifacts(&dir).unwrap();
+    for routing in [ShardRouting::RoundRobin, ShardRouting::ModelSticky] {
+        let cfg = CoordinatorConfig {
+            routing,
+            buckets: vec![1, 8],
+            max_delay: std::time::Duration::from_micros(500),
+            ..Default::default()
+        };
+        let ladder = cfg.ladder();
+        let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
+        let weights = MlpWeights::deterministic(&cfg);
+        let features = cfg.features;
+        let dft_n = cfg.dft_n;
+        let dir2 = dir.clone();
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            let mut rt = Runtime::cpu(&dir2)?;
+            rt.load_all()?;
+            rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
+            rt.load_dft_buckets(&ladder)?;
+            Ok(rt)
+        });
+        // a burst larger than the biggest bucket, alternating families,
+        // so DFT windows flush both full and on the deadline while
+        // classify traffic interleaves through the same engines
+        let n = 24usize;
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            if i % 2 == 0 {
+                let re = det_input(dft_n, i as u64);
+                let im = det_input(dft_n, i as u64 + 100);
+                let rx = coord.submit(Payload::Dft { re: re.clone(), im: im.clone() }).1;
+                pending.push((rx, Some((re, im))));
+            } else {
+                let rx =
+                    coord.submit(Payload::Classify { features: det_input(features, i as u64) }).1;
+                pending.push((rx, None));
+            }
+        }
+        let mut dft_seen = 0usize;
+        for (i, (rx, dft_in)) in pending.into_iter().enumerate() {
+            let r = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped"));
+            let out = r.result.unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+            if let Some((re, im)) = dft_in {
+                dft_seen += 1;
+                let (yr, yi) = oracle_row(&re, &im);
+                assert_eq!(out.len(), 2 * dft_n, "request {i}: (yr ‖ yi) row");
+                assert_bitwise(&format!("request {i} yr"), &out[..dft_n], &yr);
+                assert_bitwise(&format!("request {i} yi"), &out[dft_n..], &yi);
+            } else {
+                assert!(!out.is_empty(), "request {i}: classify row");
+            }
+        }
+        assert_eq!(dft_seen, n / 2);
+        let stats = coord.shutdown();
+        let dft_rows: u64 = stats.dft_buckets.iter().map(|b| b.rows.get()).sum();
+        assert_eq!(dft_rows, (n / 2) as u64, "every DFT row executed in a DFT bucket");
+        // malformed requests are rejected before they reach a window
+        let cfg = CoordinatorConfig { routing, ..Default::default() };
+        let ladder = cfg.ladder();
+        let (feat, hid, cls) = (cfg.features, cfg.hidden, cfg.classes);
+        let weights = MlpWeights::deterministic(&cfg);
+        let dir3 = dir.clone();
+        let coord = Coordinator::start(cfg, weights, move |_shard| {
+            let mut rt = Runtime::cpu(&dir3)?;
+            rt.load_all()?;
+            rt.load_mlp_buckets(&ladder, feat, hid, cls)?;
+            rt.load_dft_buckets(&ladder)?;
+            Ok(rt)
+        });
+        let (_, rx) = coord.submit(Payload::Dft { re: vec![0.0; 3], im: vec![0.0; 3] });
+        let r = rx.recv().expect("malformed response delivered");
+        assert!(r.result.is_err(), "a short DFT request must be rejected");
+        coord.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

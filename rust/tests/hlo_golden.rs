@@ -89,7 +89,7 @@ fn mlp_oracle(
 
 #[test]
 fn every_compile_kernel_artifact_parses() {
-    assert_eq!(EMBEDDED.len(), 4, "gemm_f32, gemm_bf16, conv2d_k3, mlp_b32");
+    assert_eq!(EMBEDDED.len(), 5, "gemm_f32, gemm_bf16, conv2d_k3, mlp_b32, dft_b32");
     for a in EMBEDDED {
         let meta = ModelMeta::parse(a.meta).unwrap();
         let module = HloModule::parse(a.hlo_text)
@@ -123,10 +123,19 @@ fn interpreter_matches_python_expected_fixtures() {
         let inputs = det_inputs(&meta);
         let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
         let out = module.evaluate(&refs).unwrap();
-        assert_eq!(out.len(), 1, "{}: aot.py lowers to a 1-tuple", a.name);
-        assert_eq!(out[0].dims, meta.output_shape, "{}: output shape", a.name);
+        // multi-root graphs (the DFT family's (yr, yi) pair) stack their
+        // outputs along axis 0 — the same root-order concatenation
+        // aot.py applies before writing `.meta`/`.expected.bin`
+        assert!(!out.is_empty(), "{}: empty output tuple", a.name);
+        let mut stacked_dims = out[0].dims.clone();
+        for t in &out[1..] {
+            assert_eq!(t.dims[1..], out[0].dims[1..], "{}: root shapes", a.name);
+            stacked_dims[0] += t.dims[0];
+        }
+        assert_eq!(stacked_dims, meta.output_shape, "{}: output shape", a.name);
+        let data: Vec<f32> = out.iter().flat_map(|t| t.data.iter().copied()).collect();
         let expect = expected_f32(a.expected);
-        assert_allclose_f32(&out[0].data, &expect, 1e-5, 1e-5);
+        assert_allclose_f32(&data, &expect, 1e-5, 1e-5);
     }
 }
 

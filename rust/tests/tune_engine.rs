@@ -22,7 +22,7 @@ use power_mma::blas::i8_gemm::{
     gemm_i8_reference, I8Accum, I8Epilogue, I8Scratch, I8SrcA, I8SrcB, QuantParams,
 };
 use power_mma::runtime::tune::heuristic_variant;
-use power_mma::runtime::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TuneTable};
+use power_mma::runtime::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TunePanel, TuneTable};
 use power_mma::testkit::{check, Rng};
 
 /// Scalar f32 oracle with the `Accum::F64` contract: one per-element f64
@@ -138,6 +138,7 @@ fn every_bf16_variant_matches_the_references_bitwise() {
         let k = *rng.pick(&[1usize, 2, 3, 127, 128, 129, 255, 256, 257]);
         let a = rng.f32_vec(m * k);
         let b = rng.f32_vec(k * n);
+        let bias = rng.f32_vec(n);
         let widened = gemm_bf16_reference(&a, &b, m, n, k);
         let pairs = gemm_bf16_reference_pairs(&a, &b, m, n, k);
         for v in GemmVariant::wide_candidates() {
@@ -153,6 +154,7 @@ fn every_bf16_variant_matches_the_references_bitwise() {
                         n,
                         k,
                         accum,
+                        Epilogue::None,
                         par,
                         &mut scratch,
                         v,
@@ -164,6 +166,40 @@ fn every_bf16_variant_matches_the_references_bitwise() {
                         v.name()
                     );
                 }
+            }
+            // fused bias / bias+relu tails: bitwise the separate
+            // elementwise instructions applied after the widened oracle
+            for relu in [false, true] {
+                let want: Vec<f32> = widened
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &x)| {
+                        let s = x + bias[idx % n];
+                        if relu {
+                            s.max(0.0)
+                        } else {
+                            s
+                        }
+                    })
+                    .collect();
+                let epi =
+                    if relu { Epilogue::BiasRelu(&bias) } else { Epilogue::Bias(&bias) };
+                let mut c = vec![0f32; m * n];
+                let mut scratch = Bf16Scratch::new();
+                gemm_bf16_tuned_into(
+                    &mut c,
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    Bf16Accum::Widened,
+                    epi,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                assert_eq!(bits(&c), bits(&want), "{} relu={relu} m={m} n={n} k={k}", v.name());
             }
         }
     });
@@ -324,6 +360,7 @@ fn scratch_sizing_holds_at_the_blocking_grid_extremes() {
                 n,
                 k,
                 Bf16Accum::Widened,
+                Epilogue::None,
                 Par::Scoped(3),
                 &mut bs,
                 v,
@@ -435,7 +472,7 @@ fn forced_variants_serve_bitwise_identical_results_end_to_end() {
         let classes =
             [(b, h, f, TuneEpi::BiasRelu), (b, c, h, TuneEpi::Bias), (b, c, h, TuneEpi::None)];
         for (m, n, k, epi) in classes {
-            let key = TuneKey { m, n, k, dtype, epi };
+            let key = TuneKey { m, n, k, dtype, epi, panel: TunePanel::Matrix };
             let choice =
                 TuneChoice { variant: forced, chosen_ms: 0.0, default_ms: 0.0, measured: false };
             table.insert(key, choice);
