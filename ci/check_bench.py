@@ -197,6 +197,53 @@ def check(report):
     if not tuning.get("measured_classes", 0) >= 1:
         fail(f"at least one class must be measured (not heuristic): {tuning}")
 
+    # -- roofline: per-step observability over every served family -----
+    roofline = need(report, "roofline")
+    if not roofline.get("nominal_ghz", 0) > 0:
+        fail(f"roofline must report the nominal clock: {roofline}")
+    steps = roofline.get("steps")
+    if not isinstance(steps, list) or not steps:
+        fail(f"roofline.steps must be a non-empty list: {roofline}")
+    families = {row.get("family") for row in steps}
+    for family in ("mlp_f32", "gemm_bf16", "mlp_int8", "dft_b32"):
+        if family not in families:
+            fail(f"roofline is missing served family '{family}': {sorted(families)}")
+    if roofline.get("pct_in_range") is not True:
+        fail(f"roofline.pct_in_range must be true: {roofline.get('pct_in_range')}")
+    best_ceiling = {}
+    for row in steps:
+        where = f"{row.get('family')}/{row.get('step')}"
+        for key in ("dtype", "m", "n", "k", "variant", "gemms", "sim_cycles", "bound"):
+            if key not in row:
+                fail(f"roofline step {where} missing '{key}': {row}")
+        mix = row.get("mix")
+        if not isinstance(mix, dict):
+            fail(f"roofline step {where} missing its instruction mix: {row}")
+        macs = mix.get("macs", 0)
+        expect = row.get("gemms", 0) * row.get("m", 0) * row.get("n", 0) * row.get("k", 0)
+        if macs != expect:
+            fail(f"roofline step {where} mix.macs {macs} != gemms*m*n*k {expect}")
+        if not mix.get("insts", 0) > 0 or not isinstance(mix.get("opcodes"), dict):
+            fail(f"roofline step {where} mix must carry insts and opcodes: {mix}")
+        ceiling = row.get("sim_macs_per_cycle", 0)
+        peak = row.get("table1_peak_macs_per_cycle", 0)
+        if not 0 < ceiling <= peak * 1.0001:
+            fail(f"roofline step {where} ceiling {ceiling} outside (0, peak {peak}]")
+        pct = row.get("pct_of_ceiling", -1)
+        if not 0 < pct <= 1.05:
+            fail(f"roofline step {where} pct_of_ceiling {pct} outside (0, 1.05]")
+        if not row.get("achieved_macs_per_cycle", 0) > 0:
+            fail(f"roofline step {where} reported no achieved MACs/cycle: {row}")
+        dtype = row.get("dtype")
+        best_ceiling[dtype] = max(best_ceiling.get(dtype, 0), ceiling)
+    for dtype in ("f32", "bf16", "i8"):
+        if dtype not in best_ceiling:
+            fail(f"roofline covers no '{dtype}' step: {sorted(best_ceiling)}")
+    # Table I ordering over the simulated ceilings: the rank-4 integer
+    # engine must out-rank rank-2 bf16, which must out-rank rank-1 f32
+    if not best_ceiling["i8"] >= best_ceiling["bf16"] >= best_ceiling["f32"]:
+        fail(f"roofline ceilings violate Table-I ordering i8>=bf16>=f32: {best_ceiling}")
+
     print(
         "check_bench: OK:"
         f" speedup {acceptance.get('achieved')},"
@@ -213,7 +260,9 @@ def check(report):
         f" (rows identical {mix.get('rows_identical')}),"
         f" tuned classes {len(table)}"
         f" ({tuning.get('distinct_variants')} variants,"
-        f" {tuning.get('measured_classes')} measured)"
+        f" {tuning.get('measured_classes')} measured),"
+        f" roofline steps {len(steps)}"
+        f" (ceilings {[f'{d}:{best_ceiling[d]:.1f}' for d in ('f32', 'bf16', 'i8')]})"
     )
 
 

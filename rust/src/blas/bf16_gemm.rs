@@ -83,7 +83,7 @@
 //! assert_eq!(c[0], 0.30078125, "bf16 grid, not 0.3004");
 //! ```
 
-use crate::blas::block_gemm::{chunk_plan_nr, Epilogue, GemmVariant, Par, KC};
+use crate::blas::block_gemm::{chunk_plan_nr, Epilogue, ExecutedKernel, GemmVariant, Par, KC};
 use crate::isa::types::bf16_to_f32;
 use crate::kernels::pack::{
     pack_a_panel_bf16, pack_a_panel_f32_bf16, pack_b_panel_bf16, pack_b_panel_f32_bf16,
@@ -100,6 +100,12 @@ pub const NR: usize = 16;
 // KC blocks must cover whole k-pairs: an odd block boundary would split
 // a rank-2 step (and force a masked pad mid-chain).
 const _: () = assert!(KC % 2 == 0, "KC must be even: packed bf16 steps cover k-pairs");
+
+/// The descriptor of a tuned bf16 GEMM call: `xvbf16ger2` (rank 2) over
+/// 2-byte pair-interleaved panels, under the given variant's blocking.
+pub fn executed_kernel_bf16(m: usize, n: usize, k: usize, v: GemmVariant) -> ExecutedKernel {
+    ExecutedKernel { elem: "bf16", ger: "xvbf16ger2", rank: 2, esize: 2, m, n, k, v }
+}
 
 /// Where a bf16 GEMM operand comes from. Both variants pack to the same
 /// pair-interleaved bf16 panels; neither widens the operand to an f32

@@ -198,6 +198,41 @@ impl GemmVariant {
     }
 }
 
+/// What a tuned GEMM call actually executes, as seen by the MMA
+/// hardware: the register-tile and cache-blocking geometry plus the
+/// Table I rank-k instruction the microkernel's inner update corresponds
+/// to. Each packed engine reports its own descriptor
+/// ([`executed_kernel_f32`], [`crate::blas::bf16_gemm::executed_kernel_bf16`],
+/// [`crate::blas::i8_gemm::executed_kernel_i8`]); the roofline layer
+/// ([`crate::runtime::profile`]) synthesizes the equivalent instruction
+/// stream from it, so the profiled kernel is exactly the executed one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecutedKernel {
+    /// Packed-panel element type, e.g. `"f32"`.
+    pub elem: &'static str,
+    /// Base mnemonic of the rank-k update the microkernel maps to
+    /// (Table I), e.g. `"xvf32ger"`.
+    pub ger: &'static str,
+    /// Rank of that update (products per instruction per element).
+    pub rank: usize,
+    /// Bytes per packed-panel element (what one `lxv` moves 16 of).
+    pub esize: usize,
+    /// Problem shape.
+    pub m: usize,
+    /// Problem shape.
+    pub n: usize,
+    /// Problem shape.
+    pub k: usize,
+    /// The tuner-chosen register tile and cache blocking the call ran.
+    pub v: GemmVariant,
+}
+
+/// The descriptor of a tuned f32 GEMM call: `xvf32ger` (rank 1) over
+/// 4-byte packed panels, under the given variant's blocking.
+pub fn executed_kernel_f32(m: usize, n: usize, k: usize, v: GemmVariant) -> ExecutedKernel {
+    ExecutedKernel { elem: "f32", ger: "xvf32ger", rank: 1, esize: 4, m, n, k, v }
+}
+
 /// Approximate flop count (`2·m·n·k`) below which a **scoped-spawn** GEMM
 /// runs inline instead of spawning workers — spawning and joining OS
 /// threads only pays for 128³-and-up tiles.

@@ -75,7 +75,7 @@
 //! serving shape; [`gemm_i8_dequant_reference`] spells the whole
 //! contract out elementwise for tests and the bench accuracy probe.
 
-use crate::blas::block_gemm::{chunk_plan_nr, GemmVariant, Par, KC};
+use crate::blas::block_gemm::{chunk_plan_nr, ExecutedKernel, GemmVariant, Par, KC};
 use crate::isa::types::{mod_add_i32, sat_add_i32};
 use crate::kernels::pack::{
     pack_a_panel_f32_i8, pack_a_panel_i8, pack_b_panel_f32_u8, pack_b_panel_u8, quantize_i8,
@@ -93,6 +93,12 @@ pub const NR: usize = 16;
 // KC blocks must cover whole k-quads: a non-multiple-of-4 block boundary
 // would split a rank-4 step (and force a masked pad mid-chain).
 const _: () = assert!(KC % 4 == 0, "KC must be a multiple of 4: packed int8 steps cover k-quads");
+
+/// The descriptor of a tuned int8 GEMM call: `xvi8ger4` (rank 4) over
+/// 1-byte quad-interleaved panels, under the given variant's blocking.
+pub fn executed_kernel_i8(m: usize, n: usize, k: usize, v: GemmVariant) -> ExecutedKernel {
+    ExecutedKernel { elem: "i8", ger: "xvi8ger4", rank: 4, esize: 1, m, n, k, v }
+}
 
 /// Per-tensor affine quantization parameters of one int8 GEMM: A
 /// quantizes to signed i8 with `(a_scale, a_zp)`, B to unsigned u8 with

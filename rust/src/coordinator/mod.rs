@@ -433,6 +433,13 @@ pub struct CoordStats {
     /// Sum of batch occupancies (completed classify requests).
     pub batched_requests: Counter,
     pub latency: Histogram,
+    /// Per-family latency slices of [`CoordStats::latency`]: the batched
+    /// classify (MLP) family.
+    pub latency_mlp: Histogram,
+    /// The batched DFT transform family.
+    pub latency_dft: Histogram,
+    /// Unbatched direct requests ([`Payload::Gemm`] / [`Payload::Conv`]).
+    pub latency_direct: Histogram,
     /// One row per ladder bucket (ascending), shared by all shards.
     pub buckets: Vec<BucketStat>,
     /// The DFT family's per-bucket rows (same ladder, batched in its
@@ -823,6 +830,7 @@ fn engine_loop<E, F>(
                         let latency = clock.now().saturating_duration_since(req.submitted);
                         stats.completed.inc();
                         stats.latency.record(latency);
+                        stats.latency_mlp.record(latency);
                         let _ =
                             req.reply.send(Response { id: req.id, result: Ok(row), latency });
                     }
@@ -888,6 +896,7 @@ fn engine_loop<E, F>(
                         let latency = clock.now().saturating_duration_since(req.submitted);
                         stats.completed.inc();
                         stats.latency.record(latency);
+                        stats.latency_dft.record(latency);
                         let _ =
                             req.reply.send(Response { id: req.id, result: Ok(row), latency });
                     }
@@ -953,6 +962,7 @@ fn engine_loop<E, F>(
                         Ok(_) => {
                             stats.completed.inc();
                             stats.latency.record(latency);
+                            stats.latency_direct.record(latency);
                         }
                         Err(_) => {
                             stats.failed.inc();
@@ -969,6 +979,7 @@ fn engine_loop<E, F>(
                         Ok(_) => {
                             stats.completed.inc();
                             stats.latency.record(latency);
+                            stats.latency_direct.record(latency);
                         }
                         Err(_) => {
                             stats.failed.inc();

@@ -73,6 +73,15 @@ impl SimReport {
         )
     }
 
+    /// Named per-resource occupancies, in a fixed order — the
+    /// machine-readable form of [`SimReport::utilization`] consumed by
+    /// the roofline layer ([`crate::runtime::profile`]): each entry is
+    /// `(unit class, busy fraction in [0, 1])`.
+    pub fn occupancies(&self, cfg: &MachineConfig) -> [(&'static str, f64); 4] {
+        let (v, m, l, f) = self.utilization(cfg);
+        [("vsu", v), ("mme", m), ("lsu", l), ("fxu", f)]
+    }
+
     /// The unit class that bounds this run (highest utilization) — the
     /// "top bottleneck" pointer of the §Perf process.
     pub fn bottleneck(&self, cfg: &MachineConfig) -> (&'static str, f64) {

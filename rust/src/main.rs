@@ -37,6 +37,7 @@ fn main() {
         Some("asm") => cmd_asm(&args[1..]),
         Some("disasm") => cmd_disasm(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("gen-artifacts") => cmd_gen_artifacts(&args[1..]),
         _ => {
@@ -52,6 +53,7 @@ fn main() {
                  \x20 asm       assemble MMA assembly to bytes\n\
                  \x20 disasm    disassemble bytes to MMA assembly\n\
                  \x20 serve     serve the AOT models and run a self-test load\n\
+                 \x20 profile   per-step roofline profile of a compiled model plan\n\
                  \x20 bench     runtime benchmarks (bench serve -> BENCH_runtime.json)\n\
                  \x20 gen-artifacts  write the embedded AOT artifact set to disk\n\n\
                  run `power-mma <command> --help` for options"
@@ -334,6 +336,14 @@ fn cmd_serve(args: &[String]) -> i32 {
             "skip the microkernel autotuner: every dot compiles to the \
              deterministic per-dtype heuristic variant instead of measuring \
              candidates on first sight of a shape class",
+        )
+        .opt(
+            "tune-cache",
+            Some(""),
+            "persist the autotuner table across restarts: load measured rows \
+             from this file before serving (a corrupt or version-mismatched \
+             cache is ignored — classes re-measure), and write the table \
+             back on shutdown",
         );
     let m = parse_or_exit(cmd, args);
     let dir = m.get("artifacts").to_string();
@@ -374,6 +384,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let no_tune = m.flag("no-tune");
+    let tune_cache = match m.get("tune-cache") {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
     match artifacts::ensure_artifacts(std::path::Path::new(&dir)) {
         Ok(true) => eprintln!("materialized embedded AOT artifacts into {dir}/"),
         Ok(false) => {}
@@ -398,6 +412,18 @@ fn cmd_serve(args: &[String]) -> i32 {
     // one device = one persistent GEMM pool + budget, shared by every
     // shard (shards add engines, not worker threads)
     let device = if threads == 0 { Device::shared() } else { Device::new(threads) };
+    // warm-start the autotuner from a previous run's measured rows: the
+    // first shard's bucket compiles then hit memoized classes instead of
+    // re-measuring. A corrupt/mismatched cache is a warning, not a fault.
+    if let Some(path) = tune_cache.as_deref().filter(|_| !no_tune) {
+        if path.exists() {
+            match device.tune().load_into(path) {
+                Ok(rows) => eprintln!("tune cache: loaded {rows} measured rows from {}", path.display()),
+                Err(e) => eprintln!("tune cache: ignoring {} ({e}); classes will re-measure", path.display()),
+            }
+        }
+    }
+    let tune_table = device.tune();
     let coord = Coordinator::start(cfg, weights, move |shard| {
         // one tune table per device: shape classes measured by any shard's
         // compile are reused verbatim by every later shard/bucket compile
@@ -468,6 +494,25 @@ fn cmd_serve(args: &[String]) -> i32 {
         stats.latency.quantile_us(0.99),
         stats.mean_batch_occupancy()
     );
+    // per-family latency slices: the batched families fill their own
+    // histograms next to the global one, so family tails are visible
+    // (a DFT p99 regression no longer hides inside the classify bulk)
+    for (family, h) in [
+        ("mlp", &stats.latency_mlp),
+        ("dft", &stats.latency_dft),
+        ("direct", &stats.latency_direct),
+    ] {
+        if h.count() == 0 {
+            continue;
+        }
+        println!(
+            "  {family:6} latency: {:6} samples, p50 {} us, p95 {} us, p99 {} us",
+            h.count(),
+            h.quantile_us(0.5),
+            h.quantile_us(0.95),
+            h.quantile_us(0.99),
+        );
+    }
     for (family, buckets) in [("mlp", &stats.buckets), ("dft", &stats.dft_buckets)] {
         for b in buckets {
             println!(
@@ -483,11 +528,169 @@ fn cmd_serve(args: &[String]) -> i32 {
             );
         }
     }
+    if let Some(path) = tune_cache.as_deref().filter(|_| !no_tune) {
+        match tune_table.save(path) {
+            Ok(rows) => eprintln!("tune cache: wrote {rows} measured rows to {}", path.display()),
+            Err(e) => eprintln!("tune cache: cannot write {}: {e}", path.display()),
+        }
+    }
     if ok == n_req {
         0
     } else {
         1
     }
+}
+
+/// `power-mma profile <model>`: compile one AOT artifact to a plan and
+/// print its per-step roofline — for every compiled step, the
+/// synthesized MMA instruction stream's mix, the CoreSim-simulated
+/// MACs/cycle ceiling on POWER10, the dtype's Table-I architectural
+/// peak, and (unless `--no-measure`) achieved MACs/cycle from a
+/// wall-clock replay of the step's executed kernel.
+fn cmd_profile(args: &[String]) -> i32 {
+    use power_mma::runtime::{artifacts, ModelMeta, TuneTable, NOMINAL_GHZ};
+    let cmd = Command::new(
+        "power-mma profile",
+        "per-step roofline profile of a compiled model plan",
+    )
+    .opt("artifacts", Some("artifacts"), "artifact directory")
+    .flag(
+        "no-tune",
+        "compile with the per-dtype heuristic variants (skip autotuner measurement)",
+    )
+    .flag("no-measure", "skip the wall-clock achieved replays (pure simulation)")
+    .flag(
+        "int8",
+        "compile with the model's calibration record when it has one \
+         (dots lower to the quantized rank-4 engine)",
+    )
+    .positional("model", "artifact name from manifest.txt, e.g. mlp_b32 | gemm_bf16 | dft_b32");
+    let m = parse_or_exit(cmd, args);
+    let model = m.positional(0).to_string();
+    if model.is_empty() {
+        eprintln!("profile: missing <model> (see `power-mma profile --help`)");
+        return 2;
+    }
+    let dir = std::path::PathBuf::from(m.get("artifacts"));
+    match artifacts::ensure_artifacts(&dir) {
+        Ok(true) => eprintln!("materialized embedded AOT artifacts into {}/", dir.display()),
+        Ok(false) => {}
+        Err(e) => {
+            eprintln!("cannot prepare artifact directory {}: {e}", dir.display());
+            return 1;
+        }
+    }
+    let manifest = match std::fs::read_to_string(dir.join("manifest.txt")) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {}/manifest.txt: {e}", dir.display());
+            return 1;
+        }
+    };
+    let mut meta: Option<ModelMeta> = None;
+    for line in manifest.lines().filter(|l| !l.trim().is_empty()) {
+        match ModelMeta::parse(line) {
+            Ok(mm) if mm.name == model => {
+                meta = Some(mm);
+                break;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("bad manifest line: {e}");
+                return 1;
+            }
+        }
+    }
+    let Some(meta) = meta else {
+        eprintln!("unknown model '{model}' (not in {}/manifest.txt)", dir.display());
+        return 1;
+    };
+    let hlo_path = dir.join(format!("{model}.hlo.txt"));
+    let hlo_text = match std::fs::read_to_string(&hlo_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", hlo_path.display());
+            return 1;
+        }
+    };
+    let mut opts = power_mma::runtime::plan::PlanOptions::default();
+    if !m.flag("no-tune") {
+        opts.tune = Some(std::sync::Arc::new(TuneTable::new()));
+    }
+    if m.flag("int8") {
+        if meta.calib.is_none() {
+            eprintln!("model '{model}' has no calibration record; cannot profile --int8");
+            return 1;
+        }
+        opts.int8_calib = meta.calib.clone();
+    }
+    let plan = match power_mma::runtime::hlo::HloModule::parse(&hlo_text)
+        .and_then(|mm| power_mma::runtime::plan::Plan::compile_with_options(&mm, opts))
+    {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("compiling plan for {model}: {e}");
+            return 1;
+        }
+    };
+    let measure = !m.flag("no-measure");
+    let profiles = if measure { plan.profile_measured() } else { plan.profile() };
+    let mut table = Table::new(&[
+        "#", "step", "dtype", "m", "n", "k", "variant", "insts", "macs", "loads", "stores",
+        "ceil", "peak", "ach", "%ceil", "bound", "top opcodes",
+    ]);
+    let mut total_macs = 0u64;
+    for p in &profiles {
+        total_macs += p.mix.macs;
+        let (ceil, peak, ach, pct) = if p.is_gemm() {
+            (
+                f2(p.sim_macs_per_cycle),
+                format!("{:.0}", p.table1_peak_macs_per_cycle),
+                p.achieved_macs_per_cycle.map(|a| format!("{a:.3}")).unwrap_or("-".into()),
+                p.pct_of_ceiling().map(|x| format!("{:.1}%", x * 100.0)).unwrap_or("-".into()),
+            )
+        } else {
+            ("-".into(), "-".into(), "-".into(), "-".into())
+        };
+        table.row(&[
+            p.index.to_string(),
+            p.step.clone(),
+            p.dtype.to_string(),
+            p.m.to_string(),
+            p.n.to_string(),
+            p.k.to_string(),
+            p.variant.map(|v| v.name()).unwrap_or_else(|| "-".into()),
+            p.mix.insts.to_string(),
+            p.mix.macs.to_string(),
+            p.mix.loads.to_string(),
+            p.mix.stores.to_string(),
+            ceil,
+            peak,
+            ach,
+            pct,
+            p.bound.to_string(),
+            p.mix.top_opcodes(3),
+        ]);
+    }
+    println!(
+        "{model}: {} steps, {total_macs} MACs per request; simulated on power10, \
+         achieved at {NOMINAL_GHZ:.0} GHz nominal{}:\n{}",
+        profiles.len(),
+        if measure { "" } else { " (measurement off)" },
+        table.render()
+    );
+    for p in &profiles {
+        if p.is_gemm() {
+            let occ = p
+                .occupancies
+                .iter()
+                .map(|(u, f)| format!("{u} {:.0}%", f * 100.0))
+                .collect::<Vec<_>>()
+                .join(", ");
+            println!("  step {:2} {}: occupancy {occ}", p.index, p.step);
+        }
+    }
+    0
 }
 
 /// HLO text of a single `n×n×n` f32 dot — the synthetic artifact used to
@@ -914,13 +1117,13 @@ fn cmd_bench(args: &[String]) -> i32 {
     use power_mma::coordinator::ShardRouting;
     use power_mma::isa::GerKind;
     use power_mma::kernels::dft::dft_reference;
-    use power_mma::kernels::gemm_rp::{gemm_i8_8x16, rp_gemm_program};
-    use power_mma::kernels::pack::Im2colSpec;
+    use power_mma::kernels::gemm_rp::gemm_i8_8x16;
+    use power_mma::kernels::pack::{DftPanels, Im2colSpec};
     use power_mma::runtime::hlo::bf16_round;
     use power_mma::runtime::{
-        artifacts, det_input, det_inputs, dft_hlo_text, mlp_hlo_text, mlp_int8_calib, Device,
-        EngineBackend, HloInterpreterBackend, HloPlanBackend, ModelMeta, TuneDtype, TuneEpi,
-        TunePanel, TuneTable,
+        artifacts, det_input, det_inputs, dft_hlo_text, microkernel_fpc, mlp_hlo_text,
+        mlp_int8_calib, Device, EngineBackend, HloInterpreterBackend, HloPlanBackend, ModelMeta,
+        TuneDtype, TuneEpi, TunePanel, TuneTable,
     };
     use std::time::Duration;
 
@@ -1295,14 +1498,13 @@ fn cmd_bench(args: &[String]) -> i32 {
             .all(|(x, y)| x.to_bits() == y.to_bits());
     // Table I modeled on the core simulator: the rank-2 bf16 kernel
     // retires 2x the MACs per instruction of xvf32ger, so at equal issue
-    // rates the MACs/cycle ratio approaches 2
-    let sim_fpc = |prog: &[power_mma::isa::Inst]| {
-        let mut sim = CoreSim::new(MachineConfig::power10());
-        sim.run(prog, 1 << 22).flops_per_cycle()
-    };
+    // rates the MACs/cycle ratio approaches 2. The probe is the profile
+    // layer's generalized microkernel simulation (identical program,
+    // simulator, and fuel as the inline closure it replaced —
+    // tests/profile_engine.rs pins the reproduction bit-for-bit).
     let sim_steps = 64usize;
-    let fpc_f32 = sim_fpc(&rp_gemm_program(GerKind::F32Ger, 2 * sim_steps, None));
-    let fpc_bf16 = sim_fpc(&rp_gemm_program(GerKind::Bf16Ger2, sim_steps, None));
+    let fpc_f32 = microkernel_fpc(GerKind::F32Ger, 2 * sim_steps);
+    let fpc_bf16 = microkernel_fpc(GerKind::Bf16Ger2, sim_steps);
     let macs_ratio = fpc_bf16 / fpc_f32;
     println!(
         "bf16 {size}^3  widened {bf16_widened_ms:9.2} ms | packed {bf16_packed_ms:9.2} ms \
@@ -1463,8 +1665,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         c_int8.iter().zip(&c_pool).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
     // Table I on the core simulator: xvi8ger4 retires 4x the MACs per
     // instruction of xvf32ger (equal-MACs programs, like the bf16 pair)
-    let fpc_f32_4x = sim_fpc(&rp_gemm_program(GerKind::F32Ger, 4 * sim_steps, None));
-    let fpc_i8 = sim_fpc(&rp_gemm_program(GerKind::I8Ger4, sim_steps, None));
+    let fpc_f32_4x = microkernel_fpc(GerKind::F32Ger, 4 * sim_steps);
+    let fpc_i8 = microkernel_fpc(GerKind::I8Ger4, sim_steps);
     let int8_macs_ratio = fpc_i8 / fpc_f32_4x;
     println!(
         "int8 {size}^3  f32 {pool_ms:9.2} ms | packed {int8_ms:9.2} ms ({:.2}x) | \
@@ -1523,6 +1725,130 @@ fn cmd_bench(args: &[String]) -> i32 {
         eprintln!("autotune: int8 MLP plan compile failed: {e}");
         return 1;
     }
+    // -- 6d. roofline: per-step observability over the served families ---
+    // one plan per served family, compiled against the same tune table
+    // (the classes seeded above stay memoized; the DFT compile adds its
+    // dft_packed class, which the tuning audit below then replays), then
+    // every compiled GEMM step bridges through the profile layer:
+    // executed kernel -> synthesized MMA stream -> CoreSim ceiling ->
+    // achieved MACs/cycle from a wall-clock replay at the nominal clock
+    let roofline_plans: Vec<(&str, power_mma::runtime::plan::Plan)> = {
+        let compile = |text: &str, int8: Option<power_mma::runtime::Int8Calib>| {
+            power_mma::runtime::hlo::HloModule::parse(text).and_then(|mm| {
+                power_mma::runtime::plan::Plan::compile_with_options(
+                    &mm,
+                    power_mma::runtime::plan::PlanOptions {
+                        tune: Some(tune_table.clone()),
+                        int8_calib: int8,
+                        ..Default::default()
+                    },
+                )
+            })
+        };
+        let family_plans = [
+            ("mlp_f32", compile(&mlp_hlo_text(32, i8f, i8h, i8c), None)),
+            ("gemm_bf16", compile(bf16_art.hlo_text, None)),
+            (
+                "mlp_int8",
+                compile(&mlp_hlo_text(32, i8f, i8h, i8c), Some(mlp_int8_calib(i8f, i8h, i8c))),
+            ),
+            ("dft_b32", compile(&dft_hlo_text(32), None)),
+        ];
+        let mut out = Vec::new();
+        for (fam, p) in family_plans {
+            match p {
+                Ok(p) => out.push((fam, p)),
+                Err(e) => {
+                    eprintln!("roofline: {fam} plan compile failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        out
+    };
+    let mut roofline_rows = Vec::new();
+    let mut roofline_in_range = true;
+    let mut roofline_table = Table::new(&[
+        "family", "step", "dtype", "m", "n", "k", "variant", "insts", "macs", "ceil", "ach",
+        "%ceil", "bound",
+    ]);
+    for (fam, plan) in &roofline_plans {
+        for p in plan.profile_measured() {
+            if !p.is_gemm() {
+                continue;
+            }
+            let achieved = p.achieved_macs_per_cycle.unwrap_or(0.0);
+            let pct = p.pct_of_ceiling().unwrap_or(0.0);
+            roofline_in_range &= pct > 0.0 && pct <= 1.05;
+            let variant = p.variant.map(|v| v.name()).unwrap_or_default();
+            roofline_table.row(&[
+                fam.to_string(),
+                p.step.clone(),
+                p.dtype.to_string(),
+                p.m.to_string(),
+                p.n.to_string(),
+                p.k.to_string(),
+                variant.clone(),
+                p.mix.insts.to_string(),
+                p.mix.macs.to_string(),
+                f2(p.sim_macs_per_cycle),
+                format!("{achieved:.3}"),
+                format!("{:.1}%", pct * 100.0),
+                p.bound.to_string(),
+            ]);
+            let opcodes = p
+                .mix
+                .counts
+                .iter()
+                .map(|(name, c)| format!("\"{name}\": {c}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let occ = p
+                .occupancies
+                .iter()
+                .map(|(u, f)| format!("\"{u}\": {f:.4}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            roofline_rows.push(format!(
+                "{{\"family\": \"{fam}\", \"step_index\": {}, \"step\": \"{}\", \
+                 \"dtype\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+                 \"variant\": \"{variant}\", \"gemms\": {}, \
+                 \"mix\": {{\"insts\": {}, \"macs\": {}, \"loads\": {}, \"stores\": {}, \
+                 \"load_bytes\": {}, \"store_bytes\": {}, \"acc_transfers\": {}, \
+                 \"opcodes\": {{{opcodes}}}}}, \
+                 \"sim_cycles\": {}, \"sim_macs_per_cycle\": {:.4}, \
+                 \"table1_peak_macs_per_cycle\": {:.1}, \
+                 \"occupancy\": {{{occ}}}, \"bound_unit\": \"{}\", \"bound\": \"{}\", \
+                 \"achieved_macs_per_cycle\": {achieved:.4}, \"pct_of_ceiling\": {pct:.4}}}",
+                p.index,
+                p.step,
+                p.dtype,
+                p.m,
+                p.n,
+                p.k,
+                p.gemms,
+                p.mix.insts,
+                p.mix.macs,
+                p.mix.loads,
+                p.mix.stores,
+                p.mix.load_bytes,
+                p.mix.store_bytes,
+                p.mix.acc_xfers,
+                p.sim_cycles,
+                p.sim_macs_per_cycle,
+                p.table1_peak_macs_per_cycle,
+                p.bound_unit,
+                p.bound,
+            ));
+        }
+    }
+    println!(
+        "roofline (per compiled GEMM step: synthesized stream -> CoreSim ceiling vs \
+         achieved at {:.0} GHz nominal):\n{}",
+        power_mma::runtime::NOMINAL_GHZ,
+        roofline_table.render()
+    );
+
     let tune_snapshot = tune_table.snapshot();
     if tune_snapshot.is_empty() {
         eprintln!("autotune: the tune table is empty after seeding compiles");
@@ -1545,6 +1871,43 @@ fn cmd_bench(args: &[String]) -> i32 {
         let bias = det_input(tn, 9);
         let canon = power_mma::runtime::tune::heuristic_variant(key.dtype);
         let identical = match key.dtype {
+            TuneDtype::F32 if key.panel == TunePanel::DftPacked => {
+                // DFT classes replay the packed-panel complex dual-GEMM
+                // the class actually times — all four GEMMs, the last
+                // two with the DftCombine writeback — chosen variant vs
+                // canonical, compared bitwise over both output halves
+                let tb_im = det_input(tk * tn, 7);
+                let xi = det_input(tm * tk, 8);
+                let mut run = |re: &mut [f32], im: &mut [f32], s: &mut GemmScratch, v: GemmVariant| {
+                    let panels = DftPanels::pack(&tb, &tb_im, tk, tn, v.nr, v.block.kc);
+                    let mut t_ii = vec![0f32; tm * tn];
+                    let mut t_ir = vec![0f32; tm * tn];
+                    gemm_f32_tuned_into(
+                        &mut t_ii, &xi, PanelB::Packed(&panels.im), tm, tn, tk,
+                        Accum::F64, Epilogue::None, Par::Seq, s, v,
+                    );
+                    gemm_f32_tuned_into(
+                        &mut t_ir, &xi, PanelB::Packed(&panels.re), tm, tn, tk,
+                        Accum::F64, Epilogue::None, Par::Seq, s, v,
+                    );
+                    gemm_f32_tuned_into(
+                        re, &ta, PanelB::Packed(&panels.re), tm, tn, tk, Accum::F64,
+                        Epilogue::DftCombine { other: &t_ii, sub: true }, Par::Seq, s, v,
+                    );
+                    gemm_f32_tuned_into(
+                        im, &ta, PanelB::Packed(&panels.im), tm, tn, tk, Accum::F64,
+                        Epilogue::DftCombine { other: &t_ir, sub: false }, Par::Seq, s, v,
+                    );
+                };
+                let (mut re_c, mut im_c) = (vec![0f32; tm * tn], vec![0f32; tm * tn]);
+                let (mut re_d, mut im_d) = (vec![0f32; tm * tn], vec![0f32; tm * tn]);
+                run(&mut re_c, &mut im_c, &mut tv_scratch, choice.variant);
+                run(&mut re_d, &mut im_d, &mut tv_scratch, canon);
+                re_c.iter()
+                    .zip(&re_d)
+                    .chain(im_c.iter().zip(&im_d))
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+            }
             TuneDtype::F32 => {
                 // im2col classes replay through the same synthetic gather
                 // spec the tuner measures with (identity k-row gather over
@@ -1562,10 +1925,10 @@ fn cmd_bench(args: &[String]) -> i32 {
                         TuneEpi::BiasRelu => Epilogue::BiasRelu(&bias),
                     };
                     let (src, accum) = match key.panel {
-                        TunePanel::Matrix => (PanelB::Matrix(&tb), Accum::F64),
                         TunePanel::Im2col => {
                             (PanelB::Im2col { img: &tb, spec: &spec }, Accum::F32)
                         }
+                        _ => (PanelB::Matrix(&tb), Accum::F64),
                     };
                     gemm_f32_tuned_into(
                         c,
@@ -2042,6 +2405,8 @@ fn cmd_bench(args: &[String]) -> i32 {
          \"identical\": {tuning_identical}, \
          \"table\": [\n    {}\n  ]}},\n  \
          \"dft\": {dft_json},\n  \
+         \"roofline\": {{\"nominal_ghz\": {:.1}, \"pct_in_range\": {roofline_in_range}, \
+         \"steps\": [\n    {}\n  ]}},\n  \
          \"acceptance\": {{\"target_speedup\": 3.0, \"achieved\": {speedup:.3}, \
          \"pass\": {}, \"numerics_identical\": {numerics_ok}}}\n}}\n",
         gemm_rows.join(",\n    "),
@@ -2061,6 +2426,8 @@ fn cmd_bench(args: &[String]) -> i32 {
         window_rows.join(",\n    "),
         tune_snapshot.len(),
         tuning_rows.join(",\n    "),
+        power_mma::runtime::NOMINAL_GHZ,
+        roofline_rows.join(",\n    "),
         speedup >= 3.0
     );
     let out_path = m.get("out");

@@ -201,6 +201,80 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile_us(0.5), 0);
         assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(250));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_us(), 250);
+        assert_eq!(h.mean_us(), 250.0);
+        // Every quantile of a one-sample distribution is that sample's
+        // bucket — within the ~4% log-bucket granularity.
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let v = h.quantile_us(q);
+            assert!((240..=261).contains(&v), "q{q} = {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_max_bucket_overflow_clamps() {
+        let h = Histogram::new();
+        // ~2^50 µs lands beyond the last octave the buckets cover; the
+        // recording must clamp to the final bucket, not index out of
+        // bounds, and quantiles must stay finite (falling back to the
+        // exact tracked max rather than the saturated bucket value).
+        let huge = Duration::from_micros(1 << 50);
+        h.record(huge);
+        h.record(Duration::from_micros(10));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max_us(), 1 << 50);
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= Histogram::bucket_value(NBUCKETS - 1) || p99 == h.max_us(), "p99 = {p99}");
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        // p50 ≤ p95 ≤ p99 must hold for any sample set; exercise a
+        // skewed multimodal one (many fast, few slow).
+        let h = Histogram::new();
+        for _ in 0..900 {
+            h.record(Duration::from_micros(40));
+        }
+        for _ in 0..80 {
+            h.record(Duration::from_micros(2_000));
+        }
+        for _ in 0..20 {
+            h.record(Duration::from_micros(150_000));
+        }
+        let (p50, p95, p99) = (h.quantile_us(0.5), h.quantile_us(0.95), h.quantile_us(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!((35..=45).contains(&p50), "p50 = {p50}");
+        assert!((1_800..=2_200).contains(&p95), "p95 = {p95}");
+        assert!((130_000..=170_000).contains(&p99), "p99 = {p99}");
+    }
+
+    #[test]
+    fn counter_add_accumulates_across_threads() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (1..=6u64)
+            .map(|amount| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        c.add(amount);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Σ 500·a for a in 1..=6 = 500 · 21
+        assert_eq!(c.get(), 500 * 21);
     }
 
     #[test]

@@ -41,11 +41,13 @@ pub mod artifacts;
 pub mod device;
 pub mod hlo;
 pub mod plan;
+pub mod profile;
 pub mod tune;
 
 pub use device::{
     bf16_to_f32, f32_to_bf16, DTypeSlice, DTypeSliceMut, Device, ExecCtx, TensorMut, TensorRef,
 };
+pub use profile::{microkernel_fpc, InstMix, StepKernel, StepProfile, StepSpec, NOMINAL_GHZ};
 pub use tune::{TuneChoice, TuneDtype, TuneEpi, TuneKey, TunePanel, TuneTable};
 
 use crate::blas::block_gemm::Par;

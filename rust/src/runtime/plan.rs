@@ -97,13 +97,16 @@
 //! ```
 
 use super::hlo::{bf16_round, DType, HloModule, Instr, Tensor};
+use super::profile::{self, StepKernel, StepProfile, StepSpec};
 use super::tune::{heuristic_variant, TuneDtype, TuneEpi, TuneKey, TunePanel, TuneTable};
 use super::Int8Calib;
-use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
-use crate::blas::i8_gemm::{gemm_i8_dequant_tuned_into, I8Epilogue, I8Scratch, QuantParams};
+use crate::blas::bf16_gemm::{executed_kernel_bf16, gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
+use crate::blas::i8_gemm::{
+    executed_kernel_i8, gemm_i8_dequant_tuned_into, I8Epilogue, I8Scratch, QuantParams,
+};
 use crate::blas::block_gemm::{
-    gemm_f32_tuned_into, threads_for_pooled, Accum, Epilogue, GemmScratch, GemmVariant, PanelB,
-    Par,
+    executed_kernel_f32, gemm_f32_tuned_into, threads_for_pooled, Accum, Epilogue, GemmScratch,
+    GemmVariant, PanelB, Par,
 };
 use crate::error::Result;
 use crate::isa::types::bf16_to_f32;
@@ -1576,6 +1579,9 @@ impl Plan {
                     }
                     Fuse::Dft { xr, xi, fr, fi, im, m, n: nn, k } => {
                         max_dot = (max_dot.0.max(*m), max_dot.1.max(*nn), max_dot.2.max(*k));
+                        // keyed (and measured) as the packed-panel
+                        // complex dual-GEMM it actually executes, not as
+                        // a single matrix-modality GEMM of this shape
                         let v = tuned_variant(
                             &opts.tune,
                             *m,
@@ -1583,7 +1589,7 @@ impl Plan {
                             *k,
                             TuneDtype::F32,
                             TuneEpi::None,
-                            TunePanel::Matrix,
+                            TunePanel::DftPacked,
                         );
                         // the imaginary root's slot, assigned here so the
                         // one DftGemm step can write both halves (its own
@@ -2069,7 +2075,7 @@ impl Plan {
                         k: *k,
                         dtype: TuneDtype::F32,
                         epi: TuneEpi::None,
-                        panel: TunePanel::Matrix,
+                        panel: TunePanel::DftPacked,
                     };
                     Some((key, *v))
                 }
@@ -2098,6 +2104,98 @@ impl Plan {
                 _ => None,
             })
             .collect()
+    }
+
+    /// The roofline observability surface: every compiled step's
+    /// executed-kernel descriptor, as the profile layer's input. GEMM
+    /// steps carry the engine's [`ExecutedKernel`] (the exact
+    /// `(m, n, k, dtype, variant)` it ran, with the tuner-chosen
+    /// blocking), the fused epilogue class, the B-panel modality, and
+    /// the GEMM count (4 for `dft_gemm`'s packed-panel complex product);
+    /// data-movement steps carry their byte traffic.
+    ///
+    /// [`ExecutedKernel`]: crate::blas::block_gemm::ExecutedKernel
+    pub fn profile_specs(&self) -> Vec<StepSpec> {
+        let names = self.step_names();
+        self.steps
+            .iter()
+            .zip(names)
+            .enumerate()
+            .map(|(index, (s, name))| {
+                let kernel = match s {
+                    Step::Dot { m, n, k, epi, v, .. } => StepKernel::Gemm {
+                        ek: executed_kernel_f32(*m, *n, *k, *v),
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                        gemms: 1,
+                    },
+                    Step::Im2colGemm { m, n, k, v, .. } => StepKernel::Gemm {
+                        ek: executed_kernel_f32(*m, *n, *k, *v),
+                        epi: TuneEpi::None,
+                        panel: TunePanel::Im2col,
+                        gemms: 1,
+                    },
+                    Step::DftGemm { m, n, k, v, .. } => StepKernel::Gemm {
+                        ek: executed_kernel_f32(*m, *n, *k, *v),
+                        epi: TuneEpi::None,
+                        panel: TunePanel::DftPacked,
+                        gemms: 4,
+                    },
+                    Step::DotBf16 { m, n, k, epi, v, .. } => StepKernel::Gemm {
+                        ek: executed_kernel_bf16(*m, *n, *k, *v),
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                        gemms: 1,
+                    },
+                    Step::DotI8 { m, n, k, epi, v, .. } => StepKernel::Gemm {
+                        ek: executed_kernel_i8(*m, *n, *k, *v),
+                        epi: epi.tune_epi(),
+                        panel: TunePanel::Matrix,
+                        gemms: 1,
+                    },
+                    Step::Param { len, .. } | Step::Copy { len, .. } => StepKernel::Mem {
+                        load_bytes: len * 4,
+                        store_bytes: len * 4,
+                        fma_ops: 0,
+                    },
+                    Step::Bf16 { len, .. } => StepKernel::Mem {
+                        load_bytes: len * 4,
+                        store_bytes: len * 4,
+                        fma_ops: len.div_ceil(4),
+                    },
+                    Step::Binary { len, .. } => StepKernel::Mem {
+                        load_bytes: 2 * len * 4,
+                        store_bytes: len * 4,
+                        fma_ops: len.div_ceil(4),
+                    },
+                    Step::Gather { spec, .. } => StepKernel::Mem {
+                        load_bytes: spec.len * 4,
+                        store_bytes: spec.len * 4,
+                        fma_ops: 0,
+                    },
+                };
+                StepSpec { index, step: name.to_string(), kernel }
+            })
+            .collect()
+    }
+
+    /// Profile every step through the core model: synthesize each
+    /// step's MMA instruction stream, collect its exact [`InstMix`],
+    /// and simulate the MACs/cycle ceiling plus bound classification on
+    /// POWER10. Pure simulation — no wall-clock replays (see
+    /// [`Plan::profile_measured`]).
+    ///
+    /// [`InstMix`]: super::profile::InstMix
+    pub fn profile(&self) -> Vec<StepProfile> {
+        profile::profile_steps(&self.profile_specs())
+    }
+
+    /// [`Plan::profile`] plus achieved MACs/cycle: each GEMM step's
+    /// executed kernel is replayed on synthetic operands of its exact
+    /// shape and converted at the nominal clock
+    /// ([`profile::NOMINAL_GHZ`]) — the roofline's measured axis.
+    pub fn profile_measured(&self) -> Vec<StepProfile> {
+        profile::profile_steps_measured(&self.profile_specs())
     }
 
     /// Preallocate execution buffers for this plan: all arena slots at

@@ -1,0 +1,882 @@
+//! **Per-step roofline observability**: the bridge between the compiled
+//! [`Plan`](super::plan::Plan), the ISA surface ([`crate::isa`]), and the
+//! cycle-approximate core model ([`crate::core_model`]).
+//!
+//! For every GEMM-bearing plan step this module synthesizes the MMA
+//! instruction stream the step's *executed kernel* corresponds to — the
+//! exact `(m, n, k, dtype, variant, epilogue)` the engine ran, reported
+//! by the engine itself as an
+//! [`ExecutedKernel`](crate::blas::block_gemm::ExecutedKernel) — walks
+//! it for an exact [`InstMix`] (per-opcode dynamic counts, MACs, memory
+//! traffic, accumulator transfers), and runs it through [`CoreSim`]
+//! under [`MachineConfig::power10`] for a **simulated MACs/cycle
+//! ceiling** plus per-resource occupancies and a bound classification.
+//! Wall-clock engine replays of the same kernel convert to **achieved
+//! MACs/cycle** at [`NOMINAL_GHZ`], which yields the roofline verdict:
+//!
+//! ```text
+//! plan step ──(ExecutedKernel)──▶ synthesized Inst stream
+//!     ──▶ InstMix (exact: Σ ger MACs == gemms·m·n·k)
+//!     ──▶ CoreSim(power10) ──▶ ceiling MACs/cycle, occupancies, bound
+//!     ──▶ achieved / ceiling / Table-I peak  (the roofline row)
+//! ```
+//!
+//! The synthesis mirrors the blocked engines exactly: the tuner-chosen
+//! [`GemmVariant`] drives the `jc → pc → ic → jr → ir` loop nest, the
+//! register tile maps onto the 4×4 accumulator grid in the same
+//! `[0, 1, 4, 5, 2, 3, 6, 7]` order as
+//! [`rp_gemm_program`](crate::kernels::gemm_rp::rp_gemm_program), cache
+//! blocks re-load/re-store the C tile through `xxmtacc`/`xxmfacc`, and
+//! m/n/k tails issue the prefixed masked (`pm…`) forms, so the stream's
+//! MAC count matches the step's `m·n·k` arithmetic *exactly* (pinned by
+//! `rust/tests/profile_engine.rs`). A `DftGemm` step profiles as its
+//! real packed-panel **dual-GEMM×2 structure** (4 f32 GEMMs, the last
+//! two with the `DftCombine` writeback), not as one f32 GEMM.
+//!
+//! [`microkernel_fpc`] is the generalized form of the three ad-hoc
+//! Table-I ratio probes `bench serve` used to compute inline; the bench
+//! now calls it, and the harness proves the reproduction is bit-for-bit.
+
+use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
+use crate::blas::block_gemm::{
+    gemm_f32_tuned_into, Accum, Epilogue, ExecutedKernel, GemmScratch, GemmVariant, PanelB, Par,
+};
+use crate::blas::i8_gemm::{gemm_i8_packed_tuned_into, I8Accum, I8Scratch, I8SrcA, I8SrcB};
+use crate::core_model::{CoreSim, MachineConfig, SimReport};
+use crate::isa::inst::{AccOp, Ger, GerKind, Inst};
+use crate::kernels::gemm_rp::rp_gemm_program;
+use crate::kernels::pack::{DftPanels, Im2colSpec};
+use crate::runtime::tune::{TuneEpi, TunePanel};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Nominal clock used to convert wall-clock engine replays to
+/// MACs/cycle — the ~4 GHz class of the paper's POWER10 measurement
+/// parts. The roofline's *achieved* axis is honest about being a
+/// host-measured proxy: it is exact in MACs and nominal in cycles.
+pub const NOMINAL_GHZ: f64 = 4.0;
+
+/// Fuel for the synthesized-stream simulations (streams are loop-free,
+/// so dynamic count == static length, well under this).
+const SIM_FUEL: u64 = 1 << 26;
+
+/// MAC budget for the *simulated* stream. The [`InstMix`] is always
+/// exact for the full `m·n·k`; only the ceiling simulation clamps the
+/// shape (to whole cache blocks, keeping the variant's blocking and
+/// revisit structure) so profiling a large model stays fast.
+const SIM_MAC_CAP: usize = 1 << 22;
+
+/// Accumulator assignment order of the 8-accumulator register tiles
+/// (matches [`rp_gemm_program`]'s interleaved pattern).
+const ACC_ORDER8: [u8; 8] = [0, 1, 4, 5, 2, 3, 6, 7];
+
+/// The fused epilogue a synthesized GEMM stream models at the final
+/// C-tile writeback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EpiModel {
+    None,
+    Bias,
+    BiasRelu,
+    /// The DFT `±other` combine (a load + vector add per output row).
+    DftCombine,
+}
+
+impl EpiModel {
+    fn of(epi: TuneEpi) -> EpiModel {
+        match epi {
+            TuneEpi::None => EpiModel::None,
+            TuneEpi::Bias => EpiModel::Bias,
+            TuneEpi::BiasRelu => EpiModel::BiasRelu,
+        }
+    }
+}
+
+/// What one plan step executes, as reported by the step itself — the
+/// input to both the stream synthesis and the wall-clock replay.
+#[derive(Clone, Debug)]
+pub enum StepKernel {
+    /// A GEMM-bearing step: the engine's executed-kernel descriptor,
+    /// its fused epilogue, its B-panel modality, and how many GEMMs of
+    /// that shape the step runs (4 for `dft_gemm`, else 1).
+    Gemm { ek: ExecutedKernel, epi: TuneEpi, panel: TunePanel, gemms: usize },
+    /// A pure data-movement step (param materialization, copies,
+    /// conversions, gathers, elementwise tails): bytes in/out plus any
+    /// vector FMA work, profiled as a load/store stream.
+    Mem { load_bytes: usize, store_bytes: usize, fma_ops: usize },
+}
+
+/// One plan step's profiling input: its position, display name, and
+/// executed kernel.
+#[derive(Clone, Debug)]
+pub struct StepSpec {
+    pub index: usize,
+    pub step: String,
+    pub kernel: StepKernel,
+}
+
+/// Exact dynamic instruction mix of a synthesized stream.
+#[derive(Clone, Debug, Default)]
+pub struct InstMix {
+    /// Per-opcode dynamic counts, mnemonic-sorted (e.g.
+    /// `("pmxvf32gerpp", 12)`).
+    pub counts: Vec<(String, u64)>,
+    /// Total dynamic instructions.
+    pub insts: u64,
+    /// Multiply-accumulates retired by `ger` instructions — exactly
+    /// `gemms · m · n · k` for a GEMM step (masked forms count only
+    /// enabled products, §II-C).
+    pub macs: u64,
+    /// Dynamic load instructions (`lxv`/`lxvp`).
+    pub loads: u64,
+    /// Dynamic store instructions (`stxv`/`stxvp`).
+    pub stores: u64,
+    /// Bytes loaded.
+    pub load_bytes: u64,
+    /// Bytes stored.
+    pub store_bytes: u64,
+    /// Accumulator transfers (`xxmtacc` + `xxmfacc` + `xxsetaccz`) —
+    /// the §III priming/depriming traffic.
+    pub acc_xfers: u64,
+}
+
+impl InstMix {
+    /// The `count` highest-frequency opcodes, formatted `name:count`.
+    pub fn top_opcodes(&self, count: usize) -> String {
+        let mut rows: Vec<&(String, u64)> = self.counts.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        rows.iter()
+            .take(count)
+            .map(|(n, c)| format!("{n}:{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Streaming [`InstMix`] accumulator.
+#[derive(Default)]
+struct MixBuilder {
+    counts: BTreeMap<String, u64>,
+    mix: InstMix,
+}
+
+impl MixBuilder {
+    fn observe(&mut self, inst: &Inst) {
+        *self.counts.entry(opcode_name(inst)).or_insert(0) += 1;
+        self.mix.insts += 1;
+        match inst {
+            Inst::Ger(_) => self.mix.macs += inst.flops() / 2,
+            Inst::Lxv { .. } | Inst::Lxvp { .. } => {
+                self.mix.loads += 1;
+                self.mix.load_bytes += u64::from(inst.mem_bytes());
+            }
+            Inst::Stxv { .. } | Inst::Stxvp { .. } => {
+                self.mix.stores += 1;
+                self.mix.store_bytes += u64::from(inst.mem_bytes());
+            }
+            Inst::XxMtAcc { .. } | Inst::XxMfAcc { .. } | Inst::XxSetAccZ { .. } => {
+                self.mix.acc_xfers += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn finish(mut self) -> InstMix {
+        self.mix.counts = self.counts.into_iter().collect();
+        self.mix
+    }
+}
+
+/// Mnemonic of any modeled instruction (`ger` forms include their
+/// `pm` prefix and accumulate suffix).
+pub fn opcode_name(inst: &Inst) -> String {
+    match inst {
+        Inst::Ger(g) => g.mnemonic(),
+        Inst::XxSetAccZ { .. } => "xxsetaccz".into(),
+        Inst::XxMfAcc { .. } => "xxmfacc".into(),
+        Inst::XxMtAcc { .. } => "xxmtacc".into(),
+        Inst::Lxv { .. } => "lxv".into(),
+        Inst::Lxvp { .. } => "lxvp".into(),
+        Inst::Stxv { .. } => "stxv".into(),
+        Inst::Stxvp { .. } => "stxvp".into(),
+        Inst::XvMaddaDp { .. } => "xvmaddadp".into(),
+        Inst::XvMaddaSp { .. } => "xvmaddasp".into(),
+        Inst::XxSpltd { .. } => "xxspltd".into(),
+        Inst::XxSpltw { .. } => "xxspltw".into(),
+        Inst::Xxlor { .. } => "xxlor".into(),
+        Inst::Xxlxor { .. } => "xxlxor".into(),
+        Inst::Addi { .. } => "addi".into(),
+        Inst::Mtctr { .. } => "mtctr".into(),
+        Inst::Bdnz { .. } => "bdnz".into(),
+        Inst::Blr => "blr".into(),
+        Inst::Nop => "nop".into(),
+    }
+}
+
+/// One step's roofline row: instruction mix, simulated ceiling,
+/// occupancies + bound, Table-I peak, and (when measured) achieved
+/// MACs/cycle.
+#[derive(Clone, Debug)]
+pub struct StepProfile {
+    /// Plan step index.
+    pub index: usize,
+    /// Plan step name (e.g. `dot_i8`).
+    pub step: String,
+    /// Executed dtype (`f32` / `bf16` / `i8`), `-` for mem steps.
+    pub dtype: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// The tuner-chosen variant a GEMM step ran under.
+    pub variant: Option<GemmVariant>,
+    /// GEMMs of shape `m×n×k` the step runs (4 for `dft_gemm`).
+    pub gemms: usize,
+    /// Exact mix of the full synthesized stream.
+    pub mix: InstMix,
+    /// Simulated cycles / dynamic instructions of the (possibly
+    /// shape-clamped, see [`SIM_MAC_CAP`]) ceiling stream.
+    pub sim_cycles: u64,
+    pub sim_insts: u64,
+    /// The simulated MACs/cycle ceiling of the synthesized kernel on
+    /// [`MachineConfig::power10`] (0 for mem steps).
+    pub sim_macs_per_cycle: f64,
+    /// The dtype's Table-I architectural peak (`mma_pipes · 16 · rank`).
+    pub table1_peak_macs_per_cycle: f64,
+    /// Per-resource busy fractions from the ceiling simulation.
+    pub occupancies: [(&'static str, f64); 4],
+    /// The unit class that bounds the simulated stream.
+    pub bound_unit: &'static str,
+    /// `compute` (VSU/MME) vs `load` (LSU ports) vs `fixed-point`.
+    pub bound: &'static str,
+    /// Achieved MACs/cycle from a wall-clock engine replay at
+    /// [`NOMINAL_GHZ`] (filled by [`measure_achieved`]; `None` for mem
+    /// steps or unmeasured profiles).
+    pub achieved_macs_per_cycle: Option<f64>,
+}
+
+impl StepProfile {
+    /// Whether this step carries GEMM work (the roofline rows).
+    pub fn is_gemm(&self) -> bool {
+        self.gemms > 0
+    }
+
+    /// `achieved / ceiling`, when both sides exist.
+    pub fn pct_of_ceiling(&self) -> Option<f64> {
+        match self.achieved_macs_per_cycle {
+            Some(a) if self.sim_macs_per_cycle > 0.0 => Some(a / self.sim_macs_per_cycle),
+            _ => None,
+        }
+    }
+}
+
+/// Bound classification of a [`SimReport::bottleneck`] unit class.
+fn bound_class(unit: &'static str) -> &'static str {
+    match unit {
+        "lsu" => "load",
+        "fxu" => "fixed-point",
+        _ => "compute",
+    }
+}
+
+/// The Table I rank-k instruction a packed engine's microkernel maps to.
+fn ger_kind(ek: &ExecutedKernel) -> GerKind {
+    match ek.elem {
+        "bf16" => GerKind::Bf16Ger2,
+        "i8" => GerKind::I8Ger4,
+        _ => GerKind::F32Ger,
+    }
+}
+
+/// Architectural Table-I peak MACs/cycle for a rank-`rank` update:
+/// `mma_pipes × (4×4 tile) × rank`.
+pub fn table1_peak(cfg: &MachineConfig, rank: usize) -> f64 {
+    f64::from(cfg.mma_pipes) * 16.0 * rank as f64
+}
+
+/// LSB-first enable mask over `bits` elements.
+fn mask(bits: usize) -> u8 {
+    ((1u16 << bits) - 1) as u8
+}
+
+/// Synthesize the full instruction stream of one tuned GEMM — the
+/// variant's `jc → pc → ic → jr → ir` blocked loop nest, fully unrolled
+/// (dynamic counts == static counts) — into `emit`. Addresses mirror
+/// the packed-panel layouts: A micropanels re-play across `jr` (the
+/// panel reuse the cache model should see), B panels re-play across
+/// `ic`, and the C tile is stored/reloaded at every cache-block revisit.
+fn gen_gemm_stream(ek: &ExecutedKernel, epi: EpiModel, emit: &mut dyn FnMut(Inst)) {
+    let kind = ger_kind(ek);
+    let rank = ek.rank;
+    let (m, n, k) = (ek.m, ek.n, ek.k);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let v = ek.v;
+    let (mr, nr) = (v.mr, v.nr);
+    let (mc, kc, nc) = (v.block.mc, v.block.kc, v.block.nc);
+    // lxv instructions per k-step to feed the X (rows) and Y (cols)
+    // operand registers — packed panels are zero-padded to the full
+    // tile, so the loads always move whole panel steps
+    let lx = (mr * rank * ek.esize).div_ceil(16);
+    let ly = (nr * rank * ek.esize).div_ceil(16);
+    let ktotal = k.div_ceil(rank);
+    for jc in (0..n).step_by(nc) {
+        let ncols = nc.min(n - jc);
+        let mut pc = 0usize;
+        while pc < k {
+            let kb = kc.min(k - pc);
+            let ksteps = kb.div_ceil(rank);
+            // kc is a multiple of every rank in the family, so only the
+            // final block can carry a partial (masked) last step
+            let step0 = pc / rank;
+            let last_block = pc + kb >= k;
+            for ic in (0..m).step_by(mc) {
+                let mrows = mc.min(m - ic);
+                for jr in (0..ncols).step_by(nr) {
+                    let tn = nr.min(ncols - jr);
+                    let col_panel = (jc + jr) / nr;
+                    for ir in (0..mrows).step_by(mr) {
+                        let tm = mr.min(mrows - ir);
+                        let row_panel = (ic + ir) / mr;
+                        let ar = tm.div_ceil(4);
+                        let ac = tn.div_ceil(4);
+                        let accs = ar * ac;
+                        let acc_at = |a: usize| -> u8 {
+                            if accs == 8 {
+                                ACC_ORDER8[a]
+                            } else {
+                                a as u8
+                            }
+                        };
+                        let c_dq = |a: usize, r: usize| -> i32 {
+                            let (ai, aj) = (a / ac, a % ac);
+                            let row = ic + ir + ai * 4 + r;
+                            let col = jc + jr + aj * 4;
+                            (((row * n + col) * 4) as i32) & !15
+                        };
+                        // cache-block revisit: reload the C tile into
+                        // the accumulators ("two cycles to transfer
+                        // four VSRs to an accumulator", §III)
+                        if pc > 0 {
+                            for a in 0..accs {
+                                let acc = acc_at(a);
+                                for r in 0..4 {
+                                    emit(Inst::Lxv { xt: acc * 4 + r, ra: 3, dq: c_dq(a, r) });
+                                }
+                                emit(Inst::XxMtAcc { acc });
+                            }
+                        }
+                        for s in 0..ksteps {
+                            let prods = rank.min(kb - s * rank);
+                            let gstep = step0 + s;
+                            for i in 0..lx {
+                                let dq = (((row_panel * ktotal + gstep) * lx + i) * 16) as i32;
+                                emit(Inst::Lxv { xt: 32 + i as u8, ra: 4, dq });
+                            }
+                            for j in 0..ly {
+                                let dq = (((col_panel * ktotal + gstep) * ly + j) * 16) as i32;
+                                emit(Inst::Lxv { xt: 36 + j as u8, ra: 5, dq });
+                            }
+                            for a in 0..accs {
+                                let (ai, aj) = (a / ac, a % ac);
+                                let rows = 4.min(tm - ai * 4);
+                                let cols = 4.min(tn - aj * 4);
+                                let op = if pc == 0 && s == 0 { AccOp::New } else { AccOp::PP };
+                                let (xa, yb) = (32 + ai as u8, 36 + aj as u8);
+                                let g = if rows == 4 && cols == 4 && prods == rank {
+                                    Ger::new(kind, op, acc_at(a), xa, yb)
+                                } else {
+                                    Ger::prefixed(
+                                        kind,
+                                        op,
+                                        acc_at(a),
+                                        xa,
+                                        yb,
+                                        mask(rows),
+                                        mask(cols),
+                                        mask(prods),
+                                    )
+                                };
+                                emit(Inst::Ger(g));
+                            }
+                            emit(Inst::Addi { rt: 4, ra: 4, si: (lx * 16) as i32 });
+                            emit(Inst::Addi { rt: 5, ra: 5, si: (ly * 16) as i32 });
+                        }
+                        // writeback: deprime ("four cycles to transfer
+                        // one accumulator to 4 VSRs"), fused epilogue on
+                        // the final block, store the C tile
+                        for a in 0..accs {
+                            let acc = acc_at(a);
+                            emit(Inst::XxMfAcc { acc });
+                            if last_block {
+                                match epi {
+                                    EpiModel::None => {}
+                                    EpiModel::Bias | EpiModel::BiasRelu => {
+                                        let aj = (a % ac) as u8;
+                                        emit(Inst::Lxv { xt: 40 + aj, ra: 6, dq: i32::from(aj) * 16 });
+                                        for r in 0..4u8 {
+                                            emit(Inst::XvMaddaSp {
+                                                xt: acc * 4 + r,
+                                                xa: 40 + aj,
+                                                xb: 44,
+                                            });
+                                            if epi == EpiModel::BiasRelu {
+                                                emit(Inst::Xxlor {
+                                                    xt: acc * 4 + r,
+                                                    xa: acc * 4 + r,
+                                                    xb: 45,
+                                                });
+                                            }
+                                        }
+                                    }
+                                    EpiModel::DftCombine => {
+                                        for r in 0..4u8 {
+                                            emit(Inst::Lxv {
+                                                xt: 46,
+                                                ra: 7,
+                                                dq: c_dq(a, r as usize),
+                                            });
+                                            emit(Inst::XvMaddaSp {
+                                                xt: acc * 4 + r,
+                                                xa: 46,
+                                                xb: 44,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                            for r in 0..4 {
+                                emit(Inst::Stxv { xs: acc * 4 + r, ra: 3, dq: c_dq(a, usize::from(r)) });
+                            }
+                        }
+                    }
+                }
+            }
+            pc += kb;
+        }
+    }
+}
+
+/// The per-GEMM epilogue sequence of a step: `dft_gemm` runs 4 GEMMs —
+/// two plain temporaries, then the two `DftCombine` writebacks.
+fn gemm_epis(spec_epi: TuneEpi, panel: TunePanel, gemms: usize) -> Vec<EpiModel> {
+    if panel == TunePanel::DftPacked {
+        vec![EpiModel::None, EpiModel::None, EpiModel::DftCombine, EpiModel::DftCombine]
+    } else {
+        vec![EpiModel::of(spec_epi); gemms]
+    }
+}
+
+/// Shape-clamp a kernel for the ceiling simulation: whole cache blocks
+/// (so the revisit structure survives), shrunk in tile multiples until
+/// the MAC volume fits [`SIM_MAC_CAP`].
+fn sim_kernel(ek: &ExecutedKernel) -> ExecutedKernel {
+    let mut s = *ek;
+    s.m = s.m.min(s.v.block.mc);
+    s.n = s.n.min(s.v.block.nc);
+    s.k = s.k.min(2 * s.v.block.kc);
+    while s.m.saturating_mul(s.n).saturating_mul(s.k) > SIM_MAC_CAP && s.m > s.v.mr {
+        s.m = (s.m / 2).max(s.v.mr);
+    }
+    while s.m.saturating_mul(s.n).saturating_mul(s.k) > SIM_MAC_CAP && s.n > s.v.nr {
+        s.n = (s.n / 2).max(s.v.nr);
+    }
+    s
+}
+
+/// Run a synthesized stream through [`CoreSim`] on POWER10, with
+/// disjoint operand/result address bases.
+fn simulate(prog: &[Inst]) -> (SimReport, MachineConfig) {
+    let cfg = MachineConfig::power10();
+    let mut sim = CoreSim::new(cfg);
+    sim.gpr[3] = 1 << 28; // C
+    sim.gpr[4] = 1 << 26; // packed A
+    sim.gpr[5] = 1 << 27; // packed B
+    sim.gpr[6] = 3 << 28; // bias
+    sim.gpr[7] = 1 << 29; // DFT combine operand
+    let report = sim.run(prog, SIM_FUEL);
+    (report, cfg)
+}
+
+/// Profile one step: exact mix of the full stream, then the ceiling
+/// simulation (shape-clamped when large). Pure simulation — no
+/// wall-clock measurement (see [`measure_achieved`]).
+pub fn profile_step(spec: &StepSpec) -> StepProfile {
+    match &spec.kernel {
+        StepKernel::Gemm { ek, epi, panel, gemms } => {
+            let epis = gemm_epis(*epi, *panel, *gemms);
+            let mut mb = MixBuilder::default();
+            for e in &epis {
+                gen_gemm_stream(ek, *e, &mut |i| mb.observe(&i));
+            }
+            let mix = mb.finish();
+            let sek = sim_kernel(ek);
+            let mut prog = Vec::new();
+            for e in &epis {
+                gen_gemm_stream(&sek, *e, &mut |i| prog.push(i));
+            }
+            prog.push(Inst::Blr);
+            let sim_macs: u64 = prog
+                .iter()
+                .map(|i| if matches!(i, Inst::Ger(_)) { i.flops() / 2 } else { 0 })
+                .sum();
+            let (report, cfg) = simulate(&prog);
+            let (bound_unit, _) = report.bottleneck(&cfg);
+            StepProfile {
+                index: spec.index,
+                step: spec.step.clone(),
+                dtype: ek.elem,
+                m: ek.m,
+                n: ek.n,
+                k: ek.k,
+                variant: Some(ek.v),
+                gemms: *gemms,
+                mix,
+                sim_cycles: report.cycles,
+                sim_insts: report.instructions,
+                sim_macs_per_cycle: sim_macs as f64 / report.cycles.max(1) as f64,
+                table1_peak_macs_per_cycle: table1_peak(&cfg, ek.rank),
+                occupancies: report.occupancies(&cfg),
+                bound_unit,
+                bound: bound_class(bound_unit),
+                achieved_macs_per_cycle: None,
+            }
+        }
+        StepKernel::Mem { load_bytes, store_bytes, fma_ops } => {
+            let mut mb = MixBuilder::default();
+            gen_mem_stream(*load_bytes, *store_bytes, *fma_ops, usize::MAX, &mut |i| {
+                mb.observe(&i)
+            });
+            let mix = mb.finish();
+            let mut prog = Vec::new();
+            gen_mem_stream(*load_bytes, *store_bytes, *fma_ops, 1 << 16, &mut |i| prog.push(i));
+            prog.push(Inst::Blr);
+            let (report, cfg) = simulate(&prog);
+            let (bound_unit, _) = report.bottleneck(&cfg);
+            StepProfile {
+                index: spec.index,
+                step: spec.step.clone(),
+                dtype: "-",
+                m: 0,
+                n: 0,
+                k: 0,
+                variant: None,
+                gemms: 0,
+                mix,
+                sim_cycles: report.cycles,
+                sim_insts: report.instructions,
+                sim_macs_per_cycle: 0.0,
+                table1_peak_macs_per_cycle: 0.0,
+                occupancies: report.occupancies(&cfg),
+                bound_unit,
+                bound: bound_class(bound_unit),
+                achieved_macs_per_cycle: None,
+            }
+        }
+    }
+}
+
+/// Synthesize a data-movement stream: a 16-byte load/store (and
+/// optional vector-FMA) pipeline cycling through disjoint registers.
+/// `cap` clamps the per-class instruction count for simulation; pass
+/// `usize::MAX` for the exact mix.
+fn gen_mem_stream(
+    load_bytes: usize,
+    store_bytes: usize,
+    fma_ops: usize,
+    cap: usize,
+    emit: &mut dyn FnMut(Inst),
+) {
+    let loads = load_bytes.div_ceil(16).min(cap);
+    let stores = store_bytes.div_ceil(16).min(cap);
+    let fmas = fma_ops.min(cap);
+    let iters = loads.max(stores).max(fmas);
+    for i in 0..iters {
+        let r = (i % 8) as u8;
+        if i < loads {
+            emit(Inst::Lxv { xt: 32 + r, ra: 4, dq: (i * 16) as i32 });
+        }
+        if i < fmas {
+            emit(Inst::XvMaddaSp { xt: 48 + r, xa: 32 + r, xb: 44 });
+        }
+        if i < stores {
+            emit(Inst::Stxv { xs: if i < fmas { 48 + r } else { 32 + r }, ra: 3, dq: (i * 16) as i32 });
+        }
+    }
+}
+
+/// Profile every step of a plan (pure simulation).
+pub fn profile_steps(specs: &[StepSpec]) -> Vec<StepProfile> {
+    specs.iter().map(profile_step).collect()
+}
+
+/// Profile every step and fill achieved MACs/cycle for the GEMM-bearing
+/// ones via wall-clock engine replays.
+pub fn profile_steps_measured(specs: &[StepSpec]) -> Vec<StepProfile> {
+    specs
+        .iter()
+        .map(|s| {
+            let mut p = profile_step(s);
+            p.achieved_macs_per_cycle = measure_achieved(s);
+            p
+        })
+        .collect()
+}
+
+/// Replay a GEMM step's executed kernel on synthetic operands of its
+/// exact shape (serially, like the autotuner's measurement), and
+/// convert the best wall-clock to achieved MACs/cycle at
+/// [`NOMINAL_GHZ`]. `None` for mem steps and degenerate shapes.
+pub fn measure_achieved(spec: &StepSpec) -> Option<f64> {
+    let StepKernel::Gemm { ek, epi, panel, gemms } = &spec.kernel else {
+        return None;
+    };
+    let (m, n, k) = (ek.m, ek.n, ek.k);
+    if m == 0 || n == 0 || k == 0 {
+        return None;
+    }
+    let v = ek.v;
+    let bias = fill_f32(n, 0x0b5e_0001);
+    let secs = match (ek.elem, *panel) {
+        ("f32", TunePanel::DftPacked) => {
+            let xr = fill_f32(m * k, 0x0b5e_0002);
+            let xi = fill_f32(m * k, 0x0b5e_0003);
+            let fr = fill_f32(k * n, 0x0b5e_0004);
+            let fi = fill_f32(k * n, 0x0b5e_0005);
+            // panels packed once, pinned alongside the plan — packing is
+            // compile-time work, so it stays outside the timed region
+            let panels = DftPanels::pack(&fr, &fi, k, n, v.nr, v.block.kc);
+            let mut t_ii = vec![0f32; m * n];
+            let mut t_ir = vec![0f32; m * n];
+            let mut out_re = vec![0f32; m * n];
+            let mut out_im = vec![0f32; m * n];
+            let mut scratch = GemmScratch::new();
+            time_secs(|| {
+                gemm_f32_tuned_into(
+                    &mut t_ii,
+                    &xi,
+                    PanelB::Packed(&panels.im),
+                    m,
+                    n,
+                    k,
+                    Accum::F64,
+                    Epilogue::None,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                gemm_f32_tuned_into(
+                    &mut t_ir,
+                    &xi,
+                    PanelB::Packed(&panels.re),
+                    m,
+                    n,
+                    k,
+                    Accum::F64,
+                    Epilogue::None,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                gemm_f32_tuned_into(
+                    &mut out_re,
+                    &xr,
+                    PanelB::Packed(&panels.re),
+                    m,
+                    n,
+                    k,
+                    Accum::F64,
+                    Epilogue::DftCombine { other: &t_ii, sub: true },
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+                gemm_f32_tuned_into(
+                    &mut out_im,
+                    &xr,
+                    PanelB::Packed(&panels.im),
+                    m,
+                    n,
+                    k,
+                    Accum::F64,
+                    Epilogue::DftCombine { other: &t_ir, sub: false },
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+            })
+        }
+        ("f32", p) => {
+            let a = fill_f32(m * k, 0x0b5e_0006);
+            let b = fill_f32(k * n, 0x0b5e_0007);
+            let spec_b =
+                Im2colSpec { bases: (0..k).map(|p| p * n).collect(), img_w: n, out_w: n };
+            let mut c = vec![0f32; m * n];
+            let mut scratch = GemmScratch::new();
+            time_secs(|| {
+                let src = match p {
+                    TunePanel::Im2col => PanelB::Im2col { img: &b, spec: &spec_b },
+                    _ => PanelB::Matrix(&b),
+                };
+                gemm_f32_tuned_into(
+                    &mut c,
+                    &a,
+                    src,
+                    m,
+                    n,
+                    k,
+                    Accum::F64,
+                    epilogue_of(*epi, &bias),
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+            })
+        }
+        ("bf16", _) => {
+            let a = fill_f32(m * k, 0x0b5e_0008);
+            let b = fill_f32(k * n, 0x0b5e_0009);
+            let mut c = vec![0f32; m * n];
+            let mut scratch = Bf16Scratch::new();
+            time_secs(|| {
+                gemm_bf16_tuned_into(
+                    &mut c,
+                    Bf16Src::F32(&a),
+                    Bf16Src::F32(&b),
+                    m,
+                    n,
+                    k,
+                    Bf16Accum::Widened,
+                    epilogue_of(*epi, &bias),
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+            })
+        }
+        _ => {
+            let a = fill_i8(m * k, 0x0b5e_000a);
+            let b = fill_u8(k * n, 0x0b5e_000b);
+            let mut c = vec![0i32; m * n];
+            let mut scratch = I8Scratch::new();
+            time_secs(|| {
+                gemm_i8_packed_tuned_into(
+                    &mut c,
+                    I8SrcA::Q(&a),
+                    I8SrcB::Q(&b),
+                    m,
+                    n,
+                    k,
+                    I8Accum::Wrapping,
+                    Par::Seq,
+                    &mut scratch,
+                    v,
+                );
+            })
+        }
+    };
+    let macs = (*gemms as f64) * (m as f64) * (n as f64) * (k as f64);
+    Some(macs / (secs.max(1e-9) * NOMINAL_GHZ * 1e9))
+}
+
+fn epilogue_of(epi: TuneEpi, bias: &[f32]) -> Epilogue<'_> {
+    match epi {
+        TuneEpi::None => Epilogue::None,
+        TuneEpi::Bias => Epilogue::Bias(bias),
+        TuneEpi::BiasRelu => Epilogue::BiasRelu(bias),
+    }
+}
+
+/// The generalized form of the bench's ad-hoc Table-I probes: simulated
+/// flops/cycle of the register-resident rank-k microkernel
+/// ([`rp_gemm_program`], `steps` unrolled steps) on POWER10 —
+/// *bit-for-bit* the value the inline closures used to compute
+/// (identical program, identical simulator construction, identical
+/// fuel).
+pub fn microkernel_fpc(kind: GerKind, steps: usize) -> f64 {
+    let mut sim = CoreSim::new(MachineConfig::power10());
+    sim.run(&rp_gemm_program(kind, steps, None), 1 << 22).flops_per_cycle()
+}
+
+/// Minimum of 3 timed runs after one untimed warmup, in seconds.
+fn time_secs(mut run: impl FnMut()) -> f64 {
+    run();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        run();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn lcg(state: &mut u32) -> u32 {
+    *state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+    *state
+}
+
+fn fill_f32(len: usize, seed: u32) -> Vec<f32> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 8) as f32 / (1u32 << 24) as f32 - 0.5).collect()
+}
+
+fn fill_i8(len: usize, seed: u32) -> Vec<i8> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 16) as i8).collect()
+}
+
+fn fill_u8(len: usize, seed: u32) -> Vec<u8> {
+    let mut s = seed;
+    (0..len).map(|_| (lcg(&mut s) >> 16) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::block_gemm::executed_kernel_f32;
+
+    fn gemm_spec(m: usize, n: usize, k: usize) -> StepSpec {
+        StepSpec {
+            index: 0,
+            step: "dot".into(),
+            kernel: StepKernel::Gemm {
+                ek: executed_kernel_f32(m, n, k, GemmVariant::CANONICAL_F32),
+                epi: TuneEpi::None,
+                panel: TunePanel::Matrix,
+                gemms: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn mac_count_is_exact_at_tile_seams() {
+        for (m, n, k) in [(1usize, 1usize, 1usize), (7, 9, 5), (8, 8, 256), (33, 17, 129)] {
+            let p = profile_step(&gemm_spec(m, n, k));
+            assert_eq!(p.mix.macs, (m * n * k) as u64, "{m}x{n}x{k}");
+            assert!(p.sim_macs_per_cycle > 0.0);
+            assert!(p.sim_macs_per_cycle <= p.table1_peak_macs_per_cycle);
+        }
+    }
+
+    #[test]
+    fn mem_steps_profile_without_macs() {
+        let spec = StepSpec {
+            index: 1,
+            step: "copy".into(),
+            kernel: StepKernel::Mem { load_bytes: 4096, store_bytes: 4096, fma_ops: 0 },
+        };
+        let p = profile_step(&spec);
+        assert_eq!(p.mix.macs, 0);
+        assert_eq!(p.mix.loads, 256);
+        assert_eq!(p.mix.stores, 256);
+        assert_eq!(p.sim_macs_per_cycle, 0.0);
+        assert!(!p.is_gemm());
+    }
+
+    #[test]
+    fn microkernel_fpc_is_positive_and_ordered() {
+        let f32_fpc = microkernel_fpc(GerKind::F32Ger, 32);
+        let bf16_fpc = microkernel_fpc(GerKind::Bf16Ger2, 32);
+        assert!(f32_fpc > 0.0);
+        assert!(bf16_fpc > f32_fpc, "rank-2 must beat rank-1 flops/cycle");
+    }
+}

@@ -43,11 +43,13 @@
 
 use crate::blas::bf16_gemm::{gemm_bf16_tuned_into, Bf16Accum, Bf16Scratch, Bf16Src};
 use crate::blas::block_gemm::{
-    gemm_f32_tuned_into, Accum, Epilogue, GemmScratch, GemmVariant, PanelB, Par,
+    gemm_f32_tuned_into, Accum, BlockCfg, Epilogue, GemmScratch, GemmVariant, PanelB, Par,
 };
 use crate::blas::i8_gemm::{gemm_i8_packed_tuned_into, I8Accum, I8Scratch, I8SrcA, I8SrcB};
-use crate::kernels::pack::Im2colSpec;
+use crate::kernels::pack::{DftPanels, Im2colSpec};
 use std::collections::HashMap;
+use std::io::{self, Write as _};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -62,6 +64,11 @@ pub const MEASURE_FLOP_CAP: usize = 33_554_432;
 /// How many timed repetitions back the per-candidate measurement (the
 /// minimum is taken; one untimed warmup precedes them).
 const MEASURE_REPS: usize = 3;
+
+/// First line of the on-disk tune-cache format ([`TuneTable::save`] /
+/// [`TuneTable::load_into`]). Bump the version when the row layout
+/// changes; old caches then fail closed into re-measurement.
+pub const TUNE_CACHE_HEADER: &str = "power-mma-tune-table v1";
 
 /// The dtype axis of a shape class — which engine (and so which
 /// candidate family) the class tunes over.
@@ -82,6 +89,16 @@ impl TuneDtype {
             TuneDtype::F32 => "f32",
             TuneDtype::Bf16 => "bf16",
             TuneDtype::I8 => "i8",
+        }
+    }
+
+    /// Parse of [`TuneDtype::as_str`] (tune-cache deserialization).
+    pub fn from_str_opt(s: &str) -> Option<TuneDtype> {
+        match s {
+            "f32" => Some(TuneDtype::F32),
+            "bf16" => Some(TuneDtype::Bf16),
+            "i8" => Some(TuneDtype::I8),
+            _ => None,
         }
     }
 
@@ -116,6 +133,16 @@ impl TuneEpi {
         }
     }
 
+    /// Parse of [`TuneEpi::as_str`] (tune-cache deserialization).
+    pub fn from_str_opt(s: &str) -> Option<TuneEpi> {
+        match s {
+            "none" => Some(TuneEpi::None),
+            "bias" => Some(TuneEpi::Bias),
+            "bias_relu" => Some(TuneEpi::BiasRelu),
+            _ => None,
+        }
+    }
+
     fn order(&self) -> u8 {
         match self {
             TuneEpi::None => 0,
@@ -136,6 +163,12 @@ pub enum TunePanel {
     Matrix,
     /// Virtual im2col gather ([`PanelB::Im2col`]) — `im2col_gemm` steps.
     Im2col,
+    /// Pre-packed DFT coefficient panels ([`PanelB::Packed`]) driven as
+    /// the real/imag dual-GEMM×2 structure — `dft_gemm` steps. Keyed
+    /// (and measured) as the full four-GEMM complex product, so the
+    /// class no longer borrows a single-GEMM matrix-modality winner of
+    /// the wrong shape.
+    DftPacked,
 }
 
 impl TunePanel {
@@ -144,6 +177,17 @@ impl TunePanel {
         match self {
             TunePanel::Matrix => "matrix",
             TunePanel::Im2col => "im2col",
+            TunePanel::DftPacked => "dft_packed",
+        }
+    }
+
+    /// Parse of [`TunePanel::as_str`] (tune-cache deserialization).
+    pub fn from_str_opt(s: &str) -> Option<TunePanel> {
+        match s {
+            "matrix" => Some(TunePanel::Matrix),
+            "im2col" => Some(TunePanel::Im2col),
+            "dft_packed" => Some(TunePanel::DftPacked),
+            _ => None,
         }
     }
 
@@ -151,6 +195,7 @@ impl TunePanel {
         match self {
             TunePanel::Matrix => 0,
             TunePanel::Im2col => 1,
+            TunePanel::DftPacked => 2,
         }
     }
 }
@@ -286,10 +331,122 @@ impl TuneTable {
         rows
     }
 
+    /// Persist every **measured** row to `path` in the versioned
+    /// plain-text tune-cache format (see [`TUNE_CACHE_HEADER`]).
+    /// Heuristic fallbacks are not persisted — they are free to
+    /// recompute and may depend on the measure cap. Returns the number
+    /// of rows written.
+    pub fn save(&self, path: &Path) -> io::Result<usize> {
+        let mut out = String::from(TUNE_CACHE_HEADER);
+        out.push('\n');
+        let mut rows = 0usize;
+        for (key, c) in self.snapshot() {
+            if !c.measured {
+                continue;
+            }
+            let v = c.variant;
+            out.push_str(&format!(
+                "{} {} {} {} {} {} {} {} {} {} {} {} {}\n",
+                key.m,
+                key.n,
+                key.k,
+                key.dtype.as_str(),
+                key.epi.as_str(),
+                key.panel.as_str(),
+                v.mr,
+                v.nr,
+                v.block.mc,
+                v.block.kc,
+                v.block.nc,
+                c.chosen_ms,
+                c.default_ms,
+            ));
+            rows += 1;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())?;
+        Ok(rows)
+    }
+
+    /// Load a tune cache written by [`TuneTable::save`] into this
+    /// table (rows arrive pre-measured, so re-execution skips the
+    /// measurement entirely). A missing header, version mismatch, or
+    /// any malformed row fails the whole load with `InvalidData` —
+    /// callers treat that as "no cache" and fall back to measuring.
+    /// Returns the number of rows inserted.
+    pub fn load_into(&self, path: &Path) -> io::Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        let corrupt = |what: &str, line: usize| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("tune cache {}: {} at line {}", path.display(), what, line),
+            )
+        };
+        let mut lines = text.lines().enumerate();
+        match lines.next() {
+            Some((_, h)) if h.trim() == TUNE_CACHE_HEADER => {}
+            _ => return Err(corrupt("bad or missing version header", 1)),
+        }
+        let mut rows = 0usize;
+        for (i, line) in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 13 {
+                return Err(corrupt("wrong field count", i + 1));
+            }
+            let num = |s: &str| s.parse::<usize>().ok();
+            let (Some(m), Some(n), Some(k)) = (num(f[0]), num(f[1]), num(f[2])) else {
+                return Err(corrupt("unparsable shape", i + 1));
+            };
+            let Some(dtype) = TuneDtype::from_str_opt(f[3]) else {
+                return Err(corrupt("unknown dtype", i + 1));
+            };
+            let Some(epi) = TuneEpi::from_str_opt(f[4]) else {
+                return Err(corrupt("unknown epilogue", i + 1));
+            };
+            let Some(panel) = TunePanel::from_str_opt(f[5]) else {
+                return Err(corrupt("unknown panel class", i + 1));
+            };
+            let (Some(mr), Some(nr), Some(mc), Some(kc), Some(nc)) =
+                (num(f[6]), num(f[7]), num(f[8]), num(f[9]), num(f[10]))
+            else {
+                return Err(corrupt("unparsable variant", i + 1));
+            };
+            if mr == 0 || nr == 0 || mc % mr != 0 || nc % nr != 0 || kc == 0 {
+                return Err(corrupt("inconsistent variant blocking", i + 1));
+            }
+            let (Ok(chosen_ms), Ok(default_ms)) = (f[11].parse::<f64>(), f[12].parse::<f64>())
+            else {
+                return Err(corrupt("unparsable timing", i + 1));
+            };
+            self.insert(
+                TuneKey { m, n, k, dtype, epi, panel },
+                TuneChoice {
+                    variant: GemmVariant { mr, nr, block: BlockCfg { mc, kc, nc } },
+                    chosen_ms,
+                    default_ms,
+                    measured: true,
+                },
+            );
+            rows += 1;
+        }
+        Ok(rows)
+    }
+
     fn measure_class(&self, key: TuneKey) -> TuneChoice {
         let default_v = heuristic_variant(key.dtype);
         let flops =
             2usize.saturating_mul(key.m).saturating_mul(key.n).saturating_mul(key.k);
+        // a DFT class replays the full complex product — four GEMMs of
+        // the shape — so its measurement cost is 4× the nominal flops
+        let flops = if key.panel == TunePanel::DftPacked {
+            flops.saturating_mul(4)
+        } else {
+            flops
+        };
         if key.m == 0 || key.n == 0 || key.k == 0 || flops > MEASURE_FLOP_CAP {
             let (chosen_ms, default_ms) = (0.0, 0.0);
             return TuneChoice { variant: default_v, chosen_ms, default_ms, measured: false };
@@ -300,6 +457,84 @@ impl TuneTable {
         // (timing depends only on shape), measured serially so the search
         // never fights the serving pool for cores
         let timings: Vec<(GemmVariant, f64)> = match key.dtype {
+            TuneDtype::F32 if key.panel == TunePanel::DftPacked => {
+                // the `dft_gemm` step is four f32 GEMMs over pre-packed
+                // coefficient panels (re/im), the last two fused with the
+                // `DftCombine` writeback — measure exactly that
+                // structure. Packing stays outside the timed region:
+                // panels are compile-time artifacts pinned in the plan,
+                // and their geometry (`nr`, `kc`) follows the candidate.
+                let xr = fill_f32(m * k, 0x5eed_0007);
+                let xi = fill_f32(m * k, 0x5eed_0008);
+                let fr = fill_f32(k * n, 0x5eed_0009);
+                let fi = fill_f32(k * n, 0x5eed_000a);
+                let mut t_ii = vec![0f32; m * n];
+                let mut t_ir = vec![0f32; m * n];
+                let mut out_re = vec![0f32; m * n];
+                let mut out_im = vec![0f32; m * n];
+                let mut scratch = GemmScratch::new();
+                GemmVariant::f32_candidates()
+                    .into_iter()
+                    .map(|v| {
+                        let panels = DftPanels::pack(&fr, &fi, k, n, v.nr, v.block.kc);
+                        let ms = time_ms(|| {
+                            gemm_f32_tuned_into(
+                                &mut t_ii,
+                                &xi,
+                                PanelB::Packed(&panels.im),
+                                m,
+                                n,
+                                k,
+                                Accum::F64,
+                                Epilogue::None,
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                            gemm_f32_tuned_into(
+                                &mut t_ir,
+                                &xi,
+                                PanelB::Packed(&panels.re),
+                                m,
+                                n,
+                                k,
+                                Accum::F64,
+                                Epilogue::None,
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                            gemm_f32_tuned_into(
+                                &mut out_re,
+                                &xr,
+                                PanelB::Packed(&panels.re),
+                                m,
+                                n,
+                                k,
+                                Accum::F64,
+                                Epilogue::DftCombine { other: &t_ii, sub: true },
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                            gemm_f32_tuned_into(
+                                &mut out_im,
+                                &xr,
+                                PanelB::Packed(&panels.im),
+                                m,
+                                n,
+                                k,
+                                Accum::F64,
+                                Epilogue::DftCombine { other: &t_ir, sub: false },
+                                Par::Seq,
+                                &mut scratch,
+                                v,
+                            );
+                        });
+                        (v, ms)
+                    })
+                    .collect()
+            }
             TuneDtype::F32 => {
                 let a = fill_f32(m * k, 0x5eed_0001);
                 let b = fill_f32(k * n, 0x5eed_0002);
@@ -315,8 +550,8 @@ impl TuneTable {
                     .map(|v| {
                         let ms = time_ms(|| {
                             let src = match key.panel {
-                                TunePanel::Matrix => PanelB::Matrix(&b),
                                 TunePanel::Im2col => PanelB::Im2col { img: &b, spec: &spec },
+                                _ => PanelB::Matrix(&b),
                             };
                             gemm_f32_tuned_into(
                                 &mut c,

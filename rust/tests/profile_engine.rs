@@ -1,0 +1,215 @@
+//! Contract coverage for the per-step roofline profiler: the
+//! synthesized MMA instruction stream of every GEMM-bearing plan step
+//! must retire **exactly** `gemms · m · n · k` multiply-accumulates —
+//! across dtypes, tuner variants, and shapes straddling every register-
+//! and cache-tile seam — and `microkernel_fpc` must reproduce the three
+//! Table-I ratio probes `bench serve` used to compute inline
+//! **bit-for-bit**. On top: `Plan::profile()` agrees with the plan's own
+//! `gemm_variants()` audit (same steps, shapes, variants), a `dft_gemm`
+//! step profiles as its real packed-panel 4-GEMM structure, and mem
+//! steps profile MAC-free.
+
+use power_mma::blas::bf16_gemm::executed_kernel_bf16;
+use power_mma::blas::block_gemm::{executed_kernel_f32, ExecutedKernel, GemmVariant};
+use power_mma::blas::i8_gemm::executed_kernel_i8;
+use power_mma::core_model::{CoreSim, MachineConfig};
+use power_mma::isa::GerKind;
+use power_mma::kernels::gemm_rp::rp_gemm_program;
+use power_mma::runtime::hlo::HloModule;
+use power_mma::runtime::plan::{Plan, PlanOptions};
+use power_mma::runtime::profile::{profile_step, table1_peak, StepKernel, StepSpec};
+use power_mma::runtime::{
+    dft_hlo_text, microkernel_fpc, mlp_hlo_text, mlp_int8_calib, TuneEpi, TunePanel,
+};
+
+fn spec_of(ek: ExecutedKernel, epi: TuneEpi, panel: TunePanel, gemms: usize) -> StepSpec {
+    StepSpec { index: 0, step: "test".into(), kernel: StepKernel::Gemm { ek, epi, panel, gemms } }
+}
+
+/// Shapes that hit every seam class: unit, sub-tile, exact-tile,
+/// m/n/k tails against MR/NR/KC, multi-cache-block, and rank tails
+/// (k ≢ 0 mod 2 for bf16, mod 4 for i8).
+fn seam_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (3, 5, 2),
+        (7, 9, 5),
+        (8, 8, 8),
+        (8, 16, 31),
+        (16, 8, 33),
+        (33, 17, 129),
+        (64, 64, 257),
+        (5, 130, 7),
+        (130, 5, 258),
+    ]
+}
+
+#[test]
+fn f32_mac_count_exact_across_variants() {
+    for v in GemmVariant::f32_candidates() {
+        for (m, n, k) in seam_shapes() {
+            let p = profile_step(&spec_of(
+                executed_kernel_f32(m, n, k, v),
+                TuneEpi::None,
+                TunePanel::Matrix,
+                1,
+            ));
+            assert_eq!(p.mix.macs, (m * n * k) as u64, "f32 {m}x{n}x{k} {}", v.name());
+        }
+    }
+}
+
+#[test]
+fn bf16_mac_count_exact_across_variants() {
+    for v in GemmVariant::wide_candidates() {
+        for (m, n, k) in seam_shapes() {
+            let p = profile_step(&spec_of(
+                executed_kernel_bf16(m, n, k, v),
+                TuneEpi::Bias,
+                TunePanel::Matrix,
+                1,
+            ));
+            assert_eq!(p.mix.macs, (m * n * k) as u64, "bf16 {m}x{n}x{k} {}", v.name());
+        }
+    }
+}
+
+#[test]
+fn i8_mac_count_exact_across_variants() {
+    for v in GemmVariant::wide_candidates() {
+        for (m, n, k) in seam_shapes() {
+            let p = profile_step(&spec_of(
+                executed_kernel_i8(m, n, k, v),
+                TuneEpi::BiasRelu,
+                TunePanel::Matrix,
+                1,
+            ));
+            assert_eq!(p.mix.macs, (m * n * k) as u64, "i8 {m}x{n}x{k} {}", v.name());
+        }
+    }
+}
+
+#[test]
+fn epilogues_never_change_mac_count() {
+    let (m, n, k) = (33, 17, 29);
+    let base = profile_step(&spec_of(
+        executed_kernel_f32(m, n, k, GemmVariant::CANONICAL_F32),
+        TuneEpi::None,
+        TunePanel::Matrix,
+        1,
+    ));
+    for epi in [TuneEpi::Bias, TuneEpi::BiasRelu] {
+        let p = profile_step(&spec_of(
+            executed_kernel_f32(m, n, k, GemmVariant::CANONICAL_F32),
+            epi,
+            TunePanel::Matrix,
+            1,
+        ));
+        assert_eq!(p.mix.macs, base.mix.macs, "{epi:?}");
+        // bias/relu adds vector work + loads, never ger work
+        assert!(p.mix.insts > base.mix.insts, "{epi:?}");
+    }
+}
+
+#[test]
+fn dft_step_profiles_as_four_gemms() {
+    let (m, n, k) = (32, 16, 16);
+    let p = profile_step(&spec_of(
+        executed_kernel_f32(m, n, k, GemmVariant::CANONICAL_F32),
+        TuneEpi::None,
+        TunePanel::DftPacked,
+        4,
+    ));
+    assert_eq!(p.gemms, 4);
+    assert_eq!(p.mix.macs, (4 * m * n * k) as u64);
+    // the two DftCombine writebacks contribute vector-FMA combines
+    assert!(p.mix.counts.iter().any(|(op, _)| op == "xvmaddasp"), "{:?}", p.mix.counts);
+}
+
+#[test]
+fn mem_steps_have_no_macs() {
+    for (lb, sb, fma) in [(4096usize, 4096usize, 0usize), (1024, 256, 64), (0, 0, 0)] {
+        let p = profile_step(&StepSpec {
+            index: 9,
+            step: "copy".into(),
+            kernel: StepKernel::Mem { load_bytes: lb, store_bytes: sb, fma_ops: fma },
+        });
+        assert_eq!(p.mix.macs, 0);
+        assert!(!p.is_gemm());
+        assert_eq!(p.mix.loads, lb.div_ceil(16) as u64);
+        assert_eq!(p.mix.stores, sb.div_ceil(16) as u64);
+        assert!(p.achieved_macs_per_cycle.is_none());
+    }
+}
+
+#[test]
+fn ceiling_respects_table1_peak_and_occupancies_are_fractions() {
+    for (ek, rank) in [
+        (executed_kernel_f32(64, 64, 64, GemmVariant::CANONICAL_F32), 1usize),
+        (executed_kernel_bf16(64, 64, 64, GemmVariant::CANONICAL_WIDE), 2),
+        (executed_kernel_i8(64, 64, 64, GemmVariant::CANONICAL_WIDE), 4),
+    ] {
+        let p = profile_step(&spec_of(ek, TuneEpi::None, TunePanel::Matrix, 1));
+        let peak = table1_peak(&MachineConfig::power10(), rank);
+        assert_eq!(p.table1_peak_macs_per_cycle, peak);
+        assert!(p.sim_macs_per_cycle > 0.0, "{}", ek.elem);
+        assert!(p.sim_macs_per_cycle <= peak, "{}: {} > {peak}", ek.elem, p.sim_macs_per_cycle);
+        for (unit, f) in p.occupancies {
+            assert!((0.0..=1.0).contains(&f), "{unit} occupancy {f}");
+        }
+        assert!(!p.bound.is_empty() && !p.bound_unit.is_empty());
+    }
+}
+
+/// The generalized probe must be **bit-for-bit** what the bench's three
+/// inline closures computed: same program builder, same simulator
+/// construction, same fuel. The four call sites `bench serve` issues
+/// are pinned here with `sim_steps = 64`.
+#[test]
+fn microkernel_fpc_reproduces_bench_probes_bitwise() {
+    let inline = |kind: GerKind, steps: usize| -> f64 {
+        let mut sim = CoreSim::new(MachineConfig::power10());
+        sim.run(&rp_gemm_program(kind, steps, None), 1 << 22).flops_per_cycle()
+    };
+    let sim_steps = 64;
+    for (kind, steps) in [
+        (GerKind::F32Ger, 2 * sim_steps),
+        (GerKind::Bf16Ger2, sim_steps),
+        (GerKind::F32Ger, 4 * sim_steps),
+        (GerKind::I8Ger4, sim_steps),
+    ] {
+        let got = microkernel_fpc(kind, steps);
+        let want = inline(kind, steps);
+        assert_eq!(got.to_bits(), want.to_bits(), "{kind:?}/{steps}: {got} vs {want}");
+    }
+}
+
+/// `Plan::profile()` must describe exactly the GEMMs the plan says it
+/// executes: one roofline row per `gemm_variants()` entry, same shapes,
+/// same baked variants, in step order — across all four served families.
+#[test]
+fn plan_profile_agrees_with_gemm_variants_audit() {
+    let calib = mlp_int8_calib(64, 96, 10);
+    let plans = [
+        ("mlp_f32", mlp_hlo_text(8, 64, 96, 10), None),
+        ("mlp_int8", mlp_hlo_text(8, 64, 96, 10), Some(calib)),
+        ("dft_b8", dft_hlo_text(8), None),
+    ];
+    for (name, text, calib) in plans {
+        let module = HloModule::parse(&text).unwrap();
+        let opts = PlanOptions { int8_calib: calib, ..Default::default() };
+        let plan = Plan::compile_with_options(&module, opts).unwrap();
+        let audit = plan.gemm_variants();
+        let rows: Vec<_> = plan.profile().into_iter().filter(|p| p.is_gemm()).collect();
+        assert_eq!(rows.len(), audit.len(), "{name}");
+        for (p, (key, v)) in rows.iter().zip(&audit) {
+            assert_eq!((p.m, p.n, p.k), (key.m, key.n, key.k), "{name}/{}", p.step);
+            assert_eq!(p.variant, Some(*v), "{name}/{}", p.step);
+            let expect_gemms = if key.panel == TunePanel::DftPacked { 4 } else { 1 };
+            assert_eq!(p.gemms, expect_gemms, "{name}/{}", p.step);
+            assert_eq!(p.mix.macs, (p.gemms * p.m * p.n * p.k) as u64, "{name}/{}", p.step);
+        }
+        // every step (GEMM or mem) yields a profile row
+        assert_eq!(plan.profile().len(), plan.step_names().len(), "{name}");
+    }
+}

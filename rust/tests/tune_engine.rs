@@ -498,3 +498,92 @@ fn forced_variants_serve_bitwise_identical_results_end_to_end() {
     let got_i8 = rt_i8_tuned.execute(&name, &args).unwrap();
     assert_eq!(bits(&got_i8), bits(&want_i8), "forced i8 variants changed served bits");
 }
+
+#[test]
+fn tune_cache_roundtrips_measured_rows() {
+    use power_mma::runtime::tune::TUNE_CACHE_HEADER;
+    let path = std::env::temp_dir().join(format!("mma-tunecache-rt-{}.txt", std::process::id()));
+    let table = TuneTable::new();
+    let key_a = TuneKey {
+        m: 32,
+        n: 40,
+        k: 24,
+        dtype: TuneDtype::F32,
+        epi: TuneEpi::BiasRelu,
+        panel: TunePanel::Matrix,
+    };
+    let v_a = GemmVariant { mr: 4, nr: 8, block: BlockCfg { mc: 64, kc: 128, nc: 512 } };
+    table.insert(
+        key_a,
+        TuneChoice { variant: v_a, chosen_ms: 0.125, default_ms: 0.5, measured: true },
+    );
+    let key_b = TuneKey {
+        m: 32,
+        n: 16,
+        k: 16,
+        dtype: TuneDtype::F32,
+        epi: TuneEpi::None,
+        panel: TunePanel::DftPacked,
+    };
+    let v_b = GemmVariant { mr: 8, nr: 8, block: BlockCfg { mc: 128, kc: 256, nc: 256 } };
+    table.insert(
+        key_b,
+        TuneChoice { variant: v_b, chosen_ms: 0.25, default_ms: 0.25, measured: true },
+    );
+    // pre-seeded (unmeasured) rows must not persist: they carry no timing
+    let key_seed = TuneKey { m: 1, n: 1, k: 1, ..key_a };
+    table.insert(
+        key_seed,
+        TuneChoice { variant: v_a, chosen_ms: 0.0, default_ms: 0.0, measured: false },
+    );
+    assert_eq!(table.save(&path).unwrap(), 2, "only the measured rows persist");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with(TUNE_CACHE_HEADER), "versioned header first: {text:?}");
+
+    let fresh = TuneTable::new();
+    assert_eq!(fresh.load_into(&path).unwrap(), 2);
+    for (key, want) in [(key_a, v_a), (key_b, v_b)] {
+        let row = fresh.lookup(key).expect("persisted row restored");
+        assert_eq!(row.variant, want);
+        assert!(row.measured, "restored rows count as measured (no stopwatch on reuse)");
+    }
+    assert!(fresh.lookup(key_seed).is_none(), "unmeasured seed must not roundtrip");
+    // a restored table resolves the class without measuring
+    assert_eq!(fresh.choose(key_a).variant, v_a);
+    assert_eq!(fresh.measure_count(), 0, "cache hits never re-measure");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tune_cache_rejects_corruption_and_version_drift() {
+    use power_mma::runtime::tune::TUNE_CACHE_HEADER;
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let cases: [(&str, String); 4] = [
+        ("missing-header", "32 40 24 f32 bias_relu matrix 4 8 64 128 512 0.1 0.2\n".into()),
+        ("version-drift", "power-mma-tune-table v0\n".into()),
+        (
+            "short-row",
+            format!("{TUNE_CACHE_HEADER}\n32 40 24 f32 bias_relu matrix 4 8 64\n"),
+        ),
+        (
+            "bad-blocking",
+            // mc=65 is not a multiple of mr=4: inconsistent variant
+            format!("{TUNE_CACHE_HEADER}\n32 40 24 f32 bias_relu matrix 4 8 65 128 512 0.1 0.2\n"),
+        ),
+    ];
+    for (name, text) in cases {
+        let path = dir.join(format!("mma-tunecache-{name}-{pid}.txt"));
+        std::fs::write(&path, text).unwrap();
+        let table = TuneTable::new();
+        let err = table.load_into(&path).expect_err(name);
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}");
+        assert!(table.is_empty(), "{name}: a failed load must leave the table untouched");
+        let _ = std::fs::remove_file(&path);
+    }
+    // a missing file is an io error too (the serve path treats any Err
+    // as "no cache" and falls back to measuring)
+    let table = TuneTable::new();
+    assert!(table.load_into(&dir.join(format!("mma-tunecache-absent-{pid}.txt"))).is_err());
+    assert!(table.is_empty());
+}
